@@ -1,0 +1,93 @@
+//! AF disaggregation + MoE: micro-batch pipelining and expert stragglers.
+//!
+//! Reproduces the qualitative claims of §3.3: (a) the ping-pong pipeline
+//! hides transfer/compute gaps as micro-batches increase, and (b) token
+//! load imbalance creates straggler effects that balance-oblivious
+//! simulation misses.
+//!
+//! ```bash
+//! cargo run --release --example af_moe
+//! ```
+
+use frontier::config::{ExperimentConfig, OverheadConfig};
+use frontier::model::ModelConfig;
+use frontier::moe::RoutingPolicy;
+use frontier::report::markdown_table;
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+fn workload() -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: Arrival::Batch,
+        input: LenDist::Uniform { lo: 128, hi: 1024 },
+        output: LenDist::Fixed(64),
+        n_requests: 48,
+        seed: 7,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelConfig::mixtral_8x7b();
+    println!("== AF decode pool: micro-batch (ping-pong) sweep, {} ==\n", model.name);
+    let mut rows = Vec::new();
+    for m in [1u32, 2, 4, 8] {
+        // prefill tier at tp=2: Mixtral's 92 GB of weights need 2 GPUs
+        let cfg = ExperimentConfig::af(model.clone(), 2, 4, 4, m)
+            .with_parallelism(frontier::parallelism::Parallelism::tp(2))
+            .with_workload(workload())
+            .with_overhead(OverheadConfig::zero());
+        let r = frontier::run_experiment(&cfg)?;
+        rows.push(vec![
+            m.to_string(),
+            format!("{:.2}", r.sim_duration),
+            format!("{:.1}", r.tokens_per_sec_per_gpu()),
+            format!(
+                "{:.1}",
+                frontier::metrics::percentile(&r.metrics.tbt, 50.0) * 1e3
+            ),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(&["micro-batches", "makespan (s)", "tok/s/gpu", "TBT p50 (ms)"], &rows)
+    );
+
+    println!("\n== MoE routing skew: straggler effects under EP=8 ==\n");
+    let mut rows = Vec::new();
+    for (name, routing) in [
+        ("balanced", RoutingPolicy::Balanced),
+        ("uniform", RoutingPolicy::UniformRandom),
+        ("skewed a=0.5", RoutingPolicy::Skewed { alpha: 0.5 }),
+        ("skewed a=0.05", RoutingPolicy::Skewed { alpha: 0.05 }),
+    ] {
+        let run = |straggler: bool| -> anyhow::Result<f64> {
+            let mut cfg = ExperimentConfig::colocated(model.clone(), 1)
+                .with_parallelism(frontier::parallelism::Parallelism::new(1, 1, 8))
+                .with_workload(workload())
+                .with_overhead(OverheadConfig::zero());
+            cfg.policy.moe_routing = routing;
+            cfg.policy.straggler_max = straggler;
+            Ok(frontier::run_experiment(&cfg)?.sim_duration)
+        };
+        let with = run(true)?;
+        let without = run(false)?;
+        rows.push(vec![
+            name.to_string(),
+            format!("{with:.2}"),
+            format!("{without:.2}"),
+            format!("{:+.1}%", (with / without - 1.0) * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["routing", "max-sync (s)", "mean-sync (s)", "straggler cost"],
+            &rows
+        )
+    );
+    println!(
+        "\nThe `max` synchronization barrier (§3.3) prices the slowest EP rank;\n\
+         under skewed routing the gap versus balance-oblivious `mean` widens —\n\
+         exactly the fidelity gap Frontier's MoE micro-workflow closes."
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Figure 2 reproduction: CDF of relative error in simulated operator
+//! runtime under dynamic workloads.
+//!
+//! Frontier (the learned predictor, via the AOT PJRT artifacts) vs the
+//! Vidur proxy-length baseline on Attention; Frontier alone on
+//! GroupedGEMM (unsupported by Vidur, Table 1). Ground truth is the
+//! analytical kernel oracle. Writes CSV series to
+//! `target/bench_results/` and prints an ASCII CDF.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example fig2_cdf
+//! ```
+
+use frontier::core::Pcg64;
+use frontier::operators::opgen;
+use frontier::predictor::{
+    ExecutionPredictor, LearnedPredictor, OraclePredictor, RooflinePredictor, VidurPredictor,
+};
+use frontier::report::{ascii_cdf, cdf_summary, csv};
+use frontier::runtime::PredictorRuntime;
+
+const N_CASES: usize = 1000;
+
+fn rel_errors(
+    pred: &mut dyn ExecutionPredictor,
+    truth: &mut OraclePredictor,
+    ops: &[frontier::operators::OpWorkload],
+) -> Vec<f64> {
+    ops.iter()
+        .map(|op| {
+            let p = pred.predict(op);
+            let t = truth.predict(op);
+            (p - t).abs() / t
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = PredictorRuntime::default_dir();
+    let mut learned = LearnedPredictor::load_exact(&dir)
+        .map_err(|e| anyhow::anyhow!("run `make artifacts` first: {e}"))?;
+    let mut vidur = VidurPredictor::a800();
+    let mut roofline = RooflinePredictor::a800();
+    let mut truth = OraclePredictor::a800();
+
+    // held-out workloads (seed differs from training)
+    let mut rng = Pcg64::new(0xF16_2);
+    let attn_ops: Vec<_> = (0..N_CASES).map(|_| opgen::attn_workload(&mut rng)).collect();
+    let gg_ops: Vec<_> =
+        (0..N_CASES).map(|_| opgen::grouped_gemm_workload(&mut rng)).collect();
+
+    println!("== Figure 2(a): Attention operator, {N_CASES} dynamic workloads ==\n");
+    let frontier_err = rel_errors(&mut learned, &mut truth, &attn_ops);
+    let vidur_err = rel_errors(&mut vidur, &mut truth, &attn_ops);
+    let roofline_err = rel_errors(&mut roofline, &mut truth, &attn_ops);
+    println!("{}", cdf_summary(&frontier_err, "Frontier"));
+    println!("{}", cdf_summary(&vidur_err, "Vidur   "));
+    println!("{}", cdf_summary(&roofline_err, "Roofline"));
+    println!(
+        "\n{}",
+        ascii_cdf(
+            &[
+                ("Frontier", frontier_err.clone()),
+                ("Vidur", vidur_err.clone()),
+                ("Roofline", roofline_err.clone()),
+            ],
+            64,
+            16,
+            0.6,
+        )
+    );
+
+    println!("== Figure 2(b): GroupedGEMM operator (Vidur: unsupported) ==\n");
+    let gg_err = rel_errors(&mut learned, &mut truth, &gg_ops);
+    println!("{}", cdf_summary(&gg_err, "Frontier"));
+    println!(
+        "\n{}",
+        ascii_cdf(&[("Frontier", gg_err.clone())], 64, 16, 0.2)
+    );
+
+    // paper's headline fidelity claims
+    let attn_under_10 = frontier::metrics::frac_below(&frontier_err, 0.10);
+    let gg_under_6 = frontier::metrics::frac_below(&gg_err, 0.06);
+    println!("Frontier attention: {:.1}% of cases under 10% error (paper: >94%)", attn_under_10 * 100.0);
+    println!("Frontier GroupedGEMM: {:.1}% of cases under 6% error (paper: >95%)", gg_under_6 * 100.0);
+
+    // CSV series for external plotting
+    let mut rows = Vec::new();
+    for (i, op) in attn_ops.iter().enumerate() {
+        rows.push(vec![
+            i.to_string(),
+            op.class().to_string(),
+            format!("{:.6}", frontier_err[i]),
+            format!("{:.6}", vidur_err[i]),
+            format!("{:.6}", roofline_err[i]),
+        ]);
+    }
+    frontier::bench_util::write_results(
+        "fig2_attention.csv",
+        &csv(&["case", "kind", "frontier", "vidur", "roofline"], &rows),
+    );
+    let gg_rows: Vec<Vec<String>> = gg_err
+        .iter()
+        .enumerate()
+        .map(|(i, e)| vec![i.to_string(), format!("{e:.6}")])
+        .collect();
+    frontier::bench_util::write_results(
+        "fig2_grouped_gemm.csv",
+        &csv(&["case", "frontier"], &gg_rows),
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! PD disaggregation study: ratio sweep + backpressure dynamics.
+//!
+//! Explores the rate-matching question DistServe poses: how should a
+//! fixed GPU budget split between prefill and decode stages, and what
+//! happens when the decode stage's KV memory runs short (the §3.3
+//! backpressure workflow)?
+//!
+//! ```bash
+//! cargo run --release --example pd_disagg
+//! ```
+
+use frontier::config::{ExperimentConfig, PolicyConfig};
+use frontier::metrics::percentile;
+use frontier::model::ModelConfig;
+use frontier::report::markdown_table;
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+fn workload(n: u32) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: Arrival::Poisson { rate: 8.0 },
+        input: LenDist::LogNormal { mean: 768.0, sigma: 0.7 },
+        output: LenDist::LogNormal { mean: 128.0, sigma: 0.4 },
+        n_requests: n,
+        seed: 42,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let total_gpus = 8u32;
+    println!("== PD ratio sweep: Qwen2-7B, {total_gpus} GPUs, 8 req/s ==\n");
+    let mut rows = Vec::new();
+    for prefill in 1..total_gpus {
+        let decode = total_gpus - prefill;
+        let cfg = ExperimentConfig::pd(ModelConfig::qwen2_7b(), prefill, decode)
+            .with_workload(workload(160));
+        let r = frontier::run_experiment(&cfg)?;
+        rows.push(vec![
+            format!("{prefill}:{decode}"),
+            format!("{:.1}", r.tokens_per_sec_per_gpu()),
+            format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
+            format!("{:.1}", percentile(&r.metrics.tbt, 99.0) * 1e3),
+            format!("{:.2}", r.goodput(1.0, 0.1)),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["P:D", "tok/s/gpu", "TTFT p99 (ms)", "TBT p99 (ms)", "goodput (req/s)"],
+            &rows
+        )
+    );
+
+    println!("\n== Decode memory backpressure: shrinking the KV pool ==\n");
+    let mut rows = Vec::new();
+    for reserve in [0.10, 0.80, 0.95, 0.99] {
+        let mut cfg = ExperimentConfig::pd(ModelConfig::qwen2_7b(), 4, 4)
+            .with_workload(workload(120));
+        cfg.policy = PolicyConfig { kv_reserve_frac: reserve, ..PolicyConfig::default() };
+        let r = frontier::run_experiment(&cfg)?;
+        rows.push(vec![
+            format!("{:.0}%", (1.0 - reserve) * 100.0),
+            format!("{:.1}", r.tokens_per_sec_per_gpu()),
+            format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
+            format!("{}", r.metrics.kv_transfers),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["KV pool", "tok/s/gpu", "TTFT p99 (ms)", "kv transfers"],
+            &rows
+        )
+    );
+    println!(
+        "\nWith a starved KV pool the controller holds PREFILL_COMPLETE requests\n\
+         until decode memory frees (pull-based transfers) — throughput degrades\n\
+         gracefully instead of OOMing, and TTFT tail absorbs the queueing."
+    );
+    Ok(())
+}

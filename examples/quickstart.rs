@@ -1,0 +1,36 @@
+//! Quickstart: simulate a co-located Qwen2-7B deployment in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use frontier::config::ExperimentConfig;
+use frontier::model::ModelConfig;
+use frontier::predictor::PredictorKind;
+use frontier::workload::WorkloadSpec;
+
+fn main() -> anyhow::Result<()> {
+    // 4 single-GPU replicas of Qwen2-7B, Poisson arrivals at 6 req/s
+    let cfg = ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 4)
+        .with_workload(WorkloadSpec::poisson(6.0, 200, 512, 128))
+        .with_predictor(PredictorKind::Oracle);
+
+    let report = frontier::run_experiment(&cfg)?;
+    println!("{}", report.summary());
+
+    // the same deployment under PD disaggregation (2 prefill : 2 decode)
+    let pd = ExperimentConfig::pd(ModelConfig::qwen2_7b(), 2, 2)
+        .with_workload(WorkloadSpec::poisson(6.0, 200, 512, 128));
+    let pd_report = frontier::run_experiment(&pd)?;
+    println!("\n{}", pd_report.summary());
+
+    println!(
+        "\nPD vs co-located on 4 GPUs: {:.1} vs {:.1} tok/s/gpu, \
+         p99 TBT {:.1} vs {:.1} ms",
+        pd_report.tokens_per_sec_per_gpu(),
+        report.tokens_per_sec_per_gpu(),
+        frontier::metrics::percentile(&pd_report.metrics.tbt, 99.0) * 1e3,
+        frontier::metrics::percentile(&report.metrics.tbt, 99.0) * 1e3,
+    );
+    Ok(())
+}

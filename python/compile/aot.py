@@ -1,0 +1,270 @@
+"""AOT export: train the predictors and lower them to HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never runs on the
+simulation path.  Interchange format is HLO *text* (NOT serialized
+HloModuleProto): jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the Rust ``xla`` crate) rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+Outputs in --out-dir:
+  attn_predictor.hlo.txt / grouped_gemm_predictor.hlo.txt /
+  gemm_predictor.hlo.txt   — one HLO module per operator class, trained
+                             weights constant-folded, input f32[64, F],
+                             output (f32[64],) = log(runtime in us)
+  manifest.json            — batch size, feature counts, val metrics,
+                             source hash (used for no-op rebuild checks)
+  oracle_golden.json       — raw workloads + oracle times for Rust parity
+  predictor_golden.json    — feature rows + predicted us for Rust runtime
+                             integration tests
+  weights.npz              — training cache
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+
+import numpy as np
+
+BATCH = 64
+SRC_FILES = [
+    "compile/profiler.py",
+    "compile/features.py",
+    "compile/model.py",
+    "compile/train.py",
+    "compile/aot.py",
+    "compile/kernels/mlp.py",
+    "compile/kernels/ref.py",
+]
+
+
+def source_hash() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for rel in SRC_FILES:
+        with open(os.path.join(base, rel), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the trained weights are baked into the
+    # module as constants; the default printer elides them as `{...}`,
+    # which the Rust-side text parser would silently read back as zeros.
+    return comp.as_hlo_text(True)
+
+
+def export_predictor(params: dict, n_features: int, out_path: str) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from . import model as M
+
+    const = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+
+    def fwd(x):
+        return (M.mlp_kernel(const, x),)
+
+    spec = jax.ShapeDtypeStruct((BATCH, n_features), jnp.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+
+
+def write_oracle_golden(path: str) -> None:
+    """Deterministic parity vectors for rust/src/oracle tests."""
+    from . import profiler as pf
+    from . import features as F
+
+    rng = np.random.default_rng(1234)
+    cases: dict = {"attn": [], "grouped_gemm": [], "gemm": [], "collective": []}
+    from .train import MODEL_PRESETS, _sample_lens
+
+    for i in range(60):
+        h, h_kv, d = MODEL_PRESETS[rng.integers(0, len(MODEL_PRESETS))]
+        b = int(rng.integers(1, 129))
+        is_prefill = i % 2 == 0
+        if is_prefill:
+            q_lens = _sample_lens(rng, b, 16, 4096)
+            ctx = [0] * b if rng.random() < 0.5 else _sample_lens(rng, b, 1, 2048)
+            t = pf.attn_prefill_time(q_lens, ctx, h, h_kv, d)
+        else:
+            q_lens = [1] * b
+            ctx = _sample_lens(rng, b, 16, 32768)
+            t = pf.attn_decode_time(ctx, h, h_kv, d)
+        cases["attn"].append(
+            {
+                "is_prefill": is_prefill,
+                "q_lens": q_lens,
+                "ctx_lens": ctx,
+                "n_heads": h,
+                "n_kv_heads": h_kv,
+                "head_dim": d,
+                "time_us": t * 1e6,
+                "features": F.attn_features(is_prefill, q_lens, ctx, h, h_kv, d),
+            }
+        )
+    for _ in range(40):
+        e = int(rng.integers(2, 65))
+        total = int(rng.integers(16, 16384))
+        probs = rng.dirichlet([float(rng.uniform(0.05, 20.0))] * e)
+        loads = [int(m) for m in rng.multinomial(total, probs)]
+        nn = int(rng.integers(512, 32768))
+        kk = int(rng.integers(512, 8192))
+        cases["grouped_gemm"].append(
+            {
+                "tokens_per_expert": loads,
+                "n": nn,
+                "k": kk,
+                "time_us": pf.grouped_gemm_time(loads, nn, kk) * 1e6,
+                "features": F.grouped_gemm_features(loads, nn, kk),
+            }
+        )
+    for _ in range(40):
+        m = int(rng.integers(1, 16384))
+        nn = int(rng.integers(256, 32768))
+        kk = int(rng.integers(256, 32768))
+        cases["gemm"].append(
+            {
+                "m": m,
+                "n": nn,
+                "k": kk,
+                "time_us": pf.gemm_time(m, nn, kk) * 1e6,
+                "features": F.gemm_features(m, nn, kk),
+            }
+        )
+    for _ in range(20):
+        by = float(rng.integers(1024, 1 << 30))
+        nr = int(rng.integers(2, 17))
+        cases["collective"].append(
+            {
+                "bytes": by,
+                "n_ranks": nr,
+                "allreduce_us": pf.allreduce_time(by, nr) * 1e6,
+                "all2all_us": pf.all2all_time(by, nr) * 1e6,
+                "p2p_us": pf.p2p_time(by) * 1e6,
+            }
+        )
+    with open(path, "w") as f:
+        json.dump(cases, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=6000)
+    ap.add_argument("--n-attn", type=int, default=24000)
+    ap.add_argument("--n-gg", type=int, default=16000)
+    ap.add_argument("--n-gemm", type=int, default=8000)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    sh = source_hash()
+    manifest_path = os.path.join(out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("source_hash") == sh:
+            print(f"artifacts up to date (source_hash={sh}); nothing to do")
+            return
+
+    from . import features as F
+    from . import train as T
+
+    specs = [
+        ("attn", F.ATTN_N_FEATURES, lambda: T.gen_attn_dataset(7, args.n_attn)),
+        ("grouped_gemm", F.GG_N_FEATURES, lambda: T.gen_gg_dataset(11, args.n_gg)),
+        ("gemm", F.GEMM_N_FEATURES, lambda: T.gen_gemm_dataset(13, args.n_gemm)),
+    ]
+
+    cache_path = os.path.join(out, "weights.npz")
+    cache = {}
+    if os.path.exists(cache_path):
+        z = np.load(cache_path, allow_pickle=True)
+        if str(z.get("source_hash")) == sh:
+            cache = {k: z[k] for k in z.files if k != "source_hash"}
+
+    manifest = {"source_hash": sh, "batch": BATCH, "predictors": {}}
+    predictor_golden = {}
+    save: dict = {"source_hash": np.asarray(sh)}
+    for name, n_feat, gen in specs:
+        print(f"[{name}] generating dataset ...")
+        x, y, _ = gen()
+        if f"{name}/w0" in cache:
+            print(f"[{name}] using cached weights")
+            params = {
+                k.split("/", 1)[1]: cache[k]
+                for k in cache
+                if k.startswith(f"{name}/")
+            }
+            import jax.numpy as jnp
+
+            params = {k: jnp.asarray(v) for k, v in params.items()}
+            # recompute metrics on a fixed split
+            from . import model as M
+
+            rngv = np.random.default_rng(0)
+            idx = rngv.permutation(x.shape[0])[: max(1, x.shape[0] // 10)]
+            pred = M.mlp_ref(params, jnp.asarray(x[idx], jnp.float32))
+            rel = np.abs(np.exp(np.asarray(pred) - y[idx]) - 1.0)
+            metrics = {
+                "val_mape": float(rel.mean()),
+                "val_p90_err": float(np.quantile(rel, 0.9)),
+                "val_frac_under_10pct": float((rel < 0.10).mean()),
+            }
+        else:
+            print(f"[{name}] training ({x.shape[0]} samples, {args.steps} steps)")
+            params, metrics = T.train_predictor(
+                x, y, seed=42, steps=args.steps, verbose=True
+            )
+        print(f"[{name}] metrics: {metrics}")
+        hlo = os.path.join(out, f"{name}_predictor.hlo.txt")
+        export_predictor(params, n_feat, hlo)
+        manifest["predictors"][name] = {
+            "hlo": os.path.basename(hlo),
+            "n_features": n_feat,
+            "batch": BATCH,
+            "output": "log_us",
+            "metrics": metrics,
+        }
+        for k, v in params.items():
+            save[f"{name}/{k}"] = np.asarray(v)
+        # golden rows for the rust runtime integration test
+        import jax.numpy as jnp
+
+        from . import model as M
+
+        rows = np.asarray(x[:8], np.float32)
+        pad = np.zeros((BATCH, n_feat), np.float32)
+        pad[:8] = rows
+        pred = M.mlp_kernel(
+            {k: jnp.asarray(v, jnp.float32) for k, v in params.items()},
+            jnp.asarray(pad),
+        )
+        predictor_golden[name] = {
+            "features": rows.tolist(),
+            "pred_us": np.exp(np.asarray(pred)[:8]).astype(float).tolist(),
+        }
+
+    np.savez(cache_path, **save)
+    write_oracle_golden(os.path.join(out, "oracle_golden.json"))
+    with open(os.path.join(out, "predictor_golden.json"), "w") as f:
+        json.dump(predictor_golden, f)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernels for the runtime-predictor MLP.
+
+Two kernels:
+
+* ``fused_linear`` — tiled ``act(x @ w + b)``: the hot op of every MLP
+  layer.  One grid step per 128-row tile of ``x``; the full weight panel
+  and the output tile live in VMEM for the duration of the step, which is
+  the TPU analogue of the shared-memory-resident weight panel a CUDA
+  implementation would use (see DESIGN.md §Hardware-Adaptation).
+* ``standardize`` — elementwise ``(x - mu) / sd`` feature normalization,
+  fused over the same row tiling.
+
+Both run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned against ``ref.py`` by pytest, and
+TPU VMEM/MXU characteristics are estimated structurally in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128  # rows of x per grid step; MXU-aligned
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def fused_linear(
+    x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "none"
+) -> jax.Array:
+    """``act(x @ w + b)`` with ``x: [rows, k]``, ``w: [k, h]``, ``b: [h]``.
+
+    ``rows`` must be a multiple of ``ROW_TILE`` or smaller than it (a
+    single partial tile); callers pad the batch dimension.
+    """
+    rows, k = x.shape
+    k2, h = w.shape
+    assert k == k2, (k, k2)
+    assert b.shape == (h,)
+    kernel = functools.partial(_fused_linear_kernel, activation=activation)
+    if rows <= ROW_TILE:
+        # single tile: gridless call keeps the lowered HLO loop-free,
+        # which the Rust-side XLA 0.5.1 runtime executes reliably (its
+        # while-loop handling of interpret-mode grid state is buggy) —
+        # this is the shape the AOT artifacts use (batch 64)
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+            interpret=True,
+        )(x, w, b)
+    assert rows % ROW_TILE == 0, rows
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // ROW_TILE,),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def _standardize_kernel(x_ref, mu_ref, sd_ref, o_ref):
+    o_ref[...] = (x_ref[...] - mu_ref[...][None, :]) / sd_ref[...][None, :]
+
+
+def standardize(x: jax.Array, mu: jax.Array, sd: jax.Array) -> jax.Array:
+    """``(x - mu) / sd`` row-tiled; ``mu``/``sd`` are per-feature vectors."""
+    rows, f = x.shape
+    assert mu.shape == (f,) and sd.shape == (f,)
+    if rows <= ROW_TILE:
+        # gridless single-tile call: loop-free HLO (see fused_linear)
+        return pl.pallas_call(
+            _standardize_kernel,
+            out_shape=jax.ShapeDtypeStruct((rows, f), x.dtype),
+            interpret=True,
+        )(x, mu, sd)
+    assert rows % ROW_TILE == 0, rows
+    return pl.pallas_call(
+        _standardize_kernel,
+        grid=(rows // ROW_TILE,),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, f), x.dtype),
+        interpret=True,
+    )(x, mu, sd)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference.
+
+pytest asserts kernel == ref across shapes/dtypes (see
+python/tests/test_kernels.py); training runs on this path and the AOT
+export runs on the kernel path, so the equality check is what ties the
+two together.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "none"
+) -> jax.Array:
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return acc.astype(x.dtype)
+
+
+def standardize_ref(x: jax.Array, mu: jax.Array, sd: jax.Array) -> jax.Array:
+    return (x - mu[None, :]) / sd[None, :]
+
+
+def mlp_ref(params: dict, x: jax.Array) -> jax.Array:
+    """Full predictor forward on the reference path: standardize -> MLP.
+
+    Returns log-runtime (log microseconds), shape [rows]."""
+    h = standardize_ref(x, params["mu"], params["sd"])
+    h = fused_linear_ref(h, params["w0"], params["b0"], "relu")
+    h = fused_linear_ref(h, params["w1"], params["b1"], "relu")
+    h = fused_linear_ref(h, params["w2"], params["b2"], "none")
+    return h[:, 0]

@@ -1,0 +1,105 @@
+"""Layer-2 JAX model: the operator-runtime predictor MLP.
+
+The paper (§3.2) fits an ML regressor (random forest) from rich workload
+features to operator runtime; here the regressor is a small MLP so it can
+be trained in JAX, expressed through the Layer-1 Pallas kernels, and
+AOT-lowered to a single HLO module per operator class (attention,
+GroupedGEMM, dense GEMM).
+
+Forward pass (both paths return *log microseconds*):
+
+    standardize(x) -> fused_linear(relu) -> fused_linear(relu)
+                   -> fused_linear(none) -> [:, 0]
+
+``mlp_kernel`` is the exported path (Pallas kernels); ``ref.mlp_ref`` is
+the training/oracle path.  test_kernels.py pins them equal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp as K
+from .kernels import ref as R
+
+HIDDEN = 64
+
+
+def init_params(key: jax.Array, n_features: int, hidden: int = HIDDEN) -> dict:
+    k0, k1, k2 = jax.random.split(key, 3)
+    he = lambda k, fan_in, shape: jax.random.normal(k, shape, jnp.float32) * (
+        2.0 / fan_in
+    ) ** 0.5
+    return {
+        "mu": jnp.zeros((n_features,), jnp.float32),
+        "sd": jnp.ones((n_features,), jnp.float32),
+        "w0": he(k0, n_features, (n_features, hidden)),
+        "b0": jnp.zeros((hidden,), jnp.float32),
+        "w1": he(k1, hidden, (hidden, hidden)),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": he(k2, hidden, (hidden, 1)),
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def mlp_kernel(params: dict, x: jax.Array) -> jax.Array:
+    """Predictor forward through the Pallas kernels (the AOT path)."""
+    h = K.standardize(x, params["mu"], params["sd"])
+    h = K.fused_linear(h, params["w0"], params["b0"], "relu")
+    h = K.fused_linear(h, params["w1"], params["b1"], "relu")
+    h = K.fused_linear(h, params["w2"], params["b2"], "none")
+    return h[:, 0]
+
+
+def mlp_ref(params: dict, x: jax.Array) -> jax.Array:
+    return R.mlp_ref(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Training (build-time only; runs on the ref path, jitted)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    """MSE in log-runtime space == optimizing relative error."""
+    pred = mlp_ref(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def adam_init(params: dict) -> dict:
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+TRAINABLE = ("w0", "b0", "w1", "b1", "w2", "b2")
+
+
+def adam_step(
+    params: dict,
+    opt: dict,
+    x: jax.Array,
+    y: jax.Array,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """One Adam step on the trainable keys (mu/sd are frozen stats)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    t = opt["t"] + 1
+    tf = t.astype(jnp.float32)
+    new_params = dict(params)
+    new_m = dict(opt["m"])
+    new_v = dict(opt["v"])
+    for k in TRAINABLE:
+        g = grads[k]
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * g * g
+        mhat = m / (1 - b1**tf)
+        vhat = v / (1 - b2**tf)
+        new_params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k] = m
+        new_v[k] = v
+    return new_params, {"m": new_m, "v": new_v, "t": t}, loss

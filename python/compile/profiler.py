@@ -1,0 +1,333 @@
+"""Analytical kernel oracle — the ground-truth runtime model.
+
+This module substitutes for the paper's real-hardware profiling (A800 +
+FlashInfer): a roofline model with explicit tile scheduling, wave
+quantization, and straggler effects.  It is the *training-data generator*
+for the learned predictors (L2), and is mirrored line-for-line by
+``rust/src/oracle/`` (golden-vector parity is asserted by tests on both
+sides).
+
+All returned times are in SECONDS (f64).  Keep every formula in f64 and
+free of ordering-dependent reductions so the Rust mirror matches to 1e-9
+relative.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+# ---------------------------------------------------------------------------
+# Hardware descriptor (defaults: NVIDIA A800-SXM4-80GB, the paper's testbed)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GpuSpec:
+    name: str = "A800-SXM4-80GB"
+    sms: int = 108
+    peak_flops: float = 312e12  # bf16 dense tensor-core FLOP/s
+    hbm_bw: float = 2.039e12  # bytes/s
+    mem_eff: float = 0.85  # achievable fraction of peak HBM bandwidth
+    eff_gemm: float = 0.82  # achieved fraction of peak compute, dense GEMM
+    eff_attn: float = 0.55  # FlashAttention achieved compute fraction
+    eff_grouped: float = 0.75  # GroupedGEMM achieved compute fraction
+    launch_overhead: float = 4e-6  # kernel launch, seconds
+    tile_fixed: float = 0.3e-6  # per-CTA fixed cost (prologue/epilogue)
+    group_fixed: float = 1.0e-6  # per-expert-group fixed cost in GroupedGEMM
+
+    @property
+    def per_sm_bw(self) -> float:
+        return self.hbm_bw * self.mem_eff / self.sms
+
+    def per_sm_flops(self, eff: float) -> float:
+        return self.peak_flops * eff / self.sms
+
+
+A800 = GpuSpec()
+
+# Tiling constants — shared with rust/src/oracle/mod.rs.
+ATTN_ROW_BLOCK = 128  # FlashAttention-2 q-row tile
+DECODE_KV_SPLIT = 8192  # FlashDecoding kv-chunk length
+GG_TILE_M = 64  # GroupedGEMM M tile
+GG_TILE_N = 128  # GroupedGEMM N tile
+GEMM_TILE_M = 128
+GEMM_TILE_N = 128
+
+
+def _schedule(work: float, n_tiles: int, max_tile: float, sms: int) -> float:
+    """Makespan of `n_tiles` CTAs with total duration `work` on `sms` SMs.
+
+    max(wave-quantized balanced time, longest single CTA).  This is the
+    heart of the oracle: it makes runtime sensitive to *heterogeneity*
+    (via max_tile) and to *wave quantization* (via ceil), the two effects
+    the paper says naive proxy models miss.
+    """
+    if n_tiles == 0:
+        return 0.0
+    waves = math.ceil(n_tiles / sms)
+    mean_tile = work / n_tiles
+    balanced = waves * mean_tile
+    return max(balanced, max_tile)
+
+
+def _tile_time(
+    flops: float, bytes_: float, eff: float, n_active: int, gpu: GpuSpec
+) -> float:
+    """One CTA's duration.  Compute rate is fixed per SM; HBM bandwidth is
+    a shared resource, so an under-occupied kernel (n_active < SMs) gives
+    each CTA a larger bandwidth share — this is what makes small decode
+    GEMMs fast and is invisible to pure per-SM roofline models."""
+    bw = gpu.hbm_bw * gpu.mem_eff / max(1, min(n_active, gpu.sms))
+    return max(flops / gpu.per_sm_flops(eff), bytes_ / bw) + gpu.tile_fixed
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attn_prefill_stats(
+    q_lens: list[int],
+    ctx_lens: list[int],
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    gpu: GpuSpec = A800,
+) -> tuple[float, int, float]:
+    """Tile statistics (work seconds, n_tiles, max_tile seconds) for a
+    causal FlashAttention-2 prefill over a (possibly ragged) batch.
+
+    Per sequence i with new tokens L_i and existing context C_i: one CTA
+    per (q-head, 128-row block); a row block attends to an average of
+    C_i + L_i/2 kv positions (causal).  The kv read is amortized across
+    the GQA group (factor n_kv/n_heads).
+
+    These statistics are also *predictor features* (§3.2: "features that
+    reflect kernel partitioning and tiling"), so this function is the
+    shared core of both the oracle and the feature extractor and is
+    mirrored in rust/src/oracle.
+    """
+    assert len(q_lens) == len(ctx_lens)
+    gqa = n_kv_heads / n_heads
+    n_tiles = sum(
+        n_heads * ((li + ATTN_ROW_BLOCK - 1) // ATTN_ROW_BLOCK)
+        for li in q_lens
+        if li > 0
+    )
+    work = 0.0
+    max_tile = 0.0
+    for li, ci in zip(q_lens, ctx_lens):
+        if li <= 0:
+            continue
+        blocks = (li + ATTN_ROW_BLOCK - 1) // ATTN_ROW_BLOCK
+        avg_kv = ci + li / 2.0
+        fl = 4.0 * head_dim * ATTN_ROW_BLOCK * avg_kv
+        by = 2.0 * head_dim * avg_kv * dtype_bytes * gqa
+        t = _tile_time(fl, by, gpu.eff_attn, n_tiles, gpu)
+        work += n_heads * blocks * t
+        kv_last = float(ci + li)
+        fl_l = 4.0 * head_dim * ATTN_ROW_BLOCK * kv_last
+        by_l = 2.0 * head_dim * kv_last * dtype_bytes * gqa
+        max_tile = max(
+            max_tile, _tile_time(fl_l, by_l, gpu.eff_attn, n_tiles, gpu)
+        )
+    return work, n_tiles, max_tile
+
+
+def attn_prefill_time(
+    q_lens: list[int],
+    ctx_lens: list[int],
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    gpu: GpuSpec = A800,
+) -> float:
+    work, n_tiles, max_tile = attn_prefill_stats(
+        q_lens, ctx_lens, n_heads, n_kv_heads, head_dim, dtype_bytes, gpu
+    )
+    if n_tiles == 0:
+        return 0.0
+    return gpu.launch_overhead + _schedule(work, n_tiles, max_tile, gpu.sms)
+
+
+def attn_decode_stats(
+    ctx_lens: list[int],
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    gpu: GpuSpec = A800,
+) -> tuple[float, int, float, bool]:
+    """Tile statistics (work, n_tiles, max_tile, any_split) for
+    FlashDecoding: one token per sequence, kv split into 2048-chunks.
+
+    One CTA per (sequence, kv-head, kv-chunk); each CTA streams its K/V
+    chunk from HBM (memory bound) and computes for the whole GQA group of
+    q heads."""
+    group = n_heads / n_kv_heads
+    n_tiles = sum(
+        n_kv_heads * ((ci + DECODE_KV_SPLIT - 1) // DECODE_KV_SPLIT)
+        for ci in ctx_lens
+        if ci > 0
+    )
+    work = 0.0
+    max_tile = 0.0
+    any_split = False
+    for ci in ctx_lens:
+        if ci <= 0:
+            continue
+        splits = (ci + DECODE_KV_SPLIT - 1) // DECODE_KV_SPLIT
+        chunk = ci / splits
+        fl = 4.0 * head_dim * chunk * group
+        by = 2.0 * head_dim * chunk * dtype_bytes
+        t = _tile_time(fl, by, gpu.eff_attn, n_tiles, gpu)
+        work += n_kv_heads * splits * t
+        max_tile = max(max_tile, t)
+        any_split = any_split or splits > 1
+    return work, n_tiles, max_tile, any_split
+
+
+def attn_decode_time(
+    ctx_lens: list[int],
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    gpu: GpuSpec = A800,
+) -> float:
+    """FlashDecoding runtime; a final combine pass is charged when any
+    sequence splits its kv."""
+    work, n_tiles, max_tile, any_split = attn_decode_stats(
+        ctx_lens, n_heads, n_kv_heads, head_dim, dtype_bytes, gpu
+    )
+    if n_tiles == 0:
+        return 0.0
+    t = gpu.launch_overhead + _schedule(work, n_tiles, max_tile, gpu.sms)
+    if any_split:
+        t += 2e-6  # split-kv reduction kernel
+    return t
+
+
+# ---------------------------------------------------------------------------
+# GEMM / GroupedGEMM
+# ---------------------------------------------------------------------------
+
+
+def gemm_stats(
+    m: int, n: int, k: int, dtype_bytes: int = 2, gpu: GpuSpec = A800
+) -> tuple[int, float]:
+    """(n_tiles, per-tile seconds) for a dense GEMM with 128x128 tiles."""
+    if m == 0 or n == 0 or k == 0:
+        return 0, 0.0
+    tm = (m + GEMM_TILE_M - 1) // GEMM_TILE_M
+    tn = (n + GEMM_TILE_N - 1) // GEMM_TILE_N
+    tiles = tm * tn
+    # effective rows per row-tile: a skinny GEMM (m < 128) reads far less
+    # of A than a full tile would
+    eff_m = m / tm
+    fl = 2.0 * eff_m * GEMM_TILE_N * k
+    by = (eff_m * k + k * GEMM_TILE_N + eff_m * GEMM_TILE_N) * dtype_bytes
+    return tiles, _tile_time(fl, by, gpu.eff_gemm, tiles, gpu)
+
+
+def gemm_time(
+    m: int, n: int, k: int, dtype_bytes: int = 2, gpu: GpuSpec = A800
+) -> float:
+    """Dense GEMM C[m,n] = A[m,k] @ B[k,n] with 128x128 output tiles."""
+    tiles, t_tile = gemm_stats(m, n, k, dtype_bytes, gpu)
+    if tiles == 0:
+        return 0.0
+    return gpu.launch_overhead + _schedule(tiles * t_tile, tiles, t_tile, gpu.sms)
+
+
+def grouped_gemm_time(
+    tokens_per_expert: list[int],
+    n: int,
+    k: int,
+    dtype_bytes: int = 2,
+    gpu: GpuSpec = A800,
+) -> float:
+    """GroupedGEMM over experts with heterogeneous token counts.
+
+    Per expert e with m_e > 0: ceil(m_e/64) * ceil(n/128) tiles; every tile
+    re-reads its weight panel, so lightly-loaded experts pay
+    disproportionate memory traffic — the imbalance effect the paper's
+    features capture (expert selection ratio, load-balance metrics).
+    """
+    tiles, t_tile, active = grouped_gemm_stats(
+        tokens_per_expert, n, k, dtype_bytes, gpu
+    )
+    if tiles == 0:
+        return 0.0
+    return (
+        gpu.launch_overhead
+        + active * gpu.group_fixed
+        + _schedule(tiles * t_tile, tiles, t_tile, gpu.sms)
+    )
+
+
+def grouped_gemm_stats(
+    tokens_per_expert: list[int],
+    n: int,
+    k: int,
+    dtype_bytes: int = 2,
+    gpu: GpuSpec = A800,
+) -> tuple[int, float, int]:
+    """(n_tiles, per-tile seconds, active experts) for a GroupedGEMM."""
+    if n == 0 or k == 0:
+        return 0, 0.0, 0
+    tn = (n + GG_TILE_N - 1) // GG_TILE_N
+    tiles = 0
+    active = 0
+    row_tiles = 0
+    total_m = 0
+    for m_e in tokens_per_expert:
+        if m_e <= 0:
+            continue
+        active += 1
+        rt = (m_e + GG_TILE_M - 1) // GG_TILE_M
+        row_tiles += rt
+        total_m += m_e
+        tiles += rt * tn
+    if tiles == 0:
+        return 0, 0.0, 0
+    # average effective rows per row-tile across the group: fragmented
+    # expert loads mean mostly-empty tiles (the imbalance cost)
+    eff_m = total_m / row_tiles
+    fl = 2.0 * eff_m * GG_TILE_N * k
+    by = (eff_m * k + k * GG_TILE_N + eff_m * GG_TILE_N) * dtype_bytes
+    t_tile = _tile_time(fl, by, gpu.eff_grouped, tiles, gpu)
+    return tiles, t_tile, active
+
+
+# ---------------------------------------------------------------------------
+# Collectives / transfers (used by the Rust network model; mirrored there)
+# ---------------------------------------------------------------------------
+
+
+def allreduce_time(
+    bytes_: float, n_ranks: int, link_bw: float = 400e9, alpha: float = 6e-6
+) -> float:
+    """Ring all-reduce: 2(n-1) steps, 2(n-1)/n of the data over each link."""
+    if n_ranks <= 1 or bytes_ <= 0:
+        return 0.0
+    steps = 2 * (n_ranks - 1)
+    return alpha * steps + 2.0 * bytes_ * (n_ranks - 1) / (n_ranks * link_bw)
+
+
+def all2all_time(
+    bytes_: float, n_ranks: int, link_bw: float = 400e9, alpha: float = 6e-6
+) -> float:
+    if n_ranks <= 1 or bytes_ <= 0:
+        return 0.0
+    return alpha * (n_ranks - 1) + bytes_ * (n_ranks - 1) / (n_ranks * link_bw)
+
+
+def p2p_time(bytes_: float, link_bw: float = 400e9, alpha: float = 6e-6) -> float:
+    if bytes_ <= 0:
+        return 0.0
+    return alpha + bytes_ / link_bw

@@ -1,0 +1,202 @@
+"""Dataset generation + training for the runtime predictors (build-time).
+
+Ground truth comes from the analytical oracle (``profiler.py``) with
+calibrated multiplicative measurement noise — the stand-in for the
+paper's on-GPU profiling runs (DESIGN.md §Substitutions).  Workload
+distributions deliberately stress heterogeneity: skewed sequence lengths
+(lognormal/zipf mixtures) and imbalanced expert loads (dirichlet with a
+wide concentration sweep), because those are the regimes where the
+paper's contribution (rich features, §3.2) separates from the Vidur
+proxy baseline.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from . import features as F
+from . import profiler as pf
+
+NOISE_SIGMA = 0.02  # lognormal measurement noise on oracle times
+
+# (n_heads, n_kv_heads, head_dim) presets spanning GQA ratios
+MODEL_PRESETS = [
+    (28, 4, 128),  # Qwen2-7B
+    (64, 8, 128),  # Qwen2-72B / Llama-70B
+    (32, 8, 128),  # Mixtral-8x7B
+    (16, 16, 64),  # small dense, MHA
+    (48, 8, 128),
+    (32, 32, 128),
+]
+
+
+def _noisy(rng: np.random.Generator, t: float) -> float:
+    return t * math.exp(rng.normal(0.0, NOISE_SIGMA)) + rng.uniform(0, 0.5e-6)
+
+
+def _sample_lens(rng: np.random.Generator, b: int, lo: int, hi: int) -> list[int]:
+    """Mixture of length distributions, from homogeneous to heavily skewed."""
+    mode = rng.integers(0, 5)
+    if mode == 0:  # fixed
+        v = int(rng.integers(lo, hi))
+        return [v] * b
+    if mode == 1:  # uniform
+        return [int(x) for x in rng.integers(lo, hi, size=b)]
+    if mode == 2:  # lognormal (moderate skew)
+        mu = math.log(rng.uniform(lo, hi / 4) + 1)
+        xs = np.exp(rng.normal(mu, 0.8, size=b))
+        return [int(min(max(x, lo), hi)) for x in xs]
+    if mode == 3:  # zipf-like — a few very long sequences among short ones
+        base = [int(x) for x in rng.integers(lo, max(lo + 1, hi // 16), size=b)]
+        n_long = max(1, b // 16)
+        for i in rng.choice(b, size=n_long, replace=False):
+            base[i] = int(rng.integers(hi // 2, hi))
+        return base
+    # mode 4: single straggler — one very long sequence dominates the
+    # makespan (the §1 anecdote regime; max_tile >> balanced time)
+    base = [int(x) for x in rng.integers(lo, max(lo + 1, hi // 64), size=b)]
+    base[int(rng.integers(0, b))] = int(rng.integers(hi // 2, hi))
+    return base
+
+
+def gen_attn_dataset(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    xs, ys, raws = [], [], []
+    for _ in range(n):
+        h, h_kv, d = MODEL_PRESETS[rng.integers(0, len(MODEL_PRESETS))]
+        b = int(np.exp(rng.uniform(0, math.log(128))))
+        is_prefill = bool(rng.integers(0, 2))
+        if is_prefill:
+            q_lens = _sample_lens(rng, b, 16, 4096)
+            # chunked-prefill style: sometimes nonzero existing context
+            ctx = (
+                _sample_lens(rng, b, 0 + 1, 2048)
+                if rng.random() < 0.3
+                else [0] * b
+            )
+            t = pf.attn_prefill_time(q_lens, ctx, h, h_kv, d)
+        else:
+            q_lens = [1] * b
+            ctx = _sample_lens(rng, b, 16, 32768)
+            t = pf.attn_decode_time(ctx, h, h_kv, d)
+        if t <= 0:
+            continue
+        xs.append(F.attn_features(is_prefill, q_lens, ctx, h, h_kv, d))
+        ys.append(math.log(_noisy(rng, t) * 1e6))
+        raws.append(
+            {
+                "is_prefill": is_prefill,
+                "q_lens": q_lens,
+                "ctx_lens": ctx,
+                "n_heads": h,
+                "n_kv_heads": h_kv,
+                "head_dim": d,
+                "time_us": t * 1e6,
+            }
+        )
+    return np.array(xs, np.float64), np.array(ys, np.float64), raws
+
+
+def gen_gg_dataset(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    xs, ys, raws = [], [], []
+    for _ in range(n):
+        e = int(rng.integers(2, 65))
+        total = int(np.exp(rng.uniform(math.log(16), math.log(16384))))
+        alpha = float(np.exp(rng.uniform(math.log(0.05), math.log(20.0))))
+        probs = rng.dirichlet([alpha] * e)
+        loads = rng.multinomial(total, probs)
+        nn = int(np.exp(rng.uniform(math.log(512), math.log(32768))))
+        kk = int(np.exp(rng.uniform(math.log(512), math.log(8192))))
+        t = pf.grouped_gemm_time([int(m) for m in loads], nn, kk)
+        if t <= 0:
+            continue
+        xs.append(F.grouped_gemm_features([int(m) for m in loads], nn, kk))
+        ys.append(math.log(_noisy(rng, t) * 1e6))
+        raws.append(
+            {"tokens_per_expert": [int(m) for m in loads], "n": nn, "k": kk,
+             "time_us": t * 1e6}
+        )
+    return np.array(xs, np.float64), np.array(ys, np.float64), raws
+
+
+def gen_gemm_dataset(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    xs, ys, raws = [], [], []
+    for _ in range(n):
+        m = int(np.exp(rng.uniform(0, math.log(16384))))
+        nn = int(np.exp(rng.uniform(math.log(256), math.log(32768))))
+        kk = int(np.exp(rng.uniform(math.log(256), math.log(32768))))
+        t = pf.gemm_time(m, nn, kk)
+        if t <= 0:
+            continue
+        xs.append(F.gemm_features(m, nn, kk))
+        ys.append(math.log(_noisy(rng, t) * 1e6))
+        raws.append({"m": m, "n": nn, "k": kk, "time_us": t * 1e6})
+    return np.array(xs, np.float64), np.array(ys, np.float64), raws
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def train_predictor(
+    x: np.ndarray,
+    y: np.ndarray,
+    seed: int = 0,
+    steps: int = 8000,
+    batch: int = 256,
+    val_frac: float = 0.1,
+    verbose: bool = False,
+):
+    """Fit the MLP; returns (params, {"val_mape", "val_p90_err"})."""
+    import jax
+    import jax.numpy as jnp
+
+    from . import model as M
+
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    perm = rng.permutation(n)
+    n_val = int(n * val_frac)
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    xtr = jnp.asarray(x[tr_idx], jnp.float32)
+    ytr = jnp.asarray(y[tr_idx], jnp.float32)
+    xval = jnp.asarray(x[val_idx], jnp.float32)
+    yval = jnp.asarray(y[val_idx], jnp.float32)
+
+    params = M.init_params(jax.random.key(seed), x.shape[1])
+    mu = xtr.mean(axis=0)
+    sd = xtr.std(axis=0)
+    params["mu"] = mu
+    params["sd"] = jnp.where(sd < 1e-6, 1.0, sd)
+    # start the output bias at the target mean: the net then only learns
+    # the residual structure, which converges much faster
+    params["b2"] = jnp.full((1,), float(ytr.mean()), jnp.float32)
+    opt = M.adam_init(params)
+
+    step_fn = jax.jit(M.adam_step, static_argnames=())
+    n_tr = xtr.shape[0]
+    key = jax.random.key(seed + 1)
+    decay_every = max(1, steps // 4)
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (min(batch, n_tr),), 0, n_tr)
+        lr = 3e-3 * (0.5 ** (i // decay_every))
+        params, opt, loss = step_fn(params, opt, xtr[idx], ytr[idx], lr)
+        if verbose and i % 1000 == 0:
+            print(f"  step {i:5d} loss {float(loss):.5f}")
+
+    pred = M.mlp_ref(params, xval)
+    rel_err = np.abs(np.exp(np.asarray(pred) - np.asarray(yval)) - 1.0)
+    metrics = {
+        "val_mape": float(rel_err.mean()),
+        "val_p90_err": float(np.quantile(rel_err, 0.9)),
+        "val_frac_under_10pct": float((rel_err < 0.10).mean()),
+        "n_train": int(n_tr),
+        "n_val": int(n_val),
+    }
+    return params, metrics

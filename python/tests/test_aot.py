@@ -1,0 +1,95 @@
+"""AOT export round-trip: lowered HLO text must exist, parse, and agree
+with the in-process model on the golden rows."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot as A
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_source_hash_stable():
+    assert A.source_hash() == A.source_hash()
+    assert len(A.source_hash()) == 16
+
+
+def test_export_produces_parseable_hlo(tmp_path):
+    params = M.init_params(jax.random.key(0), 6)
+    out = tmp_path / "toy.hlo.txt"
+    A.export_predictor(params, 6, str(out))
+    text = out.read_text()
+    assert "HloModule" in text
+    assert f"f32[{A.BATCH},6]" in text.replace(" ", "")
+
+
+def test_hlo_text_has_no_custom_calls(tmp_path):
+    """interpret=True pallas must lower to plain HLO (no Mosaic)."""
+    params = M.init_params(jax.random.key(1), 4)
+    out = tmp_path / "toy.hlo.txt"
+    A.export_predictor(params, 4, str(out))
+    assert "custom-call" not in out.read_text()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    def test_manifest_complete(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            man = json.load(f)
+        assert set(man["predictors"]) == {"attn", "grouped_gemm", "gemm"}
+        for name, meta in man["predictors"].items():
+            assert os.path.exists(os.path.join(ART, meta["hlo"])), name
+            assert meta["batch"] == A.BATCH
+
+    def test_fidelity_bar(self):
+        """Paper Fig. 2: Frontier attention errors <10% in >94% of cases."""
+        with open(os.path.join(ART, "manifest.json")) as f:
+            man = json.load(f)
+        attn = man["predictors"]["attn"]["metrics"]
+        assert attn["val_frac_under_10pct"] > 0.90, attn
+        gg = man["predictors"]["grouped_gemm"]["metrics"]
+        assert gg["val_mape"] < 0.08, gg
+
+    def test_predictor_golden_matches_cached_weights(self):
+        with open(os.path.join(ART, "predictor_golden.json")) as f:
+            golden = json.load(f)
+        z = np.load(os.path.join(ART, "weights.npz"), allow_pickle=True)
+        for name, g in golden.items():
+            params = {
+                k.split("/", 1)[1]: jnp.asarray(z[k])
+                for k in z.files
+                if k.startswith(f"{name}/")
+            }
+            rows = np.asarray(g["features"], np.float32)
+            pad = np.zeros((A.BATCH, rows.shape[1]), np.float32)
+            pad[: rows.shape[0]] = rows
+            pred = np.exp(
+                np.asarray(M.mlp_ref(params, jnp.asarray(pad)))[: rows.shape[0]]
+            )
+            np.testing.assert_allclose(pred, g["pred_us"], rtol=1e-4)
+
+    def test_oracle_golden_self_consistent(self):
+        from compile import profiler as pf
+
+        with open(os.path.join(ART, "oracle_golden.json")) as f:
+            cases = json.load(f)
+        for c in cases["attn"][:10]:
+            if c["is_prefill"]:
+                t = pf.attn_prefill_time(
+                    c["q_lens"], c["ctx_lens"], c["n_heads"],
+                    c["n_kv_heads"], c["head_dim"],
+                )
+            else:
+                t = pf.attn_decode_time(
+                    c["ctx_lens"], c["n_heads"], c["n_kv_heads"], c["head_dim"]
+                )
+            np.testing.assert_allclose(t * 1e6, c["time_us"], rtol=1e-9)

@@ -1,0 +1,88 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp reference.
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the
+core correctness signal tying the AOT path to the training path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import mlp as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32).astype(dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.sampled_from([1, 3, 16, 64, 128, 256, 384]),
+    k=st.integers(1, 40),
+    h=st.sampled_from([1, 8, 64, 96]),
+    act=st.sampled_from(["none", "relu", "tanh"]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_fused_linear_matches_ref(rows, k, h, act, dtype):
+    dt = jnp.dtype(dtype)
+    x = _rand(0, (rows, k), dt)
+    w = _rand(1, (k, h), dt)
+    b = _rand(2, (h,), dt)
+    got = K.fused_linear(x, w, b, act)
+    want = R.fused_linear_ref(x, w, b, act)
+    assert got.shape == want.shape == (rows, h)
+    assert got.dtype == dt
+    tol = 1e-5 if dtype == "float32" else 3e-2
+    assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.sampled_from([1, 7, 64, 128, 512]),
+    f=st.integers(1, 32),
+)
+def test_standardize_matches_ref(rows, f):
+    x = _rand(3, (rows, f), jnp.float32)
+    mu = _rand(4, (f,), jnp.float32)
+    sd = jnp.abs(_rand(5, (f,), jnp.float32)) + 0.5
+    got = K.standardize(x, mu, sd)
+    want = R.standardize_ref(x, mu, sd)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_fused_linear_rejects_unknown_activation():
+    x = jnp.ones((4, 4))
+    w = jnp.ones((4, 4))
+    b = jnp.ones((4,))
+    with pytest.raises(ValueError):
+        K.fused_linear(x, w, b, "gelu!")
+
+
+def test_mlp_kernel_matches_ref_end_to_end():
+    from compile import model as M
+
+    params = M.init_params(jax.random.key(0), 16)
+    x = _rand(6, (64, 16), jnp.float32)
+    got = M.mlp_kernel(params, x)
+    want = M.mlp_ref(params, x)
+    assert got.shape == (64,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_kernel_multi_tile_batch():
+    from compile import model as M
+
+    params = M.init_params(jax.random.key(1), 12)
+    x = _rand(7, (256, 12), jnp.float32)  # 2 row tiles
+    got = M.mlp_kernel(params, x)
+    want = M.mlp_ref(params, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,149 @@
+"""Sanity and invariant tests on the analytical oracle (ground truth)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import profiler as pf
+
+
+class TestAttnPrefill:
+    def test_monotone_in_length(self):
+        t1 = pf.attn_prefill_time([128] * 8, [0] * 8, 28, 4, 128)
+        t2 = pf.attn_prefill_time([512] * 8, [0] * 8, 28, 4, 128)
+        assert t2 > t1
+
+    def test_monotone_in_batch(self):
+        t1 = pf.attn_prefill_time([512] * 4, [0] * 4, 28, 4, 128)
+        t2 = pf.attn_prefill_time([512] * 32, [0] * 32, 28, 4, 128)
+        assert t2 > t1
+
+    def test_context_increases_time(self):
+        t1 = pf.attn_prefill_time([256] * 8, [0] * 8, 28, 4, 128)
+        t2 = pf.attn_prefill_time([256] * 8, [4096] * 8, 28, 4, 128)
+        assert t2 > t1
+
+    def test_empty_batch(self):
+        assert pf.attn_prefill_time([], [], 28, 4, 128) == 0.0
+        assert pf.attn_prefill_time([0, 0], [5, 5], 28, 4, 128) == 0.0
+
+    def test_skew_costs_more_than_mean_equivalent(self):
+        """The §1 phenomenon: a skewed batch is slower than a homogeneous
+        batch with the same total work (straggler/wave effects)."""
+        skewed = [64] * 71 + [8192]
+        mean_len = sum(skewed) // 72
+        t_skew = pf.attn_prefill_time(skewed, [0] * 72, 28, 4, 128)
+        t_mean = pf.attn_prefill_time([mean_len] * 72, [0] * 72, 28, 4, 128)
+        assert t_skew > t_mean
+
+
+class TestAttnDecode:
+    def test_monotone_in_context(self):
+        t1 = pf.attn_decode_time([1024] * 16, 28, 4, 128)
+        t2 = pf.attn_decode_time([8192] * 16, 28, 4, 128)
+        assert t2 > t1
+
+    def test_straggler_dominates(self):
+        """One 64k-context request among short ones dominates runtime."""
+        base = pf.attn_decode_time([256] * 71, 28, 4, 128)
+        skew = pf.attn_decode_time([256] * 71 + [65536], 28, 4, 128)
+        assert skew > 1.5 * base
+
+    def test_empty(self):
+        assert pf.attn_decode_time([], 28, 4, 128) == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(1, 32768), min_size=1, max_size=64))
+    def test_positive_and_finite(self, ctx):
+        t = pf.attn_decode_time(ctx, 28, 4, 128)
+        assert t > 0 and math.isfinite(t)
+
+
+class TestGemm:
+    def test_zero_dims(self):
+        assert pf.gemm_time(0, 128, 128) == 0.0
+        assert pf.gemm_time(128, 0, 128) == 0.0
+
+    def test_wave_quantization_stairs(self):
+        """Crossing a wave boundary produces a jump larger than within."""
+        # 108 SMs, 128x128 tiles: m=128*108 fills one wave at n=128
+        t_before = pf.gemm_time(128 * 108, 128, 4096)
+        t_after = pf.gemm_time(128 * 109, 128, 4096)
+        t_within = pf.gemm_time(128 * 107, 128, 4096)
+        assert (t_after - t_before) > 5 * abs(t_before - t_within)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 8192), n=st.integers(1, 8192), k=st.integers(1, 8192)
+    )
+    def test_monotone_in_k(self, m, n, k):
+        assert pf.gemm_time(m, n, 2 * k) >= pf.gemm_time(m, n, k)
+
+
+class TestGroupedGemm:
+    def test_imbalance_costs_more(self):
+        """Same total tokens, imbalanced loads => more tiles => slower."""
+        bal = pf.grouped_gemm_time([256] * 16, 4096, 2048)
+        imb = pf.grouped_gemm_time([16] * 15 + [256 * 16 - 240], 4096, 2048)
+        assert imb > bal
+
+    def test_fragmentation_costs_more(self):
+        """Tokens split across many tiny experts pay tile quantization."""
+        one = pf.grouped_gemm_time([1024], 4096, 2048)
+        frag = pf.grouped_gemm_time([16] * 64, 4096, 2048)
+        assert frag > one
+
+    def test_empty(self):
+        assert pf.grouped_gemm_time([0, 0, 0], 4096, 2048) == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(0, 4096), min_size=1, max_size=64))
+    def test_positive_when_any_load(self, loads):
+        t = pf.grouped_gemm_time(loads, 2048, 1024)
+        if sum(loads) == 0:
+            assert t == 0.0
+        else:
+            assert t > 0 and math.isfinite(t)
+
+
+class TestCollectives:
+    def test_allreduce_scales_with_bytes(self):
+        assert pf.allreduce_time(1 << 30, 8) > pf.allreduce_time(1 << 20, 8)
+
+    def test_single_rank_is_free(self):
+        assert pf.allreduce_time(1 << 20, 1) == 0.0
+        assert pf.all2all_time(1 << 20, 1) == 0.0
+
+    def test_p2p(self):
+        t = pf.p2p_time(400e9)  # 1 second of wire time at 400 GB/s
+        assert 1.0 < t < 1.01
+
+
+class TestFeatureExtraction:
+    def test_attn_feature_count(self):
+        from compile import features as F
+
+        v = F.attn_features(True, [128, 256], [0, 0], 28, 4, 128)
+        assert len(v) == F.ATTN_N_FEATURES
+        assert all(math.isfinite(x) for x in v)
+
+    def test_gg_feature_count(self):
+        from compile import features as F
+
+        v = F.grouped_gemm_features([5, 0, 100], 4096, 2048)
+        assert len(v) == F.GG_N_FEATURES
+        assert all(math.isfinite(x) for x in v)
+
+    def test_gemm_feature_count(self):
+        from compile import features as F
+
+        v = F.gemm_features(64, 4096, 2048)
+        assert len(v) == F.GEMM_N_FEATURES
+
+    def test_cv_zero_for_homogeneous(self):
+        from compile import features as F
+
+        v = F.attn_features(False, [1] * 8, [512] * 8, 28, 4, 128)
+        # cv_l (index 6) and cv_c (index 8) are zero for homogeneous
+        assert v[6] == 0.0 and v[8] == 0.0

@@ -1,0 +1,90 @@
+//! Bench A2 (§3.3 PD): backpressure ablation.
+//!
+//! Sweeps decode-stage KV memory and shows the controller's pull-based
+//! transfer discipline: with backpressure ON (Frontier's model),
+//! transfers wait for memory-availability signals and the system
+//! degrades gracefully; with the consumer's memory unconstrained
+//! (backpressure ablated), the decode stage overcommits and the
+//! simulated throughput is optimistic fiction.
+
+use frontier::bench_util::{section, write_results};
+use frontier::config::{ExperimentConfig, PolicyConfig};
+use frontier::metrics::percentile;
+use frontier::model::ModelConfig;
+use frontier::report::{csv, markdown_table};
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+fn workload() -> WorkloadSpec {
+    // heavy enough that a starved decode pool is the bottleneck: long
+    // contexts (big KV footprints) and long decodes at a high offered rate
+    WorkloadSpec {
+        arrival: Arrival::Poisson { rate: 25.0 },
+        input: LenDist::LogNormal { mean: 2048.0, sigma: 0.8 },
+        output: LenDist::Fixed(256),
+        n_requests: 150,
+        seed: 77,
+    }
+}
+
+fn main() {
+    section("decode KV pool sweep: backpressure in action (PD 4:4, Qwen2-7B)");
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for reserve in [0.10, 0.90, 0.99, 0.995, 0.998] {
+        let mut cfg =
+            ExperimentConfig::pd(ModelConfig::qwen2_7b(), 4, 4).with_workload(workload());
+        cfg.policy = PolicyConfig { kv_reserve_frac: reserve, ..PolicyConfig::default() };
+        let r = frontier::run_experiment(&cfg).expect("backpressure must not deadlock");
+        let pool_frac = 1.0 - reserve;
+        rows.push(vec![
+            format!("{:.1}%", pool_frac * 100.0),
+            format!("{:.2}", r.tokens_per_sec_per_gpu()),
+            format!("{:.0}", percentile(&r.metrics.ttft, 50.0) * 1e3),
+            format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
+            format!("{:.1}", percentile(&r.metrics.tbt, 99.0) * 1e3),
+            format!("{}", r.metrics.completed_requests),
+        ]);
+        csv_rows.push(vec![
+            format!("{pool_frac:.3}"),
+            format!("{:.4}", r.tokens_per_sec_per_gpu()),
+            format!("{:.4}", percentile(&r.metrics.ttft, 99.0)),
+            format!("{:.4}", percentile(&r.metrics.tbt, 99.0)),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["KV pool", "tok/s/gpu", "TTFT p50 (ms)", "TTFT p99 (ms)", "TBT p99 (ms)", "done"],
+            &rows
+        )
+    );
+    write_results(
+        "ablation_backpressure.csv",
+        &csv(&["pool_frac", "tok_s_gpu", "ttft_p99_s", "tbt_p99_s"], &csv_rows),
+    );
+    println!(
+        "\nshrinking the consumer pool moves the cost into TTFT (requests queue\n\
+         at PREFILL_COMPLETE awaiting transfer slots) while decode TBT stays\n\
+         flat — the producer/consumer rate-match the paper models in §3.3.\n"
+    );
+
+    section("ablation: what an unconstrained-consumer simulator would claim");
+    // backpressure ablated = decode pool effectively infinite
+    let mut free = ExperimentConfig::pd(ModelConfig::qwen2_7b(), 4, 4).with_workload(workload());
+    free.policy = PolicyConfig { kv_reserve_frac: 0.0, ..PolicyConfig::default() };
+    let free_r = frontier::run_experiment(&free).unwrap();
+    let mut tight = free.clone();
+    tight.policy.kv_reserve_frac = 0.995;
+    let tight_r = frontier::run_experiment(&tight).unwrap();
+    println!(
+        "unconstrained consumer: {:.2} tok/s/gpu, TTFT p99 {:.0} ms\n\
+         real 0.5% pool       : {:.2} tok/s/gpu, TTFT p99 {:.0} ms\n\
+         a simulator without memory-availability signaling reports the first\n\
+         number for the second system — {:.1}x optimistic on throughput.",
+        free_r.tokens_per_sec_per_gpu(),
+        percentile(&free_r.metrics.ttft, 99.0) * 1e3,
+        tight_r.tokens_per_sec_per_gpu(),
+        percentile(&tight_r.metrics.ttft, 99.0) * 1e3,
+        free_r.tokens_per_sec_per_gpu() / tight_r.tokens_per_sec_per_gpu()
+    );
+}

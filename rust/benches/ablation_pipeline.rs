@@ -1,0 +1,91 @@
+//! Bench A3 (§3.3 AF): micro-batch ping-pong pipeline ablation.
+//!
+//! Sweeps the number of micro-batches m per decode step and reports
+//! both the pure dependency-graph step time (token latency) and the
+//! end-to-end serving numbers, demonstrating the latency-hiding the
+//! event-graph executor captures (MegaScale-Infer / Step-3).
+
+use frontier::bench_util::{bench, section, write_results};
+use frontier::config::{ExperimentConfig, OverheadConfig};
+use frontier::model::ModelConfig;
+use frontier::report::{csv, markdown_table};
+use frontier::workflows::af::{af_step, attn_utilization, AfStep};
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+fn main() {
+    section("dependency-graph step time vs micro-batch count (fixed total work)");
+    let layers = 32;
+    let total_attn = 3.2e-3; // attention-side work per layer-step, all micros
+    let total_ffn = 3.2e-3;
+    let xfer = 30e-6;
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for m in [1usize, 2, 3, 4, 6, 8, 12, 16] {
+        let step = AfStep::uniform(
+            layers,
+            m,
+            total_attn / m as f64 / layers as f64,
+            total_ffn / m as f64 / layers as f64,
+            xfer,
+        );
+        let (t, busy) = af_step(&step);
+        let util = busy[0] / t;
+        rows.push(vec![
+            m.to_string(),
+            format!("{:.2}", t * 1e3),
+            format!("{:.0}%", util * 100.0),
+            format!("{:.2}", (busy[2] / t) * 100.0),
+        ]);
+        csv_rows.push(vec![m.to_string(), format!("{:.5}", t * 1e3), format!("{util:.4}")]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["micro-batches", "step time (ms)", "attn-pool busy", "a2f link busy %"],
+            &rows
+        )
+    );
+    write_results("ablation_pipeline.csv", &csv(&["m", "step_ms", "attn_util"], &csv_rows));
+    println!(
+        "m=1 serializes attn -> transfer -> ffn -> transfer; m>=2 overlaps the\n\
+         two pools (ping-pong) until transfer overhead dominates at large m.\n"
+    );
+
+    section("end-to-end AF serving across m (Mixtral-8x7B, 4+4 GPUs)");
+    let mut rows = Vec::new();
+    for m in [1u32, 2, 4, 8] {
+        // prefill tier needs tp=2: Mixtral's 92 GB of weights do not fit
+        // a single 80 GB GPU
+        let cfg = ExperimentConfig::af(ModelConfig::mixtral_8x7b(), 2, 4, 4, m)
+            .with_parallelism(frontier::parallelism::Parallelism::tp(2))
+            .with_workload(WorkloadSpec {
+                arrival: Arrival::Batch,
+                input: LenDist::Uniform { lo: 128, hi: 512 },
+                output: LenDist::Fixed(32),
+                n_requests: 32,
+                seed: 9,
+            })
+            .with_overhead(OverheadConfig::zero());
+        let r = frontier::run_experiment(&cfg).unwrap();
+        rows.push(vec![
+            m.to_string(),
+            format!("{:.2}", r.sim_duration),
+            format!("{:.1}", r.tokens_per_sec_per_gpu()),
+        ]);
+    }
+    println!("{}", markdown_table(&["m", "makespan (s)", "tok/s/gpu"], &rows));
+    println!(
+        "at this decode batch the FFN side is weight-bound (re-reads all\n\
+         expert weights per micro-batch), so fixed costs multiply with m and\n\
+         serial m=1 wins — the quantitative trade-off MegaScale-Infer's\n\
+         operating point (very large global batches, step-level sweep above)\n\
+         flips the other way. Frontier prices both regimes."
+    );
+
+    section("executor cost (host time per simulated step)");
+    let step = AfStep::uniform(61, 4, 25e-6, 25e-6, 10e-6);
+    bench("af_step 61 layers x 4 micros", || {
+        std::hint::black_box(af_step(&step));
+    });
+    let _ = attn_utilization(&step);
+}

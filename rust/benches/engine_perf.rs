@@ -1,0 +1,98 @@
+//! Bench P1: simulator performance — events/second, sim-time/host-time
+//! ratio, and predictor cache effectiveness. This is the §Perf target
+//! surface for the L3 optimization pass (EXPERIMENTS.md §Perf).
+
+use frontier::bench_util::{bench, section};
+use frontier::config::{ExperimentConfig, OverheadConfig};
+use frontier::core::{EventQueue, SimTime};
+use frontier::model::ModelConfig;
+use frontier::predictor::PredictorKind;
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+fn big_workload(n: u32) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: Arrival::Poisson { rate: 40.0 },
+        input: LenDist::LogNormal { mean: 512.0, sigma: 0.7 },
+        output: LenDist::LogNormal { mean: 96.0, sigma: 0.4 },
+        n_requests: n,
+        seed: 1,
+    }
+}
+
+fn main() {
+    section("raw event queue throughput");
+    bench("schedule+pop 100k events", || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.schedule_at(SimTime(i * 7 % 1_000_000), i);
+        }
+        while q.pop().is_some() {}
+    });
+
+    section("end-to-end simulation throughput (oracle predictor)");
+    for (name, cfg) in [
+        (
+            "colocated qwen2-7b x4, 400 reqs",
+            ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 4)
+                .with_workload(big_workload(400)),
+        ),
+        (
+            "pd 4:4 qwen2-7b, 400 reqs",
+            ExperimentConfig::pd(ModelConfig::qwen2_7b(), 4, 4).with_workload(big_workload(400)),
+        ),
+        (
+            "colocated mixtral ep8, 200 reqs",
+            ExperimentConfig::colocated(ModelConfig::mixtral_8x7b(), 1)
+                .with_parallelism(frontier::parallelism::Parallelism::new(1, 1, 8))
+                .with_workload(big_workload(200)),
+        ),
+    ] {
+        let r = frontier::run_experiment(&cfg).unwrap();
+        println!(
+            "{name}: {} events in {:.3}s host = {:.0} ev/s | sim/host = {:.0}x | {} iters",
+            r.events_processed,
+            r.host_duration,
+            r.events_per_sec(),
+            r.speedup(),
+            r.metrics.iterations,
+        );
+        bench(&format!("simulate: {name}"), || {
+            std::hint::black_box(frontier::run_experiment(&cfg).unwrap().sim_duration);
+        });
+    }
+
+    section("predictor cost inside the loop");
+    let cfg = ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 2)
+        .with_workload(big_workload(150));
+    bench("full sim, oracle predictor", || {
+        std::hint::black_box(frontier::run_experiment(&cfg).unwrap().sim_duration);
+    });
+    let cfg_v = cfg.clone().with_predictor(PredictorKind::Vidur);
+    bench("full sim, vidur predictor", || {
+        std::hint::black_box(frontier::run_experiment(&cfg_v).unwrap().sim_duration);
+    });
+    if frontier::runtime::PredictorRuntime::default_dir().join("manifest.json").exists() {
+        let cfg_l = cfg.clone().with_predictor(PredictorKind::Learned);
+        let t0 = std::time::Instant::now();
+        let cold = frontier::run_experiment(&cfg_l).unwrap();
+        println!(
+            "full sim, learned predictor COLD: {:?} ({} PJRT launches, incl. ~100ms artifact compile)",
+            t0.elapsed(),
+            cold.metrics.predictor_evals
+        );
+        bench("full sim, learned predictor WARM (shared cache)", || {
+            std::hint::black_box(frontier::run_experiment(&cfg_l).unwrap().sim_duration);
+        });
+    }
+
+    section("zero-overhead config (engine floor)");
+    let fast = ExperimentConfig::colocated(ModelConfig::tiny(), 8)
+        .with_workload(big_workload(1000))
+        .with_overhead(OverheadConfig::zero());
+    let r = frontier::run_experiment(&fast).unwrap();
+    println!(
+        "tiny x8, 1000 reqs: {:.0} ev/s, {} events",
+        r.events_per_sec(),
+        r.events_processed
+    );
+}

@@ -1,0 +1,98 @@
+//! Bench F2 (paper Figure 2): operator-runtime prediction error CDFs
+//! under dynamic workloads, plus prediction-throughput timings.
+//!
+//! Regenerates both Fig. 2 panels: Attention (Frontier vs Vidur vs
+//! Roofline) and GroupedGEMM (Frontier; unsupported by Vidur).
+
+use frontier::bench_util::{bench, section, write_results};
+use frontier::core::Pcg64;
+use frontier::metrics::frac_below;
+use frontier::operators::opgen;
+use frontier::predictor::{
+    ExecutionPredictor, LearnedPredictor, OraclePredictor, RooflinePredictor, VidurPredictor,
+};
+use frontier::report::{cdf_summary, csv};
+use frontier::runtime::PredictorRuntime;
+
+fn errors(
+    pred: &mut dyn ExecutionPredictor,
+    truth: &mut OraclePredictor,
+    ops: &[frontier::operators::OpWorkload],
+) -> Vec<f64> {
+    ops.iter()
+        .map(|op| {
+            let p = pred.predict(op);
+            let t = truth.predict(op);
+            (p - t).abs() / t
+        })
+        .collect()
+}
+
+fn main() {
+    let n = 600;
+    let mut rng = Pcg64::new(0xF16_2);
+    let attn_ops: Vec<_> = (0..n).map(|_| opgen::attn_workload(&mut rng)).collect();
+    let gg_ops: Vec<_> = (0..n).map(|_| opgen::grouped_gemm_workload(&mut rng)).collect();
+    let mut truth = OraclePredictor::a800();
+    let mut vidur = VidurPredictor::a800();
+    let mut roofline = RooflinePredictor::a800();
+
+    section("Figure 2(a): Attention relative-error CDF");
+    let learned = LearnedPredictor::load_exact(&PredictorRuntime::default_dir());
+    match learned {
+        Ok(mut learned) => {
+            let fe = errors(&mut learned, &mut truth, &attn_ops);
+            let ve = errors(&mut vidur, &mut truth, &attn_ops);
+            let re = errors(&mut roofline, &mut truth, &attn_ops);
+            println!("{}", cdf_summary(&fe, "Frontier"));
+            println!("{}", cdf_summary(&ve, "Vidur   "));
+            println!("{}", cdf_summary(&re, "Roofline"));
+            println!(
+                "frontier <10%: {:.1}% of cases (paper: >94%) | vidur <10%: {:.1}%",
+                frac_below(&fe, 0.10) * 100.0,
+                frac_below(&ve, 0.10) * 100.0
+            );
+
+            section("Figure 2(b): GroupedGEMM relative-error CDF");
+            let ge = errors(&mut learned, &mut truth, &gg_ops);
+            println!("{}", cdf_summary(&ge, "Frontier"));
+            println!(
+                "frontier <6%: {:.1}% of cases (paper: >95%)",
+                frac_below(&ge, 0.06) * 100.0
+            );
+            let rows: Vec<Vec<String>> = (0..n)
+                .map(|i| {
+                    vec![
+                        format!("{:.6}", fe[i]),
+                        format!("{:.6}", ve[i]),
+                        format!("{:.6}", ge[i]),
+                    ]
+                })
+                .collect();
+            write_results(
+                "bench_fig2.csv",
+                &csv(&["frontier_attn", "vidur_attn", "frontier_gg"], &rows),
+            );
+
+            section("prediction throughput (the simulator's hot path)");
+            let op = &attn_ops[0];
+            bench("oracle predict (1 op)", || {
+                std::hint::black_box(truth.predict(op));
+            });
+            bench("learned predict, cache hit", || {
+                std::hint::black_box(learned.predict(op));
+            });
+            let mut i = 0usize;
+            bench("learned predict, cache miss (PJRT exec)", || {
+                i += 1;
+                std::hint::black_box(learned.predict(&attn_ops[i % attn_ops.len()]));
+            });
+        }
+        Err(e) => {
+            println!("learned predictor unavailable ({e}); run `make artifacts`.");
+            println!("falling back to vidur/roofline only");
+            let ve = errors(&mut vidur, &mut truth, &attn_ops);
+            println!("{}", cdf_summary(&ve, "Vidur"));
+        }
+    }
+}

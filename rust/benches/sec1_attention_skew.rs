@@ -1,0 +1,90 @@
+//! Bench S1 (paper §1 anecdote): one FlashAttention operation on a
+//! 72-request batch with skewed lengths. The paper reports Vidur at
+//! 0.151 ms against a measured 0.340 ms (>55% error); this bench
+//! reproduces the *shape* — Vidur severely underestimates, Frontier
+//! lands close to ground truth.
+
+use frontier::bench_util::section;
+use frontier::operators::OpWorkload;
+use frontier::predictor::{
+    ExecutionPredictor, LearnedPredictor, OraclePredictor, RooflinePredictor, VidurPredictor,
+};
+use frontier::report::markdown_table;
+use frontier::runtime::PredictorRuntime;
+
+fn main() {
+    // 72 decode requests: 71 short, one very long context — the regime
+    // where the runtime is straggler-dominated and a mean-length proxy
+    // collapses
+    let mut ctx = vec![200u32; 71];
+    ctx.push(32768);
+    assert_eq!(ctx.len(), 72);
+    let op = OpWorkload::Attention {
+        is_prefill: false,
+        q_lens: vec![1; 72],
+        ctx_lens: ctx,
+        n_heads: 28,
+        n_kv_heads: 4,
+        head_dim: 128,
+    };
+
+    let mut truth = OraclePredictor::a800();
+    let t = truth.predict(&op);
+    section("§1 anecdote: skewed 72-request decode attention batch");
+    let mut rows = vec![vec![
+        "ground truth (oracle)".to_string(),
+        format!("{:.3}", t * 1e3),
+        "-".to_string(),
+    ]];
+    let mut add = |name: &str, pred: &mut dyn ExecutionPredictor| {
+        let p = pred.predict(&op);
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", p * 1e3),
+            format!("{:+.1}%", (p / t - 1.0) * 100.0),
+        ]);
+        p
+    };
+    let v = add("vidur (sqrt proxy)", &mut VidurPredictor::a800());
+    add("roofline", &mut RooflinePredictor::a800());
+    let f = match LearnedPredictor::load_exact(&PredictorRuntime::default_dir()) {
+        Ok(mut l) => Some(add("frontier (learned)", &mut l)),
+        Err(e) => {
+            println!("(learned predictor unavailable: {e})");
+            None
+        }
+    };
+    println!("{}", markdown_table(&["model", "predicted (ms)", "error"], &rows));
+    println!(
+        "paper: vidur 0.151 ms vs measured 0.340 ms (-55.6%); here vidur is {:+.1}%",
+        (v / t - 1.0) * 100.0
+    );
+    assert!(v < 0.7 * t, "vidur must severely underestimate the skewed batch");
+    if let Some(f) = f {
+        assert!(
+            (f - t).abs() / t < 0.15,
+            "frontier must stay close to ground truth on the same batch"
+        );
+    }
+
+    // the homogeneous control: both models fine
+    section("control: homogeneous 72-request batch (same total kv)");
+    let total: u64 = 71 * 200 + 32768;
+    let hom = OpWorkload::Attention {
+        is_prefill: false,
+        q_lens: vec![1; 72],
+        ctx_lens: vec![(total / 72) as u32; 72],
+        n_heads: 28,
+        n_kv_heads: 4,
+        head_dim: 128,
+    };
+    let t_hom = truth.predict(&hom);
+    let v_hom = VidurPredictor::a800().predict(&hom);
+    println!(
+        "oracle {:.3} ms | vidur {:.3} ms ({:+.1}%) — proxy models are fine when \
+         batches are homogeneous; heterogeneity is what breaks them",
+        t_hom * 1e3,
+        v_hom * 1e3,
+        (v_hom / t_hom - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,95 @@
+//! Bench T2 (paper Table 2): end-to-end PD-disaggregated throughput,
+//! predicted vs profiled, across the four batch/length configurations.
+
+use frontier::bench_util::{bench, section, write_results};
+use frontier::config::{ExperimentConfig, OverheadConfig};
+use frontier::model::ModelConfig;
+use frontier::predictor::PredictorKind;
+use frontier::report::{csv, markdown_table};
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+const TABLE2: [(u32, u32, u32); 4] = [(4, 32, 1024), (8, 128, 256), (16, 256, 128), (32, 32, 128)];
+
+fn config(bs: u32, avg_in: u32, out: u32) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::pd(ModelConfig::qwen2_7b(), 4, 4).with_workload(
+        WorkloadSpec {
+            arrival: Arrival::Batch,
+            input: LenDist::Uniform { lo: (avg_in / 2).max(1), hi: avg_in + avg_in / 2 },
+            output: LenDist::Fixed(out),
+            n_requests: bs * 6,
+            seed: 0x7AB1E2,
+        },
+    );
+    cfg.policy.budget.max_batch = ((bs + 3) / 4).max(1) as usize;
+    cfg
+}
+
+fn main() {
+    section("Table 2: predicted vs profiled throughput (tokens/s/GPU)");
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for (bs, avg_in, out) in TABLE2 {
+        let predicted = frontier::run_experiment(
+            &config(bs, avg_in, out)
+                .with_predictor(PredictorKind::Learned)
+                .with_overhead(OverheadConfig::predicted()),
+        );
+        let profiled = frontier::run_experiment(
+            &config(bs, avg_in, out)
+                .with_predictor(PredictorKind::Oracle)
+                .with_overhead(OverheadConfig::profiled_real()),
+        )
+        .expect("profiled run");
+        let t = profiled.tokens_per_sec_per_gpu();
+        match predicted {
+            Ok(predicted) => {
+                let p = predicted.tokens_per_sec_per_gpu();
+                let err = (p - t).abs() / t * 100.0;
+                rows.push(vec![
+                    bs.to_string(),
+                    avg_in.to_string(),
+                    out.to_string(),
+                    format!("{t:.3}"),
+                    format!("{p:.3}"),
+                    format!("{err:.1}%"),
+                ]);
+                csv_rows.push(vec![
+                    bs.to_string(),
+                    format!("{t:.4}"),
+                    format!("{p:.4}"),
+                    format!("{:.4}", err / 100.0),
+                ]);
+            }
+            Err(e) => rows.push(vec![
+                bs.to_string(),
+                avg_in.to_string(),
+                out.to_string(),
+                format!("{t:.3}"),
+                format!("unavailable: {e}"),
+                "-".into(),
+            ]),
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Batch", "Avg In", "Out", "Profiled", "Predicted", "Rel err"],
+            &rows
+        )
+    );
+    write_results(
+        "bench_table2.csv",
+        &csv(&["batch", "profiled", "predicted", "rel_err"], &csv_rows),
+    );
+
+    section("simulation cost per Table-2 row (host time)");
+    for (bs, avg_in, out) in [(4u32, 32u32, 1024u32), (32, 32, 128)] {
+        bench(&format!("simulate bs={bs} in={avg_in} out={out} (oracle)"), || {
+            let r = frontier::run_experiment(
+                &config(bs, avg_in, out).with_overhead(OverheadConfig::profiled_real()),
+            )
+            .unwrap();
+            std::hint::black_box(r.sim_duration);
+        });
+    }
+}

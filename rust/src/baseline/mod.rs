@@ -1,0 +1,240 @@
+//! Replica-centric baseline simulator (Vidur-style).
+//!
+//! The abstraction the paper argues against (§1): the system is a pool
+//! of homogeneous, self-contained replicas and simulation reduces to
+//! load-balancing requests among them. Operator runtimes come from the
+//! proxy-length [`crate::predictor::VidurPredictor`]; MoE layers use the
+//! balance-oblivious `mean` (no straggler barrier); there are no
+//! primitives for inter-cluster routing, KV transfer, or backpressure —
+//! [`ReplicaCentricSim::simulate`] rejects disaggregated modes by
+//! construction (Table 1's ✗ cells).
+
+use anyhow::{bail, Result};
+
+use crate::config::{DeploymentMode, ExperimentConfig, OverheadConfig};
+use crate::core::{EventQueue, Pcg64, SimTime};
+use crate::metrics::{MetricsCollector, SimReport};
+use crate::moe::RoutingPolicy;
+use crate::predictor::VidurPredictor;
+use crate::workflows::{BatchShape, CostCtx, CostModel};
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival(u64),
+    IterEnd { r: usize },
+}
+
+struct Replica {
+    waiting: std::collections::VecDeque<u64>,
+    running: Vec<u64>,
+    busy: bool,
+}
+
+struct BReq {
+    arrival: SimTime,
+    input_len: u32,
+    output_len: u32,
+    prefilled: bool,
+    decoded: u32,
+    first_token: Option<SimTime>,
+    last_token: SimTime,
+}
+
+/// The replica-centric simulator.
+pub struct ReplicaCentricSim {
+    cfg: ExperimentConfig,
+    max_batch: usize,
+}
+
+impl ReplicaCentricSim {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        let max_batch = cfg.policy.budget.max_batch;
+        ReplicaCentricSim { cfg, max_batch }
+    }
+
+    /// Run the workload. Disaggregated deployments cannot be expressed
+    /// in the replica-centric abstraction.
+    pub fn simulate(&self) -> Result<SimReport> {
+        let n_replicas = match self.cfg.mode {
+            DeploymentMode::Colocated { replicas } => replicas as usize,
+            _ => bail!(
+                "replica-centric abstraction cannot express {:?} (no \
+                 inter-cluster primitives)",
+                self.cfg.mode.name()
+            ),
+        };
+        let host_start = std::time::Instant::now();
+        let mut pred = VidurPredictor::a800();
+        let mut cost = CostModel::new(self.cfg.model.clone(), self.cfg.parallel, self.cfg.link);
+        // balance-oblivious: no straggler modeling, idealized routing
+        cost.straggler_max = false;
+        cost.moe_routing = RoutingPolicy::Balanced;
+        cost.overhead = OverheadConfig::zero();
+        let mut rng = Pcg64::new(self.cfg.seed);
+        let mut metrics = MetricsCollector::default();
+
+        let trace = self.cfg.workload.generate();
+        let mut reqs: Vec<BReq> = trace
+            .iter()
+            .map(|s| BReq {
+                arrival: s.arrival,
+                input_len: s.input_len,
+                output_len: s.output_len,
+                prefilled: false,
+                decoded: 0,
+                first_token: None,
+                last_token: SimTime::ZERO,
+            })
+            .collect();
+        let mut replicas: Vec<Replica> = (0..n_replicas)
+            .map(|_| Replica { waiting: Default::default(), running: vec![], busy: false })
+            .collect();
+        let mut queue: EventQueue<Ev> = EventQueue::new();
+        for (i, r) in trace.iter().enumerate() {
+            queue.schedule_at(r.arrival, Ev::Arrival(i as u64));
+        }
+        let mut rr = 0usize;
+        while let Some(ev) = queue.pop() {
+            match ev.kind {
+                Ev::Arrival(rid) => {
+                    // pure round-robin load balancing across the pool
+                    let r = rr % n_replicas;
+                    rr += 1;
+                    replicas[r].waiting.push_back(rid);
+                    Self::maybe_start(
+                        r, &mut replicas, &mut reqs, &mut queue, &cost, &mut pred, &mut rng,
+                        &mut metrics, self.max_batch,
+                    );
+                }
+                Ev::IterEnd { r } => {
+                    let now = queue.now();
+                    metrics.iterations += 1;
+                    let running = replicas[r].running.clone();
+                    let mut done = Vec::new();
+                    for &rid in &running {
+                        let rq = &mut reqs[rid as usize];
+                        if !rq.prefilled {
+                            rq.prefilled = true;
+                            rq.decoded = 1;
+                            rq.first_token = Some(now);
+                            rq.last_token = now;
+                            metrics.prefill_tokens += rq.input_len as u64;
+                            metrics.output_tokens += 1;
+                            metrics.ttft.push((now - rq.arrival).as_secs_f64());
+                        } else {
+                            rq.decoded += 1;
+                            metrics.output_tokens += 1;
+                            metrics.tbt.push((now - rq.last_token).as_secs_f64());
+                            rq.last_token = now;
+                        }
+                        if rq.decoded >= rq.output_len {
+                            done.push(rid);
+                        }
+                    }
+                    for rid in done {
+                        let rq = &reqs[rid as usize];
+                        let e2e = (now - rq.arrival).as_secs_f64();
+                        metrics.e2e.push(e2e);
+                        metrics
+                            .norm_latency
+                            .push(e2e / rq.output_len.max(1) as f64);
+                        metrics.completed_requests += 1;
+                        replicas[r].running.retain(|&x| x != rid);
+                    }
+                    replicas[r].busy = false;
+                    Self::maybe_start(
+                        r, &mut replicas, &mut reqs, &mut queue, &cost, &mut pred, &mut rng,
+                        &mut metrics, self.max_batch,
+                    );
+                }
+            }
+        }
+        Ok(SimReport {
+            mode: "replica-centric".into(),
+            predictor: "vidur".into(),
+            sim_duration: queue.now().as_secs_f64(),
+            host_duration: host_start.elapsed().as_secs_f64(),
+            events_processed: queue.processed(),
+            n_gpus: self.cfg.n_gpus(),
+            metrics,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn maybe_start(
+        r: usize,
+        replicas: &mut [Replica],
+        reqs: &mut [BReq],
+        queue: &mut EventQueue<Ev>,
+        cost: &CostModel,
+        pred: &mut VidurPredictor,
+        rng: &mut Pcg64,
+        metrics: &mut MetricsCollector,
+        max_batch: usize,
+    ) {
+        let repl = &mut replicas[r];
+        if repl.busy {
+            return;
+        }
+        while repl.running.len() < max_batch {
+            match repl.waiting.pop_front() {
+                Some(rid) => repl.running.push(rid),
+                None => break,
+            }
+        }
+        if repl.running.is_empty() {
+            return;
+        }
+        // monolithic batch model: full prefills (no chunking), then decode
+        let mut shape = BatchShape::default();
+        for &rid in &repl.running {
+            let rq = &reqs[rid as usize];
+            if !rq.prefilled {
+                shape.prefill.push((rq.input_len, 0));
+                shape.lm_head_rows += 1;
+            } else {
+                shape.decode_ctx.push(rq.input_len + rq.decoded);
+                shape.lm_head_rows += 1;
+            }
+        }
+        let dt = {
+            let mut ctx = CostCtx { pred, rng, metrics: Some(metrics) };
+            cost.iteration_time(&mut ctx, &shape)
+        };
+        repl.busy = true;
+        queue.schedule_in(SimTime::from_secs_f64(dt), Ev::IterEnd { r });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn completes_colocated_workload() {
+        let cfg = ExperimentConfig::colocated(ModelConfig::tiny(), 2)
+            .with_workload(WorkloadSpec::table2(16, 64, 8));
+        let report = ReplicaCentricSim::new(cfg).simulate().unwrap();
+        assert_eq!(report.metrics.completed_requests, 16);
+        assert_eq!(report.metrics.output_tokens, 16 * 8);
+    }
+
+    #[test]
+    fn rejects_disaggregated_modes() {
+        let pd = ExperimentConfig::pd(ModelConfig::tiny(), 1, 1);
+        assert!(ReplicaCentricSim::new(pd).simulate().is_err());
+        let af = ExperimentConfig::af(ModelConfig::tiny(), 1, 1, 1, 2);
+        assert!(ReplicaCentricSim::new(af).simulate().is_err());
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = ExperimentConfig::colocated(ModelConfig::tiny(), 1)
+            .with_workload(WorkloadSpec::table2(8, 64, 4));
+        let a = ReplicaCentricSim::new(cfg.clone()).simulate().unwrap();
+        let b = ReplicaCentricSim::new(cfg).simulate().unwrap();
+        assert_eq!(a.sim_duration, b.sim_duration);
+    }
+}

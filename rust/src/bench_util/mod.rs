@@ -1,0 +1,86 @@
+//! Minimal benchmark harness (criterion is unavailable in this offline
+//! build). Benches are `harness = false` binaries that call
+//! [`bench`] / [`Bencher`] and print a compact report.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup; adaptive iteration count targeting ~1s total.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed();
+    let target = Duration::from_millis(600);
+    let iters = if first.is_zero() {
+        100
+    } else {
+        ((target.as_secs_f64() / first.as_secs_f64()).ceil() as u32).clamp(3, 200)
+    };
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: samples[samples.len() / 2],
+        p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min: samples[0],
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Write a results file next to the bench output (benches tee their own
+/// tables into `target/bench_results/`).
+pub fn write_results(file: &str, content: &str) {
+    let dir = std::path::Path::new("target/bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(file);
+    if std::fs::write(&path, content).is_ok() {
+        println!("[written {path:?}]");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.p95 >= r.p50);
+    }
+}

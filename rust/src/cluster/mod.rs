@@ -1,0 +1,167 @@
+//! Cluster substrate: ClusterWorker / ReplicaWorker (§3.1).
+//!
+//! A [`ClusterWorker`] models one specialized hardware cluster (prefill,
+//! decode, unified, or an AF attn+ffn pair) containing a scheduler-side
+//! view and a pool of [`ReplicaWorker`]s. The `GlobalController`
+//! (coordinator) owns the clusters and drives them through events; the
+//! structs here hold the per-entity state: queues, running sets, KV
+//! block pools, and utilization accounting.
+
+use std::collections::VecDeque;
+
+use crate::core::SimTime;
+use crate::memory::BlockManager;
+use crate::scheduler::QueuedReq;
+
+/// What a cluster does in the deployment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageKind {
+    /// Co-located: both prefill and decode.
+    Unified,
+    /// Prefill producer stage (PD).
+    Prefill,
+    /// Decode consumer stage (PD).
+    Decode,
+    /// AF pair: attention pool + FFN pool running the ping-pong
+    /// pipeline; hosts KV on the attention side.
+    AfDecode,
+}
+
+/// A single model instance (or AF composite) executing iterations.
+#[derive(Debug)]
+pub struct ReplicaWorker {
+    pub waiting: VecDeque<QueuedReq>,
+    /// Requests in the running batch (request ids).
+    pub running: Vec<u64>,
+    /// Prefill tokens scheduled per running request in the current
+    /// iteration (parallel to `running`; 0 = decode step).
+    pub iter_chunks: Vec<u32>,
+    pub mem: BlockManager,
+    pub busy: bool,
+    pub iterations: u64,
+    pub busy_ns: u64,
+    /// Tokens processed (prefill + decode) for utilization reports.
+    pub tokens_processed: u64,
+}
+
+impl ReplicaWorker {
+    pub fn new(mem: BlockManager) -> Self {
+        ReplicaWorker {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            iter_chunks: Vec::new(),
+            mem,
+            busy: false,
+            iterations: 0,
+            busy_ns: 0,
+            tokens_processed: 0,
+        }
+    }
+
+    /// Scheduler load metric: waiting + running requests.
+    pub fn load(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+}
+
+/// A specialized cluster: scheduler state + replica pool.
+#[derive(Debug)]
+pub struct ClusterWorker {
+    pub kind: StageKind,
+    pub replicas: Vec<ReplicaWorker>,
+    /// Round-robin cursor for routing.
+    pub rr_cursor: usize,
+    /// GPUs backing each replica (AF: attn+ffn pools).
+    pub gpus_per_replica: u32,
+}
+
+impl ClusterWorker {
+    pub fn new(kind: StageKind, n_replicas: u32, gpus_per_replica: u32, mem: BlockManager) -> Self {
+        ClusterWorker {
+            kind,
+            replicas: (0..n_replicas).map(|_| ReplicaWorker::new(mem.clone())).collect(),
+            rr_cursor: 0,
+            gpus_per_replica,
+        }
+    }
+
+    pub fn loads(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.load()).collect()
+    }
+
+    pub fn free_blocks(&self) -> Vec<u64> {
+        self.replicas.iter().map(|r| r.mem.free_blocks()).collect()
+    }
+
+    /// Aggregate memory utilization across replicas (the availability
+    /// signal the ClusterScheduler reports upstream in PD mode).
+    pub fn memory_utilization(&self) -> f64 {
+        let total: u64 = self.replicas.iter().map(|r| r.mem.total_blocks()).sum();
+        let used: u64 = self.replicas.iter().map(|r| r.mem.used_blocks()).sum();
+        if total == 0 {
+            0.0
+        } else {
+            used as f64 / total as f64
+        }
+    }
+
+    /// Busy fraction over a horizon (utilization report).
+    pub fn busy_fraction(&self, horizon: SimTime) -> f64 {
+        if horizon.0 == 0 || self.replicas.is_empty() {
+            return 0.0;
+        }
+        let busy: u64 = self.replicas.iter().map(|r| r.busy_ns).sum();
+        busy as f64 / (horizon.0 as f64 * self.replicas.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(n: u32, blocks: u64) -> ClusterWorker {
+        ClusterWorker::new(StageKind::Decode, n, 1, BlockManager::with_blocks(blocks))
+    }
+
+    #[test]
+    fn replicas_start_idle_and_empty() {
+        let c = cluster(3, 100);
+        assert_eq!(c.replicas.len(), 3);
+        assert!(c.replicas.iter().all(|r| !r.busy && !r.has_work()));
+        assert_eq!(c.loads(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn memory_utilization_aggregates() {
+        let mut c = cluster(2, 100);
+        c.replicas[0].mem.allocate(1, 50).unwrap();
+        assert!((c.memory_utilization() - 0.25).abs() < 1e-12);
+        assert_eq!(c.free_blocks(), vec![50, 100]);
+    }
+
+    #[test]
+    fn busy_fraction() {
+        let mut c = cluster(2, 10);
+        c.replicas[0].busy_ns = 500;
+        c.replicas[1].busy_ns = 1500;
+        assert!((c.busy_fraction(SimTime(1000)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_counts_waiting_and_running() {
+        let mut c = cluster(1, 10);
+        c.replicas[0].running.push(7);
+        c.replicas[0].waiting.push_back(crate::scheduler::QueuedReq {
+            id: 8,
+            tokens_needed: 4,
+            blocks_needed: 1,
+            arrival: SimTime::ZERO,
+        });
+        assert_eq!(c.loads(), vec![2]);
+        assert!(c.replicas[0].has_work());
+    }
+}

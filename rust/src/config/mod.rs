@@ -1,0 +1,288 @@
+//! Experiment configuration: deployment, policies, overheads.
+
+pub mod json;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::hardware::{GpuSpec, LinkSpec};
+use crate::model::ModelConfig;
+use crate::moe::RoutingPolicy;
+use crate::parallelism::Parallelism;
+use crate::predictor::PredictorKind;
+use crate::scheduler::{BatchPolicy, IterBudget, RoutePolicy};
+use crate::workload::WorkloadSpec;
+
+/// How the serving system is laid out across clusters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeploymentMode {
+    /// Traditional co-located replicas (each does prefill + decode).
+    Colocated { replicas: u32 },
+    /// Prefill/decode disaggregation (DistServe-style).
+    PdDisagg { prefill_replicas: u32, decode_replicas: u32 },
+    /// PD split where the decode side is an attention/FFN pair
+    /// (MegaScale-Infer / Step-3 style) running a micro-batched
+    /// ping-pong pipeline.
+    AfDisagg {
+        prefill_replicas: u32,
+        /// GPUs in the decode-attention pool (per AF group).
+        attn_gpus: u32,
+        /// GPUs in the FFN/expert pool (per AF group).
+        ffn_gpus: u32,
+        /// Micro-batches per decode step (m in §3.3).
+        micro_batches: u32,
+    },
+}
+
+impl DeploymentMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeploymentMode::Colocated { .. } => "colocated",
+            DeploymentMode::PdDisagg { .. } => "pd",
+            DeploymentMode::AfDisagg { .. } => "af",
+        }
+    }
+}
+
+/// Scheduler / policy knobs (pluggable, §1 challenge 3).
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    pub batch: BatchPolicy,
+    pub route: RoutePolicy,
+    pub budget: IterBudget,
+    pub moe_routing: RoutingPolicy,
+    /// Model MoE synchronization as `max` over expert tasks (the
+    /// straggler effect). `false` = balance-oblivious `mean` (ablation).
+    pub straggler_max: bool,
+    /// Fraction of HBM held back from the KV pool.
+    pub kv_reserve_frac: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            batch: BatchPolicy::Fcfs,
+            route: RoutePolicy::LeastLoaded,
+            budget: IterBudget::default(),
+            moe_routing: RoutingPolicy::UniformRandom,
+            straggler_max: true,
+            kv_reserve_frac: 0.1,
+        }
+    }
+}
+
+/// Serving-engine overheads applied around predicted operator times.
+///
+/// Two presets model the Table-2 comparison:
+/// * [`OverheadConfig::predicted`] — what the simulator claims, with
+///   conservative engine costs (this is "Frontier" in Table 2);
+/// * [`OverheadConfig::profiled_real`] — the stand-in for the physical
+///   vLLM deployment: kernel fusion / CUDA-graph speedups the operator
+///   models don't see, and a leaner scheduler step. The gap between the
+///   two presets reproduces the paper's 19-23% relative error band
+///   (DESIGN.md §Substitutions).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverheadConfig {
+    /// Engine scheduler step cost per iteration, seconds.
+    pub sched_overhead_s: f64,
+    /// Inter-kernel gap per layer, seconds.
+    pub launch_gap_s: f64,
+    /// Multiplier on compute-op times (fusion/graph capture effects).
+    pub op_scale: f64,
+}
+
+impl OverheadConfig {
+    pub fn predicted() -> Self {
+        OverheadConfig { sched_overhead_s: 400e-6, launch_gap_s: 3e-6, op_scale: 1.0 }
+    }
+
+    pub fn profiled_real() -> Self {
+        OverheadConfig { sched_overhead_s: 150e-6, launch_gap_s: 1e-6, op_scale: 0.82 }
+    }
+
+    pub fn zero() -> Self {
+        OverheadConfig { sched_overhead_s: 0.0, launch_gap_s: 0.0, op_scale: 1.0 }
+    }
+}
+
+/// A complete, runnable experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelConfig,
+    pub gpu: GpuSpec,
+    /// Intra-deployment interconnect (KV transfers, collectives).
+    pub link: LinkSpec,
+    pub mode: DeploymentMode,
+    /// Per-replica parallelism (tp/pp; ep applies to MoE FFN ranks).
+    pub parallel: Parallelism,
+    pub workload: WorkloadSpec,
+    pub policy: PolicyConfig,
+    pub overhead: OverheadConfig,
+    pub predictor: PredictorKind,
+    pub artifacts_dir: Option<PathBuf>,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Co-located deployment of `replicas` single-GPU replicas.
+    pub fn colocated(model: ModelConfig, replicas: u32) -> Self {
+        ExperimentConfig {
+            model,
+            gpu: GpuSpec::a800(),
+            link: LinkSpec::nvlink_a800(),
+            mode: DeploymentMode::Colocated { replicas },
+            parallel: Parallelism::default(),
+            workload: WorkloadSpec::table2(256, 128, 128),
+            policy: PolicyConfig::default(),
+            overhead: OverheadConfig::predicted(),
+            predictor: PredictorKind::Oracle,
+            artifacts_dir: None,
+            seed: 1,
+        }
+    }
+
+    /// PD-disaggregated deployment (Table 2 uses 1:1).
+    pub fn pd(model: ModelConfig, prefill: u32, decode: u32) -> Self {
+        ExperimentConfig {
+            mode: DeploymentMode::PdDisagg {
+                prefill_replicas: prefill,
+                decode_replicas: decode,
+            },
+            ..Self::colocated(model, prefill + decode)
+        }
+    }
+
+    /// AF-disaggregated decode pool fed by `prefill` replicas.
+    pub fn af(model: ModelConfig, prefill: u32, attn_gpus: u32, ffn_gpus: u32, m: u32) -> Self {
+        ExperimentConfig {
+            mode: DeploymentMode::AfDisagg {
+                prefill_replicas: prefill,
+                attn_gpus,
+                ffn_gpus,
+                micro_batches: m,
+            },
+            ..Self::colocated(model, prefill + attn_gpus + ffn_gpus)
+        }
+    }
+
+    pub fn with_workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = w;
+        self
+    }
+
+    pub fn with_predictor(mut self, p: PredictorKind) -> Self {
+        self.predictor = p;
+        self
+    }
+
+    pub fn with_overhead(mut self, o: OverheadConfig) -> Self {
+        self.overhead = o;
+        self
+    }
+
+    pub fn with_parallelism(mut self, p: Parallelism) -> Self {
+        self.parallel = p;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Total GPUs in the deployment (throughput normalization).
+    pub fn n_gpus(&self) -> u32 {
+        let per_replica = self.parallel.gpus_per_replica();
+        match self.mode {
+            DeploymentMode::Colocated { replicas } => replicas * per_replica,
+            DeploymentMode::PdDisagg { prefill_replicas, decode_replicas } => {
+                (prefill_replicas + decode_replicas) * per_replica
+            }
+            DeploymentMode::AfDisagg { prefill_replicas, attn_gpus, ffn_gpus, .. } => {
+                prefill_replicas * per_replica + attn_gpus + ffn_gpus
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.parallel.validate()?;
+        if self.workload.n_requests == 0 {
+            bail!("empty workload");
+        }
+        match self.mode {
+            DeploymentMode::Colocated { replicas } if replicas == 0 => {
+                bail!("need at least one replica")
+            }
+            DeploymentMode::PdDisagg { prefill_replicas, decode_replicas }
+                if prefill_replicas == 0 || decode_replicas == 0 =>
+            {
+                bail!("PD needs both stages populated")
+            }
+            DeploymentMode::AfDisagg { attn_gpus, ffn_gpus, micro_batches, .. }
+                if attn_gpus == 0 || ffn_gpus == 0 || micro_batches == 0 =>
+            {
+                bail!("AF needs attn gpus, ffn gpus, and >=1 micro-batch")
+            }
+            _ => {}
+        }
+        if let Some(moe) = &self.model.moe {
+            if moe.n_experts % self.parallel.ep != 0 {
+                bail!(
+                    "{} experts do not shard across ep={}",
+                    moe.n_experts,
+                    self.parallel.ep
+                );
+            }
+        } else if self.parallel.ep > 1 {
+            bail!("ep > 1 requires an MoE model");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_and_gpu_counts() {
+        let m = ModelConfig::qwen2_7b();
+        assert_eq!(ExperimentConfig::colocated(m.clone(), 8).n_gpus(), 8);
+        assert_eq!(ExperimentConfig::pd(m.clone(), 4, 4).n_gpus(), 8);
+        assert_eq!(ExperimentConfig::af(m.clone(), 2, 4, 2, 2).n_gpus(), 8);
+        let tp2 = ExperimentConfig::pd(m, 2, 2).with_parallelism(Parallelism::tp(2));
+        assert_eq!(tp2.n_gpus(), 8);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let m = ModelConfig::qwen2_7b();
+        assert!(ExperimentConfig::pd(m.clone(), 0, 4).validate().is_err());
+        assert!(ExperimentConfig::colocated(m.clone(), 8).validate().is_ok());
+        // ep on a dense model
+        let bad = ExperimentConfig::colocated(m, 2)
+            .with_parallelism(Parallelism::new(1, 1, 2));
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn moe_ep_divisibility() {
+        let m = ModelConfig::mixtral_8x7b(); // 8 experts
+        let ok = ExperimentConfig::colocated(m.clone(), 4)
+            .with_parallelism(Parallelism::new(1, 1, 4));
+        assert!(ok.validate().is_ok());
+        let bad = ExperimentConfig::colocated(m, 3)
+            .with_parallelism(Parallelism::new(1, 1, 3));
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn overhead_presets_ordered() {
+        // the "real system" must be faster than the conservative model
+        let p = OverheadConfig::predicted();
+        let r = OverheadConfig::profiled_real();
+        assert!(r.op_scale < p.op_scale);
+        assert!(r.sched_overhead_s < p.sched_overhead_s);
+    }
+}

@@ -1,0 +1,687 @@
+//! The GlobalController: stateful orchestrator of inter-stage workflows
+//! (§3.1).
+//!
+//! Owns the event engine, the request lifecycle state machine, and the
+//! cluster workers. Mode-specific coordination:
+//!
+//! * **Co-located** — continuous batching on unified replicas.
+//! * **PD** — producer/consumer with system-level backpressure: the
+//!   controller queues `PREFILL_COMPLETE` requests and initiates
+//!   `KV_CACHE_TRANSFER` only when the decode stage signals memory
+//!   availability (§3.3 PD steps 1-3).
+//! * **AF** — the decode pool is an attention/FFN pair whose step time
+//!   comes from the event-dependency-graph executor
+//!   ([`crate::workflows::af`]).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{ClusterWorker, ReplicaWorker, StageKind};
+use crate::config::{DeploymentMode, ExperimentConfig};
+use crate::core::{EventQueue, Pcg64, SimTime};
+use crate::memory::{blocks_for_tokens, BlockManager};
+use crate::metrics::{MetricsCollector, ReqTimestamps, SimReport};
+use crate::network::Fabric;
+use crate::predictor::{self, ExecutionPredictor};
+use crate::scheduler::{self, QueuedReq};
+use crate::workflows::af::{af_step, AfStep};
+use crate::workflows::{BatchShape, CostCtx, CostModel};
+use crate::workload::RequestSpec;
+
+/// Request lifecycle states (§3.3's stateful workflow).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqState {
+    Queued,
+    Prefilling,
+    PrefillComplete,
+    Transferring,
+    Decoding,
+    Done,
+    Rejected,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub spec: RequestSpec,
+    pub state: ReqState,
+    /// Prefill tokens completed so far (chunked prefill).
+    pub prefill_progress: u32,
+    /// Output tokens generated so far.
+    pub decoded: u32,
+    pub ts: ReqTimestamps,
+    pub last_token: SimTime,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival(u64),
+    IterEnd { c: usize, r: usize },
+    KvDone { rid: u64, c: usize, r: usize },
+}
+
+/// AF decode-pool parameters.
+#[derive(Clone, Copy, Debug)]
+struct AfParams {
+    micro_batches: u32,
+    attn_gpus: u32,
+    ffn_gpus: u32,
+}
+
+pub struct GlobalController {
+    cfg: ExperimentConfig,
+    queue: EventQueue<Ev>,
+    reqs: Vec<Request>,
+    clusters: Vec<ClusterWorker>,
+    fabric: Fabric,
+    pred: Box<dyn ExecutionPredictor>,
+    rng: Pcg64,
+    metrics: MetricsCollector,
+    /// PREFILL_COMPLETE requests awaiting a KV transfer slot.
+    pending_transfers: VecDeque<u64>,
+    cost: CostModel,
+    af: Option<AfParams>,
+    /// Iteration start times per (cluster, replica) for busy accounting.
+    iter_started: Vec<Vec<SimTime>>,
+}
+
+/// Convenience: build + run.
+pub fn run(cfg: &ExperimentConfig) -> Result<SimReport> {
+    GlobalController::new(cfg.clone())?.run()
+}
+
+impl GlobalController {
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let pred = predictor::build(cfg.predictor, cfg.artifacts_dir.as_deref())?;
+        let model = &cfg.model;
+        let par = cfg.parallel;
+        let gpus_per_replica = par.gpus_per_replica();
+        let replica_mem = || -> BlockManager {
+            BlockManager::from_budget(
+                cfg.gpu.hbm_capacity * gpus_per_replica as u64,
+                model.weight_bytes_per_gpu(par.tp, par.ep) * gpus_per_replica as u64,
+                model.kv_bytes_per_token(),
+                cfg.policy.kv_reserve_frac,
+            )
+        };
+        let clusters = match cfg.mode {
+            DeploymentMode::Colocated { replicas } => vec![ClusterWorker::new(
+                StageKind::Unified,
+                replicas,
+                gpus_per_replica,
+                replica_mem(),
+            )],
+            DeploymentMode::PdDisagg { prefill_replicas, decode_replicas } => vec![
+                ClusterWorker::new(
+                    StageKind::Prefill,
+                    prefill_replicas,
+                    gpus_per_replica,
+                    replica_mem(),
+                ),
+                ClusterWorker::new(
+                    StageKind::Decode,
+                    decode_replicas,
+                    gpus_per_replica,
+                    replica_mem(),
+                ),
+            ],
+            DeploymentMode::AfDisagg { prefill_replicas, attn_gpus, ffn_gpus, .. } => {
+                // KV lives on the attention side of the AF pair; roughly
+                // half the weights (attention stack) sit with it.
+                let af_mem = BlockManager::from_budget(
+                    cfg.gpu.hbm_capacity * attn_gpus as u64,
+                    model.param_count() * model.dtype_bytes as u64 / 2,
+                    model.kv_bytes_per_token(),
+                    cfg.policy.kv_reserve_frac,
+                );
+                vec![
+                    ClusterWorker::new(
+                        StageKind::Prefill,
+                        prefill_replicas,
+                        gpus_per_replica,
+                        replica_mem(),
+                    ),
+                    ClusterWorker::new(StageKind::AfDecode, 1, attn_gpus + ffn_gpus, af_mem),
+                ]
+            }
+        };
+        let af = match cfg.mode {
+            DeploymentMode::AfDisagg { attn_gpus, ffn_gpus, micro_batches, .. } => {
+                Some(AfParams { micro_batches, attn_gpus, ffn_gpus })
+            }
+            _ => None,
+        };
+        let mut cost = CostModel::new(model.clone(), par, cfg.link);
+        cost.moe_routing = cfg.policy.moe_routing;
+        cost.straggler_max = cfg.policy.straggler_max;
+        cost.overhead = cfg.overhead;
+        let iter_started = clusters
+            .iter()
+            .map(|c| vec![SimTime::ZERO; c.replicas.len()])
+            .collect();
+        Ok(GlobalController {
+            queue: EventQueue::new(),
+            reqs: Vec::new(),
+            clusters,
+            fabric: Fabric::new(cfg.link),
+            pred,
+            rng: Pcg64::new(cfg.seed),
+            metrics: MetricsCollector::default(),
+            pending_transfers: VecDeque::new(),
+            cost,
+            af,
+            iter_started,
+            cfg,
+        })
+    }
+
+    /// Execute the configured workload to completion.
+    pub fn run(self) -> Result<SimReport> {
+        let trace = self.cfg.workload.generate();
+        self.run_with_trace(trace)
+    }
+
+    /// Execute an explicit request trace (trace replay) to completion.
+    pub fn run_with_trace(mut self, trace: Vec<RequestSpec>) -> Result<SimReport> {
+        let host_start = std::time::Instant::now();
+        for spec in trace {
+            let rid = self.reqs.len() as u64;
+            self.reqs.push(Request {
+                ts: ReqTimestamps { arrival: spec.arrival, ..Default::default() },
+                spec,
+                state: ReqState::Queued,
+                prefill_progress: 0,
+                decoded: 0,
+                last_token: SimTime::ZERO,
+            });
+            self.queue.schedule_at(self.reqs[rid as usize].spec.arrival, Ev::Arrival(rid));
+        }
+        while let Some(ev) = self.queue.pop() {
+            match ev.kind {
+                Ev::Arrival(rid) => self.on_arrival(rid),
+                Ev::IterEnd { c, r } => self.on_iter_end(c, r),
+                Ev::KvDone { rid, c, r } => self.on_kv_done(rid, c, r),
+            }
+        }
+        let unfinished = self
+            .reqs
+            .iter()
+            .filter(|r| !matches!(r.state, ReqState::Done | ReqState::Rejected))
+            .count();
+        if unfinished > 0 {
+            bail!("simulation stalled with {unfinished} unfinished requests");
+        }
+        self.metrics.predictor_evals = self.pred.evals();
+        Ok(SimReport {
+            mode: self.cfg.mode.name().to_string(),
+            predictor: self.pred.name().to_string(),
+            sim_duration: self.queue.now().as_secs_f64(),
+            host_duration: host_start.elapsed().as_secs_f64(),
+            events_processed: self.queue.processed(),
+            n_gpus: self.cfg.n_gpus(),
+            metrics: self.metrics,
+        })
+    }
+
+    // -- event handlers ----------------------------------------------------
+
+    fn on_arrival(&mut self, rid: u64) {
+        let req = &self.reqs[rid as usize];
+        let target_cluster = 0usize; // Unified or Prefill frontend
+        let kind = self.clusters[target_cluster].kind;
+        let blocks_needed = match kind {
+            // co-located replicas hold KV for the whole lifetime
+            StageKind::Unified => blocks_for_tokens(req.spec.input_len + req.spec.output_len),
+            // prefill stage holds KV only until handoff
+            _ => blocks_for_tokens(req.spec.input_len),
+        };
+        // admission control: the request must fit its frontend replica's
+        // pool AND — for disaggregated modes — the downstream decode pool
+        // (otherwise it could never be transferred and would deadlock the
+        // controller's PREFILL_COMPLETE queue)
+        let fits_frontend =
+            blocks_needed <= self.clusters[target_cluster].replicas[0].mem.total_blocks();
+        let fits_downstream = self.clusters.len() < 2
+            || req.spec.output_len <= 1
+            || blocks_for_tokens(req.spec.input_len + req.spec.output_len)
+                <= self.clusters[1].replicas[0].mem.total_blocks();
+        if !fits_frontend || !fits_downstream {
+            self.reqs[rid as usize].state = ReqState::Rejected;
+            self.metrics.rejected_requests += 1;
+            return;
+        }
+        let cw = &self.clusters[target_cluster];
+        let loads = cw.loads();
+        let free = cw.free_blocks();
+        let mut rr = cw.rr_cursor;
+        let r = scheduler::route(self.cfg.policy.route, &loads, &free, &mut rr);
+        self.clusters[target_cluster].rr_cursor = rr;
+        let q = QueuedReq {
+            id: rid,
+            tokens_needed: self.reqs[rid as usize].spec.input_len,
+            blocks_needed,
+            arrival: self.queue.now(),
+        };
+        self.clusters[target_cluster].replicas[r].waiting.push_back(q);
+        self.try_start_iteration(target_cluster, r);
+    }
+
+    fn on_iter_end(&mut self, c: usize, r: usize) {
+        let now = self.queue.now();
+        let kind = self.clusters[c].kind;
+        {
+            let started = self.iter_started[c][r];
+            let repl = &mut self.clusters[c].replicas[r];
+            repl.busy = false;
+            repl.iterations += 1;
+            repl.busy_ns += (now - started).0;
+        }
+        self.metrics.iterations += 1;
+
+        let running: Vec<u64> = self.clusters[c].replicas[r].running.clone();
+        let chunks: Vec<u32> = self.clusters[c].replicas[r].iter_chunks.clone();
+        let mut finished: Vec<u64> = Vec::new();
+        let mut to_transfer: Vec<u64> = Vec::new();
+
+        for (i, &rid) in running.iter().enumerate() {
+            let chunk = chunks.get(i).copied().unwrap_or(0);
+            let (input_len, output_len) = {
+                let rq = &self.reqs[rid as usize];
+                (rq.spec.input_len, rq.spec.output_len)
+            };
+            if chunk > 0 {
+                // prefill progress
+                let rq = &mut self.reqs[rid as usize];
+                rq.prefill_progress += chunk;
+                self.metrics.prefill_tokens += chunk as u64;
+                self.clusters[c].replicas[r].tokens_processed += chunk as u64;
+                if rq.prefill_progress >= input_len {
+                    // prefill iteration emits the first output token
+                    rq.ts.prefill_done = Some(now);
+                    rq.ts.first_token = Some(now);
+                    rq.last_token = now;
+                    rq.decoded = 1;
+                    self.metrics.output_tokens += 1;
+                    self.metrics.ttft.push((now - rq.ts.arrival).as_secs_f64());
+                    if rq.decoded >= output_len {
+                        finished.push(rid);
+                    } else if kind == StageKind::Prefill {
+                        rq.state = ReqState::PrefillComplete;
+                        to_transfer.push(rid);
+                    } else {
+                        rq.state = ReqState::Decoding;
+                    }
+                }
+            } else {
+                // decode step: one token
+                let rq = &mut self.reqs[rid as usize];
+                rq.decoded += 1;
+                self.metrics.output_tokens += 1;
+                self.metrics.tbt.push((now - rq.last_token).as_secs_f64());
+                rq.last_token = now;
+                self.clusters[c].replicas[r].tokens_processed += 1;
+                if rq.decoded >= output_len {
+                    finished.push(rid);
+                }
+            }
+        }
+
+        // retire finished requests
+        if !finished.is_empty() {
+            for &rid in &finished {
+                let rq = &mut self.reqs[rid as usize];
+                rq.state = ReqState::Done;
+                rq.ts.done = Some(now);
+                let e2e = (now - rq.ts.arrival).as_secs_f64();
+                self.metrics.e2e.push(e2e);
+                self.metrics.norm_latency.push(e2e / rq.spec.output_len.max(1) as f64);
+                self.metrics.completed_requests += 1;
+                self.clusters[c].replicas[r].mem.free_request(rid);
+                self.clusters[c].replicas[r].running.retain(|&x| x != rid);
+            }
+        }
+        // hand prefill-complete requests to the controller's transfer queue
+        for &rid in &to_transfer {
+            self.clusters[c].replicas[r].mem.free_request(rid);
+            self.clusters[c].replicas[r].running.retain(|&x| x != rid);
+            self.pending_transfers.push_back(rid);
+        }
+        if !to_transfer.is_empty() || !finished.is_empty() {
+            // memory availability changed: the decode ClusterScheduler
+            // signals the controller (PD backpressure step 2/3)
+            self.try_dispatch_transfers();
+        }
+        self.try_start_iteration(c, r);
+    }
+
+    fn on_kv_done(&mut self, rid: u64, c: usize, r: usize) {
+        let rq = &mut self.reqs[rid as usize];
+        rq.state = ReqState::Decoding;
+        let q = QueuedReq {
+            id: rid,
+            tokens_needed: 0,
+            blocks_needed: 0, // reserved at dispatch time
+            arrival: self.queue.now(),
+        };
+        self.clusters[c].replicas[r].waiting.push_back(q);
+        self.try_start_iteration(c, r);
+    }
+
+    // -- coordination ------------------------------------------------------
+
+    /// PD backpressure: initiate KV transfers only into replicas with
+    /// free memory, FIFO over the PREFILL_COMPLETE queue.
+    fn try_dispatch_transfers(&mut self) {
+        if self.clusters.len() < 2 {
+            return;
+        }
+        let dc = 1usize;
+        let now = self.queue.now();
+        while let Some(&rid) = self.pending_transfers.front() {
+            let (input_len, output_len) = {
+                let rq = &self.reqs[rid as usize];
+                (rq.spec.input_len, rq.spec.output_len)
+            };
+            let blocks = blocks_for_tokens(input_len + output_len);
+            // defensive: a request no replica could EVER hold must not
+            // block the queue head (admission control should prevent this)
+            if self.clusters[dc]
+                .replicas
+                .iter()
+                .all(|rep| blocks > rep.mem.total_blocks())
+            {
+                self.pending_transfers.pop_front();
+                self.reqs[rid as usize].state = ReqState::Rejected;
+                self.metrics.rejected_requests += 1;
+                continue;
+            }
+            // choose the replica with the most free memory that fits
+            let candidates = self.clusters[dc].free_blocks();
+            let mut best: Option<(usize, u64)> = None;
+            for (i, &free) in candidates.iter().enumerate() {
+                if free >= blocks && best.map_or(true, |(_, b)| free > b) {
+                    best = Some((i, free));
+                }
+            }
+            let Some((r, _)) = best else {
+                break; // backpressure: no consumer memory, hold the queue
+            };
+            self.pending_transfers.pop_front();
+            self.clusters[dc].replicas[r]
+                .mem
+                .allocate(rid, blocks)
+                .expect("reserved blocks must fit");
+            let bytes = input_len as f64 * self.cost.model.kv_bytes_per_token() as f64;
+            // one directed link per cluster pair models the NIC path
+            let delivery = self.fabric.transfer(now, 0, dc as u32, bytes);
+            self.metrics.kv_transfers += 1;
+            self.metrics.kv_bytes += bytes;
+            self.reqs[rid as usize].state = ReqState::Transferring;
+            self.queue.schedule_at(delivery, Ev::KvDone { rid, c: dc, r });
+        }
+    }
+
+    /// Form and launch the next iteration on a replica if it is idle and
+    /// has work.
+    fn try_start_iteration(&mut self, c: usize, r: usize) {
+        let kind = self.clusters[c].kind;
+        let budget = self.cfg.policy.budget;
+        let policy = self.cfg.policy.batch;
+        {
+            let repl = &mut self.clusters[c].replicas[r];
+            if repl.busy || !repl.has_work() {
+                return;
+            }
+            // admissions (reserving memory)
+            let free = repl.mem.free_blocks();
+            let admitted = scheduler::admit(policy, &mut repl.waiting, repl.running.len(), &budget, free);
+            for q in &admitted {
+                if q.blocks_needed > 0 {
+                    repl.mem.allocate(q.id, q.blocks_needed).expect("admit checked memory");
+                }
+                repl.running.push(q.id);
+            }
+            for q in &admitted {
+                let rq = &mut self.reqs[q.id as usize];
+                if rq.state == ReqState::Queued {
+                    rq.state = ReqState::Prefilling;
+                }
+            }
+        }
+        // build the batch shape
+        let running = self.clusters[c].replicas[r].running.clone();
+        if running.is_empty() {
+            return;
+        }
+        let mut shape = BatchShape::default();
+        let mut chunks = Vec::with_capacity(running.len());
+        let mut token_budget = budget.max_prefill_tokens;
+        for &rid in &running {
+            let rq = &self.reqs[rid as usize];
+            if rq.prefill_progress < rq.spec.input_len {
+                let remaining = rq.spec.input_len - rq.prefill_progress;
+                let chunk = remaining.min(token_budget);
+                if chunk > 0 {
+                    shape.prefill.push((chunk, rq.prefill_progress));
+                    token_budget -= chunk;
+                    if rq.prefill_progress + chunk >= rq.spec.input_len {
+                        shape.lm_head_rows += 1; // emits first token
+                    }
+                }
+                chunks.push(chunk);
+            } else {
+                shape.decode_ctx.push(rq.spec.input_len + rq.decoded);
+                shape.lm_head_rows += 1;
+                chunks.push(0);
+            }
+        }
+        if shape.is_empty() {
+            return;
+        }
+        let dt = if kind == StageKind::AfDecode {
+            self.af_iteration_time(&shape)
+        } else {
+            let mut ctx = CostCtx {
+                pred: self.pred.as_mut(),
+                rng: &mut self.rng,
+                metrics: Some(&mut self.metrics),
+            };
+            self.cost.iteration_time(&mut ctx, &shape)
+        };
+        debug_assert!(dt > 0.0);
+        let repl = &mut self.clusters[c].replicas[r];
+        repl.busy = true;
+        repl.iter_chunks = chunks;
+        self.iter_started[c][r] = self.queue.now();
+        self.queue.schedule_in(SimTime::from_secs_f64(dt), Ev::IterEnd { c, r });
+    }
+
+    /// AF decode step: partition the batch into micro-batches and run
+    /// the dependency-graph executor.
+    fn af_iteration_time(&mut self, shape: &BatchShape) -> f64 {
+        let af = self.af.expect("af params");
+        let m = (af.micro_batches as usize).max(1).min(shape.decode_ctx.len().max(1));
+        let model = &self.cost.model;
+        // attention pool: TP across its GPUs; FFN pool: EP for MoE
+        // (or TP for dense)
+        let attn_par = crate::parallelism::Parallelism::tp(
+            af.attn_gpus.min(model.n_kv_heads).max(1),
+        );
+        let ffn_par = if model.is_moe() {
+            crate::parallelism::Parallelism::new(1, 1, af.ffn_gpus.max(1))
+        } else {
+            crate::parallelism::Parallelism::tp(af.ffn_gpus.max(1))
+        };
+        let mut attn_cost = CostModel::new(model.clone(), attn_par, self.cost.link);
+        attn_cost.overhead = crate::config::OverheadConfig::zero();
+        let mut ffn_cost = CostModel::new(model.clone(), ffn_par, self.cost.link);
+        ffn_cost.overhead = crate::config::OverheadConfig::zero();
+        ffn_cost.moe_routing = self.cost.moe_routing;
+        ffn_cost.straggler_max = self.cost.straggler_max;
+
+        // round-robin partition of decode sequences
+        let mut micro_ctx: Vec<Vec<u32>> = vec![Vec::new(); m];
+        for (i, &ctx) in shape.decode_ctx.iter().enumerate() {
+            micro_ctx[i % m].push(ctx);
+        }
+        // prefill chunks (if the AF pool also prefills) ride micro 0
+        let micro0_prefill = shape.prefill.clone();
+
+        let layers = model.n_layers as usize;
+        let mut attn_time = vec![vec![0.0f64; m]; layers];
+        let mut ffn_time = vec![vec![0.0f64; m]; layers];
+        let mut total_tokens_per_micro = vec![0u64; m];
+        for (k, ctxs) in micro_ctx.iter().enumerate() {
+            let micro_shape = BatchShape {
+                prefill: if k == 0 { micro0_prefill.clone() } else { vec![] },
+                decode_ctx: ctxs.clone(),
+                lm_head_rows: 0,
+            };
+            total_tokens_per_micro[k] = micro_shape.total_tokens() as u64;
+            if micro_shape.is_empty() {
+                continue;
+            }
+            let t_attn = {
+                let mut ctx = CostCtx {
+                    pred: self.pred.as_mut(),
+                    rng: &mut self.rng,
+                    metrics: Some(&mut self.metrics),
+                };
+                attn_cost.attn_block_time(&mut ctx, &micro_shape)
+            };
+            for l in 0..layers {
+                attn_time[l][k] = t_attn;
+            }
+            for l in 0..layers {
+                let mut ctx = CostCtx {
+                    pred: self.pred.as_mut(),
+                    rng: &mut self.rng,
+                    metrics: Some(&mut self.metrics),
+                };
+                // fresh routing per layer: data-dependent straggler noise
+                ffn_time[l][k] = ffn_cost.ffn_block_time(&mut ctx, total_tokens_per_micro[k]);
+            }
+        }
+        let d_bytes = model.d_model as f64 * model.dtype_bytes as f64;
+        let max_micro_tokens =
+            total_tokens_per_micro.iter().copied().max().unwrap_or(0) as f64;
+        let xfer = crate::oracle::p2p_time(max_micro_tokens * d_bytes, &self.cost.link);
+        let step = AfStep { attn_time, ffn_time, a2f_time: xfer, f2a_time: xfer };
+        let (t_graph, _busy) = af_step(&step);
+        let lm_head = {
+            let mut ctx = CostCtx {
+                pred: self.pred.as_mut(),
+                rng: &mut self.rng,
+                metrics: Some(&mut self.metrics),
+            };
+            attn_cost.lm_head_time(&mut ctx, shape.lm_head_rows as u64)
+        };
+        let o = &self.cost.overhead;
+        o.sched_overhead_s + layers as f64 * o.launch_gap_s + o.op_scale * (t_graph + lm_head)
+    }
+
+    // -- accessors for tests/tools ------------------------------------------
+
+    pub fn clusters(&self) -> &[ClusterWorker] {
+        &self.clusters
+    }
+
+    pub fn pending_transfer_count(&self) -> usize {
+        self.pending_transfers.len()
+    }
+
+    pub fn replica(&self, c: usize, r: usize) -> &ReplicaWorker {
+        &self.clusters[c].replicas[r]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::predictor::PredictorKind;
+    use crate::workload::WorkloadSpec;
+
+    fn tiny_cfg(mode_requests: u32) -> ExperimentConfig {
+        ExperimentConfig::colocated(ModelConfig::tiny(), 2)
+            .with_workload(WorkloadSpec::table2(mode_requests, 64, 16))
+            .with_predictor(PredictorKind::Oracle)
+    }
+
+    #[test]
+    fn colocated_completes_all_requests() {
+        let report = run(&tiny_cfg(32)).unwrap();
+        assert_eq!(report.metrics.completed_requests, 32);
+        assert_eq!(report.metrics.rejected_requests, 0);
+        assert_eq!(report.metrics.output_tokens, 32 * 16);
+        assert!(report.sim_duration > 0.0);
+        assert!(report.metrics.ttft.len() == 32);
+    }
+
+    #[test]
+    fn pd_completes_all_requests_with_transfers() {
+        let cfg = ExperimentConfig::pd(ModelConfig::tiny(), 1, 1)
+            .with_workload(WorkloadSpec::table2(24, 64, 8));
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.metrics.completed_requests, 24);
+        // every multi-token request crosses the PD boundary once
+        assert_eq!(report.metrics.kv_transfers, 24);
+        assert!(report.metrics.kv_bytes > 0.0);
+    }
+
+    #[test]
+    fn af_mode_runs() {
+        let cfg = ExperimentConfig::af(ModelConfig::tiny(), 1, 2, 2, 2)
+            .with_workload(WorkloadSpec::table2(8, 32, 8));
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.metrics.completed_requests, 8);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = run(&tiny_cfg(16)).unwrap();
+        let b = run(&tiny_cfg(16)).unwrap();
+        assert_eq!(a.sim_duration, b.sim_duration);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.metrics.output_tokens, b.metrics.output_tokens);
+    }
+
+    #[test]
+    fn single_token_outputs_skip_transfer() {
+        let mut w = WorkloadSpec::table2(8, 64, 1);
+        w.output = crate::workload::LenDist::Fixed(1);
+        let cfg = ExperimentConfig::pd(ModelConfig::tiny(), 1, 1).with_workload(w);
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.metrics.completed_requests, 8);
+        assert_eq!(report.metrics.kv_transfers, 0); // done at prefill
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut w = WorkloadSpec::table2(4, 64, 8);
+        w.input = crate::workload::LenDist::Fixed(100_000_000);
+        let cfg = ExperimentConfig::colocated(ModelConfig::tiny(), 1).with_workload(w);
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.metrics.rejected_requests, 4);
+        assert_eq!(report.metrics.completed_requests, 0);
+    }
+
+    #[test]
+    fn ttft_precedes_e2e() {
+        let report = run(&tiny_cfg(16)).unwrap();
+        let mean_ttft = crate::metrics::mean(&report.metrics.ttft);
+        let mean_e2e = crate::metrics::mean(&report.metrics.e2e);
+        assert!(mean_ttft < mean_e2e);
+    }
+
+    #[test]
+    fn moe_model_runs_colocated() {
+        let cfg = ExperimentConfig::colocated(ModelConfig::tiny_moe(), 1)
+            .with_parallelism(crate::parallelism::Parallelism::new(1, 1, 2))
+            .with_workload(WorkloadSpec::table2(8, 32, 8));
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.metrics.completed_requests, 8);
+        assert!(report.metrics.op_time.contains_key("grouped_gemm"));
+    }
+}

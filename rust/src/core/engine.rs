@@ -1,0 +1,161 @@
+//! Event queue: the heart of the discrete-event engine.
+//!
+//! Generic over the event payload so the same queue drives both the
+//! full coordinator simulation and the standalone AF dependency-graph
+//! executor. Ordering is `(time, seq)` — FIFO among simultaneous events —
+//! making every run deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+#[derive(Clone, Debug)]
+pub struct Event<K> {
+    pub time: SimTime,
+    pub seq: u64,
+    pub kind: K,
+}
+
+impl<K> PartialEq for Event<K> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<K> Eq for Event<K> {}
+impl<K> PartialOrd for Event<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<K> Ord for Event<K> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Priority queue of events, earliest `(time, seq)` first.
+pub struct EventQueue<K> {
+    heap: BinaryHeap<Event<K>>,
+    next_seq: u64,
+    now: SimTime,
+    processed: u64,
+}
+
+impl<K> Default for EventQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K> EventQueue<K> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(1024),
+            next_seq: 0,
+            now: SimTime::ZERO,
+            processed: 0,
+        }
+    }
+
+    /// Current simulation time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events popped so far (the engine-perf metric).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `kind` at absolute time `at`. Panics (debug) on scheduling
+    /// into the past — causality violations are always bugs.
+    pub fn schedule_at(&mut self, at: SimTime, kind: K) {
+        debug_assert!(at >= self.now, "event scheduled in the past");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time: at, seq, kind });
+    }
+
+    /// Schedule `kind` after a delay from now.
+    pub fn schedule_in(&mut self, delay: SimTime, kind: K) {
+        self.schedule_at(self.now + delay, kind);
+    }
+
+    /// Pop the next event, advancing `now`.
+    pub fn pop(&mut self) -> Option<Event<K>> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now, "time went backwards");
+        self.now = ev.time;
+        self.processed += 1;
+        Some(ev)
+    }
+
+    /// Peek at the next event time without popping.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(30), "c");
+        q.schedule_at(SimTime(10), "a");
+        q.schedule_at(SimTime(20), "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_among_simultaneous() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule_at(SimTime(5), i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn now_advances_with_pop() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(42), ());
+        assert_eq!(q.now(), SimTime::ZERO);
+        q.pop();
+        assert_eq!(q.now(), SimTime(42));
+        assert_eq!(q.processed(), 1);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(100), 0);
+        q.pop();
+        q.schedule_in(SimTime(50), 1);
+        assert_eq!(q.pop().unwrap().time, SimTime(150));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn past_scheduling_panics() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(100), ());
+        q.pop();
+        q.schedule_at(SimTime(50), ());
+    }
+}

@@ -1,0 +1,14 @@
+//! Discrete-event simulation core: time, RNG, event queue, engine.
+//!
+//! Everything in the simulator is driven by [`EventQueue`]: a binary heap
+//! of `(time, seq)`-ordered events. The `seq` tie-break makes simulation
+//! runs fully deterministic for a fixed seed, which the property tests
+//! rely on.
+
+mod engine;
+mod rng;
+mod time;
+
+pub use engine::{Event, EventQueue};
+pub use rng::Pcg64;
+pub use time::{SimTime, MS, NS_PER_SEC, S, US};

@@ -1,0 +1,109 @@
+//! Simulation time: integer nanoseconds since simulation start.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Nanoseconds-resolution simulation timestamp.
+///
+/// Integer time keeps event ordering exact and runs reproducible; all
+/// oracle/predictor outputs (f64 seconds) are rounded on conversion.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+pub const NS_PER_SEC: u64 = 1_000_000_000;
+/// One microsecond in SimTime ticks.
+pub const US: u64 = 1_000;
+/// One millisecond in SimTime ticks.
+pub const MS: u64 = 1_000_000;
+/// One second in SimTime ticks.
+pub const S: u64 = NS_PER_SEC;
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    /// Convert seconds (as produced by the oracle / predictors) to ticks.
+    pub fn from_secs_f64(s: f64) -> Self {
+        debug_assert!(s >= 0.0 && s.is_finite(), "bad duration: {s}");
+        SimTime((s * NS_PER_SEC as f64).round() as u64)
+    }
+
+    pub fn from_us_f64(us: f64) -> Self {
+        Self::from_secs_f64(us * 1e-6)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / NS_PER_SEC as f64
+    }
+
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / US as f64
+    }
+
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / MS as f64
+    }
+
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}ms", self.as_ms_f64())
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}ms", self.as_ms_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        let t = SimTime::from_secs_f64(1.5);
+        assert_eq!(t.0, 1_500_000_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-12);
+        assert_eq!(SimTime::from_us_f64(2.0).0, 2_000);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime(100) + SimTime(50);
+        assert_eq!(a, SimTime(150));
+        assert_eq!(a - SimTime(150), SimTime::ZERO);
+        assert_eq!(SimTime(10).saturating_sub(SimTime(20)), SimTime::ZERO);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime(1) < SimTime(2));
+        assert_eq!(SimTime::ZERO, SimTime::default());
+    }
+}

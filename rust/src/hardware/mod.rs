@@ -1,0 +1,158 @@
+//! Hardware descriptors: GPU specs and interconnects.
+//!
+//! The constants for the default [`GpuSpec::a800`] are shared with
+//! `python/compile/profiler.py` — they parameterize the analytical oracle
+//! on both sides (golden-vector parity tests pin them together).
+
+/// A GPU model's performance envelope, as consumed by the oracle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors (CTA slots for the tile scheduler).
+    pub sms: u32,
+    /// Dense bf16 tensor-core FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_capacity: u64,
+    /// Achievable fraction of peak HBM bandwidth.
+    pub mem_eff: f64,
+    /// Achieved fraction of peak compute: dense GEMM.
+    pub eff_gemm: f64,
+    /// Achieved fraction of peak compute: FlashAttention.
+    pub eff_attn: f64,
+    /// Achieved fraction of peak compute: GroupedGEMM.
+    pub eff_grouped: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Per-CTA fixed cost (prologue/epilogue), seconds.
+    pub tile_fixed: f64,
+    /// Per-expert-group fixed cost in GroupedGEMM, seconds.
+    pub group_fixed: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A800-SXM4-80GB — the paper's testbed GPU.
+    pub fn a800() -> Self {
+        GpuSpec {
+            name: "A800-SXM4-80GB",
+            sms: 108,
+            peak_flops: 312e12,
+            hbm_bw: 2.039e12,
+            hbm_capacity: 80 * (1 << 30),
+            mem_eff: 0.85,
+            eff_gemm: 0.82,
+            eff_attn: 0.55,
+            eff_grouped: 0.75,
+            launch_overhead: 4e-6,
+            tile_fixed: 0.3e-6,
+            group_fixed: 1.0e-6,
+        }
+    }
+
+    /// NVIDIA A100-SXM4-80GB (same silicon class, full-rate NVLink).
+    pub fn a100() -> Self {
+        GpuSpec { name: "A100-SXM4-80GB", ..Self::a800() }
+    }
+
+    /// NVIDIA H100-SXM5-80GB.
+    pub fn h100() -> Self {
+        GpuSpec {
+            name: "H100-SXM5-80GB",
+            sms: 132,
+            peak_flops: 989e12,
+            hbm_bw: 3.35e12,
+            hbm_capacity: 80 * (1 << 30),
+            ..Self::a800()
+        }
+    }
+
+    pub fn per_sm_bw(&self) -> f64 {
+        self.hbm_bw * self.mem_eff / self.sms as f64
+    }
+
+    pub fn per_sm_flops(&self, eff: f64) -> f64 {
+        self.peak_flops * eff / self.sms as f64
+    }
+}
+
+/// Interconnect between GPUs / nodes, alpha-beta model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Per-direction point-to-point bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+}
+
+impl LinkSpec {
+    /// A800 NVLink: 400 GB/s (the paper's testbed interconnect).
+    pub fn nvlink_a800() -> Self {
+        LinkSpec { bandwidth: 400e9, alpha: 6e-6 }
+    }
+
+    /// NDR InfiniBand, 400 Gb/s per port.
+    pub fn infiniband_ndr() -> Self {
+        LinkSpec { bandwidth: 50e9, alpha: 12e-6 }
+    }
+
+    /// PCIe gen4 x16.
+    pub fn pcie_gen4() -> Self {
+        LinkSpec { bandwidth: 32e9, alpha: 15e-6 }
+    }
+}
+
+/// Node: a set of identical GPUs joined by one intra-node link type.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub gpus_per_node: u32,
+    pub intra_link: LinkSpec,
+    pub inter_link: LinkSpec,
+}
+
+impl NodeSpec {
+    /// The paper's testbed: 8x A800 with 400 GB/s NVLink.
+    pub fn a800_node() -> Self {
+        NodeSpec {
+            gpu: GpuSpec::a800(),
+            gpus_per_node: 8,
+            intra_link: LinkSpec::nvlink_a800(),
+            inter_link: LinkSpec::infiniband_ndr(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a800_matches_python_constants() {
+        let g = GpuSpec::a800();
+        assert_eq!(g.sms, 108);
+        assert_eq!(g.peak_flops, 312e12);
+        assert_eq!(g.hbm_bw, 2.039e12);
+        assert_eq!(g.mem_eff, 0.85);
+        assert_eq!(g.launch_overhead, 4e-6);
+    }
+
+    #[test]
+    fn per_sm_rates() {
+        let g = GpuSpec::a800();
+        assert!((g.per_sm_bw() - 2.039e12 * 0.85 / 108.0).abs() < 1.0);
+        assert!((g.per_sm_flops(0.5) - 312e12 * 0.5 / 108.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn h100_is_faster() {
+        assert!(GpuSpec::h100().peak_flops > GpuSpec::a800().peak_flops);
+    }
+
+    #[test]
+    fn link_presets() {
+        assert_eq!(LinkSpec::nvlink_a800().bandwidth, 400e9);
+        assert!(LinkSpec::pcie_gen4().bandwidth < LinkSpec::nvlink_a800().bandwidth);
+    }
+}

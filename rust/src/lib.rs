@@ -1,0 +1,63 @@
+//! # Frontier — simulating the next generation of LLM inference systems
+//!
+//! A high-fidelity, event-driven simulator for disaggregated (prefill/decode
+//! and attention/FFN) and Mixture-of-Experts LLM serving, reproducing
+//! *"Frontier: Simulating the Next Generation of LLM Inference Systems"*.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the simulator: [`coordinator::GlobalController`]
+//!   orchestrating [`cluster::ClusterWorker`]s over the event engine in
+//!   [`core`], with pluggable [`scheduler`] policies, a paged KV
+//!   [`memory`] manager, and a [`network`] transfer model.
+//! * **L2/L1 (python, build time)** — the learned operator-runtime
+//!   predictors (JAX MLP over Pallas kernels), AOT-lowered to HLO text in
+//!   `artifacts/` and executed from [`runtime`] via PJRT. Python never
+//!   runs on the simulation path.
+
+pub mod baseline;
+pub mod bench_util;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod hardware;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod moe;
+pub mod network;
+pub mod operators;
+pub mod oracle;
+pub mod parallelism;
+pub mod predictor;
+pub mod proptest_util;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod workflows;
+pub mod workload;
+
+pub mod prelude {
+    //! Everything a typical driver needs.
+    pub use crate::config::{
+        DeploymentMode, ExperimentConfig, OverheadConfig, PolicyConfig,
+    };
+    pub use crate::coordinator::GlobalController;
+    pub use crate::core::{SimTime, US};
+    pub use crate::hardware::GpuSpec;
+    pub use crate::metrics::SimReport;
+    pub use crate::model::{ModelConfig, MoeConfig};
+    pub use crate::parallelism::Parallelism;
+    pub use crate::predictor::{ExecutionPredictor, PredictorKind};
+    pub use crate::workload::WorkloadSpec;
+}
+
+use anyhow::Result;
+
+/// Run a complete experiment from a config: build the deployment, drive the
+/// workload through the [`coordinator::GlobalController`], and collect a
+/// [`metrics::SimReport`].
+pub fn run_experiment(cfg: &config::ExperimentConfig) -> Result<metrics::SimReport> {
+    coordinator::run(cfg)
+}

@@ -1,0 +1,271 @@
+//! `frontier` CLI: run simulations, sweeps, and validation from the
+//! command line (hand-rolled arg parsing; no clap in this offline build).
+
+use anyhow::{anyhow, bail, Result};
+
+use frontier::baseline::ReplicaCentricSim;
+use frontier::config::{DeploymentMode, ExperimentConfig, OverheadConfig};
+use frontier::model::ModelConfig;
+use frontier::predictor::PredictorKind;
+use frontier::workload::WorkloadSpec;
+
+const USAGE: &str = "\
+frontier — simulator for next-generation LLM inference systems
+
+USAGE:
+  frontier simulate [OPTIONS]     run one simulation and print the report
+  frontier sweep-pd [OPTIONS]     sweep prefill:decode ratios at fixed GPUs
+  frontier baseline [OPTIONS]     run the replica-centric (Vidur-style) baseline
+  frontier validate               check AOT artifacts load and predict
+  frontier info                   list models, predictors, modes
+
+OPTIONS (simulate / sweep-pd / baseline):
+  --model <qwen2-7b|qwen2-72b|mixtral-8x7b|deepseek-v3-lite|tiny|tiny-moe>
+  --mode <colocated|pd|af>         deployment (default colocated)
+  --replicas <N>                   colocated replicas (default 4)
+  --prefill <N> --decode <N>       PD cluster sizes (default 4/4)
+  --attn-gpus <N> --ffn-gpus <N>   AF pool sizes (default 4/4)
+  --micro-batches <M>              AF micro-batches (default 2)
+  --tp <N> --pp <N> --ep <N>       per-replica parallelism (default 1/1/1)
+  --predictor <oracle|learned|vidur|roofline>   (default oracle)
+  --requests <N>                   workload size (default 256)
+  --input <N> --output <N>         token lengths (default 128/128)
+  --rate <R>                       Poisson arrivals at R req/s (default: batch)
+  --trace <file.json>              replay a trace file instead of generating
+  --profiled                       use the real-system overhead preset
+  --seed <S>                       RNG seed (default 1)
+  --json                           emit the report as JSON
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument {a:?}"))?
+                .to_string();
+            // boolean flags
+            if matches!(key.as_str(), "json" | "profiled") {
+                flags.insert(key, "true".into());
+                continue;
+            }
+            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            flags.insert(key, val);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, k: &str, default: T) -> Result<T> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{k}: {v:?}")),
+        }
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn model_by_name(name: &str) -> Result<ModelConfig> {
+    Ok(match name {
+        "qwen2-7b" => ModelConfig::qwen2_7b(),
+        "qwen2-72b" => ModelConfig::qwen2_72b(),
+        "mixtral-8x7b" => ModelConfig::mixtral_8x7b(),
+        "deepseek-v3-lite" => ModelConfig::deepseek_v3_lite(),
+        "tiny" => ModelConfig::tiny(),
+        "tiny-moe" => ModelConfig::tiny_moe(),
+        _ => bail!("unknown model {name:?} (see `frontier info`)"),
+    })
+}
+
+fn build_config(a: &Args) -> Result<ExperimentConfig> {
+    let model = model_by_name(a.get("model").unwrap_or("qwen2-7b"))?;
+    let mode = a.get("mode").unwrap_or("colocated");
+    let mut cfg = match mode {
+        "colocated" => ExperimentConfig::colocated(model, a.num("replicas", 4u32)?),
+        "pd" => ExperimentConfig::pd(model, a.num("prefill", 4u32)?, a.num("decode", 4u32)?),
+        "af" => ExperimentConfig::af(
+            model,
+            a.num("prefill", 2u32)?,
+            a.num("attn-gpus", 4u32)?,
+            a.num("ffn-gpus", 4u32)?,
+            a.num("micro-batches", 2u32)?,
+        ),
+        _ => bail!("unknown mode {mode:?}"),
+    };
+    cfg.parallel = frontier::parallelism::Parallelism::new(
+        a.num("tp", 1u32)?,
+        a.num("pp", 1u32)?,
+        a.num("ep", 1u32)?,
+    );
+    let requests = a.num("requests", 256u32)?;
+    let input = a.num("input", 128u32)?;
+    let output = a.num("output", 128u32)?;
+    cfg.workload = match a.get("rate") {
+        Some(r) => WorkloadSpec::poisson(
+            r.parse().map_err(|_| anyhow!("bad --rate"))?,
+            requests,
+            input,
+            output,
+        ),
+        None => WorkloadSpec::table2(requests, input, output),
+    };
+    if let Some(p) = a.get("predictor") {
+        cfg.predictor =
+            PredictorKind::parse(p).ok_or_else(|| anyhow!("unknown predictor {p:?}"))?;
+    }
+    if a.has("profiled") {
+        cfg.overhead = OverheadConfig::profiled_real();
+    }
+    cfg.seed = a.num("seed", 1u64)?;
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "simulate" => {
+            let cfg = build_config(&args)?;
+            let report = match args.get("trace") {
+                Some(path) => {
+                    let trace =
+                        frontier::workload::trace_from_file(std::path::Path::new(path))?;
+                    frontier::coordinator::GlobalController::new(cfg)?.run_with_trace(trace)?
+                }
+                None => frontier::run_experiment(&cfg)?,
+            };
+            if args.has("json") {
+                println!("{}", report.to_json().to_string_pretty());
+            } else {
+                println!("{}", report.summary());
+            }
+        }
+        "baseline" => {
+            let cfg = build_config(&args)?;
+            let report = ReplicaCentricSim::new(cfg).simulate()?;
+            if args.has("json") {
+                println!("{}", report.to_json().to_string_pretty());
+            } else {
+                println!("{}", report.summary());
+            }
+        }
+        "sweep-pd" => {
+            let total: u32 = args.num("gpus", 8u32)?;
+            let cfg0 = build_config(&args)?;
+            println!("PD ratio sweep over {total} GPUs ({})", cfg0.model.name);
+            let mut rows = Vec::new();
+            for p in 1..total {
+                let d = total - p;
+                let mut cfg = cfg0.clone();
+                cfg.mode = DeploymentMode::PdDisagg {
+                    prefill_replicas: p,
+                    decode_replicas: d,
+                };
+                let report = frontier::run_experiment(&cfg)?;
+                rows.push(vec![
+                    format!("{p}:{d}"),
+                    format!("{:.2}", report.tokens_per_sec_per_gpu()),
+                    format!(
+                        "{:.1}",
+                        frontier::metrics::percentile(&report.metrics.ttft, 99.0) * 1e3
+                    ),
+                    format!(
+                        "{:.2}",
+                        frontier::metrics::percentile(&report.metrics.tbt, 99.0) * 1e3
+                    ),
+                ]);
+            }
+            println!(
+                "{}",
+                frontier::report::markdown_table(
+                    &["P:D", "tok/s/gpu", "TTFT p99 (ms)", "TBT p99 (ms)"],
+                    &rows
+                )
+            );
+        }
+        "validate" => {
+            let dir = frontier::runtime::PredictorRuntime::default_dir();
+            println!("loading artifacts from {dir:?}");
+            let rt = frontier::runtime::PredictorRuntime::load(&dir)?;
+            println!(
+                "attn predictor: batch={} features={} val_mape={:.4}",
+                rt.attn.batch, rt.attn.n_features, rt.attn.val_mape
+            );
+            println!(
+                "grouped_gemm predictor: batch={} features={} val_mape={:.4}",
+                rt.grouped_gemm.batch, rt.grouped_gemm.n_features, rt.grouped_gemm.val_mape
+            );
+            println!(
+                "gemm predictor: batch={} features={} val_mape={:.4}",
+                rt.gemm.batch, rt.gemm.n_features, rt.gemm.val_mape
+            );
+            // golden check against python predictions
+            let golden_path = dir.join("predictor_golden.json");
+            let text = std::fs::read_to_string(&golden_path)?;
+            let golden = frontier::config::json::Json::parse(&text)?;
+            for (name, exe) in [
+                ("attn", &rt.attn),
+                ("grouped_gemm", &rt.grouped_gemm),
+                ("gemm", &rt.gemm),
+            ] {
+                let g = golden.req(name)?;
+                let feats: Vec<Vec<f64>> = g
+                    .req("features")?
+                    .as_arr()?
+                    .iter()
+                    .map(|r| r.as_f64_vec())
+                    .collect::<Result<_>>()?;
+                let want = g.req("pred_us")?.as_f64_vec()?;
+                let got = exe.predict_us(&feats)?;
+                for (a, b) in got.iter().zip(&want) {
+                    let rel = (a - b).abs() / b.max(1e-9);
+                    if rel > 1e-3 {
+                        bail!("{name}: runtime {a} != python {b} (rel {rel:.2e})");
+                    }
+                }
+                println!("{name}: {} golden predictions match python", want.len());
+            }
+            println!("artifacts OK");
+        }
+        "info" => {
+            println!("models: qwen2-7b qwen2-72b mixtral-8x7b deepseek-v3-lite tiny tiny-moe");
+            println!("modes: colocated pd af");
+            println!("predictors: oracle learned vidur roofline");
+            for name in ["qwen2-7b", "mixtral-8x7b", "deepseek-v3-lite"] {
+                let m = model_by_name(name)?;
+                println!(
+                    "  {name}: {} layers, d={}, {}B params, kv {} B/token{}",
+                    m.n_layers,
+                    m.d_model,
+                    m.param_count() / 1_000_000_000,
+                    m.kv_bytes_per_token(),
+                    if m.is_moe() { " [MoE]" } else { "" }
+                );
+            }
+        }
+        _ => {
+            print!("{USAGE}");
+        }
+    }
+    Ok(())
+}

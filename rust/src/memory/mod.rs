@@ -1,0 +1,188 @@
+//! Paged KV-cache block manager (PagedAttention-style).
+//!
+//! Each decode/colocated replica owns a [`BlockManager`]: a pool of
+//! fixed-size KV blocks. Requests reserve blocks for their full lifetime
+//! footprint on admission; completion frees them. The manager's free
+//! count is the *memory availability signal* the decode
+//! `ClusterScheduler` reports to the `GlobalController` for PD
+//! backpressure (§3.3 step 2): KV transfers are initiated only when the
+//! consumer has room.
+
+use anyhow::{bail, Result};
+
+/// Tokens per KV block (vLLM default).
+pub const BLOCK_TOKENS: u32 = 16;
+
+#[derive(Clone, Debug)]
+pub struct BlockManager {
+    /// Total blocks in the pool.
+    total: u64,
+    /// Currently free blocks.
+    free: u64,
+    /// Per-request allocation (request id -> blocks held).
+    held: std::collections::HashMap<u64, u64>,
+    /// High-water mark (metrics).
+    pub peak_used: u64,
+    /// Admissions rejected for lack of memory (metrics).
+    pub alloc_failures: u64,
+}
+
+/// Blocks needed to hold `tokens` KV entries.
+pub fn blocks_for_tokens(tokens: u32) -> u64 {
+    (tokens as u64).div_ceil(BLOCK_TOKENS as u64)
+}
+
+impl BlockManager {
+    /// Build from a GPU memory budget: capacity left after weights and
+    /// activations is divided into KV blocks.
+    pub fn from_budget(
+        hbm_capacity: u64,
+        weight_bytes: u64,
+        kv_bytes_per_token: u64,
+        reserve_frac: f64,
+    ) -> Self {
+        let usable = (hbm_capacity.saturating_sub(weight_bytes)) as f64 * (1.0 - reserve_frac);
+        let block_bytes = kv_bytes_per_token * BLOCK_TOKENS as u64;
+        let total = (usable as u64) / block_bytes.max(1);
+        Self::with_blocks(total)
+    }
+
+    pub fn with_blocks(total: u64) -> Self {
+        BlockManager {
+            total,
+            free: total,
+            held: Default::default(),
+            peak_used: 0,
+            alloc_failures: 0,
+        }
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.total
+    }
+
+    pub fn free_blocks(&self) -> u64 {
+        self.free
+    }
+
+    pub fn used_blocks(&self) -> u64 {
+        self.total - self.free
+    }
+
+    /// Fraction of the pool in use.
+    pub fn utilization(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.used_blocks() as f64 / self.total as f64
+    }
+
+    pub fn can_allocate(&self, blocks: u64) -> bool {
+        blocks <= self.free
+    }
+
+    /// Reserve `blocks` for `req`. Fails without side effects (beyond the
+    /// failure counter) if the pool is short.
+    pub fn allocate(&mut self, req: u64, blocks: u64) -> Result<()> {
+        if blocks > self.free {
+            self.alloc_failures += 1;
+            bail!("out of KV blocks: want {blocks}, free {}", self.free);
+        }
+        self.free -= blocks;
+        *self.held.entry(req).or_insert(0) += blocks;
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(())
+    }
+
+    /// Grow an existing allocation (decode appending past a block edge).
+    pub fn grow(&mut self, req: u64, blocks: u64) -> Result<()> {
+        self.allocate(req, blocks)
+    }
+
+    /// Release everything held by `req`; returns the blocks freed.
+    pub fn free_request(&mut self, req: u64) -> u64 {
+        let blocks = self.held.remove(&req).unwrap_or(0);
+        self.free += blocks;
+        debug_assert!(self.free <= self.total, "double free");
+        blocks
+    }
+
+    pub fn held_by(&self, req: u64) -> u64 {
+        self.held.get(&req).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_for_tokens_rounds_up() {
+        assert_eq!(blocks_for_tokens(1), 1);
+        assert_eq!(blocks_for_tokens(16), 1);
+        assert_eq!(blocks_for_tokens(17), 2);
+        assert_eq!(blocks_for_tokens(0), 0);
+    }
+
+    #[test]
+    fn allocate_free_round_trip() {
+        let mut bm = BlockManager::with_blocks(100);
+        bm.allocate(1, 30).unwrap();
+        bm.allocate(2, 30).unwrap();
+        assert_eq!(bm.free_blocks(), 40);
+        assert_eq!(bm.held_by(1), 30);
+        assert_eq!(bm.free_request(1), 30);
+        assert_eq!(bm.free_blocks(), 70);
+        assert_eq!(bm.held_by(1), 0);
+    }
+
+    #[test]
+    fn allocation_failure_is_clean() {
+        let mut bm = BlockManager::with_blocks(10);
+        bm.allocate(1, 8).unwrap();
+        assert!(bm.allocate(2, 5).is_err());
+        assert_eq!(bm.free_blocks(), 2);
+        assert_eq!(bm.alloc_failures, 1);
+        bm.allocate(2, 2).unwrap();
+        assert_eq!(bm.free_blocks(), 0);
+    }
+
+    #[test]
+    fn grow_accumulates() {
+        let mut bm = BlockManager::with_blocks(10);
+        bm.allocate(1, 2).unwrap();
+        bm.grow(1, 3).unwrap();
+        assert_eq!(bm.held_by(1), 5);
+        assert_eq!(bm.free_request(1), 5);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut bm = BlockManager::with_blocks(10);
+        bm.allocate(1, 7).unwrap();
+        bm.free_request(1);
+        bm.allocate(2, 3).unwrap();
+        assert_eq!(bm.peak_used, 7);
+    }
+
+    #[test]
+    fn from_budget_sizes_pool() {
+        // Qwen2-7B on A800: 80GB - ~15GB weights, 57344 B/token kv
+        let bm = BlockManager::from_budget(
+            80 * (1 << 30),
+            15 * (1 << 30),
+            57344,
+            0.1,
+        );
+        // ~62.8 GB usable / (57344 * 16) ~= 68k blocks ~= 1.1M tokens
+        assert!(bm.total_blocks() > 50_000 && bm.total_blocks() < 90_000);
+    }
+
+    #[test]
+    fn utilization() {
+        let mut bm = BlockManager::with_blocks(100);
+        assert_eq!(bm.utilization(), 0.0);
+        bm.allocate(1, 50).unwrap();
+        assert!((bm.utilization() - 0.5).abs() < 1e-12);
+    }
+}

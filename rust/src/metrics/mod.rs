@@ -1,0 +1,285 @@
+//! Metrics: latency percentiles, throughput, goodput, CDFs, Pareto.
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+use crate::core::SimTime;
+
+/// Online collection of per-request and system-level metrics.
+#[derive(Default, Clone, Debug)]
+pub struct MetricsCollector {
+    /// Time-to-first-token samples, seconds.
+    pub ttft: Vec<f64>,
+    /// Time-between-tokens (inter-token latency) samples, seconds.
+    pub tbt: Vec<f64>,
+    /// End-to-end request latency samples, seconds.
+    pub e2e: Vec<f64>,
+    /// Normalized latency (e2e / output tokens), seconds/token.
+    pub norm_latency: Vec<f64>,
+    pub completed_requests: u64,
+    pub rejected_requests: u64,
+    pub output_tokens: u64,
+    pub prefill_tokens: u64,
+    pub kv_transfers: u64,
+    pub kv_bytes: f64,
+    pub iterations: u64,
+    /// Underlying predictor evaluations (PJRT launches for the learned
+    /// predictor) — the §Perf cache-effectiveness metric.
+    pub predictor_evals: u64,
+    /// Per-operator-class total simulated seconds.
+    pub op_time: BTreeMap<&'static str, f64>,
+}
+
+impl MetricsCollector {
+    pub fn record_op(&mut self, class: &'static str, secs: f64) {
+        *self.op_time.entry(class).or_insert(0.0) += secs;
+    }
+}
+
+/// Simple percentile over unsorted samples (nearest-rank).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Empirical CDF: sorted (value, cumulative fraction) pairs.
+pub fn cdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    v.into_iter().enumerate().map(|(i, x)| (x, (i + 1) as f64 / n)).collect()
+}
+
+/// Fraction of samples <= threshold.
+pub fn frac_below(xs: &[f64], threshold: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&x| x <= threshold).count() as f64 / xs.len() as f64
+}
+
+/// Final report of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub mode: String,
+    pub predictor: String,
+    /// Simulated wall-clock span, seconds.
+    pub sim_duration: f64,
+    /// Host time spent simulating, seconds.
+    pub host_duration: f64,
+    pub events_processed: u64,
+    pub n_gpus: u32,
+    pub metrics: MetricsCollector,
+}
+
+impl SimReport {
+    /// Output tokens per second per GPU — Table 2's headline metric.
+    pub fn tokens_per_sec_per_gpu(&self) -> f64 {
+        if self.sim_duration <= 0.0 {
+            return 0.0;
+        }
+        self.metrics.output_tokens as f64 / self.sim_duration / self.n_gpus as f64
+    }
+
+    /// Total output token throughput, tokens/s.
+    pub fn throughput(&self) -> f64 {
+        if self.sim_duration <= 0.0 {
+            return 0.0;
+        }
+        self.metrics.output_tokens as f64 / self.sim_duration
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.sim_duration <= 0.0 {
+            return 0.0;
+        }
+        self.metrics.completed_requests as f64 / self.sim_duration
+    }
+
+    /// Goodput: completed requests/s meeting both SLOs (DistServe-style).
+    pub fn goodput(&self, ttft_slo: f64, tbt_slo: f64) -> f64 {
+        if self.sim_duration <= 0.0 || self.metrics.ttft.is_empty() {
+            return 0.0;
+        }
+        // joint satisfaction approximated per-request via paired samples
+        let ok = self
+            .metrics
+            .ttft
+            .iter()
+            .zip(&self.metrics.norm_latency)
+            .filter(|(&t, &n)| t <= ttft_slo && n <= tbt_slo)
+            .count();
+        ok as f64 / self.sim_duration
+    }
+
+    /// Simulation speed: simulated seconds per host second.
+    pub fn speedup(&self) -> f64 {
+        if self.host_duration <= 0.0 {
+            return 0.0;
+        }
+        self.sim_duration / self.host_duration
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        if self.host_duration <= 0.0 {
+            return 0.0;
+        }
+        self.events_processed as f64 / self.host_duration
+    }
+
+    pub fn summary(&self) -> String {
+        let m = &self.metrics;
+        format!(
+            "[{} | {}] {:.1}s simulated in {:.2}s host ({:.0}x, {:.0} ev/s)\n\
+             requests: {} done, {} rejected | tokens: {} out, {} prefill\n\
+             throughput: {:.1} tok/s ({:.2} tok/s/gpu on {} gpus), {:.2} req/s\n\
+             TTFT p50/p99: {:.1}/{:.1} ms | TBT p50/p99: {:.2}/{:.2} ms | e2e p50: {:.2} s\n\
+             iterations: {} | kv transfers: {} ({:.1} MB)",
+            self.mode,
+            self.predictor,
+            self.sim_duration,
+            self.host_duration,
+            self.speedup(),
+            self.events_per_sec(),
+            m.completed_requests,
+            m.rejected_requests,
+            m.output_tokens,
+            m.prefill_tokens,
+            self.throughput(),
+            self.tokens_per_sec_per_gpu(),
+            self.n_gpus,
+            self.requests_per_sec(),
+            percentile(&m.ttft, 50.0) * 1e3,
+            percentile(&m.ttft, 99.0) * 1e3,
+            percentile(&m.tbt, 50.0) * 1e3,
+            percentile(&m.tbt, 99.0) * 1e3,
+            percentile(&m.e2e, 50.0),
+            m.iterations,
+            m.kv_transfers,
+            m.kv_bytes / 1e6,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("predictor", Json::Str(self.predictor.clone())),
+            ("sim_duration_s", Json::Num(self.sim_duration)),
+            ("host_duration_s", Json::Num(self.host_duration)),
+            ("events", Json::Num(self.events_processed as f64)),
+            ("n_gpus", Json::Num(self.n_gpus as f64)),
+            ("completed", Json::Num(m.completed_requests as f64)),
+            ("rejected", Json::Num(m.rejected_requests as f64)),
+            ("output_tokens", Json::Num(m.output_tokens as f64)),
+            ("tokens_per_sec_per_gpu", Json::Num(self.tokens_per_sec_per_gpu())),
+            ("ttft_p50_ms", Json::Num(percentile(&m.ttft, 50.0) * 1e3)),
+            ("ttft_p99_ms", Json::Num(percentile(&m.ttft, 99.0) * 1e3)),
+            ("tbt_p50_ms", Json::Num(percentile(&m.tbt, 50.0) * 1e3)),
+            ("tbt_p99_ms", Json::Num(percentile(&m.tbt, 99.0) * 1e3)),
+            ("e2e_p50_s", Json::Num(percentile(&m.e2e, 50.0))),
+            ("iterations", Json::Num(m.iterations as f64)),
+            ("kv_transfers", Json::Num(m.kv_transfers as f64)),
+        ])
+    }
+}
+
+/// Extract the Pareto frontier (maximize x=throughput, minimize y=latency)
+/// from a set of (throughput, latency, label) points.
+pub fn pareto_frontier(points: &[(f64, f64, String)]) -> Vec<(f64, f64, String)> {
+    let mut pts: Vec<_> = points.to_vec();
+    pts.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut best = f64::INFINITY;
+    let mut out = Vec::new();
+    for p in pts {
+        if p.1 < best {
+            best = p.1;
+            out.push(p);
+        }
+    }
+    out.reverse();
+    out
+}
+
+/// Latency timestamps for one request (used by the coordinator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReqTimestamps {
+    pub arrival: SimTime,
+    pub prefill_done: Option<SimTime>,
+    pub first_token: Option<SimTime>,
+    pub done: Option<SimTime>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        // nearest-rank with round-half-up: rank(50%) = round(49.5) = 50
+        assert_eq!(percentile(&xs, 50.0), 51.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn cdf_is_monotone() {
+        let xs = vec![3.0, 1.0, 2.0, 2.0];
+        let c = cdf(&xs);
+        assert_eq!(c.len(), 4);
+        assert!(c.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 < w[1].1));
+        assert_eq!(c.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn frac_below_works() {
+        let xs = vec![0.05, 0.08, 0.2, 0.5];
+        assert_eq!(frac_below(&xs, 0.1), 0.5);
+    }
+
+    #[test]
+    fn pareto_extraction() {
+        let pts = vec![
+            (10.0, 1.0, "a".to_string()),
+            (20.0, 2.0, "b".to_string()),
+            (15.0, 3.0, "c".to_string()), // dominated by b
+            (30.0, 5.0, "d".to_string()),
+        ];
+        let front = pareto_frontier(&pts);
+        let labels: Vec<&str> = front.iter().map(|p| p.2.as_str()).collect();
+        assert_eq!(labels, vec!["a", "b", "d"]);
+    }
+
+    #[test]
+    fn report_throughput_math() {
+        let mut m = MetricsCollector::default();
+        m.output_tokens = 8000;
+        let r = SimReport {
+            mode: "test".into(),
+            predictor: "oracle".into(),
+            sim_duration: 10.0,
+            host_duration: 1.0,
+            events_processed: 1000,
+            n_gpus: 8,
+            metrics: m,
+        };
+        assert_eq!(r.throughput(), 800.0);
+        assert_eq!(r.tokens_per_sec_per_gpu(), 100.0);
+        assert_eq!(r.events_per_sec(), 1000.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Transformer model descriptors (dense and MoE) and presets.
+
+/// Mixture-of-Experts configuration for a model's FFN layers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MoeConfig {
+    /// Total number of routed experts.
+    pub n_experts: u32,
+    /// Experts activated per token.
+    pub top_k: u32,
+    /// Hidden dim of each expert FFN.
+    pub expert_ffn_dim: u32,
+    /// Shared-expert hidden dim (0 = none).
+    pub shared_expert_dim: u32,
+}
+
+/// Architecture hyperparameters of a served model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    /// Dense FFN hidden dim (gate/up + down, SwiGLU-style).
+    pub ffn_dim: u32,
+    pub vocab_size: u32,
+    /// bf16 by default.
+    pub dtype_bytes: u32,
+    pub moe: Option<MoeConfig>,
+}
+
+impl ModelConfig {
+    /// Qwen2-7B-Instruct — the paper's end-to-end evaluation model.
+    pub fn qwen2_7b() -> Self {
+        ModelConfig {
+            name: "Qwen2-7B-Instruct".into(),
+            n_layers: 28,
+            d_model: 3584,
+            n_heads: 28,
+            n_kv_heads: 4,
+            head_dim: 128,
+            ffn_dim: 18944,
+            vocab_size: 152064,
+            dtype_bytes: 2,
+            moe: None,
+        }
+    }
+
+    /// Qwen2-72B — the dense 72B configuration cited in the paper's intro.
+    pub fn qwen2_72b() -> Self {
+        ModelConfig {
+            name: "Qwen2-72B".into(),
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn_dim: 29568,
+            vocab_size: 152064,
+            dtype_bytes: 2,
+            moe: None,
+        }
+    }
+
+    /// Mixtral-8x7B — the canonical open MoE.
+    pub fn mixtral_8x7b() -> Self {
+        ModelConfig {
+            name: "Mixtral-8x7B".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn_dim: 14336,
+            vocab_size: 32000,
+            dtype_bytes: 2,
+            moe: Some(MoeConfig {
+                n_experts: 8,
+                top_k: 2,
+                expert_ffn_dim: 14336,
+                shared_expert_dim: 0,
+            }),
+        }
+    }
+
+    /// A DeepSeek-V3-flavoured fine-grained MoE (reduced layer count so
+    /// laptop-scale simulations stay fast; dims per layer are faithful).
+    pub fn deepseek_v3_lite() -> Self {
+        ModelConfig {
+            name: "DeepSeek-V3-lite".into(),
+            n_layers: 16,
+            d_model: 7168,
+            n_heads: 128,
+            n_kv_heads: 128,
+            head_dim: 64,
+            ffn_dim: 18432,
+            vocab_size: 129024,
+            dtype_bytes: 2,
+            moe: Some(MoeConfig {
+                n_experts: 64,
+                top_k: 8,
+                expert_ffn_dim: 2048,
+                shared_expert_dim: 2048,
+            }),
+        }
+    }
+
+    /// A small dense model for fast tests.
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "tiny-1B".into(),
+            n_layers: 8,
+            d_model: 1024,
+            n_heads: 16,
+            n_kv_heads: 16,
+            head_dim: 64,
+            ffn_dim: 4096,
+            vocab_size: 32000,
+            dtype_bytes: 2,
+            moe: None,
+        }
+    }
+
+    /// A tiny MoE for fast tests.
+    pub fn tiny_moe() -> Self {
+        ModelConfig {
+            name: "tiny-moe".into(),
+            moe: Some(MoeConfig {
+                n_experts: 8,
+                top_k: 2,
+                expert_ffn_dim: 2048,
+                shared_expert_dim: 0,
+            }),
+            ..Self::tiny()
+        }
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.moe.is_some()
+    }
+
+    /// KV-cache bytes per token (all layers, both K and V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_layers as u64
+            * self.n_kv_heads as u64
+            * self.head_dim as u64
+            * self.dtype_bytes as u64
+    }
+
+    /// Total parameter count (weights only, no embeddings tying).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let attn = d * (self.n_heads as u64 * self.head_dim as u64) * 2
+            + d * (self.n_kv_heads as u64 * self.head_dim as u64) * 2;
+        let ffn = match &self.moe {
+            None => 3 * d * self.ffn_dim as u64,
+            Some(m) => {
+                let routed = m.n_experts as u64 * 3 * d * m.expert_ffn_dim as u64;
+                let shared = 3 * d * m.shared_expert_dim as u64;
+                let router = d * m.n_experts as u64;
+                routed + shared + router
+            }
+        };
+        self.n_layers as u64 * (attn + ffn) + 2 * d * self.vocab_size as u64
+    }
+
+    /// Weight bytes resident per GPU given tensor/expert sharding.
+    pub fn weight_bytes_per_gpu(&self, tp: u32, ep: u32) -> u64 {
+        let shard = tp.max(1) as u64 * ep.max(1) as u64;
+        self.param_count() * self.dtype_bytes as u64 / shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen2_7b_architecture() {
+        let m = ModelConfig::qwen2_7b();
+        assert_eq!(m.n_layers, 28);
+        assert_eq!(m.d_model, 3584);
+        assert_eq!(m.n_heads, 28);
+        assert_eq!(m.n_kv_heads, 4);
+        // ~7.6B params
+        let p = m.param_count();
+        assert!(p > 6_000_000_000 && p < 9_000_000_000, "{p}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_qwen() {
+        let m = ModelConfig::qwen2_7b();
+        // 2 * 28 layers * 4 kv heads * 128 dim * 2 bytes = 57344
+        assert_eq!(m.kv_bytes_per_token(), 57344);
+    }
+
+    #[test]
+    fn mixtral_is_moe() {
+        let m = ModelConfig::mixtral_8x7b();
+        assert!(m.is_moe());
+        // ~46B params
+        let p = m.param_count();
+        assert!(p > 40_000_000_000 && p < 52_000_000_000, "{p}");
+    }
+
+    #[test]
+    fn weight_sharding_divides() {
+        let m = ModelConfig::qwen2_7b();
+        assert_eq!(m.weight_bytes_per_gpu(2, 1) * 2, m.weight_bytes_per_gpu(1, 1));
+    }
+}

@@ -1,0 +1,167 @@
+//! MoE routing simulation: token-to-expert assignment and EP sharding.
+//!
+//! The paper models the MoE layer as a data-dependent micro-workflow
+//! (§3.3): gate GEMM -> pluggable routing -> heterogeneous per-expert
+//! GroupedGEMM -> synchronization barrier (`max` over expert tasks).
+//! This module provides the pluggable routing policies that generate the
+//! token-to-expert assignment map, plus load-balance metrics.
+
+use crate::core::Pcg64;
+
+/// How tokens pick experts — the pluggable routing module of §3.3.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RoutingPolicy {
+    /// Perfectly balanced round-robin (the idealized upper bound;
+    /// what balance-oblivious simulators implicitly assume).
+    Balanced,
+    /// Uniform random choice per token (multinomial load noise).
+    UniformRandom,
+    /// Skewed popularity: expert weights drawn once from a symmetric
+    /// Dirichlet with concentration `alpha` — small alpha = hot experts.
+    Skewed { alpha: f64 },
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "balanced" => Some(Self::Balanced),
+            "uniform" => Some(Self::UniformRandom),
+            _ => s.strip_prefix("skewed:").and_then(|a| {
+                a.parse::<f64>().ok().map(|alpha| Self::Skewed { alpha })
+            }),
+        }
+    }
+}
+
+/// Generate the token-to-expert assignment map: per-expert token counts
+/// for `tokens` tokens each selecting `top_k` distinct experts.
+pub fn assign_tokens(
+    policy: RoutingPolicy,
+    tokens: u32,
+    n_experts: u32,
+    top_k: u32,
+    rng: &mut Pcg64,
+) -> Vec<u32> {
+    let e = n_experts as usize;
+    let k = (top_k as usize).min(e);
+    let mut loads = vec![0u32; e];
+    match policy {
+        RoutingPolicy::Balanced => {
+            let total = tokens as u64 * k as u64;
+            let base = (total / e as u64) as u32;
+            let rem = (total % e as u64) as usize;
+            for (i, l) in loads.iter_mut().enumerate() {
+                *l = base + u32::from(i < rem);
+            }
+        }
+        RoutingPolicy::UniformRandom | RoutingPolicy::Skewed { .. } => {
+            let weights: Vec<f64> = match policy {
+                RoutingPolicy::Skewed { alpha } => rng.dirichlet_sym(alpha, e),
+                _ => vec![1.0 / e as f64; e],
+            };
+            let mut w = weights.clone();
+            for _ in 0..tokens {
+                // top-k without replacement per token
+                w.copy_from_slice(&weights);
+                for _ in 0..k {
+                    let idx = rng.weighted_index(&w);
+                    loads[idx] += 1;
+                    w[idx] = 0.0;
+                }
+            }
+        }
+    }
+    loads
+}
+
+/// Load-balance metrics over an assignment map (predictor features and
+/// reporting).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BalanceMetrics {
+    /// max load / mean load (1.0 = perfect).
+    pub imbalance: f64,
+    /// Coefficient of variation of loads.
+    pub cv: f64,
+    /// Fraction of experts with nonzero load.
+    pub active_frac: f64,
+}
+
+pub fn balance_metrics(loads: &[u32]) -> BalanceMetrics {
+    let e = loads.len() as f64;
+    if e == 0.0 {
+        return BalanceMetrics { imbalance: 0.0, cv: 0.0, active_frac: 0.0 };
+    }
+    let total: f64 = loads.iter().map(|&x| x as f64).sum();
+    let mean = total / e;
+    let max = loads.iter().copied().max().unwrap_or(0) as f64;
+    let var: f64 =
+        loads.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / e;
+    BalanceMetrics {
+        imbalance: if mean > 0.0 { max / mean } else { 0.0 },
+        cv: if mean > 0.0 { var.sqrt() / mean } else { 0.0 },
+        active_frac: loads.iter().filter(|&&x| x > 0).count() as f64 / e,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_is_exactly_balanced() {
+        let mut rng = Pcg64::new(1);
+        let loads = assign_tokens(RoutingPolicy::Balanced, 100, 8, 2, &mut rng);
+        assert_eq!(loads.iter().sum::<u32>(), 200);
+        assert_eq!(loads.iter().max(), loads.iter().min());
+        let m = balance_metrics(&loads);
+        assert!((m.imbalance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn token_conservation() {
+        let mut rng = Pcg64::new(2);
+        for policy in [
+            RoutingPolicy::UniformRandom,
+            RoutingPolicy::Skewed { alpha: 0.1 },
+            RoutingPolicy::Balanced,
+        ] {
+            let loads = assign_tokens(policy, 333, 16, 4, &mut rng);
+            assert_eq!(loads.iter().sum::<u32>(), 333 * 4, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn top_k_capped_by_expert_count() {
+        let mut rng = Pcg64::new(3);
+        let loads = assign_tokens(RoutingPolicy::UniformRandom, 10, 4, 8, &mut rng);
+        assert_eq!(loads.iter().sum::<u32>(), 40); // k clamped to 4
+        // without replacement: no expert can exceed token count
+        assert!(loads.iter().all(|&l| l <= 10));
+    }
+
+    #[test]
+    fn skew_increases_imbalance() {
+        let mut rng = Pcg64::new(4);
+        let uni = assign_tokens(RoutingPolicy::UniformRandom, 4096, 16, 2, &mut rng);
+        let skew = assign_tokens(RoutingPolicy::Skewed { alpha: 0.05 }, 4096, 16, 2, &mut rng);
+        assert!(balance_metrics(&skew).imbalance > balance_metrics(&uni).imbalance);
+    }
+
+    #[test]
+    fn routing_policy_parse() {
+        assert_eq!(RoutingPolicy::parse("balanced"), Some(RoutingPolicy::Balanced));
+        assert_eq!(
+            RoutingPolicy::parse("skewed:0.25"),
+            Some(RoutingPolicy::Skewed { alpha: 0.25 })
+        );
+        assert_eq!(RoutingPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn metrics_empty_and_zero() {
+        let m = balance_metrics(&[]);
+        assert_eq!(m.active_frac, 0.0);
+        let m = balance_metrics(&[0, 0]);
+        assert_eq!(m.imbalance, 0.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Feature extraction for the learned predictors.
+//!
+//! Bit-for-bit mirror of `python/compile/features.py`; any change here
+//! must be reflected there (enforced by `rust/tests/oracle_parity.rs`
+//! against `artifacts/oracle_golden.json`). Features combine length /
+//! load distribution statistics with tiling-derived quantities from the
+//! oracle's tile model (§3.2 of the paper).
+
+use crate::hardware::GpuSpec;
+use crate::oracle;
+
+pub const ATTN_N_FEATURES: usize = 16;
+pub const GG_N_FEATURES: usize = 12;
+pub const GEMM_N_FEATURES: usize = 6;
+
+const US: f64 = 1e6; // seconds -> microseconds for log-scaled features
+
+/// (sum, mean, max, population std); empty slice -> zeros.
+fn stats(xs: &[u32]) -> (f64, f64, f64, f64) {
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0, 0.0, 0.0);
+    }
+    let s: f64 = xs.iter().map(|&x| x as f64).sum();
+    let mean = s / n as f64;
+    let mx = xs.iter().copied().max().unwrap() as f64;
+    let var: f64 = xs.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>()
+        / n as f64;
+    (s, mean, mx, var.sqrt())
+}
+
+/// (waves, fraction of SMs busy in the last wave).
+fn wave_features(n_tiles: u64, sms: u32) -> (f64, f64) {
+    if n_tiles == 0 {
+        return (0.0, 0.0);
+    }
+    let waves = n_tiles.div_ceil(sms as u64);
+    let frac_last = (n_tiles - (waves - 1) * sms as u64) as f64 / sms as f64;
+    (waves as f64, frac_last)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn attn_features(
+    is_prefill: bool,
+    q_lens: &[u32],
+    ctx_lens: &[u32],
+    n_heads: u32,
+    n_kv_heads: u32,
+    head_dim: u32,
+    gpu: &GpuSpec,
+) -> [f64; ATTN_N_FEATURES] {
+    let b = q_lens.len() as f64;
+    let (sum_l, mean_l, _max_l, std_l) = stats(q_lens);
+    let (sum_c, mean_c, max_c, std_c) = stats(ctx_lens);
+    let cv_l = if mean_l > 0.0 { std_l / mean_l } else { 0.0 };
+    let cv_c = if mean_c > 0.0 { std_c / mean_c } else { 0.0 };
+    let (tile, max_kv) = if is_prefill {
+        let s = oracle::attn_prefill_stats(q_lens, ctx_lens, n_heads, n_kv_heads, head_dim, 2, gpu);
+        let max_kv = q_lens
+            .iter()
+            .zip(ctx_lens)
+            .filter(|(&l, _)| l > 0)
+            .map(|(&l, &c)| (c + l) as u64)
+            .max()
+            .unwrap_or(0);
+        (s, max_kv as f64)
+    } else {
+        let (s, _split) =
+            oracle::attn_decode_stats(ctx_lens, n_heads, n_kv_heads, head_dim, 2, gpu);
+        (s, max_c)
+    };
+    let (waves, frac_last) = wave_features(tile.n_tiles, gpu.sms);
+    let mean_tile = if tile.n_tiles > 0 { tile.work / tile.n_tiles as f64 } else { 0.0 };
+    [
+        if is_prefill { 1.0 } else { 0.0 },
+        b.ln_1p(),
+        (n_heads as f64).ln_1p(),
+        (n_kv_heads as f64).ln_1p(),
+        (head_dim as f64).ln_1p(),
+        sum_l.ln_1p(),
+        cv_l,
+        sum_c.ln_1p(),
+        cv_c,
+        (tile.n_tiles as f64).ln_1p(),
+        frac_last,
+        (tile.work * US).ln_1p(),
+        (mean_tile * US).ln_1p(),
+        (tile.max_tile * US).ln_1p(),
+        waves.ln_1p(),
+        max_kv.ln_1p(),
+    ]
+}
+
+pub fn grouped_gemm_features(
+    tokens_per_expert: &[u32],
+    n: u64,
+    k: u64,
+    gpu: &GpuSpec,
+) -> [f64; GG_N_FEATURES] {
+    let e = tokens_per_expert.len() as f64;
+    let (total, mean_m, max_m, std_m) = stats(tokens_per_expert);
+    let cv_m = if mean_m > 0.0 { std_m / mean_m } else { 0.0 };
+    let imbalance = if total > 0.0 { max_m * e / total } else { 0.0 };
+    let (tiles, t_tile, active) = oracle::grouped_gemm_stats(tokens_per_expert, n, k, 2, gpu);
+    let (waves, frac_last) = wave_features(tiles, gpu.sms);
+    [
+        e.ln_1p(),
+        total.ln_1p(),
+        (n as f64).ln_1p(),
+        (k as f64).ln_1p(),
+        cv_m,
+        if e > 0.0 { active as f64 / e } else { 0.0 },
+        imbalance,
+        (tiles as f64).ln_1p(),
+        frac_last,
+        (t_tile * US).ln_1p(),
+        (tiles as f64 * t_tile * US).ln_1p(),
+        waves.ln_1p(),
+    ]
+}
+
+pub fn gemm_features(m: u64, n: u64, k: u64, gpu: &GpuSpec) -> [f64; GEMM_N_FEATURES] {
+    let (tiles, t_tile) = oracle::gemm_stats(m, n, k, 2, gpu);
+    let (waves, _frac_last) = wave_features(tiles, gpu.sms);
+    [
+        (m as f64).ln_1p(),
+        (n as f64).ln_1p(),
+        (k as f64).ln_1p(),
+        (tiles as f64).ln_1p(),
+        (t_tile * US).ln_1p(),
+        waves.ln_1p(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attn_feature_shape_and_finiteness() {
+        let g = GpuSpec::a800();
+        let f = attn_features(true, &[128, 256], &[0, 0], 28, 4, 128, &g);
+        assert_eq!(f.len(), ATTN_N_FEATURES);
+        assert!(f.iter().all(|x| x.is_finite()));
+        assert_eq!(f[0], 1.0);
+    }
+
+    #[test]
+    fn homogeneous_batch_has_zero_cv() {
+        let g = GpuSpec::a800();
+        let f = attn_features(false, &[1; 8], &[512; 8], 28, 4, 128, &g);
+        assert_eq!(f[6], 0.0);
+        assert_eq!(f[8], 0.0);
+    }
+
+    #[test]
+    fn gg_features_capture_imbalance() {
+        let g = GpuSpec::a800();
+        let bal = grouped_gemm_features(&[100; 8], 4096, 2048, &g);
+        let imb = grouped_gemm_features(&[10, 10, 10, 10, 10, 10, 10, 730], 4096, 2048, &g);
+        // imbalance metric (index 6) strictly larger for the skewed load
+        assert!(imb[6] > bal[6]);
+    }
+
+    #[test]
+    fn gemm_features_monotone_in_m() {
+        let g = GpuSpec::a800();
+        let a = gemm_features(64, 4096, 2048, &g);
+        let b = gemm_features(4096, 4096, 2048, &g);
+        assert!(b[0] > a[0]);
+        assert!(b[3] >= a[3]);
+    }
+
+    #[test]
+    fn stats_empty() {
+        assert_eq!(stats(&[]), (0.0, 0.0, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,108 @@
+//! Operator IR: the workload descriptors the execution predictor consumes.
+//!
+//! A replica iteration is costed by decomposing the model's layer into
+//! these operator workloads (see `workflows::cost`), each of which is
+//! priced by an [`crate::predictor::ExecutionPredictor`].
+
+pub mod features;
+pub mod opgen;
+
+/// One operator invocation with its full workload characterization.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpWorkload {
+    /// Dense GEMM `[m,k] @ [k,n]`.
+    Gemm { m: u64, n: u64, k: u64 },
+    /// Batched attention; `q_lens[i]` new tokens attending to
+    /// `ctx_lens[i]` existing positions (decode: `q_lens[i] == 1`).
+    Attention {
+        is_prefill: bool,
+        q_lens: Vec<u32>,
+        ctx_lens: Vec<u32>,
+        n_heads: u32,
+        n_kv_heads: u32,
+        head_dim: u32,
+    },
+    /// MoE expert FFN GroupedGEMM with per-expert token loads.
+    GroupedGemm { tokens_per_expert: Vec<u32>, n: u64, k: u64 },
+    /// Ring all-reduce across `n_ranks` of `bytes` payload.
+    AllReduce { bytes: f64, n_ranks: u32 },
+    /// All-to-all (EP dispatch/combine).
+    AllToAll { bytes: f64, n_ranks: u32 },
+    /// Point-to-point transfer (KV-cache migration, AF activations).
+    P2p { bytes: f64 },
+}
+
+impl OpWorkload {
+    /// Short operator-class name (metrics/report keys).
+    pub fn class(&self) -> &'static str {
+        match self {
+            OpWorkload::Gemm { .. } => "gemm",
+            OpWorkload::Attention { is_prefill: true, .. } => "attn_prefill",
+            OpWorkload::Attention { is_prefill: false, .. } => "attn_decode",
+            OpWorkload::GroupedGemm { .. } => "grouped_gemm",
+            OpWorkload::AllReduce { .. } => "allreduce",
+            OpWorkload::AllToAll { .. } => "all2all",
+            OpWorkload::P2p { .. } => "p2p",
+        }
+    }
+
+    /// Total FLOPs of the op (roofline baseline + reporting).
+    pub fn flops(&self) -> f64 {
+        match self {
+            OpWorkload::Gemm { m, n, k } => 2.0 * (*m as f64) * (*n as f64) * (*k as f64),
+            OpWorkload::Attention { q_lens, ctx_lens, n_heads, head_dim, .. } => {
+                let mut fl = 0.0;
+                for (&l, &c) in q_lens.iter().zip(ctx_lens) {
+                    fl += 4.0 * l as f64 * (c as f64 + l as f64 / 2.0) * *head_dim as f64;
+                }
+                fl * *n_heads as f64
+            }
+            OpWorkload::GroupedGemm { tokens_per_expert, n, k } => {
+                let total: u64 = tokens_per_expert.iter().map(|&m| m as u64).sum();
+                2.0 * total as f64 * (*n as f64) * (*k as f64)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Bytes moved (for communication ops).
+    pub fn comm_bytes(&self) -> f64 {
+        match self {
+            OpWorkload::AllReduce { bytes, .. }
+            | OpWorkload::AllToAll { bytes, .. }
+            | OpWorkload::P2p { bytes } => *bytes,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_names() {
+        assert_eq!(OpWorkload::Gemm { m: 1, n: 1, k: 1 }.class(), "gemm");
+        let a = OpWorkload::Attention {
+            is_prefill: false,
+            q_lens: vec![1],
+            ctx_lens: vec![10],
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 64,
+        };
+        assert_eq!(a.class(), "attn_decode");
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let g = OpWorkload::Gemm { m: 10, n: 20, k: 30 };
+        assert_eq!(g.flops(), 2.0 * 10.0 * 20.0 * 30.0);
+    }
+
+    #[test]
+    fn comm_bytes() {
+        assert_eq!(OpWorkload::P2p { bytes: 42.0 }.comm_bytes(), 42.0);
+        assert_eq!(OpWorkload::Gemm { m: 1, n: 1, k: 1 }.comm_bytes(), 0.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Random operator-workload generator for predictor evaluation
+//! (Fig. 2-style studies). Mirrors the distributions of
+//! `python/compile/train.py` but is seeded independently, so Rust-side
+//! evaluations are held-out with respect to the training data.
+
+use crate::core::Pcg64;
+use crate::operators::OpWorkload;
+
+/// (n_heads, n_kv_heads, head_dim) presets spanning GQA ratios — same
+/// list as `train.MODEL_PRESETS`.
+pub const MODEL_PRESETS: [(u32, u32, u32); 6] = [
+    (28, 4, 128),
+    (64, 8, 128),
+    (32, 8, 128),
+    (16, 16, 64),
+    (48, 8, 128),
+    (32, 32, 128),
+];
+
+/// Mixture of length distributions, from homogeneous to heavily skewed
+/// (mirrors `train._sample_lens`, including the single-straggler mode).
+pub fn sample_lens(rng: &mut Pcg64, b: usize, lo: u32, hi: u32) -> Vec<u32> {
+    match rng.gen_range(0, 5) {
+        0 => {
+            let v = rng.gen_range(lo as u64, hi as u64) as u32;
+            vec![v; b]
+        }
+        1 => (0..b).map(|_| rng.gen_range(lo as u64, hi as u64) as u32).collect(),
+        2 => {
+            let mu = (rng.next_f64() * (hi as f64 / 4.0 - lo as f64) + lo as f64 + 1.0).ln();
+            (0..b)
+                .map(|_| (rng.lognormal(mu, 0.8) as u32).clamp(lo, hi))
+                .collect()
+        }
+        3 => {
+            let mut lens: Vec<u32> = (0..b)
+                .map(|_| rng.gen_range(lo as u64, ((hi / 16).max(lo + 1)) as u64) as u32)
+                .collect();
+            let n_long = (b / 16).max(1);
+            for _ in 0..n_long {
+                let i = rng.gen_range(0, b as u64) as usize;
+                lens[i] = rng.gen_range((hi / 2) as u64, hi as u64) as u32;
+            }
+            lens
+        }
+        _ => {
+            // single straggler: one very long sequence dominates
+            let mut lens: Vec<u32> = (0..b)
+                .map(|_| rng.gen_range(lo as u64, ((hi / 64).max(lo + 1)) as u64) as u32)
+                .collect();
+            let i = rng.gen_range(0, b as u64) as usize;
+            lens[i] = rng.gen_range((hi / 2) as u64, hi as u64) as u32;
+            lens
+        }
+    }
+}
+
+/// Random attention workload (prefill or decode) with skewed batches.
+pub fn attn_workload(rng: &mut Pcg64) -> OpWorkload {
+    let (h, hkv, d) = MODEL_PRESETS[rng.gen_range(0, MODEL_PRESETS.len() as u64) as usize];
+    let b = (rng.next_f64() * (128f64).ln()).exp() as usize + 1;
+    let is_prefill = rng.next_f64() < 0.5;
+    if is_prefill {
+        let q_lens = sample_lens(rng, b, 16, 4096);
+        let ctx_lens = if rng.next_f64() < 0.3 {
+            sample_lens(rng, b, 1, 2048)
+        } else {
+            vec![0; b]
+        };
+        OpWorkload::Attention {
+            is_prefill: true,
+            q_lens,
+            ctx_lens,
+            n_heads: h,
+            n_kv_heads: hkv,
+            head_dim: d,
+        }
+    } else {
+        OpWorkload::Attention {
+            is_prefill: false,
+            q_lens: vec![1; b],
+            ctx_lens: sample_lens(rng, b, 16, 32768),
+            n_heads: h,
+            n_kv_heads: hkv,
+            head_dim: d,
+        }
+    }
+}
+
+/// Random GroupedGEMM workload with a wide imbalance sweep.
+pub fn grouped_gemm_workload(rng: &mut Pcg64) -> OpWorkload {
+    let e = rng.gen_range(2, 65) as usize;
+    let total = (rng.next_f64() * ((16384f64).ln() - (16f64).ln()) + (16f64).ln()).exp() as u32;
+    let alpha = (rng.next_f64() * ((20f64).ln() - (0.05f64).ln()) + (0.05f64).ln()).exp();
+    let probs = rng.dirichlet_sym(alpha, e);
+    // multinomial via repeated weighted draws would be slow; use
+    // expected counts with stochastic rounding (same load shapes)
+    let mut loads: Vec<u32> = probs
+        .iter()
+        .map(|&p| {
+            let x = p * total as f64;
+            let base = x.floor();
+            (base + if rng.next_f64() < x - base { 1.0 } else { 0.0 }) as u32
+        })
+        .collect();
+    // fix up the sum to exactly `total`
+    let mut diff = total as i64 - loads.iter().map(|&x| x as i64).sum::<i64>();
+    while diff != 0 {
+        let i = rng.gen_range(0, e as u64) as usize;
+        if diff > 0 {
+            loads[i] += 1;
+            diff -= 1;
+        } else if loads[i] > 0 {
+            loads[i] -= 1;
+            diff += 1;
+        }
+    }
+    let n = (rng.next_f64() * ((32768f64).ln() - (512f64).ln()) + (512f64).ln()).exp() as u64;
+    let k = (rng.next_f64() * ((8192f64).ln() - (512f64).ln()) + (512f64).ln()).exp() as u64;
+    OpWorkload::GroupedGemm { tokens_per_expert: loads, n, k }
+}
+
+/// Random dense GEMM workload.
+pub fn gemm_workload(rng: &mut Pcg64) -> OpWorkload {
+    let m = (rng.next_f64() * (16384f64).ln()).exp() as u64 + 1;
+    let n = (rng.next_f64() * ((32768f64).ln() - (256f64).ln()) + (256f64).ln()).exp() as u64;
+    let k = (rng.next_f64() * ((32768f64).ln() - (256f64).ln()) + (256f64).ln()).exp() as u64;
+    OpWorkload::Gemm { m, n, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attn_workloads_valid() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..200 {
+            match attn_workload(&mut rng) {
+                OpWorkload::Attention { q_lens, ctx_lens, n_heads, n_kv_heads, .. } => {
+                    assert_eq!(q_lens.len(), ctx_lens.len());
+                    assert!(!q_lens.is_empty() && q_lens.len() <= 129);
+                    assert!(n_kv_heads <= n_heads);
+                }
+                _ => panic!("wrong op"),
+            }
+        }
+    }
+
+    #[test]
+    fn gg_loads_sum_to_total() {
+        let mut rng = Pcg64::new(4);
+        for _ in 0..100 {
+            if let OpWorkload::GroupedGemm { tokens_per_expert, .. } =
+                grouped_gemm_workload(&mut rng)
+            {
+                assert!(tokens_per_expert.iter().map(|&x| x as u64).sum::<u64>() >= 16);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        assert_eq!(attn_workload(&mut a), attn_workload(&mut b));
+    }
+}

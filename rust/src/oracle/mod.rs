@@ -1,0 +1,380 @@
+//! Analytical kernel oracle — ground truth for operator runtimes.
+//!
+//! Line-for-line mirror of `python/compile/profiler.py` (which generates
+//! the training data for the learned predictors). A roofline model with
+//! explicit tile scheduling: runtime is the makespan of the kernel's CTAs
+//! on the GPU's SMs, `max(wave-quantized balanced time, straggler bound)`.
+//! This is what makes the oracle sensitive to *workload heterogeneity* —
+//! skewed sequence lengths and imbalanced expert loads — the regimes the
+//! paper's evaluation focuses on (§3.2, Fig. 2).
+//!
+//! Parity with the Python implementation is enforced by
+//! `rust/tests/oracle_parity.rs` against `artifacts/oracle_golden.json`.
+
+use crate::hardware::{GpuSpec, LinkSpec};
+
+/// FlashAttention-2 q-row tile.
+pub const ATTN_ROW_BLOCK: u64 = 128;
+/// FlashDecoding kv-chunk length.
+pub const DECODE_KV_SPLIT: u64 = 8192;
+/// GroupedGEMM M tile.
+pub const GG_TILE_M: u64 = 64;
+/// GroupedGEMM N tile.
+pub const GG_TILE_N: u64 = 128;
+pub const GEMM_TILE_M: u64 = 128;
+pub const GEMM_TILE_N: u64 = 128;
+
+/// Tile statistics: the sufficient summary of a kernel's CTA population.
+/// Doubles as the physics-informed portion of the predictor features.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TileStats {
+    /// Total CTA-seconds of work.
+    pub work: f64,
+    /// Number of CTAs.
+    pub n_tiles: u64,
+    /// Longest single CTA, seconds.
+    pub max_tile: f64,
+}
+
+/// Makespan of `n_tiles` CTAs totalling `work` seconds on `sms` SMs:
+/// `max(wave-quantized balanced time, longest single CTA)`.
+pub fn schedule(work: f64, n_tiles: u64, max_tile: f64, sms: u32) -> f64 {
+    if n_tiles == 0 {
+        return 0.0;
+    }
+    let waves = n_tiles.div_ceil(sms as u64);
+    let mean_tile = work / n_tiles as f64;
+    let balanced = waves as f64 * mean_tile;
+    balanced.max(max_tile)
+}
+
+/// One CTA's duration. Compute rate is fixed per SM; HBM bandwidth is a
+/// shared resource, so an under-occupied kernel gives each CTA a larger
+/// bandwidth share (what makes small decode GEMMs fast).
+fn tile_time(flops: f64, bytes: f64, eff: f64, n_active: u64, gpu: &GpuSpec) -> f64 {
+    let bw = gpu.hbm_bw * gpu.mem_eff / (n_active.clamp(1, gpu.sms as u64) as f64);
+    (flops / gpu.per_sm_flops(eff)).max(bytes / bw) + gpu.tile_fixed
+}
+
+// ---------------------------------------------------------------------------
+// Attention
+// ---------------------------------------------------------------------------
+
+/// Tile statistics for causal FlashAttention-2 prefill over a ragged batch.
+///
+/// Per sequence with new tokens `L` and existing context `C`: one CTA per
+/// (q-head, 128-row block), attending to an average of `C + L/2` kv
+/// positions; kv reads amortize across the GQA group.
+pub fn attn_prefill_stats(
+    q_lens: &[u32],
+    ctx_lens: &[u32],
+    n_heads: u32,
+    n_kv_heads: u32,
+    head_dim: u32,
+    dtype_bytes: u32,
+    gpu: &GpuSpec,
+) -> TileStats {
+    assert_eq!(q_lens.len(), ctx_lens.len());
+    let mut s = TileStats::default();
+    let gqa = n_kv_heads as f64 / n_heads as f64;
+    let d = head_dim as f64;
+    s.n_tiles = q_lens
+        .iter()
+        .filter(|&&li| li > 0)
+        .map(|&li| n_heads as u64 * (li as u64).div_ceil(ATTN_ROW_BLOCK))
+        .sum();
+    for (&li, &ci) in q_lens.iter().zip(ctx_lens) {
+        if li == 0 {
+            continue;
+        }
+        let blocks = (li as u64).div_ceil(ATTN_ROW_BLOCK);
+        let avg_kv = ci as f64 + li as f64 / 2.0;
+        let fl = 4.0 * d * ATTN_ROW_BLOCK as f64 * avg_kv;
+        let by = 2.0 * d * avg_kv * dtype_bytes as f64 * gqa;
+        let t = tile_time(fl, by, gpu.eff_attn, s.n_tiles, gpu);
+        s.work += n_heads as f64 * blocks as f64 * t;
+        let kv_last = (ci + li) as f64;
+        let fl_l = 4.0 * d * ATTN_ROW_BLOCK as f64 * kv_last;
+        let by_l = 2.0 * d * kv_last * dtype_bytes as f64 * gqa;
+        s.max_tile = s.max_tile.max(tile_time(fl_l, by_l, gpu.eff_attn, s.n_tiles, gpu));
+    }
+    s
+}
+
+/// Causal FlashAttention-2 prefill runtime, seconds.
+pub fn attn_prefill_time(
+    q_lens: &[u32],
+    ctx_lens: &[u32],
+    n_heads: u32,
+    n_kv_heads: u32,
+    head_dim: u32,
+    dtype_bytes: u32,
+    gpu: &GpuSpec,
+) -> f64 {
+    let s = attn_prefill_stats(q_lens, ctx_lens, n_heads, n_kv_heads, head_dim, dtype_bytes, gpu);
+    if s.n_tiles == 0 {
+        return 0.0;
+    }
+    gpu.launch_overhead + schedule(s.work, s.n_tiles, s.max_tile, gpu.sms)
+}
+
+/// Tile statistics for FlashDecoding (one new token per sequence).
+///
+/// One CTA per (sequence, kv-head, 2048-token kv chunk); each CTA streams
+/// its K/V chunk from HBM and computes for the whole GQA group of q heads.
+/// Returns `(stats, any_split)`.
+pub fn attn_decode_stats(
+    ctx_lens: &[u32],
+    n_heads: u32,
+    n_kv_heads: u32,
+    head_dim: u32,
+    dtype_bytes: u32,
+    gpu: &GpuSpec,
+) -> (TileStats, bool) {
+    let mut s = TileStats::default();
+    let mut any_split = false;
+    let group = n_heads as f64 / n_kv_heads as f64;
+    let d = head_dim as f64;
+    s.n_tiles = ctx_lens
+        .iter()
+        .filter(|&&ci| ci > 0)
+        .map(|&ci| n_kv_heads as u64 * (ci as u64).div_ceil(DECODE_KV_SPLIT))
+        .sum();
+    for &ci in ctx_lens {
+        if ci == 0 {
+            continue;
+        }
+        let splits = (ci as u64).div_ceil(DECODE_KV_SPLIT);
+        let chunk = ci as f64 / splits as f64;
+        let fl = 4.0 * d * chunk * group;
+        let by = 2.0 * d * chunk * dtype_bytes as f64;
+        let t = tile_time(fl, by, gpu.eff_attn, s.n_tiles, gpu);
+        s.work += n_kv_heads as f64 * splits as f64 * t;
+        s.max_tile = s.max_tile.max(t);
+        any_split = any_split || splits > 1;
+    }
+    (s, any_split)
+}
+
+/// FlashDecoding runtime, seconds (adds a combine pass when kv splits).
+pub fn attn_decode_time(
+    ctx_lens: &[u32],
+    n_heads: u32,
+    n_kv_heads: u32,
+    head_dim: u32,
+    dtype_bytes: u32,
+    gpu: &GpuSpec,
+) -> f64 {
+    let (s, any_split) = attn_decode_stats(ctx_lens, n_heads, n_kv_heads, head_dim, dtype_bytes, gpu);
+    if s.n_tiles == 0 {
+        return 0.0;
+    }
+    let mut t = gpu.launch_overhead + schedule(s.work, s.n_tiles, s.max_tile, gpu.sms);
+    if any_split {
+        t += 2e-6; // split-kv reduction kernel
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// GEMM / GroupedGEMM
+// ---------------------------------------------------------------------------
+
+/// `(n_tiles, per-tile seconds)` for a dense GEMM with 128x128 tiles.
+pub fn gemm_stats(m: u64, n: u64, k: u64, dtype_bytes: u32, gpu: &GpuSpec) -> (u64, f64) {
+    if m == 0 || n == 0 || k == 0 {
+        return (0, 0.0);
+    }
+    let tm = m.div_ceil(GEMM_TILE_M);
+    let tiles = tm * n.div_ceil(GEMM_TILE_N);
+    // effective rows per row-tile: a skinny GEMM reads far less of A
+    let eff_m = m as f64 / tm as f64;
+    let fl = 2.0 * eff_m * GEMM_TILE_N as f64 * k as f64;
+    let by = (eff_m * k as f64 + (k * GEMM_TILE_N) as f64 + eff_m * GEMM_TILE_N as f64)
+        * dtype_bytes as f64;
+    (tiles, tile_time(fl, by, gpu.eff_gemm, tiles, gpu))
+}
+
+/// Dense GEMM `C[m,n] = A[m,k] @ B[k,n]` runtime, seconds.
+pub fn gemm_time(m: u64, n: u64, k: u64, dtype_bytes: u32, gpu: &GpuSpec) -> f64 {
+    let (tiles, t_tile) = gemm_stats(m, n, k, dtype_bytes, gpu);
+    if tiles == 0 {
+        return 0.0;
+    }
+    gpu.launch_overhead + schedule(tiles as f64 * t_tile, tiles, t_tile, gpu.sms)
+}
+
+/// `(n_tiles, per-tile seconds, active experts)` for a GroupedGEMM.
+pub fn grouped_gemm_stats(
+    tokens_per_expert: &[u32],
+    n: u64,
+    k: u64,
+    dtype_bytes: u32,
+    gpu: &GpuSpec,
+) -> (u64, f64, u32) {
+    if n == 0 || k == 0 {
+        return (0, 0.0, 0);
+    }
+    let tn = n.div_ceil(GG_TILE_N);
+    let mut tiles = 0u64;
+    let mut active = 0u32;
+    let mut row_tiles = 0u64;
+    let mut total_m = 0u64;
+    for &m_e in tokens_per_expert {
+        if m_e == 0 {
+            continue;
+        }
+        active += 1;
+        let rt = (m_e as u64).div_ceil(GG_TILE_M);
+        row_tiles += rt;
+        total_m += m_e as u64;
+        tiles += rt * tn;
+    }
+    if tiles == 0 {
+        return (0, 0.0, 0);
+    }
+    // average effective rows per row-tile: fragmented expert loads mean
+    // mostly-empty tiles (the imbalance cost)
+    let eff_m = total_m as f64 / row_tiles as f64;
+    let fl = 2.0 * eff_m * GG_TILE_N as f64 * k as f64;
+    let by = (eff_m * k as f64 + (k * GG_TILE_N) as f64 + eff_m * GG_TILE_N as f64)
+        * dtype_bytes as f64;
+    let t_tile = tile_time(fl, by, gpu.eff_grouped, tiles, gpu);
+    (tiles, t_tile, active)
+}
+
+/// GroupedGEMM runtime over experts with heterogeneous token counts.
+///
+/// Lightly-loaded experts pay disproportionate tile quantization and
+/// weight-panel traffic — the imbalance effect the paper's features
+/// capture (§3.2).
+pub fn grouped_gemm_time(
+    tokens_per_expert: &[u32],
+    n: u64,
+    k: u64,
+    dtype_bytes: u32,
+    gpu: &GpuSpec,
+) -> f64 {
+    let (tiles, t_tile, active) = grouped_gemm_stats(tokens_per_expert, n, k, dtype_bytes, gpu);
+    if tiles == 0 {
+        return 0.0;
+    }
+    gpu.launch_overhead
+        + active as f64 * gpu.group_fixed
+        + schedule(tiles as f64 * t_tile, tiles, t_tile, gpu.sms)
+}
+
+// ---------------------------------------------------------------------------
+// Collectives / transfers
+// ---------------------------------------------------------------------------
+
+/// Ring all-reduce: 2(n-1) steps, 2(n-1)/n of the data over each link.
+pub fn allreduce_time(bytes: f64, n_ranks: u32, link: &LinkSpec) -> f64 {
+    if n_ranks <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let n = n_ranks as f64;
+    link.alpha * 2.0 * (n - 1.0) + 2.0 * bytes * (n - 1.0) / (n * link.bandwidth)
+}
+
+/// All-to-all (EP dispatch/combine).
+pub fn all2all_time(bytes: f64, n_ranks: u32, link: &LinkSpec) -> f64 {
+    if n_ranks <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let n = n_ranks as f64;
+    link.alpha * (n - 1.0) + bytes * (n - 1.0) / (n * link.bandwidth)
+}
+
+/// Point-to-point transfer (e.g. KV-cache migration).
+pub fn p2p_time(bytes: f64, link: &LinkSpec) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    link.alpha + bytes / link.bandwidth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::a800()
+    }
+
+    #[test]
+    fn empty_workloads_are_free() {
+        let g = gpu();
+        assert_eq!(attn_prefill_time(&[], &[], 28, 4, 128, 2, &g), 0.0);
+        assert_eq!(attn_decode_time(&[], 28, 4, 128, 2, &g), 0.0);
+        assert_eq!(gemm_time(0, 128, 128, 2, &g), 0.0);
+        assert_eq!(grouped_gemm_time(&[0, 0], 4096, 2048, 2, &g), 0.0);
+    }
+
+    #[test]
+    fn prefill_monotone_in_length() {
+        let g = gpu();
+        let t1 = attn_prefill_time(&[128; 8], &[0; 8], 28, 4, 128, 2, &g);
+        let t2 = attn_prefill_time(&[512; 8], &[0; 8], 28, 4, 128, 2, &g);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn decode_straggler_dominates() {
+        let g = gpu();
+        let base = attn_decode_time(&[256; 71], 28, 4, 128, 2, &g);
+        let mut skew = vec![256u32; 71];
+        skew.push(65536);
+        let t = attn_decode_time(&skew, 28, 4, 128, 2, &g);
+        assert!(t > 1.5 * base, "skew {t} vs base {base}");
+    }
+
+    #[test]
+    fn gemm_wave_quantization() {
+        let g = gpu();
+        let before = gemm_time(128 * 108, 128, 4096, 2, &g);
+        let after = gemm_time(128 * 109, 128, 4096, 2, &g);
+        let within = gemm_time(128 * 107, 128, 4096, 2, &g);
+        assert!((after - before) > 5.0 * (before - within).abs());
+    }
+
+    #[test]
+    fn grouped_gemm_imbalance_costs() {
+        let g = gpu();
+        let bal = grouped_gemm_time(&[256; 16], 4096, 2048, 2, &g);
+        let mut loads = vec![16u32; 15];
+        loads.push(256 * 16 - 240);
+        let imb = grouped_gemm_time(&loads, 4096, 2048, 2, &g);
+        assert!(imb > bal);
+    }
+
+    #[test]
+    fn schedule_edge_cases() {
+        assert_eq!(schedule(0.0, 0, 0.0, 108), 0.0);
+        // single tile: makespan == the tile
+        let t = schedule(5e-6, 1, 5e-6, 108);
+        assert!((t - 5e-6).abs() < 1e-12);
+        // homogeneous full wave: one wave of the tile time
+        let t = schedule(108.0 * 2e-6, 108, 2e-6, 108);
+        assert!((t - 2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collectives() {
+        let link = LinkSpec::nvlink_a800();
+        assert_eq!(allreduce_time(1e6, 1, &link), 0.0);
+        assert!(allreduce_time(1e9, 8, &link) > allreduce_time(1e6, 8, &link));
+        assert!(all2all_time(1e9, 8, &link) < allreduce_time(1e9, 8, &link));
+        let t = p2p_time(400e9, &link);
+        assert!(t > 1.0 && t < 1.01);
+    }
+
+    #[test]
+    fn gqa_reduces_decode_bytes() {
+        // more kv heads (less sharing) => more CTAs => slower at same q heads
+        let g = gpu();
+        let t_gqa = attn_decode_time(&[8192; 16], 32, 4, 128, 2, &g);
+        let t_mha = attn_decode_time(&[8192; 16], 32, 32, 128, 2, &g);
+        assert!(t_mha > t_gqa);
+    }
+}

@@ -1,0 +1,116 @@
+//! Parallelism configuration: TP / PP / DP / EP sharding math.
+//!
+//! Frontier models the virtual sharding of §3.3: each replica is a group
+//! of GPUs running one model copy under `tp * pp` partitioning; MoE
+//! layers additionally shard experts under `ep` with the topological
+//! constraint `attn_dp * attn_tp == moe_tp * moe_ep` (checked by
+//! [`Parallelism::validate_moe_topology`]).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Tensor parallel degree (within a replica).
+    pub tp: u32,
+    /// Pipeline parallel degree.
+    pub pp: u32,
+    /// Expert parallel degree (MoE; 1 for dense).
+    pub ep: u32,
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism { tp: 1, pp: 1, ep: 1 }
+    }
+}
+
+impl Parallelism {
+    pub fn tp(tp: u32) -> Self {
+        Parallelism { tp, ..Default::default() }
+    }
+
+    pub fn new(tp: u32, pp: u32, ep: u32) -> Self {
+        Parallelism { tp, pp, ep }
+    }
+
+    /// GPUs per model replica.
+    pub fn gpus_per_replica(&self) -> u32 {
+        self.tp * self.pp * self.ep.max(1) / 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.tp == 0 || self.pp == 0 || self.ep == 0 {
+            bail!("parallel degrees must be >= 1: {self:?}");
+        }
+        Ok(())
+    }
+
+    /// The MoE topological constraint from §3.3:
+    /// `attn_dp * attn_tp == moe_tp * moe_ep`.
+    pub fn validate_moe_topology(
+        attn_dp: u32,
+        attn_tp: u32,
+        moe_tp: u32,
+        moe_ep: u32,
+    ) -> Result<()> {
+        if attn_dp * attn_tp != moe_tp * moe_ep {
+            bail!(
+                "MoE topology violated: attn_dp({attn_dp}) * attn_tp({attn_tp}) \
+                 != moe_tp({moe_tp}) * moe_ep({moe_ep})"
+            );
+        }
+        Ok(())
+    }
+
+    /// Experts resident on each EP rank (n_experts must divide evenly).
+    pub fn experts_per_rank(&self, n_experts: u32) -> Result<u32> {
+        if n_experts % self.ep != 0 {
+            bail!("{} experts do not divide across ep={}", n_experts, self.ep);
+        }
+        Ok(n_experts / self.ep)
+    }
+
+    /// Split a global per-expert load vector into per-rank slices
+    /// (contiguous expert placement).
+    pub fn shard_expert_loads<'a>(&self, loads: &'a [u32]) -> Vec<&'a [u32]> {
+        let per = loads.len() / self.ep as usize;
+        (0..self.ep as usize).map(|r| &loads[r * per..(r + 1) * per]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpus_per_replica() {
+        assert_eq!(Parallelism::new(4, 2, 1).gpus_per_replica(), 8);
+        assert_eq!(Parallelism::tp(2).gpus_per_replica(), 2);
+    }
+
+    #[test]
+    fn moe_topology_constraint() {
+        // attn: dp=4, tp=2 (8 gpus) == moe: tp=2, ep=4
+        assert!(Parallelism::validate_moe_topology(4, 2, 2, 4).is_ok());
+        assert!(Parallelism::validate_moe_topology(4, 2, 2, 3).is_err());
+    }
+
+    #[test]
+    fn expert_sharding() {
+        let p = Parallelism::new(1, 1, 4);
+        assert_eq!(p.experts_per_rank(64).unwrap(), 16);
+        assert!(p.experts_per_rank(63).is_err());
+        let loads: Vec<u32> = (0..8).collect();
+        let p2 = Parallelism::new(1, 1, 2);
+        let shards = p2.shard_expert_loads(&loads);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0], &[0, 1, 2, 3]);
+        assert_eq!(shards[1], &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn zero_degree_rejected() {
+        assert!(Parallelism::new(0, 1, 1).validate().is_err());
+        assert!(Parallelism::new(1, 1, 1).validate().is_ok());
+    }
+}

@@ -1,0 +1,210 @@
+//! The learned predictor: Frontier's high-fidelity operator model.
+//!
+//! Features are extracted in Rust (`operators::features`, mirroring the
+//! Python training pipeline) and priced by the AOT-compiled MLP through
+//! PJRT. A memoization cache keyed on the feature bits keeps the
+//! simulation hot path off the executable for repeated workload shapes —
+//! decode iterations re-price nearly identical batches layer after
+//! layer, so hit rates in steady state exceed 90%.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::hardware::{GpuSpec, LinkSpec};
+use crate::operators::features;
+use crate::operators::OpWorkload;
+use crate::runtime::PredictorRuntime;
+
+use super::{comm_time, ExecutionPredictor};
+
+/// Cache key: operator class + the raw bits of the f32-rounded features.
+/// f32 rounding matches what the executable actually sees, so two keys
+/// are equal exactly when PJRT would compute identical outputs.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct FeatKey(u8, Vec<u32>);
+
+fn key(class: u8, feats: &[f64]) -> FeatKey {
+    FeatKey(class, feats.iter().map(|&x| (x as f32).to_bits()).collect())
+}
+
+type SharedCache = Rc<RefCell<HashMap<FeatKey, f64>>>;
+
+pub struct LearnedPredictor {
+    rt: Rc<PredictorRuntime>,
+    gpu: GpuSpec,
+    link: LinkSpec,
+    /// Memo cache shared across simulations using the same artifacts
+    /// (per thread): sweeps re-price mostly the same workload shapes.
+    cache: SharedCache,
+    evals: u64,
+    hits: u64,
+    /// Quantize features before prediction (~3% log-space rounding).
+    /// Decode contexts advance every iteration, so exact memoization
+    /// almost never hits; rounding trades <=3% input error (below the
+    /// predictor's own noise) for >90% cache hit rates on the hot path.
+    /// Disable for operator-fidelity studies (Fig. 2).
+    quantize: bool,
+}
+
+thread_local! {
+    static SHARED_CACHES: RefCell<HashMap<std::path::PathBuf, SharedCache>> =
+        RefCell::new(HashMap::new());
+}
+
+impl LearnedPredictor {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let rt = PredictorRuntime::load_cached(artifacts_dir)?;
+        let cache = SHARED_CACHES.with(|c| {
+            Rc::clone(
+                c.borrow_mut()
+                    .entry(artifacts_dir.to_path_buf())
+                    .or_insert_with(|| Rc::new(RefCell::new(HashMap::with_capacity(4096)))),
+            )
+        });
+        Ok(LearnedPredictor {
+            rt,
+            gpu: GpuSpec::a800(),
+            link: LinkSpec::nvlink_a800(),
+            cache,
+            evals: 0,
+            hits: 0,
+            quantize: true,
+        })
+    }
+
+    /// Exact mode: no feature quantization and a private cache
+    /// (operator-fidelity studies).
+    pub fn load_exact(artifacts_dir: &Path) -> Result<Self> {
+        Ok(LearnedPredictor {
+            quantize: false,
+            cache: Rc::new(RefCell::new(HashMap::with_capacity(4096))),
+            ..Self::load(artifacts_dir)?
+        })
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits, self.evals)
+    }
+
+    /// Feature-level quantization: the predictor's features are
+    /// log-scaled, so rounding to 1/32 bounds the induced workload error
+    /// at ~3% — below the model's own validation error — while making
+    /// near-identical batches (decode contexts advance one token per
+    /// iteration) share cache entries.
+    fn round_feats(&self, feats: &mut [f64]) {
+        if !self.quantize {
+            return;
+        }
+        for f in feats {
+            *f = (*f * 32.0).round() / 32.0;
+        }
+    }
+
+    fn query(&mut self, class: u8, feats: Vec<f64>) -> f64 {
+        let k = key(class, &feats);
+        if let Some(&t) = self.cache.borrow().get(&k) {
+            self.hits += 1;
+            return t;
+        }
+        self.evals += 1;
+        let exe = match class {
+            0 => &self.rt.attn,
+            1 => &self.rt.grouped_gemm,
+            _ => &self.rt.gemm,
+        };
+        let us = exe
+            .predict_us(std::slice::from_ref(&feats))
+            .expect("predictor execution failed")[0];
+        let secs = us * 1e-6;
+        self.cache.borrow_mut().insert(k, secs);
+        secs
+    }
+
+    fn featurize(&self, op: &OpWorkload) -> Option<(u8, Vec<f64>)> {
+        match op {
+            OpWorkload::Attention { is_prefill, q_lens, ctx_lens, n_heads, n_kv_heads, head_dim } => {
+                Some((
+                    0,
+                    features::attn_features(
+                        *is_prefill, q_lens, ctx_lens, *n_heads, *n_kv_heads, *head_dim,
+                        &self.gpu,
+                    )
+                    .to_vec(),
+                ))
+            }
+            OpWorkload::GroupedGemm { tokens_per_expert, n, k } => Some((
+                1,
+                features::grouped_gemm_features(tokens_per_expert, *n, *k, &self.gpu).to_vec(),
+            )),
+            OpWorkload::Gemm { m, n, k } => {
+                Some((2, features::gemm_features(*m, *n, *k, &self.gpu).to_vec()))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl ExecutionPredictor for LearnedPredictor {
+    fn predict(&mut self, op: &OpWorkload) -> f64 {
+        if let Some(t) = comm_time(op, &self.link) {
+            return t;
+        }
+        let (class, mut feats) = self.featurize(op).expect("compute op");
+        self.round_feats(&mut feats);
+        self.query(class, feats)
+    }
+
+    /// Batched cache warm-up: group pending (uncached) queries by
+    /// operator class and execute each group in as few PJRT launches as
+    /// the fixed artifact batch allows. One iteration's whole op list
+    /// costs <= 3 launches instead of one per op.
+    fn prefetch(&mut self, ops: &[OpWorkload]) {
+        let mut pending: [Vec<(FeatKey, Vec<f64>)>; 3] = Default::default();
+        for op in ops {
+            if comm_time(op, &self.link).is_some() {
+                continue;
+            }
+            let Some((class, mut feats)) = self.featurize(op) else { continue };
+            self.round_feats(&mut feats);
+            let k = key(class, &feats);
+            if self.cache.borrow().contains_key(&k) {
+                continue;
+            }
+            let bucket = &mut pending[class as usize];
+            if !bucket.iter().any(|(existing, _)| *existing == k) {
+                bucket.push((k, feats));
+            }
+        }
+        for (class, bucket) in pending.into_iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let exe = match class {
+                0 => &self.rt.attn,
+                1 => &self.rt.grouped_gemm,
+                _ => &self.rt.gemm,
+            };
+            for chunk in bucket.chunks(exe.batch) {
+                let rows: Vec<Vec<f64>> = chunk.iter().map(|(_, f)| f.clone()).collect();
+                let out = exe.predict_us(&rows).expect("predictor execution failed");
+                self.evals += 1;
+                let mut cache = self.cache.borrow_mut();
+                for ((k, _), us) in chunk.iter().zip(out) {
+                    cache.insert(k.clone(), us * 1e-6);
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! [`run_prop`] drives a check over N seeded cases; on failure it
+//! reports the failing seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use frontier::proptest_util::{run_prop, Gen};
+//! run_prop("sum is commutative", 100, |g| {
+//!     let a = g.u32(0, 1000);
+//!     let b = g.u32(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::core::Pcg64;
+
+/// Seeded case generator handed to each property iteration.
+pub struct Gen {
+    rng: Pcg64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg64::new(seed), seed }
+    }
+
+    pub fn u32(&mut self, lo: u32, hi_incl: u32) -> u32 {
+        self.rng.gen_range(lo as u64, hi_incl as u64 + 1) as u32
+    }
+
+    pub fn u64(&mut self, lo: u64, hi_incl: u64) -> u64 {
+        self.rng.gen_range(lo, hi_incl + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_f64() < 0.5
+    }
+
+    /// Vector of u32s with heterogeneous magnitudes — the distributions
+    /// that stress schedulers and the oracle.
+    pub fn skewed_lens(&mut self, n_max: usize, hi: u32) -> Vec<u32> {
+        let n = self.u32(1, n_max as u32) as usize;
+        (0..n)
+            .map(|_| {
+                if self.rng.next_f64() < 0.1 {
+                    self.u32(hi / 2, hi)
+                } else {
+                    self.u32(1, (hi / 16).max(2))
+                }
+            })
+            .collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_range(0, xs.len() as u64) as usize]
+    }
+}
+
+/// Run `check` over `cases` seeded generators; panics with the failing
+/// seed embedded in the message.
+pub fn run_prop(name: &str, cases: u64, mut check: impl FnMut(&mut Gen)) {
+    for seed in 0..cases {
+        let mut g = Gen::new(0xBEEF_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at seed {}: {msg}", 0xBEEF_0000u64 + seed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_pass() {
+        run_prop("addition commutes", 50, |g| {
+            let a = g.u32(0, 100);
+            let b = g.u32(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_prop_reports_seed() {
+        run_prop("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let x = g.u32(5, 10);
+            assert!((5..=10).contains(&x));
+            let lens = g.skewed_lens(8, 1000);
+            assert!(!lens.is_empty() && lens.len() <= 8);
+            assert!(lens.iter().all(|&l| l >= 1 && l <= 1000));
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Table / CSV / CDF renderers used by the benches and examples.
+
+use std::fmt::Write as _;
+
+/// Render a markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |out: &mut String, cells: &[String]| {
+        out.push('|');
+        for (i, c) in cells.iter().enumerate() {
+            let _ = write!(out, " {:<w$} |", c, w = widths.get(i).copied().unwrap_or(4));
+        }
+        out.push('\n');
+    };
+    fmt_row(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('|');
+    for w in &widths {
+        let _ = write!(out, "{:-<w$}|", "", w = w + 2);
+    }
+    out.push('\n');
+    for row in rows {
+        fmt_row(&mut out, row);
+    }
+    out
+}
+
+/// Render CSV (no quoting needed for numeric tables).
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&headers.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Summarize a CDF at fixed probe points for terminal display.
+pub fn cdf_summary(samples: &[f64], label: &str) -> String {
+    use crate::metrics::{frac_below, percentile};
+    format!(
+        "{label}: p50={:.4} p90={:.4} p99={:.4} | <5%={:.1}% <10%={:.1}% <20%={:.1}%",
+        percentile(samples, 50.0),
+        percentile(samples, 90.0),
+        percentile(samples, 99.0),
+        frac_below(samples, 0.05) * 100.0,
+        frac_below(samples, 0.10) * 100.0,
+        frac_below(samples, 0.20) * 100.0,
+    )
+}
+
+/// ASCII CDF plot (x = value, y = cumulative fraction), for terminal
+/// inspection of Fig. 2-style results.
+pub fn ascii_cdf(series: &[(&str, Vec<f64>)], width: usize, height: usize, x_max: f64) -> String {
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', '+', 'o', 'x'];
+    for (si, (_, xs)) in series.iter().enumerate() {
+        if xs.is_empty() {
+            continue;
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        for col in 0..width {
+            let x = x_max * (col as f64 + 0.5) / width as f64;
+            let frac = sorted.iter().take_while(|&&v| v <= x).count() as f64 / n as f64;
+            let row = ((1.0 - frac) * (height as f64 - 1.0)).round() as usize;
+            grid[row.min(height - 1)][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let y = 1.0 - i as f64 / (height as f64 - 1.0);
+        let _ = writeln!(out, "{y:4.2} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "     +{}", "-".repeat(width));
+    let _ = writeln!(out, "      0{:>w$.2}", x_max, w = width - 1);
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "      {} = {name}", marks[si % marks.len()]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let t = markdown_table(
+            &["a", "metric"],
+            &[vec!["1".into(), "x".into()], vec!["22".into(), "yy".into()]],
+        );
+        assert!(t.contains("| a  | metric |"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let c = csv(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn ascii_cdf_renders() {
+        let s = ascii_cdf(&[("err", vec![0.1, 0.2, 0.3])], 20, 5, 0.5);
+        assert!(s.contains('*'));
+        assert!(s.contains("err"));
+    }
+
+    #[test]
+    fn cdf_summary_contains_percentiles() {
+        let s = cdf_summary(&[0.01, 0.02, 0.5], "x");
+        assert!(s.contains("p50"));
+        assert!(s.contains("<10%"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Pluggable scheduling policies (§1 challenge 3: "treat system-level
+//! policies as first-class citizens").
+//!
+//! * [`BatchPolicy`] — which waiting requests join the next iteration
+//!   (vLLM-style FCFS continuous batching, SJF, Sarathi-style chunked
+//!   prefill admission with a token budget).
+//! * [`RoutePolicy`] — which replica a request is dispatched to
+//!   (round-robin, least-loaded, most-free-memory).
+
+use std::collections::VecDeque;
+
+use crate::core::SimTime;
+
+/// A request waiting at a replica scheduler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueuedReq {
+    pub id: u64,
+    /// Prefill tokens still owed (0 for a decode-side admission).
+    pub tokens_needed: u32,
+    /// KV blocks the request will hold over its lifetime.
+    pub blocks_needed: u64,
+    pub arrival: SimTime,
+}
+
+/// Iteration-level admission constraints.
+#[derive(Clone, Copy, Debug)]
+pub struct IterBudget {
+    /// Max running requests per iteration (batch size cap).
+    pub max_batch: usize,
+    /// Max new prefill tokens admitted per iteration (Sarathi-style
+    /// token budget; `u32::MAX` = full prefills).
+    pub max_prefill_tokens: u32,
+}
+
+impl Default for IterBudget {
+    fn default() -> Self {
+        IterBudget { max_batch: 256, max_prefill_tokens: 8192 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// First-come-first-served continuous batching (vLLM default).
+    Fcfs,
+    /// Shortest-job-first on remaining prefill tokens.
+    Sjf,
+}
+
+impl BatchPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fcfs" => Some(Self::Fcfs),
+            "sjf" => Some(Self::Sjf),
+            _ => None,
+        }
+    }
+}
+
+/// Select requests to admit into the next iteration. Admitted entries
+/// are removed from `waiting`. `free_blocks` is consumed as admissions
+/// reserve memory; `running` is the current in-flight count.
+pub fn admit(
+    policy: BatchPolicy,
+    waiting: &mut VecDeque<QueuedReq>,
+    running: usize,
+    budget: &IterBudget,
+    mut free_blocks: u64,
+) -> Vec<QueuedReq> {
+    let mut admitted = Vec::new();
+    let mut token_budget = budget.max_prefill_tokens;
+    if policy == BatchPolicy::Sjf {
+        let mut v: Vec<QueuedReq> = waiting.drain(..).collect();
+        // stable sort keeps FCFS order among equals
+        v.sort_by_key(|r| r.tokens_needed);
+        waiting.extend(v);
+    }
+    while let Some(front) = waiting.front() {
+        if running + admitted.len() >= budget.max_batch {
+            break;
+        }
+        if front.blocks_needed > free_blocks {
+            break; // head-of-line blocking on memory, like vLLM
+        }
+        // chunked prefill: admit even if the full prefill exceeds the
+        // token budget, as long as some budget remains — the execution
+        // layer runs it chunk by chunk
+        if token_budget == 0 && front.tokens_needed > 0 {
+            break;
+        }
+        let r = waiting.pop_front().unwrap();
+        token_budget = token_budget.saturating_sub(r.tokens_needed);
+        free_blocks -= r.blocks_needed;
+        admitted.push(r);
+    }
+    admitted
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Fewest waiting+running requests.
+    LeastLoaded,
+    /// Most free KV blocks.
+    MostFreeMemory,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round_robin" => Some(Self::RoundRobin),
+            "least_loaded" => Some(Self::LeastLoaded),
+            "most_free_memory" => Some(Self::MostFreeMemory),
+            _ => None,
+        }
+    }
+}
+
+/// Pick a replica index. `loads` = waiting+running counts,
+/// `free_blocks` = per-replica free memory, `rr_state` = round-robin
+/// cursor (mutated).
+pub fn route(
+    policy: RoutePolicy,
+    loads: &[usize],
+    free_blocks: &[u64],
+    rr_state: &mut usize,
+) -> usize {
+    debug_assert!(!loads.is_empty());
+    match policy {
+        RoutePolicy::RoundRobin => {
+            let i = *rr_state % loads.len();
+            *rr_state = (*rr_state + 1) % loads.len();
+            i
+        }
+        RoutePolicy::LeastLoaded => {
+            loads.iter().enumerate().min_by_key(|(_, &l)| l).unwrap().0
+        }
+        RoutePolicy::MostFreeMemory => {
+            free_blocks.iter().enumerate().max_by_key(|(_, &b)| b).unwrap().0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, tokens: u32, blocks: u64) -> QueuedReq {
+        QueuedReq { id, tokens_needed: tokens, blocks_needed: blocks, arrival: SimTime::ZERO }
+    }
+
+    #[test]
+    fn fcfs_respects_batch_cap() {
+        let mut w: VecDeque<_> = (0..10).map(|i| q(i, 100, 1)).collect();
+        let budget = IterBudget { max_batch: 4, max_prefill_tokens: u32::MAX };
+        let a = admit(BatchPolicy::Fcfs, &mut w, 2, &budget, 100);
+        assert_eq!(a.len(), 2); // 2 running + 2 admitted = 4
+        assert_eq!(a[0].id, 0);
+        assert_eq!(w.len(), 8);
+    }
+
+    #[test]
+    fn memory_blocks_admission() {
+        let mut w: VecDeque<_> = vec![q(0, 10, 60), q(1, 10, 30)].into();
+        let a = admit(BatchPolicy::Fcfs, &mut w, 0, &IterBudget::default(), 50);
+        // head needs 60 > 50: head-of-line blocking, nothing admitted
+        assert!(a.is_empty());
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn token_budget_bounds_admissions() {
+        // greedy admission while budget remains: the first two requests
+        // exhaust the 6000-token budget (chunked execution absorbs the
+        // overshoot); the third must wait
+        let mut w: VecDeque<_> = vec![q(0, 5000, 1), q(1, 5000, 1), q(2, 10, 1)].into();
+        let budget = IterBudget { max_batch: 64, max_prefill_tokens: 6000 };
+        let a = admit(BatchPolicy::Fcfs, &mut w, 0, &budget, 100);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn sjf_reorders() {
+        let mut w: VecDeque<_> = vec![q(0, 900, 1), q(1, 10, 1), q(2, 500, 1)].into();
+        let a = admit(BatchPolicy::Sjf, &mut w, 0, &IterBudget::default(), 100);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn decode_admissions_ignore_token_budget() {
+        // tokens_needed == 0 (post-prefill handoff): token budget of 0 is fine
+        let mut w: VecDeque<_> = vec![q(0, 0, 4)].into();
+        let budget = IterBudget { max_batch: 8, max_prefill_tokens: 0 };
+        let a = admit(BatchPolicy::Fcfs, &mut w, 0, &budget, 10);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn routing_policies() {
+        let mut rr = 0;
+        assert_eq!(route(RoutePolicy::RoundRobin, &[1, 1, 1], &[0, 0, 0], &mut rr), 0);
+        assert_eq!(route(RoutePolicy::RoundRobin, &[1, 1, 1], &[0, 0, 0], &mut rr), 1);
+        assert_eq!(route(RoutePolicy::LeastLoaded, &[5, 2, 9], &[0, 0, 0], &mut rr), 1);
+        assert_eq!(route(RoutePolicy::MostFreeMemory, &[0, 0, 0], &[3, 9, 1], &mut rr), 1);
+    }
+}

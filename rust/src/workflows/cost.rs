@@ -1,0 +1,468 @@
+//! Iteration cost model: decompose a batch into the operator
+//! micro-workflow and price it.
+//!
+//! The ReplicaWorker's ExecutionPredictor (§3.1) "decomposes a logical
+//! layer into a data-dependent micro-workflow of events". For an MoE
+//! layer that means: gate GEMM -> pluggable routing -> per-EP-rank
+//! GroupedGEMM (heterogeneous tasks) -> `max` synchronization barrier ->
+//! all-to-all combine. For attention it means pricing the *actual*
+//! ragged batch, not a proxy.
+//!
+//! Pricing is two-phase: the op list for an iteration is collected
+//! first and handed to [`crate::predictor::ExecutionPredictor::prefetch`]
+//! so the learned predictor can batch its PJRT queries (one executable
+//! launch per operator class instead of one per op — the §Perf
+//! optimization), then combined respecting the straggler barrier.
+
+use crate::config::OverheadConfig;
+use crate::core::Pcg64;
+use crate::hardware::LinkSpec;
+use crate::metrics::MetricsCollector;
+use crate::model::ModelConfig;
+use crate::moe::{self, RoutingPolicy};
+use crate::operators::OpWorkload;
+use crate::parallelism::Parallelism;
+use crate::predictor::ExecutionPredictor;
+
+/// The shape of one iteration's batch on a replica.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchShape {
+    /// Prefill chunks: (new tokens this iteration, existing context).
+    pub prefill: Vec<(u32, u32)>,
+    /// Decode sequences: context length (input + generated so far).
+    pub decode_ctx: Vec<u32>,
+    /// Rows hitting the LM head (decode seqs + prefills finishing now).
+    pub lm_head_rows: u32,
+}
+
+impl BatchShape {
+    pub fn total_tokens(&self) -> u32 {
+        self.prefill.iter().map(|&(t, _)| t).sum::<u32>() + self.decode_ctx.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode_ctx.is_empty()
+    }
+}
+
+/// Immutable pricing configuration for one replica pool.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub model: ModelConfig,
+    pub par: Parallelism,
+    pub link: LinkSpec,
+    pub moe_routing: RoutingPolicy,
+    /// `max` over expert tasks (stragglers) vs balance-oblivious `mean`.
+    pub straggler_max: bool,
+    pub overhead: OverheadConfig,
+}
+
+/// Mutable pricing context: predictor + RNG + metric sink.
+pub struct CostCtx<'a> {
+    pub pred: &'a mut dyn ExecutionPredictor,
+    pub rng: &'a mut Pcg64,
+    pub metrics: Option<&'a mut MetricsCollector>,
+}
+
+impl<'a> CostCtx<'a> {
+    fn price(&mut self, op: &OpWorkload) -> f64 {
+        let t = self.pred.predict(op);
+        if let Some(m) = self.metrics.as_deref_mut() {
+            m.record_op(op.class(), t);
+        }
+        t
+    }
+
+    fn price_all(&mut self, ops: &[OpWorkload]) -> f64 {
+        self.pred.prefetch(ops);
+        ops.iter().map(|op| self.price(op)).sum()
+    }
+}
+
+/// The FFN sub-layer's op decomposition: ops common to all ranks plus
+/// the heterogeneous per-EP-rank task groups (empty for dense).
+pub struct FfnPlan {
+    pub common: Vec<OpWorkload>,
+    pub per_rank: Vec<Vec<OpWorkload>>,
+}
+
+impl CostModel {
+    pub fn new(model: ModelConfig, par: Parallelism, link: LinkSpec) -> Self {
+        CostModel {
+            model,
+            par,
+            link,
+            moe_routing: RoutingPolicy::UniformRandom,
+            straggler_max: true,
+            overhead: OverheadConfig::predicted(),
+        }
+    }
+
+    /// Attention sub-layer ops (qkv proj + attention + o proj + TP
+    /// all-reduce) for the given batch. Also the attention-side stage of
+    /// the AF pipeline.
+    pub fn attn_block_ops(&self, shape: &BatchShape) -> Vec<OpWorkload> {
+        let m = &self.model;
+        let tp = self.par.tp.max(1);
+        let tokens = shape.total_tokens() as u64;
+        if tokens == 0 {
+            return Vec::new();
+        }
+        let heads = (m.n_heads / tp).max(1);
+        let kv_heads = (m.n_kv_heads / tp).max(1);
+        let qkv_n = (heads as u64 + 2 * kv_heads as u64) * m.head_dim as u64;
+        let mut ops = Vec::with_capacity(5);
+        ops.push(OpWorkload::Gemm { m: tokens, n: qkv_n, k: m.d_model as u64 });
+        if !shape.prefill.is_empty() {
+            let (q, c): (Vec<u32>, Vec<u32>) = shape.prefill.iter().copied().unzip();
+            ops.push(OpWorkload::Attention {
+                is_prefill: true,
+                q_lens: q,
+                ctx_lens: c,
+                n_heads: heads,
+                n_kv_heads: kv_heads,
+                head_dim: m.head_dim,
+            });
+        }
+        if !shape.decode_ctx.is_empty() {
+            ops.push(OpWorkload::Attention {
+                is_prefill: false,
+                q_lens: vec![1; shape.decode_ctx.len()],
+                ctx_lens: shape.decode_ctx.clone(),
+                n_heads: heads,
+                n_kv_heads: kv_heads,
+                head_dim: m.head_dim,
+            });
+        }
+        ops.push(OpWorkload::Gemm {
+            m: tokens,
+            n: m.d_model as u64,
+            k: heads as u64 * m.head_dim as u64,
+        });
+        if tp > 1 {
+            ops.push(OpWorkload::AllReduce {
+                bytes: tokens as f64 * m.d_model as f64 * m.dtype_bytes as f64,
+                n_ranks: tp,
+            });
+        }
+        ops
+    }
+
+    /// Attention sub-layer time, seconds.
+    pub fn attn_block_time(&self, ctx: &mut CostCtx, shape: &BatchShape) -> f64 {
+        ctx.price_all(&self.attn_block_ops(shape))
+    }
+
+    /// FFN sub-layer decomposition for `tokens` tokens. Dense: SwiGLU
+    /// GEMMs + TP all-reduce. MoE: the §3.3 micro-workflow with a fresh
+    /// routing draw.
+    pub fn ffn_block_plan(&self, tokens: u64, rng: &mut Pcg64) -> FfnPlan {
+        if tokens == 0 {
+            return FfnPlan { common: Vec::new(), per_rank: Vec::new() };
+        }
+        let m = &self.model;
+        let tp = self.par.tp.max(1);
+        let d = m.d_model as u64;
+        match m.moe.clone() {
+            None => {
+                let ffn = (m.ffn_dim / tp).max(1) as u64;
+                let mut common = vec![
+                    OpWorkload::Gemm { m: tokens, n: 2 * ffn, k: d },
+                    OpWorkload::Gemm { m: tokens, n: d, k: ffn },
+                ];
+                if tp > 1 {
+                    common.push(OpWorkload::AllReduce {
+                        bytes: tokens as f64 * d as f64 * m.dtype_bytes as f64,
+                        n_ranks: tp,
+                    });
+                }
+                FfnPlan { common, per_rank: Vec::new() }
+            }
+            Some(moe) => {
+                let ep = self.par.ep.max(1);
+                let moe_tp = tp;
+                let mut common = Vec::with_capacity(6);
+                // (1) gating network GEMM
+                common.push(OpWorkload::Gemm { m: tokens, n: moe.n_experts as u64, k: d });
+                // (2) pluggable routing -> token-to-expert assignment map
+                let loads = moe::assign_tokens(
+                    self.moe_routing,
+                    tokens as u32,
+                    moe.n_experts,
+                    moe.top_k,
+                    rng,
+                );
+                // (3)+(5) A2A dispatch / combine across EP ranks
+                let routed_bytes =
+                    tokens as f64 * moe.top_k as f64 * d as f64 * m.dtype_bytes as f64;
+                if ep > 1 {
+                    common.push(OpWorkload::AllToAll { bytes: routed_bytes, n_ranks: ep });
+                    common.push(OpWorkload::AllToAll { bytes: routed_bytes, n_ranks: ep });
+                }
+                // (4) heterogeneous expert computation per rank
+                let expert_ffn = (moe.expert_ffn_dim / moe_tp).max(1) as u64;
+                let per_rank: Vec<Vec<OpWorkload>> = self
+                    .par
+                    .shard_expert_loads(&loads)
+                    .into_iter()
+                    .map(|rank_loads| {
+                        vec![
+                            OpWorkload::GroupedGemm {
+                                tokens_per_expert: rank_loads.to_vec(),
+                                n: 2 * expert_ffn,
+                                k: d,
+                            },
+                            OpWorkload::GroupedGemm {
+                                tokens_per_expert: rank_loads.to_vec(),
+                                n: d,
+                                k: expert_ffn,
+                            },
+                        ]
+                    })
+                    .collect();
+                // shared expert runs dense alongside
+                if moe.shared_expert_dim > 0 {
+                    let se = (moe.shared_expert_dim / moe_tp).max(1) as u64;
+                    common.push(OpWorkload::Gemm { m: tokens, n: 2 * se, k: d });
+                    common.push(OpWorkload::Gemm { m: tokens, n: d, k: se });
+                }
+                if moe_tp > 1 {
+                    common.push(OpWorkload::AllReduce {
+                        bytes: tokens as f64 * d as f64 * m.dtype_bytes as f64,
+                        n_ranks: moe_tp,
+                    });
+                }
+                FfnPlan { common, per_rank }
+            }
+        }
+    }
+
+    /// Price an [`FfnPlan`]: common ops summed; per-rank groups combined
+    /// under the implicit synchronization barrier — `max` (stragglers,
+    /// §3.3) or balance-oblivious `mean` (ablation).
+    pub fn price_ffn_plan(&self, ctx: &mut CostCtx, plan: &FfnPlan) -> f64 {
+        // prefetch everything in one pass (batched PJRT execution)
+        let all: Vec<OpWorkload> = plan
+            .common
+            .iter()
+            .chain(plan.per_rank.iter().flatten())
+            .cloned()
+            .collect();
+        ctx.pred.prefetch(&all);
+        let mut t: f64 = plan.common.iter().map(|op| ctx.price(op)).sum();
+        if !plan.per_rank.is_empty() {
+            let rank_times: Vec<f64> = plan
+                .per_rank
+                .iter()
+                .map(|ops| ops.iter().map(|op| ctx.price(op)).sum::<f64>())
+                .collect();
+            t += if self.straggler_max {
+                rank_times.iter().copied().fold(0.0, f64::max)
+            } else {
+                rank_times.iter().sum::<f64>() / rank_times.len() as f64
+            };
+        }
+        t
+    }
+
+    /// FFN sub-layer time for `tokens` tokens, seconds. Also the
+    /// FFN-side stage of the AF pipeline.
+    pub fn ffn_block_time(&self, ctx: &mut CostCtx, tokens: u64) -> f64 {
+        let plan = self.ffn_block_plan(tokens, ctx.rng);
+        self.price_ffn_plan(ctx, &plan)
+    }
+
+    /// LM head projection for rows that produce a token this iteration.
+    pub fn lm_head_time(&self, ctx: &mut CostCtx, rows: u64) -> f64 {
+        if rows == 0 {
+            return 0.0;
+        }
+        let m = &self.model;
+        let tp = self.par.tp.max(1);
+        ctx.price(&OpWorkload::Gemm {
+            m: rows,
+            n: (m.vocab_size / tp).max(1) as u64,
+            k: m.d_model as u64,
+        })
+    }
+
+    /// Full iteration time for a co-located / PD replica, seconds:
+    /// all layers (attention + FFN) + LM head + engine overheads.
+    pub fn iteration_time(&self, ctx: &mut CostCtx, shape: &BatchShape) -> f64 {
+        if shape.is_empty() {
+            return 0.0;
+        }
+        let tokens = shape.total_tokens() as u64;
+        // collect the whole iteration's ops up front so the predictor
+        // batches its queries
+        let attn_ops = self.attn_block_ops(shape);
+        let ffn_plan = self.ffn_block_plan(tokens, ctx.rng);
+        let mut all: Vec<OpWorkload> = attn_ops.clone();
+        all.extend(ffn_plan.common.iter().cloned());
+        all.extend(ffn_plan.per_rank.iter().flatten().cloned());
+        ctx.pred.prefetch(&all);
+
+        let attn: f64 = attn_ops.iter().map(|op| ctx.price(op)).sum();
+        let ffn = self.price_ffn_plan(ctx, &ffn_plan);
+        let per_layer = attn + ffn;
+        let layers = (self.model.n_layers / self.par.pp.max(1)).max(1) as f64;
+        // pp>1: stages run concurrently; per-iteration latency is one
+        // stage's layers (steady-state pipelining)
+        let compute = per_layer * layers + self.lm_head_time(ctx, shape.lm_head_rows as u64);
+        let o = &self.overhead;
+        o.sched_overhead_s + layers * o.launch_gap_s + o.op_scale * compute
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::predictor::OraclePredictor;
+
+    fn ctx_pieces() -> (OraclePredictor, Pcg64) {
+        (OraclePredictor::a800(), Pcg64::new(7))
+    }
+
+    fn price(model: ModelConfig, par: Parallelism, shape: &BatchShape) -> f64 {
+        let (mut pred, mut rng) = ctx_pieces();
+        let cm = CostModel {
+            overhead: OverheadConfig::zero(),
+            ..CostModel::new(model, par, LinkSpec::nvlink_a800())
+        };
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        cm.iteration_time(&mut ctx, shape)
+    }
+
+    fn decode_shape(n: usize, ctx_len: u32) -> BatchShape {
+        BatchShape {
+            prefill: vec![],
+            decode_ctx: vec![ctx_len; n],
+            lm_head_rows: n as u32,
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let s = BatchShape::default();
+        assert_eq!(price(ModelConfig::tiny(), Parallelism::default(), &s), 0.0);
+    }
+
+    #[test]
+    fn decode_iteration_scales_with_batch() {
+        let t1 = price(ModelConfig::qwen2_7b(), Parallelism::default(), &decode_shape(1, 512));
+        let t32 = price(ModelConfig::qwen2_7b(), Parallelism::default(), &decode_shape(32, 512));
+        assert!(t32 > t1);
+        // but far sublinear (batching amortizes weights)
+        assert!(t32 < 8.0 * t1, "t1={t1} t32={t32}");
+    }
+
+    #[test]
+    fn prefill_dominates_equal_token_decode() {
+        // 512 prefill tokens in one seq vs 1 decode token: prefill costs more
+        let p = BatchShape { prefill: vec![(512, 0)], decode_ctx: vec![], lm_head_rows: 1 };
+        let d = decode_shape(1, 512);
+        let tp = price(ModelConfig::qwen2_7b(), Parallelism::default(), &p);
+        let td = price(ModelConfig::qwen2_7b(), Parallelism::default(), &d);
+        assert!(tp > 5.0 * td, "prefill {tp} decode {td}");
+    }
+
+    #[test]
+    fn tp_reduces_iteration_time() {
+        let m = ModelConfig::qwen2_72b();
+        let s = BatchShape { prefill: vec![(2048, 0)], decode_ctx: vec![], lm_head_rows: 0 };
+        let t1 = price(m.clone(), Parallelism::default(), &s);
+        let t4 = price(m, Parallelism::tp(4), &s);
+        assert!(t4 < t1, "tp4 {t4} vs tp1 {t1}");
+    }
+
+    #[test]
+    fn moe_straggler_max_costs_more_than_mean() {
+        let model = ModelConfig::tiny_moe();
+        let (mut pred, mut rng) = ctx_pieces();
+        let mut cm = CostModel {
+            overhead: OverheadConfig::zero(),
+            moe_routing: RoutingPolicy::Skewed { alpha: 0.05 },
+            ..CostModel::new(model, Parallelism::new(1, 1, 4), LinkSpec::nvlink_a800())
+        };
+        let shape = decode_shape(64, 512);
+        let mut rng2 = Pcg64::new(7);
+        let mut pred2 = OraclePredictor::a800();
+        let t_max = cm.iteration_time(
+            &mut CostCtx { pred: &mut pred, rng: &mut rng, metrics: None },
+            &shape,
+        );
+        cm.straggler_max = false;
+        let t_mean = cm.iteration_time(
+            &mut CostCtx { pred: &mut pred2, rng: &mut rng2, metrics: None },
+            &shape,
+        );
+        assert!(t_max > t_mean, "max {t_max} vs mean {t_mean}");
+    }
+
+    #[test]
+    fn moe_costs_more_than_dense_equivalent() {
+        let dense = price(ModelConfig::tiny(), Parallelism::default(), &decode_shape(32, 256));
+        let moe = price(ModelConfig::tiny_moe(), Parallelism::default(), &decode_shape(32, 256));
+        assert!(moe > dense);
+    }
+
+    #[test]
+    fn overheads_are_additive() {
+        let model = ModelConfig::tiny();
+        let shape = decode_shape(4, 128);
+        let base = price(model.clone(), Parallelism::default(), &shape);
+        let (mut pred, mut rng) = ctx_pieces();
+        let cm = CostModel {
+            overhead: OverheadConfig { sched_overhead_s: 1e-3, launch_gap_s: 0.0, op_scale: 1.0 },
+            ..CostModel::new(model, Parallelism::default(), LinkSpec::nvlink_a800())
+        };
+        let t = cm.iteration_time(
+            &mut CostCtx { pred: &mut pred, rng: &mut rng, metrics: None },
+            &shape,
+        );
+        assert!((t - base - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_accumulate_op_time() {
+        let (mut pred, mut rng) = ctx_pieces();
+        let mut mc = MetricsCollector::default();
+        let cm = CostModel::new(
+            ModelConfig::tiny(),
+            Parallelism::default(),
+            LinkSpec::nvlink_a800(),
+        );
+        let shape = decode_shape(8, 128);
+        cm.iteration_time(
+            &mut CostCtx { pred: &mut pred, rng: &mut rng, metrics: Some(&mut mc) },
+            &shape,
+        );
+        assert!(mc.op_time.contains_key("gemm"));
+        assert!(mc.op_time.contains_key("attn_decode"));
+    }
+
+    #[test]
+    fn ffn_plan_structure() {
+        let cm = CostModel::new(
+            ModelConfig::tiny_moe(),
+            Parallelism::new(1, 1, 4),
+            LinkSpec::nvlink_a800(),
+        );
+        let mut rng = Pcg64::new(1);
+        let plan = cm.ffn_block_plan(128, &mut rng);
+        assert_eq!(plan.per_rank.len(), 4);
+        assert!(plan.per_rank.iter().all(|ops| ops.len() == 2));
+        // gate + 2 a2a for ep>1
+        assert!(plan.common.len() >= 3);
+        // dense has no rank groups
+        let cm_d = CostModel::new(
+            ModelConfig::tiny(),
+            Parallelism::default(),
+            LinkSpec::nvlink_a800(),
+        );
+        let plan_d = cm_d.ffn_block_plan(128, &mut rng);
+        assert!(plan_d.per_rank.is_empty());
+        assert_eq!(plan_d.common.len(), 2);
+    }
+}

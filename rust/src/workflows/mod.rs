@@ -1,0 +1,14 @@
+//! Workflow simulation: iteration cost decomposition and the
+//! disaggregation pipelines.
+//!
+//! * [`cost`] — decomposes one replica iteration (mixed
+//!   prefill/decode batch) into the operator micro-workflow and prices
+//!   it through an [`crate::predictor::ExecutionPredictor`], including
+//!   the MoE data-dependent sub-workflow of §3.3.
+//! * [`af`] — the AF-disaggregation event-dependency-graph executor
+//!   (micro-batched ping-pong pipeline).
+
+pub mod af;
+pub mod cost;
+
+pub use cost::{BatchShape, CostCtx, CostModel};

@@ -1,0 +1,259 @@
+//! Workload generation: arrival processes and length distributions.
+//!
+//! Covers the paper's evaluation workloads (Table 2's fixed
+//! batch/in/out grids) plus the dynamic mixes used for Fig. 2-style
+//! operator studies: Poisson/gamma arrivals and
+//! fixed/uniform/lognormal/zipf-skew length distributions. A generated
+//! trace is just `Vec<RequestSpec>`, so real traces can be loaded from
+//! JSON with the same downstream path.
+
+use crate::core::{Pcg64, SimTime};
+
+/// One request to serve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestSpec {
+    pub arrival: SimTime,
+    pub input_len: u32,
+    pub output_len: u32,
+}
+
+/// Arrival process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arrival {
+    /// All requests present at t=0 (throughput / closed-batch runs).
+    Batch,
+    /// Poisson with `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Gamma inter-arrivals (burstiness via cv != 1).
+    Gamma { rate: f64, cv: f64 },
+    /// Fixed inter-arrival interval.
+    Uniform { rate: f64 },
+}
+
+/// Length distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LenDist {
+    Fixed(u32),
+    Uniform { lo: u32, hi: u32 },
+    /// Lognormal targeting the given mean with shape sigma.
+    LogNormal { mean: f64, sigma: f64 },
+    /// Mostly-short with a heavy tail: `frac_long` of requests are
+    /// uniform in `[long_lo, long_hi]`, the rest in `[lo, hi]`.
+    ZipfMix { lo: u32, hi: u32, long_lo: u32, long_hi: u32, frac_long: f64 },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Pcg64) -> u32 {
+        match *self {
+            LenDist::Fixed(v) => v,
+            LenDist::Uniform { lo, hi } => rng.gen_range(lo as u64, hi as u64 + 1) as u32,
+            LenDist::LogNormal { mean, sigma } => {
+                // E[lognormal(mu, sigma)] = exp(mu + sigma^2/2)
+                let mu = mean.ln() - sigma * sigma / 2.0;
+                (rng.lognormal(mu, sigma).round() as u32).max(1)
+            }
+            LenDist::ZipfMix { lo, hi, long_lo, long_hi, frac_long } => {
+                if rng.next_f64() < frac_long {
+                    rng.gen_range(long_lo as u64, long_hi as u64 + 1) as u32
+                } else {
+                    rng.gen_range(lo as u64, hi as u64 + 1) as u32
+                }
+            }
+        }
+    }
+
+    /// Mean of the distribution (for rate-matching calculations).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LenDist::Fixed(v) => v as f64,
+            LenDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+            LenDist::LogNormal { mean, .. } => mean,
+            LenDist::ZipfMix { lo, hi, long_lo, long_hi, frac_long } => {
+                (1.0 - frac_long) * (lo + hi) as f64 / 2.0
+                    + frac_long * (long_lo + long_hi) as f64 / 2.0
+            }
+        }
+    }
+}
+
+/// Complete workload specification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub arrival: Arrival,
+    pub input: LenDist,
+    pub output: LenDist,
+    pub n_requests: u32,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Table-2 style: all requests at t=0, inputs uniform around the
+    /// target mean (the paper reports "Avg Input"), fixed outputs.
+    pub fn table2(n_requests: u32, avg_input: u32, output: u32) -> Self {
+        let lo = (avg_input / 2).max(1);
+        let hi = avg_input + avg_input / 2;
+        WorkloadSpec {
+            arrival: Arrival::Batch,
+            input: LenDist::Uniform { lo, hi },
+            output: LenDist::Fixed(output),
+            n_requests,
+            seed: 0xF05,
+        }
+    }
+
+    pub fn poisson(rate: f64, n_requests: u32, input: u32, output: u32) -> Self {
+        WorkloadSpec {
+            arrival: Arrival::Poisson { rate },
+            input: LenDist::LogNormal { mean: input as f64, sigma: 0.6 },
+            output: LenDist::LogNormal { mean: output as f64, sigma: 0.4 },
+            n_requests,
+            seed: 0xF05,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Materialize the trace.
+    pub fn generate(&self) -> Vec<RequestSpec> {
+        let mut rng = Pcg64::new(self.seed);
+        let mut t = 0.0f64;
+        (0..self.n_requests)
+            .map(|_| {
+                let arrival = match self.arrival {
+                    Arrival::Batch => SimTime::ZERO,
+                    Arrival::Poisson { rate } => {
+                        t += rng.exp(rate);
+                        SimTime::from_secs_f64(t)
+                    }
+                    Arrival::Gamma { rate, cv } => {
+                        let shape = 1.0 / (cv * cv);
+                        let scale = 1.0 / (rate * shape);
+                        t += rng.gamma(shape) * scale;
+                        SimTime::from_secs_f64(t)
+                    }
+                    Arrival::Uniform { rate } => {
+                        t += 1.0 / rate;
+                        SimTime::from_secs_f64(t)
+                    }
+                };
+                RequestSpec {
+                    arrival,
+                    input_len: self.input.sample(&mut rng).max(1),
+                    output_len: self.output.sample(&mut rng).max(1),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Serialize a trace to JSON (workload interchange with external tools).
+pub fn trace_to_json(trace: &[RequestSpec]) -> crate::config::json::Json {
+    use crate::config::json::Json;
+    Json::Arr(
+        trace
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("arrival_s", Json::Num(r.arrival.as_secs_f64())),
+                    ("input_len", Json::Num(r.input_len as f64)),
+                    ("output_len", Json::Num(r.output_len as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Load a trace from the JSON produced by [`trace_to_json`].
+pub fn trace_from_json(v: &crate::config::json::Json) -> anyhow::Result<Vec<RequestSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|r| {
+            Ok(RequestSpec {
+                arrival: SimTime::from_secs_f64(r.req("arrival_s")?.as_f64()?),
+                input_len: r.req("input_len")?.as_u64()? as u32,
+                output_len: r.req("output_len")?.as_u64()? as u32,
+            })
+        })
+        .collect()
+}
+
+/// Load a trace file (JSON array of `{arrival_s, input_len, output_len}`).
+pub fn trace_from_file(path: &std::path::Path) -> anyhow::Result<Vec<RequestSpec>> {
+    let text = std::fs::read_to_string(path)?;
+    trace_from_json(&crate::config::json::Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_arrivals_at_zero() {
+        let trace = WorkloadSpec::table2(16, 128, 64).generate();
+        assert_eq!(trace.len(), 16);
+        assert!(trace.iter().all(|r| r.arrival == SimTime::ZERO));
+        assert!(trace.iter().all(|r| r.output_len == 64));
+    }
+
+    #[test]
+    fn table2_input_mean_close_to_target() {
+        let trace = WorkloadSpec::table2(2000, 256, 1).generate();
+        let mean: f64 =
+            trace.iter().map(|r| r.input_len as f64).sum::<f64>() / trace.len() as f64;
+        assert!((mean - 256.0).abs() < 15.0, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_rate_matches() {
+        let spec = WorkloadSpec::poisson(10.0, 5000, 128, 64);
+        let trace = spec.generate();
+        let span = trace.last().unwrap().arrival.as_secs_f64();
+        let rate = trace.len() as f64 / span;
+        assert!((rate - 10.0).abs() < 0.8, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_are_sorted() {
+        let trace = WorkloadSpec::poisson(50.0, 1000, 64, 64).generate();
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = WorkloadSpec::poisson(5.0, 100, 64, 64).generate();
+        let b = WorkloadSpec::poisson(5.0, 100, 64, 64).generate();
+        assert_eq!(a, b);
+        let c = WorkloadSpec::poisson(5.0, 100, 64, 64).with_seed(9).generate();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn lognormal_mean_targets() {
+        let mut rng = Pcg64::new(5);
+        let d = LenDist::LogNormal { mean: 500.0, sigma: 0.6 };
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 500.0).abs() < 20.0, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_mix_has_heavy_tail() {
+        let mut rng = Pcg64::new(6);
+        let d = LenDist::ZipfMix { lo: 16, hi: 256, long_lo: 8192, long_hi: 16384, frac_long: 0.05 };
+        let xs: Vec<u32> = (0..10_000).map(|_| d.sample(&mut rng)).collect();
+        let long = xs.iter().filter(|&&x| x >= 8192).count() as f64 / xs.len() as f64;
+        assert!((long - 0.05).abs() < 0.01, "frac_long={long}");
+    }
+
+    #[test]
+    fn trace_json_round_trip() {
+        let trace = WorkloadSpec::poisson(5.0, 50, 64, 64).generate();
+        let j = trace_to_json(&trace);
+        let back = trace_from_json(&j).unwrap();
+        assert_eq!(trace.len(), back.len());
+        assert_eq!(trace[7].input_len, back[7].input_len);
+    }
+}

@@ -1,0 +1,129 @@
+//! Golden-vector parity: the Rust oracle and feature extractor must
+//! match the Python implementations that trained the predictors.
+//!
+//! `make artifacts` writes `artifacts/oracle_golden.json` from the
+//! Python side; these tests replay every case through the Rust mirror.
+//! Skipped (cleanly) when artifacts are absent.
+
+use frontier::config::json::Json;
+use frontier::hardware::{GpuSpec, LinkSpec};
+use frontier::operators::features;
+use frontier::oracle;
+
+const REL_TOL: f64 = 1e-9;
+
+fn golden() -> Option<Json> {
+    let path = frontier::runtime::PredictorRuntime::default_dir().join("oracle_golden.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("golden parses"))
+}
+
+fn assert_close(got: f64, want: f64, what: &str) {
+    let denom = want.abs().max(1e-12);
+    let rel = (got - want).abs() / denom;
+    assert!(rel < REL_TOL, "{what}: got {got}, want {want} (rel {rel:.2e})");
+}
+
+#[test]
+fn attn_times_and_features_match_python() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let gpu = GpuSpec::a800();
+    let cases = g.req("attn").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 50);
+    for (i, c) in cases.iter().enumerate() {
+        let q: Vec<u32> = c.req("q_lens").unwrap().as_u32_vec().unwrap();
+        let ctx: Vec<u32> = c.req("ctx_lens").unwrap().as_u32_vec().unwrap();
+        let h = c.req("n_heads").unwrap().as_u64().unwrap() as u32;
+        let hkv = c.req("n_kv_heads").unwrap().as_u64().unwrap() as u32;
+        let d = c.req("head_dim").unwrap().as_u64().unwrap() as u32;
+        let is_prefill = c.req("is_prefill").unwrap().as_bool().unwrap();
+        let want_us = c.req("time_us").unwrap().as_f64().unwrap();
+        let got = if is_prefill {
+            oracle::attn_prefill_time(&q, &ctx, h, hkv, d, 2, &gpu)
+        } else {
+            oracle::attn_decode_time(&ctx, h, hkv, d, 2, &gpu)
+        };
+        assert_close(got * 1e6, want_us, &format!("attn[{i}] time"));
+        let want_f = c.req("features").unwrap().as_f64_vec().unwrap();
+        let got_f = features::attn_features(is_prefill, &q, &ctx, h, hkv, d, &gpu);
+        assert_eq!(got_f.len(), want_f.len(), "attn[{i}] feature count");
+        for (j, (a, b)) in got_f.iter().zip(&want_f).enumerate() {
+            assert_close(*a, *b, &format!("attn[{i}] feature {j}"));
+        }
+    }
+}
+
+#[test]
+fn grouped_gemm_matches_python() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let gpu = GpuSpec::a800();
+    for (i, c) in g.req("grouped_gemm").unwrap().as_arr().unwrap().iter().enumerate() {
+        let loads = c.req("tokens_per_expert").unwrap().as_u32_vec().unwrap();
+        let n = c.req("n").unwrap().as_u64().unwrap();
+        let k = c.req("k").unwrap().as_u64().unwrap();
+        let want_us = c.req("time_us").unwrap().as_f64().unwrap();
+        let got = oracle::grouped_gemm_time(&loads, n, k, 2, &gpu);
+        assert_close(got * 1e6, want_us, &format!("gg[{i}] time"));
+        let want_f = c.req("features").unwrap().as_f64_vec().unwrap();
+        let got_f = features::grouped_gemm_features(&loads, n, k, &gpu);
+        for (j, (a, b)) in got_f.iter().zip(&want_f).enumerate() {
+            assert_close(*a, *b, &format!("gg[{i}] feature {j}"));
+        }
+    }
+}
+
+#[test]
+fn gemm_matches_python() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let gpu = GpuSpec::a800();
+    for (i, c) in g.req("gemm").unwrap().as_arr().unwrap().iter().enumerate() {
+        let m = c.req("m").unwrap().as_u64().unwrap();
+        let n = c.req("n").unwrap().as_u64().unwrap();
+        let k = c.req("k").unwrap().as_u64().unwrap();
+        let want_us = c.req("time_us").unwrap().as_f64().unwrap();
+        let got = oracle::gemm_time(m, n, k, 2, &gpu);
+        assert_close(got * 1e6, want_us, &format!("gemm[{i}] m={m} n={n} k={k}"));
+        let want_f = c.req("features").unwrap().as_f64_vec().unwrap();
+        let got_f = features::gemm_features(m, n, k, &gpu);
+        for (j, (a, b)) in got_f.iter().zip(&want_f).enumerate() {
+            assert_close(*a, *b, &format!("gemm[{i}] feature {j}"));
+        }
+    }
+}
+
+#[test]
+fn collectives_match_python() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let link = LinkSpec::nvlink_a800();
+    for (i, c) in g.req("collective").unwrap().as_arr().unwrap().iter().enumerate() {
+        let bytes = c.req("bytes").unwrap().as_f64().unwrap();
+        let n = c.req("n_ranks").unwrap().as_u64().unwrap() as u32;
+        assert_close(
+            oracle::allreduce_time(bytes, n, &link) * 1e6,
+            c.req("allreduce_us").unwrap().as_f64().unwrap(),
+            &format!("allreduce[{i}]"),
+        );
+        assert_close(
+            oracle::all2all_time(bytes, n, &link) * 1e6,
+            c.req("all2all_us").unwrap().as_f64().unwrap(),
+            &format!("all2all[{i}]"),
+        );
+        assert_close(
+            oracle::p2p_time(bytes, &link) * 1e6,
+            c.req("p2p_us").unwrap().as_f64().unwrap(),
+            &format!("p2p[{i}]"),
+        );
+    }
+}

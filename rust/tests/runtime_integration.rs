@@ -1,0 +1,158 @@
+//! PJRT runtime integration: the AOT predictor artifacts must load,
+//! agree with the Python-side golden predictions, and track the oracle.
+//!
+//! These tests exercise the whole L1->L2->L3 chain: Pallas kernels
+//! lowered through JAX to HLO text, compiled by the Rust PJRT client,
+//! queried by the learned predictor with Rust-extracted features.
+
+use frontier::config::json::Json;
+use frontier::operators::OpWorkload;
+use frontier::predictor::{ExecutionPredictor, LearnedPredictor, OraclePredictor};
+use frontier::runtime::PredictorRuntime;
+
+fn artifacts_ready() -> bool {
+    PredictorRuntime::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn artifacts_load_and_match_python_golden() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = PredictorRuntime::default_dir();
+    let rt = PredictorRuntime::load(&dir).expect("artifacts load");
+    assert_eq!(rt.attn.n_features, 16);
+    assert_eq!(rt.grouped_gemm.n_features, 12);
+    assert_eq!(rt.gemm.n_features, 6);
+    let golden =
+        Json::parse(&std::fs::read_to_string(dir.join("predictor_golden.json")).unwrap())
+            .unwrap();
+    for (name, exe) in
+        [("attn", &rt.attn), ("grouped_gemm", &rt.grouped_gemm), ("gemm", &rt.gemm)]
+    {
+        let g = golden.req(name).unwrap();
+        let feats: Vec<Vec<f64>> = g
+            .req("features")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.as_f64_vec().unwrap())
+            .collect();
+        let want = g.req("pred_us").unwrap().as_f64_vec().unwrap();
+        let got = exe.predict_us(&feats).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            let rel = (a - b).abs() / b.max(1e-9);
+            assert!(rel < 1e-3, "{name}[{i}]: rust {a} vs python {b} (rel {rel:.2e})");
+        }
+    }
+}
+
+#[test]
+fn learned_predictor_tracks_oracle() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut learned = LearnedPredictor::load(&PredictorRuntime::default_dir()).unwrap();
+    let mut truth = OraclePredictor::a800();
+    // representative in-distribution workloads
+    let ops = vec![
+        OpWorkload::Gemm { m: 512, n: 4096, k: 4096 },
+        OpWorkload::Gemm { m: 17, n: 18944, k: 3584 },
+        OpWorkload::Attention {
+            is_prefill: false,
+            q_lens: vec![1; 48],
+            ctx_lens: (0..48).map(|i| 200 + i * 317).collect(),
+            n_heads: 28,
+            n_kv_heads: 4,
+            head_dim: 128,
+        },
+        OpWorkload::Attention {
+            is_prefill: true,
+            q_lens: vec![512, 128, 2048, 64],
+            ctx_lens: vec![0, 0, 0, 0],
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+        },
+        OpWorkload::GroupedGemm {
+            tokens_per_expert: vec![11, 250, 3, 99, 512, 0, 47, 70],
+            n: 4096,
+            k: 2048,
+        },
+    ];
+    for op in &ops {
+        let p = learned.predict(op);
+        let t = truth.predict(op);
+        let rel = (p - t).abs() / t;
+        assert!(
+            rel < 0.25,
+            "{}: learned {p:.3e}s vs oracle {t:.3e}s (rel {rel:.3})",
+            op.class()
+        );
+    }
+}
+
+#[test]
+fn learned_predictor_caches_repeated_queries() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut learned = LearnedPredictor::load(&PredictorRuntime::default_dir()).unwrap();
+    let op = OpWorkload::Gemm { m: 64, n: 1024, k: 1024 };
+    let a = learned.predict(&op);
+    let evals_after_first = learned.evals();
+    for _ in 0..10 {
+        assert_eq!(learned.predict(&op), a);
+    }
+    assert_eq!(learned.evals(), evals_after_first, "repeats must hit the cache");
+    let (hits, _) = learned.cache_stats();
+    assert_eq!(hits, 10);
+}
+
+#[test]
+fn learned_predictor_comm_ops_use_alpha_beta() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut learned = LearnedPredictor::load(&PredictorRuntime::default_dir()).unwrap();
+    let mut truth = OraclePredictor::a800();
+    let op = OpWorkload::AllReduce { bytes: 3.2e8, n_ranks: 8 };
+    assert_eq!(learned.predict(&op), truth.predict(&op));
+}
+
+#[test]
+fn full_simulation_with_learned_predictor() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use frontier::config::ExperimentConfig;
+    use frontier::model::ModelConfig;
+    use frontier::predictor::PredictorKind;
+    use frontier::workload::WorkloadSpec;
+
+    let cfg = ExperimentConfig::pd(ModelConfig::qwen2_7b(), 1, 1)
+        .with_workload(WorkloadSpec::table2(12, 64, 16))
+        .with_predictor(PredictorKind::Learned);
+    let report = frontier::run_experiment(&cfg).expect("learned-predictor sim");
+    assert_eq!(report.metrics.completed_requests, 12);
+    assert_eq!(report.predictor, "learned");
+
+    // oracle-driven run of the same config must land close (the fidelity
+    // claim at system level)
+    let cfg2 = cfg.with_predictor(PredictorKind::Oracle);
+    let truth = frontier::run_experiment(&cfg2).unwrap();
+    let rel = (report.sim_duration - truth.sim_duration).abs() / truth.sim_duration;
+    assert!(
+        rel < 0.15,
+        "e2e learned {} vs oracle {} (rel {rel:.3})",
+        report.sim_duration,
+        truth.sim_duration
+    );
+}
