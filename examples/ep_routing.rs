@@ -1,0 +1,154 @@
+//! Expert-parallel placement x routing-skew sweep (cross-cluster MoE).
+//!
+//! The paper's headline MoE scenario: an AF-disaggregated decode pool
+//! whose FFN/expert tier spans two clusters. Sweeps expert placement
+//! (contiguous, strided, replicated-hot) against routing skew
+//! (balanced -> heavily skewed) and reports end-to-end step economics:
+//! makespan, cross-cluster byte fraction, EP rank imbalance, and the
+//! dispatch bubbles the ping-pong pipeline could not hide.
+//!
+//! ```bash
+//! cargo run --release --example ep_routing
+//! ```
+
+use frontier::config::{ExperimentConfig, OverheadConfig};
+use frontier::hardware::LinkSpec;
+use frontier::model::ModelConfig;
+use frontier::moe::{
+    EpSpec, EpTopology, ExpertPlacement, PlacementPolicy, RoutingPolicy,
+};
+use frontier::report::markdown_table;
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+fn workload() -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: Arrival::Batch,
+        input: LenDist::Uniform { lo: 128, hi: 512 },
+        output: LenDist::Fixed(32),
+        n_requests: 32,
+        seed: 13,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelConfig::mixtral_8x7b();
+    let placements = [
+        PlacementPolicy::Contiguous,
+        PlacementPolicy::Strided,
+        PlacementPolicy::ReplicatedHot { hot: 2 },
+    ];
+    let routings = [
+        ("balanced", RoutingPolicy::Balanced),
+        ("uniform", RoutingPolicy::UniformRandom),
+        ("skewed a=0.1", RoutingPolicy::Skewed { alpha: 0.1 }),
+    ];
+
+    println!(
+        "== layer-level EP all-to-all: placement x skew ({}, EP=8 over 2 clusters) ==\n",
+        model.name
+    );
+    let moe = model.moe.clone().expect("moe model");
+    let bpt = model.d_model as f64 * model.dtype_bytes as f64;
+    let mut rows = Vec::new();
+    for placement in placements {
+        for (rname, routing) in routings {
+            let mut rng = frontier::core::Pcg64::new(17);
+            let loads =
+                frontier::moe::assign_tokens(routing, 256, moe.n_experts, moe.top_k, &mut rng);
+            let spec = EpSpec {
+                placement: ExpertPlacement::build(
+                    placement,
+                    moe.n_experts,
+                    EpTopology::new(8, 2),
+                    Some(&loads),
+                ),
+                intra: LinkSpec::nvlink_a800(),
+                cross: LinkSpec::cross_cluster(),
+            };
+            let disp = spec.a2a_time(&spec.placement.dispatch_matrix(&loads, bpt));
+            let imb = frontier::moe::rank_imbalance(&spec.placement.rank_totals(&loads));
+            rows.push(vec![
+                placement.name().to_string(),
+                rname.to_string(),
+                format!("{:.1}", disp.secs * 1e6),
+                format!("{:.1}%", disp.cross_bytes / disp.total_bytes * 100.0),
+                format!("{imb:.2}"),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["placement", "routing", "dispatch (us)", "cross bytes", "rank imbalance"],
+            &rows
+        )
+    );
+
+    println!("\n== end-to-end AF decode: placement x routing (2-cluster expert tier) ==\n");
+    let mut rows = Vec::new();
+    for placement in placements {
+        for (rname, routing) in routings {
+            let cfg = ExperimentConfig::af(model.clone(), 2, 4, 8, 2)
+                .with_parallelism(frontier::parallelism::Parallelism::tp(2))
+                .with_workload(workload())
+                .with_overhead(OverheadConfig::zero())
+                .with_ep_clusters(2, LinkSpec::cross_cluster())
+                .with_ep_placement(placement)
+                .with_moe_routing(routing);
+            let r = frontier::run_experiment(&cfg)?;
+            let m = &r.metrics;
+            rows.push(vec![
+                placement.name().to_string(),
+                rname.to_string(),
+                format!("{:.2}", r.sim_duration),
+                format!("{:.1}", r.tokens_per_sec_per_gpu()),
+                format!("{:.1}%", m.ep_cross_frac() * 100.0),
+                format!("{:.2}", m.ep_imbalance_mean()),
+                format!("{:.2}", m.dispatch_bubble_s),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                "placement",
+                "routing",
+                "makespan (s)",
+                "tok/s/gpu",
+                "cross bytes",
+                "imbalance",
+                "bubble (s)"
+            ],
+            &rows
+        )
+    );
+
+    println!("\n== cluster span: same deployment, EP domain in 1 vs 2 clusters ==\n");
+    let mut rows = Vec::new();
+    for clusters in [1u32, 2] {
+        let cfg = ExperimentConfig::af(model.clone(), 2, 4, 8, 2)
+            .with_parallelism(frontier::parallelism::Parallelism::tp(2))
+            .with_workload(workload())
+            .with_overhead(OverheadConfig::zero())
+            .with_ep_clusters(clusters, LinkSpec::cross_cluster());
+        let r = frontier::run_experiment(&cfg)?;
+        rows.push(vec![
+            clusters.to_string(),
+            format!("{:.2}", r.sim_duration),
+            format!("{:.1}%", r.metrics.ep_cross_frac() * 100.0),
+            format!("{:.2}", r.metrics.dispatch_bubble_s),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(&["clusters", "makespan (s)", "cross bytes", "bubble (s)"], &rows)
+    );
+    println!(
+        "\nCross-cluster EP pays the trunk on every dispatch/combine; skewed\n\
+         routing serializes on the hot expert's ingress NIC. Replicating the\n\
+         hottest experts onto each cluster trades memory for both effects —\n\
+         the placement axis the closed-form all-to-all cannot see."
+    );
+    Ok(())
+}

@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 
 use crate::hardware::{GpuSpec, LinkSpec};
 use crate::model::ModelConfig;
-use crate::moe::RoutingPolicy;
+use crate::moe::{PlacementPolicy, RoutingPolicy};
 use crate::parallelism::Parallelism;
 use crate::predictor::PredictorKind;
 use crate::scheduler::{BatchPolicy, IterBudget, RoutePolicy};
@@ -52,6 +52,8 @@ pub struct PolicyConfig {
     pub route: RoutePolicy,
     pub budget: IterBudget,
     pub moe_routing: RoutingPolicy,
+    /// How experts are placed on EP ranks (and clusters).
+    pub ep_placement: PlacementPolicy,
     /// Model MoE synchronization as `max` over expert tasks (the
     /// straggler effect). `false` = balance-oblivious `mean` (ablation).
     pub straggler_max: bool,
@@ -66,6 +68,7 @@ impl Default for PolicyConfig {
             route: RoutePolicy::LeastLoaded,
             budget: IterBudget::default(),
             moe_routing: RoutingPolicy::UniformRandom,
+            ep_placement: PlacementPolicy::Contiguous,
             straggler_max: true,
             kv_reserve_frac: 0.1,
         }
@@ -113,6 +116,11 @@ pub struct ExperimentConfig {
     pub gpu: GpuSpec,
     /// Intra-deployment interconnect (KV transfers, collectives).
     pub link: LinkSpec,
+    /// Cross-cluster trunk for EP dispatch/combine when the EP domain
+    /// spans clusters (`ep_clusters > 1`).
+    pub cross_link: LinkSpec,
+    /// How many hardware clusters the EP ranks span (1 = co-located).
+    pub ep_clusters: u32,
     pub mode: DeploymentMode,
     /// Per-replica parallelism (tp/pp; ep applies to MoE FFN ranks).
     pub parallel: Parallelism,
@@ -131,6 +139,8 @@ impl ExperimentConfig {
             model,
             gpu: GpuSpec::a800(),
             link: LinkSpec::nvlink_a800(),
+            cross_link: LinkSpec::cross_cluster(),
+            ep_clusters: 1,
             mode: DeploymentMode::Colocated { replicas },
             parallel: Parallelism::default(),
             workload: WorkloadSpec::table2(256, 128, 128),
@@ -191,6 +201,24 @@ impl ExperimentConfig {
         self
     }
 
+    /// Spread the EP domain across `clusters`, paying `cross_link` on
+    /// inter-cluster dispatch/combine hops.
+    pub fn with_ep_clusters(mut self, clusters: u32, cross_link: LinkSpec) -> Self {
+        self.ep_clusters = clusters;
+        self.cross_link = cross_link;
+        self
+    }
+
+    pub fn with_ep_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.policy.ep_placement = placement;
+        self
+    }
+
+    pub fn with_moe_routing(mut self, routing: RoutingPolicy) -> Self {
+        self.policy.moe_routing = routing;
+        self
+    }
+
     /// Total GPUs in the deployment (throughput normalization).
     pub fn n_gpus(&self) -> u32 {
         let per_replica = self.parallel.gpus_per_replica();
@@ -209,6 +237,9 @@ impl ExperimentConfig {
         self.parallel.validate()?;
         if self.workload.n_requests == 0 {
             bail!("empty workload");
+        }
+        if self.ep_clusters == 0 {
+            bail!("ep_clusters must be >= 1");
         }
         match self.mode {
             DeploymentMode::Colocated { replicas } if replicas == 0 => {
@@ -274,6 +305,21 @@ mod tests {
         assert!(ok.validate().is_ok());
         let bad = ExperimentConfig::colocated(m, 3)
             .with_parallelism(Parallelism::new(1, 1, 3));
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn ep_topology_knobs() {
+        let m = ModelConfig::mixtral_8x7b();
+        let cfg = ExperimentConfig::colocated(m, 4)
+            .with_parallelism(Parallelism::new(1, 1, 4))
+            .with_ep_clusters(2, LinkSpec::cross_cluster())
+            .with_ep_placement(PlacementPolicy::Strided);
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.ep_clusters, 2);
+        assert_eq!(cfg.policy.ep_placement, PlacementPolicy::Strided);
+        let mut bad = cfg;
+        bad.ep_clusters = 0;
         assert!(bad.validate().is_err());
     }
 

@@ -22,6 +22,7 @@ use crate::config::{DeploymentMode, ExperimentConfig};
 use crate::core::{EventQueue, Pcg64, SimTime};
 use crate::memory::{blocks_for_tokens, BlockManager};
 use crate::metrics::{MetricsCollector, ReqTimestamps, SimReport};
+use crate::moe::{self, EpSpec, EpTopology, ExpertPlacement};
 use crate::network::Fabric;
 use crate::predictor::{self, ExecutionPredictor};
 use crate::scheduler::{self, QueuedReq};
@@ -81,6 +82,8 @@ pub struct GlobalController {
     pending_transfers: VecDeque<u64>,
     cost: CostModel,
     af: Option<AfParams>,
+    /// Expert placement for the AF FFN pool (static per run; built once).
+    af_ep: Option<EpSpec>,
     /// Iteration start times per (cluster, replica) for busy accounting.
     iter_started: Vec<Vec<SimTime>>,
 }
@@ -152,10 +155,44 @@ impl GlobalController {
             }
             _ => None,
         };
+        // EP placement over `ranks` expert ranks spanning `ep_clusters`
+        // clusters. The replicated-hot policy targets the experts a
+        // deterministic warmup routing draw marks hottest — with the
+        // stable skewed-popularity model this is the run's actual hot
+        // set (see `moe::expert_popularity`).
+        let make_ep = |ranks: u32| -> Option<EpSpec> {
+            let moe = model.moe.as_ref()?;
+            if ranks <= 1 {
+                return None;
+            }
+            let mut warmup = Pcg64::new(cfg.seed ^ 0x9E37_79B9);
+            let hint = moe::assign_tokens(
+                cfg.policy.moe_routing,
+                4096,
+                moe.n_experts,
+                moe.top_k,
+                &mut warmup,
+            );
+            Some(EpSpec {
+                placement: ExpertPlacement::build(
+                    cfg.policy.ep_placement,
+                    moe.n_experts,
+                    EpTopology::new(ranks, cfg.ep_clusters),
+                    Some(&hint),
+                ),
+                intra: cfg.link,
+                cross: cfg.cross_link,
+            })
+        };
+        // AF mode: the FFN pool is the EP domain and the a2f/f2a hops
+        // become the EP dispatch/combine phases
+        let af_ep = af.and_then(|p| make_ep(p.ffn_gpus));
         let mut cost = CostModel::new(model.clone(), par, cfg.link);
         cost.moe_routing = cfg.policy.moe_routing;
         cost.straggler_max = cfg.policy.straggler_max;
         cost.overhead = cfg.overhead;
+        // co-located / PD: replica-level EP ranks
+        cost.ep = make_ep(par.ep);
         let iter_started = clusters
             .iter()
             .map(|c| vec![SimTime::ZERO; c.replicas.len()])
@@ -171,6 +208,7 @@ impl GlobalController {
             pending_transfers: VecDeque::new(),
             cost,
             af,
+            af_ep,
             iter_started,
             cfg,
         })
@@ -498,7 +536,10 @@ impl GlobalController {
     }
 
     /// AF decode step: partition the batch into micro-batches and run
-    /// the dependency-graph executor.
+    /// the dependency-graph executor. On the MoE path every
+    /// `(layer, micro)` cell is data-dependent: a fresh routing draw
+    /// sets the per-rank expert loads (stragglers) *and* the
+    /// dispatch/combine transfer times through the EP fabric.
     fn af_iteration_time(&mut self, shape: &BatchShape) -> f64 {
         let af = self.af.expect("af params");
         let m = (af.micro_batches as usize).max(1).min(shape.decode_ctx.len().max(1));
@@ -519,6 +560,9 @@ impl GlobalController {
         ffn_cost.overhead = crate::config::OverheadConfig::zero();
         ffn_cost.moe_routing = self.cost.moe_routing;
         ffn_cost.straggler_max = self.cost.straggler_max;
+        // EP domain of the AF FFN pool: placement built once at startup
+        ffn_cost.ep = self.af_ep.clone();
+        let ep_active = ffn_cost.ep.is_some();
 
         // round-robin partition of decode sequences
         let mut micro_ctx: Vec<Vec<u32>> = vec![Vec::new(); m];
@@ -529,16 +573,18 @@ impl GlobalController {
         let micro0_prefill = shape.prefill.clone();
 
         let layers = model.n_layers as usize;
+        let d_bytes = model.d_model as f64 * model.dtype_bytes as f64;
         let mut attn_time = vec![vec![0.0f64; m]; layers];
         let mut ffn_time = vec![vec![0.0f64; m]; layers];
-        let mut total_tokens_per_micro = vec![0u64; m];
+        let mut a2f_time = vec![vec![0.0f64; m]; layers];
+        let mut f2a_time = vec![vec![0.0f64; m]; layers];
         for (k, ctxs) in micro_ctx.iter().enumerate() {
             let micro_shape = BatchShape {
                 prefill: if k == 0 { micro0_prefill.clone() } else { vec![] },
                 decode_ctx: ctxs.clone(),
                 lm_head_rows: 0,
             };
-            total_tokens_per_micro[k] = micro_shape.total_tokens() as u64;
+            let micro_tokens = micro_shape.total_tokens() as u64;
             if micro_shape.is_empty() {
                 continue;
             }
@@ -550,25 +596,39 @@ impl GlobalController {
                 };
                 attn_cost.attn_block_time(&mut ctx, &micro_shape)
             };
+            // dense fallback: point-to-point hop sized by this micro-batch
+            let xfer = crate::oracle::p2p_time(micro_tokens as f64 * d_bytes, &self.cost.link);
             for l in 0..layers {
                 attn_time[l][k] = t_attn;
-            }
-            for l in 0..layers {
                 let mut ctx = CostCtx {
                     pred: self.pred.as_mut(),
                     rng: &mut self.rng,
                     metrics: Some(&mut self.metrics),
                 };
-                // fresh routing per layer: data-dependent straggler noise
-                ffn_time[l][k] = ffn_cost.ffn_block_time(&mut ctx, total_tokens_per_micro[k]);
+                if ep_active {
+                    // fresh routing per layer: data-dependent stragglers
+                    // and skew-dependent dispatch/combine
+                    let s = ffn_cost
+                        .moe_ffn_ep(&mut ctx, micro_tokens)
+                        .expect("ep spec attached and micro-batch non-empty");
+                    ffn_time[l][k] = s.ffn_secs;
+                    a2f_time[l][k] = s.dispatch_secs;
+                    f2a_time[l][k] = s.combine_secs;
+                } else {
+                    // fresh routing per layer: data-dependent straggler noise
+                    ffn_time[l][k] = ffn_cost.ffn_block_time(&mut ctx, micro_tokens);
+                    a2f_time[l][k] = xfer;
+                    f2a_time[l][k] = xfer;
+                }
             }
         }
-        let d_bytes = model.d_model as f64 * model.dtype_bytes as f64;
-        let max_micro_tokens =
-            total_tokens_per_micro.iter().copied().max().unwrap_or(0) as f64;
-        let xfer = crate::oracle::p2p_time(max_micro_tokens * d_bytes, &self.cost.link);
-        let step = AfStep { attn_time, ffn_time, a2f_time: xfer, f2a_time: xfer };
-        let (t_graph, _busy) = af_step(&step);
+        let step = AfStep { attn_time, ffn_time, a2f_time, f2a_time };
+        let (t_graph, busy) = af_step(&step);
+        if ep_active {
+            // FFN-pool idle time inside the step: dispatch bubbles the
+            // ping-pong pipeline failed to hide
+            self.metrics.dispatch_bubble_s += (t_graph - busy[1]).max(0.0);
+        }
         let lm_head = {
             let mut ctx = CostCtx {
                 pred: self.pred.as_mut(),

@@ -101,6 +101,12 @@ impl LinkSpec {
     pub fn pcie_gen4() -> Self {
         LinkSpec { bandwidth: 32e9, alpha: 15e-6 }
     }
+
+    /// Cross-cluster trunk (100 GbE class): what EP dispatch/combine
+    /// pays when the expert pool spans hardware clusters.
+    pub fn cross_cluster() -> Self {
+        LinkSpec { bandwidth: 12.5e9, alpha: 25e-6 }
+    }
 }
 
 /// Node: a set of identical GPUs joined by one intra-node link type.
@@ -154,5 +160,9 @@ mod tests {
     fn link_presets() {
         assert_eq!(LinkSpec::nvlink_a800().bandwidth, 400e9);
         assert!(LinkSpec::pcie_gen4().bandwidth < LinkSpec::nvlink_a800().bandwidth);
+        // the cross-cluster trunk is the slowest, highest-latency hop
+        let x = LinkSpec::cross_cluster();
+        assert!(x.bandwidth < LinkSpec::infiniband_ndr().bandwidth);
+        assert!(x.alpha > LinkSpec::nvlink_a800().alpha);
     }
 }

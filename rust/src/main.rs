@@ -27,6 +27,10 @@ OPTIONS (simulate / sweep-pd / baseline):
   --attn-gpus <N> --ffn-gpus <N>   AF pool sizes (default 4/4)
   --micro-batches <M>              AF micro-batches (default 2)
   --tp <N> --pp <N> --ep <N>       per-replica parallelism (default 1/1/1)
+  --routing <balanced|uniform|skewed:ALPHA>     MoE token routing (default uniform)
+  --ep-placement <contiguous|strided|replicated:K>  expert placement (default contiguous)
+  --ep-clusters <N>                EP ranks span N clusters (default 1)
+  --cross-bw <GBps>                cross-cluster trunk bandwidth (default 12.5)
   --predictor <oracle|learned|vidur|roofline>   (default oracle)
   --requests <N>                   workload size (default 256)
   --input <N> --output <N>         token lengths (default 128/128)
@@ -130,6 +134,20 @@ fn build_config(a: &Args) -> Result<ExperimentConfig> {
         ),
         None => WorkloadSpec::table2(requests, input, output),
     };
+    if let Some(r) = a.get("routing") {
+        cfg.policy.moe_routing = frontier::moe::RoutingPolicy::parse(r)
+            .ok_or_else(|| anyhow!("unknown routing {r:?} (balanced|uniform|skewed:ALPHA)"))?;
+    }
+    if let Some(p) = a.get("ep-placement") {
+        cfg.policy.ep_placement = frontier::moe::PlacementPolicy::parse(p).ok_or_else(|| {
+            anyhow!("unknown placement {p:?} (contiguous|strided|replicated:K)")
+        })?;
+    }
+    cfg.ep_clusters = a.num("ep-clusters", 1u32)?;
+    if let Some(bw) = a.get("cross-bw") {
+        let gbps: f64 = bw.parse().map_err(|_| anyhow!("bad value for --cross-bw: {bw:?}"))?;
+        cfg.cross_link.bandwidth = gbps * 1e9;
+    }
     if let Some(p) = a.get("predictor") {
         cfg.predictor =
             PredictorKind::parse(p).ok_or_else(|| anyhow!("unknown predictor {p:?}"))?;

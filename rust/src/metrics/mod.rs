@@ -28,11 +28,51 @@ pub struct MetricsCollector {
     pub predictor_evals: u64,
     /// Per-operator-class total simulated seconds.
     pub op_time: BTreeMap<&'static str, f64>,
+    /// EP dispatch + combine byte volume routed through the fabric
+    /// (including rank-local bytes that never hit the network).
+    pub ep_bytes: f64,
+    /// EP bytes that crossed a cluster boundary.
+    pub ep_cross_bytes: f64,
+    /// Running sum of per-routing-draw EP rank-load imbalance (max/mean)
+    /// over `ep_draws` draws — O(1) accounting, draws number in the
+    /// millions on long MoE runs.
+    pub ep_imbalance_sum: f64,
+    /// Number of EP routing draws accounted.
+    pub ep_draws: u64,
+    /// AF decode: FFN-pool idle seconds inside steps — dispatch bubbles
+    /// the ping-pong pipeline failed to hide.
+    pub dispatch_bubble_s: f64,
 }
 
 impl MetricsCollector {
     pub fn record_op(&mut self, class: &'static str, secs: f64) {
         *self.op_time.entry(class).or_insert(0.0) += secs;
+    }
+
+    /// Account one EP dispatch/combine draw.
+    pub fn record_ep(&mut self, bytes: f64, cross_bytes: f64, imbalance: f64) {
+        self.ep_bytes += bytes;
+        self.ep_cross_bytes += cross_bytes;
+        self.ep_imbalance_sum += imbalance;
+        self.ep_draws += 1;
+    }
+
+    /// Mean EP rank-load imbalance across routing draws.
+    pub fn ep_imbalance_mean(&self) -> f64 {
+        if self.ep_draws > 0 {
+            self.ep_imbalance_sum / self.ep_draws as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of EP bytes that crossed a cluster boundary.
+    pub fn ep_cross_frac(&self) -> f64 {
+        if self.ep_bytes > 0.0 {
+            self.ep_cross_bytes / self.ep_bytes
+        } else {
+            0.0
+        }
     }
 }
 
@@ -141,7 +181,7 @@ impl SimReport {
 
     pub fn summary(&self) -> String {
         let m = &self.metrics;
-        format!(
+        let mut s = format!(
             "[{} | {}] {:.1}s simulated in {:.2}s host ({:.0}x, {:.0} ev/s)\n\
              requests: {} done, {} rejected | tokens: {} out, {} prefill\n\
              throughput: {:.1} tok/s ({:.2} tok/s/gpu on {} gpus), {:.2} req/s\n\
@@ -169,7 +209,18 @@ impl SimReport {
             m.iterations,
             m.kv_transfers,
             m.kv_bytes / 1e6,
-        )
+        );
+        if m.ep_bytes > 0.0 {
+            s.push_str(&format!(
+                "\nEP: {:.1} MB dispatched+combined ({:.1}% cross-cluster) | \
+                 rank imbalance mean {:.2} | dispatch bubble {:.3} s",
+                m.ep_bytes / 1e6,
+                m.ep_cross_frac() * 100.0,
+                m.ep_imbalance_mean(),
+                m.dispatch_bubble_s,
+            ));
+        }
+        s
     }
 
     pub fn to_json(&self) -> Json {
@@ -192,6 +243,10 @@ impl SimReport {
             ("e2e_p50_s", Json::Num(percentile(&m.e2e, 50.0))),
             ("iterations", Json::Num(m.iterations as f64)),
             ("kv_transfers", Json::Num(m.kv_transfers as f64)),
+            ("ep_bytes", Json::Num(m.ep_bytes)),
+            ("ep_cross_frac", Json::Num(m.ep_cross_frac())),
+            ("ep_imbalance_mean", Json::Num(m.ep_imbalance_mean())),
+            ("dispatch_bubble_s", Json::Num(m.dispatch_bubble_s)),
         ])
     }
 }
@@ -263,6 +318,19 @@ mod tests {
         let front = pareto_frontier(&pts);
         let labels: Vec<&str> = front.iter().map(|p| p.2.as_str()).collect();
         assert_eq!(labels, vec!["a", "b", "d"]);
+    }
+
+    #[test]
+    fn ep_accounting() {
+        let mut m = MetricsCollector::default();
+        assert_eq!(m.ep_cross_frac(), 0.0);
+        assert_eq!(m.ep_imbalance_mean(), 0.0);
+        m.record_ep(100.0, 25.0, 1.5);
+        m.record_ep(100.0, 25.0, 2.5);
+        assert_eq!(m.ep_bytes, 200.0);
+        assert!((m.ep_cross_frac() - 0.25).abs() < 1e-12);
+        assert_eq!(m.ep_draws, 2);
+        assert!((m.ep_imbalance_mean() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! This module provides the pluggable routing policies that generate the
 //! token-to-expert assignment map, plus load-balance metrics.
 
+pub mod placement;
+
+pub use placement::{
+    rank_imbalance, A2aPhase, EpNetwork, EpSpec, EpTopology, ExpertPlacement, PlacementPolicy,
+};
+
 use crate::core::Pcg64;
 
 /// How tokens pick experts — the pluggable routing module of §3.3.
@@ -33,6 +39,17 @@ impl RoutingPolicy {
     }
 }
 
+/// Stable expert-popularity weights for [`RoutingPolicy::Skewed`]:
+/// drawn from a dedicated deterministic stream keyed on `(alpha, n)`,
+/// so the *same* experts stay hot across layers, steps, and runs — the
+/// semi-stable popularity real MoE serving exhibits, and the property
+/// hot-expert replication placement relies on. Token sampling still
+/// flows through the caller's rng.
+pub fn expert_popularity(alpha: f64, n_experts: u32) -> Vec<f64> {
+    let mut wrng = Pcg64::new(0xE5_9EED ^ alpha.to_bits() ^ ((n_experts as u64) << 40));
+    wrng.dirichlet_sym(alpha, n_experts as usize)
+}
+
 /// Generate the token-to-expert assignment map: per-expert token counts
 /// for `tokens` tokens each selecting `top_k` distinct experts.
 pub fn assign_tokens(
@@ -56,7 +73,7 @@ pub fn assign_tokens(
         }
         RoutingPolicy::UniformRandom | RoutingPolicy::Skewed { .. } => {
             let weights: Vec<f64> = match policy {
-                RoutingPolicy::Skewed { alpha } => rng.dirichlet_sym(alpha, e),
+                RoutingPolicy::Skewed { alpha } => expert_popularity(alpha, n_experts),
                 _ => vec![1.0 / e as f64; e],
             };
             let mut w = weights.clone();
@@ -155,6 +172,30 @@ mod tests {
             Some(RoutingPolicy::Skewed { alpha: 0.25 })
         );
         assert_eq!(RoutingPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn skewed_popularity_is_stable() {
+        // hot experts persist across draws (and rng streams): the
+        // argmax of the loads matches the stable popularity argmax
+        let w = expert_popularity(0.05, 16);
+        assert_eq!(w.len(), 16);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let w_max = w.iter().cloned().fold(0.0, f64::max);
+        for seed in [1u64, 2, 3] {
+            let mut rng = Pcg64::new(seed);
+            let loads =
+                assign_tokens(RoutingPolicy::Skewed { alpha: 0.05 }, 4096, 16, 2, &mut rng);
+            let loads_hot =
+                loads.iter().enumerate().max_by_key(|&(_, &l)| l).unwrap().0;
+            // the busiest expert must be one of the stably-popular ones
+            // (tie-tolerant: within 2x of the top weight)
+            assert!(
+                w[loads_hot] >= 0.5 * w_max,
+                "seed {seed}: expert {loads_hot} won with weight {} vs max {w_max}",
+                w[loads_hot]
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,589 @@
+//! Expert-parallel placement and cross-cluster routing traffic (§3.3).
+//!
+//! The paper's headline MoE claim is *cross-cluster expert routing*: the
+//! EP domain spans hardware clusters, so the dispatch/combine all-to-all
+//! pays heterogeneous link costs and contends on shared trunks. This
+//! module provides the three pieces the rest of the stack threads
+//! through:
+//!
+//! 1. **Placement** — [`ExpertPlacement`] maps experts to EP ranks and
+//!    ranks to clusters ([`EpTopology`]) under a [`PlacementPolicy`]:
+//!    contiguous blocks, strided (round-robin) assignment, or contiguous
+//!    with the hottest experts replicated onto every cluster
+//!    (MegaScale-Infer-style hot-expert replication).
+//! 2. **Traffic** — [`ExpertPlacement::dispatch_matrix`] converts a
+//!    routing assignment (per-expert token loads from
+//!    [`crate::moe::assign_tokens`]) into per-`(src, dst)`-rank byte
+//!    volumes, assuming tokens enter uniformly across EP ranks. The
+//!    combine phase is the transpose.
+//! 3. **Charging** — [`EpNetwork`] prices one all-to-all phase through
+//!    FIFO-contended [`crate::network::Link`]s: each rank has an egress
+//!    and an ingress NIC, each directed cluster pair a shared trunk
+//!    ([`crate::network::Fabric`]). A message occupies all the links on
+//!    its path simultaneously; skewed routing therefore serializes on
+//!    the hot expert's ingress NIC and cross-cluster hops on the trunk —
+//!    the contention the closed-form `oracle::all2all_time` cannot see.
+//!    In the uncontended, uniform, single-cluster case the charge
+//!    reduces *exactly* to the closed form (pinned by
+//!    `rust/tests/oracle_parity.rs`).
+//!
+//! [`EpSpec`] bundles a placement with the intra-/cross-cluster link
+//! specs and is what [`crate::workflows::CostModel`] carries on the MoE
+//! pricing path.
+
+use crate::core::SimTime;
+use crate::hardware::LinkSpec;
+use crate::network::{Fabric, Link};
+
+/// How experts are assigned to EP ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Contiguous blocks: rank r hosts experts `[r*E/N, (r+1)*E/N)`.
+    Contiguous,
+    /// Strided round-robin: expert e lives on rank `e % N`.
+    Strided,
+    /// Contiguous base plus the `hot` highest-load experts replicated
+    /// onto one rank of every cluster; sources route hot-expert traffic
+    /// to their own cluster's replica, trading memory for cross-cluster
+    /// bytes and rank balance.
+    ReplicatedHot { hot: u32 },
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "contiguous" => Some(Self::Contiguous),
+            "strided" => Some(Self::Strided),
+            "replicated" => Some(Self::ReplicatedHot { hot: 1 }),
+            _ => s.strip_prefix("replicated:").and_then(|k| {
+                k.parse::<u32>().ok().map(|hot| Self::ReplicatedHot { hot })
+            }),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Contiguous => "contiguous",
+            PlacementPolicy::Strided => "strided",
+            PlacementPolicy::ReplicatedHot { .. } => "replicated-hot",
+        }
+    }
+}
+
+/// EP ranks grouped into hardware clusters (contiguous rank blocks; the
+/// first `n_ranks % n_clusters` clusters take one extra rank).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EpTopology {
+    pub n_ranks: u32,
+    pub n_clusters: u32,
+}
+
+impl EpTopology {
+    pub fn new(n_ranks: u32, n_clusters: u32) -> Self {
+        let n_ranks = n_ranks.max(1);
+        EpTopology { n_ranks, n_clusters: n_clusters.clamp(1, n_ranks) }
+    }
+
+    /// Half-open rank range `[start, end)` of cluster `c`.
+    pub fn cluster_ranks(&self, c: u32) -> (u32, u32) {
+        let per = self.n_ranks / self.n_clusters;
+        let rem = self.n_ranks % self.n_clusters;
+        let start = c * per + c.min(rem);
+        (start, start + per + u32::from(c < rem))
+    }
+
+    pub fn cluster_of(&self, rank: u32) -> u32 {
+        for c in 0..self.n_clusters {
+            let (s, e) = self.cluster_ranks(c);
+            if rank >= s && rank < e {
+                return c;
+            }
+        }
+        self.n_clusters - 1
+    }
+
+    /// The `i`-th rank (mod cluster size) of cluster `c`.
+    pub fn rank_in_cluster(&self, c: u32, i: u32) -> u32 {
+        let (s, e) = self.cluster_ranks(c);
+        s + i % (e - s)
+    }
+}
+
+/// A concrete expert-to-rank assignment over an [`EpTopology`].
+#[derive(Clone, Debug)]
+pub struct ExpertPlacement {
+    pub topo: EpTopology,
+    /// `expert_ranks[e]` = ranks hosting expert `e` (length 1 unless the
+    /// expert is replicated; the home rank comes first).
+    pub expert_ranks: Vec<Vec<u32>>,
+}
+
+impl ExpertPlacement {
+    /// Build a placement. `loads_hint` (e.g. historical per-expert loads)
+    /// selects which experts [`PlacementPolicy::ReplicatedHot`]
+    /// replicates; without a hint the lowest-index experts are chosen.
+    pub fn build(
+        policy: PlacementPolicy,
+        n_experts: u32,
+        topo: EpTopology,
+        loads_hint: Option<&[u32]>,
+    ) -> Self {
+        let n = topo.n_ranks;
+        let home = |e: u32| -> u32 {
+            match policy {
+                PlacementPolicy::Strided => e % n,
+                // balanced contiguous blocks (first `rem` ranks take one
+                // extra expert when n does not divide n_experts)
+                _ => {
+                    let per = n_experts / n;
+                    let rem = n_experts % n;
+                    let cut = rem * (per + 1);
+                    if e < cut {
+                        e / (per + 1).max(1)
+                    } else {
+                        rem + (e - cut) / per.max(1)
+                    }
+                }
+            }
+        };
+        let mut expert_ranks: Vec<Vec<u32>> =
+            (0..n_experts).map(|e| vec![home(e).min(n - 1)]).collect();
+        if let PlacementPolicy::ReplicatedHot { hot } = policy {
+            let k = hot.min(n_experts) as usize;
+            let hot_experts: Vec<usize> = match loads_hint {
+                Some(loads) if loads.len() == n_experts as usize => {
+                    let mut idx: Vec<usize> = (0..loads.len()).collect();
+                    idx.sort_by(|&a, &b| loads[b].cmp(&loads[a]).then(a.cmp(&b)));
+                    idx.truncate(k);
+                    idx
+                }
+                _ => (0..k).collect(),
+            };
+            for (j, &e) in hot_experts.iter().enumerate() {
+                let home_cluster = topo.cluster_of(expert_ranks[e][0]);
+                for c in 0..topo.n_clusters {
+                    if c == home_cluster {
+                        continue;
+                    }
+                    let r = topo.rank_in_cluster(c, j as u32);
+                    if !expert_ranks[e].contains(&r) {
+                        expert_ranks[e].push(r);
+                    }
+                }
+            }
+        }
+        ExpertPlacement { topo, expert_ranks }
+    }
+
+    pub fn n_experts(&self) -> u32 {
+        self.expert_ranks.len() as u32
+    }
+
+    /// Which replica of expert `e` a token entering on rank `src` is
+    /// dispatched to: the replica in `src`'s own cluster when one
+    /// exists, else a deterministic spread over the replicas.
+    fn replica_index(&self, e: usize, src: u32) -> usize {
+        let hosts = &self.expert_ranks[e];
+        if hosts.len() == 1 {
+            return 0;
+        }
+        let sc = self.topo.cluster_of(src);
+        if let Some(i) = hosts.iter().position(|&h| self.topo.cluster_of(h) == sc) {
+            return i;
+        }
+        (src as usize + e) % hosts.len()
+    }
+
+    /// Per-rank token loads for the resident experts, splitting each
+    /// replicated expert's load across its replicas exactly as the
+    /// dispatch does (tokens uniform over source ranks, each routed to
+    /// its preferred replica; largest-remainder rounding keeps the total
+    /// token count exact).
+    pub fn rank_expert_loads(&self, loads: &[u32]) -> Vec<Vec<u32>> {
+        let n = self.topo.n_ranks as usize;
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (e, &load) in loads.iter().enumerate() {
+            let hosts = &self.expert_ranks[e];
+            if hosts.len() == 1 {
+                out[hosts[0] as usize].push(load);
+                continue;
+            }
+            // how many of the n source ranks prefer each replica
+            let mut srcs = vec![0u64; hosts.len()];
+            for s in 0..n {
+                srcs[self.replica_index(e, s as u32)] += 1;
+            }
+            // split `load` proportionally, largest remainder first
+            let load = load as u64;
+            let mut share: Vec<u64> = srcs.iter().map(|&c| load * c / n as u64).collect();
+            let mut order: Vec<usize> = (0..hosts.len()).collect();
+            order.sort_by_key(|&i| (std::cmp::Reverse((load * srcs[i]) % n as u64), i));
+            let deficit = load - share.iter().sum::<u64>();
+            for &i in order.iter().take(deficit as usize) {
+                share[i] += 1;
+            }
+            for (i, &h) in hosts.iter().enumerate() {
+                out[h as usize].push(share[i] as u32);
+            }
+        }
+        out
+    }
+
+    /// Total tokens computed per rank.
+    pub fn rank_totals(&self, loads: &[u32]) -> Vec<u64> {
+        self.rank_expert_loads(loads)
+            .iter()
+            .map(|per| per.iter().map(|&x| x as u64).sum())
+            .collect()
+    }
+
+    /// Dispatch byte volumes per `(src, dst)` rank pair (row-major
+    /// `n_ranks * n_ranks`), for `bytes_per_token` activation bytes per
+    /// routed token. Tokens enter uniformly across ranks, so source `s`
+    /// owes expert `e` exactly `loads[e] / n` tokens. The matrix total
+    /// (including the local diagonal) equals
+    /// `sum(loads) * bytes_per_token`.
+    pub fn dispatch_matrix(&self, loads: &[u32], bytes_per_token: f64) -> Vec<f64> {
+        let n = self.topo.n_ranks as usize;
+        let mut mat = vec![0.0f64; n * n];
+        for (e, &load) in loads.iter().enumerate() {
+            if load == 0 {
+                continue;
+            }
+            let per_src = load as f64 * bytes_per_token / n as f64;
+            for s in 0..n {
+                let d = self.expert_ranks[e][self.replica_index(e, s as u32)] as usize;
+                mat[s * n + d] += per_src;
+            }
+        }
+        mat
+    }
+
+    /// Transpose of a `(src, dst)` byte matrix over this placement's
+    /// ranks — the combine phase of a dispatch matrix already in hand.
+    pub fn transposed(&self, matrix: &[f64]) -> Vec<f64> {
+        let n = self.topo.n_ranks as usize;
+        let mut t = vec![0.0f64; n * n];
+        for s in 0..n {
+            for d in 0..n {
+                t[d * n + s] = matrix[s * n + d];
+            }
+        }
+        t
+    }
+
+    /// Combine byte volumes: the transpose of the dispatch (every routed
+    /// token's output travels the reverse path).
+    pub fn combine_matrix(&self, loads: &[u32], bytes_per_token: f64) -> Vec<f64> {
+        self.transposed(&self.dispatch_matrix(loads, bytes_per_token))
+    }
+}
+
+/// Max-over-mean rank load (1.0 = perfectly balanced, 0.0 = no load).
+pub fn rank_imbalance(totals: &[u64]) -> f64 {
+    if totals.is_empty() {
+        return 0.0;
+    }
+    let sum: u64 = totals.iter().sum();
+    if sum == 0 {
+        return 0.0;
+    }
+    let mean = sum as f64 / totals.len() as f64;
+    *totals.iter().max().unwrap() as f64 / mean
+}
+
+/// Outcome of charging one all-to-all phase through the fabric.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct A2aPhase {
+    /// Phase makespan, seconds.
+    pub secs: f64,
+    /// All bytes in the matrix (including rank-local, which is free).
+    pub total_bytes: f64,
+    /// Bytes that crossed a cluster boundary.
+    pub cross_bytes: f64,
+    /// Rank-local bytes (the diagonal; never touch the network).
+    pub local_bytes: f64,
+}
+
+/// The EP fabric: per-rank egress/ingress NICs (intra-cluster spec) and
+/// one FIFO trunk per directed cluster pair (cross-cluster spec).
+pub struct EpNetwork {
+    topo: EpTopology,
+    intra: LinkSpec,
+    cross: LinkSpec,
+    egress: Vec<Link>,
+    ingress: Vec<Link>,
+    trunks: Fabric,
+}
+
+impl EpNetwork {
+    pub fn new(topo: EpTopology, intra: LinkSpec, cross: LinkSpec) -> Self {
+        let n = topo.n_ranks as usize;
+        EpNetwork {
+            topo,
+            intra,
+            cross,
+            egress: (0..n).map(|_| Link::new(intra)).collect(),
+            ingress: (0..n).map(|_| Link::new(intra)).collect(),
+            trunks: Fabric::new(cross),
+        }
+    }
+
+    /// Charge one all-to-all phase described by a row-major `(src, dst)`
+    /// byte matrix, starting no earlier than `now`. Messages follow the
+    /// canonical rotation schedule (step p: rank s -> rank (s+p) mod n)
+    /// and each occupies its source NIC, destination NIC, and — when the
+    /// endpoints sit in different clusters — the directed inter-cluster
+    /// trunk, for `alpha + bytes / bottleneck_bw`. Returns the delivery
+    /// time of the last message and the phase accounting.
+    pub fn all_to_all(&mut self, now: SimTime, bytes: &[f64]) -> (SimTime, A2aPhase) {
+        let n = self.topo.n_ranks as usize;
+        assert_eq!(bytes.len(), n * n, "byte matrix must be n_ranks^2");
+        let mut phase = A2aPhase::default();
+        let mut finish = now;
+        for (i, &b) in bytes.iter().enumerate() {
+            phase.total_bytes += b;
+            if i / n == i % n {
+                phase.local_bytes += b;
+            }
+        }
+        for p in 1..n {
+            for s in 0..n {
+                let d = (s + p) % n;
+                let b = bytes[s * n + d];
+                if b <= 0.0 {
+                    continue;
+                }
+                let sc = self.topo.cluster_of(s as u32);
+                let dc = self.topo.cluster_of(d as u32);
+                let is_cross = sc != dc;
+                let mut start = self.egress[s]
+                    .earliest_start(now)
+                    .max(self.ingress[d].earliest_start(now));
+                let (alpha, bw) = if is_cross {
+                    start = start.max(self.trunks.link_mut(sc, dc).earliest_start(now));
+                    (self.intra.alpha + self.cross.alpha, self.intra.bandwidth.min(self.cross.bandwidth))
+                } else {
+                    (self.intra.alpha, self.intra.bandwidth)
+                };
+                let done = start + SimTime::from_secs_f64(alpha + b / bw);
+                self.egress[s].occupy(done, b);
+                self.ingress[d].occupy(done, b);
+                if is_cross {
+                    self.trunks.link_mut(sc, dc).occupy(done, b);
+                    phase.cross_bytes += b;
+                }
+                if done > finish {
+                    finish = done;
+                }
+            }
+        }
+        phase.secs = (finish - now).as_secs_f64();
+        (finish, phase)
+    }
+}
+
+/// Everything the cost model needs to price EP dispatch/combine: the
+/// placement plus the link specs of the fabric it rides on.
+#[derive(Clone, Debug)]
+pub struct EpSpec {
+    pub placement: ExpertPlacement,
+    /// Intra-cluster interconnect (rank NICs).
+    pub intra: LinkSpec,
+    /// Cross-cluster trunk.
+    pub cross: LinkSpec,
+}
+
+impl EpSpec {
+    pub fn n_ranks(&self) -> u32 {
+        self.placement.topo.n_ranks
+    }
+
+    /// Makespan and accounting of one all-to-all phase over a fresh
+    /// (uncontended) fabric. Cross-phase contention is modeled by the
+    /// pipeline executor serializing the transfer resources, so each
+    /// phase is priced from an idle network.
+    pub fn a2a_time(&self, matrix: &[f64]) -> A2aPhase {
+        let mut net = EpNetwork::new(self.placement.topo, self.intra, self.cross);
+        net.all_to_all(SimTime::ZERO, matrix).1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> LinkSpec {
+        LinkSpec { bandwidth: 100e9, alpha: 5e-6 }
+    }
+
+    fn slow() -> LinkSpec {
+        LinkSpec { bandwidth: 10e9, alpha: 30e-6 }
+    }
+
+    #[test]
+    fn topology_partitions_ranks() {
+        let t = EpTopology::new(10, 4);
+        let mut seen = Vec::new();
+        for c in 0..4 {
+            let (s, e) = t.cluster_ranks(c);
+            assert!(e > s);
+            for r in s..e {
+                assert_eq!(t.cluster_of(r), c);
+                seen.push(r);
+            }
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<u32>>());
+        // clamping
+        assert_eq!(EpTopology::new(2, 8).n_clusters, 2);
+        assert_eq!(EpTopology::new(0, 0).n_ranks, 1);
+    }
+
+    #[test]
+    fn placement_policies_parse() {
+        assert_eq!(PlacementPolicy::parse("contiguous"), Some(PlacementPolicy::Contiguous));
+        assert_eq!(PlacementPolicy::parse("strided"), Some(PlacementPolicy::Strided));
+        assert_eq!(
+            PlacementPolicy::parse("replicated:3"),
+            Some(PlacementPolicy::ReplicatedHot { hot: 3 })
+        );
+        assert_eq!(PlacementPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn contiguous_and_strided_are_partitions() {
+        for policy in [PlacementPolicy::Contiguous, PlacementPolicy::Strided] {
+            let p = ExpertPlacement::build(policy, 9, EpTopology::new(4, 2), None);
+            assert_eq!(p.expert_ranks.len(), 9);
+            let mut per_rank = vec![0u32; 4];
+            for hosts in &p.expert_ranks {
+                assert_eq!(hosts.len(), 1, "{policy:?}");
+                per_rank[hosts[0] as usize] += 1;
+            }
+            // balanced: no rank more than one expert above any other
+            assert!(per_rank.iter().max().unwrap() - per_rank.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn replicated_hot_spans_clusters() {
+        let loads = [5u32, 100, 1, 2, 3, 4, 6, 7];
+        let p = ExpertPlacement::build(
+            PlacementPolicy::ReplicatedHot { hot: 1 },
+            8,
+            EpTopology::new(4, 2),
+            Some(&loads),
+        );
+        // expert 1 is the hottest: one replica per cluster
+        assert_eq!(p.expert_ranks[1].len(), 2);
+        let clusters: Vec<u32> =
+            p.expert_ranks[1].iter().map(|&r| p.topo.cluster_of(r)).collect();
+        assert!(clusters.contains(&0) && clusters.contains(&1));
+        // everyone else stays single-homed
+        assert!(p.expert_ranks.iter().enumerate().all(|(e, h)| e == 1 || h.len() == 1));
+    }
+
+    #[test]
+    fn dispatch_conserves_bytes_and_loads() {
+        let topo = EpTopology::new(4, 2);
+        for policy in [
+            PlacementPolicy::Contiguous,
+            PlacementPolicy::Strided,
+            PlacementPolicy::ReplicatedHot { hot: 2 },
+        ] {
+            let loads = [40u32, 13, 0, 7, 21, 9, 5, 2];
+            let p = ExpertPlacement::build(policy, 8, topo, Some(&loads));
+            let bpt = 512.0;
+            let m = p.dispatch_matrix(&loads, bpt);
+            let total: f64 = m.iter().sum();
+            let want = loads.iter().map(|&x| x as f64).sum::<f64>() * bpt;
+            assert!((total - want).abs() < 1e-6 * want, "{policy:?}: {total} vs {want}");
+            // rank loads conserve tokens exactly
+            let totals = p.rank_totals(&loads);
+            assert_eq!(totals.iter().sum::<u64>(), loads.iter().map(|&x| x as u64).sum());
+            // combine is the transpose: same total
+            let c = p.combine_matrix(&loads, bpt);
+            assert!((c.iter().sum::<f64>() - want).abs() < 1e-6 * want);
+        }
+    }
+
+    #[test]
+    fn replication_cuts_cross_cluster_bytes() {
+        let topo = EpTopology::new(4, 2);
+        let mut loads = [1u32; 8];
+        loads[0] = 400; // expert 0 is hot and homed in cluster 0
+        let base = ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None);
+        let repl = ExpertPlacement::build(
+            PlacementPolicy::ReplicatedHot { hot: 1 },
+            8,
+            topo,
+            Some(&loads),
+        );
+        let spec = EpSpec { placement: base, intra: spec(), cross: slow() };
+        let spec_r = EpSpec { placement: repl, intra: spec.intra, cross: slow() };
+        let a = spec.a2a_time(&spec.placement.dispatch_matrix(&loads, 1024.0));
+        let b = spec_r.a2a_time(&spec_r.placement.dispatch_matrix(&loads, 1024.0));
+        assert!(b.cross_bytes < a.cross_bytes, "{} vs {}", b.cross_bytes, a.cross_bytes);
+    }
+
+    // NOTE: closed-form parity of the uncontended uniform all-to-all is
+    // covered (across rank counts and link specs) by
+    // `ep_fabric_all2all_reduces_to_closed_form_uncontended` in
+    // rust/tests/oracle_parity.rs.
+
+    #[test]
+    fn skewed_ingress_serializes() {
+        // all traffic to one rank: its ingress NIC is the bottleneck and
+        // the phase degenerates to a serial chain of n-1 large messages
+        let s = spec();
+        let n = 4usize;
+        let topo = EpTopology::new(n as u32, 1);
+        let uniform = {
+            let mut net = EpNetwork::new(topo, s, s);
+            let mat = vec![1e6; n * n];
+            net.all_to_all(SimTime::ZERO, &mat).0
+        };
+        let skewed = {
+            let mut net = EpNetwork::new(topo, s, s);
+            let mut mat = vec![0.0; n * n];
+            for src in 0..n {
+                mat[src * n + 2] = 1e6 * n as f64; // same total volume
+            }
+            net.all_to_all(SimTime::ZERO, &mat).0
+        };
+        assert!(skewed > uniform, "{skewed:?} vs {uniform:?}");
+    }
+
+    #[test]
+    fn cross_cluster_pays_the_trunk() {
+        let loads = [32u32; 8];
+        let one = ExpertPlacement::build(
+            PlacementPolicy::Contiguous,
+            8,
+            EpTopology::new(4, 1),
+            None,
+        );
+        let two = ExpertPlacement::build(
+            PlacementPolicy::Contiguous,
+            8,
+            EpTopology::new(4, 2),
+            None,
+        );
+        let e1 = EpSpec { placement: one, intra: spec(), cross: slow() };
+        let e2 = EpSpec { placement: two, intra: spec(), cross: slow() };
+        let bpt = 2048.0;
+        let t1 = e1.a2a_time(&e1.placement.dispatch_matrix(&loads, bpt));
+        let t2 = e2.a2a_time(&e2.placement.dispatch_matrix(&loads, bpt));
+        assert_eq!(t1.cross_bytes, 0.0);
+        assert!(t2.cross_bytes > 0.0);
+        assert!(t2.secs > t1.secs, "{} vs {}", t2.secs, t1.secs);
+    }
+
+    #[test]
+    fn rank_imbalance_metric() {
+        assert_eq!(rank_imbalance(&[]), 0.0);
+        assert_eq!(rank_imbalance(&[0, 0]), 0.0);
+        assert!((rank_imbalance(&[10, 10]) - 1.0).abs() < 1e-12);
+        assert!((rank_imbalance(&[30, 10]) - 1.5).abs() < 1e-12);
+    }
+}

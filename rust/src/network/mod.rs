@@ -49,6 +49,26 @@ impl Link {
             + SimTime::from_secs_f64(self.spec.alpha)
     }
 
+    /// Earliest time a new transfer could start if issued at `now`.
+    ///
+    /// Used by multi-resource transfers (the EP all-to-all, where one
+    /// message simultaneously holds its source NIC, destination NIC and —
+    /// when crossing clusters — the inter-cluster trunk): the caller
+    /// takes the max over every involved link, computes the completion
+    /// time once, and [`Link::occupy`]s them all.
+    pub fn earliest_start(&self, now: SimTime) -> SimTime {
+        now.max(self.busy_until)
+    }
+
+    /// Occupy the link until `until` and account `bytes` against it. The
+    /// companion of [`Link::earliest_start`] for transfers whose duration
+    /// is decided outside the link (bottleneck of several resources).
+    pub fn occupy(&mut self, until: SimTime, bytes: f64) {
+        self.busy_until = self.busy_until.max(until);
+        self.bytes_carried += bytes;
+        self.transfers += 1;
+    }
+
     pub fn busy_until(&self) -> SimTime {
         self.busy_until
     }
@@ -127,6 +147,27 @@ mod tests {
         let t0 = SimTime::from_secs_f64(10.0);
         let done = l.transfer(t0, 1e9);
         assert_eq!(done, SimTime::from_secs_f64(11.0 + 1e-6));
+    }
+
+    #[test]
+    fn occupy_respects_existing_queue() {
+        let mut l = link();
+        let d1 = l.transfer(SimTime::ZERO, 1e9); // busy until 1s (+alpha reported)
+        // an externally-timed transfer ending earlier must not rewind the link
+        l.occupy(SimTime::from_secs_f64(0.5), 1e6);
+        assert!(l.busy_until() >= d1 - SimTime::from_secs_f64(1e-6));
+        // and a later one extends it
+        l.occupy(SimTime::from_secs_f64(3.0), 1e6);
+        assert_eq!(l.busy_until(), SimTime::from_secs_f64(3.0));
+        assert_eq!(l.transfers, 3);
+    }
+
+    #[test]
+    fn earliest_start_matches_busy_state() {
+        let mut l = link();
+        assert_eq!(l.earliest_start(SimTime::from_secs_f64(2.0)), SimTime::from_secs_f64(2.0));
+        l.transfer(SimTime::ZERO, 1e9);
+        assert_eq!(l.earliest_start(SimTime::ZERO), SimTime::from_secs_f64(1.0));
     }
 
     #[test]

@@ -19,16 +19,21 @@
 use crate::core::{EventQueue, SimTime};
 
 /// Durations for one decode step's graph.
+///
+/// All four stages are per-`(layer, micro)` so data-dependent effects —
+/// MoE expert stragglers in `ffn_time`, routing-skew-dependent EP
+/// dispatch/combine in `a2f_time`/`f2a_time` — flow straight into the
+/// pipeline executor.
 #[derive(Clone, Debug)]
 pub struct AfStep {
     /// attn_time[l][k]: attention stage of layer l, micro-batch k (sec).
     pub attn_time: Vec<Vec<f64>>,
     /// ffn_time[l][k] (sec).
     pub ffn_time: Vec<Vec<f64>>,
-    /// Activation transfer attn->ffn per micro-batch (sec).
-    pub a2f_time: f64,
-    /// Activation transfer ffn->attn per micro-batch (sec).
-    pub f2a_time: f64,
+    /// a2f_time[l][k]: attn->ffn activation dispatch (sec).
+    pub a2f_time: Vec<Vec<f64>>,
+    /// f2a_time[l][k]: ffn->attn combine/return (sec).
+    pub f2a_time: Vec<Vec<f64>>,
 }
 
 impl AfStep {
@@ -37,8 +42,8 @@ impl AfStep {
         AfStep {
             attn_time: vec![vec![attn; micros]; layers],
             ffn_time: vec![vec![ffn; micros]; layers],
-            a2f_time: xfer,
-            f2a_time: xfer,
+            a2f_time: vec![vec![xfer; micros]; layers],
+            f2a_time: vec![vec![xfer; micros]; layers],
         }
     }
 
@@ -98,8 +103,8 @@ pub fn af_step(step: &AfStep) -> (f64, [f64; 4]) {
     let dur = |t: &Task| match t.stage {
         Stage::Attn => step.attn_time[t.layer][t.micro],
         Stage::Ffn => step.ffn_time[t.layer][t.micro],
-        Stage::A2f => step.a2f_time,
-        Stage::F2a => step.f2a_time,
+        Stage::A2f => step.a2f_time[t.layer][t.micro],
+        Stage::F2a => step.f2a_time[t.layer][t.micro],
     };
 
     for k in 0..micros {
@@ -222,8 +227,19 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_transfers_lengthen_step() {
+        // one slow dispatch (EP routing skew) delays everything behind it
+        let base = AfStep::uniform(4, 2, 10e-6, 10e-6, 1e-6);
+        let (t0, _) = af_step(&base);
+        let mut s = base.clone();
+        s.a2f_time[1][0] = 50e-6;
+        let (t1, _) = af_step(&s);
+        assert!(t1 > t0, "{t1} vs {t0}");
+    }
+
+    #[test]
     fn empty_step() {
-        let s = AfStep { attn_time: vec![], ffn_time: vec![], a2f_time: 0.0, f2a_time: 0.0 };
+        let s = AfStep { attn_time: vec![], ffn_time: vec![], a2f_time: vec![], f2a_time: vec![] };
         assert_eq!(af_step(&s).0, 0.0);
     }
 

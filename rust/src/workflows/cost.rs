@@ -19,7 +19,7 @@ use crate::core::Pcg64;
 use crate::hardware::LinkSpec;
 use crate::metrics::MetricsCollector;
 use crate::model::ModelConfig;
-use crate::moe::{self, RoutingPolicy};
+use crate::moe::{self, rank_imbalance, EpSpec, RoutingPolicy};
 use crate::operators::OpWorkload;
 use crate::parallelism::Parallelism;
 use crate::predictor::ExecutionPredictor;
@@ -55,6 +55,11 @@ pub struct CostModel {
     /// `max` over expert tasks (stragglers) vs balance-oblivious `mean`.
     pub straggler_max: bool,
     pub overhead: OverheadConfig,
+    /// When set, MoE FFN pricing goes through the expert-parallel
+    /// placement: rank loads follow the placement (not contiguous
+    /// slicing) and dispatch/combine are charged through the contended
+    /// cluster fabric instead of the closed-form all-to-all.
+    pub ep: Option<EpSpec>,
 }
 
 /// Mutable pricing context: predictor + RNG + metric sink.
@@ -86,6 +91,26 @@ pub struct FfnPlan {
     pub per_rank: Vec<Vec<OpWorkload>>,
 }
 
+/// One EP-aware MoE FFN pricing draw (see [`CostModel::moe_ffn_ep`]):
+/// the components are kept separate so the AF pipeline can schedule
+/// dispatch/combine on its transfer resources while co-located pricing
+/// just sums them.
+#[derive(Clone, Copy, Debug)]
+pub struct MoeEpSample {
+    /// Expert compute (gate + shared expert + rank barrier), seconds.
+    pub ffn_secs: f64,
+    /// Token dispatch all-to-all through the fabric, seconds.
+    pub dispatch_secs: f64,
+    /// Expert-output combine all-to-all, seconds.
+    pub combine_secs: f64,
+    /// Dispatch + combine byte volume (including rank-local bytes).
+    pub total_bytes: f64,
+    /// Bytes that crossed a cluster boundary.
+    pub cross_bytes: f64,
+    /// Max-over-mean EP rank load for this routing draw.
+    pub rank_imbalance: f64,
+}
+
 impl CostModel {
     pub fn new(model: ModelConfig, par: Parallelism, link: LinkSpec) -> Self {
         CostModel {
@@ -95,6 +120,7 @@ impl CostModel {
             moe_routing: RoutingPolicy::UniformRandom,
             straggler_max: true,
             overhead: OverheadConfig::predicted(),
+            ep: None,
         }
     }
 
@@ -256,20 +282,119 @@ impl CostModel {
                 .iter()
                 .map(|ops| ops.iter().map(|op| ctx.price(op)).sum::<f64>())
                 .collect();
-            t += if self.straggler_max {
-                rank_times.iter().copied().fold(0.0, f64::max)
-            } else {
-                rank_times.iter().sum::<f64>() / rank_times.len() as f64
-            };
+            t += self.rank_barrier(&rank_times);
         }
         t
     }
 
+    /// The §3.3 synchronization barrier over per-rank task times: `max`
+    /// (stragglers) or balance-oblivious `mean` (ablation). Shared by
+    /// the closed-form plan path and the EP placement path so the two
+    /// cannot drift.
+    fn rank_barrier(&self, rank_times: &[f64]) -> f64 {
+        if rank_times.is_empty() {
+            return 0.0;
+        }
+        if self.straggler_max {
+            rank_times.iter().copied().fold(0.0, f64::max)
+        } else {
+            rank_times.iter().sum::<f64>() / rank_times.len() as f64
+        }
+    }
+
     /// FFN sub-layer time for `tokens` tokens, seconds. Also the
-    /// FFN-side stage of the AF pipeline.
+    /// FFN-side stage of the AF pipeline. Routes through the EP
+    /// placement path when an [`EpSpec`] is attached.
     pub fn ffn_block_time(&self, ctx: &mut CostCtx, tokens: u64) -> f64 {
+        if let Some(s) = self.moe_ffn_ep(ctx, tokens) {
+            return s.ffn_secs + s.dispatch_secs + s.combine_secs;
+        }
         let plan = self.ffn_block_plan(tokens, ctx.rng);
         self.price_ffn_plan(ctx, &plan)
+    }
+
+    /// EP-aware MoE FFN pricing for one batch of `tokens` tokens: draw a
+    /// fresh routing assignment, map it through the expert placement to
+    /// heterogeneous per-rank GroupedGEMMs (combined under the
+    /// synchronization barrier), and charge dispatch/combine through the
+    /// contended intra-/cross-cluster fabric. `None` when not applicable
+    /// (dense model, no EP spec attached, single rank, or empty batch) —
+    /// callers then fall back to the closed-form plan path.
+    pub fn moe_ffn_ep(&self, ctx: &mut CostCtx, tokens: u64) -> Option<MoeEpSample> {
+        let eps = self.ep.as_ref()?;
+        let moe = self.model.moe.clone()?;
+        if tokens == 0 || eps.n_ranks() <= 1 {
+            return None;
+        }
+        let m = &self.model;
+        let tp = self.par.tp.max(1);
+        let d = m.d_model as u64;
+        // ops shared by every rank: gate GEMM, shared expert, TP sync
+        let mut common = Vec::with_capacity(4);
+        common.push(OpWorkload::Gemm { m: tokens, n: moe.n_experts as u64, k: d });
+        if moe.shared_expert_dim > 0 {
+            let se = (moe.shared_expert_dim / tp).max(1) as u64;
+            common.push(OpWorkload::Gemm { m: tokens, n: 2 * se, k: d });
+            common.push(OpWorkload::Gemm { m: tokens, n: d, k: se });
+        }
+        if tp > 1 {
+            common.push(OpWorkload::AllReduce {
+                bytes: tokens as f64 * d as f64 * m.dtype_bytes as f64,
+                n_ranks: tp,
+            });
+        }
+        // pluggable routing -> placement-aware rank loads
+        let loads =
+            moe::assign_tokens(self.moe_routing, tokens as u32, moe.n_experts, moe.top_k, ctx.rng);
+        let rank_loads = eps.placement.rank_expert_loads(&loads);
+        let expert_ffn = (moe.expert_ffn_dim / tp).max(1) as u64;
+        let per_rank: Vec<Vec<OpWorkload>> = rank_loads
+            .iter()
+            .map(|rl| {
+                vec![
+                    OpWorkload::GroupedGemm { tokens_per_expert: rl.clone(), n: 2 * expert_ffn, k: d },
+                    OpWorkload::GroupedGemm { tokens_per_expert: rl.clone(), n: d, k: expert_ffn },
+                ]
+            })
+            .collect();
+        let all: Vec<OpWorkload> =
+            common.iter().chain(per_rank.iter().flatten()).cloned().collect();
+        ctx.pred.prefetch(&all);
+        let mut ffn_secs: f64 = common.iter().map(|op| ctx.price(op)).sum();
+        let rank_times: Vec<f64> = per_rank
+            .iter()
+            .map(|ops| ops.iter().map(|op| ctx.price(op)).sum::<f64>())
+            .collect();
+        ffn_secs += self.rank_barrier(&rank_times);
+        // data-dependent dispatch/combine through the fabric (combine is
+        // the transpose of the dispatch matrix already in hand)
+        let bpt = d as f64 * m.dtype_bytes as f64;
+        let dispatch_mat = eps.placement.dispatch_matrix(&loads, bpt);
+        let combine_mat = eps.placement.transposed(&dispatch_mat);
+        let dispatch = eps.a2a_time(&dispatch_mat);
+        let combine = eps.a2a_time(&combine_mat);
+        let totals: Vec<u64> = rank_loads
+            .iter()
+            .map(|per| per.iter().map(|&x| x as u64).sum())
+            .collect();
+        let imbalance = rank_imbalance(&totals);
+        if let Some(mc) = ctx.metrics.as_deref_mut() {
+            mc.record_op("ep_dispatch", dispatch.secs);
+            mc.record_op("ep_combine", combine.secs);
+            mc.record_ep(
+                dispatch.total_bytes + combine.total_bytes,
+                dispatch.cross_bytes + combine.cross_bytes,
+                imbalance,
+            );
+        }
+        Some(MoeEpSample {
+            ffn_secs,
+            dispatch_secs: dispatch.secs,
+            combine_secs: combine.secs,
+            total_bytes: dispatch.total_bytes + combine.total_bytes,
+            cross_bytes: dispatch.cross_bytes + combine.cross_bytes,
+            rank_imbalance: imbalance,
+        })
     }
 
     /// LM head projection for rows that produce a token this iteration.
@@ -293,19 +418,40 @@ impl CostModel {
             return 0.0;
         }
         let tokens = shape.total_tokens() as u64;
-        // collect the whole iteration's ops up front so the predictor
-        // batches its queries
         let attn_ops = self.attn_block_ops(shape);
-        let ffn_plan = self.ffn_block_plan(tokens, ctx.rng);
-        let mut all: Vec<OpWorkload> = attn_ops.clone();
-        all.extend(ffn_plan.common.iter().cloned());
-        all.extend(ffn_plan.per_rank.iter().flatten().cloned());
-        ctx.pred.prefetch(&all);
-
-        let attn: f64 = attn_ops.iter().map(|op| ctx.price(op)).sum();
-        let ffn = self.price_ffn_plan(ctx, &ffn_plan);
-        let per_layer = attn + ffn;
-        let layers = (self.model.n_layers / self.par.pp.max(1)).max(1) as f64;
+        let n_layers = (self.model.n_layers / self.par.pp.max(1)).max(1);
+        let per_layer = if self.ep.is_some() && self.model.is_moe() {
+            // EP path: the FFN stage prices (and prefetches) itself
+            ctx.pred.prefetch(&attn_ops);
+            let attn: f64 = attn_ops.iter().map(|op| ctx.price(op)).sum();
+            let ffn = if let Some(s) = self.moe_ffn_ep(ctx, tokens) {
+                // one routing draw stands in for every layer of this
+                // iteration (the once-per-iteration pricing convention):
+                // scale the EP traffic accounting to the physical byte
+                // volume so co-located and AF reports agree
+                if let Some(mc) = ctx.metrics.as_deref_mut() {
+                    for _ in 1..n_layers {
+                        mc.record_ep(s.total_bytes, s.cross_bytes, s.rank_imbalance);
+                    }
+                }
+                s.ffn_secs + s.dispatch_secs + s.combine_secs
+            } else {
+                let plan = self.ffn_block_plan(tokens, ctx.rng);
+                self.price_ffn_plan(ctx, &plan)
+            };
+            attn + ffn
+        } else {
+            // collect the whole iteration's ops up front so the predictor
+            // batches its queries
+            let ffn_plan = self.ffn_block_plan(tokens, ctx.rng);
+            let mut all: Vec<OpWorkload> = attn_ops.clone();
+            all.extend(ffn_plan.common.iter().cloned());
+            all.extend(ffn_plan.per_rank.iter().flatten().cloned());
+            ctx.pred.prefetch(&all);
+            let attn: f64 = attn_ops.iter().map(|op| ctx.price(op)).sum();
+            attn + self.price_ffn_plan(ctx, &ffn_plan)
+        };
+        let layers = n_layers as f64;
         // pp>1: stages run concurrently; per-iteration latency is one
         // stage's layers (steady-state pipelining)
         let compute = per_layer * layers + self.lm_head_time(ctx, shape.lm_head_rows as u64);
@@ -440,6 +586,64 @@ mod tests {
         );
         assert!(mc.op_time.contains_key("gemm"));
         assert!(mc.op_time.contains_key("attn_decode"));
+    }
+
+    #[test]
+    fn ep_spec_routes_ffn_through_placement() {
+        use crate::moe::{EpSpec, EpTopology, ExpertPlacement, PlacementPolicy};
+        let mut cm = CostModel::new(
+            ModelConfig::tiny_moe(),
+            Parallelism::new(1, 1, 4),
+            LinkSpec::nvlink_a800(),
+        );
+        cm.overhead = OverheadConfig::zero();
+        let topo = EpTopology::new(4, 2);
+        cm.ep = Some(EpSpec {
+            placement: ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None),
+            intra: LinkSpec::nvlink_a800(),
+            cross: LinkSpec::cross_cluster(),
+        });
+        let (mut pred, mut rng) = ctx_pieces();
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        let s = cm.moe_ffn_ep(&mut ctx, 128).expect("ep path applies");
+        assert!(s.ffn_secs > 0.0 && s.dispatch_secs > 0.0 && s.combine_secs > 0.0);
+        assert!(s.cross_bytes > 0.0 && s.cross_bytes < s.total_bytes);
+        assert!(s.rank_imbalance >= 1.0);
+        // empty batches and dense models fall back to the legacy path
+        assert!(cm.moe_ffn_ep(&mut ctx, 0).is_none());
+        let dense = CostModel::new(ModelConfig::tiny(), Parallelism::default(), LinkSpec::nvlink_a800());
+        let mut ctx2 = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        assert!(dense.moe_ffn_ep(&mut ctx2, 128).is_none());
+    }
+
+    #[test]
+    fn ep_metrics_are_recorded() {
+        use crate::moe::{EpSpec, EpTopology, ExpertPlacement, PlacementPolicy};
+        let mut cm = CostModel::new(
+            ModelConfig::tiny_moe(),
+            Parallelism::new(1, 1, 4),
+            LinkSpec::nvlink_a800(),
+        );
+        cm.ep = Some(EpSpec {
+            placement: ExpertPlacement::build(
+                PlacementPolicy::Strided,
+                8,
+                EpTopology::new(4, 1),
+                None,
+            ),
+            intra: LinkSpec::nvlink_a800(),
+            cross: LinkSpec::cross_cluster(),
+        });
+        let (mut pred, mut rng) = ctx_pieces();
+        let mut mc = MetricsCollector::default();
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: Some(&mut mc) };
+        let t = cm.ffn_block_time(&mut ctx, 256);
+        assert!(t > 0.0);
+        assert!(mc.ep_bytes > 0.0);
+        assert_eq!(mc.ep_cross_bytes, 0.0); // single cluster
+        assert_eq!(mc.ep_draws, 1);
+        assert!(mc.op_time.contains_key("ep_dispatch"));
+        assert!(mc.op_time.contains_key("ep_combine"));
     }
 
     #[test]

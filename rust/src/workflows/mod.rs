@@ -11,4 +11,4 @@
 pub mod af;
 pub mod cost;
 
-pub use cost::{BatchShape, CostCtx, CostModel};
+pub use cost::{BatchShape, CostCtx, CostModel, MoeEpSample};

@@ -101,6 +101,33 @@ fn gemm_matches_python() {
 }
 
 #[test]
+fn ep_fabric_all2all_reduces_to_closed_form_uncontended() {
+    // Not golden-gated: the FIFO-contended EP fabric must reduce to the
+    // analytical `oracle::all2all_time` in the uncontended case — a
+    // uniform byte matrix over a single cluster, where each of the n
+    // ranks holds `per_rank` bytes and sends 1/n of it to every peer.
+    // This keeps the golden collective vectors honest for the EP path.
+    use frontier::core::SimTime;
+    use frontier::moe::{EpNetwork, EpTopology};
+
+    for spec in [LinkSpec::nvlink_a800(), LinkSpec::infiniband_ndr()] {
+        for n in [2u32, 4, 8, 16] {
+            let topo = EpTopology::new(n, 1);
+            let mut net = EpNetwork::new(topo, spec, spec);
+            let per_rank = 4.0e6;
+            let mat = vec![per_rank / n as f64; (n * n) as usize];
+            let (finish, phase) = net.all_to_all(SimTime::ZERO, &mat);
+            let want = oracle::all2all_time(per_rank, n, &spec);
+            let got = finish.as_secs_f64();
+            let rel = (got - want).abs() / want;
+            assert!(rel < 1e-6, "n={n}: fabric {got} vs closed form {want} (rel {rel:.2e})");
+            assert_eq!(phase.cross_bytes, 0.0, "single cluster must have no cross bytes");
+            assert!((phase.total_bytes - per_rank * n as f64).abs() < 1e-6 * per_rank);
+        }
+    }
+}
+
+#[test]
 fn collectives_match_python() {
     let Some(g) = golden() else {
         eprintln!("skipping: artifacts not built");

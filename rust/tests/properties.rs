@@ -7,7 +7,9 @@ use frontier::config::{ExperimentConfig, PolicyConfig};
 use frontier::core::Pcg64;
 use frontier::memory::BlockManager;
 use frontier::model::ModelConfig;
-use frontier::moe::{assign_tokens, RoutingPolicy};
+use frontier::moe::{
+    assign_tokens, rank_imbalance, EpTopology, ExpertPlacement, PlacementPolicy, RoutingPolicy,
+};
 use frontier::proptest_util::run_prop;
 use frontier::scheduler::{admit, BatchPolicy, IterBudget, QueuedReq};
 use frontier::workload::{Arrival, LenDist, WorkloadSpec};
@@ -100,6 +102,91 @@ fn prop_moe_routing_conserves_tokens() {
         );
         // top-k without replacement: no expert receives more than `tokens`
         assert!(loads.iter().all(|&l| l <= tokens));
+    });
+}
+
+#[test]
+fn prop_ep_placement_is_a_partition() {
+    // non-replicated policies: every expert lives on exactly one rank,
+    // every host rank is valid, and the per-rank blocks are balanced
+    run_prop("ep placement partition", 200, |g| {
+        let ranks = g.u32(1, 16);
+        let experts = g.u32(1, 96);
+        let clusters = g.u32(1, 8);
+        let topo = EpTopology::new(ranks, clusters);
+        let policy = *g.pick(&[PlacementPolicy::Contiguous, PlacementPolicy::Strided]);
+        let p = ExpertPlacement::build(policy, experts, topo, None);
+        assert_eq!(p.expert_ranks.len(), experts as usize);
+        let mut per_rank = vec![0u32; ranks as usize];
+        for hosts in &p.expert_ranks {
+            assert_eq!(hosts.len(), 1, "{policy:?} must not replicate");
+            assert!(hosts[0] < ranks, "host {} out of range", hosts[0]);
+            per_rank[hosts[0] as usize] += 1;
+        }
+        assert_eq!(per_rank.iter().sum::<u32>(), experts, "experts lost or duplicated");
+        let max = per_rank.iter().max().unwrap();
+        let min = per_rank.iter().min().unwrap();
+        assert!(max - min <= 1, "unbalanced blocks: {per_rank:?}");
+    });
+}
+
+#[test]
+fn prop_ep_dispatch_bytes_conserve_routed_tokens() {
+    // the (src, dst) dispatch matrix totals exactly the routed-token
+    // bytes, rank loads conserve tokens exactly, and the combine phase
+    // mirrors the dispatch — for every placement policy
+    run_prop("ep dispatch conservation", 200, |g| {
+        let mut rng = Pcg64::new(g.seed * 77 + 5);
+        let ranks = g.u32(1, 12);
+        let experts = g.u32(1, 48);
+        let clusters = g.u32(1, 6);
+        let topo = EpTopology::new(ranks, clusters);
+        let policy = *g.pick(&[
+            PlacementPolicy::Contiguous,
+            PlacementPolicy::Strided,
+            PlacementPolicy::ReplicatedHot { hot: 3 },
+        ]);
+        let tokens = g.u32(0, 1024);
+        let k = g.u32(1, 4);
+        let loads = assign_tokens(RoutingPolicy::UniformRandom, tokens, experts, k, &mut rng);
+        let p = ExpertPlacement::build(policy, experts, topo, Some(&loads));
+        let bpt = g.f64(1.0, 8192.0);
+        let routed: u64 = loads.iter().map(|&x| x as u64).sum();
+        let want = routed as f64 * bpt;
+        let dispatch: f64 = p.dispatch_matrix(&loads, bpt).iter().sum();
+        let combine: f64 = p.combine_matrix(&loads, bpt).iter().sum();
+        let tol = 1e-9 * want.max(1.0);
+        assert!((dispatch - want).abs() < tol, "dispatch {dispatch} vs {want}");
+        assert!((combine - want).abs() < tol, "combine {combine} vs {want}");
+        // token conservation is exact (integer largest-remainder split)
+        assert_eq!(p.rank_totals(&loads).iter().sum::<u64>(), routed);
+    });
+}
+
+#[test]
+fn prop_balanced_contiguous_has_zero_cross_rank_variance() {
+    // when the routed-token total divides the expert count and experts
+    // divide across ranks, Balanced routing + Contiguous placement puts
+    // exactly the same load on every rank
+    run_prop("balanced contiguous zero variance", 150, |g| {
+        let ranks = g.u32(1, 8);
+        let per_rank = g.u32(1, 8);
+        let experts = ranks * per_rank;
+        let tokens = experts * g.u32(1, 32);
+        let k = g.u32(1, 4).min(experts);
+        let mut rng = Pcg64::new(g.seed);
+        let loads = assign_tokens(RoutingPolicy::Balanced, tokens, experts, k, &mut rng);
+        let topo = EpTopology::new(ranks, g.u32(1, ranks));
+        let p = ExpertPlacement::build(PlacementPolicy::Contiguous, experts, topo, None);
+        let totals = p.rank_totals(&loads);
+        assert!(
+            totals.windows(2).all(|w| w[0] == w[1]),
+            "seed {}: uneven rank loads {totals:?}",
+            g.seed
+        );
+        if tokens > 0 {
+            assert!((rank_imbalance(&totals) - 1.0).abs() < 1e-12);
+        }
     });
 }
 
