@@ -55,16 +55,16 @@ fn main() -> anyhow::Result<()> {
             let mut rng = frontier::core::Pcg64::new(17);
             let loads =
                 frontier::moe::assign_tokens(routing, 256, moe.n_experts, moe.top_k, &mut rng);
-            let spec = EpSpec {
-                placement: ExpertPlacement::build(
+            let spec = EpSpec::flat(
+                ExpertPlacement::build(
                     placement,
                     moe.n_experts,
                     EpTopology::new(8, 2),
                     Some(&loads),
                 ),
-                intra: LinkSpec::nvlink_a800(),
-                cross: LinkSpec::cross_cluster(),
-            };
+                LinkSpec::nvlink_a800(),
+                LinkSpec::cross_cluster(),
+            );
             let disp = spec.a2a_time(&spec.placement.dispatch_matrix(&loads, bpt));
             let imb = frontier::moe::rank_imbalance(&spec.placement.rank_totals(&loads));
             rows.push(vec![

@@ -1,0 +1,163 @@
+//! EP scratch-network measurement (ROADMAP "Scratch EP network").
+//!
+//! `EpSpec::a2a_time` used to build a fresh `EpNetwork` (2n `Link`s + a
+//! `Fabric` map) and two n^2 byte matrices on *every* routing draw —
+//! millions of small allocations on long MoE runs. The CostModel now
+//! carries a reusable scratch buffer. This bench counts heap
+//! allocations per draw on both paths with a counting global allocator
+//! and emits the drop as `target/bench_results/BENCH_ep_scratch.json`.
+//!
+//! ```bash
+//! cargo bench --bench ep_scratch
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use frontier::bench_util::{bench, section, write_results};
+use frontier::config::json::Json;
+use frontier::core::{Pcg64, SimTime};
+use frontier::hardware::LinkSpec;
+use frontier::moe::{
+    assign_tokens, EpSpec, EpTopology, ExpertPlacement, PlacementPolicy, RoutingPolicy,
+};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn main() {
+    let n_ranks = 16u32;
+    let n_experts = 64u32;
+    let spec = EpSpec::flat(
+        ExpertPlacement::build(
+            PlacementPolicy::Contiguous,
+            n_experts,
+            EpTopology::new(n_ranks, 2),
+            None,
+        ),
+        LinkSpec::nvlink_a800(),
+        LinkSpec::cross_cluster(),
+    );
+    let bpt = 4096.0 * 2.0;
+    // pre-draw the routing assignments so both paths price identical
+    // matrices and the measured region contains only the a2a pricing
+    let mut rng = Pcg64::new(42);
+    let draws: Vec<Vec<u32>> = (0..256)
+        .map(|_| {
+            assign_tokens(RoutingPolicy::Skewed { alpha: 0.1 }, 512, n_experts, 4, &mut rng)
+        })
+        .collect();
+
+    // fresh path: network + two matrices allocated per draw (the old
+    // EpSpec::a2a_time behaviour)
+    let fresh_pass = |out: &mut f64| {
+        for loads in &draws {
+            let mat = spec.placement.dispatch_matrix(loads, bpt);
+            let mat_t = spec.placement.transposed(&mat);
+            *out += spec.a2a_time(&mat).secs + spec.a2a_time(&mat_t).secs;
+        }
+    };
+    // scratch path: one network + two buffers reused across draws (what
+    // CostModel::moe_ffn_ep does internally)
+    let mut net = spec.make_network();
+    let mut mat: Vec<f64> = Vec::new();
+    let mut mat_t: Vec<f64> = Vec::new();
+    // warm the buffers (first fill sizes them; trunks appear lazily)
+    spec.placement.dispatch_matrix_into(&draws[0], bpt, &mut mat);
+    spec.placement.transpose_into(&mat, &mut mat_t);
+    net.reset();
+    net.all_to_all(SimTime::ZERO, &mat);
+    net.reset();
+    net.all_to_all(SimTime::ZERO, &mat_t);
+
+    // sanity: both paths must price identically
+    {
+        let fresh = spec.a2a_time(&spec.placement.dispatch_matrix(&draws[1], bpt));
+        spec.placement.dispatch_matrix_into(&draws[1], bpt, &mut mat);
+        net.reset();
+        let reused = net.all_to_all(SimTime::ZERO, &mat).1;
+        assert_eq!(fresh, reused, "scratch path must price like a fresh network");
+    }
+
+    section("EP a2a pricing: fresh network per draw vs reusable scratch");
+    let mut sink = 0.0f64;
+    let a0 = allocs();
+    fresh_pass(&mut sink);
+    let fresh_allocs = allocs() - a0;
+
+    let mut scratch_pass = |out: &mut f64| {
+        for loads in &draws {
+            spec.placement.dispatch_matrix_into(loads, bpt, &mut mat);
+            spec.placement.transpose_into(&mat, &mut mat_t);
+            net.reset();
+            *out += net.all_to_all(SimTime::ZERO, &mat).1.secs;
+            net.reset();
+            *out += net.all_to_all(SimTime::ZERO, &mat_t).1.secs;
+        }
+    };
+    let a1 = allocs();
+    scratch_pass(&mut sink);
+    let scratch_allocs = allocs() - a1;
+
+    let per_draw_fresh = fresh_allocs as f64 / draws.len() as f64;
+    let per_draw_scratch = scratch_allocs as f64 / draws.len() as f64;
+    println!(
+        "allocations/draw: fresh {per_draw_fresh:.1} -> scratch {per_draw_scratch:.1} \
+         ({fresh_allocs} vs {scratch_allocs} over {} draws)",
+        draws.len()
+    );
+    assert!(
+        scratch_allocs * 10 < fresh_allocs,
+        "scratch path must cut allocations by >10x: {scratch_allocs} vs {fresh_allocs}"
+    );
+
+    let t_fresh = bench("fresh network per draw", || {
+        let mut s = 0.0;
+        fresh_pass(&mut s);
+        std::hint::black_box(s);
+    });
+    let t_scratch = bench("reusable scratch", || {
+        let mut s = 0.0;
+        scratch_pass(&mut s);
+        std::hint::black_box(s);
+    });
+    std::hint::black_box(sink);
+
+    let json = Json::obj(vec![
+        ("ranks", Json::Num(n_ranks as f64)),
+        ("experts", Json::Num(n_experts as f64)),
+        ("draws", Json::Num(draws.len() as f64)),
+        ("fresh_allocs_per_draw", Json::Num(per_draw_fresh)),
+        ("scratch_allocs_per_draw", Json::Num(per_draw_scratch)),
+        (
+            "alloc_reduction_factor",
+            Json::Num(fresh_allocs.max(1) as f64 / scratch_allocs.max(1) as f64),
+        ),
+        ("fresh_mean_s", Json::Num(t_fresh.mean.as_secs_f64())),
+        ("scratch_mean_s", Json::Num(t_scratch.mean.as_secs_f64())),
+        (
+            "speedup",
+            Json::Num(t_fresh.mean.as_secs_f64() / t_scratch.mean.as_secs_f64().max(1e-12)),
+        ),
+    ]);
+    write_results("BENCH_ep_scratch.json", &json.to_string_pretty());
+}

@@ -157,6 +157,8 @@ impl ReplicaCentricSim {
             events_processed: queue.processed(),
             n_gpus: self.cfg.n_gpus(),
             metrics,
+            // the replica-centric abstraction has no stage pools
+            stages: Vec::new(),
         })
     }
 

@@ -27,6 +27,27 @@ pub enum StageKind {
     AfDecode,
 }
 
+impl StageKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageKind::Unified => "unified",
+            StageKind::Prefill => "prefill",
+            StageKind::Decode => "decode",
+            StageKind::AfDecode => "af",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "unified" | "colocated" => Some(Self::Unified),
+            "prefill" => Some(Self::Prefill),
+            "decode" => Some(Self::Decode),
+            "af" => Some(Self::AfDecode),
+            _ => None,
+        }
+    }
+}
+
 /// A single model instance (or AF composite) executing iterations.
 #[derive(Debug)]
 pub struct ReplicaWorker {
@@ -73,8 +94,6 @@ impl ReplicaWorker {
 pub struct ClusterWorker {
     pub kind: StageKind,
     pub replicas: Vec<ReplicaWorker>,
-    /// Round-robin cursor for routing.
-    pub rr_cursor: usize,
     /// GPUs backing each replica (AF: attn+ffn pools).
     pub gpus_per_replica: u32,
 }
@@ -84,7 +103,6 @@ impl ClusterWorker {
         ClusterWorker {
             kind,
             replicas: (0..n_replicas).map(|_| ReplicaWorker::new(mem.clone())).collect(),
-            rr_cursor: 0,
             gpus_per_replica,
         }
     }
@@ -107,6 +125,21 @@ impl ClusterWorker {
         } else {
             used as f64 / total as f64
         }
+    }
+
+    /// Peak KV-pool utilization across the cluster's replicas.
+    pub fn peak_mem_frac(&self) -> f64 {
+        self.replicas
+            .iter()
+            .map(|r| {
+                let total = r.mem.total_blocks();
+                if total == 0 {
+                    0.0
+                } else {
+                    r.mem.peak_used as f64 / total as f64
+                }
+            })
+            .fold(0.0, f64::max)
     }
 
     /// Busy fraction over a horizon (utilization report).
@@ -149,6 +182,24 @@ mod tests {
         c.replicas[0].busy_ns = 500;
         c.replicas[1].busy_ns = 1500;
         assert!((c.busy_fraction(SimTime(1000)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_kind_names_round_trip() {
+        for k in [StageKind::Unified, StageKind::Prefill, StageKind::Decode, StageKind::AfDecode]
+        {
+            assert_eq!(StageKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StageKind::parse("colocated"), Some(StageKind::Unified));
+        assert_eq!(StageKind::parse("warp"), None);
+    }
+
+    #[test]
+    fn peak_mem_frac_tracks_high_water() {
+        let mut c = cluster(2, 100);
+        c.replicas[0].mem.allocate(1, 60).unwrap();
+        c.replicas[0].mem.free_request(1);
+        assert!((c.peak_mem_frac() - 0.6).abs() < 1e-12);
     }
 
     #[test]

@@ -361,7 +361,7 @@ mod tests {
         assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
         let arr = v.get("a").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].as_u64().unwrap(), 1);
-        assert_eq!(arr[2].get("b").unwrap().as_bool().unwrap(), false);
+        assert!(!arr[2].get("b").unwrap().as_bool().unwrap());
     }
 
     #[test]

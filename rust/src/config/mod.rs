@@ -1,14 +1,19 @@
 //! Experiment configuration: deployment, policies, overheads.
 
 pub mod json;
+pub mod stage;
+
+pub use stage::{AfPoolSpec, FlowKind, StageConfig, StageEdge, StageGraphConfig};
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::cluster::StageKind;
 use crate::hardware::{GpuSpec, LinkSpec};
 use crate::model::ModelConfig;
 use crate::moe::{PlacementPolicy, RoutingPolicy};
+use crate::network::HierSpec;
 use crate::parallelism::Parallelism;
 use crate::predictor::PredictorKind;
 use crate::scheduler::{BatchPolicy, IterBudget, RoutePolicy};
@@ -59,6 +64,10 @@ pub struct PolicyConfig {
     pub straggler_max: bool,
     /// Fraction of HBM held back from the KV pool.
     pub kv_reserve_frac: f64,
+    /// GShard-style MoE capacity factor: per-expert token cap at
+    /// `ceil(cf * fair_share)`; overflow tokens are dropped and counted.
+    /// `None` = unbounded.
+    pub capacity_factor: Option<f64>,
 }
 
 impl Default for PolicyConfig {
@@ -71,6 +80,7 @@ impl Default for PolicyConfig {
             ep_placement: PlacementPolicy::Contiguous,
             straggler_max: true,
             kv_reserve_frac: 0.1,
+            capacity_factor: None,
         }
     }
 }
@@ -113,15 +123,27 @@ impl OverheadConfig {
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub model: ModelConfig,
+    /// Default GPU model for stages that do not override it.
     pub gpu: GpuSpec,
-    /// Intra-deployment interconnect (KV transfers, collectives).
+    /// Intra-node interconnect (KV transfers, collectives).
     pub link: LinkSpec,
-    /// Cross-cluster trunk for EP dispatch/combine when the EP domain
-    /// spans clusters (`ep_clusters > 1`).
+    /// Inter-node network within a cluster (tier 2 of the hierarchy).
+    pub inter_node_link: LinkSpec,
+    /// Cross-cluster trunk (tier 3): what EP dispatch/combine pays when
+    /// the EP domain spans clusters, and what KV handoff pays between
+    /// stages placed in different clusters.
     pub cross_link: LinkSpec,
     /// How many hardware clusters the EP ranks span (1 = co-located).
     pub ep_clusters: u32,
+    /// EP ranks per node for the hierarchical EP fabric; 0 = legacy
+    /// flat model (a whole cluster's ranks share one node).
+    pub ranks_per_node: u32,
+    /// Ingress NIC bandwidth as a multiple of egress (per-rank NIC
+    /// asymmetry; 1.0 = symmetric).
+    pub nic_ingress_scale: f64,
     pub mode: DeploymentMode,
+    /// Explicit stage graph; when set it overrides `mode`.
+    pub stages: Option<StageGraphConfig>,
     /// Per-replica parallelism (tp/pp; ep applies to MoE FFN ranks).
     pub parallel: Parallelism,
     pub workload: WorkloadSpec,
@@ -139,9 +161,13 @@ impl ExperimentConfig {
             model,
             gpu: GpuSpec::a800(),
             link: LinkSpec::nvlink_a800(),
+            inter_node_link: LinkSpec::infiniband_ndr(),
             cross_link: LinkSpec::cross_cluster(),
             ep_clusters: 1,
+            ranks_per_node: 0,
+            nic_ingress_scale: 1.0,
             mode: DeploymentMode::Colocated { replicas },
+            stages: None,
             parallel: Parallelism::default(),
             workload: WorkloadSpec::table2(256, 128, 128),
             policy: PolicyConfig::default(),
@@ -150,6 +176,11 @@ impl ExperimentConfig {
             artifacts_dir: None,
             seed: 1,
         }
+    }
+
+    /// Build an experiment from an explicit stage graph.
+    pub fn from_stages(model: ModelConfig, graph: StageGraphConfig) -> Self {
+        Self::colocated(model, 1).with_stages(graph)
     }
 
     /// PD-disaggregated deployment (Table 2 uses 1:1).
@@ -179,6 +210,72 @@ impl ExperimentConfig {
     pub fn with_workload(mut self, w: WorkloadSpec) -> Self {
         self.workload = w;
         self
+    }
+
+    /// Install an explicit stage graph (finalized: names assigned,
+    /// edges auto-wired when absent).
+    pub fn with_stages(mut self, mut graph: StageGraphConfig) -> Self {
+        graph.finalize();
+        self.stages = Some(graph);
+        self
+    }
+
+    pub fn with_capacity_factor(mut self, cf: f64) -> Self {
+        self.policy.capacity_factor = Some(cf);
+        self
+    }
+
+    /// The resolved stage graph this experiment runs: the explicit one
+    /// when present, otherwise the lowering of the legacy
+    /// [`DeploymentMode`]. The lowering of `Colocated` is exactly a
+    /// 1-stage graph, which is what the oracle parity test pins.
+    pub fn stage_graph(&self) -> StageGraphConfig {
+        if let Some(g) = &self.stages {
+            let mut g = g.clone();
+            g.finalize();
+            return g;
+        }
+        let mut g = match self.mode {
+            DeploymentMode::Colocated { replicas } => {
+                StageGraphConfig::new(vec![StageConfig::new(StageKind::Unified, replicas)])
+            }
+            DeploymentMode::PdDisagg { prefill_replicas, decode_replicas } => {
+                StageGraphConfig::new(vec![
+                    StageConfig::new(StageKind::Prefill, prefill_replicas),
+                    StageConfig::new(StageKind::Decode, decode_replicas),
+                ])
+            }
+            DeploymentMode::AfDisagg {
+                prefill_replicas,
+                attn_gpus,
+                ffn_gpus,
+                micro_batches,
+            } => StageGraphConfig::new(vec![
+                StageConfig::new(StageKind::Prefill, prefill_replicas),
+                StageConfig::af_stage(attn_gpus, ffn_gpus, micro_batches),
+            ]),
+        };
+        g.finalize();
+        g
+    }
+
+    /// The 3-tier link hierarchy of this deployment's fabric.
+    pub fn hier_spec(&self) -> HierSpec {
+        HierSpec {
+            intra_node: self.link,
+            inter_node: self.inter_node_link,
+            wan: self.cross_link,
+        }
+    }
+
+    /// Mode label for reports: the legacy mode name, or "stage-graph"
+    /// for explicit graphs.
+    pub fn mode_name(&self) -> &'static str {
+        if self.stages.is_some() {
+            "stage-graph"
+        } else {
+            self.mode.name()
+        }
     }
 
     pub fn with_predictor(mut self, p: PredictorKind) -> Self {
@@ -219,18 +316,19 @@ impl ExperimentConfig {
         self
     }
 
-    /// Total GPUs in the deployment (throughput normalization).
-    pub fn n_gpus(&self) -> u32 {
-        let per_replica = self.parallel.gpus_per_replica();
-        match self.mode {
-            DeploymentMode::Colocated { replicas } => replicas * per_replica,
-            DeploymentMode::PdDisagg { prefill_replicas, decode_replicas } => {
-                (prefill_replicas + decode_replicas) * per_replica
-            }
-            DeploymentMode::AfDisagg { prefill_replicas, attn_gpus, ffn_gpus, .. } => {
-                prefill_replicas * per_replica + attn_gpus + ffn_gpus
+    /// GPUs backing one stage of the graph.
+    pub fn stage_gpus(&self, st: &StageConfig) -> u32 {
+        match &st.af {
+            Some(af) => st.replicas * (af.attn_gpus + af.ffn_gpus),
+            None => {
+                st.replicas * st.parallel.unwrap_or(self.parallel).gpus_per_replica()
             }
         }
+    }
+
+    /// Total GPUs in the deployment (throughput normalization).
+    pub fn n_gpus(&self) -> u32 {
+        self.stage_graph().stages.iter().map(|st| self.stage_gpus(st)).sum()
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -241,32 +339,51 @@ impl ExperimentConfig {
         if self.ep_clusters == 0 {
             bail!("ep_clusters must be >= 1");
         }
-        match self.mode {
-            DeploymentMode::Colocated { replicas } if replicas == 0 => {
-                bail!("need at least one replica")
-            }
-            DeploymentMode::PdDisagg { prefill_replicas, decode_replicas }
-                if prefill_replicas == 0 || decode_replicas == 0 =>
-            {
-                bail!("PD needs both stages populated")
-            }
-            DeploymentMode::AfDisagg { attn_gpus, ffn_gpus, micro_batches, .. }
-                if attn_gpus == 0 || ffn_gpus == 0 || micro_batches == 0 =>
-            {
-                bail!("AF needs attn gpus, ffn gpus, and >=1 micro-batch")
-            }
-            _ => {}
+        if !self.nic_ingress_scale.is_finite() || self.nic_ingress_scale <= 0.0 {
+            bail!("nic_ingress_scale must be positive and finite");
         }
-        if let Some(moe) = &self.model.moe {
-            if moe.n_experts % self.parallel.ep != 0 {
-                bail!(
-                    "{} experts do not shard across ep={}",
-                    moe.n_experts,
-                    self.parallel.ep
-                );
+        if let Some(cf) = self.policy.capacity_factor {
+            if cf <= 0.0 || !cf.is_finite() {
+                bail!("capacity factor must be positive and finite");
             }
-        } else if self.parallel.ep > 1 {
-            bail!("ep > 1 requires an MoE model");
+        }
+        let graph = self.stage_graph();
+        graph.validate()?;
+        // the learned predictor executes artifacts trained for one GPU;
+        // a stage overriding the hardware would silently be priced wrong
+        if self.predictor == PredictorKind::Learned {
+            for st in &graph.stages {
+                if let Some(g) = &st.gpu {
+                    if g.name != self.gpu.name {
+                        bail!(
+                            "stage {}: per-stage gpu {} is not supported by the learned \
+                             predictor (its artifacts encode {}); use the oracle/vidur/\
+                             roofline predictors for heterogeneous hardware",
+                            st.name,
+                            g.name,
+                            self.gpu.name
+                        );
+                    }
+                }
+            }
+        }
+        // per-stage EP divisibility against the (possibly overridden)
+        // parallelism plan
+        for st in &graph.stages {
+            let par = st.parallel.unwrap_or(self.parallel);
+            par.validate()?;
+            if let Some(moe) = &self.model.moe {
+                if moe.n_experts % par.ep != 0 {
+                    bail!(
+                        "stage {}: {} experts do not shard across ep={}",
+                        st.name,
+                        moe.n_experts,
+                        par.ep
+                    );
+                }
+            } else if par.ep > 1 {
+                bail!("stage {}: ep > 1 requires an MoE model", st.name);
+            }
         }
         Ok(())
     }
@@ -321,6 +438,63 @@ mod tests {
         let mut bad = cfg;
         bad.ep_clusters = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn legacy_modes_lower_to_stage_graphs() {
+        let m = ModelConfig::qwen2_7b();
+        let colo = ExperimentConfig::colocated(m.clone(), 4).stage_graph();
+        assert_eq!(colo.stages.len(), 1);
+        assert_eq!(colo.stages[0].kind, StageKind::Unified);
+        assert!(colo.edges.is_empty());
+        let pd = ExperimentConfig::pd(m.clone(), 2, 3).stage_graph();
+        assert_eq!(pd.stages.len(), 2);
+        assert_eq!(pd.kv_out(0), vec![1]);
+        let af = ExperimentConfig::af(m, 1, 4, 4, 2).stage_graph();
+        assert_eq!(af.stages[1].kind, StageKind::AfDecode);
+        assert!(af
+            .edges
+            .contains(&StageEdge { src: 1, dst: 1, flow: FlowKind::Activation }));
+        assert!(pd.validate().is_ok() && af.validate().is_ok());
+    }
+
+    #[test]
+    fn explicit_stage_graph_drives_gpu_count_and_validation() {
+        let m = ModelConfig::qwen2_7b();
+        let graph = StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 2)
+                .on_gpu(GpuSpec::h200())
+                .with_parallelism(Parallelism::tp(2)),
+            StageConfig::new(StageKind::Decode, 4),
+        ]);
+        let cfg = ExperimentConfig::from_stages(m, graph);
+        assert!(cfg.validate().is_ok());
+        // 2 replicas * tp2 + 4 replicas * default tp1
+        assert_eq!(cfg.n_gpus(), 8);
+        assert_eq!(cfg.mode_name(), "stage-graph");
+        // capacity factor validation
+        assert!(cfg.clone().with_capacity_factor(1.25).validate().is_ok());
+        assert!(cfg.with_capacity_factor(-1.0).validate().is_err());
+    }
+
+    #[test]
+    fn learned_predictor_rejects_heterogeneous_stage_gpus() {
+        let graph = StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 1).on_gpu(GpuSpec::h100()),
+            StageConfig::new(StageKind::Decode, 1),
+        ]);
+        let cfg = ExperimentConfig::from_stages(ModelConfig::tiny(), graph);
+        assert!(cfg.clone().validate().is_ok(), "oracle predictor allows it");
+        assert!(cfg.with_predictor(PredictorKind::Learned).validate().is_err());
+    }
+
+    #[test]
+    fn hier_spec_mirrors_link_fields() {
+        let cfg = ExperimentConfig::colocated(ModelConfig::tiny(), 1);
+        let h = cfg.hier_spec();
+        assert_eq!(h.intra_node, cfg.link);
+        assert_eq!(h.inter_node, cfg.inter_node_link);
+        assert_eq!(h.wan, cfg.cross_link);
     }
 
     #[test]

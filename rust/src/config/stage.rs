@@ -1,0 +1,612 @@
+//! Stage-graph deployment configuration (the heterogeneous multi-stage
+//! generalization of [`crate::config::DeploymentMode`]).
+//!
+//! A deployment is a directed graph of **stages** — pools of replicas
+//! with their own GPU model, parallelism plan, and scheduler budget —
+//! joined by **typed edges**: `kv` edges carry the PD KV-cache handoff
+//! between pools, `activation` (self-)edges mark an AF stage's
+//! attention<->FFN hops riding the hierarchical fabric. The legacy
+//! co-located / PD / AF modes all lower onto 1- and 2-stage graphs, and
+//! richer shapes (PD+AF hybrids, heterogeneous-GPU PD, multi-decode-pool
+//! fan-out) are expressed directly from JSON or the CLI DSL:
+//!
+//! ```text
+//! --stages "prefill:2@h200,tp=2;decode:4@a800"      # heterogeneous PD
+//! --stages "prefill:2;af,attn=4,ffn=4,micro=2"      # PD+AF hybrid
+//! --stages "prefill:2;decode:2@h100;decode:2@a800"  # fan-out
+//! ```
+//!
+//! Per-stage fields: `kind[:replicas][@gpu]` followed by comma-separated
+//! `key=val` overrides (`tp pp ep attn ffn micro batch ptok cluster node
+//! epc name`). Stages are auto-wired (every prefill feeds every
+//! decode-capable stage) unless `--edges "0>1,0>2"` pins the kv edges
+//! explicitly. The JSON schema mirrors the DSL field-for-field — see
+//! [`StageGraphConfig::from_json`].
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::StageKind;
+use crate::config::json::Json;
+use crate::hardware::GpuSpec;
+use crate::parallelism::Parallelism;
+use crate::scheduler::IterBudget;
+
+/// What a typed stage-graph edge carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlowKind {
+    /// PD-style KV-cache handoff between pools.
+    KvHandoff,
+    /// AF attention<->FFN activation hops (self-edge on an AF stage).
+    Activation,
+}
+
+impl FlowKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlowKind::KvHandoff => "kv",
+            FlowKind::Activation => "activation",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "kv" => Some(Self::KvHandoff),
+            "activation" => Some(Self::Activation),
+            _ => None,
+        }
+    }
+}
+
+/// A directed edge in the stage graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub flow: FlowKind,
+}
+
+/// AF pool sizing for an `AfDecode` stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AfPoolSpec {
+    pub attn_gpus: u32,
+    pub ffn_gpus: u32,
+    pub micro_batches: u32,
+}
+
+/// One stage: a pool of replicas with its own hardware and policy.
+/// `None` fields inherit the deployment-level defaults.
+#[derive(Clone, Debug)]
+pub struct StageConfig {
+    pub name: String,
+    pub kind: StageKind,
+    pub replicas: u32,
+    /// GPU model of this pool (None = deployment default).
+    pub gpu: Option<GpuSpec>,
+    /// Per-replica parallelism (None = deployment default).
+    pub parallel: Option<Parallelism>,
+    /// Scheduler budget (None = deployment default).
+    pub budget: Option<IterBudget>,
+    /// AF pool sizing; required iff `kind == AfDecode`.
+    pub af: Option<AfPoolSpec>,
+    /// Hierarchical-fabric cluster coordinate (WAN domain).
+    pub cluster: u32,
+    /// Node coordinate within the cluster (IB domain).
+    pub node: u32,
+    /// Clusters this stage's EP/FFN expert tier spans (None = default).
+    pub ep_clusters: Option<u32>,
+}
+
+impl StageConfig {
+    pub fn new(kind: StageKind, replicas: u32) -> Self {
+        StageConfig {
+            name: String::new(),
+            kind,
+            replicas,
+            gpu: None,
+            parallel: None,
+            budget: None,
+            af: None,
+            cluster: 0,
+            node: 0,
+            ep_clusters: None,
+        }
+    }
+
+    pub fn af_stage(attn_gpus: u32, ffn_gpus: u32, micro_batches: u32) -> Self {
+        StageConfig {
+            af: Some(AfPoolSpec { attn_gpus, ffn_gpus, micro_batches }),
+            ..Self::new(StageKind::AfDecode, 1)
+        }
+    }
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn on_gpu(mut self, gpu: GpuSpec) -> Self {
+        self.gpu = Some(gpu);
+        self
+    }
+
+    pub fn with_parallelism(mut self, p: Parallelism) -> Self {
+        self.parallel = Some(p);
+        self
+    }
+
+    pub fn in_cluster(mut self, cluster: u32) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    pub fn on_node(mut self, node: u32) -> Self {
+        self.node = node;
+        self
+    }
+
+    /// Whether requests may arrive here (the stage runs prefill).
+    pub fn can_prefill(&self) -> bool {
+        matches!(self.kind, StageKind::Unified | StageKind::Prefill)
+    }
+
+    /// Whether the stage can own requests through decode.
+    pub fn can_decode(&self) -> bool {
+        matches!(self.kind, StageKind::Unified | StageKind::Decode | StageKind::AfDecode)
+    }
+}
+
+/// Shared by the CLI-DSL and JSON parsers: a per-stage parallelism
+/// override exists iff any of tp/pp/ep was given.
+fn parallel_override(tp: Option<u32>, pp: Option<u32>, ep: Option<u32>) -> Option<Parallelism> {
+    if tp.is_some() || pp.is_some() || ep.is_some() {
+        Some(Parallelism::new(tp.unwrap_or(1), pp.unwrap_or(1), ep.unwrap_or(1)))
+    } else {
+        None
+    }
+}
+
+/// Shared by the CLI-DSL and JSON parsers: a per-stage budget override
+/// exists iff a batch cap or prefill-token budget was given.
+fn budget_override(max_batch: Option<u32>, max_prefill_tokens: Option<u32>) -> Option<IterBudget> {
+    if max_batch.is_some() || max_prefill_tokens.is_some() {
+        let d = IterBudget::default();
+        Some(IterBudget {
+            max_batch: max_batch.map_or(d.max_batch, |b| b as usize),
+            max_prefill_tokens: max_prefill_tokens.unwrap_or(d.max_prefill_tokens),
+        })
+    } else {
+        None
+    }
+}
+
+/// The full deployment graph: stages plus typed directed edges.
+#[derive(Clone, Debug, Default)]
+pub struct StageGraphConfig {
+    pub stages: Vec<StageConfig>,
+    pub edges: Vec<StageEdge>,
+}
+
+impl StageGraphConfig {
+    pub fn new(stages: Vec<StageConfig>) -> Self {
+        StageGraphConfig { stages, edges: Vec::new() }
+    }
+
+    pub fn with_edges(mut self, edges: Vec<StageEdge>) -> Self {
+        self.edges = edges;
+        self
+    }
+
+    /// Resolve the graph for execution: name anonymous stages, wire kv
+    /// edges (every prefill stage feeds every decode-capable stage)
+    /// when none were given, and add activation self-edges on AF
+    /// stages. Idempotent.
+    pub fn finalize(&mut self) {
+        for (i, st) in self.stages.iter_mut().enumerate() {
+            if st.name.is_empty() {
+                st.name = format!("{}{}", st.kind.name(), i);
+            }
+        }
+        if !self.edges.iter().any(|e| e.flow == FlowKind::KvHandoff) {
+            let mut wired = Vec::new();
+            for (s, src) in self.stages.iter().enumerate() {
+                if src.kind != StageKind::Prefill {
+                    continue;
+                }
+                for (d, dst) in self.stages.iter().enumerate() {
+                    if d != s && dst.can_decode() {
+                        wired.push(StageEdge { src: s, dst: d, flow: FlowKind::KvHandoff });
+                    }
+                }
+            }
+            self.edges.extend(wired);
+        }
+        for (i, st) in self.stages.iter().enumerate() {
+            let has_act = self
+                .edges
+                .iter()
+                .any(|e| e.flow == FlowKind::Activation && e.src == i && e.dst == i);
+            if st.kind == StageKind::AfDecode && !has_act {
+                self.edges.push(StageEdge { src: i, dst: i, flow: FlowKind::Activation });
+            }
+        }
+    }
+
+    /// Indices of stages that accept request arrivals: prefill-capable
+    /// stages with no incoming kv edge.
+    pub fn entry_stages(&self) -> Vec<usize> {
+        (0..self.stages.len())
+            .filter(|&i| {
+                self.stages[i].can_prefill()
+                    && !self
+                        .edges
+                        .iter()
+                        .any(|e| e.flow == FlowKind::KvHandoff && e.dst == i)
+            })
+            .collect()
+    }
+
+    /// KV-handoff successors of stage `s`.
+    pub fn kv_out(&self, s: usize) -> Vec<usize> {
+        self.edges
+            .iter()
+            .filter(|e| e.flow == FlowKind::KvHandoff && e.src == s)
+            .map(|e| e.dst)
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.is_empty() {
+            bail!("stage graph needs at least one stage");
+        }
+        for (i, st) in self.stages.iter().enumerate() {
+            if st.replicas == 0 {
+                bail!("stage {i} ({}) needs at least one replica", st.name);
+            }
+            match (st.kind, &st.af) {
+                (StageKind::AfDecode, None) => {
+                    bail!("AF stage {i} needs attn/ffn/micro pool sizing")
+                }
+                (StageKind::AfDecode, Some(af))
+                    if af.attn_gpus == 0 || af.ffn_gpus == 0 || af.micro_batches == 0 =>
+                {
+                    bail!("AF stage {i} needs attn gpus, ffn gpus, and >=1 micro-batch")
+                }
+                (k, Some(_)) if k != StageKind::AfDecode => {
+                    bail!("stage {i} ({:?}) cannot carry AF pool sizing", k)
+                }
+                _ => {}
+            }
+            if let Some(p) = st.parallel {
+                p.validate()?;
+            }
+            if st.ep_clusters == Some(0) {
+                bail!("stage {i}: ep_clusters must be >= 1");
+            }
+        }
+        for e in &self.edges {
+            if e.src >= self.stages.len() || e.dst >= self.stages.len() {
+                bail!("edge {}->{} references a missing stage", e.src, e.dst);
+            }
+            match e.flow {
+                FlowKind::KvHandoff => {
+                    if self.stages[e.src].kind != StageKind::Prefill {
+                        bail!(
+                            "kv edge {}->{}: source must be a prefill stage",
+                            e.src,
+                            e.dst
+                        );
+                    }
+                    if !self.stages[e.dst].can_decode() {
+                        bail!(
+                            "kv edge {}->{}: destination cannot decode",
+                            e.src,
+                            e.dst
+                        );
+                    }
+                }
+                FlowKind::Activation => {
+                    if e.src != e.dst || self.stages[e.src].kind != StageKind::AfDecode {
+                        bail!("activation edges are AF-stage self-edges");
+                    }
+                }
+            }
+        }
+        if self.entry_stages().is_empty() {
+            bail!("no entry stage: need a prefill-capable stage without incoming kv edges");
+        }
+        for (i, st) in self.stages.iter().enumerate() {
+            if st.kind == StageKind::Prefill && self.kv_out(i).is_empty() {
+                bail!("prefill stage {i} ({}) has no kv edge to a decode pool", st.name);
+            }
+            if matches!(st.kind, StageKind::Decode | StageKind::AfDecode)
+                && !self.edges.iter().any(|e| e.flow == FlowKind::KvHandoff && e.dst == i)
+            {
+                bail!("decode stage {i} ({}) is unreachable (no incoming kv edge)", st.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI DSL: stages separated by `;`, each
+    /// `kind[:replicas][@gpu][,key=val...]`; optional kv edge list
+    /// `"0>1,0>2"`.
+    pub fn parse_cli(stages: &str, edges: Option<&str>) -> Result<Self> {
+        let mut graph = StageGraphConfig::default();
+        for (i, part) in stages.split(';').enumerate() {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("empty stage spec at position {i}");
+            }
+            let mut fields = part.split(',');
+            let head = fields.next().expect("split yields at least one field");
+            // head: kind[:replicas][@gpu]
+            let (head, gpu) = match head.split_once('@') {
+                Some((h, g)) => (h, Some(g)),
+                None => (head, None),
+            };
+            let (kind_s, replicas) = match head.split_once(':') {
+                Some((k, r)) => {
+                    (k, r.parse::<u32>().map_err(|_| anyhow!("bad replica count {r:?}"))?)
+                }
+                None => (head, 1),
+            };
+            let kind = StageKind::parse(kind_s)
+                .ok_or_else(|| anyhow!("unknown stage kind {kind_s:?} (unified|prefill|decode|af)"))?;
+            let mut st = StageConfig::new(kind, replicas);
+            if let Some(g) = gpu {
+                st.gpu = Some(
+                    GpuSpec::by_name(g).ok_or_else(|| anyhow!("unknown gpu {g:?}"))?,
+                );
+            }
+            let mut tp = None;
+            let mut pp = None;
+            let mut ep = None;
+            let mut af = match kind {
+                StageKind::AfDecode => AfPoolSpec { attn_gpus: 4, ffn_gpus: 4, micro_batches: 2 },
+                _ => AfPoolSpec { attn_gpus: 0, ffn_gpus: 0, micro_batches: 0 },
+            };
+            let mut batch = None;
+            let mut ptok = None;
+            for f in fields {
+                let (k, v) = f
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("stage field {f:?} is not key=val"))?;
+                let num = || -> Result<u32> {
+                    v.parse().map_err(|_| anyhow!("bad value for {k}: {v:?}"))
+                };
+                if matches!(k, "attn" | "ffn" | "micro") && kind != StageKind::AfDecode {
+                    bail!("stage field {k:?} only applies to af stages (got {kind:?})");
+                }
+                match k {
+                    "name" => st.name = v.to_string(),
+                    "tp" => tp = Some(num()?),
+                    "pp" => pp = Some(num()?),
+                    "ep" => ep = Some(num()?),
+                    "attn" => af.attn_gpus = num()?,
+                    "ffn" => af.ffn_gpus = num()?,
+                    "micro" => af.micro_batches = num()?,
+                    "batch" => batch = Some(num()?),
+                    "ptok" => ptok = Some(num()?),
+                    "cluster" => st.cluster = num()?,
+                    "node" => st.node = num()?,
+                    "epc" => st.ep_clusters = Some(num()?),
+                    _ => bail!("unknown stage field {k:?}"),
+                }
+            }
+            st.parallel = parallel_override(tp, pp, ep);
+            st.budget = budget_override(batch, ptok);
+            if kind == StageKind::AfDecode {
+                st.af = Some(af);
+            }
+            graph.stages.push(st);
+        }
+        if let Some(spec) = edges {
+            for e in spec.split(',') {
+                let (s, d) = e
+                    .trim()
+                    .split_once('>')
+                    .ok_or_else(|| anyhow!("edge {e:?} is not src>dst"))?;
+                graph.edges.push(StageEdge {
+                    src: s.trim().parse().map_err(|_| anyhow!("bad edge source {s:?}"))?,
+                    dst: d.trim().parse().map_err(|_| anyhow!("bad edge dest {d:?}"))?,
+                    flow: FlowKind::KvHandoff,
+                });
+            }
+        }
+        graph.finalize();
+        Ok(graph)
+    }
+
+    /// Parse the JSON schema:
+    ///
+    /// ```json
+    /// {"stages": [{"kind": "prefill", "replicas": 2, "gpu": "h200", "tp": 2},
+    ///             {"kind": "af", "attn_gpus": 4, "ffn_gpus": 4, "micro_batches": 2}],
+    ///  "edges": [{"src": 0, "dst": 1, "flow": "kv"}]}
+    /// ```
+    ///
+    /// Optional per-stage keys mirror the CLI DSL: `name`, `replicas`,
+    /// `gpu`, `tp`/`pp`/`ep`, `attn_gpus`/`ffn_gpus`/`micro_batches`,
+    /// `max_batch`/`max_prefill_tokens`, `cluster`, `node`,
+    /// `ep_clusters`. `edges` may be omitted to auto-wire.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut graph = StageGraphConfig::default();
+        for (i, sj) in j.req("stages")?.as_arr()?.iter().enumerate() {
+            let kind_s = sj.req("kind")?.as_str()?;
+            let kind = StageKind::parse(kind_s)
+                .ok_or_else(|| anyhow!("stage {i}: unknown kind {kind_s:?}"))?;
+            let u32_field = |key: &str| -> Result<Option<u32>> {
+                match sj.get(key) {
+                    None => Ok(None),
+                    Some(v) => Ok(Some(v.as_u64()? as u32)),
+                }
+            };
+            let mut st =
+                StageConfig::new(kind, u32_field("replicas")?.unwrap_or(1));
+            if let Some(n) = sj.get("name") {
+                st.name = n.as_str()?.to_string();
+            }
+            if let Some(g) = sj.get("gpu") {
+                let g = g.as_str()?;
+                st.gpu =
+                    Some(GpuSpec::by_name(g).ok_or_else(|| anyhow!("unknown gpu {g:?}"))?);
+            }
+            st.parallel =
+                parallel_override(u32_field("tp")?, u32_field("pp")?, u32_field("ep")?);
+            st.budget =
+                budget_override(u32_field("max_batch")?, u32_field("max_prefill_tokens")?);
+            if kind == StageKind::AfDecode {
+                st.af = Some(AfPoolSpec {
+                    attn_gpus: u32_field("attn_gpus")?.unwrap_or(4),
+                    ffn_gpus: u32_field("ffn_gpus")?.unwrap_or(4),
+                    micro_batches: u32_field("micro_batches")?.unwrap_or(2),
+                });
+            } else if ["attn_gpus", "ffn_gpus", "micro_batches"]
+                .iter()
+                .any(|key| sj.get(key).is_some())
+            {
+                bail!("stage {i}: attn_gpus/ffn_gpus/micro_batches only apply to af stages");
+            }
+            st.cluster = u32_field("cluster")?.unwrap_or(0);
+            st.node = u32_field("node")?.unwrap_or(0);
+            st.ep_clusters = u32_field("ep_clusters")?;
+            graph.stages.push(st);
+        }
+        if let Some(ej) = j.get("edges") {
+            for e in ej.as_arr()? {
+                let flow = match e.get("flow") {
+                    None => FlowKind::KvHandoff,
+                    Some(f) => {
+                        let f = f.as_str()?;
+                        FlowKind::parse(f).ok_or_else(|| anyhow!("unknown flow {f:?}"))?
+                    }
+                };
+                graph.edges.push(StageEdge {
+                    src: e.req("src")?.as_usize()?,
+                    dst: e.req("dst")?.as_usize()?,
+                    flow,
+                });
+            }
+        }
+        graph.finalize();
+        Ok(graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_dsl_parses_hybrid() {
+        let g = StageGraphConfig::parse_cli(
+            "prefill:2@h200,tp=2;af,attn=4,ffn=8,micro=2,epc=2",
+            None,
+        )
+        .unwrap();
+        assert_eq!(g.stages.len(), 2);
+        assert_eq!(g.stages[0].kind, StageKind::Prefill);
+        assert_eq!(g.stages[0].replicas, 2);
+        assert_eq!(g.stages[0].gpu.as_ref().unwrap().name, "H200-SXM-141GB");
+        assert_eq!(g.stages[0].parallel.unwrap().tp, 2);
+        let af = g.stages[1].af.unwrap();
+        assert_eq!((af.attn_gpus, af.ffn_gpus, af.micro_batches), (4, 8, 2));
+        assert_eq!(g.stages[1].ep_clusters, Some(2));
+        // auto-wired kv edge + activation self-edge
+        assert!(g
+            .edges
+            .contains(&StageEdge { src: 0, dst: 1, flow: FlowKind::KvHandoff }));
+        assert!(g
+            .edges
+            .contains(&StageEdge { src: 1, dst: 1, flow: FlowKind::Activation }));
+        assert!(g.validate().is_ok());
+        assert_eq!(g.entry_stages(), vec![0]);
+        assert_eq!(g.kv_out(0), vec![1]);
+    }
+
+    #[test]
+    fn cli_dsl_fan_out_auto_wires_all_decode_pools() {
+        let g = StageGraphConfig::parse_cli("prefill:2;decode:2@h100;decode:2@a800", None)
+            .unwrap();
+        assert_eq!(g.kv_out(0), vec![1, 2]);
+        assert!(g.validate().is_ok());
+        // names are auto-assigned
+        assert_eq!(g.stages[0].name, "prefill0");
+        assert_eq!(g.stages[2].name, "decode2");
+    }
+
+    #[test]
+    fn explicit_edges_override_auto_wiring() {
+        let g = StageGraphConfig::parse_cli(
+            "prefill:1;decode:1;decode:1",
+            Some("0>1,0>2"),
+        )
+        .unwrap();
+        assert_eq!(g.kv_out(0), vec![1, 2]);
+        let g2 = StageGraphConfig::parse_cli("prefill:1;decode:1;decode:1", Some("0>1"));
+        // decode stage 2 unreachable -> invalid
+        assert!(g2.unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn dsl_rejects_garbage() {
+        assert!(StageGraphConfig::parse_cli("warp:2", None).is_err());
+        assert!(StageGraphConfig::parse_cli("prefill:x", None).is_err());
+        assert!(StageGraphConfig::parse_cli("prefill:1@tpu", None).is_err());
+        assert!(StageGraphConfig::parse_cli("prefill:1,bogus=3", None).is_err());
+        assert!(StageGraphConfig::parse_cli("", None).is_err());
+        // AF pool sizing on a non-AF stage must not be dropped silently
+        assert!(StageGraphConfig::parse_cli("prefill:1;decode:2,attn=8", None).is_err());
+        let j = Json::parse(
+            r#"{"stages": [{"kind": "decode", "attn_gpus": 8},
+                           {"kind": "prefill"}]}"#,
+        )
+        .unwrap();
+        assert!(StageGraphConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn json_schema_round_trip_semantics() {
+        let j = Json::parse(
+            r#"{"stages": [
+                 {"kind": "prefill", "replicas": 2, "gpu": "h100", "tp": 2},
+                 {"kind": "af", "attn_gpus": 4, "ffn_gpus": 4, "micro_batches": 2,
+                  "cluster": 1}],
+                "edges": [{"src": 0, "dst": 1, "flow": "kv"}]}"#,
+        )
+        .unwrap();
+        let g = StageGraphConfig::from_json(&j).unwrap();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.stages[1].cluster, 1);
+        assert_eq!(g.entry_stages(), vec![0]);
+        // activation self-edge still derived for the AF stage
+        assert!(g
+            .edges
+            .contains(&StageEdge { src: 1, dst: 1, flow: FlowKind::Activation }));
+    }
+
+    #[test]
+    fn validation_catches_structural_errors() {
+        // prefill with nothing downstream
+        let mut g = StageGraphConfig::new(vec![StageConfig::new(StageKind::Prefill, 1)]);
+        g.finalize();
+        assert!(g.validate().is_err());
+        // decode-only graph has no entry
+        let mut g = StageGraphConfig::new(vec![StageConfig::new(StageKind::Decode, 1)]);
+        g.finalize();
+        assert!(g.validate().is_err());
+        // AF stage without pool sizing
+        let mut g = StageGraphConfig::new(vec![StageConfig::new(StageKind::AfDecode, 1)]);
+        g.finalize();
+        assert!(g.validate().is_err());
+        // zero replicas
+        let mut g = StageGraphConfig::new(vec![StageConfig::new(StageKind::Unified, 0)]);
+        g.finalize();
+        assert!(g.validate().is_err());
+        // healthy single unified stage
+        let mut g = StageGraphConfig::new(vec![StageConfig::new(StageKind::Unified, 2)]);
+        g.finalize();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.entry_stages(), vec![0]);
+    }
+}

@@ -1,31 +1,44 @@
-//! The GlobalController: stateful orchestrator of inter-stage workflows
-//! (§3.1).
+//! The GlobalController: stateful orchestrator of the stage graph
+//! (§3.1, generalized to heterogeneous multi-stage deployments).
 //!
-//! Owns the event engine, the request lifecycle state machine, and the
-//! cluster workers. Mode-specific coordination:
+//! The controller executes a [`crate::config::StageGraphConfig`]: a
+//! directed graph of stages (pools of replicas, each with its own GPU
+//! model, parallelism plan, scheduler budget, and cost model) joined by
+//! typed edges. Requests arrive at entry stages, walk kv edges on
+//! prefill completion, and decode to completion in decode-capable
+//! pools. The legacy modes are 1- and 2-stage instances of the same
+//! machinery:
 //!
-//! * **Co-located** — continuous batching on unified replicas.
+//! * **Co-located** — one unified stage, continuous batching.
 //! * **PD** — producer/consumer with system-level backpressure: the
 //!   controller queues `PREFILL_COMPLETE` requests and initiates
-//!   `KV_CACHE_TRANSFER` only when the decode stage signals memory
-//!   availability (§3.3 PD steps 1-3).
-//! * **AF** — the decode pool is an attention/FFN pair whose step time
-//!   comes from the event-dependency-graph executor
-//!   ([`crate::workflows::af`]).
+//!   `KV_CACHE_TRANSFER` only when a downstream pool signals memory
+//!   availability (§3.3 PD steps 1-3). With several decode pools (the
+//!   fan-out deployment) the controller picks the pool with the most
+//!   free memory.
+//! * **AF** — a decode stage that is an attention/FFN pair whose step
+//!   time comes from the event-dependency-graph executor
+//!   ([`crate::workflows::af`]); its attn/ffn cost models are built
+//!   once at construction, never per iteration.
+//!
+//! Stage-to-stage KV handoff rides the 3-tier hierarchical fabric
+//! ([`crate::network::HierFabric`]): stages sharing a node exchange
+//! over NVLink, stages on different nodes over IB, stages in different
+//! clusters over the WAN trunk.
 
 use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
 use crate::cluster::{ClusterWorker, ReplicaWorker, StageKind};
-use crate::config::{DeploymentMode, ExperimentConfig};
+use crate::config::{ExperimentConfig, StageGraphConfig};
 use crate::core::{EventQueue, Pcg64, SimTime};
 use crate::memory::{blocks_for_tokens, BlockManager};
-use crate::metrics::{MetricsCollector, ReqTimestamps, SimReport};
-use crate::moe::{self, EpSpec, EpTopology, ExpertPlacement};
-use crate::network::Fabric;
+use crate::metrics::{MetricsCollector, ReqTimestamps, SimReport, StageReport};
+use crate::moe::{self, EpFabric, EpSpec, EpTopology, ExpertPlacement};
+use crate::network::{HierFabric, NetLoc};
 use crate::predictor::{self, ExecutionPredictor};
-use crate::scheduler::{self, QueuedReq};
+use crate::scheduler::{self, IterBudget, QueuedReq};
 use crate::workflows::af::{af_step, AfStep};
 use crate::workflows::{BatchShape, CostCtx, CostModel};
 use crate::workload::RequestSpec;
@@ -57,34 +70,58 @@ pub struct Request {
 #[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrival(u64),
-    IterEnd { c: usize, r: usize },
-    KvDone { rid: u64, c: usize, r: usize },
+    IterEnd { s: usize, r: usize },
+    KvDone { rid: u64, s: usize, r: usize },
 }
 
-/// AF decode-pool parameters.
-#[derive(Clone, Copy, Debug)]
-struct AfParams {
+/// Prebuilt AF executor state: the attention- and FFN-pool cost models
+/// are constructed once here — the per-iteration hot path only draws
+/// routing and prices (no model clones, pinned by
+/// [`crate::workflows::cost::COST_MODELS_BUILT`] in the tests).
+struct AfRuntime {
     micro_batches: u32,
-    attn_gpus: u32,
-    ffn_gpus: u32,
+    attn_cost: CostModel,
+    ffn_cost: CostModel,
+}
+
+/// One stage of the graph at runtime: the replica pool plus everything
+/// needed to price its iterations.
+struct StageRuntime {
+    name: String,
+    cw: ClusterWorker,
+    /// Per-stage pricing (stage GPU, parallelism, EP placement).
+    cost: CostModel,
+    /// Per-stage operator-runtime predictor (stage GPU).
+    pred: Box<dyn ExecutionPredictor>,
+    budget: IterBudget,
+    /// Total GPUs backing the stage (reports).
+    gpus: u32,
+    gpu_name: String,
+    /// Coordinate in the hierarchical fabric.
+    loc: NetLoc,
+    af: Option<AfRuntime>,
 }
 
 pub struct GlobalController {
     cfg: ExperimentConfig,
+    graph: StageGraphConfig,
     queue: EventQueue<Ev>,
     reqs: Vec<Request>,
-    clusters: Vec<ClusterWorker>,
-    fabric: Fabric,
-    pred: Box<dyn ExecutionPredictor>,
+    stages: Vec<StageRuntime>,
+    /// Entry stages (prefill-capable, no incoming kv edge).
+    entry: Vec<usize>,
+    /// Round-robin cursor for entry routing.
+    entry_rr: usize,
+    /// KV-handoff successors per stage (resolved adjacency).
+    kv_out: Vec<Vec<usize>>,
+    /// Contended 3-tier fabric for stage-to-stage KV handoff.
+    fabric: HierFabric,
     rng: Pcg64,
     metrics: MetricsCollector,
-    /// PREFILL_COMPLETE requests awaiting a KV transfer slot.
-    pending_transfers: VecDeque<u64>,
-    cost: CostModel,
-    af: Option<AfParams>,
-    /// Expert placement for the AF FFN pool (static per run; built once).
-    af_ep: Option<EpSpec>,
-    /// Iteration start times per (cluster, replica) for busy accounting.
+    /// PREFILL_COMPLETE requests awaiting a KV transfer slot, with the
+    /// stage that produced them.
+    pending_transfers: VecDeque<(u64, usize)>,
+    /// Iteration start times per (stage, replica) for busy accounting.
     iter_started: Vec<Vec<SimTime>>,
 }
 
@@ -96,71 +133,26 @@ pub fn run(cfg: &ExperimentConfig) -> Result<SimReport> {
 impl GlobalController {
     pub fn new(cfg: ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
-        let pred = predictor::build(cfg.predictor, cfg.artifacts_dir.as_deref())?;
+        let graph = cfg.stage_graph();
         let model = &cfg.model;
-        let par = cfg.parallel;
-        let gpus_per_replica = par.gpus_per_replica();
-        let replica_mem = || -> BlockManager {
-            BlockManager::from_budget(
-                cfg.gpu.hbm_capacity * gpus_per_replica as u64,
-                model.weight_bytes_per_gpu(par.tp, par.ep) * gpus_per_replica as u64,
-                model.kv_bytes_per_token(),
-                cfg.policy.kv_reserve_frac,
-            )
-        };
-        let clusters = match cfg.mode {
-            DeploymentMode::Colocated { replicas } => vec![ClusterWorker::new(
-                StageKind::Unified,
-                replicas,
-                gpus_per_replica,
-                replica_mem(),
-            )],
-            DeploymentMode::PdDisagg { prefill_replicas, decode_replicas } => vec![
-                ClusterWorker::new(
-                    StageKind::Prefill,
-                    prefill_replicas,
-                    gpus_per_replica,
-                    replica_mem(),
-                ),
-                ClusterWorker::new(
-                    StageKind::Decode,
-                    decode_replicas,
-                    gpus_per_replica,
-                    replica_mem(),
-                ),
-            ],
-            DeploymentMode::AfDisagg { prefill_replicas, attn_gpus, ffn_gpus, .. } => {
-                // KV lives on the attention side of the AF pair; roughly
-                // half the weights (attention stack) sit with it.
-                let af_mem = BlockManager::from_budget(
-                    cfg.gpu.hbm_capacity * attn_gpus as u64,
-                    model.param_count() * model.dtype_bytes as u64 / 2,
-                    model.kv_bytes_per_token(),
-                    cfg.policy.kv_reserve_frac,
-                );
-                vec![
-                    ClusterWorker::new(
-                        StageKind::Prefill,
-                        prefill_replicas,
-                        gpus_per_replica,
-                        replica_mem(),
-                    ),
-                    ClusterWorker::new(StageKind::AfDecode, 1, attn_gpus + ffn_gpus, af_mem),
-                ]
+        // EP fabric: legacy flat intra+cross unless node granularity is
+        // engaged (`ranks_per_node > 0`). The NIC ingress-asymmetry knob
+        // applies smoothly in both modes — it must not flip the fabric
+        // model, only scale ingress bandwidth.
+        let ep_fabric = if cfg.ranks_per_node == 0 {
+            EpFabric {
+                ingress_scale: cfg.nic_ingress_scale,
+                ..EpFabric::flat(cfg.link, cfg.cross_link)
             }
+        } else {
+            EpFabric::hierarchical(cfg.hier_spec(), cfg.ranks_per_node, cfg.nic_ingress_scale)
         };
-        let af = match cfg.mode {
-            DeploymentMode::AfDisagg { attn_gpus, ffn_gpus, micro_batches, .. } => {
-                Some(AfParams { micro_batches, attn_gpus, ffn_gpus })
-            }
-            _ => None,
-        };
-        // EP placement over `ranks` expert ranks spanning `ep_clusters`
+        // EP placement over `ranks` expert ranks spanning `clusters`
         // clusters. The replicated-hot policy targets the experts a
         // deterministic warmup routing draw marks hottest — with the
         // stable skewed-popularity model this is the run's actual hot
         // set (see `moe::expert_popularity`).
-        let make_ep = |ranks: u32| -> Option<EpSpec> {
+        let make_ep = |ranks: u32, clusters: u32| -> Option<EpSpec> {
             let moe = model.moe.as_ref()?;
             if ranks <= 1 {
                 return None;
@@ -177,38 +169,116 @@ impl GlobalController {
                 placement: ExpertPlacement::build(
                     cfg.policy.ep_placement,
                     moe.n_experts,
-                    EpTopology::new(ranks, cfg.ep_clusters),
+                    EpTopology::new(ranks, clusters),
                     Some(&hint),
                 ),
-                intra: cfg.link,
-                cross: cfg.cross_link,
+                fabric: ep_fabric,
             })
         };
-        // AF mode: the FFN pool is the EP domain and the a2f/f2a hops
-        // become the EP dispatch/combine phases
-        let af_ep = af.and_then(|p| make_ep(p.ffn_gpus));
-        let mut cost = CostModel::new(model.clone(), par, cfg.link);
-        cost.moe_routing = cfg.policy.moe_routing;
-        cost.straggler_max = cfg.policy.straggler_max;
-        cost.overhead = cfg.overhead;
-        // co-located / PD: replica-level EP ranks
-        cost.ep = make_ep(par.ep);
-        let iter_started = clusters
+        let base_cost = |par: crate::parallelism::Parallelism| -> CostModel {
+            let mut cost = CostModel::new(model.clone(), par, cfg.link);
+            cost.moe_routing = cfg.policy.moe_routing;
+            cost.straggler_max = cfg.policy.straggler_max;
+            cost.overhead = cfg.overhead;
+            cost.capacity_factor = cfg.policy.capacity_factor;
+            cost
+        };
+        let mut stages = Vec::with_capacity(graph.stages.len());
+        for st in &graph.stages {
+            let gpu = st.gpu.clone().unwrap_or_else(|| cfg.gpu.clone());
+            let par = st.parallel.unwrap_or(cfg.parallel);
+            let budget = st.budget.unwrap_or(cfg.policy.budget);
+            let ep_clusters = st.ep_clusters.unwrap_or(cfg.ep_clusters);
+            let gpus_per_replica = par.gpus_per_replica();
+            let (cw, gpus, af) = match st.af {
+                Some(afp) => {
+                    // KV lives on the attention side of the AF pair;
+                    // roughly half the weights (attention stack) sit
+                    // with it.
+                    let af_mem = BlockManager::from_budget(
+                        gpu.hbm_capacity * afp.attn_gpus as u64,
+                        model.param_count() * model.dtype_bytes as u64 / 2,
+                        model.kv_bytes_per_token(),
+                        cfg.policy.kv_reserve_frac,
+                    );
+                    let group_gpus = afp.attn_gpus + afp.ffn_gpus;
+                    let cw = ClusterWorker::new(st.kind, st.replicas, group_gpus, af_mem);
+                    // attention pool: TP across its GPUs; FFN pool: EP
+                    // for MoE (or TP for dense)
+                    let attn_par = crate::parallelism::Parallelism::tp(
+                        afp.attn_gpus.min(model.n_kv_heads).max(1),
+                    );
+                    let ffn_par = if model.is_moe() {
+                        crate::parallelism::Parallelism::new(1, 1, afp.ffn_gpus.max(1))
+                    } else {
+                        crate::parallelism::Parallelism::tp(afp.ffn_gpus.max(1))
+                    };
+                    let mut attn_cost = base_cost(attn_par);
+                    attn_cost.overhead = crate::config::OverheadConfig::zero();
+                    let mut ffn_cost = base_cost(ffn_par);
+                    ffn_cost.overhead = crate::config::OverheadConfig::zero();
+                    // the FFN pool is the EP domain: a2f/f2a hops become
+                    // the EP dispatch/combine phases
+                    ffn_cost.ep = make_ep(afp.ffn_gpus, ep_clusters);
+                    let af = AfRuntime {
+                        micro_batches: afp.micro_batches,
+                        attn_cost,
+                        ffn_cost,
+                    };
+                    (cw, st.replicas * group_gpus, Some(af))
+                }
+                None => {
+                    let mem = BlockManager::from_budget(
+                        gpu.hbm_capacity * gpus_per_replica as u64,
+                        model.weight_bytes_per_gpu(par.tp, par.ep) * gpus_per_replica as u64,
+                        model.kv_bytes_per_token(),
+                        cfg.policy.kv_reserve_frac,
+                    );
+                    let cw = ClusterWorker::new(st.kind, st.replicas, gpus_per_replica, mem);
+                    (cw, st.replicas * gpus_per_replica, None)
+                }
+            };
+            let mut cost = base_cost(par);
+            // replica-level EP ranks (co-located / PD stages)
+            if af.is_none() {
+                cost.ep = make_ep(par.ep, ep_clusters);
+            }
+            let pred = predictor::build_for(
+                cfg.predictor,
+                gpu.clone(),
+                cfg.link,
+                cfg.artifacts_dir.as_deref(),
+            )?;
+            stages.push(StageRuntime {
+                name: st.name.clone(),
+                cw,
+                cost,
+                pred,
+                budget,
+                gpus,
+                gpu_name: gpu.name.to_string(),
+                loc: NetLoc::new(st.cluster, st.node),
+                af,
+            });
+        }
+        let entry = graph.entry_stages();
+        let kv_out: Vec<Vec<usize>> = (0..graph.stages.len()).map(|s| graph.kv_out(s)).collect();
+        let iter_started = stages
             .iter()
-            .map(|c| vec![SimTime::ZERO; c.replicas.len()])
+            .map(|st| vec![SimTime::ZERO; st.cw.replicas.len()])
             .collect();
         Ok(GlobalController {
+            graph,
             queue: EventQueue::new(),
             reqs: Vec::new(),
-            clusters,
-            fabric: Fabric::new(cfg.link),
-            pred,
+            stages,
+            entry,
+            entry_rr: 0,
+            kv_out,
+            fabric: HierFabric::new(cfg.hier_spec()),
             rng: Pcg64::new(cfg.seed),
             metrics: MetricsCollector::default(),
             pending_transfers: VecDeque::new(),
-            cost,
-            af,
-            af_ep,
             iter_started,
             cfg,
         })
@@ -238,8 +308,8 @@ impl GlobalController {
         while let Some(ev) = self.queue.pop() {
             match ev.kind {
                 Ev::Arrival(rid) => self.on_arrival(rid),
-                Ev::IterEnd { c, r } => self.on_iter_end(c, r),
-                Ev::KvDone { rid, c, r } => self.on_kv_done(rid, c, r),
+                Ev::IterEnd { s, r } => self.on_iter_end(s, r),
+                Ev::KvDone { rid, s, r } => self.on_kv_done(rid, s, r),
             }
         }
         let unfinished = self
@@ -250,75 +320,121 @@ impl GlobalController {
         if unfinished > 0 {
             bail!("simulation stalled with {unfinished} unfinished requests");
         }
-        self.metrics.predictor_evals = self.pred.evals();
+        self.metrics.predictor_evals = self.stages.iter().map(|st| st.pred.evals()).sum();
+        let horizon = self.queue.now();
+        let stage_reports: Vec<StageReport> = self
+            .stages
+            .iter()
+            .map(|st| StageReport {
+                name: st.name.clone(),
+                kind: st.cw.kind.name().to_string(),
+                replicas: st.cw.replicas.len() as u32,
+                gpus: st.gpus,
+                gpu_name: st.gpu_name.clone(),
+                iterations: st.cw.replicas.iter().map(|r| r.iterations).sum(),
+                tokens: st.cw.replicas.iter().map(|r| r.tokens_processed).sum(),
+                busy_frac: st.cw.busy_fraction(horizon),
+                peak_mem_frac: st.cw.peak_mem_frac(),
+            })
+            .collect();
+        // sum over the already-resolved runtime stages (cfg.n_gpus()
+        // would re-lower and re-clone the whole graph)
+        let n_gpus = self.stages.iter().map(|st| st.gpus).sum();
         Ok(SimReport {
-            mode: self.cfg.mode.name().to_string(),
-            predictor: self.pred.name().to_string(),
+            mode: self.cfg.mode_name().to_string(),
+            predictor: self.stages[0].pred.name().to_string(),
             sim_duration: self.queue.now().as_secs_f64(),
             host_duration: host_start.elapsed().as_secs_f64(),
             events_processed: self.queue.processed(),
-            n_gpus: self.cfg.n_gpus(),
+            n_gpus,
             metrics: self.metrics,
+            stages: stage_reports,
         })
     }
 
     // -- event handlers ----------------------------------------------------
 
+    /// Whether a request needing `full_blocks` for its lifetime could
+    /// ever be handed downstream from entry stage `s` (admission
+    /// control: a request that fits nowhere downstream would deadlock
+    /// the PREFILL_COMPLETE queue).
+    fn fits_downstream(&self, s: usize, full_blocks: u64) -> bool {
+        let dsts = &self.kv_out[s];
+        dsts.is_empty()
+            || dsts.iter().any(|&d| {
+                self.stages[d]
+                    .cw
+                    .replicas
+                    .iter()
+                    .any(|rep| full_blocks <= rep.mem.total_blocks())
+            })
+    }
+
     fn on_arrival(&mut self, rid: u64) {
-        let req = &self.reqs[rid as usize];
-        let target_cluster = 0usize; // Unified or Prefill frontend
-        let kind = self.clusters[target_cluster].kind;
-        let blocks_needed = match kind {
-            // co-located replicas hold KV for the whole lifetime
-            StageKind::Unified => blocks_for_tokens(req.spec.input_len + req.spec.output_len),
-            // prefill stage holds KV only until handoff
-            _ => blocks_for_tokens(req.spec.input_len),
+        let (input_len, output_len) = {
+            let rq = &self.reqs[rid as usize];
+            (rq.spec.input_len, rq.spec.output_len)
         };
-        // admission control: the request must fit its frontend replica's
-        // pool AND — for disaggregated modes — the downstream decode pool
-        // (otherwise it could never be transferred and would deadlock the
-        // controller's PREFILL_COMPLETE queue)
-        let fits_frontend =
-            blocks_needed <= self.clusters[target_cluster].replicas[0].mem.total_blocks();
-        let fits_downstream = self.clusters.len() < 2
-            || req.spec.output_len <= 1
-            || blocks_for_tokens(req.spec.input_len + req.spec.output_len)
-                <= self.clusters[1].replicas[0].mem.total_blocks();
-        if !fits_frontend || !fits_downstream {
+        let full_blocks = blocks_for_tokens(input_len + output_len);
+        // collect admissible (stage, replica) slots across entry stages
+        let mut slots: Vec<(usize, usize, u64)> = Vec::new();
+        let mut loads: Vec<usize> = Vec::new();
+        let mut free: Vec<u64> = Vec::new();
+        for &s in &self.entry {
+            let blocks_needed = match self.stages[s].cw.kind {
+                // co-located replicas hold KV for the whole lifetime
+                StageKind::Unified => full_blocks,
+                // prefill stage holds KV only until handoff
+                _ => blocks_for_tokens(input_len),
+            };
+            let fits_frontend = self.stages[s]
+                .cw
+                .replicas
+                .iter()
+                .any(|rep| blocks_needed <= rep.mem.total_blocks());
+            let fits_down = output_len <= 1 || self.fits_downstream(s, full_blocks);
+            if !fits_frontend || !fits_down {
+                continue;
+            }
+            for (r, rep) in self.stages[s].cw.replicas.iter().enumerate() {
+                slots.push((s, r, blocks_needed));
+                loads.push(rep.load());
+                free.push(rep.mem.free_blocks());
+            }
+        }
+        if slots.is_empty() {
             self.reqs[rid as usize].state = ReqState::Rejected;
             self.metrics.rejected_requests += 1;
             return;
         }
-        let cw = &self.clusters[target_cluster];
-        let loads = cw.loads();
-        let free = cw.free_blocks();
-        let mut rr = cw.rr_cursor;
-        let r = scheduler::route(self.cfg.policy.route, &loads, &free, &mut rr);
-        self.clusters[target_cluster].rr_cursor = rr;
+        let mut rr = self.entry_rr;
+        let i = scheduler::route(self.cfg.policy.route, &loads, &free, &mut rr);
+        self.entry_rr = rr;
+        let (s, r, blocks_needed) = slots[i];
         let q = QueuedReq {
             id: rid,
-            tokens_needed: self.reqs[rid as usize].spec.input_len,
+            tokens_needed: input_len,
             blocks_needed,
             arrival: self.queue.now(),
         };
-        self.clusters[target_cluster].replicas[r].waiting.push_back(q);
-        self.try_start_iteration(target_cluster, r);
+        self.stages[s].cw.replicas[r].waiting.push_back(q);
+        self.try_start_iteration(s, r);
     }
 
-    fn on_iter_end(&mut self, c: usize, r: usize) {
+    fn on_iter_end(&mut self, s: usize, r: usize) {
         let now = self.queue.now();
-        let kind = self.clusters[c].kind;
+        let kind = self.stages[s].cw.kind;
         {
-            let started = self.iter_started[c][r];
-            let repl = &mut self.clusters[c].replicas[r];
+            let started = self.iter_started[s][r];
+            let repl = &mut self.stages[s].cw.replicas[r];
             repl.busy = false;
             repl.iterations += 1;
             repl.busy_ns += (now - started).0;
         }
         self.metrics.iterations += 1;
 
-        let running: Vec<u64> = self.clusters[c].replicas[r].running.clone();
-        let chunks: Vec<u32> = self.clusters[c].replicas[r].iter_chunks.clone();
+        let running: Vec<u64> = self.stages[s].cw.replicas[r].running.clone();
+        let chunks: Vec<u32> = self.stages[s].cw.replicas[r].iter_chunks.clone();
         let mut finished: Vec<u64> = Vec::new();
         let mut to_transfer: Vec<u64> = Vec::new();
 
@@ -333,7 +449,7 @@ impl GlobalController {
                 let rq = &mut self.reqs[rid as usize];
                 rq.prefill_progress += chunk;
                 self.metrics.prefill_tokens += chunk as u64;
-                self.clusters[c].replicas[r].tokens_processed += chunk as u64;
+                self.stages[s].cw.replicas[r].tokens_processed += chunk as u64;
                 if rq.prefill_progress >= input_len {
                     // prefill iteration emits the first output token
                     rq.ts.prefill_done = Some(now);
@@ -358,7 +474,7 @@ impl GlobalController {
                 self.metrics.output_tokens += 1;
                 self.metrics.tbt.push((now - rq.last_token).as_secs_f64());
                 rq.last_token = now;
-                self.clusters[c].replicas[r].tokens_processed += 1;
+                self.stages[s].cw.replicas[r].tokens_processed += 1;
                 if rq.decoded >= output_len {
                     finished.push(rid);
                 }
@@ -375,25 +491,25 @@ impl GlobalController {
                 self.metrics.e2e.push(e2e);
                 self.metrics.norm_latency.push(e2e / rq.spec.output_len.max(1) as f64);
                 self.metrics.completed_requests += 1;
-                self.clusters[c].replicas[r].mem.free_request(rid);
-                self.clusters[c].replicas[r].running.retain(|&x| x != rid);
+                self.stages[s].cw.replicas[r].mem.free_request(rid);
+                self.stages[s].cw.replicas[r].running.retain(|&x| x != rid);
             }
         }
         // hand prefill-complete requests to the controller's transfer queue
         for &rid in &to_transfer {
-            self.clusters[c].replicas[r].mem.free_request(rid);
-            self.clusters[c].replicas[r].running.retain(|&x| x != rid);
-            self.pending_transfers.push_back(rid);
+            self.stages[s].cw.replicas[r].mem.free_request(rid);
+            self.stages[s].cw.replicas[r].running.retain(|&x| x != rid);
+            self.pending_transfers.push_back((rid, s));
         }
         if !to_transfer.is_empty() || !finished.is_empty() {
-            // memory availability changed: the decode ClusterScheduler
+            // memory availability changed: the downstream ClusterScheduler
             // signals the controller (PD backpressure step 2/3)
             self.try_dispatch_transfers();
         }
-        self.try_start_iteration(c, r);
+        self.try_start_iteration(s, r);
     }
 
-    fn on_kv_done(&mut self, rid: u64, c: usize, r: usize) {
+    fn on_kv_done(&mut self, rid: u64, s: usize, r: usize) {
         let rq = &mut self.reqs[rid as usize];
         rq.state = ReqState::Decoding;
         let q = QueuedReq {
@@ -402,78 +518,108 @@ impl GlobalController {
             blocks_needed: 0, // reserved at dispatch time
             arrival: self.queue.now(),
         };
-        self.clusters[c].replicas[r].waiting.push_back(q);
-        self.try_start_iteration(c, r);
+        self.stages[s].cw.replicas[r].waiting.push_back(q);
+        self.try_start_iteration(s, r);
     }
 
     // -- coordination ------------------------------------------------------
 
     /// PD backpressure: initiate KV transfers only into replicas with
-    /// free memory, FIFO over the PREFILL_COMPLETE queue.
+    /// free memory, FIFO over the PREFILL_COMPLETE queue. With several
+    /// downstream pools (fan-out) the pool with the most free memory
+    /// wins. FIFO is enforced *per destination set*: a held request
+    /// blocks later requests that could route to any of its candidate
+    /// pools (no overtaking within a pipeline), but requests bound for
+    /// disjoint pools — independent prefill->decode pipelines in the
+    /// same graph — dispatch freely past it.
     fn try_dispatch_transfers(&mut self) {
-        if self.clusters.len() < 2 {
-            return;
-        }
-        let dc = 1usize;
         let now = self.queue.now();
-        while let Some(&rid) = self.pending_transfers.front() {
+        let mut held: VecDeque<(u64, usize)> = VecDeque::new();
+        // destinations an earlier held request may still claim
+        let mut blocked: Vec<bool> = vec![false; self.stages.len()];
+        while let Some((rid, src)) = self.pending_transfers.pop_front() {
             let (input_len, output_len) = {
                 let rq = &self.reqs[rid as usize];
                 (rq.spec.input_len, rq.spec.output_len)
             };
             let blocks = blocks_for_tokens(input_len + output_len);
+            let dsts = self.kv_out[src].clone();
             // defensive: a request no replica could EVER hold must not
-            // block the queue head (admission control should prevent this)
-            if self.clusters[dc]
-                .replicas
-                .iter()
-                .all(|rep| blocks > rep.mem.total_blocks())
-            {
-                self.pending_transfers.pop_front();
+            // clog the queue (admission control should prevent this)
+            if dsts.iter().all(|&d| {
+                self.stages[d]
+                    .cw
+                    .replicas
+                    .iter()
+                    .all(|rep| blocks > rep.mem.total_blocks())
+            }) {
                 self.reqs[rid as usize].state = ReqState::Rejected;
                 self.metrics.rejected_requests += 1;
                 continue;
             }
-            // choose the replica with the most free memory that fits
-            let candidates = self.clusters[dc].free_blocks();
-            let mut best: Option<(usize, u64)> = None;
-            for (i, &free) in candidates.iter().enumerate() {
-                if free >= blocks && best.map_or(true, |(_, b)| free > b) {
-                    best = Some((i, free));
+            let hold = |blocked: &mut Vec<bool>, held: &mut VecDeque<(u64, usize)>| {
+                for &d in &dsts {
+                    blocked[d] = true;
+                }
+                held.push_back((rid, src));
+            };
+            // FIFO per pipeline: an earlier held request owns these pools
+            if dsts.iter().any(|&d| blocked[d]) {
+                hold(&mut blocked, &mut held);
+                continue;
+            }
+            // choose the (stage, replica) with the most free memory that fits
+            let mut best: Option<(usize, usize, u64)> = None;
+            for &d in &dsts {
+                for (r, rep) in self.stages[d].cw.replicas.iter().enumerate() {
+                    let fr = rep.mem.free_blocks();
+                    let better = match best {
+                        None => true,
+                        Some((_, _, b)) => fr > b,
+                    };
+                    if fr >= blocks && better {
+                        best = Some((d, r, fr));
+                    }
                 }
             }
-            let Some((r, _)) = best else {
-                break; // backpressure: no consumer memory, hold the queue
+            let Some((d, r, _)) = best else {
+                // backpressure: no consumer memory in this pipeline
+                hold(&mut blocked, &mut held);
+                continue;
             };
-            self.pending_transfers.pop_front();
-            self.clusters[dc].replicas[r]
+            self.stages[d].cw.replicas[r]
                 .mem
                 .allocate(rid, blocks)
                 .expect("reserved blocks must fit");
-            let bytes = input_len as f64 * self.cost.model.kv_bytes_per_token() as f64;
-            // one directed link per cluster pair models the NIC path
-            let delivery = self.fabric.transfer(now, 0, dc as u32, bytes);
+            let bytes =
+                input_len as f64 * self.stages[src].cost.model.kv_bytes_per_token() as f64;
+            // the handoff rides the hierarchical fabric between the two
+            // stages' coordinates (NVLink / IB / WAN by placement)
+            let (src_loc, dst_loc) = (self.stages[src].loc, self.stages[d].loc);
+            let delivery = self.fabric.transfer(now, src_loc, dst_loc, bytes);
             self.metrics.kv_transfers += 1;
             self.metrics.kv_bytes += bytes;
             self.reqs[rid as usize].state = ReqState::Transferring;
-            self.queue.schedule_at(delivery, Ev::KvDone { rid, c: dc, r });
+            self.queue.schedule_at(delivery, Ev::KvDone { rid, s: d, r });
         }
+        self.pending_transfers = held;
     }
 
     /// Form and launch the next iteration on a replica if it is idle and
     /// has work.
-    fn try_start_iteration(&mut self, c: usize, r: usize) {
-        let kind = self.clusters[c].kind;
-        let budget = self.cfg.policy.budget;
+    fn try_start_iteration(&mut self, s: usize, r: usize) {
+        let kind = self.stages[s].cw.kind;
+        let budget = self.stages[s].budget;
         let policy = self.cfg.policy.batch;
         {
-            let repl = &mut self.clusters[c].replicas[r];
+            let repl = &mut self.stages[s].cw.replicas[r];
             if repl.busy || !repl.has_work() {
                 return;
             }
             // admissions (reserving memory)
             let free = repl.mem.free_blocks();
-            let admitted = scheduler::admit(policy, &mut repl.waiting, repl.running.len(), &budget, free);
+            let admitted =
+                scheduler::admit(policy, &mut repl.waiting, repl.running.len(), &budget, free);
             for q in &admitted {
                 if q.blocks_needed > 0 {
                     repl.mem.allocate(q.id, q.blocks_needed).expect("admit checked memory");
@@ -488,7 +634,7 @@ impl GlobalController {
             }
         }
         // build the batch shape
-        let running = self.clusters[c].replicas[r].running.clone();
+        let running = self.stages[s].cw.replicas[r].running.clone();
         if running.is_empty() {
             return;
         }
@@ -518,50 +664,37 @@ impl GlobalController {
             return;
         }
         let dt = if kind == StageKind::AfDecode {
-            self.af_iteration_time(&shape)
+            self.af_iteration_time(s, &shape)
         } else {
+            let st = &mut self.stages[s];
             let mut ctx = CostCtx {
-                pred: self.pred.as_mut(),
+                pred: st.pred.as_mut(),
                 rng: &mut self.rng,
                 metrics: Some(&mut self.metrics),
             };
-            self.cost.iteration_time(&mut ctx, &shape)
+            st.cost.iteration_time(&mut ctx, &shape)
         };
         debug_assert!(dt > 0.0);
-        let repl = &mut self.clusters[c].replicas[r];
+        let repl = &mut self.stages[s].cw.replicas[r];
         repl.busy = true;
         repl.iter_chunks = chunks;
-        self.iter_started[c][r] = self.queue.now();
-        self.queue.schedule_in(SimTime::from_secs_f64(dt), Ev::IterEnd { c, r });
+        self.iter_started[s][r] = self.queue.now();
+        self.queue.schedule_in(SimTime::from_secs_f64(dt), Ev::IterEnd { s, r });
     }
 
     /// AF decode step: partition the batch into micro-batches and run
     /// the dependency-graph executor. On the MoE path every
     /// `(layer, micro)` cell is data-dependent: a fresh routing draw
     /// sets the per-rank expert loads (stragglers) *and* the
-    /// dispatch/combine transfer times through the EP fabric.
-    fn af_iteration_time(&mut self, shape: &BatchShape) -> f64 {
-        let af = self.af.expect("af params");
-        let m = (af.micro_batches as usize).max(1).min(shape.decode_ctx.len().max(1));
-        let model = &self.cost.model;
-        // attention pool: TP across its GPUs; FFN pool: EP for MoE
-        // (or TP for dense)
-        let attn_par = crate::parallelism::Parallelism::tp(
-            af.attn_gpus.min(model.n_kv_heads).max(1),
-        );
-        let ffn_par = if model.is_moe() {
-            crate::parallelism::Parallelism::new(1, 1, af.ffn_gpus.max(1))
-        } else {
-            crate::parallelism::Parallelism::tp(af.ffn_gpus.max(1))
-        };
-        let mut attn_cost = CostModel::new(model.clone(), attn_par, self.cost.link);
-        attn_cost.overhead = crate::config::OverheadConfig::zero();
-        let mut ffn_cost = CostModel::new(model.clone(), ffn_par, self.cost.link);
-        ffn_cost.overhead = crate::config::OverheadConfig::zero();
-        ffn_cost.moe_routing = self.cost.moe_routing;
-        ffn_cost.straggler_max = self.cost.straggler_max;
-        // EP domain of the AF FFN pool: placement built once at startup
-        ffn_cost.ep = self.af_ep.clone();
+    /// dispatch/combine transfer times through the EP fabric. The
+    /// attn/ffn cost models were built once at controller construction.
+    fn af_iteration_time(&mut self, s: usize, shape: &BatchShape) -> f64 {
+        let st = &mut self.stages[s];
+        let afr = st.af.as_ref().expect("af runtime on AF stage");
+        let m = (afr.micro_batches as usize).max(1).min(shape.decode_ctx.len().max(1));
+        let attn_cost = &afr.attn_cost;
+        let ffn_cost = &afr.ffn_cost;
+        let model = &attn_cost.model;
         let ep_active = ffn_cost.ep.is_some();
 
         // round-robin partition of decode sequences
@@ -590,30 +723,30 @@ impl GlobalController {
             }
             let t_attn = {
                 let mut ctx = CostCtx {
-                    pred: self.pred.as_mut(),
+                    pred: st.pred.as_mut(),
                     rng: &mut self.rng,
                     metrics: Some(&mut self.metrics),
                 };
                 attn_cost.attn_block_time(&mut ctx, &micro_shape)
             };
             // dense fallback: point-to-point hop sized by this micro-batch
-            let xfer = crate::oracle::p2p_time(micro_tokens as f64 * d_bytes, &self.cost.link);
+            let xfer = crate::oracle::p2p_time(micro_tokens as f64 * d_bytes, &attn_cost.link);
             for l in 0..layers {
                 attn_time[l][k] = t_attn;
                 let mut ctx = CostCtx {
-                    pred: self.pred.as_mut(),
+                    pred: st.pred.as_mut(),
                     rng: &mut self.rng,
                     metrics: Some(&mut self.metrics),
                 };
                 if ep_active {
                     // fresh routing per layer: data-dependent stragglers
                     // and skew-dependent dispatch/combine
-                    let s = ffn_cost
+                    let sample = ffn_cost
                         .moe_ffn_ep(&mut ctx, micro_tokens)
                         .expect("ep spec attached and micro-batch non-empty");
-                    ffn_time[l][k] = s.ffn_secs;
-                    a2f_time[l][k] = s.dispatch_secs;
-                    f2a_time[l][k] = s.combine_secs;
+                    ffn_time[l][k] = sample.ffn_secs;
+                    a2f_time[l][k] = sample.dispatch_secs;
+                    f2a_time[l][k] = sample.combine_secs;
                 } else {
                     // fresh routing per layer: data-dependent straggler noise
                     ffn_time[l][k] = ffn_cost.ffn_block_time(&mut ctx, micro_tokens);
@@ -631,28 +764,38 @@ impl GlobalController {
         }
         let lm_head = {
             let mut ctx = CostCtx {
-                pred: self.pred.as_mut(),
+                pred: st.pred.as_mut(),
                 rng: &mut self.rng,
                 metrics: Some(&mut self.metrics),
             };
             attn_cost.lm_head_time(&mut ctx, shape.lm_head_rows as u64)
         };
-        let o = &self.cost.overhead;
+        let o = &st.cost.overhead;
         o.sched_overhead_s + layers as f64 * o.launch_gap_s + o.op_scale * (t_graph + lm_head)
     }
 
     // -- accessors for tests/tools ------------------------------------------
 
-    pub fn clusters(&self) -> &[ClusterWorker] {
-        &self.clusters
+    /// The resolved stage graph this controller executes.
+    pub fn stage_graph(&self) -> &StageGraphConfig {
+        &self.graph
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The replica pool of stage `s`.
+    pub fn stage(&self, s: usize) -> &ClusterWorker {
+        &self.stages[s].cw
     }
 
     pub fn pending_transfer_count(&self) -> usize {
         self.pending_transfers.len()
     }
 
-    pub fn replica(&self, c: usize, r: usize) -> &ReplicaWorker {
-        &self.clusters[c].replicas[r]
+    pub fn replica(&self, s: usize, r: usize) -> &ReplicaWorker {
+        &self.stages[s].cw.replicas[r]
     }
 }
 
@@ -677,6 +820,10 @@ mod tests {
         assert_eq!(report.metrics.output_tokens, 32 * 16);
         assert!(report.sim_duration > 0.0);
         assert!(report.metrics.ttft.len() == 32);
+        // the 1-stage graph reports itself
+        assert_eq!(report.stages.len(), 1);
+        assert_eq!(report.stages[0].kind, "unified");
+        assert!(report.stages[0].iterations > 0);
     }
 
     #[test]
@@ -688,6 +835,9 @@ mod tests {
         // every multi-token request crosses the PD boundary once
         assert_eq!(report.metrics.kv_transfers, 24);
         assert!(report.metrics.kv_bytes > 0.0);
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(report.stages[0].kind, "prefill");
+        assert_eq!(report.stages[1].kind, "decode");
     }
 
     #[test]
@@ -743,5 +893,19 @@ mod tests {
         let report = run(&cfg).unwrap();
         assert_eq!(report.metrics.completed_requests, 8);
         assert!(report.metrics.op_time.contains_key("grouped_gemm"));
+    }
+
+    #[test]
+    fn controller_exposes_stage_pools() {
+        let cfg = ExperimentConfig::pd(ModelConfig::tiny(), 2, 1)
+            .with_workload(WorkloadSpec::table2(4, 32, 4));
+        let gc = GlobalController::new(cfg).unwrap();
+        assert_eq!(gc.n_stages(), 2);
+        assert_eq!(gc.stage(0).kind, StageKind::Prefill);
+        assert_eq!(gc.stage(0).replicas.len(), 2);
+        assert_eq!(gc.stage(1).kind, StageKind::Decode);
+        assert_eq!(gc.pending_transfer_count(), 0);
+        assert!(!gc.replica(1, 0).busy);
+        assert_eq!(gc.stage_graph().kv_out(0), vec![1]);
     }
 }

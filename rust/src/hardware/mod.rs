@@ -68,6 +68,28 @@ impl GpuSpec {
         }
     }
 
+    /// NVIDIA H200-SXM-141GB — the big-HBM prefill option in
+    /// heterogeneous deployments.
+    pub fn h200() -> Self {
+        GpuSpec {
+            name: "H200-SXM-141GB",
+            hbm_bw: 4.8e12,
+            hbm_capacity: 141 * (1 << 30),
+            ..Self::h100()
+        }
+    }
+
+    /// Look up a preset by CLI name.
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name {
+            "a800" => Some(Self::a800()),
+            "a100" => Some(Self::a100()),
+            "h100" => Some(Self::h100()),
+            "h200" => Some(Self::h200()),
+            _ => None,
+        }
+    }
+
     pub fn per_sm_bw(&self) -> f64 {
         self.hbm_bw * self.mem_eff / self.sms as f64
     }
@@ -154,6 +176,14 @@ mod tests {
     #[test]
     fn h100_is_faster() {
         assert!(GpuSpec::h100().peak_flops > GpuSpec::a800().peak_flops);
+    }
+
+    #[test]
+    fn gpu_presets_by_name() {
+        assert_eq!(GpuSpec::by_name("a800").unwrap().name, "A800-SXM4-80GB");
+        assert_eq!(GpuSpec::by_name("h100").unwrap().name, "H100-SXM5-80GB");
+        assert!(GpuSpec::by_name("h200").unwrap().hbm_capacity > GpuSpec::h100().hbm_capacity);
+        assert!(GpuSpec::by_name("tpu").is_none());
     }
 
     #[test]

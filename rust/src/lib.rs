@@ -41,7 +41,8 @@ pub mod workload;
 pub mod prelude {
     //! Everything a typical driver needs.
     pub use crate::config::{
-        DeploymentMode, ExperimentConfig, OverheadConfig, PolicyConfig,
+        DeploymentMode, ExperimentConfig, OverheadConfig, PolicyConfig, StageConfig,
+        StageGraphConfig,
     };
     pub use crate::coordinator::GlobalController;
     pub use crate::core::{SimTime, US};

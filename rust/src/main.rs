@@ -22,6 +22,15 @@ USAGE:
 OPTIONS (simulate / sweep-pd / baseline):
   --model <qwen2-7b|qwen2-72b|mixtral-8x7b|deepseek-v3-lite|tiny|tiny-moe>
   --mode <colocated|pd|af>         deployment (default colocated)
+  --stages <DSL>                   explicit stage graph, overrides --mode:
+                                   stages `kind[:replicas][@gpu][,key=val...]`
+                                   joined by `;`. kinds: unified|prefill|decode|af;
+                                   gpus: a800|a100|h100|h200; keys: tp pp ep attn
+                                   ffn micro batch ptok cluster node epc name.
+                                   e.g. \"prefill:2@h200,tp=2;af,attn=4,ffn=4,micro=2\"
+  --stages-json <file.json>        stage graph from JSON (same schema)
+  --edges <spec>                   kv edges as \"0>1,0>2\" (default: auto-wire)
+  --gpu <a800|a100|h100|h200>      default GPU for stages without @gpu (default a800)
   --replicas <N>                   colocated replicas (default 4)
   --prefill <N> --decode <N>       PD cluster sizes (default 4/4)
   --attn-gpus <N> --ffn-gpus <N>   AF pool sizes (default 4/4)
@@ -30,7 +39,11 @@ OPTIONS (simulate / sweep-pd / baseline):
   --routing <balanced|uniform|skewed:ALPHA>     MoE token routing (default uniform)
   --ep-placement <contiguous|strided|replicated:K>  expert placement (default contiguous)
   --ep-clusters <N>                EP ranks span N clusters (default 1)
-  --cross-bw <GBps>                cross-cluster trunk bandwidth (default 12.5)
+  --capacity-factor <F>            MoE per-expert token cap (GShard drops; default off)
+  --cross-bw <GBps>                cross-cluster WAN bandwidth (default 12.5)
+  --inter-bw <GBps>                inter-node IB bandwidth (default 50)
+  --ranks-per-node <N>             EP ranks per node (default: cluster = one node)
+  --ingress-scale <F>              ingress/egress NIC bandwidth ratio (default 1.0)
   --predictor <oracle|learned|vidur|roofline>   (default oracle)
   --requests <N>                   workload size (default 256)
   --input <N> --output <N>         token lengths (default 128/128)
@@ -122,6 +135,30 @@ fn build_config(a: &Args) -> Result<ExperimentConfig> {
         a.num("pp", 1u32)?,
         a.num("ep", 1u32)?,
     );
+    if let Some(g) = a.get("gpu") {
+        cfg.gpu = frontier::hardware::GpuSpec::by_name(g)
+            .ok_or_else(|| anyhow!("unknown gpu {g:?} (a800|a100|h100|h200)"))?;
+    }
+    // explicit stage graph (DSL or JSON) overrides the mode-level shape
+    match (a.get("stages"), a.get("stages-json")) {
+        (Some(_), Some(_)) => bail!("--stages and --stages-json are mutually exclusive"),
+        (Some(dsl), None) => {
+            cfg = cfg.with_stages(frontier::config::StageGraphConfig::parse_cli(
+                dsl,
+                a.get("edges"),
+            )?);
+        }
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(path)?;
+            let json = frontier::config::json::Json::parse(&text)?;
+            cfg = cfg.with_stages(frontier::config::StageGraphConfig::from_json(&json)?);
+        }
+        (None, None) => {
+            if a.has("edges") {
+                bail!("--edges requires --stages");
+            }
+        }
+    }
     let requests = a.num("requests", 256u32)?;
     let input = a.num("input", 128u32)?;
     let output = a.num("output", 128u32)?;
@@ -147,6 +184,17 @@ fn build_config(a: &Args) -> Result<ExperimentConfig> {
     if let Some(bw) = a.get("cross-bw") {
         let gbps: f64 = bw.parse().map_err(|_| anyhow!("bad value for --cross-bw: {bw:?}"))?;
         cfg.cross_link.bandwidth = gbps * 1e9;
+    }
+    if let Some(bw) = a.get("inter-bw") {
+        let gbps: f64 = bw.parse().map_err(|_| anyhow!("bad value for --inter-bw: {bw:?}"))?;
+        cfg.inter_node_link.bandwidth = gbps * 1e9;
+    }
+    cfg.ranks_per_node = a.num("ranks-per-node", 0u32)?;
+    cfg.nic_ingress_scale = a.num("ingress-scale", 1.0f64)?;
+    if let Some(cf) = a.get("capacity-factor") {
+        cfg.policy.capacity_factor = Some(
+            cf.parse().map_err(|_| anyhow!("bad value for --capacity-factor: {cf:?}"))?,
+        );
     }
     if let Some(p) = a.get("predictor") {
         cfg.predictor =
@@ -195,6 +243,8 @@ fn run() -> Result<()> {
             for p in 1..total {
                 let d = total - p;
                 let mut cfg = cfg0.clone();
+                // the sweep owns the deployment shape
+                cfg.stages = None;
                 cfg.mode = DeploymentMode::PdDisagg {
                     prefill_replicas: p,
                     decode_replicas: d,
@@ -267,8 +317,12 @@ fn run() -> Result<()> {
         }
         "info" => {
             println!("models: qwen2-7b qwen2-72b mixtral-8x7b deepseek-v3-lite tiny tiny-moe");
-            println!("modes: colocated pd af");
+            println!("modes: colocated pd af (or --stages for arbitrary stage graphs)");
+            println!("gpus: a800 a100 h100 h200");
             println!("predictors: oracle learned vidur roofline");
+            println!(
+                "stage DSL example: --stages \"prefill:2@h200,tp=2;af,attn=4,ffn=4,micro=2\""
+            );
             for name in ["qwen2-7b", "mixtral-8x7b", "deepseek-v3-lite"] {
                 let m = model_by_name(name)?;
                 println!(

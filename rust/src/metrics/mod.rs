@@ -42,6 +42,9 @@ pub struct MetricsCollector {
     /// AF decode: FFN-pool idle seconds inside steps — dispatch bubbles
     /// the ping-pong pipeline failed to hide.
     pub dispatch_bubble_s: f64,
+    /// Token-slots dropped by the MoE capacity-factor policy (GShard
+    /// style overflow drops; 0 without a capacity factor).
+    pub dropped_tokens: u64,
 }
 
 impl MetricsCollector {
@@ -110,6 +113,24 @@ pub fn frac_below(xs: &[f64], threshold: f64) -> f64 {
     xs.iter().filter(|&&x| x <= threshold).count() as f64 / xs.len() as f64
 }
 
+/// Per-stage summary of a stage-graph run (one entry per pool).
+#[derive(Clone, Debug, Default)]
+pub struct StageReport {
+    pub name: String,
+    pub kind: String,
+    pub replicas: u32,
+    /// GPUs backing the whole stage.
+    pub gpus: u32,
+    pub gpu_name: String,
+    pub iterations: u64,
+    /// Prefill + decode tokens processed by the stage.
+    pub tokens: u64,
+    /// Mean fraction of the run the stage's replicas were executing.
+    pub busy_frac: f64,
+    /// Peak KV-pool utilization across the stage's replicas.
+    pub peak_mem_frac: f64,
+}
+
 /// Final report of one simulation run.
 #[derive(Clone, Debug)]
 pub struct SimReport {
@@ -122,6 +143,8 @@ pub struct SimReport {
     pub events_processed: u64,
     pub n_gpus: u32,
     pub metrics: MetricsCollector,
+    /// Per-stage breakdown (empty for simulators without stage pools).
+    pub stages: Vec<StageReport>,
 }
 
 impl SimReport {
@@ -220,6 +243,26 @@ impl SimReport {
                 m.dispatch_bubble_s,
             ));
         }
+        if m.dropped_tokens > 0 {
+            s.push_str(&format!(
+                "\ncapacity policy: {} token-slots dropped",
+                m.dropped_tokens
+            ));
+        }
+        for st in &self.stages {
+            s.push_str(&format!(
+                "\nstage {} [{}] {}x{} on {}: {} iters, {} tokens, busy {:.1}%, peak mem {:.1}%",
+                st.name,
+                st.kind,
+                st.replicas,
+                if st.replicas > 0 { st.gpus / st.replicas.max(1) } else { st.gpus },
+                st.gpu_name,
+                st.iterations,
+                st.tokens,
+                st.busy_frac * 100.0,
+                st.peak_mem_frac * 100.0,
+            ));
+        }
         s
     }
 
@@ -247,6 +290,28 @@ impl SimReport {
             ("ep_cross_frac", Json::Num(m.ep_cross_frac())),
             ("ep_imbalance_mean", Json::Num(m.ep_imbalance_mean())),
             ("dispatch_bubble_s", Json::Num(m.dispatch_bubble_s)),
+            ("dropped_tokens", Json::Num(m.dropped_tokens as f64)),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|st| {
+                            Json::obj(vec![
+                                ("name", Json::Str(st.name.clone())),
+                                ("kind", Json::Str(st.kind.clone())),
+                                ("replicas", Json::Num(st.replicas as f64)),
+                                ("gpus", Json::Num(st.gpus as f64)),
+                                ("gpu", Json::Str(st.gpu_name.clone())),
+                                ("iterations", Json::Num(st.iterations as f64)),
+                                ("tokens", Json::Num(st.tokens as f64)),
+                                ("busy_frac", Json::Num(st.busy_frac)),
+                                ("peak_mem_frac", Json::Num(st.peak_mem_frac)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -345,6 +410,7 @@ mod tests {
             events_processed: 1000,
             n_gpus: 8,
             metrics: m,
+            stages: Vec::new(),
         };
         assert_eq!(r.throughput(), 800.0);
         assert_eq!(r.tokens_per_sec_per_gpu(), 100.0);

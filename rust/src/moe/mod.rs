@@ -9,7 +9,8 @@
 pub mod placement;
 
 pub use placement::{
-    rank_imbalance, A2aPhase, EpNetwork, EpSpec, EpTopology, ExpertPlacement, PlacementPolicy,
+    rank_imbalance, A2aPhase, EpFabric, EpNetwork, EpSpec, EpTopology, ExpertPlacement,
+    PlacementPolicy,
 };
 
 use crate::core::Pcg64;
@@ -50,6 +51,15 @@ pub fn expert_popularity(alpha: f64, n_experts: u32) -> Vec<f64> {
     wrng.dirichlet_sym(alpha, n_experts as usize)
 }
 
+/// Per-expert token capacity for a capacity factor `cf`
+/// (GShard/MegaScale style): `ceil(cf * tokens * top_k / n_experts)`,
+/// floored at one slot so a positive factor never starves an expert.
+pub fn expert_capacity(tokens: u32, n_experts: u32, top_k: u32, cf: f64) -> u32 {
+    let k = top_k.min(n_experts).max(1);
+    let fair_share = tokens as f64 * k as f64 / n_experts.max(1) as f64;
+    (fair_share * cf).ceil().max(1.0) as u32
+}
+
 /// Generate the token-to-expert assignment map: per-expert token counts
 /// for `tokens` tokens each selecting `top_k` distinct experts.
 pub fn assign_tokens(
@@ -59,16 +69,36 @@ pub fn assign_tokens(
     top_k: u32,
     rng: &mut Pcg64,
 ) -> Vec<u32> {
+    assign_tokens_capped(policy, tokens, n_experts, top_k, None, rng).0
+}
+
+/// [`assign_tokens`] with an optional per-expert capacity cap: a token
+/// routed to a full expert is *dropped* (the GShard capacity-factor
+/// policy) rather than rerouted. Returns `(per-expert loads, dropped
+/// token-slots)`. The RNG stream is identical to the uncapped path, so
+/// `capacity = None` reproduces [`assign_tokens`] bit-for-bit.
+pub fn assign_tokens_capped(
+    policy: RoutingPolicy,
+    tokens: u32,
+    n_experts: u32,
+    top_k: u32,
+    capacity: Option<u32>,
+    rng: &mut Pcg64,
+) -> (Vec<u32>, u64) {
     let e = n_experts as usize;
     let k = (top_k as usize).min(e);
+    let cap = capacity.unwrap_or(u32::MAX);
     let mut loads = vec![0u32; e];
+    let mut dropped = 0u64;
     match policy {
         RoutingPolicy::Balanced => {
             let total = tokens as u64 * k as u64;
             let base = (total / e as u64) as u32;
             let rem = (total % e as u64) as usize;
             for (i, l) in loads.iter_mut().enumerate() {
-                *l = base + u32::from(i < rem);
+                let want = base + u32::from(i < rem);
+                *l = want.min(cap);
+                dropped += (want - *l) as u64;
             }
         }
         RoutingPolicy::UniformRandom | RoutingPolicy::Skewed { .. } => {
@@ -82,13 +112,17 @@ pub fn assign_tokens(
                 w.copy_from_slice(&weights);
                 for _ in 0..k {
                     let idx = rng.weighted_index(&w);
-                    loads[idx] += 1;
+                    if loads[idx] < cap {
+                        loads[idx] += 1;
+                    } else {
+                        dropped += 1;
+                    }
                     w[idx] = 0.0;
                 }
             }
         }
     }
-    loads
+    (loads, dropped)
 }
 
 /// Load-balance metrics over an assignment map (predictor features and
@@ -196,6 +230,51 @@ mod tests {
                 w[loads_hot]
             );
         }
+    }
+
+    #[test]
+    fn capacity_cap_drops_and_conserves() {
+        let mut rng = Pcg64::new(9);
+        // skewed routing overflows a tight cap
+        let cap = expert_capacity(512, 8, 2, 1.0);
+        let (loads, dropped) = assign_tokens_capped(
+            RoutingPolicy::Skewed { alpha: 0.05 },
+            512,
+            8,
+            2,
+            Some(cap),
+            &mut rng,
+        );
+        assert!(loads.iter().all(|&l| l <= cap));
+        assert!(dropped > 0, "tight cap under heavy skew must drop");
+        // routed + dropped conserves the token-slot total
+        assert_eq!(
+            loads.iter().map(|&x| x as u64).sum::<u64>() + dropped,
+            512 * 2
+        );
+        // uncapped path is bit-identical to assign_tokens
+        let mut a = Pcg64::new(4);
+        let mut b = Pcg64::new(4);
+        let plain = assign_tokens(RoutingPolicy::UniformRandom, 100, 8, 2, &mut a);
+        let (capped, d) =
+            assign_tokens_capped(RoutingPolicy::UniformRandom, 100, 8, 2, None, &mut b);
+        assert_eq!(plain, capped);
+        assert_eq!(d, 0);
+    }
+
+    #[test]
+    fn capacity_formula() {
+        // fair share = 512 * 2 / 8 = 128
+        assert_eq!(expert_capacity(512, 8, 2, 1.0), 128);
+        assert_eq!(expert_capacity(512, 8, 2, 1.25), 160);
+        // floor at one slot
+        assert_eq!(expert_capacity(1, 64, 1, 0.5), 1);
+        // balanced routing never drops at cf >= 1
+        let mut rng = Pcg64::new(1);
+        let cap = expert_capacity(100, 8, 2, 1.0);
+        let (_, dropped) =
+            assign_tokens_capped(RoutingPolicy::Balanced, 100, 8, 2, Some(cap), &mut rng);
+        assert_eq!(dropped, 0);
     }
 
     #[test]

@@ -17,23 +17,25 @@
 //!    volumes, assuming tokens enter uniformly across EP ranks. The
 //!    combine phase is the transpose.
 //! 3. **Charging** — [`EpNetwork`] prices one all-to-all phase through
-//!    FIFO-contended [`crate::network::Link`]s: each rank has an egress
-//!    and an ingress NIC, each directed cluster pair a shared trunk
-//!    ([`crate::network::Fabric`]). A message occupies all the links on
-//!    its path simultaneously; skewed routing therefore serializes on
-//!    the hot expert's ingress NIC and cross-cluster hops on the trunk —
-//!    the contention the closed-form `oracle::all2all_time` cannot see.
-//!    In the uncontended, uniform, single-cluster case the charge
-//!    reduces *exactly* to the closed form (pinned by
-//!    `rust/tests/oracle_parity.rs`).
+//!    FIFO-contended [`crate::network::Link`]s over the 3-tier
+//!    hierarchical fabric ([`EpFabric`]): ranks sharing a node exchange
+//!    over per-rank NVLink ports, ranks on different nodes over per-rank
+//!    (possibly asymmetric egress/ingress) IB NICs, and each directed
+//!    cluster pair shares a WAN trunk ([`crate::network::Fabric`]). A
+//!    message occupies all the links on its path simultaneously; skewed
+//!    routing therefore serializes on the hot expert's ingress NIC and
+//!    cross-cluster hops on the trunk — the contention the closed-form
+//!    `oracle::all2all_time` cannot see. In the uncontended, uniform,
+//!    single-cluster case the charge reduces *exactly* to the closed
+//!    form (pinned by `rust/tests/oracle_parity.rs`).
 //!
-//! [`EpSpec`] bundles a placement with the intra-/cross-cluster link
-//! specs and is what [`crate::workflows::CostModel`] carries on the MoE
-//! pricing path.
+//! [`EpSpec`] bundles a placement with the [`EpFabric`] it rides on and
+//! is what [`crate::workflows::CostModel`] carries on the MoE pricing
+//! path.
 
 use crate::core::SimTime;
 use crate::hardware::LinkSpec;
-use crate::network::{Fabric, Link};
+use crate::network::{Fabric, HierSpec, Link, NetLoc, Tier};
 
 /// How experts are assigned to EP ranks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -244,8 +246,18 @@ impl ExpertPlacement {
     /// (including the local diagonal) equals
     /// `sum(loads) * bytes_per_token`.
     pub fn dispatch_matrix(&self, loads: &[u32], bytes_per_token: f64) -> Vec<f64> {
+        let mut mat = Vec::new();
+        self.dispatch_matrix_into(loads, bytes_per_token, &mut mat);
+        mat
+    }
+
+    /// Allocation-free variant of [`ExpertPlacement::dispatch_matrix`]:
+    /// writes into `out` (cleared and resized), reusing its capacity —
+    /// the hot-path form for per-draw pricing.
+    pub fn dispatch_matrix_into(&self, loads: &[u32], bytes_per_token: f64, out: &mut Vec<f64>) {
         let n = self.topo.n_ranks as usize;
-        let mut mat = vec![0.0f64; n * n];
+        out.clear();
+        out.resize(n * n, 0.0);
         for (e, &load) in loads.iter().enumerate() {
             if load == 0 {
                 continue;
@@ -253,23 +265,29 @@ impl ExpertPlacement {
             let per_src = load as f64 * bytes_per_token / n as f64;
             for s in 0..n {
                 let d = self.expert_ranks[e][self.replica_index(e, s as u32)] as usize;
-                mat[s * n + d] += per_src;
+                out[s * n + d] += per_src;
             }
         }
-        mat
     }
 
     /// Transpose of a `(src, dst)` byte matrix over this placement's
     /// ranks — the combine phase of a dispatch matrix already in hand.
     pub fn transposed(&self, matrix: &[f64]) -> Vec<f64> {
+        let mut t = Vec::new();
+        self.transpose_into(matrix, &mut t);
+        t
+    }
+
+    /// Allocation-free transpose into a reusable buffer.
+    pub fn transpose_into(&self, matrix: &[f64], out: &mut Vec<f64>) {
         let n = self.topo.n_ranks as usize;
-        let mut t = vec![0.0f64; n * n];
+        out.clear();
+        out.resize(n * n, 0.0);
         for s in 0..n {
             for d in 0..n {
-                t[d * n + s] = matrix[s * n + d];
+                out[d * n + s] = matrix[s * n + d];
             }
         }
-        t
     }
 
     /// Combine byte volumes: the transpose of the dispatch (every routed
@@ -305,37 +323,123 @@ pub struct A2aPhase {
     pub local_bytes: f64,
 }
 
-/// The EP fabric: per-rank egress/ingress NICs (intra-cluster spec) and
-/// one FIFO trunk per directed cluster pair (cross-cluster spec).
+/// How the EP rank set maps onto the 3-tier hierarchical fabric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpFabric {
+    /// Per-tier link specs (NVLink / IB / WAN).
+    pub hier: HierSpec,
+    /// EP ranks sharing one node *within their cluster*. `u32::MAX`
+    /// puts a whole cluster on one node — the legacy flat intra+cross
+    /// model.
+    pub ranks_per_node: u32,
+    /// Ingress NIC bandwidth as a multiple of egress (per-rank NIC
+    /// asymmetry; 1.0 = symmetric full-duplex).
+    pub ingress_scale: f64,
+}
+
+impl EpFabric {
+    /// Legacy flat fabric: one node per cluster, symmetric NICs.
+    ///
+    /// Single-cluster charging is bit-identical to the pre-hierarchy
+    /// model (pinned by the closed-form parity test). Multi-cluster
+    /// charging differs deliberately: cross-cluster messages now ride
+    /// dedicated NICs instead of contending with intra-cluster traffic
+    /// on the same per-rank links — the physically faithful model.
+    pub fn flat(intra: LinkSpec, cross: LinkSpec) -> Self {
+        EpFabric {
+            hier: HierSpec::flat(intra, cross),
+            ranks_per_node: u32::MAX,
+            ingress_scale: 1.0,
+        }
+    }
+
+    /// Full 3-tier hierarchy with `ranks_per_node` GPUs per node and an
+    /// ingress/egress NIC bandwidth ratio.
+    pub fn hierarchical(hier: HierSpec, ranks_per_node: u32, ingress_scale: f64) -> Self {
+        EpFabric { hier, ranks_per_node: ranks_per_node.max(1), ingress_scale }
+    }
+
+    /// Hierarchy coordinate of a rank: its cluster, and its node index
+    /// within that cluster.
+    pub fn loc(&self, topo: &EpTopology, rank: u32) -> NetLoc {
+        let c = topo.cluster_of(rank);
+        let (start, _) = topo.cluster_ranks(c);
+        NetLoc::new(c, (rank - start) / self.ranks_per_node.max(1))
+    }
+}
+
+/// The EP fabric instance: per-rank NVLink ports (intra-node), per-rank
+/// egress/ingress NICs (inter-node, possibly asymmetric), and one FIFO
+/// trunk per directed cluster pair (WAN).
+#[derive(Clone, Debug)]
 pub struct EpNetwork {
     topo: EpTopology,
-    intra: LinkSpec,
-    cross: LinkSpec,
-    egress: Vec<Link>,
-    ingress: Vec<Link>,
+    fabric: EpFabric,
+    /// Intra-node NVLink ports (one egress + ingress pair per rank).
+    nv_egress: Vec<Link>,
+    nv_ingress: Vec<Link>,
+    /// Inter-node NICs; ingress bandwidth scaled by the asymmetry knob.
+    nic_egress: Vec<Link>,
+    nic_ingress: Vec<Link>,
     trunks: Fabric,
 }
 
 impl EpNetwork {
+    /// Legacy flat constructor: intra-cluster NICs + cross-cluster trunk.
     pub fn new(topo: EpTopology, intra: LinkSpec, cross: LinkSpec) -> Self {
+        Self::with_fabric(topo, EpFabric::flat(intra, cross))
+    }
+
+    pub fn with_fabric(topo: EpTopology, fabric: EpFabric) -> Self {
         let n = topo.n_ranks as usize;
+        let nic_in = LinkSpec {
+            bandwidth: fabric.hier.inter_node.bandwidth * fabric.ingress_scale.max(1e-9),
+            alpha: fabric.hier.inter_node.alpha,
+        };
         EpNetwork {
             topo,
-            intra,
-            cross,
-            egress: (0..n).map(|_| Link::new(intra)).collect(),
-            ingress: (0..n).map(|_| Link::new(intra)).collect(),
-            trunks: Fabric::new(cross),
+            fabric,
+            nv_egress: (0..n).map(|_| Link::new(fabric.hier.intra_node)).collect(),
+            nv_ingress: (0..n).map(|_| Link::new(fabric.hier.intra_node)).collect(),
+            nic_egress: (0..n).map(|_| Link::new(fabric.hier.inter_node)).collect(),
+            nic_ingress: (0..n).map(|_| Link::new(nic_in)).collect(),
+            trunks: Fabric::new(fabric.hier.wan),
         }
+    }
+
+    pub fn n_ranks(&self) -> u32 {
+        self.topo.n_ranks
+    }
+
+    /// Whether this network instance was built for `spec`'s topology and
+    /// fabric (scratch-reuse validity check).
+    pub fn matches(&self, spec: &EpSpec) -> bool {
+        self.topo == spec.placement.topo && self.fabric == spec.fabric
+    }
+
+    /// Clear occupancy on every link so the network can be reused for an
+    /// independent pricing draw (the per-CostModel scratch buffer).
+    pub fn reset(&mut self) {
+        for l in self
+            .nv_egress
+            .iter_mut()
+            .chain(self.nv_ingress.iter_mut())
+            .chain(self.nic_egress.iter_mut())
+            .chain(self.nic_ingress.iter_mut())
+        {
+            l.reset();
+        }
+        self.trunks.reset();
     }
 
     /// Charge one all-to-all phase described by a row-major `(src, dst)`
     /// byte matrix, starting no earlier than `now`. Messages follow the
     /// canonical rotation schedule (step p: rank s -> rank (s+p) mod n)
-    /// and each occupies its source NIC, destination NIC, and — when the
-    /// endpoints sit in different clusters — the directed inter-cluster
-    /// trunk, for `alpha + bytes / bottleneck_bw`. Returns the delivery
-    /// time of the last message and the phase accounting.
+    /// and each occupies every link on its tier path simultaneously:
+    /// intra-node messages the two NVLink ports, inter-node messages the
+    /// two NICs, cross-cluster messages the NICs *and* the directed WAN
+    /// trunk — for `alpha_sum + bytes / bottleneck_bw`. Returns the
+    /// delivery time of the last message and the phase accounting.
     pub fn all_to_all(&mut self, now: SimTime, bytes: &[f64]) -> (SimTime, A2aPhase) {
         let n = self.topo.n_ranks as usize;
         assert_eq!(bytes.len(), n * n, "byte matrix must be n_ranks^2");
@@ -347,6 +451,7 @@ impl EpNetwork {
                 phase.local_bytes += b;
             }
         }
+        let hier = self.fabric.hier;
         for p in 1..n {
             for s in 0..n {
                 let d = (s + p) % n;
@@ -354,24 +459,58 @@ impl EpNetwork {
                 if b <= 0.0 {
                     continue;
                 }
-                let sc = self.topo.cluster_of(s as u32);
-                let dc = self.topo.cluster_of(d as u32);
-                let is_cross = sc != dc;
-                let mut start = self.egress[s]
-                    .earliest_start(now)
-                    .max(self.ingress[d].earliest_start(now));
-                let (alpha, bw) = if is_cross {
-                    start = start.max(self.trunks.link_mut(sc, dc).earliest_start(now));
-                    (self.intra.alpha + self.cross.alpha, self.intra.bandwidth.min(self.cross.bandwidth))
-                } else {
-                    (self.intra.alpha, self.intra.bandwidth)
+                let sl = self.fabric.loc(&self.topo, s as u32);
+                let dl = self.fabric.loc(&self.topo, d as u32);
+                let tier = HierSpec::tier_of(sl, dl);
+                // resolve the links on the path and the path alpha/beta
+                let (start, alpha, bw) = match tier {
+                    Tier::IntraNode => {
+                        let start = self.nv_egress[s]
+                            .earliest_start(now)
+                            .max(self.nv_ingress[d].earliest_start(now));
+                        (start, hier.intra_node.alpha, hier.intra_node.bandwidth)
+                    }
+                    Tier::InterNode => {
+                        let start = self.nic_egress[s]
+                            .earliest_start(now)
+                            .max(self.nic_ingress[d].earliest_start(now));
+                        let bw = self.nic_egress[s]
+                            .spec
+                            .bandwidth
+                            .min(self.nic_ingress[d].spec.bandwidth);
+                        (start, hier.inter_node.alpha, bw)
+                    }
+                    Tier::CrossCluster => {
+                        let trunk =
+                            self.trunks.link_mut(sl.cluster, dl.cluster).earliest_start(now);
+                        let start = self.nic_egress[s]
+                            .earliest_start(now)
+                            .max(self.nic_ingress[d].earliest_start(now))
+                            .max(trunk);
+                        let bw = self.nic_egress[s]
+                            .spec
+                            .bandwidth
+                            .min(self.nic_ingress[d].spec.bandwidth)
+                            .min(hier.wan.bandwidth);
+                        (start, hier.inter_node.alpha + hier.wan.alpha, bw)
+                    }
                 };
                 let done = start + SimTime::from_secs_f64(alpha + b / bw);
-                self.egress[s].occupy(done, b);
-                self.ingress[d].occupy(done, b);
-                if is_cross {
-                    self.trunks.link_mut(sc, dc).occupy(done, b);
-                    phase.cross_bytes += b;
+                match tier {
+                    Tier::IntraNode => {
+                        self.nv_egress[s].occupy(done, b);
+                        self.nv_ingress[d].occupy(done, b);
+                    }
+                    Tier::InterNode => {
+                        self.nic_egress[s].occupy(done, b);
+                        self.nic_ingress[d].occupy(done, b);
+                    }
+                    Tier::CrossCluster => {
+                        self.nic_egress[s].occupy(done, b);
+                        self.nic_ingress[d].occupy(done, b);
+                        self.trunks.link_mut(sl.cluster, dl.cluster).occupy(done, b);
+                        phase.cross_bytes += b;
+                    }
                 }
                 if done > finish {
                     finish = done;
@@ -384,28 +523,37 @@ impl EpNetwork {
 }
 
 /// Everything the cost model needs to price EP dispatch/combine: the
-/// placement plus the link specs of the fabric it rides on.
+/// placement plus the hierarchical fabric it rides on.
 #[derive(Clone, Debug)]
 pub struct EpSpec {
     pub placement: ExpertPlacement,
-    /// Intra-cluster interconnect (rank NICs).
-    pub intra: LinkSpec,
-    /// Cross-cluster trunk.
-    pub cross: LinkSpec,
+    pub fabric: EpFabric,
 }
 
 impl EpSpec {
+    /// Legacy flat construction from an intra-cluster NIC spec and a
+    /// cross-cluster trunk spec.
+    pub fn flat(placement: ExpertPlacement, intra: LinkSpec, cross: LinkSpec) -> Self {
+        EpSpec { placement, fabric: EpFabric::flat(intra, cross) }
+    }
+
     pub fn n_ranks(&self) -> u32 {
         self.placement.topo.n_ranks
+    }
+
+    /// A fresh (idle) network instance over this spec's fabric.
+    pub fn make_network(&self) -> EpNetwork {
+        EpNetwork::with_fabric(self.placement.topo, self.fabric)
     }
 
     /// Makespan and accounting of one all-to-all phase over a fresh
     /// (uncontended) fabric. Cross-phase contention is modeled by the
     /// pipeline executor serializing the transfer resources, so each
-    /// phase is priced from an idle network.
+    /// phase is priced from an idle network. Allocates a network per
+    /// call — hot paths should hold an [`EpNetwork`] and use
+    /// [`EpNetwork::reset`] + [`EpNetwork::all_to_all`] instead.
     pub fn a2a_time(&self, matrix: &[f64]) -> A2aPhase {
-        let mut net = EpNetwork::new(self.placement.topo, self.intra, self.cross);
-        net.all_to_all(SimTime::ZERO, matrix).1
+        self.make_network().all_to_all(SimTime::ZERO, matrix).1
     }
 }
 
@@ -519,8 +667,8 @@ mod tests {
             topo,
             Some(&loads),
         );
-        let spec = EpSpec { placement: base, intra: spec(), cross: slow() };
-        let spec_r = EpSpec { placement: repl, intra: spec.intra, cross: slow() };
+        let spec = EpSpec::flat(base, spec(), slow());
+        let spec_r = EpSpec::flat(repl, spec.fabric.hier.intra_node, slow());
         let a = spec.a2a_time(&spec.placement.dispatch_matrix(&loads, 1024.0));
         let b = spec_r.a2a_time(&spec_r.placement.dispatch_matrix(&loads, 1024.0));
         assert!(b.cross_bytes < a.cross_bytes, "{} vs {}", b.cross_bytes, a.cross_bytes);
@@ -569,14 +717,104 @@ mod tests {
             EpTopology::new(4, 2),
             None,
         );
-        let e1 = EpSpec { placement: one, intra: spec(), cross: slow() };
-        let e2 = EpSpec { placement: two, intra: spec(), cross: slow() };
+        let e1 = EpSpec::flat(one, spec(), slow());
+        let e2 = EpSpec::flat(two, spec(), slow());
         let bpt = 2048.0;
         let t1 = e1.a2a_time(&e1.placement.dispatch_matrix(&loads, bpt));
         let t2 = e2.a2a_time(&e2.placement.dispatch_matrix(&loads, bpt));
         assert_eq!(t1.cross_bytes, 0.0);
         assert!(t2.cross_bytes > 0.0);
         assert!(t2.secs > t1.secs, "{} vs {}", t2.secs, t1.secs);
+    }
+
+    #[test]
+    fn hierarchical_tiers_order_the_phase() {
+        // same uniform matrix: finer node granularity pushes more
+        // traffic off NVLink onto IB, lengthening the phase; a WAN span
+        // lengthens it further
+        let hier = HierSpec {
+            intra_node: spec(),                              // 100 GB/s
+            inter_node: LinkSpec { bandwidth: 25e9, alpha: 10e-6 },
+            wan: slow(),                                     // 10 GB/s
+        };
+        let n = 8u32;
+        let mat = vec![2e6; (n * n) as usize];
+        let run = |clusters: u32, rpn: u32| {
+            let topo = EpTopology::new(n, clusters);
+            let mut net =
+                EpNetwork::with_fabric(topo, EpFabric::hierarchical(hier, rpn, 1.0));
+            net.all_to_all(SimTime::ZERO, &mat).1
+        };
+        let one_node = run(1, 8);
+        let two_nodes = run(1, 4);
+        let two_clusters = run(2, 4);
+        assert!(two_nodes.secs > one_node.secs, "{} vs {}", two_nodes.secs, one_node.secs);
+        assert!(
+            two_clusters.secs > two_nodes.secs,
+            "{} vs {}",
+            two_clusters.secs,
+            two_nodes.secs
+        );
+        assert_eq!(one_node.cross_bytes, 0.0);
+        assert_eq!(two_nodes.cross_bytes, 0.0);
+        assert!(two_clusters.cross_bytes > 0.0);
+    }
+
+    #[test]
+    fn ingress_asymmetry_slows_inter_node_traffic() {
+        let hier = HierSpec {
+            intra_node: spec(),
+            inter_node: LinkSpec { bandwidth: 25e9, alpha: 10e-6 },
+            wan: slow(),
+        };
+        let topo = EpTopology::new(4, 1);
+        let mat = vec![4e6; 16];
+        let run = |scale: f64| {
+            let mut net =
+                EpNetwork::with_fabric(topo, EpFabric::hierarchical(hier, 2, scale));
+            net.all_to_all(SimTime::ZERO, &mat).1.secs
+        };
+        // half-rate ingress NICs bottleneck every inter-node message
+        assert!(run(0.5) > run(1.0));
+    }
+
+    #[test]
+    fn reset_reproduces_fresh_network() {
+        // scratch reuse: reset() must make a used network
+        // indistinguishable from a fresh one for any subsequent phase
+        let topo = EpTopology::new(6, 2);
+        let fabric = EpFabric::hierarchical(
+            HierSpec { intra_node: spec(), inter_node: spec(), wan: slow() },
+            2,
+            0.8,
+        );
+        let mat_a: Vec<f64> = (0..36).map(|i| (i % 7) as f64 * 1e6).collect();
+        let mat_b: Vec<f64> = (0..36).map(|i| (i % 5) as f64 * 2e6).collect();
+        let mut reused = EpNetwork::with_fabric(topo, fabric);
+        let first = reused.all_to_all(SimTime::ZERO, &mat_a).1;
+        reused.reset();
+        let second = reused.all_to_all(SimTime::ZERO, &mat_b).1;
+        let fresh_a = EpNetwork::with_fabric(topo, fabric).all_to_all(SimTime::ZERO, &mat_a).1;
+        let fresh_b = EpNetwork::with_fabric(topo, fabric).all_to_all(SimTime::ZERO, &mat_b).1;
+        assert_eq!(first, fresh_a);
+        assert_eq!(second, fresh_b);
+    }
+
+    #[test]
+    fn matrix_into_matches_allocating_variants() {
+        let loads = [40u32, 13, 0, 7, 21, 9, 5, 2];
+        let p = ExpertPlacement::build(
+            PlacementPolicy::ReplicatedHot { hot: 2 },
+            8,
+            EpTopology::new(4, 2),
+            Some(&loads),
+        );
+        let mut buf = vec![999.0; 3]; // wrong size + stale data: must be overwritten
+        p.dispatch_matrix_into(&loads, 640.0, &mut buf);
+        assert_eq!(buf, p.dispatch_matrix(&loads, 640.0));
+        let mut t = Vec::new();
+        p.transpose_into(&buf, &mut t);
+        assert_eq!(t, p.transposed(&buf));
     }
 
     #[test]

@@ -1,11 +1,22 @@
-//! Network transfer scheduler: links with contention.
+//! Network transfer scheduler: links with contention and the 3-tier
+//! hierarchical fabric.
 //!
-//! The coordinator charges inter-cluster transfers (KV-cache migration in
+//! The coordinator charges inter-stage transfers (KV-cache migration in
 //! PD mode, activation hops in AF mode) to directed [`Link`]s. Each link
 //! serializes its transfers (store-and-forward FIFO), which models the
 //! bandwidth contention that arises when many prefill replicas push KV
 //! caches to the same decode node — a first-order effect in PD
 //! rate-matching.
+//!
+//! Links are organized in a three-tier hierarchy ([`HierSpec`]):
+//!
+//! * **intra-node** — NVLink between GPUs sharing a node;
+//! * **inter-node** — InfiniBand NICs between nodes of one cluster;
+//! * **cross-cluster** — the WAN trunk between hardware clusters.
+//!
+//! A transfer's tier is decided by the endpoints' [`NetLoc`]s (cluster +
+//! node coordinates); a cross-cluster message pays both its NIC alphas
+//! and the trunk, at the bottleneck bandwidth of the path.
 
 use crate::core::SimTime;
 use crate::hardware::LinkSpec;
@@ -72,11 +83,18 @@ impl Link {
     pub fn busy_until(&self) -> SimTime {
         self.busy_until
     }
+
+    /// Clear the occupancy state (scratch-network reuse between
+    /// independent pricing draws). Byte/transfer counters are kept —
+    /// they are cumulative accounting, not occupancy.
+    pub fn reset(&mut self) {
+        self.busy_until = SimTime::ZERO;
+    }
 }
 
 /// The network fabric between clusters: one directed link per
 /// (src-cluster, dst-cluster) pair, lazily created.
-#[derive(Default)]
+#[derive(Clone, Debug, Default)]
 pub struct Fabric {
     links: std::collections::HashMap<(u32, u32), Link>,
     default_spec: Option<LinkSpec>,
@@ -94,6 +112,138 @@ impl Fabric {
 
     /// Schedule a transfer src->dst; returns delivery time.
     pub fn transfer(&mut self, now: SimTime, src: u32, dst: u32, bytes: f64) -> SimTime {
+        self.link_mut(src, dst).transfer(now, bytes)
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.links.values().map(|l| l.bytes_carried).sum()
+    }
+
+    pub fn total_transfers(&self) -> u64 {
+        self.links.values().map(|l| l.transfers).sum()
+    }
+
+    /// Clear occupancy on every link (scratch reuse between draws).
+    pub fn reset(&mut self) {
+        for l in self.links.values_mut() {
+            l.reset();
+        }
+    }
+}
+
+/// Which tier of the hierarchy a transfer rides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Same node: NVLink-class GPU interconnect.
+    IntraNode,
+    /// Same cluster, different node: InfiniBand-class NIC path.
+    InterNode,
+    /// Different hardware clusters: the WAN trunk.
+    CrossCluster,
+}
+
+/// Location of an endpoint in the hierarchy: which cluster and which
+/// node within that cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub struct NetLoc {
+    pub cluster: u32,
+    pub node: u32,
+}
+
+impl NetLoc {
+    pub fn new(cluster: u32, node: u32) -> Self {
+        NetLoc { cluster, node }
+    }
+}
+
+/// The 3-tier link hierarchy: per-tier alpha-beta specs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HierSpec {
+    /// Intra-node GPU interconnect (NVLink class).
+    pub intra_node: LinkSpec,
+    /// Inter-node network within a cluster (InfiniBand class).
+    pub inter_node: LinkSpec,
+    /// Cross-cluster trunk (WAN class).
+    pub wan: LinkSpec,
+}
+
+impl HierSpec {
+    /// The paper's testbed datacenter: A800 NVLink nodes on NDR IB,
+    /// clusters joined by a 100 GbE-class trunk.
+    pub fn a800_datacenter() -> Self {
+        HierSpec {
+            intra_node: LinkSpec::nvlink_a800(),
+            inter_node: LinkSpec::infiniband_ndr(),
+            wan: LinkSpec::cross_cluster(),
+        }
+    }
+
+    /// Degenerate two-level hierarchy reproducing the legacy flat
+    /// intra + cross pair: anything inside a cluster pays `intra`,
+    /// anything between clusters pays `cross`.
+    pub fn flat(intra: LinkSpec, cross: LinkSpec) -> Self {
+        HierSpec { intra_node: intra, inter_node: intra, wan: cross }
+    }
+
+    /// Tier of a transfer between two endpoints.
+    pub fn tier_of(src: NetLoc, dst: NetLoc) -> Tier {
+        if src.cluster != dst.cluster {
+            Tier::CrossCluster
+        } else if src.node != dst.node {
+            Tier::InterNode
+        } else {
+            Tier::IntraNode
+        }
+    }
+
+    pub fn link_for(&self, tier: Tier) -> LinkSpec {
+        match tier {
+            Tier::IntraNode => self.intra_node,
+            Tier::InterNode => self.inter_node,
+            Tier::CrossCluster => self.wan,
+        }
+    }
+
+    /// Effective alpha-beta of a path between two endpoints: the
+    /// bottleneck bandwidth and the summed per-hop latencies (a
+    /// cross-cluster message traverses its NIC *and* the trunk).
+    pub fn path(&self, src: NetLoc, dst: NetLoc) -> LinkSpec {
+        match Self::tier_of(src, dst) {
+            Tier::IntraNode => self.intra_node,
+            Tier::InterNode => self.inter_node,
+            Tier::CrossCluster => LinkSpec {
+                bandwidth: self.inter_node.bandwidth.min(self.wan.bandwidth),
+                alpha: self.inter_node.alpha + self.wan.alpha,
+            },
+        }
+    }
+}
+
+/// Contended hierarchical fabric for stage-to-stage flows (KV handoff,
+/// activation hops): one directed FIFO link per `(src, dst)` endpoint
+/// pair, with the spec chosen by the endpoints' tier.
+#[derive(Clone, Debug)]
+pub struct HierFabric {
+    spec: HierSpec,
+    links: std::collections::HashMap<(NetLoc, NetLoc), Link>,
+}
+
+impl HierFabric {
+    pub fn new(spec: HierSpec) -> Self {
+        HierFabric { spec, links: Default::default() }
+    }
+
+    pub fn spec(&self) -> &HierSpec {
+        &self.spec
+    }
+
+    pub fn link_mut(&mut self, src: NetLoc, dst: NetLoc) -> &mut Link {
+        let path = self.spec.path(src, dst);
+        self.links.entry((src, dst)).or_insert_with(|| Link::new(path))
+    }
+
+    /// Schedule a transfer src -> dst; returns the delivery time.
+    pub fn transfer(&mut self, now: SimTime, src: NetLoc, dst: NetLoc, bytes: f64) -> SimTime {
         self.link_mut(src, dst).transfer(now, bytes)
     }
 
@@ -178,6 +328,67 @@ mod tests {
         assert_eq!(l.busy_until(), SimTime::ZERO);
         let done = l.transfer(SimTime::ZERO, 5e8);
         assert_eq!(p, done);
+    }
+
+    #[test]
+    fn tier_resolution() {
+        let a = NetLoc::new(0, 0);
+        let b = NetLoc::new(0, 1);
+        let c = NetLoc::new(1, 0);
+        assert_eq!(HierSpec::tier_of(a, a), Tier::IntraNode);
+        assert_eq!(HierSpec::tier_of(a, b), Tier::InterNode);
+        assert_eq!(HierSpec::tier_of(a, c), Tier::CrossCluster);
+        // same node index in a different cluster is still cross-cluster
+        assert_eq!(HierSpec::tier_of(b, NetLoc::new(1, 1)), Tier::CrossCluster);
+    }
+
+    #[test]
+    fn hier_path_bottleneck_and_alpha_sum() {
+        let h = HierSpec::a800_datacenter();
+        let intra = h.path(NetLoc::new(0, 0), NetLoc::new(0, 0));
+        assert_eq!(intra, LinkSpec::nvlink_a800());
+        let inter = h.path(NetLoc::new(0, 0), NetLoc::new(0, 1));
+        assert_eq!(inter, LinkSpec::infiniband_ndr());
+        let cross = h.path(NetLoc::new(0, 0), NetLoc::new(1, 0));
+        // bottleneck of NIC and trunk; both alphas paid
+        assert_eq!(
+            cross.bandwidth,
+            LinkSpec::infiniband_ndr().bandwidth.min(LinkSpec::cross_cluster().bandwidth)
+        );
+        assert_eq!(
+            cross.alpha,
+            LinkSpec::infiniband_ndr().alpha + LinkSpec::cross_cluster().alpha
+        );
+    }
+
+    #[test]
+    fn hier_fabric_charges_by_tier() {
+        let mut f = HierFabric::new(HierSpec {
+            intra_node: LinkSpec { bandwidth: 100e9, alpha: 0.0 },
+            inter_node: LinkSpec { bandwidth: 10e9, alpha: 0.0 },
+            wan: LinkSpec { bandwidth: 1e9, alpha: 0.0 },
+        });
+        let b = 1e9;
+        let t_intra = f.transfer(SimTime::ZERO, NetLoc::new(0, 0), NetLoc::new(0, 0), b);
+        let t_inter = f.transfer(SimTime::ZERO, NetLoc::new(0, 0), NetLoc::new(0, 1), b);
+        let t_cross = f.transfer(SimTime::ZERO, NetLoc::new(0, 0), NetLoc::new(1, 0), b);
+        assert!(t_intra < t_inter && t_inter < t_cross);
+        assert_eq!(t_cross, SimTime::from_secs_f64(1.0));
+        assert_eq!(f.total_transfers(), 3);
+        // distinct endpoint pairs do not contend
+        let again = f.transfer(SimTime::ZERO, NetLoc::new(0, 0), NetLoc::new(0, 0), b);
+        assert!(again > t_intra, "same pair serializes");
+    }
+
+    #[test]
+    fn link_reset_clears_occupancy_keeps_accounting() {
+        let mut l = link();
+        l.transfer(SimTime::ZERO, 1e9);
+        assert!(l.busy_until() > SimTime::ZERO);
+        l.reset();
+        assert_eq!(l.busy_until(), SimTime::ZERO);
+        assert_eq!(l.transfers, 1);
+        assert_eq!(l.bytes_carried, 1e9);
     }
 
     #[test]

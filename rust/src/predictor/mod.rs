@@ -131,8 +131,12 @@ pub struct RooflinePredictor {
 }
 
 impl RooflinePredictor {
+    pub fn new(gpu: GpuSpec, link: LinkSpec) -> Self {
+        RooflinePredictor { gpu, link, evals: 0 }
+    }
+
     pub fn a800() -> Self {
-        RooflinePredictor { gpu: GpuSpec::a800(), link: LinkSpec::nvlink_a800(), evals: 0 }
+        Self::new(GpuSpec::a800(), LinkSpec::nvlink_a800())
     }
 
     fn mem_bytes(op: &OpWorkload, dtype: f64) -> f64 {
@@ -186,10 +190,23 @@ pub fn build(
     kind: PredictorKind,
     artifacts_dir: Option<&std::path::Path>,
 ) -> anyhow::Result<Box<dyn ExecutionPredictor>> {
+    build_for(kind, GpuSpec::a800(), LinkSpec::nvlink_a800(), artifacts_dir)
+}
+
+/// Build a predictor for a specific GPU model and interconnect — the
+/// per-stage form for heterogeneous deployments. The learned predictor
+/// executes GPU-specific trained artifacts, so it ignores the `gpu`
+/// argument (its artifacts already encode the hardware).
+pub fn build_for(
+    kind: PredictorKind,
+    gpu: GpuSpec,
+    link: LinkSpec,
+    artifacts_dir: Option<&std::path::Path>,
+) -> anyhow::Result<Box<dyn ExecutionPredictor>> {
     Ok(match kind {
-        PredictorKind::Oracle => Box::new(OraclePredictor::a800()),
-        PredictorKind::Vidur => Box::new(VidurPredictor::a800()),
-        PredictorKind::Roofline => Box::new(RooflinePredictor::a800()),
+        PredictorKind::Oracle => Box::new(OraclePredictor::new(gpu, link)),
+        PredictorKind::Vidur => Box::new(VidurPredictor::new(gpu, link)),
+        PredictorKind::Roofline => Box::new(RooflinePredictor::new(gpu, link)),
         PredictorKind::Learned => {
             let dir = artifacts_dir
                 .map(|p| p.to_path_buf())

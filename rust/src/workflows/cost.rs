@@ -14,15 +14,36 @@
 //! launch per operator class instead of one per op — the §Perf
 //! optimization), then combined respecting the straggler barrier.
 
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::config::OverheadConfig;
-use crate::core::Pcg64;
+use crate::core::{Pcg64, SimTime};
 use crate::hardware::LinkSpec;
 use crate::metrics::MetricsCollector;
 use crate::model::ModelConfig;
-use crate::moe::{self, rank_imbalance, EpSpec, RoutingPolicy};
+use crate::moe::{self, rank_imbalance, EpNetwork, EpSpec, RoutingPolicy};
 use crate::operators::OpWorkload;
 use crate::parallelism::Parallelism;
 use crate::predictor::ExecutionPredictor;
+
+/// Global count of [`CostModel`] constructions. Cost models embed a
+/// model clone and (lazily) an EP scratch network, so building one is
+/// expensive; the controller builds every stage's models once at
+/// construction and the hot path must never construct more. Tests pin
+/// this by asserting the counter stays flat across a simulation run.
+pub static COST_MODELS_BUILT: AtomicU64 = AtomicU64::new(0);
+
+/// Reusable per-CostModel pricing buffers: the EP network (2n NIC/port
+/// links + a trunk map) and the two n^2 dispatch/combine byte matrices.
+/// Without reuse every routing draw re-allocates all three — millions of
+/// small allocations on long MoE runs (ROADMAP "Scratch EP network").
+#[derive(Clone, Debug, Default)]
+struct EpScratch {
+    net: Option<EpNetwork>,
+    mat: Vec<f64>,
+    mat_t: Vec<f64>,
+}
 
 /// The shape of one iteration's batch on a replica.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -46,7 +67,7 @@ impl BatchShape {
 }
 
 /// Immutable pricing configuration for one replica pool.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct CostModel {
     pub model: ModelConfig,
     pub par: Parallelism,
@@ -60,6 +81,32 @@ pub struct CostModel {
     /// slicing) and dispatch/combine are charged through the contended
     /// cluster fabric instead of the closed-form all-to-all.
     pub ep: Option<EpSpec>,
+    /// GShard-style capacity factor: per-expert token caps at
+    /// `ceil(cf * fair_share)`; overflow tokens are dropped (counted in
+    /// metrics). `None` = unbounded capacity.
+    pub capacity_factor: Option<f64>,
+    /// Reusable EP pricing buffers (network + byte matrices).
+    scratch: RefCell<EpScratch>,
+}
+
+/// Cloning a cost model is as expensive as building one (model config
+/// + EP scratch network), so it counts against [`COST_MODELS_BUILT`]
+/// too — the hot-path regression pin cannot be evaded with `.clone()`.
+impl Clone for CostModel {
+    fn clone(&self) -> Self {
+        COST_MODELS_BUILT.fetch_add(1, Ordering::Relaxed);
+        CostModel {
+            model: self.model.clone(),
+            par: self.par,
+            link: self.link,
+            moe_routing: self.moe_routing,
+            straggler_max: self.straggler_max,
+            overhead: self.overhead,
+            ep: self.ep.clone(),
+            capacity_factor: self.capacity_factor,
+            scratch: RefCell::new(self.scratch.borrow().clone()),
+        }
+    }
 }
 
 /// Mutable pricing context: predictor + RNG + metric sink.
@@ -89,6 +136,8 @@ impl<'a> CostCtx<'a> {
 pub struct FfnPlan {
     pub common: Vec<OpWorkload>,
     pub per_rank: Vec<Vec<OpWorkload>>,
+    /// Token-slots dropped by the capacity-factor policy in this draw.
+    pub dropped: u64,
 }
 
 /// One EP-aware MoE FFN pricing draw (see [`CostModel::moe_ffn_ep`]):
@@ -113,6 +162,7 @@ pub struct MoeEpSample {
 
 impl CostModel {
     pub fn new(model: ModelConfig, par: Parallelism, link: LinkSpec) -> Self {
+        COST_MODELS_BUILT.fetch_add(1, Ordering::Relaxed);
         CostModel {
             model,
             par,
@@ -121,7 +171,17 @@ impl CostModel {
             straggler_max: true,
             overhead: OverheadConfig::predicted(),
             ep: None,
+            capacity_factor: None,
+            scratch: RefCell::new(EpScratch::default()),
         }
+    }
+
+    /// Per-expert token cap for a routing draw of `tokens` tokens, from
+    /// the configured capacity factor.
+    fn expert_cap(&self, tokens: u32) -> Option<u32> {
+        let moe = self.model.moe.as_ref()?;
+        let cf = self.capacity_factor?;
+        Some(moe::expert_capacity(tokens, moe.n_experts, moe.top_k, cf))
     }
 
     /// Attention sub-layer ops (qkv proj + attention + o proj + TP
@@ -184,7 +244,7 @@ impl CostModel {
     /// routing draw.
     pub fn ffn_block_plan(&self, tokens: u64, rng: &mut Pcg64) -> FfnPlan {
         if tokens == 0 {
-            return FfnPlan { common: Vec::new(), per_rank: Vec::new() };
+            return FfnPlan { common: Vec::new(), per_rank: Vec::new(), dropped: 0 };
         }
         let m = &self.model;
         let tp = self.par.tp.max(1);
@@ -202,7 +262,7 @@ impl CostModel {
                         n_ranks: tp,
                     });
                 }
-                FfnPlan { common, per_rank: Vec::new() }
+                FfnPlan { common, per_rank: Vec::new(), dropped: 0 }
             }
             Some(moe) => {
                 let ep = self.par.ep.max(1);
@@ -210,17 +270,20 @@ impl CostModel {
                 let mut common = Vec::with_capacity(6);
                 // (1) gating network GEMM
                 common.push(OpWorkload::Gemm { m: tokens, n: moe.n_experts as u64, k: d });
-                // (2) pluggable routing -> token-to-expert assignment map
-                let loads = moe::assign_tokens(
+                // (2) pluggable routing -> token-to-expert assignment
+                // map, capped by the capacity-factor drop policy
+                let (loads, dropped) = moe::assign_tokens_capped(
                     self.moe_routing,
                     tokens as u32,
                     moe.n_experts,
                     moe.top_k,
+                    self.expert_cap(tokens as u32),
                     rng,
                 );
-                // (3)+(5) A2A dispatch / combine across EP ranks
-                let routed_bytes =
-                    tokens as f64 * moe.top_k as f64 * d as f64 * m.dtype_bytes as f64;
+                // (3)+(5) A2A dispatch / combine across EP ranks, sized
+                // by the tokens that actually routed (drops excluded)
+                let routed: u64 = loads.iter().map(|&x| x as u64).sum();
+                let routed_bytes = routed as f64 * d as f64 * m.dtype_bytes as f64;
                 if ep > 1 {
                     common.push(OpWorkload::AllToAll { bytes: routed_bytes, n_ranks: ep });
                     common.push(OpWorkload::AllToAll { bytes: routed_bytes, n_ranks: ep });
@@ -258,7 +321,7 @@ impl CostModel {
                         n_ranks: moe_tp,
                     });
                 }
-                FfnPlan { common, per_rank }
+                FfnPlan { common, per_rank, dropped }
             }
         }
     }
@@ -267,6 +330,11 @@ impl CostModel {
     /// under the implicit synchronization barrier — `max` (stragglers,
     /// §3.3) or balance-oblivious `mean` (ablation).
     pub fn price_ffn_plan(&self, ctx: &mut CostCtx, plan: &FfnPlan) -> f64 {
+        if plan.dropped > 0 {
+            if let Some(mc) = ctx.metrics.as_deref_mut() {
+                mc.dropped_tokens += plan.dropped;
+            }
+        }
         // prefetch everything in one pass (batched PJRT execution)
         let all: Vec<OpWorkload> = plan
             .common
@@ -343,9 +411,15 @@ impl CostModel {
                 n_ranks: tp,
             });
         }
-        // pluggable routing -> placement-aware rank loads
-        let loads =
-            moe::assign_tokens(self.moe_routing, tokens as u32, moe.n_experts, moe.top_k, ctx.rng);
+        // pluggable routing (capacity-capped) -> placement-aware rank loads
+        let (loads, dropped) = moe::assign_tokens_capped(
+            self.moe_routing,
+            tokens as u32,
+            moe.n_experts,
+            moe.top_k,
+            self.expert_cap(tokens as u32),
+            ctx.rng,
+        );
         let rank_loads = eps.placement.rank_expert_loads(&loads);
         let expert_ffn = (moe.expert_ffn_dim / tp).max(1) as u64;
         let per_rank: Vec<Vec<OpWorkload>> = rank_loads
@@ -367,12 +441,22 @@ impl CostModel {
             .collect();
         ffn_secs += self.rank_barrier(&rank_times);
         // data-dependent dispatch/combine through the fabric (combine is
-        // the transpose of the dispatch matrix already in hand)
+        // the transpose of the dispatch matrix already in hand). The
+        // network and both byte matrices live in the per-CostModel
+        // scratch buffer: one lazy build, then reset + refill per draw.
         let bpt = d as f64 * m.dtype_bytes as f64;
-        let dispatch_mat = eps.placement.dispatch_matrix(&loads, bpt);
-        let combine_mat = eps.placement.transposed(&dispatch_mat);
-        let dispatch = eps.a2a_time(&dispatch_mat);
-        let combine = eps.a2a_time(&combine_mat);
+        let mut scratch = self.scratch.borrow_mut();
+        let EpScratch { net, mat, mat_t } = &mut *scratch;
+        if !net.as_ref().is_some_and(|n| n.matches(eps)) {
+            *net = Some(eps.make_network());
+        }
+        let net = net.as_mut().expect("scratch network just built");
+        eps.placement.dispatch_matrix_into(&loads, bpt, mat);
+        eps.placement.transpose_into(mat, mat_t);
+        net.reset();
+        let dispatch = net.all_to_all(SimTime::ZERO, mat).1;
+        net.reset();
+        let combine = net.all_to_all(SimTime::ZERO, mat_t).1;
         let totals: Vec<u64> = rank_loads
             .iter()
             .map(|per| per.iter().map(|&x| x as u64).sum())
@@ -386,6 +470,7 @@ impl CostModel {
                 dispatch.cross_bytes + combine.cross_bytes,
                 imbalance,
             );
+            mc.dropped_tokens += dropped;
         }
         Some(MoeEpSample {
             ffn_secs,
@@ -598,11 +683,11 @@ mod tests {
         );
         cm.overhead = OverheadConfig::zero();
         let topo = EpTopology::new(4, 2);
-        cm.ep = Some(EpSpec {
-            placement: ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None),
-            intra: LinkSpec::nvlink_a800(),
-            cross: LinkSpec::cross_cluster(),
-        });
+        cm.ep = Some(EpSpec::flat(
+            ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None),
+            LinkSpec::nvlink_a800(),
+            LinkSpec::cross_cluster(),
+        ));
         let (mut pred, mut rng) = ctx_pieces();
         let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
         let s = cm.moe_ffn_ep(&mut ctx, 128).expect("ep path applies");
@@ -624,16 +709,16 @@ mod tests {
             Parallelism::new(1, 1, 4),
             LinkSpec::nvlink_a800(),
         );
-        cm.ep = Some(EpSpec {
-            placement: ExpertPlacement::build(
+        cm.ep = Some(EpSpec::flat(
+            ExpertPlacement::build(
                 PlacementPolicy::Strided,
                 8,
                 EpTopology::new(4, 1),
                 None,
             ),
-            intra: LinkSpec::nvlink_a800(),
-            cross: LinkSpec::cross_cluster(),
-        });
+            LinkSpec::nvlink_a800(),
+            LinkSpec::cross_cluster(),
+        ));
         let (mut pred, mut rng) = ctx_pieces();
         let mut mc = MetricsCollector::default();
         let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: Some(&mut mc) };
@@ -644,6 +729,98 @@ mod tests {
         assert_eq!(mc.ep_draws, 1);
         assert!(mc.op_time.contains_key("ep_dispatch"));
         assert!(mc.op_time.contains_key("ep_combine"));
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic_across_draws() {
+        use crate::moe::{EpSpec, EpTopology, ExpertPlacement, PlacementPolicy};
+        let mk = || {
+            let mut cm = CostModel::new(
+                ModelConfig::tiny_moe(),
+                Parallelism::new(1, 1, 4),
+                LinkSpec::nvlink_a800(),
+            );
+            cm.moe_routing = RoutingPolicy::Skewed { alpha: 0.1 };
+            cm.ep = Some(EpSpec::flat(
+                ExpertPlacement::build(
+                    PlacementPolicy::Contiguous,
+                    8,
+                    EpTopology::new(4, 2),
+                    None,
+                ),
+                LinkSpec::nvlink_a800(),
+                LinkSpec::cross_cluster(),
+            ));
+            cm
+        };
+        let cm_warm = mk();
+        let cm_cold = mk();
+        // warm one model's scratch with throwaway draws on another stream
+        {
+            let mut pred = OraclePredictor::a800();
+            let mut rng = Pcg64::new(999);
+            let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+            for _ in 0..3 {
+                cm_warm.moe_ffn_ep(&mut ctx, 96).unwrap();
+            }
+        }
+        // identical rng streams must now price identically regardless of
+        // scratch history (reset() fully re-initializes occupancy)
+        let sample = |cm: &CostModel| {
+            let mut pred = OraclePredictor::a800();
+            let mut rng = Pcg64::new(7);
+            let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+            (0..4).map(|_| cm.moe_ffn_ep(&mut ctx, 128).unwrap()).collect::<Vec<_>>()
+        };
+        for (a, b) in sample(&cm_warm).iter().zip(sample(&cm_cold).iter()) {
+            assert_eq!(a.ffn_secs, b.ffn_secs);
+            assert_eq!(a.dispatch_secs, b.dispatch_secs);
+            assert_eq!(a.combine_secs, b.combine_secs);
+            assert_eq!(a.total_bytes, b.total_bytes);
+            assert_eq!(a.cross_bytes, b.cross_bytes);
+        }
+    }
+
+    #[test]
+    fn capacity_factor_drops_are_metered() {
+        let run = |cf: Option<f64>, ep: u32| {
+            let mut cm = CostModel::new(
+                ModelConfig::tiny_moe(),
+                Parallelism::new(1, 1, ep),
+                LinkSpec::nvlink_a800(),
+            );
+            cm.moe_routing = RoutingPolicy::Skewed { alpha: 0.05 };
+            cm.capacity_factor = cf;
+            if ep > 1 {
+                use crate::moe::{EpSpec, EpTopology, ExpertPlacement, PlacementPolicy};
+                cm.ep = Some(EpSpec::flat(
+                    ExpertPlacement::build(
+                        PlacementPolicy::Contiguous,
+                        8,
+                        EpTopology::new(ep, 1),
+                        None,
+                    ),
+                    LinkSpec::nvlink_a800(),
+                    LinkSpec::cross_cluster(),
+                ));
+            }
+            let mut pred = OraclePredictor::a800();
+            let mut rng = Pcg64::new(5);
+            let mut mc = MetricsCollector::default();
+            let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: Some(&mut mc) };
+            let t = cm.ffn_block_time(&mut ctx, 512);
+            (t, mc.dropped_tokens)
+        };
+        // tight cap under heavy skew drops on both the closed-form plan
+        // path (ep=1, no EpSpec) and the EP placement path
+        let (_, d_plan) = run(Some(1.0), 1);
+        assert!(d_plan > 0, "plan path must also meter drops");
+        let (t_capped, d_ep) = run(Some(1.0), 4);
+        assert!(d_ep > 0, "skewed routing under cf=1.0 must drop");
+        let (t_uncapped, d_none) = run(None, 4);
+        assert_eq!(d_none, 0);
+        // dropping tokens removes expert work: capped is never slower
+        assert!(t_capped <= t_uncapped, "{t_capped} vs {t_uncapped}");
     }
 
     #[test]

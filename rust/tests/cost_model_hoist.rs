@@ -1,0 +1,46 @@
+//! Pin the per-iteration hot path against CostModel reconstruction:
+//! every stage's cost models (including the AF pair's attn/ffn models)
+//! are built once at controller construction; pricing iterations must
+//! never clone the model config or rebuild a cost model.
+//!
+//! Lives in its own integration binary so the global construction
+//! counter is not perturbed by concurrently running tests.
+
+use std::sync::atomic::Ordering;
+
+use frontier::config::ExperimentConfig;
+use frontier::model::ModelConfig;
+use frontier::workflows::cost::COST_MODELS_BUILT;
+use frontier::workload::WorkloadSpec;
+
+#[test]
+fn no_cost_models_built_during_simulation() {
+    // AF + MoE is the path that used to rebuild attn/ffn cost models
+    // (and clone the model) every decode iteration
+    let scenarios = vec![
+        ExperimentConfig::af(ModelConfig::tiny_moe(), 1, 2, 4, 2)
+            .with_workload(WorkloadSpec::table2(16, 128, 16)),
+        ExperimentConfig::pd(ModelConfig::tiny(), 1, 1)
+            .with_workload(WorkloadSpec::table2(16, 128, 16)),
+        ExperimentConfig::colocated(ModelConfig::tiny_moe(), 2)
+            .with_parallelism(frontier::parallelism::Parallelism::new(1, 1, 4))
+            .with_workload(WorkloadSpec::table2(16, 128, 16)),
+    ];
+    for cfg in scenarios {
+        let controller = frontier::coordinator::GlobalController::new(cfg.clone()).unwrap();
+        let trace = cfg.workload.generate();
+        let before = COST_MODELS_BUILT.load(Ordering::SeqCst);
+        let report = controller.run_with_trace(trace).unwrap();
+        let after = COST_MODELS_BUILT.load(Ordering::SeqCst);
+        assert_eq!(report.metrics.completed_requests, 16);
+        assert!(report.metrics.iterations > 0);
+        assert_eq!(
+            after - before,
+            0,
+            "{}: {} cost models built during the run (hot path must reuse \
+             construction-time models)",
+            cfg.mode_name(),
+            after - before
+        );
+    }
+}

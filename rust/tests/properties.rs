@@ -8,7 +8,8 @@ use frontier::core::Pcg64;
 use frontier::memory::BlockManager;
 use frontier::model::ModelConfig;
 use frontier::moe::{
-    assign_tokens, rank_imbalance, EpTopology, ExpertPlacement, PlacementPolicy, RoutingPolicy,
+    assign_tokens, assign_tokens_capped, rank_imbalance, EpTopology, ExpertPlacement,
+    PlacementPolicy, RoutingPolicy,
 };
 use frontier::proptest_util::run_prop;
 use frontier::scheduler::{admit, BatchPolicy, IterBudget, QueuedReq};
@@ -102,6 +103,48 @@ fn prop_moe_routing_conserves_tokens() {
         );
         // top-k without replacement: no expert receives more than `tokens`
         assert!(loads.iter().all(|&l| l <= tokens));
+    });
+}
+
+#[test]
+fn prop_capacity_cap_conserves_and_never_drops_with_headroom() {
+    // 1) capacity >= the uncapped max expert load => zero drops and a
+    //    bit-identical assignment; 2) any cap conserves token-slots
+    //    (routed + dropped == tokens * k) and respects the cap exactly
+    run_prop("capacity factor", 150, |g| {
+        let tokens = g.u32(0, 1024);
+        let e = g.u32(1, 32);
+        let k = g.u32(1, 4);
+        let policy = *g.pick(&[
+            RoutingPolicy::Balanced,
+            RoutingPolicy::UniformRandom,
+            RoutingPolicy::Skewed { alpha: 0.05 },
+        ]);
+        let seed = g.seed * 31 + 7;
+        let uncapped = assign_tokens(policy, tokens, e, k, &mut Pcg64::new(seed));
+        let max_load = uncapped.iter().copied().max().unwrap_or(0);
+        // headroom: capping at the observed max changes nothing
+        let (same, dropped) = assign_tokens_capped(
+            policy,
+            tokens,
+            e,
+            k,
+            Some(max_load.max(1)),
+            &mut Pcg64::new(seed),
+        );
+        assert_eq!(same, uncapped, "cap >= max load must be a no-op");
+        assert_eq!(dropped, 0, "cap >= max load must not drop");
+        // a tight cap conserves token-slots exactly
+        let cap = g.u32(1, max_load.max(1));
+        let (capped, d) =
+            assign_tokens_capped(policy, tokens, e, k, Some(cap), &mut Pcg64::new(seed));
+        assert!(capped.iter().all(|&l| l <= cap), "cap violated: {capped:?} cap {cap}");
+        let eff_k = k.min(e) as u64;
+        assert_eq!(
+            capped.iter().map(|&x| x as u64).sum::<u64>() + d,
+            tokens as u64 * eff_k,
+            "token-slots lost or invented"
+        );
     });
 }
 

@@ -1,0 +1,287 @@
+//! Stage-graph integration: heterogeneous multi-stage deployments
+//! (PD+AF hybrid, heterogeneous-GPU PD, fan-out) and the oracle parity
+//! pin — a 1-stage graph must bit-reproduce the legacy co-located path.
+
+use frontier::cluster::StageKind;
+use frontier::config::{
+    ExperimentConfig, FlowKind, StageConfig, StageEdge, StageGraphConfig,
+};
+use frontier::hardware::GpuSpec;
+use frontier::model::ModelConfig;
+use frontier::workload::{Arrival, LenDist, WorkloadSpec};
+
+fn fixed_workload(n: u32, input: u32, output: u32) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival: Arrival::Batch,
+        input: LenDist::Fixed(input),
+        output: LenDist::Fixed(output),
+        n_requests: n,
+        seed: 7,
+    }
+}
+
+#[test]
+fn one_stage_graph_bit_reproduces_colocated() {
+    // the acceptance-criterion parity pin: an explicit 1-stage unified
+    // graph must give bit-identical results to the legacy mode enum
+    for model in [ModelConfig::tiny(), ModelConfig::tiny_moe()] {
+        let legacy = ExperimentConfig::colocated(model.clone(), 2)
+            .with_workload(WorkloadSpec::table2(24, 64, 16));
+        let graph = ExperimentConfig::from_stages(
+            model,
+            StageGraphConfig::new(vec![StageConfig::new(StageKind::Unified, 2)]),
+        )
+        .with_workload(WorkloadSpec::table2(24, 64, 16));
+        let a = frontier::run_experiment(&legacy).unwrap();
+        let b = frontier::run_experiment(&graph).unwrap();
+        assert_eq!(a.sim_duration, b.sim_duration, "sim duration must be bit-identical");
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.metrics.output_tokens, b.metrics.output_tokens);
+        assert_eq!(a.metrics.ttft, b.metrics.ttft);
+        assert_eq!(a.metrics.tbt, b.metrics.tbt);
+        assert_eq!(a.metrics.e2e, b.metrics.e2e);
+    }
+}
+
+#[test]
+fn two_stage_graph_bit_reproduces_legacy_pd() {
+    let w = fixed_workload(24, 128, 16);
+    let legacy = ExperimentConfig::pd(ModelConfig::tiny(), 1, 2).with_workload(w.clone());
+    let graph = ExperimentConfig::from_stages(
+        ModelConfig::tiny(),
+        StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 1),
+            StageConfig::new(StageKind::Decode, 2),
+        ]),
+    )
+    .with_workload(w);
+    let a = frontier::run_experiment(&legacy).unwrap();
+    let b = frontier::run_experiment(&graph).unwrap();
+    assert_eq!(a.sim_duration, b.sim_duration);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.metrics.kv_transfers, b.metrics.kv_transfers);
+    assert_eq!(a.metrics.ttft, b.metrics.ttft);
+}
+
+#[test]
+fn pd_af_hybrid_end_to_end() {
+    // prefill pool feeding an attention/FFN decode pair with a
+    // cross-cluster expert tier — the PD+AF hybrid the flat mode enum
+    // could not express
+    let mut graph = StageGraphConfig::new(vec![
+        StageConfig::new(StageKind::Prefill, 2).named("prefill"),
+        StageConfig::af_stage(2, 4, 2).named("af"),
+    ]);
+    graph.stages[1].ep_clusters = Some(2);
+    let n = 24u32;
+    let output = 16u32;
+    let cfg = ExperimentConfig::from_stages(ModelConfig::tiny_moe(), graph)
+        .with_workload(fixed_workload(n, 128, output))
+        .with_seed(11);
+    let r = frontier::run_experiment(&cfg).unwrap();
+    // completion + conservation of tokens
+    assert_eq!(r.metrics.completed_requests, n as u64);
+    assert_eq!(r.metrics.rejected_requests, 0);
+    assert_eq!(r.metrics.output_tokens, n as u64 * output as u64);
+    // every request crossed the prefill->af boundary exactly once
+    assert_eq!(r.metrics.kv_transfers, n as u64);
+    // the AF stage's MoE tier engaged the EP fabric across clusters
+    assert!(r.metrics.ep_bytes > 0.0);
+    assert!(r.metrics.ep_cross_frac() > 0.0);
+    // per-stage metrics in the report
+    assert_eq!(r.stages.len(), 2);
+    assert_eq!(r.stages[0].kind, "prefill");
+    assert_eq!(r.stages[1].kind, "af");
+    assert!(r.stages[0].iterations > 0 && r.stages[1].iterations > 0);
+    assert!(r.stages[0].tokens > 0 && r.stages[1].tokens > 0);
+    assert_eq!(r.mode, "stage-graph");
+    // determinism under seed
+    let r2 = frontier::run_experiment(&cfg).unwrap();
+    assert_eq!(r.sim_duration, r2.sim_duration);
+    assert_eq!(r.events_processed, r2.events_processed);
+    assert_eq!(r.metrics.ttft, r2.metrics.ttft);
+}
+
+#[test]
+fn heterogeneous_gpu_pd_end_to_end() {
+    let n = 32u32;
+    let output = 12u32;
+    let mk = |prefill_gpu: GpuSpec| {
+        let graph = StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 1).on_gpu(prefill_gpu),
+            StageConfig::new(StageKind::Decode, 1).on_gpu(GpuSpec::a800()),
+        ]);
+        ExperimentConfig::from_stages(ModelConfig::qwen2_7b(), graph)
+            .with_workload(fixed_workload(n, 1024, output))
+    };
+    let slow = frontier::run_experiment(&mk(GpuSpec::a800())).unwrap();
+    let fast = frontier::run_experiment(&mk(GpuSpec::h100())).unwrap();
+    for r in [&slow, &fast] {
+        assert_eq!(r.metrics.completed_requests, n as u64);
+        assert_eq!(r.metrics.output_tokens, n as u64 * output as u64);
+        assert_eq!(r.metrics.kv_transfers, n as u64);
+    }
+    // the H100 prefill pool is strictly faster silicon: prefill-bound
+    // TTFT must improve while the shared A800 decode stage pins TBT
+    let slow_ttft = frontier::metrics::mean(&slow.metrics.ttft);
+    let fast_ttft = frontier::metrics::mean(&fast.metrics.ttft);
+    assert!(
+        fast_ttft < slow_ttft,
+        "H100 prefill TTFT {fast_ttft:.4}s must beat A800 {slow_ttft:.4}s"
+    );
+    // determinism under seed
+    let again = frontier::run_experiment(&mk(GpuSpec::h100())).unwrap();
+    assert_eq!(fast.sim_duration, again.sim_duration);
+    assert_eq!(fast.metrics.e2e, again.metrics.e2e);
+    // per-stage report names the hardware
+    assert_eq!(fast.stages[0].gpu_name, "H100-SXM5-80GB");
+    assert_eq!(fast.stages[1].gpu_name, "A800-SXM4-80GB");
+}
+
+#[test]
+fn multi_decode_fan_out_spreads_handoffs() {
+    let n = 32u32;
+    let graph = StageGraphConfig::new(vec![
+        StageConfig::new(StageKind::Prefill, 2).named("prefill"),
+        StageConfig::new(StageKind::Decode, 1).named("d0"),
+        StageConfig::new(StageKind::Decode, 1).named("d1"),
+    ]);
+    // auto-wiring fans the prefill stage out to both decode pools
+    let cfg = ExperimentConfig::from_stages(ModelConfig::tiny(), graph)
+        .with_workload(fixed_workload(n, 256, 16));
+    let r = frontier::run_experiment(&cfg).unwrap();
+    assert_eq!(r.metrics.completed_requests, n as u64);
+    assert_eq!(r.metrics.kv_transfers, n as u64);
+    // most-free-memory dispatch must use both pools
+    let d0 = &r.stages[1];
+    let d1 = &r.stages[2];
+    assert!(
+        d0.tokens > 0 && d1.tokens > 0,
+        "fan-out must engage both decode pools: {} / {} tokens",
+        d0.tokens,
+        d1.tokens
+    );
+}
+
+#[test]
+fn per_stage_budget_overrides_apply() {
+    // capping the decode stage at batch=1 forces serial decoding there:
+    // strictly more decode iterations than the unconstrained run
+    let mk = |max_batch: Option<usize>| {
+        let mut decode = StageConfig::new(StageKind::Decode, 1);
+        if let Some(b) = max_batch {
+            decode.budget = Some(frontier::scheduler::IterBudget {
+                max_batch: b,
+                ..Default::default()
+            });
+        }
+        let graph = StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 1),
+            decode,
+        ]);
+        ExperimentConfig::from_stages(ModelConfig::tiny(), graph)
+            .with_workload(fixed_workload(8, 64, 8))
+    };
+    let free = frontier::run_experiment(&mk(None)).unwrap();
+    let capped = frontier::run_experiment(&mk(Some(1))).unwrap();
+    assert_eq!(capped.metrics.completed_requests, 8);
+    assert!(
+        capped.metrics.iterations > free.metrics.iterations,
+        "batch=1 decode must iterate more: {} vs {}",
+        capped.metrics.iterations,
+        free.metrics.iterations
+    );
+    assert!(capped.sim_duration > free.sim_duration);
+}
+
+#[test]
+fn wan_placed_stages_pay_the_trunk_on_handoff() {
+    // same PD shape, but the decode pool lives in another cluster: KV
+    // handoff rides the WAN tier instead of NVLink, inflating TTFT-to-
+    // first-decode latency while completing the same work
+    let mk = |decode_cluster: u32| {
+        let graph = StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 1),
+            StageConfig::new(StageKind::Decode, 1).in_cluster(decode_cluster),
+        ]);
+        ExperimentConfig::from_stages(ModelConfig::tiny(), graph)
+            .with_workload(fixed_workload(16, 2048, 8))
+    };
+    let local = frontier::run_experiment(&mk(0)).unwrap();
+    let remote = frontier::run_experiment(&mk(1)).unwrap();
+    assert_eq!(local.metrics.completed_requests, 16);
+    assert_eq!(remote.metrics.completed_requests, 16);
+    assert_eq!(local.metrics.kv_bytes, remote.metrics.kv_bytes);
+    assert!(
+        remote.sim_duration > local.sim_duration,
+        "WAN handoff {:.4}s must cost more than NVLink {:.4}s",
+        remote.sim_duration,
+        local.sim_duration
+    );
+}
+
+#[test]
+fn inter_node_stage_placement_sits_between_nvlink_and_wan() {
+    let mk = |cluster: u32, node: u32| {
+        let graph = StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 1),
+            StageConfig::new(StageKind::Decode, 1).in_cluster(cluster).on_node(node),
+        ]);
+        ExperimentConfig::from_stages(ModelConfig::tiny(), graph)
+            .with_workload(fixed_workload(12, 4096, 4))
+    };
+    let nv = frontier::run_experiment(&mk(0, 0)).unwrap().sim_duration;
+    let ib = frontier::run_experiment(&mk(0, 1)).unwrap().sim_duration;
+    let wan = frontier::run_experiment(&mk(1, 0)).unwrap().sim_duration;
+    assert!(nv < ib, "NVLink handoff {nv:.4}s must beat IB {ib:.4}s");
+    assert!(ib < wan, "IB handoff {ib:.4}s must beat WAN {wan:.4}s");
+}
+
+#[test]
+fn capacity_factor_drops_surface_in_reports() {
+    let mk = |cf: Option<f64>| {
+        let mut cfg = ExperimentConfig::colocated(ModelConfig::tiny_moe(), 1)
+            .with_parallelism(frontier::parallelism::Parallelism::new(1, 1, 4))
+            .with_workload(fixed_workload(16, 128, 8));
+        cfg.policy.moe_routing = frontier::moe::RoutingPolicy::Skewed { alpha: 0.05 };
+        cfg.policy.capacity_factor = cf;
+        cfg
+    };
+    let capped = frontier::run_experiment(&mk(Some(1.0))).unwrap();
+    assert_eq!(capped.metrics.completed_requests, 16);
+    assert!(capped.metrics.dropped_tokens > 0, "skewed cf=1.0 must drop");
+    let json = capped.to_json();
+    assert!(json.req("dropped_tokens").unwrap().as_u64().unwrap() > 0);
+    let uncapped = frontier::run_experiment(&mk(None)).unwrap();
+    assert_eq!(uncapped.metrics.dropped_tokens, 0);
+    // generous headroom: no drops either
+    let roomy = frontier::run_experiment(&mk(Some(64.0))).unwrap();
+    assert_eq!(roomy.metrics.dropped_tokens, 0);
+}
+
+#[test]
+fn explicit_edges_and_graph_validation_via_config() {
+    // a decode pool with no incoming edge must be rejected up front
+    let graph = StageGraphConfig::new(vec![
+        StageConfig::new(StageKind::Prefill, 1),
+        StageConfig::new(StageKind::Decode, 1),
+        StageConfig::new(StageKind::Decode, 1),
+    ])
+    .with_edges(vec![StageEdge { src: 0, dst: 1, flow: FlowKind::KvHandoff }]);
+    let cfg = ExperimentConfig::from_stages(ModelConfig::tiny(), graph)
+        .with_workload(fixed_workload(4, 64, 4));
+    assert!(cfg.validate().is_err());
+    assert!(frontier::coordinator::GlobalController::new(cfg).is_err());
+}
+
+#[test]
+fn stage_report_json_includes_stages() {
+    let cfg = ExperimentConfig::pd(ModelConfig::tiny(), 1, 1)
+        .with_workload(fixed_workload(6, 64, 4));
+    let r = frontier::run_experiment(&cfg).unwrap();
+    let j = r.to_json();
+    let stages = j.req("stages").unwrap().as_arr().unwrap();
+    assert_eq!(stages.len(), 2);
+    assert_eq!(stages[0].req("kind").unwrap().as_str().unwrap(), "prefill");
+    assert!(stages[1].req("iterations").unwrap().as_u64().unwrap() > 0);
+}
