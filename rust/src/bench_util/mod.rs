@@ -1,6 +1,6 @@
 //! Minimal benchmark harness (criterion is unavailable in this offline
 //! build). Benches are `harness = false` binaries that call
-//! [`bench`] / [`Bencher`] and print a compact report.
+//! [`bench`] / [`BenchResult`] and print a compact report.
 
 use std::time::{Duration, Instant};
 

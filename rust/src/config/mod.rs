@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 use crate::cluster::StageKind;
 use crate::hardware::{GpuSpec, LinkSpec};
 use crate::model::ModelConfig;
-use crate::moe::{PlacementPolicy, RoutingPolicy};
+use crate::moe::{MigrationPolicy, PlacementPolicy, RoutingPolicy};
 use crate::network::HierSpec;
 use crate::parallelism::Parallelism;
 use crate::predictor::PredictorKind;
@@ -68,6 +68,18 @@ pub struct PolicyConfig {
     /// `ceil(cf * fair_share)`; overflow tokens are dropped and counted.
     /// `None` = unbounded.
     pub capacity_factor: Option<f64>,
+    /// Dynamic expert migration: `Off` keeps placement static for the
+    /// whole run (bit-reproduces the pre-migration simulator);
+    /// `Threshold` re-places experts between iterations when tracked
+    /// load diverges from the placement's assumption.
+    pub migration: MigrationPolicy,
+    /// Trigger ratio for threshold migration: migrate when the current
+    /// placement's predicted rank imbalance exceeds the rebalanced
+    /// placement's by this factor (>= 1.0; 1.25 = 25% headroom).
+    pub migration_threshold: f64,
+    /// EWMA window of the online expert-load estimator, in routing
+    /// draws; also the cadence at which migration is considered.
+    pub load_window: u32,
 }
 
 impl Default for PolicyConfig {
@@ -81,6 +93,9 @@ impl Default for PolicyConfig {
             straggler_max: true,
             kv_reserve_frac: 0.1,
             capacity_factor: None,
+            migration: MigrationPolicy::Off,
+            migration_threshold: 1.25,
+            load_window: 64,
         }
     }
 }
@@ -316,6 +331,16 @@ impl ExperimentConfig {
         self
     }
 
+    /// Enable threshold-triggered expert migration: consider
+    /// re-placement every `load_window` routing draws, adopting it when
+    /// the predicted imbalance improvement exceeds `threshold`.
+    pub fn with_migration(mut self, threshold: f64, load_window: u32) -> Self {
+        self.policy.migration = MigrationPolicy::Threshold;
+        self.policy.migration_threshold = threshold;
+        self.policy.load_window = load_window;
+        self
+    }
+
     /// GPUs backing one stage of the graph.
     pub fn stage_gpus(&self, st: &StageConfig) -> u32 {
         match &st.af {
@@ -347,8 +372,37 @@ impl ExperimentConfig {
                 bail!("capacity factor must be positive and finite");
             }
         }
+        if !self.policy.migration_threshold.is_finite() || self.policy.migration_threshold < 1.0 {
+            bail!("migration threshold must be >= 1.0 and finite");
+        }
+        if self.policy.load_window == 0 {
+            bail!("load window must be >= 1 routing draw");
+        }
+        if let RoutingPolicy::Drifting { period, .. } = self.policy.moe_routing {
+            if period == 0 {
+                bail!("drift period must be >= 1 routing draw");
+            }
+        }
         let graph = self.stage_graph();
         graph.validate()?;
+        // threshold migration that could never engage (dense model, or
+        // no stage with an EP domain) is a silent no-op — reject it, as
+        // `--drift` without skewed routing is rejected
+        if self.policy.migration == MigrationPolicy::Threshold {
+            if self.model.moe.is_none() {
+                bail!("threshold migration requires an MoE model");
+            }
+            let engages = graph.stages.iter().any(|st| match &st.af {
+                Some(af) => af.ffn_gpus > 1,
+                None => st.parallel.unwrap_or(self.parallel).ep > 1,
+            });
+            if !engages {
+                bail!(
+                    "threshold migration requires an EP domain: set --ep > 1 \
+                     (or an AF stage with ffn > 1)"
+                );
+            }
+        }
         // the learned predictor executes artifacts trained for one GPU;
         // a stage overriding the hardware would silently be priced wrong
         if self.predictor == PredictorKind::Learned {
@@ -438,6 +492,31 @@ mod tests {
         let mut bad = cfg;
         bad.ep_clusters = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn migration_knobs_validate() {
+        let m = ModelConfig::mixtral_8x7b();
+        let ok = ExperimentConfig::colocated(m, 4)
+            .with_parallelism(Parallelism::new(1, 1, 4))
+            .with_migration(1.25, 32);
+        assert!(ok.validate().is_ok());
+        assert_eq!(ok.policy.migration, MigrationPolicy::Threshold);
+        let mut bad = ok.clone();
+        bad.policy.migration_threshold = 0.5;
+        assert!(bad.validate().is_err(), "sub-1 threshold would thrash");
+        let mut bad = ok.clone();
+        bad.policy.load_window = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.policy.moe_routing = RoutingPolicy::Drifting { alpha: 0.1, period: 0 };
+        assert!(bad.validate().is_err());
+        // migration that can never engage is rejected, not ignored
+        let dense = ExperimentConfig::colocated(ModelConfig::tiny(), 2).with_migration(1.25, 32);
+        assert!(dense.validate().is_err(), "dense model cannot migrate experts");
+        let mut no_ep = ok;
+        no_ep.parallel = Parallelism::default();
+        assert!(no_ep.validate().is_err(), "ep=1 has no EP domain to migrate");
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! decode-capable stage) unless `--edges "0>1,0>2"` pins the kv edges
 //! explicitly. The JSON schema mirrors the DSL field-for-field — see
 //! [`StageGraphConfig::from_json`].
+#![warn(missing_docs)]
 
 use anyhow::{anyhow, bail, Result};
 
@@ -41,6 +42,7 @@ pub enum FlowKind {
 }
 
 impl FlowKind {
+    /// Stable lowercase name (reports, JSON `flow` field).
     pub fn name(&self) -> &'static str {
         match self {
             FlowKind::KvHandoff => "kv",
@@ -48,6 +50,7 @@ impl FlowKind {
         }
     }
 
+    /// Parse `kv` or `activation` (the JSON `flow` grammar).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "kv" => Some(Self::KvHandoff),
@@ -60,16 +63,22 @@ impl FlowKind {
 /// A directed edge in the stage graph.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StageEdge {
+    /// Source stage index into [`StageGraphConfig::stages`].
     pub src: usize,
+    /// Destination stage index.
     pub dst: usize,
+    /// What the edge carries.
     pub flow: FlowKind,
 }
 
 /// AF pool sizing for an `AfDecode` stage.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AfPoolSpec {
+    /// GPUs in the decode-attention pool (per AF group; count).
     pub attn_gpus: u32,
+    /// GPUs in the FFN/expert pool (per AF group; count).
     pub ffn_gpus: u32,
+    /// Micro-batches per decode step (the ping-pong `m`; count).
     pub micro_batches: u32,
 }
 
@@ -77,8 +86,11 @@ pub struct AfPoolSpec {
 /// `None` fields inherit the deployment-level defaults.
 #[derive(Clone, Debug)]
 pub struct StageConfig {
+    /// Stage name (auto-assigned `kindN` when empty; reports, errors).
     pub name: String,
+    /// What the stage does (unified / prefill / decode / AF decode).
     pub kind: StageKind,
+    /// Replicas in the pool (count; >= 1).
     pub replicas: u32,
     /// GPU model of this pool (None = deployment default).
     pub gpu: Option<GpuSpec>,
@@ -97,6 +109,8 @@ pub struct StageConfig {
 }
 
 impl StageConfig {
+    /// A stage of `replicas` replicas inheriting every deployment-level
+    /// default.
     pub fn new(kind: StageKind, replicas: u32) -> Self {
         StageConfig {
             name: String::new(),
@@ -112,6 +126,7 @@ impl StageConfig {
         }
     }
 
+    /// An attention/FFN decode stage with the given pool sizing.
     pub fn af_stage(attn_gpus: u32, ffn_gpus: u32, micro_batches: u32) -> Self {
         StageConfig {
             af: Some(AfPoolSpec { attn_gpus, ffn_gpus, micro_batches }),
@@ -119,26 +134,32 @@ impl StageConfig {
         }
     }
 
+    /// Set the stage name (builder).
     pub fn named(mut self, name: &str) -> Self {
         self.name = name.to_string();
         self
     }
 
+    /// Override the pool's GPU model (builder).
     pub fn on_gpu(mut self, gpu: GpuSpec) -> Self {
         self.gpu = Some(gpu);
         self
     }
 
+    /// Override the per-replica parallelism plan (builder).
     pub fn with_parallelism(mut self, p: Parallelism) -> Self {
         self.parallel = Some(p);
         self
     }
 
+    /// Place the stage in hierarchical-fabric cluster `cluster`
+    /// (builder).
     pub fn in_cluster(mut self, cluster: u32) -> Self {
         self.cluster = cluster;
         self
     }
 
+    /// Place the stage on node `node` within its cluster (builder).
     pub fn on_node(mut self, node: u32) -> Self {
         self.node = node;
         self
@@ -182,15 +203,21 @@ fn budget_override(max_batch: Option<u32>, max_prefill_tokens: Option<u32>) -> O
 /// The full deployment graph: stages plus typed directed edges.
 #[derive(Clone, Debug, Default)]
 pub struct StageGraphConfig {
+    /// The stages, indexed by [`StageEdge`] endpoints.
     pub stages: Vec<StageConfig>,
+    /// Typed directed edges (kv handoff, activation self-edges).
     pub edges: Vec<StageEdge>,
 }
 
 impl StageGraphConfig {
+    /// A graph over `stages` with no edges yet (auto-wired on
+    /// [`StageGraphConfig::finalize`]).
     pub fn new(stages: Vec<StageConfig>) -> Self {
         StageGraphConfig { stages, edges: Vec::new() }
     }
 
+    /// Replace the edge list (builder; skips auto-wiring for the kinds
+    /// of edges provided).
     pub fn with_edges(mut self, edges: Vec<StageEdge>) -> Self {
         self.edges = edges;
         self
@@ -254,6 +281,9 @@ impl StageGraphConfig {
             .collect()
     }
 
+    /// Check structural invariants: every stage well-formed, every edge
+    /// endpoint valid and type-correct, at least one entry stage, no
+    /// unreachable decode pool, no dangling prefill stage.
     pub fn validate(&self) -> Result<()> {
         if self.stages.is_empty() {
             bail!("stage graph needs at least one stage");

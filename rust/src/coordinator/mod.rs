@@ -25,7 +25,17 @@
 //! ([`crate::network::HierFabric`]): stages sharing a node exchange
 //! over NVLink, stages on different nodes over IB, stages in different
 //! clusters over the WAN trunk.
+//!
+//! With `--migration threshold` the controller also runs the **expert
+//! migration control loop** (ROADMAP "expert migration" /
+//! "load-aware replication"): every stage with an EP domain carries a
+//! windowed online load estimator fed by its routing draws; between
+//! iterations the controller re-plans the expert placement when the
+//! tracked load diverges from the placement's assumption, charges the
+//! weight moves through the EP fabric, and stalls the stage's replicas
+//! for the transfer makespan ([`crate::moe::migration`]).
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
@@ -35,7 +45,9 @@ use crate::config::{ExperimentConfig, StageGraphConfig};
 use crate::core::{EventQueue, Pcg64, SimTime};
 use crate::memory::{blocks_for_tokens, BlockManager};
 use crate::metrics::{MetricsCollector, ReqTimestamps, SimReport, StageReport};
-use crate::moe::{self, EpFabric, EpSpec, EpTopology, ExpertPlacement};
+use crate::moe::{
+    self, EpFabric, EpSpec, EpTopology, ExpertPlacement, LoadEstimator, MigrationPolicy,
+};
 use crate::network::{HierFabric, NetLoc};
 use crate::predictor::{self, ExecutionPredictor};
 use crate::scheduler::{self, IterBudget, QueuedReq};
@@ -100,6 +112,29 @@ struct StageRuntime {
     /// Coordinate in the hierarchical fabric.
     loc: NetLoc,
     af: Option<AfRuntime>,
+    /// Estimator draw count at the last migration check (the control
+    /// loop re-plans at most once per load window).
+    mig_last_draws: u64,
+}
+
+impl StageRuntime {
+    /// The cost model owning this stage's EP domain: the AF stage's
+    /// FFN pool, else the stage-level model. Every migration-loop
+    /// access (tracker attach, estimator read, placement rewrite) goes
+    /// through this pair so they can never diverge.
+    fn ep_cost(&self) -> &CostModel {
+        match self.af.as_ref() {
+            Some(afr) => &afr.ffn_cost,
+            None => &self.cost,
+        }
+    }
+
+    fn ep_cost_mut(&mut self) -> &mut CostModel {
+        match self.af.as_mut() {
+            Some(afr) => &mut afr.ffn_cost,
+            None => &mut self.cost,
+        }
+    }
 }
 
 pub struct GlobalController {
@@ -123,6 +158,9 @@ pub struct GlobalController {
     pending_transfers: VecDeque<(u64, usize)>,
     /// Iteration start times per (stage, replica) for busy accounting.
     iter_started: Vec<Vec<SimTime>>,
+    /// Pending migration stall per (stage, replica), seconds: expert
+    /// weight-transfer time charged to the replica's next iteration.
+    pending_stall: Vec<Vec<f64>>,
 }
 
 /// Convenience: build + run.
@@ -259,14 +297,31 @@ impl GlobalController {
                 gpu_name: gpu.name.to_string(),
                 loc: NetLoc::new(st.cluster, st.node),
                 af,
+                mig_last_draws: 0,
             });
+            // expert-migration control loop: attach the online load
+            // estimator to the cost model owning the stage's EP domain.
+            // Static runs carry no tracker at all, keeping them
+            // bit-identical to the pre-migration simulator.
+            if cfg.policy.migration == MigrationPolicy::Threshold {
+                if let Some(moe) = model.moe.as_ref() {
+                    let tracked = stages.last_mut().expect("just pushed").ep_cost_mut();
+                    if tracked.ep.is_some() {
+                        tracked.load_tracker = Some(RefCell::new(LoadEstimator::new(
+                            moe.n_experts,
+                            cfg.policy.load_window,
+                        )));
+                    }
+                }
+            }
         }
         let entry = graph.entry_stages();
         let kv_out: Vec<Vec<usize>> = (0..graph.stages.len()).map(|s| graph.kv_out(s)).collect();
-        let iter_started = stages
+        let iter_started: Vec<Vec<SimTime>> = stages
             .iter()
             .map(|st| vec![SimTime::ZERO; st.cw.replicas.len()])
             .collect();
+        let pending_stall = stages.iter().map(|st| vec![0.0f64; st.cw.replicas.len()]).collect();
         Ok(GlobalController {
             graph,
             queue: EventQueue::new(),
@@ -280,6 +335,7 @@ impl GlobalController {
             metrics: MetricsCollector::default(),
             pending_transfers: VecDeque::new(),
             iter_started,
+            pending_stall,
             cfg,
         })
     }
@@ -506,7 +562,66 @@ impl GlobalController {
             // signals the controller (PD backpressure step 2/3)
             self.try_dispatch_transfers();
         }
+        // between iterations: the expert-migration control loop may
+        // re-place experts (and stall this stage) before the next batch
+        self.maybe_migrate(s);
         self.try_start_iteration(s, r);
+    }
+
+    /// Expert-migration control loop, run between iterations of stage
+    /// `s`: once per load window, compare the tracked per-expert loads
+    /// against the current placement; when the predicted rank imbalance
+    /// clears the threshold, adopt the rebalanced placement, charge the
+    /// expert weight moves through the EP fabric, and stall every
+    /// replica of the stage for the transfer makespan.
+    fn maybe_migrate(&mut self, s: usize) {
+        if self.cfg.policy.migration != MigrationPolicy::Threshold {
+            return;
+        }
+        let window = self.cfg.policy.load_window.max(1) as u64;
+        let threshold = self.cfg.policy.migration_threshold;
+        let placement_policy = self.cfg.policy.ep_placement;
+        let last = self.stages[s].mig_last_draws;
+        // read phase: estimator snapshot + weight footprint. The one
+        // placement stands for every resident layer's FFN, so a move
+        // copies the expert's weights for ALL of the stage's layers.
+        let (draws, est, expert_bytes) = {
+            let cost = self.stages[s].ep_cost();
+            let Some(tracker) = cost.load_tracker.as_ref() else { return };
+            let tracker = tracker.borrow();
+            if tracker.draws() < last + window {
+                return;
+            }
+            let layers = (cost.model.n_layers / cost.par.pp.max(1)).max(1) as f64;
+            let per_expert = cost.model.expert_weight_bytes(cost.par.tp) * layers;
+            (tracker.draws(), tracker.snapshot(), per_expert)
+        };
+        self.stages[s].mig_last_draws = draws;
+        // plan + adopt phase
+        let (phase, pre, post) = {
+            let cost = self.stages[s].ep_cost_mut();
+            let Some(eps) = cost.ep.as_mut() else { return };
+            let plan = moe::plan_migration(&eps.placement, placement_policy, &est, threshold);
+            let Some(plan) = plan else { return };
+            let phase = moe::charge_migration(eps, &plan, expert_bytes);
+            let moe::MigrationPlan { placement, pre_imbalance, post_imbalance, .. } = plan;
+            eps.placement = placement;
+            (phase, pre_imbalance, post_imbalance)
+        };
+        // every replica of the pool holds its own copy of the expert
+        // weights, so a placement rewrite moves the plan's bytes once
+        // per replica (replicas copy in parallel — each pays the same
+        // makespan, which is why the stall below is also per replica)
+        let replicas = self.stages[s].cw.replicas.len() as f64;
+        self.metrics.record_migration(
+            phase.total_bytes * replicas,
+            phase.cross_bytes * replicas,
+            pre,
+            post,
+        );
+        for stall in &mut self.pending_stall[s] {
+            *stall += phase.secs;
+        }
     }
 
     fn on_kv_done(&mut self, rid: u64, s: usize, r: usize) {
@@ -675,11 +790,17 @@ impl GlobalController {
             st.cost.iteration_time(&mut ctx, &shape)
         };
         debug_assert!(dt > 0.0);
+        // pending expert-migration stall: the replica's EP ranks were
+        // busy receiving weights, so its next iteration starts late.
+        // Metered here — at the moment the delay is actually paid — so
+        // a migration adopted after the final iteration reports none.
+        let stall = std::mem::take(&mut self.pending_stall[s][r]);
+        self.metrics.migration_stall_s += stall;
         let repl = &mut self.stages[s].cw.replicas[r];
         repl.busy = true;
         repl.iter_chunks = chunks;
         self.iter_started[s][r] = self.queue.now();
-        self.queue.schedule_in(SimTime::from_secs_f64(dt), Ev::IterEnd { s, r });
+        self.queue.schedule_in(SimTime::from_secs_f64(dt + stall), Ev::IterEnd { s, r });
     }
 
     /// AF decode step: partition the batch into micro-batches and run

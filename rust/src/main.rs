@@ -36,9 +36,15 @@ OPTIONS (simulate / sweep-pd / baseline):
   --attn-gpus <N> --ffn-gpus <N>   AF pool sizes (default 4/4)
   --micro-batches <M>              AF micro-batches (default 2)
   --tp <N> --pp <N> --ep <N>       per-replica parallelism (default 1/1/1)
-  --routing <balanced|uniform|skewed:ALPHA>     MoE token routing (default uniform)
+  --routing <balanced|uniform|skewed:ALPHA|drift:ALPHA:PERIOD>  MoE routing (default uniform)
+  --drift <N>                      popularity epoch length in routing draws; upgrades
+                                   skewed routing to drifting popularity (default off)
   --ep-placement <contiguous|strided|replicated:K>  expert placement (default contiguous)
   --ep-clusters <N>                EP ranks span N clusters (default 1)
+  --migration <off|threshold>      dynamic expert migration (default off)
+  --migration-threshold <F>        migrate when current/rebalanced predicted
+                                   imbalance ratio exceeds F >= 1 (default 1.25)
+  --load-window <N>                expert-load EWMA window, routing draws (default 64)
   --capacity-factor <F>            MoE per-expert token cap (GShard drops; default off)
   --cross-bw <GBps>                cross-cluster WAN bandwidth (default 12.5)
   --inter-bw <GBps>                inter-node IB bandwidth (default 50)
@@ -172,9 +178,28 @@ fn build_config(a: &Args) -> Result<ExperimentConfig> {
         None => WorkloadSpec::table2(requests, input, output),
     };
     if let Some(r) = a.get("routing") {
-        cfg.policy.moe_routing = frontier::moe::RoutingPolicy::parse(r)
-            .ok_or_else(|| anyhow!("unknown routing {r:?} (balanced|uniform|skewed:ALPHA)"))?;
+        cfg.policy.moe_routing = frontier::moe::RoutingPolicy::parse(r).ok_or_else(|| {
+            anyhow!("unknown routing {r:?} (balanced|uniform|skewed:ALPHA|drift:ALPHA:PERIOD)")
+        })?;
     }
+    let drift = a.num("drift", 0u64)?;
+    if drift > 0 {
+        cfg.policy.moe_routing = match cfg.policy.moe_routing {
+            frontier::moe::RoutingPolicy::Skewed { alpha } => {
+                frontier::moe::RoutingPolicy::Drifting { alpha, period: drift }
+            }
+            frontier::moe::RoutingPolicy::Drifting { alpha, .. } => {
+                frontier::moe::RoutingPolicy::Drifting { alpha, period: drift }
+            }
+            _ => bail!("--drift requires skewed routing (--routing skewed:ALPHA)"),
+        };
+    }
+    if let Some(m) = a.get("migration") {
+        cfg.policy.migration = frontier::moe::MigrationPolicy::parse(m)
+            .ok_or_else(|| anyhow!("unknown migration policy {m:?} (off|threshold)"))?;
+    }
+    cfg.policy.migration_threshold = a.num("migration-threshold", 1.25f64)?;
+    cfg.policy.load_window = a.num("load-window", 64u32)?;
     if let Some(p) = a.get("ep-placement") {
         cfg.policy.ep_placement = frontier::moe::PlacementPolicy::parse(p).ok_or_else(|| {
             anyhow!("unknown placement {p:?} (contiguous|strided|replicated:K)")

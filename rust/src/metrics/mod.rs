@@ -45,6 +45,27 @@ pub struct MetricsCollector {
     /// Token-slots dropped by the MoE capacity-factor policy (GShard
     /// style overflow drops; 0 without a capacity factor).
     pub dropped_tokens: u64,
+    /// Expert migrations adopted (placement re-writes; 0 with
+    /// `--migration off`).
+    pub migrations: u64,
+    /// Expert weight bytes copied between EP ranks by migrations.
+    pub migrated_bytes: f64,
+    /// Migrated bytes that crossed a cluster boundary (rode the WAN
+    /// trunk).
+    pub migrated_cross_bytes: f64,
+    /// Replica-seconds actually stalled on expert weight moves: each
+    /// migration's transfer makespan is charged to every replica of the
+    /// stage at its *next* iteration start, and metered here only when
+    /// that iteration really runs — a migration adopted on the final
+    /// iteration delays nothing and meters nothing.
+    pub migration_stall_s: f64,
+    /// Sum over migrations of the predicted rank imbalance *before*
+    /// re-placement (under the estimated loads); divide by
+    /// [`MetricsCollector::migrations`] for the mean.
+    pub migration_pre_imb_sum: f64,
+    /// Sum over migrations of the predicted rank imbalance *after*
+    /// re-placement.
+    pub migration_post_imb_sum: f64,
 }
 
 impl MetricsCollector {
@@ -73,6 +94,44 @@ impl MetricsCollector {
     pub fn ep_cross_frac(&self) -> f64 {
         if self.ep_bytes > 0.0 {
             self.ep_cross_bytes / self.ep_bytes
+        } else {
+            0.0
+        }
+    }
+
+    /// Account one adopted expert migration: `bytes`/`cross_bytes` of
+    /// weights moved and the predicted pre/post rank imbalance of the
+    /// re-placement. Stall is metered separately
+    /// ([`MetricsCollector::migration_stall_s`]) when a replica
+    /// actually pays it.
+    pub fn record_migration(
+        &mut self,
+        bytes: f64,
+        cross_bytes: f64,
+        pre_imbalance: f64,
+        post_imbalance: f64,
+    ) {
+        self.migrations += 1;
+        self.migrated_bytes += bytes;
+        self.migrated_cross_bytes += cross_bytes;
+        self.migration_pre_imb_sum += pre_imbalance;
+        self.migration_post_imb_sum += post_imbalance;
+    }
+
+    /// Mean predicted rank imbalance immediately before migrations
+    /// (0 when none fired).
+    pub fn migration_pre_imbalance_mean(&self) -> f64 {
+        if self.migrations > 0 {
+            self.migration_pre_imb_sum / self.migrations as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean predicted rank imbalance immediately after migrations.
+    pub fn migration_post_imbalance_mean(&self) -> f64 {
+        if self.migrations > 0 {
+            self.migration_post_imb_sum / self.migrations as f64
         } else {
             0.0
         }
@@ -249,6 +308,23 @@ impl SimReport {
                 m.dropped_tokens
             ));
         }
+        if m.migrations > 0 {
+            s.push_str(&format!(
+                "\nexpert migration: {} migrations, {:.1} MB moved \
+                 ({:.1}% cross-cluster), stall {:.4} s, \
+                 predicted imbalance {:.2} -> {:.2}",
+                m.migrations,
+                m.migrated_bytes / 1e6,
+                if m.migrated_bytes > 0.0 {
+                    m.migrated_cross_bytes / m.migrated_bytes * 100.0
+                } else {
+                    0.0
+                },
+                m.migration_stall_s,
+                m.migration_pre_imbalance_mean(),
+                m.migration_post_imbalance_mean(),
+            ));
+        }
         for st in &self.stages {
             s.push_str(&format!(
                 "\nstage {} [{}] {}x{} on {}: {} iters, {} tokens, busy {:.1}%, peak mem {:.1}%",
@@ -291,6 +367,12 @@ impl SimReport {
             ("ep_imbalance_mean", Json::Num(m.ep_imbalance_mean())),
             ("dispatch_bubble_s", Json::Num(m.dispatch_bubble_s)),
             ("dropped_tokens", Json::Num(m.dropped_tokens as f64)),
+            ("migrations", Json::Num(m.migrations as f64)),
+            ("migrated_bytes", Json::Num(m.migrated_bytes)),
+            ("migrated_cross_bytes", Json::Num(m.migrated_cross_bytes)),
+            ("migration_stall_s", Json::Num(m.migration_stall_s)),
+            ("migration_pre_imbalance", Json::Num(m.migration_pre_imbalance_mean())),
+            ("migration_post_imbalance", Json::Num(m.migration_post_imbalance_mean())),
             (
                 "stages",
                 Json::Arr(
@@ -396,6 +478,21 @@ mod tests {
         assert!((m.ep_cross_frac() - 0.25).abs() < 1e-12);
         assert_eq!(m.ep_draws, 2);
         assert!((m.ep_imbalance_mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_accounting() {
+        let mut m = MetricsCollector::default();
+        assert_eq!(m.migration_pre_imbalance_mean(), 0.0);
+        assert_eq!(m.migration_post_imbalance_mean(), 0.0);
+        m.record_migration(100.0, 40.0, 2.0, 1.2);
+        m.record_migration(100.0, 0.0, 3.0, 1.4);
+        assert_eq!(m.migrations, 2);
+        assert_eq!(m.migrated_bytes, 200.0);
+        assert_eq!(m.migrated_cross_bytes, 40.0);
+        assert_eq!(m.migration_stall_s, 0.0, "stall is metered only when paid");
+        assert!((m.migration_pre_imbalance_mean() - 2.5).abs() < 1e-12);
+        assert!((m.migration_post_imbalance_mean() - 1.3).abs() < 1e-12);
     }
 
     #[test]

@@ -170,6 +170,22 @@ impl ModelConfig {
         let shard = tp.max(1) as u64 * ep.max(1) as u64;
         self.param_count() * self.dtype_bytes as u64 / shard
     }
+
+    /// Weight bytes of ONE routed expert in ONE layer as resident on an
+    /// EP rank (gate + up + down projections, so `3 * d_model *
+    /// expert_ffn_dim / tp` parameters at `dtype_bytes` each). The
+    /// simulator keeps a single expert placement shared by every layer,
+    /// so callers charging a placement change (migration) must scale by
+    /// the stage's resident layer count. 0 for dense models.
+    pub fn expert_weight_bytes(&self, tp: u32) -> f64 {
+        match &self.moe {
+            None => 0.0,
+            Some(m) => {
+                let ffn = (m.expert_ffn_dim / tp.max(1)).max(1) as f64;
+                3.0 * self.d_model as f64 * ffn * self.dtype_bytes as f64
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +218,15 @@ mod tests {
         // ~46B params
         let p = m.param_count();
         assert!(p > 40_000_000_000 && p < 52_000_000_000, "{p}");
+    }
+
+    #[test]
+    fn expert_weight_bytes_scale() {
+        let m = ModelConfig::tiny_moe();
+        // 3 projections * d_model * expert_ffn_dim * bf16
+        assert_eq!(m.expert_weight_bytes(1), 3.0 * 1024.0 * 2048.0 * 2.0);
+        assert_eq!(m.expert_weight_bytes(2), m.expert_weight_bytes(1) / 2.0);
+        assert_eq!(ModelConfig::tiny().expert_weight_bytes(1), 0.0);
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! Online expert-load tracking and dynamic expert migration.
+//!
+//! Static placement goes stale the moment expert popularity drifts
+//! (the regime [`crate::moe::RoutingPolicy::Drifting`] models, and the
+//! one MegaScale-Infer-style disaggregated EP serving is built around).
+//! This module turns placement into a simulated control loop:
+//!
+//! 1. **Track** — a [`LoadEstimator`] keeps a windowed EWMA of the
+//!    per-expert token loads observed on every routing draw (fed from
+//!    the cost model's EP pricing path).
+//! 2. **Plan** — between iterations, [`plan_migration`] compares the
+//!    current placement's predicted rank imbalance under the estimated
+//!    loads against a load-aware rebalanced placement (capped LPT
+//!    greedy; for
+//!    [`PlacementPolicy::ReplicatedHot`] the replica set is re-targeted
+//!    at the *estimated* hot experts). When the current placement is
+//!    worse by more than a threshold ratio, it emits a
+//!    [`MigrationPlan`] listing the expert weight moves.
+//! 3. **Charge** — [`charge_migration`] prices the plan's weight
+//!    transfers through the same 3-tier contended EP fabric the
+//!    dispatch/combine traffic rides (NVLink within a node, IB NICs
+//!    between nodes, the WAN trunk between clusters), so migration is a
+//!    modeled latency/bandwidth trade-off, not free: the coordinator
+//!    stalls the stage's replicas for the transfer makespan and meters
+//!    the moved bytes.
+//!
+//! The planner is deterministic in its inputs and *stable*: re-planning
+//! immediately after adopting a plan proposes nothing (the rebalanced
+//! placement is a fixed point), so a threshold ratio >= 1 cannot
+//! thrash under stationary load. Migration can only ever be adopted
+//! when it strictly lowers predicted imbalance — pinned by property
+//! test (`prop_migration_plan_never_worsens_predicted_imbalance`).
+
+use super::placement::{
+    rank_imbalance, replicate_hot, A2aPhase, EpSpec, EpTopology, ExpertPlacement,
+    PlacementPolicy,
+};
+
+/// When the coordinator re-places experts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationPolicy {
+    /// Never migrate: placement stays exactly as built (bit-reproduces
+    /// the static-placement simulator).
+    Off,
+    /// Re-place when the current placement's predicted rank imbalance
+    /// exceeds the rebalanced placement's by the configured threshold
+    /// ratio (checked once per load window).
+    Threshold,
+}
+
+impl MigrationPolicy {
+    /// Parse `off` or `threshold` (the CLI `--migration` grammar).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Self::Off),
+            "threshold" => Some(Self::Threshold),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (reports, CSV columns).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MigrationPolicy::Off => "off",
+            MigrationPolicy::Threshold => "threshold",
+        }
+    }
+}
+
+/// Windowed online estimator of per-expert load: an EWMA over the
+/// per-expert token counts of each observed routing draw, with gain
+/// `2 / (window + 1)` (so `window` draws carry ~2/3 of the weight —
+/// the classic N-period EWMA correspondence).
+#[derive(Clone, Debug)]
+pub struct LoadEstimator {
+    /// Estimated tokens per draw for each expert (fractional tokens).
+    ewma: Vec<f64>,
+    /// Per-observation smoothing gain (dimensionless, in (0, 1]).
+    gain: f64,
+    /// Routing draws observed so far.
+    draws: u64,
+}
+
+impl LoadEstimator {
+    /// Estimator over `n_experts` experts smoothing over roughly
+    /// `window` routing draws (`window >= 1`).
+    pub fn new(n_experts: u32, window: u32) -> Self {
+        LoadEstimator {
+            ewma: vec![0.0; n_experts as usize],
+            gain: 2.0 / (window.max(1) as f64 + 1.0),
+            draws: 0,
+        }
+    }
+
+    /// Fold one routing draw's per-expert token loads into the
+    /// estimate. The first observation seeds the EWMA directly so early
+    /// estimates are not biased toward zero.
+    pub fn observe(&mut self, loads: &[u32]) {
+        debug_assert_eq!(loads.len(), self.ewma.len());
+        if self.draws == 0 {
+            for (m, &x) in self.ewma.iter_mut().zip(loads) {
+                *m = x as f64;
+            }
+        } else {
+            for (m, &x) in self.ewma.iter_mut().zip(loads) {
+                *m += self.gain * (x as f64 - *m);
+            }
+        }
+        self.draws += 1;
+    }
+
+    /// Routing draws observed so far.
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// The current per-expert load estimate (fractional tokens per
+    /// routing draw).
+    pub fn estimate(&self) -> &[f64] {
+        &self.ewma
+    }
+
+    /// Fixed-point snapshot of the estimate (1/256-token units),
+    /// suitable as planner input or as a `loads_hint` for
+    /// [`ExpertPlacement::build`].
+    pub fn snapshot(&self) -> Vec<u32> {
+        self.ewma.iter().map(|&m| (m * 256.0).round().max(0.0) as u32).collect()
+    }
+}
+
+/// One expert weight transfer of a [`MigrationPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpertMove {
+    /// Expert being copied.
+    pub expert: u32,
+    /// EP rank the weights are read from (the expert's current home).
+    pub from: u32,
+    /// EP rank gaining a copy of the weights.
+    pub to: u32,
+}
+
+/// A planned re-placement: the target placement, the weight moves that
+/// realize it, and the predicted imbalance before/after (under the
+/// estimated loads the plan was computed from).
+#[derive(Clone, Debug)]
+pub struct MigrationPlan {
+    /// The placement to adopt.
+    pub placement: ExpertPlacement,
+    /// Expert weight copies required (hosts gained vs. the current
+    /// placement; dropping a stale replica is free).
+    pub moves: Vec<ExpertMove>,
+    /// Predicted max-over-mean rank load of the *current* placement
+    /// under the estimated loads (1.0 = perfectly balanced).
+    pub pre_imbalance: f64,
+    /// Predicted max-over-mean rank load of [`MigrationPlan::placement`]
+    /// under the same estimated loads.
+    pub post_imbalance: f64,
+}
+
+/// Load-aware placement over `topo` for the estimated per-expert loads
+/// `est` (any consistent unit; the planner uses
+/// [`LoadEstimator::snapshot`]'s 1/256-token fixed point): capped LPT
+/// greedy — experts in decreasing load order, each assigned to the
+/// least-loaded rank that still has a free expert slot (ties to the
+/// lowest rank index, so the result is deterministic). Every rank holds
+/// at most `ceil(n_experts / n_ranks)` home experts: ranks have a fixed
+/// weight-memory budget, and an uncapped rebalance would pile every
+/// near-idle expert onto one rank — bad for HBM *and* for the per-rank
+/// GroupedGEMM, whose cost grows with resident active experts. For
+/// [`PlacementPolicy::ReplicatedHot`] the `hot` highest-estimated
+/// experts are additionally replicated onto one rank of every other
+/// cluster, exactly as [`ExpertPlacement::build`] does — this is the
+/// *load-aware replication* upgrade: the replica set follows the
+/// observed hot set instead of a warmup draw.
+pub fn rebalanced_placement(
+    policy: PlacementPolicy,
+    est: &[u32],
+    topo: EpTopology,
+) -> ExpertPlacement {
+    let n = topo.n_ranks as usize;
+    let cap = est.len().div_ceil(n.max(1));
+    let mut order: Vec<usize> = (0..est.len()).collect();
+    order.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
+    let mut totals = vec![0u64; n];
+    let mut counts = vec![0usize; n];
+    let mut expert_ranks: Vec<Vec<u32>> = vec![Vec::new(); est.len()];
+    for &e in &order {
+        let r = (0..n)
+            .filter(|&r| counts[r] < cap)
+            .min_by_key(|&r| (totals[r], r))
+            .expect("cap * n_ranks >= n_experts");
+        totals[r] += est[e] as u64;
+        counts[r] += 1;
+        expert_ranks[e] = vec![r as u32];
+    }
+    if let PlacementPolicy::ReplicatedHot { hot } = policy {
+        let k = (hot as usize).min(est.len());
+        replicate_hot(&mut expert_ranks, &order[..k], topo);
+    }
+    ExpertPlacement { topo, expert_ranks }
+}
+
+/// Decide whether to re-place experts. Returns a plan iff the current
+/// placement's predicted rank imbalance under `est` exceeds the
+/// rebalanced placement's by more than the `threshold` ratio
+/// (`threshold >= 1`; e.g. 1.25 = migrate only for a >=25% predicted
+/// improvement) *and* at least one expert actually moves. Returns
+/// `None` when the estimate is empty/zero, the topology is trivial, or
+/// the improvement does not clear the threshold — in particular a
+/// single mega-hot expert that no placement can balance never triggers
+/// churn (that regime is what hot-expert *replication* is for).
+pub fn plan_migration(
+    current: &ExpertPlacement,
+    policy: PlacementPolicy,
+    est: &[u32],
+    threshold: f64,
+) -> Option<MigrationPlan> {
+    let topo = current.topo;
+    if topo.n_ranks <= 1
+        || est.len() != current.expert_ranks.len()
+        || est.iter().all(|&x| x == 0)
+    {
+        return None;
+    }
+    let candidate = rebalanced_placement(policy, est, topo);
+    let pre = rank_imbalance(&current.rank_totals(est));
+    let post = rank_imbalance(&candidate.rank_totals(est));
+    if post <= 0.0 || pre <= threshold * post {
+        return None;
+    }
+    let mut moves = Vec::new();
+    for (e, hosts) in candidate.expert_ranks.iter().enumerate() {
+        let old = &current.expert_ranks[e];
+        let from = old[0];
+        for &to in hosts {
+            if !old.contains(&to) {
+                moves.push(ExpertMove { expert: e as u32, from, to });
+            }
+        }
+    }
+    if moves.is_empty() {
+        return None;
+    }
+    Some(MigrationPlan {
+        placement: candidate,
+        moves,
+        pre_imbalance: pre,
+        post_imbalance: post,
+    })
+}
+
+/// Price a plan's weight transfers through the EP fabric:
+/// `expert_bytes` is the per-expert weight footprint a move must copy
+/// (bytes). Because one placement is shared by every resident layer,
+/// that is [`crate::model::ModelConfig::expert_weight_bytes`] (one
+/// layer) times the stage's layer count — the coordinator scales it.
+/// Every move contributes `expert_bytes` from its source to its
+/// destination rank; the transfers contend exactly like an all-to-all
+/// phase (per-rank NVLink ports / NICs, shared WAN trunks), so
+/// cross-cluster re-placement pays the trunk. Returns the phase
+/// accounting; `A2aPhase::secs` is the stall the coordinator charges
+/// the migrating stage.
+pub fn charge_migration(spec: &EpSpec, plan: &MigrationPlan, expert_bytes: f64) -> A2aPhase {
+    let n = spec.n_ranks() as usize;
+    let mut matrix = vec![0.0f64; n * n];
+    for m in &plan.moves {
+        matrix[m.from as usize * n + m.to as usize] += expert_bytes;
+    }
+    spec.a2a_time(&matrix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::LinkSpec;
+
+    #[test]
+    fn estimator_tracks_and_adapts() {
+        let mut est = LoadEstimator::new(4, 8);
+        assert_eq!(est.draws(), 0);
+        est.observe(&[8, 0, 0, 0]);
+        // first draw seeds directly
+        assert_eq!(est.estimate().to_vec(), vec![8.0, 0.0, 0.0, 0.0]);
+        for _ in 0..64 {
+            est.observe(&[0, 8, 0, 0]);
+        }
+        // after many draws the estimate follows the new hot expert
+        assert!(est.estimate()[1] > 7.0, "{:?}", est.estimate());
+        assert!(est.estimate()[0] < 1.0, "{:?}", est.estimate());
+        assert_eq!(est.draws(), 65);
+        let snap = est.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert!(snap[1] > snap[0]);
+    }
+
+    #[test]
+    fn rebalance_beats_contiguous_on_separable_skew() {
+        // two hot experts co-resident under contiguous placement: LPT
+        // must separate them
+        let topo = EpTopology::new(4, 1);
+        let est = [100u32, 90, 1, 1, 1, 1, 1, 1];
+        let contiguous =
+            ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None);
+        let cand = rebalanced_placement(PlacementPolicy::Contiguous, &est, topo);
+        let pre = rank_imbalance(&contiguous.rank_totals(&est));
+        let post = rank_imbalance(&cand.rank_totals(&est));
+        assert!(post < pre, "LPT {post} must beat contiguous {pre}");
+        // the two hot experts end up on different ranks
+        assert_ne!(cand.expert_ranks[0], cand.expert_ranks[1]);
+        // every expert is placed on a valid rank, and no rank exceeds
+        // its expert-slot budget of ceil(8/4) = 2
+        let mut counts = [0u32; 4];
+        for hosts in &cand.expert_ranks {
+            assert_eq!(hosts.len(), 1);
+            assert!(hosts[0] < 4);
+            counts[hosts[0] as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c <= 2), "slot cap violated: {counts:?}");
+    }
+
+    #[test]
+    fn rebalance_replicates_estimated_hot_set() {
+        let topo = EpTopology::new(4, 2);
+        let mut est = [1u32; 8];
+        est[5] = 200; // estimated-hot expert, not the lowest index
+        let cand = rebalanced_placement(
+            PlacementPolicy::ReplicatedHot { hot: 1 },
+            &est,
+            topo,
+        );
+        assert_eq!(cand.expert_ranks[5].len(), 2, "hot expert spans both clusters");
+        let clusters: Vec<u32> =
+            cand.expert_ranks[5].iter().map(|&r| topo.cluster_of(r)).collect();
+        assert!(clusters.contains(&0) && clusters.contains(&1));
+        assert!(cand.expert_ranks.iter().enumerate().all(|(e, h)| e == 5 || h.len() == 1));
+    }
+
+    #[test]
+    fn plan_triggers_and_is_stable() {
+        let topo = EpTopology::new(4, 1);
+        let current = ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None);
+        let est = [100u32, 90, 1, 1, 1, 1, 1, 1];
+        let plan = plan_migration(&current, PlacementPolicy::Contiguous, &est, 1.1)
+            .expect("separable skew must trigger");
+        assert!(plan.post_imbalance < plan.pre_imbalance);
+        assert!(!plan.moves.is_empty());
+        // every move is a real move onto the planned host set
+        for m in &plan.moves {
+            assert_ne!(m.from, m.to);
+            assert!(plan.placement.expert_ranks[m.expert as usize].contains(&m.to));
+            assert_eq!(current.expert_ranks[m.expert as usize][0], m.from);
+        }
+        // stability: re-planning right after adoption proposes nothing
+        assert!(
+            plan_migration(&plan.placement, PlacementPolicy::Contiguous, &est, 1.1)
+                .is_none(),
+            "adopted placement must be a fixed point"
+        );
+    }
+
+    #[test]
+    fn plan_declines_unfixable_and_degenerate_cases() {
+        let topo = EpTopology::new(4, 1);
+        let current = ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None);
+        // one mega-hot expert: no placement helps, so no churn
+        let mega = [1000u32, 1, 1, 1, 1, 1, 1, 1];
+        assert!(plan_migration(&current, PlacementPolicy::Contiguous, &mega, 1.1).is_none());
+        // zero estimate
+        assert!(plan_migration(&current, PlacementPolicy::Contiguous, &[0; 8], 1.1).is_none());
+        // length mismatch
+        assert!(plan_migration(&current, PlacementPolicy::Contiguous, &[1; 4], 1.1).is_none());
+        // single rank
+        let one = ExpertPlacement::build(
+            PlacementPolicy::Contiguous,
+            8,
+            EpTopology::new(1, 1),
+            None,
+        );
+        assert!(plan_migration(&one, PlacementPolicy::Contiguous, &[5; 8], 1.1).is_none());
+    }
+
+    #[test]
+    fn migration_charge_pays_the_fabric() {
+        let topo = EpTopology::new(4, 2);
+        let current = ExpertPlacement::build(PlacementPolicy::Contiguous, 8, topo, None);
+        // hot experts 0 and 1 share rank 0 (cluster 0): rebalancing
+        // pushes one of them across the cluster boundary
+        let est = [100u32, 90, 1, 1, 1, 1, 1, 1];
+        let plan = plan_migration(&current, PlacementPolicy::Contiguous, &est, 1.1)
+            .expect("must trigger");
+        let spec = EpSpec::flat(
+            current,
+            LinkSpec::nvlink_a800(),
+            LinkSpec::cross_cluster(),
+        );
+        let phase = charge_migration(&spec, &plan, 1e6);
+        assert!(phase.secs > 0.0, "weight moves take time");
+        assert!(
+            (phase.total_bytes - plan.moves.len() as f64 * 1e6).abs() < 1e-6,
+            "every move is metered"
+        );
+        assert_eq!(phase.local_bytes, 0.0, "a move is never rank-local");
+        let crosses = plan.moves.iter().any(|m| {
+            spec.placement.topo.cluster_of(m.from) != spec.placement.topo.cluster_of(m.to)
+        });
+        assert_eq!(crosses, phase.cross_bytes > 0.0);
+    }
+
+    #[test]
+    fn migration_policy_parse() {
+        assert_eq!(MigrationPolicy::parse("off"), Some(MigrationPolicy::Off));
+        assert_eq!(MigrationPolicy::parse("threshold"), Some(MigrationPolicy::Threshold));
+        assert_eq!(MigrationPolicy::parse("sometimes"), None);
+        assert_eq!(MigrationPolicy::Off.name(), "off");
+        assert_eq!(MigrationPolicy::Threshold.name(), "threshold");
+    }
+}

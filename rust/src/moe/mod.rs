@@ -4,10 +4,18 @@
 //! (§3.3): gate GEMM -> pluggable routing -> heterogeneous per-expert
 //! GroupedGEMM -> synchronization barrier (`max` over expert tasks).
 //! This module provides the pluggable routing policies that generate the
-//! token-to-expert assignment map, plus load-balance metrics.
+//! token-to-expert assignment map, plus load-balance metrics, an online
+//! (windowed EWMA) expert-load estimator, and the dynamic expert
+//! [`migration`] planner that re-places experts when popularity drifts.
+#![warn(missing_docs)]
 
+pub mod migration;
 pub mod placement;
 
+pub use migration::{
+    charge_migration, plan_migration, rebalanced_placement, ExpertMove, LoadEstimator,
+    MigrationPlan, MigrationPolicy,
+};
 pub use placement::{
     rank_imbalance, A2aPhase, EpFabric, EpNetwork, EpSpec, EpTopology, ExpertPlacement,
     PlacementPolicy,
@@ -25,17 +33,42 @@ pub enum RoutingPolicy {
     UniformRandom,
     /// Skewed popularity: expert weights drawn once from a symmetric
     /// Dirichlet with concentration `alpha` — small alpha = hot experts.
-    Skewed { alpha: f64 },
+    Skewed {
+        /// Dirichlet concentration (dimensionless; smaller = hotter).
+        alpha: f64,
+    },
+    /// Skewed popularity whose hot set *drifts*: every `period` routing
+    /// draws the popularity vector is redrawn from a fresh deterministic
+    /// stream (epoch 0 is identical to [`RoutingPolicy::Skewed`]). This
+    /// is the regime dynamic expert migration exists for: a placement
+    /// tuned at construction goes stale as the hot experts move.
+    Drifting {
+        /// Dirichlet concentration per epoch (dimensionless).
+        alpha: f64,
+        /// Routing draws per popularity epoch (draws, not seconds; on
+        /// the AF path one draw is one `(layer, micro-batch)` cell).
+        period: u64,
+    },
 }
 
 impl RoutingPolicy {
+    /// Parse `balanced`, `uniform`, `skewed:ALPHA`, or
+    /// `drift:ALPHA:PERIOD` (the CLI `--routing` grammar).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "balanced" => Some(Self::Balanced),
             "uniform" => Some(Self::UniformRandom),
-            _ => s.strip_prefix("skewed:").and_then(|a| {
-                a.parse::<f64>().ok().map(|alpha| Self::Skewed { alpha })
-            }),
+            _ => {
+                if let Some(a) = s.strip_prefix("skewed:") {
+                    return a.parse::<f64>().ok().map(|alpha| Self::Skewed { alpha });
+                }
+                let spec = s.strip_prefix("drift:")?;
+                let (a, p) = spec.split_once(':')?;
+                match (a.parse::<f64>(), p.parse::<u64>()) {
+                    (Ok(alpha), Ok(period)) if period > 0 => Some(Self::Drifting { alpha, period }),
+                    _ => None,
+                }
+            }
         }
     }
 }
@@ -47,7 +80,20 @@ impl RoutingPolicy {
 /// hot-expert replication placement relies on. Token sampling still
 /// flows through the caller's rng.
 pub fn expert_popularity(alpha: f64, n_experts: u32) -> Vec<f64> {
-    let mut wrng = Pcg64::new(0xE5_9EED ^ alpha.to_bits() ^ ((n_experts as u64) << 40));
+    expert_popularity_phase(alpha, n_experts, 0)
+}
+
+/// Popularity weights of one drift epoch ([`RoutingPolicy::Drifting`]):
+/// epoch 0 reproduces [`expert_popularity`] exactly; every later epoch
+/// draws an independent Dirichlet from its own deterministic stream, so
+/// the hot set jumps at epoch boundaries while staying reproducible
+/// across runs. Returns probabilities summing to 1.
+pub fn expert_popularity_phase(alpha: f64, n_experts: u32, epoch: u64) -> Vec<f64> {
+    let seed = 0xE5_9EED
+        ^ alpha.to_bits()
+        ^ ((n_experts as u64) << 40)
+        ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut wrng = Pcg64::new(seed);
     wrng.dirichlet_sym(alpha, n_experts as usize)
 }
 
@@ -77,12 +123,80 @@ pub fn assign_tokens(
 /// policy) rather than rerouted. Returns `(per-expert loads, dropped
 /// token-slots)`. The RNG stream is identical to the uncapped path, so
 /// `capacity = None` reproduces [`assign_tokens`] bit-for-bit.
+/// Equivalent to [`assign_tokens_at`] at draw index 0.
 pub fn assign_tokens_capped(
     policy: RoutingPolicy,
     tokens: u32,
     n_experts: u32,
     top_k: u32,
     capacity: Option<u32>,
+    rng: &mut Pcg64,
+) -> (Vec<u32>, u64) {
+    assign_tokens_at(policy, tokens, n_experts, top_k, capacity, 0, rng)
+}
+
+/// [`assign_tokens_capped`] at a known routing-draw index `draw` (a
+/// running count of assignment draws, maintained by the caller). Only
+/// [`RoutingPolicy::Drifting`] reads it — the popularity epoch is
+/// `draw / period` — so for every other policy any `draw` value is
+/// bit-identical to [`assign_tokens_capped`] (pinned by property test).
+pub fn assign_tokens_at(
+    policy: RoutingPolicy,
+    tokens: u32,
+    n_experts: u32,
+    top_k: u32,
+    capacity: Option<u32>,
+    draw: u64,
+    rng: &mut Pcg64,
+) -> (Vec<u32>, u64) {
+    let mut cache = PopularityCache::default();
+    assign_tokens_cached(policy, tokens, n_experts, top_k, capacity, draw, &mut cache, rng)
+}
+
+/// Reusable popularity-vector cache for [`assign_tokens_cached`]: the
+/// Dirichlet draw behind [`RoutingPolicy::Skewed`] /
+/// [`RoutingPolicy::Drifting`] is deterministic per `(policy, epoch)`,
+/// so a caller pricing many draws (the cost model's hot path — one
+/// draw per `(layer, micro-batch)` cell on the AF path) re-derives it
+/// only at epoch boundaries instead of every draw. Using a cache never
+/// changes results, only saves the recomputation.
+#[derive(Clone, Debug, Default)]
+pub struct PopularityCache {
+    key: Option<(RoutingPolicy, u32, u64)>,
+    weights: Vec<f64>,
+}
+
+impl PopularityCache {
+    /// The popularity vector (probabilities summing to 1) for `policy`
+    /// over `n_experts` experts at `epoch`, recomputed only when the
+    /// key changes.
+    fn weights(&mut self, policy: RoutingPolicy, n_experts: u32, epoch: u64) -> &[f64] {
+        if self.key != Some((policy, n_experts, epoch)) {
+            self.weights = match policy {
+                RoutingPolicy::Skewed { alpha } => expert_popularity(alpha, n_experts),
+                RoutingPolicy::Drifting { alpha, .. } => {
+                    expert_popularity_phase(alpha, n_experts, epoch)
+                }
+                _ => vec![1.0 / n_experts.max(1) as f64; n_experts as usize],
+            };
+            self.key = Some((policy, n_experts, epoch));
+        }
+        &self.weights
+    }
+}
+
+/// [`assign_tokens_at`] with a caller-held [`PopularityCache`] — the
+/// allocation-free-at-steady-state form for hot pricing paths.
+/// Bit-identical to the uncached call for every policy.
+#[allow(clippy::too_many_arguments)]
+pub fn assign_tokens_cached(
+    policy: RoutingPolicy,
+    tokens: u32,
+    n_experts: u32,
+    top_k: u32,
+    capacity: Option<u32>,
+    draw: u64,
+    cache: &mut PopularityCache,
     rng: &mut Pcg64,
 ) -> (Vec<u32>, u64) {
     let e = n_experts as usize;
@@ -101,15 +215,18 @@ pub fn assign_tokens_capped(
                 dropped += (want - *l) as u64;
             }
         }
-        RoutingPolicy::UniformRandom | RoutingPolicy::Skewed { .. } => {
-            let weights: Vec<f64> = match policy {
-                RoutingPolicy::Skewed { alpha } => expert_popularity(alpha, n_experts),
-                _ => vec![1.0 / e as f64; e],
+        RoutingPolicy::UniformRandom
+        | RoutingPolicy::Skewed { .. }
+        | RoutingPolicy::Drifting { .. } => {
+            let epoch = match policy {
+                RoutingPolicy::Drifting { period, .. } => draw / period.max(1),
+                _ => 0,
             };
-            let mut w = weights.clone();
+            let weights = cache.weights(policy, n_experts, epoch);
+            let mut w = weights.to_vec();
             for _ in 0..tokens {
                 // top-k without replacement per token
-                w.copy_from_slice(&weights);
+                w.copy_from_slice(weights);
                 for _ in 0..k {
                     let idx = rng.weighted_index(&w);
                     if loads[idx] < cap {
@@ -137,6 +254,7 @@ pub struct BalanceMetrics {
     pub active_frac: f64,
 }
 
+/// Compute [`BalanceMetrics`] over per-expert token loads.
 pub fn balance_metrics(loads: &[u32]) -> BalanceMetrics {
     let e = loads.len() as f64;
     if e == 0.0 {
@@ -205,7 +323,47 @@ mod tests {
             RoutingPolicy::parse("skewed:0.25"),
             Some(RoutingPolicy::Skewed { alpha: 0.25 })
         );
+        assert_eq!(
+            RoutingPolicy::parse("drift:0.1:512"),
+            Some(RoutingPolicy::Drifting { alpha: 0.1, period: 512 })
+        );
+        assert_eq!(RoutingPolicy::parse("drift:0.1:0"), None);
+        assert_eq!(RoutingPolicy::parse("drift:0.1"), None);
         assert_eq!(RoutingPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn drift_epoch_zero_matches_skewed() {
+        // epoch 0 weights == the stable skewed weights, so draws inside
+        // the first epoch are bit-identical to the Skewed policy
+        assert_eq!(expert_popularity_phase(0.1, 8, 0), expert_popularity(0.1, 8));
+        let drifting = RoutingPolicy::Drifting { alpha: 0.1, period: 24 };
+        let skewed = RoutingPolicy::Skewed { alpha: 0.1 };
+        for draw in [0u64, 7, 23] {
+            let mut a = Pcg64::new(5);
+            let mut b = Pcg64::new(5);
+            let da = assign_tokens_at(drifting, 64, 8, 2, None, draw, &mut a);
+            let db = assign_tokens_at(skewed, 64, 8, 2, None, draw, &mut b);
+            assert_eq!(da, db, "draw {draw} inside epoch 0 must match skewed");
+        }
+    }
+
+    #[test]
+    fn drift_epochs_move_the_hot_set() {
+        // later epochs draw fresh popularity vectors: at least one of the
+        // first few epochs must crown a different hottest expert
+        let argmax = |w: &[f64]| {
+            w.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        let base = argmax(&expert_popularity_phase(0.1, 8, 0));
+        let moved = (1..4)
+            .any(|p| argmax(&expert_popularity_phase(0.1, 8, p)) != base);
+        assert!(moved, "drift epochs never moved the hot expert");
+        // every epoch is still a probability vector
+        for p in 0..4 {
+            let w = expert_popularity_phase(0.1, 8, p);
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -48,10 +48,15 @@ pub enum PlacementPolicy {
     /// onto one rank of every cluster; sources route hot-expert traffic
     /// to their own cluster's replica, trading memory for cross-cluster
     /// bytes and rank balance.
-    ReplicatedHot { hot: u32 },
+    ReplicatedHot {
+        /// How many of the highest-load experts to replicate (count).
+        hot: u32,
+    },
 }
 
 impl PlacementPolicy {
+    /// Parse `contiguous`, `strided`, `replicated`, or `replicated:K`
+    /// (the CLI `--ep-placement` grammar).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "contiguous" => Some(Self::Contiguous),
@@ -63,6 +68,7 @@ impl PlacementPolicy {
         }
     }
 
+    /// Stable lowercase name (reports, sweep tables).
     pub fn name(&self) -> &'static str {
         match self {
             PlacementPolicy::Contiguous => "contiguous",
@@ -76,11 +82,15 @@ impl PlacementPolicy {
 /// first `n_ranks % n_clusters` clusters take one extra rank).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EpTopology {
+    /// Total EP ranks (GPUs in the expert-parallel domain; count).
     pub n_ranks: u32,
+    /// Hardware clusters the ranks span (count; 1 = co-located).
     pub n_clusters: u32,
 }
 
 impl EpTopology {
+    /// Topology of `n_ranks` EP ranks over `n_clusters` clusters
+    /// (clamped so every cluster holds at least one rank).
     pub fn new(n_ranks: u32, n_clusters: u32) -> Self {
         let n_ranks = n_ranks.max(1);
         EpTopology { n_ranks, n_clusters: n_clusters.clamp(1, n_ranks) }
@@ -94,6 +104,7 @@ impl EpTopology {
         (start, start + per + u32::from(c < rem))
     }
 
+    /// Cluster index hosting `rank`.
     pub fn cluster_of(&self, rank: u32) -> u32 {
         for c in 0..self.n_clusters {
             let (s, e) = self.cluster_ranks(c);
@@ -114,6 +125,7 @@ impl EpTopology {
 /// A concrete expert-to-rank assignment over an [`EpTopology`].
 #[derive(Clone, Debug)]
 pub struct ExpertPlacement {
+    /// The rank/cluster topology the experts are placed over.
     pub topo: EpTopology,
     /// `expert_ranks[e]` = ranks hosting expert `e` (length 1 unless the
     /// expert is replicated; the home rank comes first).
@@ -161,22 +173,12 @@ impl ExpertPlacement {
                 }
                 _ => (0..k).collect(),
             };
-            for (j, &e) in hot_experts.iter().enumerate() {
-                let home_cluster = topo.cluster_of(expert_ranks[e][0]);
-                for c in 0..topo.n_clusters {
-                    if c == home_cluster {
-                        continue;
-                    }
-                    let r = topo.rank_in_cluster(c, j as u32);
-                    if !expert_ranks[e].contains(&r) {
-                        expert_ranks[e].push(r);
-                    }
-                }
-            }
+            replicate_hot(&mut expert_ranks, &hot_experts, topo);
         }
         ExpertPlacement { topo, expert_ranks }
     }
 
+    /// Number of experts placed (count).
     pub fn n_experts(&self) -> u32 {
         self.expert_ranks.len() as u32
     }
@@ -297,6 +299,31 @@ impl ExpertPlacement {
     }
 }
 
+/// Replicate each of `hot_experts` (in priority order) onto one rank
+/// of every cluster other than its home's: replica `j` of the priority
+/// list lands on `rank_in_cluster(c, j)`. Shared by constructor-time
+/// placement ([`ExpertPlacement::build`]) and the migration planner
+/// ([`crate::moe::migration::rebalanced_placement`]) so both produce
+/// identical replica sets — the dispatch replica-routing assumes it.
+pub(crate) fn replicate_hot(
+    expert_ranks: &mut [Vec<u32>],
+    hot_experts: &[usize],
+    topo: EpTopology,
+) {
+    for (j, &e) in hot_experts.iter().enumerate() {
+        let home_cluster = topo.cluster_of(expert_ranks[e][0]);
+        for c in 0..topo.n_clusters {
+            if c == home_cluster {
+                continue;
+            }
+            let r = topo.rank_in_cluster(c, j as u32);
+            if !expert_ranks[e].contains(&r) {
+                expert_ranks[e].push(r);
+            }
+        }
+    }
+}
+
 /// Max-over-mean rank load (1.0 = perfectly balanced, 0.0 = no load).
 pub fn rank_imbalance(totals: &[u64]) -> f64 {
     if totals.is_empty() {
@@ -390,6 +417,9 @@ impl EpNetwork {
         Self::with_fabric(topo, EpFabric::flat(intra, cross))
     }
 
+    /// Build the fabric instance for `topo` over `fabric`'s 3-tier link
+    /// hierarchy (per-rank NVLink ports, per-rank possibly-asymmetric
+    /// NICs, per directed cluster pair WAN trunks).
     pub fn with_fabric(topo: EpTopology, fabric: EpFabric) -> Self {
         let n = topo.n_ranks as usize;
         let nic_in = LinkSpec {
@@ -407,6 +437,7 @@ impl EpNetwork {
         }
     }
 
+    /// EP ranks this network connects (count).
     pub fn n_ranks(&self) -> u32 {
         self.topo.n_ranks
     }
@@ -526,7 +557,10 @@ impl EpNetwork {
 /// placement plus the hierarchical fabric it rides on.
 #[derive(Clone, Debug)]
 pub struct EpSpec {
+    /// Expert-to-rank placement (mutable at runtime: the migration
+    /// control loop re-writes it between iterations).
     pub placement: ExpertPlacement,
+    /// The 3-tier fabric the EP traffic rides.
     pub fabric: EpFabric,
 }
 
@@ -537,6 +571,7 @@ impl EpSpec {
         EpSpec { placement, fabric: EpFabric::flat(intra, cross) }
     }
 
+    /// EP ranks in the placement (count).
     pub fn n_ranks(&self) -> u32 {
         self.placement.topo.n_ranks
     }

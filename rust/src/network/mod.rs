@@ -17,6 +17,7 @@
 //! A transfer's tier is decided by the endpoints' [`NetLoc`]s (cluster +
 //! node coordinates); a cross-cluster message pays both its NIC alphas
 //! and the trunk, at the bottleneck bandwidth of the path.
+#![warn(missing_docs)]
 
 use crate::core::SimTime;
 use crate::hardware::LinkSpec;
@@ -25,6 +26,7 @@ use crate::oracle;
 /// A directed link with FIFO serialization.
 #[derive(Clone, Debug)]
 pub struct Link {
+    /// Alpha-beta parameters (bandwidth bytes/s, alpha seconds).
     pub spec: LinkSpec,
     /// Time at which the link becomes free.
     busy_until: SimTime,
@@ -35,6 +37,7 @@ pub struct Link {
 }
 
 impl Link {
+    /// An idle link with the given alpha-beta spec.
     pub fn new(spec: LinkSpec) -> Self {
         Link { spec, busy_until: SimTime::ZERO, bytes_carried: 0.0, transfers: 0 }
     }
@@ -80,6 +83,7 @@ impl Link {
         self.transfers += 1;
     }
 
+    /// Time at which the link next becomes free (simulated clock).
     pub fn busy_until(&self) -> SimTime {
         self.busy_until
     }
@@ -101,10 +105,13 @@ pub struct Fabric {
 }
 
 impl Fabric {
+    /// A fabric whose lazily-created links all share `spec`.
     pub fn new(spec: LinkSpec) -> Self {
         Fabric { links: Default::default(), default_spec: Some(spec) }
     }
 
+    /// The directed link `src -> dst` (cluster indices), created idle on
+    /// first use.
     pub fn link_mut(&mut self, src: u32, dst: u32) -> &mut Link {
         let spec = self.default_spec.expect("fabric spec unset");
         self.links.entry((src, dst)).or_insert_with(|| Link::new(spec))
@@ -115,10 +122,12 @@ impl Fabric {
         self.link_mut(src, dst).transfer(now, bytes)
     }
 
+    /// Total bytes carried across all links (metrics).
     pub fn total_bytes(&self) -> f64 {
         self.links.values().map(|l| l.bytes_carried).sum()
     }
 
+    /// Total transfers across all links (metrics).
     pub fn total_transfers(&self) -> u64 {
         self.links.values().map(|l| l.transfers).sum()
     }
@@ -146,11 +155,14 @@ pub enum Tier {
 /// node within that cluster.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
 pub struct NetLoc {
+    /// Hardware cluster index (WAN domain).
     pub cluster: u32,
+    /// Node index within the cluster (IB domain).
     pub node: u32,
 }
 
 impl NetLoc {
+    /// Location `(cluster, node)` in the hierarchy.
     pub fn new(cluster: u32, node: u32) -> Self {
         NetLoc { cluster, node }
     }
@@ -196,6 +208,7 @@ impl HierSpec {
         }
     }
 
+    /// The alpha-beta spec of one tier's links.
     pub fn link_for(&self, tier: Tier) -> LinkSpec {
         match tier {
             Tier::IntraNode => self.intra_node,
@@ -229,14 +242,18 @@ pub struct HierFabric {
 }
 
 impl HierFabric {
+    /// An idle hierarchical fabric over `spec`'s three link tiers.
     pub fn new(spec: HierSpec) -> Self {
         HierFabric { spec, links: Default::default() }
     }
 
+    /// The 3-tier link hierarchy this fabric charges by.
     pub fn spec(&self) -> &HierSpec {
         &self.spec
     }
 
+    /// The directed FIFO link `src -> dst`, created idle on first use
+    /// with the spec of the endpoints' tier path.
     pub fn link_mut(&mut self, src: NetLoc, dst: NetLoc) -> &mut Link {
         let path = self.spec.path(src, dst);
         self.links.entry((src, dst)).or_insert_with(|| Link::new(path))
@@ -247,20 +264,25 @@ impl HierFabric {
         self.link_mut(src, dst).transfer(now, bytes)
     }
 
+    /// Total bytes carried across all stage-to-stage links (metrics).
     pub fn total_bytes(&self) -> f64 {
         self.links.values().map(|l| l.bytes_carried).sum()
     }
 
+    /// Total transfers across all stage-to-stage links (metrics).
     pub fn total_transfers(&self) -> u64 {
         self.links.values().map(|l| l.transfers).sum()
     }
 }
 
-/// Collective timing helpers re-exported at the network level.
+/// Closed-form ring all-reduce time (seconds) for `bytes` over
+/// `n_ranks` ranks on `spec` links.
 pub fn allreduce(bytes: f64, n_ranks: u32, spec: &LinkSpec) -> f64 {
     oracle::allreduce_time(bytes, n_ranks, spec)
 }
 
+/// Closed-form uncontended all-to-all time (seconds) for `bytes` total
+/// over `n_ranks` ranks on `spec` links.
 pub fn all2all(bytes: f64, n_ranks: u32, spec: &LinkSpec) -> f64 {
     oracle::all2all_time(bytes, n_ranks, spec)
 }

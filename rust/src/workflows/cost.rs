@@ -14,7 +14,7 @@
 //! launch per operator class instead of one per op — the §Perf
 //! optimization), then combined respecting the straggler barrier.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::OverheadConfig;
@@ -22,7 +22,9 @@ use crate::core::{Pcg64, SimTime};
 use crate::hardware::LinkSpec;
 use crate::metrics::MetricsCollector;
 use crate::model::ModelConfig;
-use crate::moe::{self, rank_imbalance, EpNetwork, EpSpec, RoutingPolicy};
+use crate::moe::{
+    self, rank_imbalance, EpNetwork, EpSpec, LoadEstimator, PopularityCache, RoutingPolicy,
+};
 use crate::operators::OpWorkload;
 use crate::parallelism::Parallelism;
 use crate::predictor::ExecutionPredictor;
@@ -66,7 +68,12 @@ impl BatchShape {
     }
 }
 
-/// Immutable pricing configuration for one replica pool.
+/// Pricing configuration and per-pool pricing state for one replica
+/// pool. Mostly set once at construction, but not immutable: the
+/// expert-migration control loop rewrites `ep.placement` between
+/// iterations, and the draw clock / popularity cache / load tracker
+/// advance with every MoE routing draw (interior mutability, so the
+/// pricing entry points stay `&self`).
 #[derive(Debug)]
 pub struct CostModel {
     pub model: ModelConfig,
@@ -85,6 +92,17 @@ pub struct CostModel {
     /// `ceil(cf * fair_share)`; overflow tokens are dropped (counted in
     /// metrics). `None` = unbounded capacity.
     pub capacity_factor: Option<f64>,
+    /// Online per-expert load estimator, fed one observation per MoE
+    /// routing draw. `None` (the default) skips tracking entirely —
+    /// attached by the coordinator only when expert migration is on, so
+    /// the static-placement path stays bit-identical.
+    pub load_tracker: Option<RefCell<LoadEstimator>>,
+    /// Routing draws priced so far (drift-epoch clock for
+    /// [`RoutingPolicy::Drifting`]; ignored by every other policy).
+    draws: Cell<u64>,
+    /// Cached popularity vector for the current drift epoch (avoids a
+    /// Dirichlet re-derivation on every routing draw).
+    pop_cache: RefCell<PopularityCache>,
     /// Reusable EP pricing buffers (network + byte matrices).
     scratch: RefCell<EpScratch>,
 }
@@ -104,6 +122,9 @@ impl Clone for CostModel {
             overhead: self.overhead,
             ep: self.ep.clone(),
             capacity_factor: self.capacity_factor,
+            load_tracker: self.load_tracker.clone(),
+            draws: self.draws.clone(),
+            pop_cache: RefCell::new(self.pop_cache.borrow().clone()),
             scratch: RefCell::new(self.scratch.borrow().clone()),
         }
     }
@@ -172,6 +193,9 @@ impl CostModel {
             overhead: OverheadConfig::predicted(),
             ep: None,
             capacity_factor: None,
+            load_tracker: None,
+            draws: Cell::new(0),
+            pop_cache: RefCell::new(PopularityCache::default()),
             scratch: RefCell::new(EpScratch::default()),
         }
     }
@@ -182,6 +206,36 @@ impl CostModel {
         let moe = self.model.moe.as_ref()?;
         let cf = self.capacity_factor?;
         Some(moe::expert_capacity(tokens, moe.n_experts, moe.top_k, cf))
+    }
+
+    /// One MoE routing draw: advance the draw clock (drifting popularity
+    /// epochs), sample the capacity-capped token-to-expert assignment,
+    /// and feed the observation to the load tracker when one is
+    /// attached. The RNG stream and returned loads are bit-identical to
+    /// the plain capped assignment for non-drifting policies.
+    fn draw_assignment(
+        &self,
+        tokens: u32,
+        n_experts: u32,
+        top_k: u32,
+        rng: &mut Pcg64,
+    ) -> (Vec<u32>, u64) {
+        let draw = self.draws.get();
+        self.draws.set(draw + 1);
+        let (loads, dropped) = moe::assign_tokens_cached(
+            self.moe_routing,
+            tokens,
+            n_experts,
+            top_k,
+            self.expert_cap(tokens),
+            draw,
+            &mut self.pop_cache.borrow_mut(),
+            rng,
+        );
+        if let Some(tracker) = &self.load_tracker {
+            tracker.borrow_mut().observe(&loads);
+        }
+        (loads, dropped)
     }
 
     /// Attention sub-layer ops (qkv proj + attention + o proj + TP
@@ -272,14 +326,8 @@ impl CostModel {
                 common.push(OpWorkload::Gemm { m: tokens, n: moe.n_experts as u64, k: d });
                 // (2) pluggable routing -> token-to-expert assignment
                 // map, capped by the capacity-factor drop policy
-                let (loads, dropped) = moe::assign_tokens_capped(
-                    self.moe_routing,
-                    tokens as u32,
-                    moe.n_experts,
-                    moe.top_k,
-                    self.expert_cap(tokens as u32),
-                    rng,
-                );
+                let (loads, dropped) =
+                    self.draw_assignment(tokens as u32, moe.n_experts, moe.top_k, rng);
                 // (3)+(5) A2A dispatch / combine across EP ranks, sized
                 // by the tokens that actually routed (drops excluded)
                 let routed: u64 = loads.iter().map(|&x| x as u64).sum();
@@ -412,14 +460,8 @@ impl CostModel {
             });
         }
         // pluggable routing (capacity-capped) -> placement-aware rank loads
-        let (loads, dropped) = moe::assign_tokens_capped(
-            self.moe_routing,
-            tokens as u32,
-            moe.n_experts,
-            moe.top_k,
-            self.expert_cap(tokens as u32),
-            ctx.rng,
-        );
+        let (loads, dropped) =
+            self.draw_assignment(tokens as u32, moe.n_experts, moe.top_k, ctx.rng);
         let rank_loads = eps.placement.rank_expert_loads(&loads);
         let expert_ffn = (moe.expert_ffn_dim / tp).max(1) as u64;
         let per_rank: Vec<Vec<OpWorkload>> = rank_loads
@@ -779,6 +821,78 @@ mod tests {
             assert_eq!(a.total_bytes, b.total_bytes);
             assert_eq!(a.cross_bytes, b.cross_bytes);
         }
+    }
+
+    #[test]
+    fn load_tracker_observes_without_perturbing_prices() {
+        use crate::moe::{EpSpec, EpTopology, ExpertPlacement, LoadEstimator, PlacementPolicy};
+        let mk = |tracked: bool| {
+            let mut cm = CostModel::new(
+                ModelConfig::tiny_moe(),
+                Parallelism::new(1, 1, 4),
+                LinkSpec::nvlink_a800(),
+            );
+            cm.moe_routing = RoutingPolicy::Skewed { alpha: 0.1 };
+            cm.ep = Some(EpSpec::flat(
+                ExpertPlacement::build(
+                    PlacementPolicy::Contiguous,
+                    8,
+                    EpTopology::new(4, 1),
+                    None,
+                ),
+                LinkSpec::nvlink_a800(),
+                LinkSpec::cross_cluster(),
+            ));
+            if tracked {
+                cm.load_tracker = Some(RefCell::new(LoadEstimator::new(8, 8)));
+            }
+            cm
+        };
+        let sample = |cm: &CostModel| {
+            let mut pred = OraclePredictor::a800();
+            let mut rng = Pcg64::new(21);
+            let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+            (0..6)
+                .map(|_| cm.moe_ffn_ep(&mut ctx, 128).unwrap())
+                .map(|s| s.ffn_secs + s.dispatch_secs + s.combine_secs)
+                .collect::<Vec<f64>>()
+        };
+        let tracked = mk(true);
+        let untracked = mk(false);
+        assert_eq!(sample(&tracked), sample(&untracked), "tracking must be free");
+        let est = tracked.load_tracker.as_ref().unwrap().borrow();
+        assert_eq!(est.draws(), 6, "one observation per routing draw");
+        // each draw routes 128 tokens * top_k 2 slots; the EWMA estimate
+        // conserves that total
+        let total: f64 = est.estimate().iter().sum();
+        assert!((total - 256.0).abs() < 1e-6, "estimate total {total}");
+    }
+
+    #[test]
+    fn drifting_routing_matches_skewed_until_the_first_flip() {
+        // draw-for-draw parity inside epoch 0, divergence after
+        let mk = |routing: RoutingPolicy| {
+            let mut cm = CostModel::new(
+                ModelConfig::tiny_moe(),
+                Parallelism::new(1, 1, 4),
+                LinkSpec::nvlink_a800(),
+            );
+            cm.moe_routing = routing;
+            cm.overhead = OverheadConfig::zero();
+            cm
+        };
+        let drift = mk(RoutingPolicy::Drifting { alpha: 0.1, period: 4 });
+        let skew = mk(RoutingPolicy::Skewed { alpha: 0.1 });
+        let sample = |cm: &CostModel| {
+            let mut pred = OraclePredictor::a800();
+            let mut rng = Pcg64::new(3);
+            let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+            (0..8).map(|_| cm.ffn_block_time(&mut ctx, 64)).collect::<Vec<f64>>()
+        };
+        let d = sample(&drift);
+        let s = sample(&skew);
+        assert_eq!(d[..4], s[..4], "epoch 0 must be bit-identical to skewed");
+        assert_ne!(d[4..], s[4..], "epoch 1 must redraw popularity");
     }
 
     #[test]

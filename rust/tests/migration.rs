@@ -1,0 +1,173 @@
+//! Dynamic expert migration, end to end: a drifting-popularity workload
+//! under `--migration threshold` must beat the static placement on both
+//! post-drift rank imbalance and step time, pay for its weight moves
+//! (migrated bytes metered, stage stall charged), and — with migration
+//! off — bit-reproduce the static-placement simulator.
+//!
+//! Constants (alpha=0.1, period=24, window=8, threshold=1.1) were
+//! chosen so the deterministic popularity epochs are *separable* skew:
+//! epoch 0 spreads load over experts {3, 6, 2}, epoch 1 concentrates on
+//! expert 2 (unfixable by placement — the planner must NOT churn), and
+//! epoch 2 spreads over {2, 3, 7}. LPT re-placement then wins by a wide
+//! deterministic margin over load-oblivious contiguous blocks.
+
+use frontier::config::ExperimentConfig;
+use frontier::metrics::mean;
+use frontier::model::ModelConfig;
+use frontier::moe::{MigrationPolicy, RoutingPolicy};
+use frontier::parallelism::Parallelism;
+use frontier::workload::WorkloadSpec;
+
+/// One co-located MoE replica whose 4 EP ranks see drifting popularity:
+/// the scenario the migration control loop exists for. Big decode
+/// batches (128 requests) make the per-draw expert loads heavy enough
+/// that rank imbalance moves real GroupedGEMM tiles and fabric bytes.
+fn drift_cfg() -> ExperimentConfig {
+    ExperimentConfig::colocated(ModelConfig::tiny_moe(), 1)
+        .with_parallelism(Parallelism::new(1, 1, 4))
+        .with_moe_routing(RoutingPolicy::Drifting { alpha: 0.1, period: 24 })
+        .with_workload(WorkloadSpec::table2(128, 64, 64))
+        .with_seed(1)
+}
+
+#[test]
+fn drifting_run_with_migration_beats_static_placement() {
+    let off = frontier::run_experiment(&drift_cfg()).unwrap();
+    let mig = frontier::run_experiment(&drift_cfg().with_migration(1.1, 8)).unwrap();
+
+    // both runs complete the workload
+    assert_eq!(off.metrics.completed_requests, 128);
+    assert_eq!(mig.metrics.completed_requests, 128);
+    assert_eq!(off.metrics.migrations, 0, "off must never migrate");
+
+    // the migrating run actually migrated, and paid for it
+    assert!(mig.metrics.migrations >= 1, "drift must trigger migration");
+    assert!(mig.metrics.migrated_bytes > 0.0, "weight moves are metered");
+    assert!(mig.metrics.migration_stall_s > 0.0, "weight moves take time");
+    assert!(
+        mig.metrics.migration_post_imbalance_mean()
+            < mig.metrics.migration_pre_imbalance_mean(),
+        "adopted plans must predict an improvement"
+    );
+
+    // ...and it was worth it: lower realized EP rank imbalance
+    assert!(
+        mig.metrics.ep_imbalance_mean() < off.metrics.ep_imbalance_mean(),
+        "imbalance: migrating {:.3} vs static {:.3}",
+        mig.metrics.ep_imbalance_mean(),
+        off.metrics.ep_imbalance_mean()
+    );
+    // ...and lower mean step time despite the migration stalls
+    assert_eq!(off.metrics.tbt.len(), mig.metrics.tbt.len());
+    assert!(
+        mean(&mig.metrics.tbt) < mean(&off.metrics.tbt),
+        "mean tbt: migrating {:.6} vs static {:.6}",
+        mean(&mig.metrics.tbt),
+        mean(&off.metrics.tbt)
+    );
+    assert!(
+        mig.sim_duration < off.sim_duration,
+        "makespan: migrating {:.4} vs static {:.4}",
+        mig.sim_duration,
+        off.sim_duration
+    );
+}
+
+#[test]
+fn post_flip_step_times_recover() {
+    // after the popularity flips, the migrating run's step times come
+    // back down while the static placement stays stale: compare the
+    // tail (the final popularity epoch) of the two tbt streams
+    let off = frontier::run_experiment(&drift_cfg()).unwrap();
+    let mig = frontier::run_experiment(&drift_cfg().with_migration(1.1, 8)).unwrap();
+    let tail = |xs: &[f64]| {
+        let n = xs.len().min(300);
+        mean(&xs[xs.len() - n..])
+    };
+    assert!(
+        tail(&mig.metrics.tbt) < tail(&off.metrics.tbt),
+        "post-flip tbt: migrating {:.6} vs static {:.6}",
+        tail(&mig.metrics.tbt),
+        tail(&off.metrics.tbt)
+    );
+}
+
+#[test]
+fn migration_off_bit_reproduces_static_results() {
+    // `--migration off` must be byte-for-byte the static simulator: no
+    // estimator attached, no stall, identical event stream. The knob
+    // values of the (inert) threshold machinery must not matter either.
+    let base = frontier::run_experiment(&drift_cfg()).unwrap();
+    let mut tweaked_cfg = drift_cfg();
+    tweaked_cfg.policy.migration_threshold = 7.5;
+    tweaked_cfg.policy.load_window = 3;
+    assert_eq!(tweaked_cfg.policy.migration, MigrationPolicy::Off);
+    let tweaked = frontier::run_experiment(&tweaked_cfg).unwrap();
+    assert_eq!(base.sim_duration, tweaked.sim_duration);
+    assert_eq!(base.events_processed, tweaked.events_processed);
+    assert_eq!(base.metrics.tbt, tweaked.metrics.tbt);
+    assert_eq!(base.metrics.ttft, tweaked.metrics.ttft);
+    assert_eq!(base.metrics.migrations, 0);
+    assert_eq!(base.metrics.migration_stall_s, 0.0);
+}
+
+#[test]
+fn tracking_without_triggering_is_free() {
+    // a threshold so high it never fires: the load estimator observes
+    // every draw, yet the run is bit-identical to `--migration off` —
+    // pins that tracking never perturbs pricing or the RNG stream
+    let off = frontier::run_experiment(&drift_cfg()).unwrap();
+    let armed = frontier::run_experiment(&drift_cfg().with_migration(1e9, 8)).unwrap();
+    assert_eq!(armed.metrics.migrations, 0, "threshold 1e9 must never fire");
+    assert_eq!(off.sim_duration, armed.sim_duration);
+    assert_eq!(off.events_processed, armed.events_processed);
+    assert_eq!(off.metrics.tbt, armed.metrics.tbt);
+}
+
+#[test]
+fn stationary_skew_migrates_once_and_settles() {
+    // under stationary (non-drifting) separable skew the control loop
+    // adapts once, then holds: no thrash, and never a worse imbalance
+    // than the static placement
+    let cfg = || {
+        ExperimentConfig::colocated(ModelConfig::tiny_moe(), 1)
+            .with_parallelism(Parallelism::new(1, 1, 4))
+            .with_moe_routing(RoutingPolicy::Skewed { alpha: 0.1 })
+            .with_workload(WorkloadSpec::table2(128, 64, 64))
+            .with_seed(1)
+    };
+    let off = frontier::run_experiment(&cfg()).unwrap();
+    let mig = frontier::run_experiment(&cfg().with_migration(1.1, 8)).unwrap();
+    assert!(mig.metrics.migrations >= 1, "separable stationary skew adapts");
+    assert!(
+        mig.metrics.migrations <= 2,
+        "stationary load must not thrash ({} migrations)",
+        mig.metrics.migrations
+    );
+    assert!(mig.metrics.ep_imbalance_mean() < off.metrics.ep_imbalance_mean());
+    assert!(mean(&mig.metrics.tbt) < mean(&off.metrics.tbt));
+}
+
+#[test]
+fn af_stage_ffn_pool_migrates_too() {
+    // the AF decode stage's FFN pool owns the EP domain: the same
+    // control loop must engage there (draws advance per layer x micro)
+    let cfg = || {
+        ExperimentConfig::af(ModelConfig::tiny_moe(), 1, 2, 4, 2)
+            .with_moe_routing(RoutingPolicy::Skewed { alpha: 0.1 })
+            .with_workload(WorkloadSpec::table2(24, 64, 24))
+            .with_seed(7)
+    };
+    let off = frontier::run_experiment(&cfg()).unwrap();
+    let mig = frontier::run_experiment(&cfg().with_migration(1.05, 64)).unwrap();
+    assert_eq!(off.metrics.completed_requests, 24);
+    assert_eq!(mig.metrics.completed_requests, 24);
+    assert!(mig.metrics.migrations >= 1, "AF FFN pool must migrate");
+    assert!(mig.metrics.migrated_bytes > 0.0);
+    assert!(
+        mig.metrics.ep_imbalance_mean() <= off.metrics.ep_imbalance_mean(),
+        "imbalance: migrating {:.3} vs static {:.3}",
+        mig.metrics.ep_imbalance_mean(),
+        off.metrics.ep_imbalance_mean()
+    );
+}

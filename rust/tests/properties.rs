@@ -8,8 +8,9 @@ use frontier::core::Pcg64;
 use frontier::memory::BlockManager;
 use frontier::model::ModelConfig;
 use frontier::moe::{
-    assign_tokens, assign_tokens_capped, rank_imbalance, EpTopology, ExpertPlacement,
-    PlacementPolicy, RoutingPolicy,
+    assign_tokens, assign_tokens_at, assign_tokens_cached, assign_tokens_capped,
+    plan_migration, rank_imbalance, EpTopology, ExpertPlacement, PlacementPolicy,
+    PopularityCache, RoutingPolicy,
 };
 use frontier::proptest_util::run_prop;
 use frontier::scheduler::{admit, BatchPolicy, IterBudget, QueuedReq};
@@ -203,6 +204,123 @@ fn prop_ep_dispatch_bytes_conserve_routed_tokens() {
         assert!((combine - want).abs() < tol, "combine {combine} vs {want}");
         // token conservation is exact (integer largest-remainder split)
         assert_eq!(p.rank_totals(&loads).iter().sum::<u64>(), routed);
+    });
+}
+
+#[test]
+fn prop_draw_clock_and_cache_are_inert_for_non_drifting_policies() {
+    // the draw-clock plumbing added for drifting popularity is the only
+    // mechanism by which this PR could have perturbed pre-existing RNG
+    // streams: pin that for every non-drifting policy, ANY draw index
+    // (and a reused popularity cache, warm from any other policy) is
+    // bit-identical to the plain capped assignment
+    run_prop("draw clock inert", 150, |g| {
+        let tokens = g.u32(0, 512);
+        let e = g.u32(1, 32);
+        let k = g.u32(1, 4);
+        let cap = if g.bool() { Some(g.u32(1, 64)) } else { None };
+        let policy = *g.pick(&[
+            RoutingPolicy::Balanced,
+            RoutingPolicy::UniformRandom,
+            RoutingPolicy::Skewed { alpha: 0.1 },
+            RoutingPolicy::Skewed { alpha: 2.0 },
+        ]);
+        let seed = g.seed * 13 + 3;
+        let draw = g.u64(0, u64::MAX / 2);
+        let plain = assign_tokens_capped(policy, tokens, e, k, cap, &mut Pcg64::new(seed));
+        let at = assign_tokens_at(policy, tokens, e, k, cap, draw, &mut Pcg64::new(seed));
+        assert_eq!(plain, at, "{policy:?} at draw {draw}");
+        // a warm cache (possibly keyed to a different policy) must be
+        // transparently refreshed, never change results
+        let mut cache = PopularityCache::default();
+        let warm = *g.pick(&[
+            RoutingPolicy::Skewed { alpha: 0.5 },
+            RoutingPolicy::Drifting { alpha: 0.3, period: 7 },
+            policy,
+        ]);
+        assign_tokens_cached(warm, 16, e, k, None, 3, &mut cache, &mut Pcg64::new(1));
+        let cached = assign_tokens_cached(
+            policy,
+            tokens,
+            e,
+            k,
+            cap,
+            draw,
+            &mut cache,
+            &mut Pcg64::new(seed),
+        );
+        assert_eq!(plain, cached, "warm cache must be transparent");
+        // and the cache is equally transparent for drifting popularity
+        let drift = RoutingPolicy::Drifting { alpha: 0.1, period: 5 };
+        let fresh = assign_tokens_at(drift, tokens, e, k, cap, draw, &mut Pcg64::new(seed));
+        let reused = assign_tokens_cached(
+            drift,
+            tokens,
+            e,
+            k,
+            cap,
+            draw,
+            &mut cache,
+            &mut Pcg64::new(seed),
+        );
+        assert_eq!(fresh, reused);
+    });
+}
+
+#[test]
+fn prop_migration_plan_never_worsens_predicted_imbalance() {
+    // planner soundness: whenever a plan is emitted it must (1) predict
+    // a strict, threshold-clearing improvement, (2) actually move
+    // something, (3) keep the placement valid (every expert hosted on
+    // in-range ranks, home-expert slots capped at ceil(E/N)), and
+    // (4) be a fixed point — re-planning right after adoption proposes
+    // nothing, so stationary load can never thrash
+    run_prop("migration plan soundness", 200, |g| {
+        let ranks = g.u32(2, 12);
+        let experts = g.u32(1, 64);
+        let clusters = g.u32(1, 4);
+        let topo = EpTopology::new(ranks, clusters);
+        let policy = *g.pick(&[
+            PlacementPolicy::Contiguous,
+            PlacementPolicy::Strided,
+            PlacementPolicy::ReplicatedHot { hot: 2 },
+        ]);
+        let current = ExpertPlacement::build(policy, experts, topo, None);
+        let est: Vec<u32> = (0..experts).map(|_| g.u32(0, 1000)).collect();
+        let threshold = g.f64(1.0, 2.0);
+        let Some(plan) = plan_migration(&current, policy, &est, threshold) else { return };
+        assert!(
+            plan.post_imbalance < plan.pre_imbalance,
+            "plan must predict improvement: {} -> {}",
+            plan.pre_imbalance,
+            plan.post_imbalance
+        );
+        assert!(plan.pre_imbalance > threshold * plan.post_imbalance);
+        assert!(!plan.moves.is_empty());
+        // placement validity + expert-slot cap on home ranks
+        assert_eq!(plan.placement.expert_ranks.len(), experts as usize);
+        let cap = (experts as usize).div_ceil(ranks as usize);
+        let mut homes = vec![0usize; ranks as usize];
+        for hosts in &plan.placement.expert_ranks {
+            assert!(!hosts.is_empty());
+            assert!(hosts.iter().all(|&h| h < ranks));
+            homes[hosts[0] as usize] += 1;
+        }
+        assert!(homes.iter().all(|&c| c <= cap), "slot cap violated: {homes:?}");
+        // moves are consistent with the diff
+        for m in &plan.moves {
+            assert_ne!(m.from, m.to);
+            assert_eq!(current.expert_ranks[m.expert as usize][0], m.from);
+            assert!(plan.placement.expert_ranks[m.expert as usize].contains(&m.to));
+        }
+        // token conservation through the new placement
+        let routed: u64 = est.iter().map(|&x| x as u64).sum();
+        assert_eq!(plan.placement.rank_totals(&est).iter().sum::<u64>(), routed);
+        // stability under stationary load
+        assert!(
+            plan_migration(&plan.placement, policy, &est, threshold).is_none(),
+            "adopted placement must be a fixed point"
+        );
     });
 }
 
