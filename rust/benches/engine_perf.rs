@@ -1,8 +1,17 @@
 //! Bench P1: simulator performance — events/second, sim-time/host-time
 //! ratio, and predictor cache effectiveness. This is the §Perf target
 //! surface for the L3 optimization pass (EXPERIMENTS.md §Perf).
+//!
+//! Emits `target/bench_results/BENCH_engine_perf.json` (blessed copy at
+//! the repo root); with `BENCH_BASELINE` set it becomes the CI perf
+//! gate: deterministic event/iteration counts are compared exactly-ish
+//! (they only move when simulation *logic* changes — a deliberate
+//! re-pin), wall-clock events/sec only against a calibrated baseline.
 
-use frontier::bench_util::{bench, section};
+use frontier::bench_util::{
+    bench, gate_against_baseline, quick, section, write_results, BaselineCheck,
+};
+use frontier::config::json::Json;
 use frontier::config::{ExperimentConfig, OverheadConfig};
 use frontier::core::{EventQueue, SimTime};
 use frontier::model::ModelConfig;
@@ -20,31 +29,54 @@ fn big_workload(n: u32) -> WorkloadSpec {
 }
 
 fn main() {
+    // quick mode shrinks the workloads ~4x; the deterministic counts in
+    // the JSON change with it, so the gate pins the quick-mode numbers
+    let scale = if quick() { 4 } else { 1 };
+    let mut json: Vec<(&'static str, Json)> = Vec::new();
+    let calibrated = std::env::var_os("BENCH_CALIBRATED").is_some_and(|v| v == "1");
+    json.push(("calibrated", Json::Bool(calibrated)));
+    json.push(("quick", Json::Bool(quick())));
+
     section("raw event queue throughput");
-    bench("schedule+pop 100k events", || {
+    let q_events = 100_000u64 / scale as u64;
+    let r_queue = bench("schedule+pop event queue", || {
         let mut q: EventQueue<u64> = EventQueue::new();
-        for i in 0..100_000u64 {
+        for i in 0..q_events {
             q.schedule_at(SimTime(i * 7 % 1_000_000), i);
         }
         while q.pop().is_some() {}
     });
+    json.push((
+        "queue_events_per_s",
+        Json::Num(q_events as f64 / r_queue.mean.as_secs_f64().max(1e-12)),
+    ));
 
     section("end-to-end simulation throughput (oracle predictor)");
-    for (name, cfg) in [
+    for (name, key_evps, key_events, key_iters, cfg) in [
         (
-            "colocated qwen2-7b x4, 400 reqs",
+            "colocated qwen2-7b x4",
+            "colocated_events_per_s",
+            "colocated_events",
+            "colocated_iterations",
             ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 4)
-                .with_workload(big_workload(400)),
+                .with_workload(big_workload(400 / scale)),
         ),
         (
-            "pd 4:4 qwen2-7b, 400 reqs",
-            ExperimentConfig::pd(ModelConfig::qwen2_7b(), 4, 4).with_workload(big_workload(400)),
+            "pd 4:4 qwen2-7b",
+            "pd_events_per_s",
+            "pd_events",
+            "pd_iterations",
+            ExperimentConfig::pd(ModelConfig::qwen2_7b(), 4, 4)
+                .with_workload(big_workload(400 / scale)),
         ),
         (
-            "colocated mixtral ep8, 200 reqs",
+            "colocated mixtral ep8",
+            "moe_ep8_events_per_s",
+            "moe_ep8_events",
+            "moe_ep8_iterations",
             ExperimentConfig::colocated(ModelConfig::mixtral_8x7b(), 1)
                 .with_parallelism(frontier::parallelism::Parallelism::new(1, 1, 8))
-                .with_workload(big_workload(200)),
+                .with_workload(big_workload(200 / scale)),
         ),
     ] {
         let r = frontier::run_experiment(&cfg).unwrap();
@@ -56,14 +88,20 @@ fn main() {
             r.speedup(),
             r.metrics.iterations,
         );
-        bench(&format!("simulate: {name}"), || {
+        let b = bench(&format!("simulate: {name}"), || {
             std::hint::black_box(frontier::run_experiment(&cfg).unwrap().sim_duration);
         });
+        json.push((
+            key_evps,
+            Json::Num(r.events_processed as f64 / b.mean.as_secs_f64().max(1e-12)),
+        ));
+        json.push((key_events, Json::Num(r.events_processed as f64)));
+        json.push((key_iters, Json::Num(r.metrics.iterations as f64)));
     }
 
     section("predictor cost inside the loop");
     let cfg = ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 2)
-        .with_workload(big_workload(150));
+        .with_workload(big_workload(150 / scale.min(2)));
     bench("full sim, oracle predictor", || {
         std::hint::black_box(frontier::run_experiment(&cfg).unwrap().sim_duration);
     });
@@ -87,12 +125,69 @@ fn main() {
 
     section("zero-overhead config (engine floor)");
     let fast = ExperimentConfig::colocated(ModelConfig::tiny(), 8)
-        .with_workload(big_workload(1000))
+        .with_workload(big_workload(1000 / scale))
         .with_overhead(OverheadConfig::zero());
     let r = frontier::run_experiment(&fast).unwrap();
     println!(
-        "tiny x8, 1000 reqs: {:.0} ev/s, {} events",
+        "tiny x8, {} reqs: {:.0} ev/s, {} events",
+        1000 / scale,
         r.events_per_sec(),
         r.events_processed
+    );
+    json.push(("floor_events_per_s", Json::Num(r.events_per_sec())));
+
+    let current = Json::obj(json);
+    write_results("BENCH_engine_perf.json", &current.to_string_pretty());
+
+    // CI perf gate: wall-clock throughput only against a calibrated
+    // baseline (20% band). The deterministic event counts double as a
+    // drift alarm with a tight band — they move only when simulation
+    // logic changes, which is a deliberate baseline re-pin.
+    gate_against_baseline(
+        &current,
+        &[
+            BaselineCheck {
+                key: "colocated_events_per_s",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "pd_events_per_s",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "moe_ep8_events_per_s",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "queue_events_per_s",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "moe_ep8_events",
+                higher_is_better: false,
+                tol: 0.01,
+                needs_calibration: false,
+                two_sided: true,
+            },
+            BaselineCheck {
+                key: "moe_ep8_iterations",
+                higher_is_better: false,
+                tol: 0.01,
+                needs_calibration: false,
+                two_sided: true,
+            },
+        ],
     );
 }

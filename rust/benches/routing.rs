@@ -1,0 +1,245 @@
+//! Routing-sampler throughput — the tentpole measurement of the
+//! O(1) alias-table overhaul.
+//!
+//! Three samplers over the same popularity model:
+//!
+//! * **oracle** — the frozen linear-scan reference
+//!   (`moe::assign_tokens_oracle`): O(tokens·k·E) per draw, one weight
+//!   copy per token. This was the production sampler before this
+//!   change.
+//! * **alias** — per-token top-k through the cached Walker alias table
+//!   (`RoutingFidelity::Token`): O(1) per pick.
+//! * **aggregate** — O(E) binomial-split multinomial per draw
+//!   (`RoutingFidelity::Aggregate`): the huge-batch scale mode.
+//!
+//! Emits `target/bench_results/BENCH_routing.json` (blessed copy lives
+//! at the repo root) and, when `BENCH_BASELINE` is set, fails on >
+//! tolerance regressions vs the committed baseline — the CI perf gate.
+//!
+//! ```bash
+//! cargo bench --bench routing
+//! BENCH_QUICK=1 BENCH_BASELINE=BENCH_routing.json cargo bench --bench routing
+//! ```
+
+use frontier::bench_util::{
+    bench, gate_against_baseline, quick, section, write_results, BaselineCheck,
+};
+use frontier::config::json::Json;
+use frontier::core::Pcg64;
+use frontier::moe::{
+    assign_tokens_into, assign_tokens_oracle, PopularityCache, RoutingFidelity, RoutingPolicy,
+};
+
+/// Per-expert share vectors of `draws` draws with each sampler, for the
+/// distribution smoke check (the statistically rigorous equivalence
+/// pins live in rust/tests/routing_dist.rs).
+fn shares(
+    fidelity: Option<RoutingFidelity>,
+    policy: RoutingPolicy,
+    tokens: u32,
+    e: u32,
+    k: u32,
+    draws: u64,
+) -> Vec<f64> {
+    let mut rng = Pcg64::new(999);
+    let mut cache = PopularityCache::default();
+    let mut loads = Vec::new();
+    let mut totals = vec![0u64; e as usize];
+    for d in 0..draws {
+        match fidelity {
+            None => {
+                let (l, _) = assign_tokens_oracle(policy, tokens, e, k, None, d, &mut rng);
+                for (t, &x) in totals.iter_mut().zip(&l) {
+                    *t += u64::from(x);
+                }
+            }
+            Some(f) => {
+                assign_tokens_into(
+                    policy, f, tokens, e, k, None, d, &mut cache, &mut rng, &mut loads,
+                );
+                for (t, &x) in totals.iter_mut().zip(&loads) {
+                    *t += u64::from(x);
+                }
+            }
+        }
+    }
+    let sum: u64 = totals.iter().sum();
+    totals.iter().map(|&t| t as f64 / sum.max(1) as f64).collect()
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+fn main() {
+    // the acceptance configuration: E=128 experts, top_k=4 (the
+    // MegaScale-Infer disaggregated-EP regime), skewed popularity
+    let e = 128u32;
+    let k = 4u32;
+    let tokens = 512u32;
+    let policy = RoutingPolicy::Skewed { alpha: 0.1 };
+    let draws = if quick() { 8u64 } else { 32 };
+
+    section("distribution smoke (shares vs the oracle sampler)");
+    // fixed draw count in both modes: the smoke stats are deterministic
+    // (fixed seed), so the gate compares identical numbers
+    let smoke_draws = 200;
+    let s_oracle = shares(None, policy, tokens, e, k, smoke_draws);
+    let s_alias = shares(Some(RoutingFidelity::Token), policy, tokens, e, k, smoke_draws);
+    let s_agg = shares(Some(RoutingFidelity::Aggregate), policy, tokens, e, k, smoke_draws);
+    let err_alias = max_abs_diff(&s_oracle, &s_alias);
+    let err_agg = max_abs_diff(&s_oracle, &s_agg);
+    println!("max |share - oracle share|: alias {err_alias:.4}, aggregate {err_agg:.4}");
+    assert!(err_alias < 0.02, "alias sampler drifted from the oracle: {err_alias}");
+    assert!(err_agg < 0.03, "aggregate sampler drifted from the oracle: {err_agg}");
+
+    section(&format!("token-draw throughput, E={e} top_k={k} tokens={tokens}"));
+    let mut rng = Pcg64::new(1);
+    let t_oracle = bench("oracle linear scan", || {
+        for d in 0..draws {
+            let (l, _) = assign_tokens_oracle(policy, tokens, e, k, None, d, &mut rng);
+            std::hint::black_box(l.len());
+        }
+    });
+    let mut rng = Pcg64::new(1);
+    let mut cache = PopularityCache::default();
+    let mut loads = Vec::new();
+    let t_alias = bench("alias table (token fidelity)", || {
+        for d in 0..draws {
+            assign_tokens_into(
+                policy,
+                RoutingFidelity::Token,
+                tokens,
+                e,
+                k,
+                None,
+                d,
+                &mut cache,
+                &mut rng,
+                &mut loads,
+            );
+            std::hint::black_box(loads.len());
+        }
+    });
+    let thr = |r: &frontier::bench_util::BenchResult| {
+        draws as f64 * tokens as f64 / r.mean.as_secs_f64().max(1e-12)
+    };
+    let alias_speedup = thr(&t_alias) / thr(&t_oracle);
+    println!(
+        "tokens drawn/s: oracle {:.3e}, alias {:.3e}  (speedup {alias_speedup:.1}x)",
+        thr(&t_oracle),
+        thr(&t_alias)
+    );
+    assert!(
+        alias_speedup >= 5.0,
+        "acceptance floor: alias must be >=5x the oracle at E=128/top_k=4, got {alias_speedup:.2}x"
+    );
+
+    // the aggregate mode targets huge batches, where even the alias
+    // sampler's per-token loop is the bottleneck
+    let big_tokens = 4096u32;
+    let big_draws = if quick() { 2u64 } else { 4 };
+    section(&format!("aggregate mode, E={e} top_k={k} tokens={big_tokens}"));
+    let mut rng = Pcg64::new(1);
+    let t_oracle_big = bench("oracle linear scan (big batch)", || {
+        for d in 0..big_draws {
+            let (l, _) = assign_tokens_oracle(policy, big_tokens, e, k, None, d, &mut rng);
+            std::hint::black_box(l.len());
+        }
+    });
+    let mut rng = Pcg64::new(1);
+    let t_agg = bench("aggregate counts (O(E) per draw)", || {
+        for d in 0..big_draws {
+            assign_tokens_into(
+                policy,
+                RoutingFidelity::Aggregate,
+                big_tokens,
+                e,
+                k,
+                None,
+                d,
+                &mut cache,
+                &mut rng,
+                &mut loads,
+            );
+            std::hint::black_box(loads.len());
+        }
+    });
+    let thr_big = |r: &frontier::bench_util::BenchResult| {
+        big_draws as f64 * big_tokens as f64 / r.mean.as_secs_f64().max(1e-12)
+    };
+    let aggregate_speedup = thr_big(&t_agg) / thr_big(&t_oracle_big);
+    println!(
+        "tokens drawn/s: oracle {:.3e}, aggregate {:.3e}  (speedup {aggregate_speedup:.1}x)",
+        thr_big(&t_oracle_big),
+        thr_big(&t_agg)
+    );
+    assert!(aggregate_speedup >= 5.0, "aggregate must also clear 5x, got {aggregate_speedup:.2}x");
+
+    let calibrated = std::env::var_os("BENCH_CALIBRATED").is_some_and(|v| v == "1");
+    let current = Json::obj(vec![
+        ("calibrated", Json::Bool(calibrated)),
+        ("experts", Json::Num(e as f64)),
+        ("top_k", Json::Num(k as f64)),
+        ("tokens", Json::Num(tokens as f64)),
+        ("aggregate_tokens", Json::Num(big_tokens as f64)),
+        ("oracle_tokens_per_s", Json::Num(thr(&t_oracle))),
+        ("alias_tokens_per_s", Json::Num(thr(&t_alias))),
+        ("aggregate_tokens_per_s", Json::Num(thr_big(&t_agg))),
+        ("alias_speedup", Json::Num(alias_speedup)),
+        ("aggregate_speedup", Json::Num(aggregate_speedup)),
+        ("max_share_err_alias", Json::Num(err_alias)),
+        ("max_share_err_aggregate", Json::Num(err_agg)),
+    ]);
+    write_results("BENCH_routing.json", &current.to_string_pretty());
+
+    // CI perf gate: ratio metrics always, absolute throughput only
+    // against a calibrated baseline
+    gate_against_baseline(
+        &current,
+        &[
+            BaselineCheck {
+                key: "alias_speedup",
+                higher_is_better: true,
+                tol: 0.35,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "aggregate_speedup",
+                higher_is_better: true,
+                tol: 0.35,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "max_share_err_alias",
+                higher_is_better: false,
+                tol: 0.5,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "max_share_err_aggregate",
+                higher_is_better: false,
+                tol: 0.5,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "alias_tokens_per_s",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "aggregate_tokens_per_s",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+        ],
+    );
+}

@@ -1,9 +1,23 @@
 //! Minimal benchmark harness (criterion is unavailable in this offline
 //! build). Benches are `harness = false` binaries that call
 //! [`bench`] / [`BenchResult`] and print a compact report.
+//!
+//! Perf-baseline workflow (see README "Benchmarks & perf baselines"):
+//! benches emit machine-readable `BENCH_*.json` files via
+//! [`write_results`]; the blessed copies live at the repo root and the
+//! CI perf job re-runs the benches in quick mode (`BENCH_QUICK=1`) and
+//! diffs the fresh numbers against the committed baselines with
+//! [`gate_against_baseline`] (`BENCH_BASELINE=<file>`). Ratio metrics
+//! (speedups, allocation counts) are enforced unconditionally; absolute
+//! wall-clock metrics only when the baseline declares
+//! `"calibrated": true`, so an uncalibrated placeholder baseline gates
+//! on the hardware-independent numbers alone.
 
 use std::time::{Duration, Instant};
 
+use crate::config::json::Json;
+
+/// Summary statistics of one benched closure.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
     pub name: String,
@@ -21,15 +35,34 @@ impl BenchResult {
             self.name, self.mean, self.p50, self.p95, self.iters
         )
     }
+
+    /// JSON object with the timing stats in seconds.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean.as_secs_f64())),
+            ("p50_s", Json::Num(self.p50.as_secs_f64())),
+            ("p95_s", Json::Num(self.p95.as_secs_f64())),
+            ("min_s", Json::Num(self.min.as_secs_f64())),
+        ])
+    }
 }
 
-/// Time `f` with warmup; adaptive iteration count targeting ~1s total.
+/// Whether quick mode is on (`BENCH_QUICK=1`): shorter measurement
+/// budget for CI gates, where the signal is ratios, not microseconds.
+pub fn quick() -> bool {
+    std::env::var_os("BENCH_QUICK").is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Time `f` with warmup; adaptive iteration count targeting ~0.6s of
+/// samples (~0.15s in quick mode).
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     // warmup + calibration
     let t0 = Instant::now();
     f();
     let first = t0.elapsed();
-    let target = Duration::from_millis(600);
+    let target = if quick() { Duration::from_millis(150) } else { Duration::from_millis(600) };
     let iters = if first.is_zero() {
         100
     } else {
@@ -61,13 +94,142 @@ pub fn section(title: &str) {
 }
 
 /// Write a results file next to the bench output (benches tee their own
-/// tables into `target/bench_results/`).
+/// tables into `target/bench_results/`). To re-pin a committed baseline,
+/// copy the fresh file over the repo-root `BENCH_*.json` of the same
+/// name (and set `"calibrated": true` if the numbers come from the CI
+/// runner class).
 pub fn write_results(file: &str, content: &str) {
     let dir = std::path::Path::new("target/bench_results");
     let _ = std::fs::create_dir_all(dir);
     let path = dir.join(file);
     if std::fs::write(&path, content).is_ok() {
         println!("[written {path:?}]");
+    }
+}
+
+/// One metric the perf gate enforces against a committed baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineCheck {
+    /// Top-level key in both the current and the baseline JSON object.
+    pub key: &'static str,
+    /// `true` when a *drop* is a regression (throughput, speedup);
+    /// `false` when a *rise* is (allocations, mean seconds).
+    pub higher_is_better: bool,
+    /// Allowed relative regression (0.20 = fail beyond 20% worse).
+    pub tol: f64,
+    /// Wall-clock-class metric: only compared when the baseline says
+    /// `"calibrated": true` (absolute timings are runner-dependent;
+    /// ratio metrics are not).
+    pub needs_calibration: bool,
+    /// Deterministic drift alarm: deviation in *either* direction
+    /// beyond `tol` fails (event counts, iteration counts — values
+    /// that only move when simulation logic changes and must be
+    /// deliberately re-pinned). `higher_is_better` is ignored.
+    pub two_sided: bool,
+}
+
+/// Diff `current` against a committed `baseline` object. Returns one
+/// human-readable line per regression (empty = gate passes). A key the
+/// *current* run no longer emits fails its check (a silent rename
+/// cannot disarm the gate); a key the *baseline* does not carry yet is
+/// skipped with a notice (it gets pinned on the next re-bench).
+/// Wall-clock checks are skipped when the baseline is uncalibrated.
+pub fn compare_baseline(current: &Json, baseline: &Json, checks: &[BaselineCheck]) -> Vec<String> {
+    let calibrated = baseline
+        .get("calibrated")
+        .and_then(|v| v.as_bool().ok())
+        .unwrap_or(false);
+    // two-sided (deterministic-count) checks only make sense when both
+    // sides ran in the same bench mode: quick mode shrinks workloads,
+    // which legitimately changes event/iteration counts
+    let quick_flag = |j: &Json| j.get("quick").and_then(|v| v.as_bool().ok());
+    let mode_match = match (quick_flag(current), quick_flag(baseline)) {
+        (Some(a), Some(b)) => a == b,
+        _ => true,
+    };
+    let mut fails = Vec::new();
+    for c in checks {
+        if c.needs_calibration && !calibrated {
+            println!(
+                "[perf gate] {}: baseline uncalibrated, wall-clock check skipped",
+                c.key
+            );
+            continue;
+        }
+        if c.two_sided && !mode_match {
+            println!(
+                "[perf gate] {}: quick-mode mismatch vs baseline, count check skipped \
+                 (re-pin the baseline from a matching-mode run)",
+                c.key
+            );
+            continue;
+        }
+        let Some(base) = baseline.get(c.key) else {
+            println!("[perf gate] {}: not in baseline yet, skipped (pin on re-bench)", c.key);
+            continue;
+        };
+        let Some(cur) = current.get(c.key) else {
+            fails.push(format!("{}: metric missing from the current run", c.key));
+            continue;
+        };
+        let (Ok(cur), Ok(base)) = (cur.as_f64(), base.as_f64()) else {
+            fails.push(format!("{}: metric is not a number", c.key));
+            continue;
+        };
+        let regressed = if c.two_sided {
+            cur < base * (1.0 - c.tol) || cur > base * (1.0 + c.tol)
+        } else if c.higher_is_better {
+            cur < base * (1.0 - c.tol)
+        } else {
+            cur > base * (1.0 + c.tol)
+        };
+        if regressed {
+            let dir = if c.two_sided {
+                "must match (two-sided)"
+            } else if c.higher_is_better {
+                "higher is better"
+            } else {
+                "lower is better"
+            };
+            fails.push(format!(
+                "{}: {cur:.4} vs baseline {base:.4} (tolerance {:.0}%, {dir})",
+                c.key,
+                c.tol * 100.0,
+            ));
+        } else {
+            println!("[perf gate] {}: {cur:.4} vs baseline {base:.4} ok", c.key);
+        }
+    }
+    fails
+}
+
+/// CI entry point: when `BENCH_BASELINE=<path>` is set, load the
+/// committed baseline, run [`compare_baseline`], and exit nonzero on
+/// any regression. A no-op without the env var (local bench runs).
+pub fn gate_against_baseline(current: &Json, checks: &[BaselineCheck]) {
+    let Some(path) = std::env::var_os("BENCH_BASELINE") else {
+        return;
+    };
+    let path = std::path::PathBuf::from(path);
+    let loaded = std::fs::read_to_string(&path)
+        .map_err(anyhow::Error::from)
+        .and_then(|t| Json::parse(&t));
+    let baseline = match loaded {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("perf gate: cannot read baseline {path:?}: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let fails = compare_baseline(current, &baseline, checks);
+    if fails.is_empty() {
+        println!("[perf gate] ok vs {path:?}");
+    } else {
+        eprintln!("perf gate FAILED vs {path:?}:");
+        for f in &fails {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
     }
 }
 
@@ -82,5 +244,96 @@ mod tests {
         });
         assert!(r.iters >= 3);
         assert!(r.p95 >= r.p50);
+        let j = r.to_json();
+        assert_eq!(j.req("name").unwrap().as_str().unwrap(), "noop");
+        assert!(j.req("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn baseline_compare_directions_and_calibration() {
+        let base = Json::obj(vec![
+            ("calibrated", Json::Bool(false)),
+            ("speedup", Json::Num(10.0)),
+            ("allocs", Json::Num(100.0)),
+            ("mean_s", Json::Num(1.0)),
+        ]);
+        let checks = [
+            BaselineCheck {
+                key: "speedup",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "allocs",
+                higher_is_better: false,
+                tol: 0.2,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "mean_s",
+                higher_is_better: false,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+        ];
+        // inside tolerance both directions; wall-clock skipped when
+        // uncalibrated even though it regressed 5x
+        let ok = Json::obj(vec![
+            ("speedup", Json::Num(8.5)),
+            ("allocs", Json::Num(115.0)),
+            ("mean_s", Json::Num(5.0)),
+        ]);
+        assert!(compare_baseline(&ok, &base, &checks).is_empty());
+        // a collapsed speedup and an allocation regression both fail
+        let bad = Json::obj(vec![
+            ("speedup", Json::Num(1.0)),
+            ("allocs", Json::Num(1000.0)),
+            ("mean_s", Json::Num(5.0)),
+        ]);
+        let fails = compare_baseline(&bad, &base, &checks);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        // calibrated baseline arms the wall-clock check
+        let mut cal = base.clone();
+        if let Json::Obj(m) = &mut cal {
+            m.insert("calibrated".into(), Json::Bool(true));
+        }
+        let fails = compare_baseline(&bad, &cal, &checks);
+        assert_eq!(fails.len(), 3, "{fails:?}");
+        // a metric the current run stopped emitting is a failure
+        // (renames cannot disarm the gate) ...
+        let empty = Json::obj(vec![]);
+        assert_eq!(compare_baseline(&empty, &base, &checks[..1]).len(), 1);
+        // ... but a metric the baseline has not pinned yet is skipped
+        let sparse = Json::obj(vec![("calibrated", Json::Bool(true))]);
+        assert!(compare_baseline(&ok, &sparse, &checks).is_empty());
+        // two-sided drift alarm: a deterministic count moving in
+        // EITHER direction fails (a drop must not pass silently)
+        let count_check = [BaselineCheck {
+            key: "events",
+            higher_is_better: false,
+            tol: 0.01,
+            needs_calibration: false,
+            two_sided: true,
+        }];
+        let base_count =
+            Json::obj(vec![("quick", Json::Bool(true)), ("events", Json::Num(1000.0))]);
+        let same =
+            Json::obj(vec![("quick", Json::Bool(true)), ("events", Json::Num(1000.0))]);
+        let fewer =
+            Json::obj(vec![("quick", Json::Bool(true)), ("events", Json::Num(700.0))]);
+        let more =
+            Json::obj(vec![("quick", Json::Bool(true)), ("events", Json::Num(1300.0))]);
+        assert!(compare_baseline(&same, &base_count, &count_check).is_empty());
+        assert_eq!(compare_baseline(&fewer, &base_count, &count_check).len(), 1);
+        assert_eq!(compare_baseline(&more, &base_count, &count_check).len(), 1);
+        // a quick-mode mismatch disables the count checks (the counts
+        // legitimately differ across modes) instead of failing
+        let full_mode =
+            Json::obj(vec![("quick", Json::Bool(false)), ("events", Json::Num(4000.0))]);
+        assert!(compare_baseline(&full_mode, &base_count, &count_check).is_empty());
     }
 }

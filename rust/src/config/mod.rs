@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 use crate::cluster::StageKind;
 use crate::hardware::{GpuSpec, LinkSpec};
 use crate::model::ModelConfig;
-use crate::moe::{MigrationPolicy, PlacementPolicy, RoutingPolicy};
+use crate::moe::{MigrationPolicy, PlacementPolicy, RoutingFidelity, RoutingPolicy};
 use crate::network::HierSpec;
 use crate::parallelism::Parallelism;
 use crate::predictor::PredictorKind;
@@ -57,6 +57,11 @@ pub struct PolicyConfig {
     pub route: RoutePolicy,
     pub budget: IterBudget,
     pub moe_routing: RoutingPolicy,
+    /// Sampling fidelity of each routing draw: `Token` draws every
+    /// token's top-k through the cached alias table (default);
+    /// `Aggregate` samples per-expert counts directly in O(E) for
+    /// huge-batch scale runs.
+    pub routing_fidelity: RoutingFidelity,
     /// How experts are placed on EP ranks (and clusters).
     pub ep_placement: PlacementPolicy,
     /// Model MoE synchronization as `max` over expert tasks (the
@@ -89,6 +94,7 @@ impl Default for PolicyConfig {
             route: RoutePolicy::LeastLoaded,
             budget: IterBudget::default(),
             moe_routing: RoutingPolicy::UniformRandom,
+            routing_fidelity: RoutingFidelity::Token,
             ep_placement: PlacementPolicy::Contiguous,
             straggler_max: true,
             kv_reserve_frac: 0.1,
@@ -328,6 +334,12 @@ impl ExperimentConfig {
 
     pub fn with_moe_routing(mut self, routing: RoutingPolicy) -> Self {
         self.policy.moe_routing = routing;
+        self
+    }
+
+    /// Choose the routing-draw sampling fidelity (`--routing-fidelity`).
+    pub fn with_routing_fidelity(mut self, fidelity: RoutingFidelity) -> Self {
+        self.policy.routing_fidelity = fidelity;
         self
     }
 

@@ -216,6 +216,7 @@ impl GlobalController {
         let base_cost = |par: crate::parallelism::Parallelism| -> CostModel {
             let mut cost = CostModel::new(model.clone(), par, cfg.link);
             cost.moe_routing = cfg.policy.moe_routing;
+            cost.routing_fidelity = cfg.policy.routing_fidelity;
             cost.straggler_max = cfg.policy.straggler_max;
             cost.overhead = cfg.overhead;
             cost.capacity_factor = cfg.policy.capacity_factor;

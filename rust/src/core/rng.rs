@@ -95,6 +95,45 @@ impl Pcg64 {
         }
     }
 
+    /// Binomial(n, p). Three regimes: exact Bernoulli summation for
+    /// small `n`, CDF inversion (expected O(np) steps) for small means,
+    /// and a rounded normal approximation (exact mean/variance) for the
+    /// rest. The approximation tail is what the aggregate routing
+    /// sampler's tolerance-based property tests budget for.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if n == 0 || p <= 0.0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if p > 0.5 {
+            return n - self.binomial(n, 1.0 - p);
+        }
+        let mean = n as f64 * p;
+        if n <= 64 {
+            (0..n).filter(|_| self.next_f64() < p).count() as u64
+        } else if mean < 12.0 {
+            // inversion: walk the pmf from 0 (no underflow: the branch
+            // implies (1-p)^n >= exp(-mean/(1-p)) >= e^-24)
+            let q = 1.0 - p;
+            let s = p / q;
+            let mut pmf = q.powf(n as f64);
+            let mut cdf = pmf;
+            let u = self.next_f64();
+            let mut i = 0u64;
+            while cdf < u && i < n {
+                i += 1;
+                pmf *= s * (n - i + 1) as f64 / i as f64;
+                cdf += pmf;
+            }
+            i
+        } else {
+            let sd = (mean * (1.0 - p)).sqrt();
+            (mean + sd * self.normal()).round().clamp(0.0, n as f64) as u64
+        }
+    }
+
     /// Dirichlet(alpha,...,alpha) of length n.
     pub fn dirichlet_sym(&mut self, alpha: f64, n: usize) -> Vec<f64> {
         let mut xs: Vec<f64> = (0..n).map(|_| self.gamma(alpha).max(1e-300)).collect();
@@ -173,6 +212,40 @@ mod tests {
         let w = [0.0, 0.0, 1.0];
         for _ in 0..50 {
             assert_eq!(rng.weighted_index(&w), 2);
+        }
+    }
+
+    #[test]
+    fn binomial_moments_and_edges() {
+        let mut rng = Pcg64::new(23);
+        // degenerate cases
+        assert_eq!(rng.binomial(0, 0.5), 0);
+        assert_eq!(rng.binomial(10, 0.0), 0);
+        assert_eq!(rng.binomial(10, 1.0), 10);
+        // all three regimes: exact small-n, inversion, normal approx
+        for &(n, p) in &[(40u64, 0.3f64), (10_000, 0.0005), (5_000, 0.2), (5_000, 0.9)] {
+            let draws = 4_000;
+            let mut sum = 0.0;
+            let mut sum2 = 0.0;
+            for _ in 0..draws {
+                let x = rng.binomial(n, p) as f64;
+                assert!(x <= n as f64);
+                sum += x;
+                sum2 += x * x;
+            }
+            let mean = sum / draws as f64;
+            let var = sum2 / draws as f64 - mean * mean;
+            let want_mean = n as f64 * p;
+            let want_var = want_mean * (1.0 - p);
+            let mean_tol = 6.0 * (want_var / draws as f64).sqrt() + 0.5;
+            assert!(
+                (mean - want_mean).abs() < mean_tol,
+                "n={n} p={p}: mean {mean} vs {want_mean}"
+            );
+            assert!(
+                (var - want_var).abs() < 0.15 * want_var + 1.0,
+                "n={n} p={p}: var {var} vs {want_var}"
+            );
         }
     }
 

@@ -37,6 +37,9 @@ OPTIONS (simulate / sweep-pd / baseline):
   --micro-batches <M>              AF micro-batches (default 2)
   --tp <N> --pp <N> --ep <N>       per-replica parallelism (default 1/1/1)
   --routing <balanced|uniform|skewed:ALPHA|drift:ALPHA:PERIOD>  MoE routing (default uniform)
+  --routing-fidelity <token|aggregate> routing-draw sampler: per-token alias
+                                   draws, or O(E) aggregate counts for
+                                   huge-batch scale runs (default token)
   --drift <N>                      popularity epoch length in routing draws; upgrades
                                    skewed routing to drifting popularity (default off)
   --ep-placement <contiguous|strided|replicated:K>  expert placement (default contiguous)
@@ -193,6 +196,10 @@ fn build_config(a: &Args) -> Result<ExperimentConfig> {
             }
             _ => bail!("--drift requires skewed routing (--routing skewed:ALPHA)"),
         };
+    }
+    if let Some(f) = a.get("routing-fidelity") {
+        cfg.policy.routing_fidelity = frontier::moe::RoutingFidelity::parse(f)
+            .ok_or_else(|| anyhow!("unknown routing fidelity {f:?} (token|aggregate)"))?;
     }
     if let Some(m) = a.get("migration") {
         cfg.policy.migration = frontier::moe::MigrationPolicy::parse(m)

@@ -204,8 +204,24 @@ impl ExpertPlacement {
     /// its preferred replica; largest-remainder rounding keeps the total
     /// token count exact).
     pub fn rank_expert_loads(&self, loads: &[u32]) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        self.rank_expert_loads_into(loads, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`ExpertPlacement::rank_expert_loads`]
+    /// for the per-draw pricing path: reuses `out`'s outer and inner
+    /// vector capacities (steady-state draws on a non-replicated
+    /// placement perform zero allocations).
+    pub fn rank_expert_loads_into(&self, loads: &[u32], out: &mut Vec<Vec<u32>>) {
         let n = self.topo.n_ranks as usize;
-        let mut out: Vec<Vec<u32>> = vec![Vec::new(); n];
+        out.truncate(n);
+        for rank in out.iter_mut() {
+            rank.clear();
+        }
+        while out.len() < n {
+            out.push(Vec::new());
+        }
         for (e, &load) in loads.iter().enumerate() {
             let hosts = &self.expert_ranks[e];
             if hosts.len() == 1 {
@@ -230,7 +246,6 @@ impl ExpertPlacement {
                 out[h as usize].push(share[i] as u32);
             }
         }
-        out
     }
 
     /// Total tokens computed per rank.
@@ -409,6 +424,10 @@ pub struct EpNetwork {
     nic_egress: Vec<Link>,
     nic_ingress: Vec<Link>,
     trunks: Fabric,
+    /// Occupancy generation: [`EpNetwork::reset`] bumps this counter
+    /// and links lazily clear themselves on first touch, making reset
+    /// O(1) instead of O(links) per pricing draw.
+    gen: u64,
 }
 
 impl EpNetwork {
@@ -434,6 +453,7 @@ impl EpNetwork {
             nic_egress: (0..n).map(|_| Link::new(fabric.hier.inter_node)).collect(),
             nic_ingress: (0..n).map(|_| Link::new(nic_in)).collect(),
             trunks: Fabric::new(fabric.hier.wan),
+            gen: 0,
         }
     }
 
@@ -448,19 +468,13 @@ impl EpNetwork {
         self.topo == spec.placement.topo && self.fabric == spec.fabric
     }
 
-    /// Clear occupancy on every link so the network can be reused for an
-    /// independent pricing draw (the per-CostModel scratch buffer).
+    /// Make the network read as idle for the next independent pricing
+    /// draw (the per-CostModel scratch buffer). O(1): bumps the
+    /// occupancy generation instead of walking every NIC/port/trunk
+    /// link — each link lazily clears itself the first time the next
+    /// draw touches it ([`Link::touch`]).
     pub fn reset(&mut self) {
-        for l in self
-            .nv_egress
-            .iter_mut()
-            .chain(self.nv_ingress.iter_mut())
-            .chain(self.nic_egress.iter_mut())
-            .chain(self.nic_ingress.iter_mut())
-        {
-            l.reset();
-        }
-        self.trunks.reset();
+        self.gen += 1;
     }
 
     /// Charge one all-to-all phase described by a row-major `(src, dst)`
@@ -493,15 +507,21 @@ impl EpNetwork {
                 let sl = self.fabric.loc(&self.topo, s as u32);
                 let dl = self.fabric.loc(&self.topo, d as u32);
                 let tier = HierSpec::tier_of(sl, dl);
-                // resolve the links on the path and the path alpha/beta
+                let gen = self.gen;
+                // resolve the links on the path (lazily clearing stale
+                // occupancy generations) and the path alpha/beta
                 let (start, alpha, bw) = match tier {
                     Tier::IntraNode => {
+                        self.nv_egress[s].touch(gen);
+                        self.nv_ingress[d].touch(gen);
                         let start = self.nv_egress[s]
                             .earliest_start(now)
                             .max(self.nv_ingress[d].earliest_start(now));
                         (start, hier.intra_node.alpha, hier.intra_node.bandwidth)
                     }
                     Tier::InterNode => {
+                        self.nic_egress[s].touch(gen);
+                        self.nic_ingress[d].touch(gen);
                         let start = self.nic_egress[s]
                             .earliest_start(now)
                             .max(self.nic_ingress[d].earliest_start(now));
@@ -512,8 +532,11 @@ impl EpNetwork {
                         (start, hier.inter_node.alpha, bw)
                     }
                     Tier::CrossCluster => {
-                        let trunk =
-                            self.trunks.link_mut(sl.cluster, dl.cluster).earliest_start(now);
+                        self.nic_egress[s].touch(gen);
+                        self.nic_ingress[d].touch(gen);
+                        let trunk_link = self.trunks.link_mut(sl.cluster, dl.cluster);
+                        trunk_link.touch(gen);
+                        let trunk = trunk_link.earliest_start(now);
                         let start = self.nic_egress[s]
                             .earliest_start(now)
                             .max(self.nic_ingress[d].earliest_start(now))

@@ -30,6 +30,9 @@ pub struct Link {
     pub spec: LinkSpec,
     /// Time at which the link becomes free.
     busy_until: SimTime,
+    /// Occupancy generation this link was last touched in (see
+    /// [`Link::touch`]); stale generations read as idle.
+    gen: u64,
     /// Total bytes carried (metrics).
     pub bytes_carried: f64,
     /// Total transfers (metrics).
@@ -39,7 +42,7 @@ pub struct Link {
 impl Link {
     /// An idle link with the given alpha-beta spec.
     pub fn new(spec: LinkSpec) -> Self {
-        Link { spec, busy_until: SimTime::ZERO, bytes_carried: 0.0, transfers: 0 }
+        Link { spec, busy_until: SimTime::ZERO, gen: 0, bytes_carried: 0.0, transfers: 0 }
     }
 
     /// Enqueue a transfer of `bytes` starting no earlier than `now`;
@@ -93,6 +96,20 @@ impl Link {
     /// they are cumulative accounting, not occupancy.
     pub fn reset(&mut self) {
         self.busy_until = SimTime::ZERO;
+    }
+
+    /// Generation-stamped lazy reset: a caller that reuses many links
+    /// across independent pricing draws bumps one generation counter
+    /// per draw instead of walking every link ([`crate::moe::EpNetwork`]
+    /// does this). A link touched with a *newer* generation than its
+    /// stamp reads as idle — equivalent to [`Link::reset`], paid only
+    /// by the links a draw actually uses.
+    #[inline]
+    pub fn touch(&mut self, gen: u64) {
+        if self.gen != gen {
+            self.gen = gen;
+            self.busy_until = SimTime::ZERO;
+        }
     }
 }
 
@@ -411,6 +428,27 @@ mod tests {
         assert_eq!(l.busy_until(), SimTime::ZERO);
         assert_eq!(l.transfers, 1);
         assert_eq!(l.bytes_carried, 1e9);
+    }
+
+    #[test]
+    fn generation_touch_is_a_lazy_reset() {
+        let mut l = link();
+        l.touch(0);
+        l.transfer(SimTime::ZERO, 1e9);
+        assert!(l.busy_until() > SimTime::ZERO);
+        // same generation: occupancy persists
+        l.touch(0);
+        assert!(l.busy_until() > SimTime::ZERO);
+        // newer generation: reads as idle, accounting kept
+        l.touch(1);
+        assert_eq!(l.busy_until(), SimTime::ZERO);
+        assert_eq!(l.transfers, 1);
+        assert_eq!(l.bytes_carried, 1e9);
+        // a lazily-created link (gen 0) joining at a later generation
+        // starts idle too
+        let mut fresh = link();
+        fresh.touch(7);
+        assert_eq!(fresh.busy_until(), SimTime::ZERO);
     }
 
     #[test]

@@ -70,11 +70,14 @@ impl Parallelism {
         Ok(n_experts / self.ep)
     }
 
-    /// Split a global per-expert load vector into per-rank slices
-    /// (contiguous expert placement).
-    pub fn shard_expert_loads<'a>(&self, loads: &'a [u32]) -> Vec<&'a [u32]> {
-        let per = loads.len() / self.ep as usize;
-        (0..self.ep as usize).map(|r| &loads[r * per..(r + 1) * per]).collect()
+    /// Per-rank slice of a global per-expert load vector under the
+    /// contiguous expert sharding (`experts_per_rank` experts each;
+    /// `n_experts % ep == 0` is enforced by config validation). The
+    /// single source of the chunking rule — the allocation-free pricing
+    /// path indexes rank by rank instead of materializing a Vec.
+    pub fn expert_shard<'a>(&self, loads: &'a [u32], rank: usize) -> &'a [u32] {
+        let per = loads.len() / self.ep.max(1) as usize;
+        &loads[rank * per..(rank + 1) * per]
     }
 }
 
@@ -102,10 +105,8 @@ mod tests {
         assert!(p.experts_per_rank(63).is_err());
         let loads: Vec<u32> = (0..8).collect();
         let p2 = Parallelism::new(1, 1, 2);
-        let shards = p2.shard_expert_loads(&loads);
-        assert_eq!(shards.len(), 2);
-        assert_eq!(shards[0], &[0, 1, 2, 3]);
-        assert_eq!(shards[1], &[4, 5, 6, 7]);
+        assert_eq!(p2.expert_shard(&loads, 0), &[0, 1, 2, 3]);
+        assert_eq!(p2.expert_shard(&loads, 1), &[4, 5, 6, 7]);
     }
 
     #[test]

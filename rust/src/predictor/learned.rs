@@ -162,7 +162,7 @@ impl ExecutionPredictor for LearnedPredictor {
     /// operator class and execute each group in as few PJRT launches as
     /// the fixed artifact batch allows. One iteration's whole op list
     /// costs <= 3 launches instead of one per op.
-    fn prefetch(&mut self, ops: &[OpWorkload]) {
+    fn prefetch(&mut self, ops: &mut dyn Iterator<Item = &OpWorkload>) {
         let mut pending: [Vec<(FeatKey, Vec<f64>)>; 3] = Default::default();
         for op in ops {
             if comm_time(op, &self.link).is_some() {

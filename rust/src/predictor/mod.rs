@@ -29,8 +29,12 @@ pub trait ExecutionPredictor {
     }
     /// Hint that all of `ops` are about to be priced: batched backends
     /// (the PJRT-learned predictor) warm their caches in grouped
-    /// executable launches. Analytical predictors ignore it.
-    fn prefetch(&mut self, _ops: &[OpWorkload]) {}
+    /// executable launches. Analytical predictors ignore it. Takes
+    /// borrowed ops through an iterator so hot callers can chain their
+    /// op lists (attention + FFN plan) without cloning a single op —
+    /// the pre-refactor signature forced a `.cloned().collect()` of the
+    /// entire iteration per call.
+    fn prefetch(&mut self, _ops: &mut dyn Iterator<Item = &OpWorkload>) {}
 }
 
 /// Which predictor drives a simulation.

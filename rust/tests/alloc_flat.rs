@@ -1,0 +1,162 @@
+//! Flat-allocation pin for the pricing hot path: after warmup, a
+//! steady-state iteration-pricing draw must perform **zero** plan/op
+//! vector allocations — the scratch buffers (`PlanScratch`,
+//! `EpScratch`, the popularity cache's alias table and sampling
+//! scratch) absorb everything. The counting global allocator makes the
+//! regression impossible to reintroduce silently (the
+//! `COST_MODELS_BUILT` pattern, one level deeper).
+//!
+//! Lives in its own integration binary so the global counter only sees
+//! this test's allocations; all scenarios run inside one `#[test]` so
+//! the default multi-threaded harness cannot interleave others.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use frontier::config::OverheadConfig;
+use frontier::core::Pcg64;
+use frontier::hardware::LinkSpec;
+use frontier::model::ModelConfig;
+use frontier::moe::{
+    EpSpec, EpTopology, ExpertPlacement, PlacementPolicy, RoutingFidelity, RoutingPolicy,
+};
+use frontier::parallelism::Parallelism;
+use frontier::predictor::OraclePredictor;
+use frontier::workflows::{BatchShape, CostCtx, CostModel};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn decode_shape(n: usize, ctx: u32) -> BatchShape {
+    BatchShape { prefill: vec![], decode_ctx: vec![ctx; n], lm_head_rows: n as u32 }
+}
+
+/// Warm `iters` times, then assert the next `iters` calls allocate
+/// exactly zero times.
+fn assert_flat(name: &str, mut step: impl FnMut()) {
+    for _ in 0..8 {
+        step();
+    }
+    let before = allocs();
+    for _ in 0..32 {
+        step();
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "{name}: {} allocations across 32 steady-state draws (hot path must be \
+         allocation-free)",
+        after - before
+    );
+}
+
+fn moe_cm(fidelity: RoutingFidelity, with_ep: bool) -> CostModel {
+    let mut cm = CostModel::new(
+        ModelConfig::tiny_moe(),
+        Parallelism::new(1, 1, 4),
+        LinkSpec::nvlink_a800(),
+    );
+    cm.overhead = OverheadConfig::zero();
+    cm.moe_routing = RoutingPolicy::Skewed { alpha: 0.1 };
+    cm.routing_fidelity = fidelity;
+    if with_ep {
+        cm.ep = Some(EpSpec::flat(
+            ExpertPlacement::build(
+                PlacementPolicy::Contiguous,
+                8,
+                EpTopology::new(4, 2),
+                None,
+            ),
+            LinkSpec::nvlink_a800(),
+            LinkSpec::cross_cluster(),
+        ));
+    }
+    cm
+}
+
+#[test]
+fn steady_state_pricing_is_allocation_free() {
+    let mut pred = OraclePredictor::a800();
+    let mut rng = Pcg64::new(7);
+    let shape = decode_shape(48, 512);
+
+    // 1) EP placement path (the §3.3 micro-workflow through the fabric)
+    let cm = moe_cm(RoutingFidelity::Token, true);
+    assert_flat("moe_ffn_ep (token fidelity)", || {
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        let s = cm.moe_ffn_ep(&mut ctx, 128).unwrap();
+        std::hint::black_box(s.ffn_secs);
+    });
+
+    // 2) EP path at aggregate fidelity (binomial-split sampler)
+    let cm = moe_cm(RoutingFidelity::Aggregate, true);
+    assert_flat("moe_ffn_ep (aggregate fidelity)", || {
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        let s = cm.moe_ffn_ep(&mut ctx, 128).unwrap();
+        std::hint::black_box(s.ffn_secs);
+    });
+
+    // 3) full iteration on the closed-form plan path (MoE, par.ep > 1,
+    //    no EpSpec): attention ops + gate + A2A + per-rank GroupedGemms
+    let cm = moe_cm(RoutingFidelity::Token, false);
+    assert_flat("iteration_time (MoE plan path)", || {
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        std::hint::black_box(cm.iteration_time(&mut ctx, &shape));
+    });
+
+    // 4) full iteration on the EP path (attention + EP FFN + LM head)
+    let cm = moe_cm(RoutingFidelity::Token, true);
+    assert_flat("iteration_time (EP path)", || {
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        std::hint::black_box(cm.iteration_time(&mut ctx, &shape));
+    });
+
+    // 5) dense model for completeness (no MoE machinery at all)
+    let mut cm = CostModel::new(
+        ModelConfig::tiny(),
+        Parallelism::default(),
+        LinkSpec::nvlink_a800(),
+    );
+    cm.overhead = OverheadConfig::zero();
+    assert_flat("iteration_time (dense)", || {
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        std::hint::black_box(cm.iteration_time(&mut ctx, &shape));
+    });
+
+    // 6) mixed prefill + decode batches on a stable shape
+    let cm = moe_cm(RoutingFidelity::Token, false);
+    let mixed = BatchShape {
+        prefill: vec![(128, 0), (64, 256)],
+        decode_ctx: vec![300; 16],
+        lm_head_rows: 17,
+    };
+    assert_flat("iteration_time (mixed batch)", || {
+        let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+        std::hint::black_box(cm.iteration_time(&mut ctx, &mixed));
+    });
+}

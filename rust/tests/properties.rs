@@ -9,8 +9,8 @@ use frontier::memory::BlockManager;
 use frontier::model::ModelConfig;
 use frontier::moe::{
     assign_tokens, assign_tokens_at, assign_tokens_cached, assign_tokens_capped,
-    plan_migration, rank_imbalance, EpTopology, ExpertPlacement, PlacementPolicy,
-    PopularityCache, RoutingPolicy,
+    assign_tokens_into, plan_migration, rank_imbalance, EpTopology, ExpertPlacement,
+    PlacementPolicy, PopularityCache, RoutingFidelity, RoutingPolicy,
 };
 use frontier::proptest_util::run_prop;
 use frontier::scheduler::{admit, BatchPolicy, IterBudget, QueuedReq};
@@ -104,6 +104,63 @@ fn prop_moe_routing_conserves_tokens() {
         );
         // top-k without replacement: no expert receives more than `tokens`
         assert!(loads.iter().all(|&l| l <= tokens));
+    });
+}
+
+#[test]
+fn prop_production_samplers_conserve_for_every_policy_and_fidelity() {
+    // the alias-table and aggregate samplers share the oracle's hard
+    // invariants: exact slot conservation (routed + dropped ==
+    // tokens * k), per-token distinctness (no expert exceeds the token
+    // count), capacity caps respected, and zero drops whenever the cap
+    // has headroom — for every policy, fidelity, and draw index
+    run_prop("production sampler conservation", 200, |g| {
+        let tokens = g.u32(0, 1024);
+        let e = g.u32(1, 64);
+        let k = g.u32(1, 8);
+        let cap = if g.bool() { Some(g.u32(1, 2048)) } else { None };
+        let policy = *g.pick(&[
+            RoutingPolicy::Balanced,
+            RoutingPolicy::UniformRandom,
+            RoutingPolicy::Skewed { alpha: 0.05 },
+            RoutingPolicy::Skewed { alpha: 2.0 },
+            RoutingPolicy::Drifting { alpha: 0.1, period: 5 },
+        ]);
+        let fidelity = *g.pick(&[RoutingFidelity::Token, RoutingFidelity::Aggregate]);
+        let draw = g.u64(0, 1000);
+        let mut cache = PopularityCache::default();
+        let mut loads = Vec::new();
+        let dropped = assign_tokens_into(
+            policy,
+            fidelity,
+            tokens,
+            e,
+            k,
+            cap,
+            draw,
+            &mut cache,
+            &mut Pcg64::new(g.seed * 17 + 3),
+            &mut loads,
+        );
+        let eff_k = k.min(e) as u64;
+        assert_eq!(loads.len(), e as usize);
+        assert_eq!(
+            loads.iter().map(|&x| u64::from(x)).sum::<u64>() + dropped,
+            tokens as u64 * eff_k,
+            "{policy:?} {fidelity:?}: slots lost or invented"
+        );
+        assert!(
+            loads.iter().all(|&l| l <= tokens),
+            "{policy:?} {fidelity:?}: distinctness violated"
+        );
+        if let Some(c) = cap {
+            assert!(loads.iter().all(|&l| l <= c), "{policy:?} {fidelity:?}: cap violated");
+            if c >= tokens {
+                assert_eq!(dropped, 0, "{policy:?} {fidelity:?}: cap with headroom dropped");
+            }
+        } else {
+            assert_eq!(dropped, 0, "{policy:?} {fidelity:?}: uncapped must not drop");
+        }
     });
 }
 
