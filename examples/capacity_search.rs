@@ -6,65 +6,79 @@
 //! simulation: deployment mode x parallelism x batch cap, extracting
 //! the throughput/latency Pareto frontier in seconds.
 //!
+//! The space is derived (replica counts follow from the tp degree), so
+//! it runs as an *explicit point list* through the parallel sweep
+//! engine — all configurations fan across worker threads, and a point
+//! that fails validation reports its error without aborting the search.
+//!
 //! ```bash
 //! cargo run --release --example capacity_search
 //! ```
 
-use frontier::config::{DeploymentMode, ExperimentConfig};
+use frontier::config::cli::FlagMap;
 use frontier::metrics::{pareto_frontier, percentile};
-use frontier::model::ModelConfig;
-use frontier::parallelism::Parallelism;
 use frontier::report::markdown_table;
-use frontier::workload::WorkloadSpec;
+use frontier::sweep::{PointSpec, SweepRunner, SweepSpec};
 
 fn main() -> anyhow::Result<()> {
     let gpus = 16u32;
-    let model = ModelConfig::qwen2_72b();
-    let workload = WorkloadSpec::poisson(3.0, 120, 1024, 256);
-    println!("== Capacity search: {} on {gpus} GPUs ==\n", model.name);
+    let mut base = FlagMap::new();
+    base.set("model", "qwen2-72b");
+    base.set("rate", "3.0");
+    base.set("requests", "120");
+    base.set("input", "1024");
+    base.set("output", "256");
+    println!("== Capacity search: qwen2-72b on {gpus} GPUs ==\n");
 
+    // configuration space: mode x tensor-parallel degree x batch cap,
+    // with replica counts derived from the tp degree
     let mut points = Vec::new();
-    let mut rows = Vec::new();
-    // configuration space: mode x tensor-parallel degree x batch cap
     for tp in [2u32, 4, 8] {
         let replicas = gpus / tp;
-        for (mode_name, mode) in [
-            ("colocated", DeploymentMode::Colocated { replicas }),
-            (
-                "pd",
-                DeploymentMode::PdDisagg {
-                    prefill_replicas: replicas / 2,
-                    decode_replicas: replicas - replicas / 2,
-                },
-            ),
-        ] {
-            if matches!(mode, DeploymentMode::PdDisagg { prefill_replicas, .. } if prefill_replicas == 0)
-            {
+        for mode in ["colocated", "pd"] {
+            if mode == "pd" && replicas / 2 == 0 {
                 continue;
             }
-            for max_batch in [8usize, 32, 128] {
-                let mut cfg = ExperimentConfig::colocated(model.clone(), replicas)
-                    .with_workload(workload.clone())
-                    .with_parallelism(Parallelism::tp(tp));
-                cfg.mode = mode.clone();
-                cfg.policy.budget.max_batch = max_batch;
-                let label = format!("{mode_name} tp{tp} b{max_batch}");
-                match frontier::run_experiment(&cfg) {
-                    Ok(r) => {
-                        let thr = r.tokens_per_sec_per_gpu();
-                        let lat = percentile(&r.metrics.tbt, 99.0) * 1e3;
-                        rows.push(vec![
-                            label.clone(),
-                            format!("{thr:.1}"),
-                            format!("{lat:.1}"),
-                            format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
-                        ]);
-                        points.push((thr, lat, label));
-                    }
-                    Err(e) => {
-                        rows.push(vec![label, format!("error: {e}"), "-".into(), "-".into()]);
-                    }
+            for max_batch in [8u32, 32, 128] {
+                let mut assigns = vec![("tp".to_string(), tp.to_string())];
+                if mode == "pd" {
+                    let prefill = replicas / 2;
+                    assigns.push((
+                        "pd-ratio".into(),
+                        format!("{prefill}:{}", replicas - prefill),
+                    ));
+                } else {
+                    assigns.push(("mode".into(), "colocated".into()));
+                    assigns.push(("replicas".into(), replicas.to_string()));
                 }
+                assigns.push(("max-batch".into(), max_batch.to_string()));
+                points.push(
+                    PointSpec::new(assigns).with_label(format!("{mode} tp{tp} b{max_batch}")),
+                );
+            }
+        }
+    }
+
+    let result = SweepRunner::default().run(&SweepSpec::new(base).with_points(points))?;
+
+    let mut pareto_points = Vec::new();
+    let mut rows = Vec::new();
+    for pr in &result.points {
+        let label = pr.point.label.clone();
+        match &pr.outcome {
+            Ok(r) => {
+                let thr = r.tokens_per_sec_per_gpu();
+                let lat = percentile(&r.metrics.tbt, 99.0) * 1e3;
+                rows.push(vec![
+                    label.clone(),
+                    format!("{thr:.1}"),
+                    format!("{lat:.1}"),
+                    format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
+                ]);
+                pareto_points.push((thr, lat, label));
+            }
+            Err(e) => {
+                rows.push(vec![label, format!("error: {e}"), "-".into(), "-".into()]);
             }
         }
     }
@@ -74,7 +88,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("\n== Pareto frontier (maximize throughput, minimize TBT p99) ==\n");
-    let front = pareto_frontier(&points);
+    let front = pareto_frontier(&pareto_points);
     let rows: Vec<Vec<String>> = front
         .iter()
         .map(|(thr, lat, label)| {
@@ -85,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\n{} configurations explored in simulation; the paper quotes ~18,000\n\
          GPU-hours (>$93k) to do this on hardware for one 72B/16-GPU setting.",
-        points.len()
+        pareto_points.len()
     );
     Ok(())
 }

@@ -12,18 +12,21 @@
 //! recovered imbalance) — see README "Expert migration" for how to
 //! read it.
 //!
+//! Every end-to-end grid here is a thin front-end over the parallel
+//! sweep engine (`frontier::sweep`): axes over CLI flags, fanned across
+//! worker threads, results collected in deterministic grid order.
+//!
 //! ```bash
 //! cargo run --release --example ep_routing
 //! ```
 
-use frontier::config::{ExperimentConfig, OverheadConfig};
+use frontier::config::cli::FlagMap;
 use frontier::hardware::LinkSpec;
+use frontier::metrics::SimReport;
 use frontier::model::ModelConfig;
-use frontier::moe::{
-    EpSpec, EpTopology, ExpertPlacement, PlacementPolicy, RoutingPolicy,
-};
-use frontier::parallelism::Parallelism;
+use frontier::moe::{EpSpec, EpTopology, ExpertPlacement, PlacementPolicy, RoutingPolicy};
 use frontier::report::markdown_table;
+use frontier::sweep::{Axis, SweepRunner, SweepSpec};
 use frontier::workload::{Arrival, LenDist, WorkloadSpec};
 
 fn workload() -> WorkloadSpec {
@@ -36,18 +39,32 @@ fn workload() -> WorkloadSpec {
     }
 }
 
+/// Base flags of the AF deployment every end-to-end grid shares: 2
+/// prefill replicas feeding a 4-attn / 8-ffn decode pool, tp=2, zero
+/// engine overhead (the custom length distribution rides a post-hook).
+fn af_base() -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "mixtral-8x7b");
+    f.set("mode", "af");
+    f.set("prefill", "2");
+    f.set("attn-gpus", "4");
+    f.set("ffn-gpus", "8");
+    f.set("micro-batches", "2");
+    f.set("tp", "2");
+    f.set("overhead", "zero");
+    f
+}
+
+fn report_of(pr: &frontier::sweep::PointResult) -> anyhow::Result<&SimReport> {
+    pr.outcome
+        .as_ref()
+        .map_err(|e| anyhow::anyhow!("point {:?} failed: {e}", pr.point.label))
+}
+
 fn main() -> anyhow::Result<()> {
     let model = ModelConfig::mixtral_8x7b();
-    let placements = [
-        PlacementPolicy::Contiguous,
-        PlacementPolicy::Strided,
-        PlacementPolicy::ReplicatedHot { hot: 2 },
-    ];
-    let routings = [
-        ("balanced", RoutingPolicy::Balanced),
-        ("uniform", RoutingPolicy::UniformRandom),
-        ("skewed a=0.1", RoutingPolicy::Skewed { alpha: 0.1 }),
-    ];
+    let placements = ["contiguous", "strided", "replicated:2"];
+    let routings = ["balanced", "uniform", "skewed:0.1"];
 
     println!(
         "== layer-level EP all-to-all: placement x skew ({}, EP=8 over 2 clusters) ==\n",
@@ -56,11 +73,13 @@ fn main() -> anyhow::Result<()> {
     let moe = model.moe.clone().expect("moe model");
     let bpt = model.d_model as f64 * model.dtype_bytes as f64;
     let mut rows = Vec::new();
-    for placement in placements {
-        for (rname, routing) in routings {
+    for pname in placements {
+        let placement = PlacementPolicy::parse(pname).expect("placement");
+        for routing in routings {
+            let policy = RoutingPolicy::parse(routing).expect("routing");
             let mut rng = frontier::core::Pcg64::new(17);
             let loads =
-                frontier::moe::assign_tokens(routing, 256, moe.n_experts, moe.top_k, &mut rng);
+                frontier::moe::assign_tokens(policy, 256, moe.n_experts, moe.top_k, &mut rng);
             let spec = EpSpec::flat(
                 ExpertPlacement::build(
                     placement,
@@ -75,7 +94,7 @@ fn main() -> anyhow::Result<()> {
             let imb = frontier::moe::rank_imbalance(&spec.placement.rank_totals(&loads));
             rows.push(vec![
                 placement.name().to_string(),
-                rname.to_string(),
+                routing.to_string(),
                 format!("{:.1}", disp.secs * 1e6),
                 format!("{:.1}%", disp.cross_bytes / disp.total_bytes * 100.0),
                 format!("{imb:.2}"),
@@ -91,28 +110,28 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("\n== end-to-end AF decode: placement x routing (2-cluster expert tier) ==\n");
+    let mut base = af_base();
+    base.set("ep-clusters", "2");
+    let spec = SweepSpec::new(base)
+        .with_axes(vec![
+            Axis::new("ep-placement", placements.iter().map(|s| s.to_string()).collect())?,
+            Axis::new("routing", routings.iter().map(|s| s.to_string()).collect())?,
+        ])
+        .with_post(Box::new(|cfg| cfg.workload = workload()));
+    let result = SweepRunner::default().run(&spec)?;
     let mut rows = Vec::new();
-    for placement in placements {
-        for (rname, routing) in routings {
-            let cfg = ExperimentConfig::af(model.clone(), 2, 4, 8, 2)
-                .with_parallelism(frontier::parallelism::Parallelism::tp(2))
-                .with_workload(workload())
-                .with_overhead(OverheadConfig::zero())
-                .with_ep_clusters(2, LinkSpec::cross_cluster())
-                .with_ep_placement(placement)
-                .with_moe_routing(routing);
-            let r = frontier::run_experiment(&cfg)?;
-            let m = &r.metrics;
-            rows.push(vec![
-                placement.name().to_string(),
-                rname.to_string(),
-                format!("{:.2}", r.sim_duration),
-                format!("{:.1}", r.tokens_per_sec_per_gpu()),
-                format!("{:.1}%", m.ep_cross_frac() * 100.0),
-                format!("{:.2}", m.ep_imbalance_mean()),
-                format!("{:.2}", m.dispatch_bubble_s),
-            ]);
-        }
+    for pr in &result.points {
+        let r = report_of(pr)?;
+        let m = &r.metrics;
+        rows.push(vec![
+            pr.point.assigns[0].1.clone(),
+            pr.point.assigns[1].1.clone(),
+            format!("{:.2}", r.sim_duration),
+            format!("{:.1}", r.tokens_per_sec_per_gpu()),
+            format!("{:.1}%", m.ep_cross_frac() * 100.0),
+            format!("{:.2}", m.ep_imbalance_mean()),
+            format!("{:.2}", m.dispatch_bubble_s),
+        ]);
     }
     println!(
         "{}",
@@ -131,16 +150,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("\n== cluster span: same deployment, EP domain in 1 vs 2 clusters ==\n");
+    let spec = SweepSpec::new(af_base())
+        .with_axes(vec![Axis::new("ep-clusters", vec!["1".into(), "2".into()])?])
+        .with_post(Box::new(|cfg| cfg.workload = workload()));
+    let result = SweepRunner::default().run(&spec)?;
     let mut rows = Vec::new();
-    for clusters in [1u32, 2] {
-        let cfg = ExperimentConfig::af(model.clone(), 2, 4, 8, 2)
-            .with_parallelism(frontier::parallelism::Parallelism::tp(2))
-            .with_workload(workload())
-            .with_overhead(OverheadConfig::zero())
-            .with_ep_clusters(clusters, LinkSpec::cross_cluster());
-        let r = frontier::run_experiment(&cfg)?;
+    for pr in &result.points {
+        let r = report_of(pr)?;
         rows.push(vec![
-            clusters.to_string(),
+            pr.point.assigns[0].1.clone(),
             format!("{:.2}", r.sim_duration),
             format!("{:.1}%", r.metrics.ep_cross_frac() * 100.0),
             format!("{:.2}", r.metrics.dispatch_bubble_s),
@@ -165,25 +183,35 @@ fn main() -> anyhow::Result<()> {
     // Columns: `overhead_stall_s` / `migrated_mb` are what migration
     // costs, `recovered_imbalance` is what it buys back (mean EP rank
     // imbalance of static minus migrating at equal config).
+    let mut base = FlagMap::new();
+    base.set("model", "tiny-moe");
+    base.set("replicas", "1");
+    base.set("ep", "4");
+    base.set("requests", "128");
+    base.set("input", "64");
+    base.set("output", "64");
+    base.set("overhead", "zero");
+    base.set("migration-threshold", "1.1");
+    base.set("load-window", "8");
+    let spec = SweepSpec::new(base).with_axes(vec![
+        Axis::new(
+            "routing",
+            vec!["drift:0.1:12".into(), "drift:0.1:24".into(), "drift:0.1:48".into()],
+        )?,
+        Axis::new("migration", vec!["off".into(), "threshold".into()])?,
+    ]);
+    let result = SweepRunner::default().run(&spec)?;
     println!(
         "drift_period,migration,sim_s,tok_s_gpu,imb_mean,migrations,\
          migrated_mb,overhead_stall_s,recovered_imbalance"
     );
-    for period in [12u64, 24, 48] {
-        let base = |migrate: bool| {
-            let mut cfg = ExperimentConfig::colocated(ModelConfig::tiny_moe(), 1)
-                .with_parallelism(Parallelism::new(1, 1, 4))
-                .with_workload(WorkloadSpec::table2(128, 64, 64))
-                .with_overhead(OverheadConfig::zero())
-                .with_moe_routing(RoutingPolicy::Drifting { alpha: 0.1, period });
-            if migrate {
-                cfg = cfg.with_migration(1.1, 8);
-            }
-            cfg
-        };
-        let stat = frontier::run_experiment(&base(false))?;
-        let mig = frontier::run_experiment(&base(true))?;
-        for (label, r) in [("off", &stat), ("threshold", &mig)] {
+    // grid order is (period slowest, migration fastest): chunk into
+    // (static, migrating) pairs at equal drift period
+    for pair in result.points.chunks(2) {
+        let stat = report_of(&pair[0])?;
+        let mig = report_of(&pair[1])?;
+        let period = pair[0].point.assigns[0].1.rsplit(':').next().unwrap_or("?");
+        for (label, r) in [("off", stat), ("threshold", mig)] {
             let recovered = if label == "threshold" {
                 stat.metrics.ep_imbalance_mean() - r.metrics.ep_imbalance_mean()
             } else {

@@ -11,11 +11,14 @@
 use frontier::bench_util::{
     bench, gate_against_baseline, quick, section, write_results, BaselineCheck,
 };
+use frontier::config::cli::FlagMap;
 use frontier::config::json::Json;
 use frontier::config::{ExperimentConfig, OverheadConfig};
 use frontier::core::{EventQueue, SimTime};
 use frontier::model::ModelConfig;
 use frontier::predictor::PredictorKind;
+use frontier::report::sweep::sweep_json;
+use frontier::sweep::{Axis, SweepRunner, SweepSpec};
 use frontier::workload::{Arrival, LenDist, WorkloadSpec};
 
 fn big_workload(n: u32) -> WorkloadSpec {
@@ -136,6 +139,43 @@ fn main() {
     );
     json.push(("floor_events_per_s", Json::Num(r.events_per_sec())));
 
+    section("parallel sweep scaling (16-point grid, SweepRunner)");
+    // a fixed 16-point seed grid over a mid-size colocated deployment:
+    // heavy enough per point that thread spawn cost is noise, small
+    // enough that quick mode stays CI-friendly
+    let mut sweep_base = FlagMap::new();
+    sweep_base.set("model", "qwen2-7b");
+    sweep_base.set("replicas", "2");
+    sweep_base.set("requests", if quick() { "48" } else { "192" });
+    sweep_base.set("input", "256");
+    sweep_base.set("output", "64");
+    let seeds: Vec<String> = (1..=16u64).map(|s| s.to_string()).collect();
+    let grid_points = seeds.len();
+    let sweep_spec =
+        SweepSpec::new(sweep_base).with_axes(vec![Axis::new("seed", seeds).expect("seed axis")]);
+    // determinism first: the merged JSON must not depend on thread count,
+    // or the timing comparison below compares different work
+    let r1 = SweepRunner::with_threads(1).run(&sweep_spec).unwrap();
+    let r4 = SweepRunner::with_threads(4).run(&sweep_spec).unwrap();
+    assert!(r1.points.iter().all(|p| p.outcome.is_ok()), "grid points must run clean");
+    assert_eq!(
+        sweep_json(&r1).to_string_pretty(),
+        sweep_json(&r4).to_string_pretty(),
+        "merged sweep report must be byte-identical across thread counts"
+    );
+    let serial = bench("sweep 16 points, 1 thread", || {
+        std::hint::black_box(SweepRunner::with_threads(1).run(&sweep_spec).unwrap().points.len());
+    });
+    let par4 = bench("sweep 16 points, 4 threads", || {
+        std::hint::black_box(SweepRunner::with_threads(4).run(&sweep_spec).unwrap().points.len());
+    });
+    let sweep_speedup = serial.mean.as_secs_f64() / par4.mean.as_secs_f64().max(1e-12);
+    println!("sweep scaling: {sweep_speedup:.2}x with 4 threads");
+    json.push(("sweep_grid_points", Json::Num(grid_points as f64)));
+    json.push(("sweep_serial_s", Json::Num(serial.mean.as_secs_f64())));
+    json.push(("sweep_4t_s", Json::Num(par4.mean.as_secs_f64())));
+    json.push(("sweep_speedup_4t", Json::Num(sweep_speedup)));
+
     let current = Json::obj(json);
     write_results("BENCH_engine_perf.json", &current.to_string_pretty());
 
@@ -185,6 +225,24 @@ fn main() {
                 key: "moe_ep8_iterations",
                 higher_is_better: false,
                 tol: 0.01,
+                needs_calibration: false,
+                two_sided: true,
+            },
+            // sweep-engine scaling: the 4-thread/serial wall-clock
+            // *ratio* is hardware-class-stable on the >= 4-core CI
+            // runners, so it gates unconditionally — baseline 2.5 with
+            // a 20% band enforces the >= 2.0x floor
+            BaselineCheck {
+                key: "sweep_speedup_4t",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "sweep_grid_points",
+                higher_is_better: false,
+                tol: 0.0,
                 needs_calibration: false,
                 two_sided: true,
             },

@@ -1,0 +1,488 @@
+//! Reusable experiment-spec layer for the CLI surface.
+//!
+//! `frontier`'s flag grammar used to live as private helpers inside
+//! `main.rs`, which meant examples, tests, benches — and above all the
+//! sweep engine ([`crate::sweep`]) — could not reuse the config
+//! plumbing. This module is that layer made public:
+//!
+//! * [`FlagMap`] — parsed `--key value` / `--key=value` flags with
+//!   duplicate detection and repeatable-flag support;
+//! * [`build_config`] — lower a flag map onto a validated
+//!   [`ExperimentConfig`];
+//! * [`model_by_name`] — the model registry behind `--model`.
+//!
+//! The sweep engine builds each grid point by cloning a base [`FlagMap`],
+//! overriding the axis flags, and calling [`build_config`] — exactly the
+//! path `frontier simulate` takes, so a one-point sweep bit-reproduces a
+//! plain simulation (pinned by `rust/tests/sweep.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ExperimentConfig, OverheadConfig};
+use crate::model::ModelConfig;
+use crate::predictor::PredictorKind;
+use crate::workload::WorkloadSpec;
+
+/// Flags that stand alone: `--json` means `--json=true` and consumes no
+/// following argument.
+pub const BOOL_FLAGS: &[&str] = &["json", "profiled"];
+
+/// Flags that may appear multiple times on a `frontier` command line
+/// (sweep axes and explicit grid points).
+pub const REPEATABLE_FLAGS: &[&str] = &["axis", "point"];
+
+/// Flags read by the subcommand drivers (or the simulate-only trace
+/// replay), never by [`build_config`] — the single source of truth the
+/// sweep drivers strip/allow from their base maps and the sweep axis
+/// layer bars even behind its `flag:` escape (sweeping a flag the
+/// config lowering never reads would be silently ignored).
+pub const DRIVER_FLAGS: &[&str] =
+    &["trace", "axis", "point", "threads", "format", "gpus", "json"];
+
+/// Every value-taking *configuration* flag [`build_config`]
+/// understands. The sweep axis layer validates bare axis names against
+/// this list, so a typo like `--axis capacty-factor=...` fails loudly
+/// instead of sweeping a flag nothing reads. Driver-level flags
+/// (`--threads`, `--gpus`, `--axis`, and the simulate-only `--trace`)
+/// are deliberately absent: sweeping them is meaningless or silently
+/// ignored by the sweep path.
+pub const VALUE_FLAGS: &[&str] = &[
+    "model",
+    "mode",
+    "stages",
+    "stages-json",
+    "edges",
+    "gpu",
+    "replicas",
+    "prefill",
+    "decode",
+    "attn-gpus",
+    "ffn-gpus",
+    "micro-batches",
+    "tp",
+    "pp",
+    "ep",
+    "routing",
+    "routing-fidelity",
+    "drift",
+    "ep-placement",
+    "ep-clusters",
+    "migration",
+    "migration-threshold",
+    "load-window",
+    "capacity-factor",
+    "cross-bw",
+    "inter-bw",
+    "ranks-per-node",
+    "ingress-scale",
+    "predictor",
+    "max-batch",
+    "overhead",
+    "requests",
+    "input",
+    "output",
+    "rate",
+    "seed",
+];
+
+/// Whether `name` is a value-taking configuration flag (the set sweep
+/// axes may name directly; see [`VALUE_FLAGS`]).
+pub fn is_value_flag(name: &str) -> bool {
+    VALUE_FLAGS.contains(&name)
+}
+
+/// A parsed flag map: flag name → values in order of appearance.
+///
+/// Non-repeatable flags hold exactly one value — [`FlagMap::parse`]
+/// rejects duplicates (the second occurrence used to silently win).
+/// Programmatic construction ([`FlagMap::set`]) overwrites instead,
+/// which is what sweep axes rely on to override a base configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FlagMap {
+    vals: BTreeMap<String, Vec<String>>,
+}
+
+impl FlagMap {
+    /// An empty flag map (every flag at its default).
+    pub fn new() -> FlagMap {
+        FlagMap::default()
+    }
+
+    /// Parse command-line tokens: `--key value` and `--key=value` are
+    /// both accepted, [`BOOL_FLAGS`] stand alone, and a flag outside
+    /// `repeatable` given twice is an error.
+    pub fn parse<I>(args: I, repeatable: &[&str]) -> Result<FlagMap>
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let mut flags = FlagMap::new();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            let body = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument {a:?}"))?;
+            if body.is_empty() {
+                bail!("empty flag name");
+            }
+            let (key, eq_val) = match body.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let val = match eq_val {
+                Some(v) => v,
+                None if BOOL_FLAGS.contains(&key.as_str()) => "true".into(),
+                None => it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?,
+            };
+            if flags.has(&key) && !repeatable.contains(&key.as_str()) {
+                bail!("duplicate flag --{key} (pass it once)");
+            }
+            flags.vals.entry(key).or_default().push(val);
+        }
+        Ok(flags)
+    }
+
+    /// Set (or overwrite) a single-valued flag.
+    pub fn set(&mut self, key: &str, val: impl Into<String>) {
+        self.vals.insert(key.to_string(), vec![val.into()]);
+    }
+
+    /// Remove a flag entirely (e.g. a sweep axis taking over the
+    /// deployment shape drops `--stages`).
+    pub fn remove(&mut self, key: &str) {
+        self.vals.remove(key);
+    }
+
+    /// First value of `key`, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).and_then(|v| v.first()).map(String::as_str)
+    }
+
+    /// All values of a repeatable flag (empty when absent).
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.vals.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Whether `key` was given at all.
+    pub fn has(&self, key: &str) -> bool {
+        self.vals.contains_key(key)
+    }
+
+    /// Boolean flag: present and not explicitly `false`/`0`.
+    pub fn truthy(&self, key: &str) -> bool {
+        self.get(key).is_some_and(|v| v != "false" && v != "0")
+    }
+
+    /// Parse the value of `key`, falling back to `default` when absent.
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    /// Every flag name present, in sorted order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.vals.keys().map(String::as_str)
+    }
+}
+
+/// Reject flags that neither the config lowering ([`VALUE_FLAGS`] /
+/// [`BOOL_FLAGS`]) nor the calling subcommand (`driver_flags`) reads —
+/// a misspelled base flag would otherwise silently run every point of a
+/// sweep (or a whole simulation) at the default value.
+pub fn reject_unknown_flags(flags: &FlagMap, driver_flags: &[&str]) -> Result<()> {
+    for key in flags.keys() {
+        if !VALUE_FLAGS.contains(&key)
+            && !BOOL_FLAGS.contains(&key)
+            && !driver_flags.contains(&key)
+        {
+            bail!("unknown flag --{key} (run `frontier` with no arguments for usage)");
+        }
+    }
+    Ok(())
+}
+
+/// A parsed `frontier` command line: subcommand + flags.
+#[derive(Clone, Debug)]
+pub struct Args {
+    /// The subcommand (`simulate`, `sweep`, ...; `help` when absent).
+    pub cmd: String,
+    /// Everything after the subcommand.
+    pub flags: FlagMap,
+}
+
+impl Args {
+    /// Parse the process's own argv.
+    pub fn from_env() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        Ok(Args { cmd, flags: FlagMap::parse(it, REPEATABLE_FLAGS)? })
+    }
+}
+
+/// The model `--model` defaults to when absent (shared by
+/// [`build_config`] and the subcommand drivers so the two cannot
+/// drift).
+pub const DEFAULT_MODEL: &str = "qwen2-7b";
+
+/// The model registry behind `--model` (see `frontier info`).
+pub fn model_by_name(name: &str) -> Result<ModelConfig> {
+    Ok(match name {
+        "qwen2-7b" => ModelConfig::qwen2_7b(),
+        "qwen2-72b" => ModelConfig::qwen2_72b(),
+        "mixtral-8x7b" => ModelConfig::mixtral_8x7b(),
+        "deepseek-v3-lite" => ModelConfig::deepseek_v3_lite(),
+        "tiny" => ModelConfig::tiny(),
+        "tiny-moe" => ModelConfig::tiny_moe(),
+        _ => bail!("unknown model {name:?} (see `frontier info`)"),
+    })
+}
+
+/// Lower a flag map onto a validated [`ExperimentConfig`] — the one
+/// config path shared by `frontier simulate`, the sweep engine, the
+/// examples, and the benches. Unknown flags are ignored (driver-level
+/// flags like `--threads` ride the same map); sweep axes get typo
+/// protection from [`is_value_flag`] instead.
+pub fn build_config(a: &FlagMap) -> Result<ExperimentConfig> {
+    let model = model_by_name(a.get("model").unwrap_or(DEFAULT_MODEL))?;
+    let mode = a.get("mode").unwrap_or("colocated");
+    let mut cfg = match mode {
+        "colocated" => ExperimentConfig::colocated(model, a.num("replicas", 4u32)?),
+        "pd" => ExperimentConfig::pd(model, a.num("prefill", 4u32)?, a.num("decode", 4u32)?),
+        "af" => ExperimentConfig::af(
+            model,
+            a.num("prefill", 2u32)?,
+            a.num("attn-gpus", 4u32)?,
+            a.num("ffn-gpus", 4u32)?,
+            a.num("micro-batches", 2u32)?,
+        ),
+        _ => bail!("unknown mode {mode:?}"),
+    };
+    cfg.parallel = crate::parallelism::Parallelism::new(
+        a.num("tp", 1u32)?,
+        a.num("pp", 1u32)?,
+        a.num("ep", 1u32)?,
+    );
+    if let Some(g) = a.get("gpu") {
+        cfg.gpu = crate::hardware::GpuSpec::by_name(g)
+            .ok_or_else(|| anyhow!("unknown gpu {g:?} (a800|a100|h100|h200)"))?;
+    }
+    // explicit stage graph (DSL or JSON) overrides the mode-level shape
+    match (a.get("stages"), a.get("stages-json")) {
+        (Some(_), Some(_)) => bail!("--stages and --stages-json are mutually exclusive"),
+        (Some(dsl), None) => {
+            cfg = cfg.with_stages(crate::config::StageGraphConfig::parse_cli(
+                dsl,
+                a.get("edges"),
+            )?);
+        }
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(path)?;
+            let json = crate::config::json::Json::parse(&text)?;
+            cfg = cfg.with_stages(crate::config::StageGraphConfig::from_json(&json)?);
+        }
+        (None, None) => {
+            if a.has("edges") {
+                bail!("--edges requires --stages");
+            }
+        }
+    }
+    let requests = a.num("requests", 256u32)?;
+    let input = a.num("input", 128u32)?;
+    let output = a.num("output", 128u32)?;
+    cfg.workload = match a.get("rate") {
+        Some(r) => WorkloadSpec::poisson(
+            r.parse().map_err(|_| anyhow!("bad --rate"))?,
+            requests,
+            input,
+            output,
+        ),
+        None => WorkloadSpec::table2(requests, input, output),
+    };
+    if let Some(r) = a.get("routing") {
+        cfg.policy.moe_routing = crate::moe::RoutingPolicy::parse(r).ok_or_else(|| {
+            anyhow!("unknown routing {r:?} (balanced|uniform|skewed:ALPHA|drift:ALPHA:PERIOD)")
+        })?;
+    }
+    let drift = a.num("drift", 0u64)?;
+    if drift > 0 {
+        cfg.policy.moe_routing = match cfg.policy.moe_routing {
+            crate::moe::RoutingPolicy::Skewed { alpha } => {
+                crate::moe::RoutingPolicy::Drifting { alpha, period: drift }
+            }
+            crate::moe::RoutingPolicy::Drifting { alpha, .. } => {
+                crate::moe::RoutingPolicy::Drifting { alpha, period: drift }
+            }
+            _ => bail!("--drift requires skewed routing (--routing skewed:ALPHA)"),
+        };
+    }
+    if let Some(f) = a.get("routing-fidelity") {
+        cfg.policy.routing_fidelity = crate::moe::RoutingFidelity::parse(f)
+            .ok_or_else(|| anyhow!("unknown routing fidelity {f:?} (token|aggregate)"))?;
+    }
+    if let Some(m) = a.get("migration") {
+        cfg.policy.migration = crate::moe::MigrationPolicy::parse(m)
+            .ok_or_else(|| anyhow!("unknown migration policy {m:?} (off|threshold)"))?;
+    }
+    cfg.policy.migration_threshold = a.num("migration-threshold", 1.25f64)?;
+    cfg.policy.load_window = a.num("load-window", 64u32)?;
+    if let Some(p) = a.get("ep-placement") {
+        cfg.policy.ep_placement = crate::moe::PlacementPolicy::parse(p).ok_or_else(|| {
+            anyhow!("unknown placement {p:?} (contiguous|strided|replicated:K)")
+        })?;
+    }
+    cfg.ep_clusters = a.num("ep-clusters", 1u32)?;
+    if let Some(bw) = a.get("cross-bw") {
+        let gbps: f64 = bw.parse().map_err(|_| anyhow!("bad value for --cross-bw: {bw:?}"))?;
+        cfg.cross_link.bandwidth = gbps * 1e9;
+    }
+    if let Some(bw) = a.get("inter-bw") {
+        let gbps: f64 = bw.parse().map_err(|_| anyhow!("bad value for --inter-bw: {bw:?}"))?;
+        cfg.inter_node_link.bandwidth = gbps * 1e9;
+    }
+    cfg.ranks_per_node = a.num("ranks-per-node", 0u32)?;
+    cfg.nic_ingress_scale = a.num("ingress-scale", 1.0f64)?;
+    if let Some(cf) = a.get("capacity-factor") {
+        cfg.policy.capacity_factor = Some(
+            cf.parse().map_err(|_| anyhow!("bad value for --capacity-factor: {cf:?}"))?,
+        );
+    }
+    if let Some(p) = a.get("predictor") {
+        cfg.predictor =
+            PredictorKind::parse(p).ok_or_else(|| anyhow!("unknown predictor {p:?}"))?;
+    }
+    cfg.policy.budget.max_batch = a.num("max-batch", cfg.policy.budget.max_batch)?;
+    if a.has("overhead") && a.truthy("profiled") {
+        // silently letting one win would turn an `overhead` sweep axis
+        // into a no-op whenever the base flags carry --profiled
+        bail!("--overhead and --profiled are mutually exclusive");
+    }
+    if let Some(o) = a.get("overhead") {
+        cfg.overhead = match o {
+            "predicted" => OverheadConfig::predicted(),
+            "profiled" => OverheadConfig::profiled_real(),
+            "zero" => OverheadConfig::zero(),
+            _ => bail!("unknown overhead preset {o:?} (predicted|profiled|zero)"),
+        };
+    }
+    if a.truthy("profiled") {
+        cfg.overhead = OverheadConfig::profiled_real();
+    }
+    cfg.seed = a.num("seed", 1u64)?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentMode;
+    use crate::scheduler::IterBudget;
+
+    fn parse(tokens: &[&str]) -> Result<FlagMap> {
+        FlagMap::parse(tokens.iter().map(|s| s.to_string()), REPEATABLE_FLAGS)
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree() {
+        let a = parse(&["--model", "tiny", "--requests", "8", "--json"]).unwrap();
+        let b = parse(&["--model=tiny", "--requests=8", "--json=true"]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.num("requests", 0u32).unwrap(), 8);
+        assert!(a.truthy("json"));
+        assert!(!parse(&["--json=false"]).unwrap().truthy("json"));
+    }
+
+    #[test]
+    fn duplicate_flags_are_rejected() {
+        assert!(parse(&["--seed", "1", "--seed", "2"]).is_err());
+        assert!(parse(&["--seed=1", "--seed=2"]).is_err());
+        assert!(parse(&["--seed=1", "--seed", "2"]).is_err());
+        // repeatable flags collect values in order instead
+        let f = parse(&["--axis=a=1,2", "--axis", "b=3"]).unwrap();
+        assert_eq!(f.get_all("axis"), ["a=1,2".to_string(), "b=3".to_string()]);
+        assert_eq!(f.get("axis"), Some("a=1,2"));
+    }
+
+    #[test]
+    fn parse_errors_are_loud() {
+        assert!(parse(&["positional"]).is_err());
+        assert!(parse(&["--requests"]).is_err(), "value flag without a value");
+        assert!(parse(&["--"]).is_err(), "empty flag name");
+    }
+
+    #[test]
+    fn set_overwrites_where_parse_rejects() {
+        let mut f = parse(&["--seed", "1"]).unwrap();
+        f.set("seed", "2");
+        assert_eq!(f.get("seed"), Some("2"));
+        f.remove("seed");
+        assert!(!f.has("seed"));
+    }
+
+    #[test]
+    fn build_config_lowers_flags() {
+        let f = parse(&[
+            "--model",
+            "tiny-moe",
+            "--replicas",
+            "2",
+            "--ep",
+            "2",
+            "--capacity-factor",
+            "1.25",
+            "--max-batch",
+            "32",
+            "--overhead",
+            "zero",
+            "--seed",
+            "7",
+        ])
+        .unwrap();
+        let cfg = build_config(&f).unwrap();
+        assert_eq!(cfg.model.name, "tiny-moe");
+        assert_eq!(cfg.mode, DeploymentMode::Colocated { replicas: 2 });
+        assert_eq!(cfg.parallel.ep, 2);
+        assert_eq!(cfg.policy.capacity_factor, Some(1.25));
+        assert_eq!(cfg.policy.budget.max_batch, 32);
+        assert_eq!(cfg.overhead, OverheadConfig::zero());
+        assert_eq!(cfg.seed, 7);
+        assert!(cfg.validate().is_ok());
+        // defaults stay defaults
+        let d = build_config(&FlagMap::new()).unwrap();
+        assert_eq!(d.policy.budget.max_batch, IterBudget::default().max_batch);
+        assert_eq!(d.overhead, OverheadConfig::predicted());
+    }
+
+    #[test]
+    fn build_config_rejects_bad_values() {
+        assert!(build_config(&parse(&["--model", "nope"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--mode", "nope"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--overhead", "nope"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--edges", "0>1"]).unwrap()).is_err());
+        // conflicting presets must not silently pick a winner
+        assert!(build_config(&parse(&["--overhead", "zero", "--profiled"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--overhead", "zero", "--profiled=false"]).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_driver() {
+        let f = parse(&["--model", "tiny", "--trace", "t.json", "--json"]).unwrap();
+        assert!(reject_unknown_flags(&f, &["trace"]).is_ok());
+        assert!(reject_unknown_flags(&f, &[]).is_err(), "trace needs a driver that reads it");
+        let typo = parse(&["--capacty-factor", "1.5"]).unwrap();
+        assert!(reject_unknown_flags(&typo, &["trace"]).is_err());
+    }
+
+    #[test]
+    fn value_flag_registry_matches_build_config() {
+        assert!(is_value_flag("capacity-factor"));
+        assert!(is_value_flag("seed"));
+        assert!(is_value_flag("max-batch"));
+        assert!(!is_value_flag("threads"), "driver flags are not sweepable");
+        assert!(!is_value_flag("trace"), "trace replay is a simulate-only path");
+        assert!(!is_value_flag("json"), "bool flags are not value flags");
+    }
+}

@@ -1,5 +1,6 @@
 //! Experiment configuration: deployment, policies, overheads.
 
+pub mod cli;
 pub mod json;
 pub mod stage;
 

@@ -35,6 +35,7 @@ pub mod proptest_util;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod sweep;
 pub mod workflows;
 pub mod workload;
 
@@ -51,6 +52,7 @@ pub mod prelude {
     pub use crate::model::{ModelConfig, MoeConfig};
     pub use crate::parallelism::Parallelism;
     pub use crate::predictor::{ExecutionPredictor, PredictorKind};
+    pub use crate::sweep::{Axis, SweepRunner, SweepSpec};
     pub use crate::workload::WorkloadSpec;
 }
 

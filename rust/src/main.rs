@@ -1,25 +1,35 @@
-//! `frontier` CLI: run simulations, sweeps, and validation from the
-//! command line (hand-rolled arg parsing; no clap in this offline build).
+//! `frontier` CLI: run simulations, design-space sweeps, and validation
+//! from the command line (hand-rolled arg parsing; no clap in this
+//! offline build). The flag grammar and config lowering live in
+//! `frontier::config::cli`; the parallel sweep engine in
+//! `frontier::sweep` — this file is only the front-end.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use frontier::baseline::ReplicaCentricSim;
-use frontier::config::{DeploymentMode, ExperimentConfig, OverheadConfig};
-use frontier::model::ModelConfig;
-use frontier::predictor::PredictorKind;
-use frontier::workload::WorkloadSpec;
+use frontier::config::cli::{
+    build_config, model_by_name, reject_unknown_flags, Args, FlagMap, DEFAULT_MODEL,
+    DRIVER_FLAGS,
+};
+use frontier::report::sweep::{sweep_csv, sweep_json, sweep_markdown};
+use frontier::sweep::{Axis, PointSpec, SweepResult, SweepRunner, SweepSpec};
 
 const USAGE: &str = "\
 frontier — simulator for next-generation LLM inference systems
 
 USAGE:
   frontier simulate [OPTIONS]     run one simulation and print the report
+  frontier sweep [OPTIONS]        parallel design-space sweep over a config grid
   frontier sweep-pd [OPTIONS]     sweep prefill:decode ratios at fixed GPUs
   frontier baseline [OPTIONS]     run the replica-centric (Vidur-style) baseline
   frontier validate               check AOT artifacts load and predict
   frontier info                   list models, predictors, modes
 
-OPTIONS (simulate / sweep-pd / baseline):
+Flags accept both `--key value` and `--key=value`; passing the same flag
+twice is an error (sweep the value with `frontier sweep --axis` instead),
+and flags the subcommand does not read are rejected, not ignored.
+
+OPTIONS (simulate / sweep / sweep-pd / baseline):
   --model <qwen2-7b|qwen2-72b|mixtral-8x7b|deepseek-v3-lite|tiny|tiny-moe>
   --mode <colocated|pd|af>         deployment (default colocated)
   --stages <DSL>                   explicit stage graph, overrides --mode:
@@ -54,13 +64,40 @@ OPTIONS (simulate / sweep-pd / baseline):
   --ranks-per-node <N>             EP ranks per node (default: cluster = one node)
   --ingress-scale <F>              ingress/egress NIC bandwidth ratio (default 1.0)
   --predictor <oracle|learned|vidur|roofline>   (default oracle)
+  --max-batch <N>                  per-iteration batch-size cap (default 256)
+  --overhead <predicted|profiled|zero>  engine-overhead preset (default predicted)
   --requests <N>                   workload size (default 256)
   --input <N> --output <N>         token lengths (default 128/128)
   --rate <R>                       Poisson arrivals at R req/s (default: batch)
   --trace <file.json>              replay a trace file instead of generating
+                                   (simulate only; rejected by sweeps)
   --profiled                       use the real-system overhead preset
+                                   (alias; conflicts with --overhead)
   --seed <S>                       RNG seed (default 1)
   --json                           emit the report as JSON
+
+OPTIONS (sweep):
+  --axis <name=v1,v2,...>          sweep axis (repeatable; axes form a cartesian
+                                   grid, first axis varies slowest). names:
+                                   pd-ratio (values P:D, takes over the
+                                   deployment shape), any value flag above
+                                   (capacity-factor, ep-clusters,
+                                   migration-threshold, seed, ...), or
+                                   flag:<name> to bypass flag-name validation.
+                                   comma-valued flags (stages, edges) cannot
+                                   ride this grammar; sweep them via the API
+  --point <k=v[,k2=v2...]>         explicit grid point (repeatable, instead of
+                                   --axis; same key grammar as axis names)
+  --threads <N>                    worker threads (default: all cores; the
+                                   merged report is bit-identical for any N)
+  --format <md|csv|json>           merged report format (default md; --json is
+                                   shorthand for --format json)
+
+OPTIONS (sweep-pd):
+  --gpus <N>                       total GPUs split prefill:decode, sweeping
+                                   P:D from 1:N-1 to N-1:1 (default 8)
+  --threads <N>                    worker threads (default: all cores)
+  --format <md|csv|json>           merged report format (default md)
 ";
 
 fn main() {
@@ -70,181 +107,130 @@ fn main() {
     }
 }
 
-struct Args {
-    cmd: String,
-    flags: std::collections::HashMap<String, String>,
-}
-
-impl Args {
-    fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
-        let cmd = it.next().unwrap_or_else(|| "help".into());
-        let mut flags = std::collections::HashMap::new();
-        while let Some(a) = it.next() {
-            let key = a
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow!("unexpected argument {a:?}"))?
-                .to_string();
-            // boolean flags
-            if matches!(key.as_str(), "json" | "profiled") {
-                flags.insert(key, "true".into());
-                continue;
-            }
-            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
-            flags.insert(key, val);
-        }
-        Ok(Args { cmd, flags })
-    }
-
-    fn get(&self, k: &str) -> Option<&str> {
-        self.flags.get(k).map(|s| s.as_str())
-    }
-
-    fn num<T: std::str::FromStr>(&self, k: &str, default: T) -> Result<T> {
-        match self.get(k) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{k}: {v:?}")),
+/// Non-sweep subcommands must not silently ignore sweep-driver flags —
+/// `frontier simulate --axis seed=1,2` runs ONE simulation, and the
+/// user deserves an error, not a quietly un-swept report. (`--json` is
+/// shared by every subcommand, and `--trace` is simulate's own flag, so
+/// both stay allowed here.)
+fn reject_sweep_flags(args: &Args) -> Result<()> {
+    for k in DRIVER_FLAGS {
+        if !matches!(*k, "json" | "trace") && args.flags.has(k) {
+            let hint = if *k == "gpus" { "sweep-pd" } else { "sweep" };
+            bail!("--{k} only applies to the sweep subcommands (did you mean `frontier {hint}`?)");
         }
     }
+    Ok(())
+}
 
-    fn has(&self, k: &str) -> bool {
-        self.flags.contains_key(k)
+/// The base experiment configuration shared by all grid points: the
+/// sweep command line minus every driver-level flag.
+fn sweep_base_flags(args: &Args) -> Result<FlagMap> {
+    if args.flags.has("trace") {
+        // the sweep path builds synthetic workloads from flags; a trace
+        // base flag would be silently ignored, not replayed
+        bail!("--trace is not supported by sweeps (trace replay is simulate-only)");
     }
+    let mut base = args.flags.clone();
+    for k in DRIVER_FLAGS {
+        base.remove(k);
+    }
+    Ok(base)
 }
 
-fn model_by_name(name: &str) -> Result<ModelConfig> {
-    Ok(match name {
-        "qwen2-7b" => ModelConfig::qwen2_7b(),
-        "qwen2-72b" => ModelConfig::qwen2_72b(),
-        "mixtral-8x7b" => ModelConfig::mixtral_8x7b(),
-        "deepseek-v3-lite" => ModelConfig::deepseek_v3_lite(),
-        "tiny" => ModelConfig::tiny(),
-        "tiny-moe" => ModelConfig::tiny_moe(),
-        _ => bail!("unknown model {name:?} (see `frontier info`)"),
-    })
+/// Merged-report output format of the sweep subcommands.
+#[derive(Clone, Copy, PartialEq)]
+enum SweepFormat {
+    Md,
+    Csv,
+    Json,
 }
 
-fn build_config(a: &Args) -> Result<ExperimentConfig> {
-    let model = model_by_name(a.get("model").unwrap_or("qwen2-7b"))?;
-    let mode = a.get("mode").unwrap_or("colocated");
-    let mut cfg = match mode {
-        "colocated" => ExperimentConfig::colocated(model, a.num("replicas", 4u32)?),
-        "pd" => ExperimentConfig::pd(model, a.num("prefill", 4u32)?, a.num("decode", 4u32)?),
-        "af" => ExperimentConfig::af(
-            model,
-            a.num("prefill", 2u32)?,
-            a.num("attn-gpus", 4u32)?,
-            a.num("ffn-gpus", 4u32)?,
-            a.num("micro-batches", 2u32)?,
-        ),
-        _ => bail!("unknown mode {mode:?}"),
+/// Resolve and validate the output format *before* the grid runs, so a
+/// `--format` typo fails in milliseconds instead of after the sweep.
+fn sweep_format(args: &Args) -> Result<SweepFormat> {
+    let format = match (args.flags.truthy("json"), args.flags.get("format")) {
+        (true, Some(f)) if f != "json" => {
+            bail!("--json and --format {f:?} are mutually exclusive")
+        }
+        (true, _) => "json",
+        (false, f) => f.unwrap_or("md"),
     };
-    cfg.parallel = frontier::parallelism::Parallelism::new(
-        a.num("tp", 1u32)?,
-        a.num("pp", 1u32)?,
-        a.num("ep", 1u32)?,
-    );
-    if let Some(g) = a.get("gpu") {
-        cfg.gpu = frontier::hardware::GpuSpec::by_name(g)
-            .ok_or_else(|| anyhow!("unknown gpu {g:?} (a800|a100|h100|h200)"))?;
+    match format {
+        "md" | "markdown" => Ok(SweepFormat::Md),
+        "csv" => Ok(SweepFormat::Csv),
+        "json" => Ok(SweepFormat::Json),
+        f => bail!("unknown sweep format {f:?} (md|csv|json)"),
     }
-    // explicit stage graph (DSL or JSON) overrides the mode-level shape
-    match (a.get("stages"), a.get("stages-json")) {
-        (Some(_), Some(_)) => bail!("--stages and --stages-json are mutually exclusive"),
-        (Some(dsl), None) => {
-            cfg = cfg.with_stages(frontier::config::StageGraphConfig::parse_cli(
-                dsl,
-                a.get("edges"),
-            )?);
-        }
-        (None, Some(path)) => {
-            let text = std::fs::read_to_string(path)?;
-            let json = frontier::config::json::Json::parse(&text)?;
-            cfg = cfg.with_stages(frontier::config::StageGraphConfig::from_json(&json)?);
-        }
-        (None, None) => {
-            if a.has("edges") {
-                bail!("--edges requires --stages");
-            }
-        }
+}
+
+fn print_sweep(format: SweepFormat, result: &SweepResult) -> Result<()> {
+    match format {
+        SweepFormat::Md => print!("{}", sweep_markdown(result)),
+        SweepFormat::Csv => print!("{}", sweep_csv(result)),
+        SweepFormat::Json => println!("{}", sweep_json(result).to_string_pretty()),
     }
-    let requests = a.num("requests", 256u32)?;
-    let input = a.num("input", 128u32)?;
-    let output = a.num("output", 128u32)?;
-    cfg.workload = match a.get("rate") {
-        Some(r) => WorkloadSpec::poisson(
-            r.parse().map_err(|_| anyhow!("bad --rate"))?,
-            requests,
-            input,
-            output,
-        ),
-        None => WorkloadSpec::table2(requests, input, output),
+    // per-point errors are isolated in the report rows, but the process
+    // must still signal them (CI smoke, scripts) — after printing
+    let failed = result.points.iter().filter(|p| p.outcome.is_err()).count();
+    if failed > 0 {
+        bail!("{failed}/{} grid points failed (see the error rows above)", result.points.len());
+    }
+    Ok(())
+}
+
+fn run_sweep(args: &Args) -> Result<()> {
+    if args.flags.has("gpus") {
+        bail!("--gpus belongs to sweep-pd; use an explicit pd-ratio axis with `frontier sweep`");
+    }
+    // the full driver set passes here: the driver flags sweep itself
+    // does not read (--gpus above, --trace in sweep_base_flags) get
+    // tailored rejections instead of the generic unknown-flag error
+    reject_unknown_flags(&args.flags, DRIVER_FLAGS)?;
+    let axes: Vec<Axis> =
+        args.flags.get_all("axis").iter().map(|s| Axis::parse(s)).collect::<Result<_>>()?;
+    let points: Vec<PointSpec> =
+        args.flags.get_all("point").iter().map(|s| PointSpec::parse(s)).collect::<Result<_>>()?;
+    let spec = match (axes.is_empty(), points.is_empty()) {
+        (false, false) => bail!("--axis and --point are mutually exclusive"),
+        (true, true) => bail!("sweep needs at least one --axis or --point"),
+        (false, true) => SweepSpec::new(sweep_base_flags(args)?).with_axes(axes),
+        (true, false) => SweepSpec::new(sweep_base_flags(args)?).with_points(points),
     };
-    if let Some(r) = a.get("routing") {
-        cfg.policy.moe_routing = frontier::moe::RoutingPolicy::parse(r).ok_or_else(|| {
-            anyhow!("unknown routing {r:?} (balanced|uniform|skewed:ALPHA|drift:ALPHA:PERIOD)")
-        })?;
+    let format = sweep_format(args)?;
+    let runner = SweepRunner::with_threads(args.flags.num("threads", 0usize)?);
+    print_sweep(format, &runner.run(&spec)?)
+}
+
+fn run_sweep_pd(args: &Args) -> Result<()> {
+    if args.flags.has("axis") || args.flags.has("point") {
+        bail!("sweep-pd owns its pd-ratio grid; use `frontier sweep --axis ...` to compose axes");
     }
-    let drift = a.num("drift", 0u64)?;
-    if drift > 0 {
-        cfg.policy.moe_routing = match cfg.policy.moe_routing {
-            frontier::moe::RoutingPolicy::Skewed { alpha } => {
-                frontier::moe::RoutingPolicy::Drifting { alpha, period: drift }
-            }
-            frontier::moe::RoutingPolicy::Drifting { alpha, .. } => {
-                frontier::moe::RoutingPolicy::Drifting { alpha, period: drift }
-            }
-            _ => bail!("--drift requires skewed routing (--routing skewed:ALPHA)"),
-        };
+    reject_unknown_flags(&args.flags, DRIVER_FLAGS)?;
+    let format = sweep_format(args)?;
+    let total: u32 = args.flags.num("gpus", 8u32)?;
+    if total < 2 {
+        bail!("--gpus must be >= 2 to split prefill:decode");
     }
-    if let Some(f) = a.get("routing-fidelity") {
-        cfg.policy.routing_fidelity = frontier::moe::RoutingFidelity::parse(f)
-            .ok_or_else(|| anyhow!("unknown routing fidelity {f:?} (token|aggregate)"))?;
+    let model = model_by_name(args.flags.get("model").unwrap_or(DEFAULT_MODEL))?;
+    if format == SweepFormat::Md {
+        // human header; kept out of the csv/json machine formats
+        println!("PD ratio sweep over {total} GPUs ({})", model.name);
     }
-    if let Some(m) = a.get("migration") {
-        cfg.policy.migration = frontier::moe::MigrationPolicy::parse(m)
-            .ok_or_else(|| anyhow!("unknown migration policy {m:?} (off|threshold)"))?;
-    }
-    cfg.policy.migration_threshold = a.num("migration-threshold", 1.25f64)?;
-    cfg.policy.load_window = a.num("load-window", 64u32)?;
-    if let Some(p) = a.get("ep-placement") {
-        cfg.policy.ep_placement = frontier::moe::PlacementPolicy::parse(p).ok_or_else(|| {
-            anyhow!("unknown placement {p:?} (contiguous|strided|replicated:K)")
-        })?;
-    }
-    cfg.ep_clusters = a.num("ep-clusters", 1u32)?;
-    if let Some(bw) = a.get("cross-bw") {
-        let gbps: f64 = bw.parse().map_err(|_| anyhow!("bad value for --cross-bw: {bw:?}"))?;
-        cfg.cross_link.bandwidth = gbps * 1e9;
-    }
-    if let Some(bw) = a.get("inter-bw") {
-        let gbps: f64 = bw.parse().map_err(|_| anyhow!("bad value for --inter-bw: {bw:?}"))?;
-        cfg.inter_node_link.bandwidth = gbps * 1e9;
-    }
-    cfg.ranks_per_node = a.num("ranks-per-node", 0u32)?;
-    cfg.nic_ingress_scale = a.num("ingress-scale", 1.0f64)?;
-    if let Some(cf) = a.get("capacity-factor") {
-        cfg.policy.capacity_factor = Some(
-            cf.parse().map_err(|_| anyhow!("bad value for --capacity-factor: {cf:?}"))?,
-        );
-    }
-    if let Some(p) = a.get("predictor") {
-        cfg.predictor =
-            PredictorKind::parse(p).ok_or_else(|| anyhow!("unknown predictor {p:?}"))?;
-    }
-    if a.has("profiled") {
-        cfg.overhead = OverheadConfig::profiled_real();
-    }
-    cfg.seed = a.num("seed", 1u64)?;
-    Ok(cfg)
+    let ratios: Vec<String> = (1..total).map(|p| format!("{p}:{}", total - p)).collect();
+    let spec =
+        SweepSpec::new(sweep_base_flags(args)?).with_axes(vec![Axis::new("pd-ratio", ratios)?]);
+    let runner = SweepRunner::with_threads(args.flags.num("threads", 0usize)?);
+    print_sweep(format, &runner.run(&spec)?)
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse()?;
+    let args = Args::from_env()?;
     match args.cmd.as_str() {
         "simulate" => {
-            let cfg = build_config(&args)?;
-            let report = match args.get("trace") {
+            reject_sweep_flags(&args)?;
+            reject_unknown_flags(&args.flags, &["trace"])?;
+            let cfg = build_config(&args.flags)?;
+            let report = match args.flags.get("trace") {
                 Some(path) => {
                     let trace =
                         frontier::workload::trace_from_file(std::path::Path::new(path))?;
@@ -252,58 +238,29 @@ fn run() -> Result<()> {
                 }
                 None => frontier::run_experiment(&cfg)?,
             };
-            if args.has("json") {
+            if args.flags.truthy("json") {
                 println!("{}", report.to_json().to_string_pretty());
             } else {
                 println!("{}", report.summary());
             }
         }
         "baseline" => {
-            let cfg = build_config(&args)?;
+            reject_sweep_flags(&args)?;
+            reject_unknown_flags(&args.flags, &[])?;
+            let cfg = build_config(&args.flags)?;
             let report = ReplicaCentricSim::new(cfg).simulate()?;
-            if args.has("json") {
+            if args.flags.truthy("json") {
                 println!("{}", report.to_json().to_string_pretty());
             } else {
                 println!("{}", report.summary());
             }
         }
-        "sweep-pd" => {
-            let total: u32 = args.num("gpus", 8u32)?;
-            let cfg0 = build_config(&args)?;
-            println!("PD ratio sweep over {total} GPUs ({})", cfg0.model.name);
-            let mut rows = Vec::new();
-            for p in 1..total {
-                let d = total - p;
-                let mut cfg = cfg0.clone();
-                // the sweep owns the deployment shape
-                cfg.stages = None;
-                cfg.mode = DeploymentMode::PdDisagg {
-                    prefill_replicas: p,
-                    decode_replicas: d,
-                };
-                let report = frontier::run_experiment(&cfg)?;
-                rows.push(vec![
-                    format!("{p}:{d}"),
-                    format!("{:.2}", report.tokens_per_sec_per_gpu()),
-                    format!(
-                        "{:.1}",
-                        frontier::metrics::percentile(&report.metrics.ttft, 99.0) * 1e3
-                    ),
-                    format!(
-                        "{:.2}",
-                        frontier::metrics::percentile(&report.metrics.tbt, 99.0) * 1e3
-                    ),
-                ]);
-            }
-            println!(
-                "{}",
-                frontier::report::markdown_table(
-                    &["P:D", "tok/s/gpu", "TTFT p99 (ms)", "TBT p99 (ms)"],
-                    &rows
-                )
-            );
-        }
+        "sweep" => run_sweep(&args)?,
+        "sweep-pd" => run_sweep_pd(&args)?,
         "validate" => {
+            if let Some(k) = args.flags.keys().next() {
+                bail!("validate takes no flags (got --{k})");
+            }
             let dir = frontier::runtime::PredictorRuntime::default_dir();
             println!("loading artifacts from {dir:?}");
             let rt = frontier::runtime::PredictorRuntime::load(&dir)?;
@@ -348,12 +305,19 @@ fn run() -> Result<()> {
             println!("artifacts OK");
         }
         "info" => {
+            if let Some(k) = args.flags.keys().next() {
+                bail!("info takes no flags (got --{k})");
+            }
             println!("models: qwen2-7b qwen2-72b mixtral-8x7b deepseek-v3-lite tiny tiny-moe");
             println!("modes: colocated pd af (or --stages for arbitrary stage graphs)");
             println!("gpus: a800 a100 h100 h200");
             println!("predictors: oracle learned vidur roofline");
             println!(
                 "stage DSL example: --stages \"prefill:2@h200,tp=2;af,attn=4,ffn=4,micro=2\""
+            );
+            println!(
+                "sweep example: frontier sweep --model mixtral-8x7b --replicas 1 --ep 8 \
+                 --axis capacity-factor=1.0,1.25,1.5 --axis ep-clusters=1,2"
             );
             for name in ["qwen2-7b", "mixtral-8x7b", "deepseek-v3-lite"] {
                 let m = model_by_name(name)?;

@@ -342,6 +342,20 @@ impl SimReport {
         s
     }
 
+    /// [`SimReport::to_json`] minus the host-time field
+    /// (`host_duration_s`): every remaining value is a pure function of
+    /// the experiment config, so the document is byte-identical across
+    /// runs, machines, and sweep thread counts. The sweep engine's
+    /// merged reports are built from this projection
+    /// (`rust/tests/sweep.rs` pins the byte-identity).
+    pub fn to_json_deterministic(&self) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("host_duration_s");
+        }
+        j
+    }
+
     pub fn to_json(&self) -> Json {
         let m = &self.metrics;
         Json::obj(vec![
@@ -493,6 +507,33 @@ mod tests {
         assert_eq!(m.migration_stall_s, 0.0, "stall is metered only when paid");
         assert!((m.migration_pre_imbalance_mean() - 2.5).abs() < 1e-12);
         assert!((m.migration_post_imbalance_mean() - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_json_drops_only_host_time() {
+        let r = SimReport {
+            mode: "test".into(),
+            predictor: "oracle".into(),
+            sim_duration: 10.0,
+            host_duration: 1.0,
+            events_processed: 1000,
+            n_gpus: 8,
+            metrics: MetricsCollector::default(),
+            stages: Vec::new(),
+        };
+        let full = r.to_json();
+        let det = r.to_json_deterministic();
+        assert!(full.get("host_duration_s").is_some());
+        assert!(det.get("host_duration_s").is_none());
+        // everything else is carried over unchanged
+        if let (Json::Obj(f), Json::Obj(d)) = (&full, &det) {
+            assert_eq!(f.len(), d.len() + 1);
+            for (k, v) in d {
+                assert_eq!(f.get(k), Some(v));
+            }
+        } else {
+            panic!("reports must serialize to objects");
+        }
     }
 
     #[test]

@@ -1,4 +1,7 @@
-//! Table / CSV / CDF renderers used by the benches and examples.
+//! Table / CSV / CDF renderers used by the benches and examples, plus
+//! the merged design-space sweep reports ([`sweep`]).
+
+pub mod sweep;
 
 use std::fmt::Write as _;
 

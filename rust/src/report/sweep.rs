@@ -1,0 +1,263 @@
+//! Merged sweep reporting: one markdown / CSV / JSON document for a
+//! whole [`SweepResult`] grid.
+//!
+//! All three renderers are pure functions of the (deterministic) sweep
+//! result, so their output is byte-identical regardless of how many
+//! threads ran the sweep — `rust/tests/sweep.rs` pins this. The JSON
+//! form embeds each point's
+//! [`SimReport::to_json_deterministic`](crate::metrics::SimReport::to_json_deterministic)
+//! projection (host-time fields excluded).
+
+use crate::config::json::Json;
+use crate::metrics::percentile;
+use crate::sweep::{PointResult, SweepResult};
+
+/// Metric columns of the merged table/CSV, after the axis columns.
+pub const SWEEP_METRIC_COLS: &[&str] = &[
+    "tok_s_gpu",
+    "ttft_p50_ms",
+    "ttft_p99_ms",
+    "tbt_p50_ms",
+    "tbt_p99_ms",
+    "e2e_p50_s",
+    "sim_s",
+    "completed",
+    "dropped_tokens",
+    "ep_imbalance_mean",
+    "migrations",
+];
+
+fn metric_cells(r: &PointResult) -> Vec<String> {
+    match &r.outcome {
+        Ok(rep) => {
+            let m = &rep.metrics;
+            vec![
+                format!("{:.2}", rep.tokens_per_sec_per_gpu()),
+                format!("{:.1}", percentile(&m.ttft, 50.0) * 1e3),
+                format!("{:.1}", percentile(&m.ttft, 99.0) * 1e3),
+                format!("{:.2}", percentile(&m.tbt, 50.0) * 1e3),
+                format!("{:.2}", percentile(&m.tbt, 99.0) * 1e3),
+                format!("{:.2}", percentile(&m.e2e, 50.0)),
+                format!("{:.3}", rep.sim_duration),
+                m.completed_requests.to_string(),
+                m.dropped_tokens.to_string(),
+                format!("{:.3}", m.ep_imbalance_mean()),
+                m.migrations.to_string(),
+            ]
+        }
+        Err(e) => {
+            // keep error rows rectangular: message in the first metric
+            // column, dashes in the rest (renderers sanitize their own
+            // delimiter; JSON carries the raw message)
+            let mut cells = vec![format!("error: {e}")];
+            cells.resize(SWEEP_METRIC_COLS.len(), "-".into());
+            cells
+        }
+    }
+}
+
+/// Axis column headers: one per cartesian axis, or a single `point`
+/// label column for explicit point lists.
+fn axis_headers(result: &SweepResult) -> Vec<String> {
+    if result.axes.is_empty() {
+        vec!["point".into()]
+    } else {
+        result
+            .axes
+            .iter()
+            .map(|a| a.strip_prefix("flag:").unwrap_or(a).to_string())
+            .collect()
+    }
+}
+
+fn axis_cells(result: &SweepResult, r: &PointResult) -> Vec<String> {
+    if result.axes.is_empty() {
+        vec![r.point.label.clone()]
+    } else {
+        // cartesian assigns are stored in axis order
+        r.point.assigns.iter().map(|(_, v)| v.clone()).collect()
+    }
+}
+
+fn headers(result: &SweepResult) -> Vec<String> {
+    let mut h = axis_headers(result);
+    h.extend(SWEEP_METRIC_COLS.iter().map(|s| s.to_string()));
+    h
+}
+
+fn rows(result: &SweepResult) -> Vec<Vec<String>> {
+    result
+        .points
+        .iter()
+        .map(|r| {
+            let mut row = axis_cells(result, r);
+            row.extend(metric_cells(r));
+            row
+        })
+        .collect()
+}
+
+/// Shared table pipeline: headers + rows with the renderer's delimiter
+/// sanitized out of every cell (error messages quote `(a800|a100|...)`
+/// grammars, labels are free-form), so each row keeps the same column
+/// count in the rendered output.
+fn render_table(
+    result: &SweepResult,
+    delim: char,
+    replacement: &str,
+    render: fn(&[&str], &[Vec<String>]) -> String,
+) -> String {
+    let headers: Vec<String> =
+        headers(result).into_iter().map(|h| h.replace(delim, replacement)).collect();
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let rows: Vec<Vec<String>> = rows(result)
+        .into_iter()
+        .map(|row| row.into_iter().map(|c| c.replace(delim, replacement)).collect())
+        .collect();
+    render(&hrefs, &rows)
+}
+
+/// Merged sweep report as a markdown table (cells sanitized `|` → `/`).
+pub fn sweep_markdown(result: &SweepResult) -> String {
+    render_table(result, '|', "/", super::markdown_table)
+}
+
+/// Merged sweep report as CSV (cells sanitized `,` → `;`).
+pub fn sweep_csv(result: &SweepResult) -> String {
+    render_table(result, ',', ";", super::csv)
+}
+
+/// Merged sweep report as JSON: grid metadata plus each point's
+/// deterministic report (or its error).
+pub fn sweep_json(result: &SweepResult) -> Json {
+    let points = result
+        .points
+        .iter()
+        .map(|r| {
+            let assigns = r
+                .point
+                .assigns
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect();
+            let mut fields = vec![
+                ("index", Json::Num(r.point.index as f64)),
+                ("label", Json::Str(r.point.label.clone())),
+                ("assigns", Json::Obj(assigns)),
+            ];
+            match &r.outcome {
+                Ok(rep) => fields.push(("report", rep.to_json_deterministic())),
+                Err(e) => fields.push(("error", Json::Str(e.clone()))),
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("axes", Json::Arr(result.axes.iter().map(|a| Json::Str(a.clone())).collect())),
+        ("points", Json::Arr(points)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{MetricsCollector, SimReport};
+    use crate::sweep::SweepPoint;
+
+    fn fake_report(tokens: u64) -> SimReport {
+        let m = MetricsCollector {
+            output_tokens: tokens,
+            completed_requests: 3,
+            ..Default::default()
+        };
+        SimReport {
+            mode: "test".into(),
+            predictor: "oracle".into(),
+            sim_duration: 2.0,
+            host_duration: 0.5,
+            events_processed: 10,
+            n_gpus: 2,
+            metrics: m,
+            stages: Vec::new(),
+        }
+    }
+
+    fn fake_result() -> SweepResult {
+        let ok = PointResult {
+            point: SweepPoint {
+                index: 0,
+                assigns: vec![("capacity-factor".into(), "1.25".into())],
+                label: "capacity-factor=1.25".into(),
+            },
+            outcome: Ok(fake_report(400)),
+        };
+        let err = PointResult {
+            point: SweepPoint {
+                index: 1,
+                assigns: vec![("capacity-factor".into(), "2.0".into())],
+                label: "capacity-factor=2.0".into(),
+            },
+            outcome: Err("boom, with a comma (a|b|c)".into()),
+        };
+        SweepResult { axes: vec!["capacity-factor".into()], points: vec![ok, err] }
+    }
+
+    #[test]
+    fn tables_are_rectangular_with_errors() {
+        let r = fake_result();
+        let md = sweep_markdown(&r);
+        assert!(md.contains("capacity-factor"));
+        assert!(md.contains("error: boom"));
+        // pipes in error text and labels are sanitized so every markdown
+        // row keeps the same column count
+        let pipes = md.lines().next().unwrap().matches('|').count();
+        assert!(md.lines().all(|l| l.matches('|').count() == pipes), "{md}");
+        let mut piped = fake_result();
+        piped.axes.clear();
+        piped.points[0].point.label = "tp=2|pd".into();
+        let md = sweep_markdown(&piped);
+        let pipes = md.lines().next().unwrap().matches('|').count();
+        assert!(md.lines().all(|l| l.matches('|').count() == pipes), "{md}");
+        assert!(md.contains("tp=2/pd"), "{md}");
+        let csv = sweep_csv(&r);
+        let cols = csv.lines().next().unwrap().matches(',').count();
+        assert!(csv.lines().all(|l| l.matches(',').count() == cols), "{csv}");
+        assert!(csv.contains("boom; with a comma"), "commas sanitized: {csv}");
+        // header cells are sanitized too (a flag:<name> axis can carry
+        // arbitrary characters)
+        let mut odd = fake_result();
+        odd.axes = vec!["flag:a,b".into()];
+        let csv = sweep_csv(&odd);
+        let cols = csv.lines().next().unwrap().matches(',').count();
+        assert!(csv.lines().all(|l| l.matches(',').count() == cols), "{csv}");
+        assert!(csv.starts_with("a;b,"), "header sanitized: {csv}");
+    }
+
+    #[test]
+    fn json_embeds_deterministic_reports() {
+        let j = sweep_json(&fake_result());
+        let pts = j.req("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        let rep = pts[0].req("report").unwrap();
+        assert!(rep.get("host_duration_s").is_none(), "host time excluded");
+        assert_eq!(rep.req("tokens_per_sec_per_gpu").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(
+            pts[1].req("error").unwrap().as_str().unwrap(),
+            "boom, with a comma (a|b|c)",
+            "JSON carries the raw error; only table renderers sanitize"
+        );
+        assert_eq!(
+            pts[0].req("assigns").unwrap().req("capacity-factor").unwrap().as_str().unwrap(),
+            "1.25"
+        );
+    }
+
+    #[test]
+    fn explicit_grids_get_a_point_column() {
+        let mut r = fake_result();
+        r.axes.clear();
+        let md = sweep_markdown(&r);
+        assert!(md.contains("| point"));
+        assert!(md.contains("capacity-factor=1.25"));
+    }
+}

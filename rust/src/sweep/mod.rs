@@ -1,0 +1,679 @@
+//! Parallel design-space sweep engine.
+//!
+//! Frontier exists to *search* the deployment design space — PD ratios,
+//! capacity factors, EP cluster spans, migration thresholds — and with
+//! the per-draw hot path allocation-free, the bottleneck moved to the
+//! sweeps themselves, which all ran their configurations serially. This
+//! module turns a sweep into data plus a runner:
+//!
+//! * [`Axis`] — one named knob and its value list (`pd-ratio`, any
+//!   value-taking CLI flag, or `flag:<name>` to bypass validation);
+//! * [`SweepSpec`] — base flags + a [`Grid`] (cartesian axes or an
+//!   explicit point list) + an optional programmatic post-hook;
+//! * [`SweepRunner`] — fans the grid across scoped worker threads and
+//!   collects per-point reports **by grid index**, so the merged output
+//!   is byte-identical regardless of thread count (each point's config
+//!   carries its own seed, and the learned predictor's memo caches are
+//!   thread-local).
+//!
+//! Merged CSV / markdown / JSON rendering lives in
+//! [`crate::report::sweep`]; the `frontier sweep` subcommand, `frontier
+//! sweep-pd`, and the `ep_routing` / `capacity_search` examples are thin
+//! front-ends over this engine.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::cli::{build_config, is_value_flag, FlagMap, DRIVER_FLAGS};
+use crate::config::ExperimentConfig;
+use crate::metrics::SimReport;
+
+/// One sweep axis: a named knob and the values it takes, in order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Axis {
+    /// Axis name: `pd-ratio` (composite — one `P:D` value sets the
+    /// whole deployment shape), any value-taking CLI flag
+    /// (`capacity-factor`, `ep-clusters`, `migration-threshold`,
+    /// `seed`, ...), or `flag:<name>` to set an arbitrary flag without
+    /// registry validation.
+    pub name: String,
+    /// The values this axis sweeps, in grid order.
+    pub values: Vec<String>,
+}
+
+impl Axis {
+    /// Build an axis, validating the name against the flag registry and
+    /// rejecting empty value lists / empty values.
+    pub fn new(name: impl Into<String>, values: Vec<String>) -> Result<Axis> {
+        let name = name.into();
+        validate_axis_name(&name)?;
+        if values.is_empty() {
+            bail!("axis {name}: needs at least one value");
+        }
+        if values.iter().any(String::is_empty) {
+            bail!("axis {name}: empty value");
+        }
+        Ok(Axis { name, values })
+    }
+
+    /// Parse the CLI grammar `name=v1,v2,...`.
+    pub fn parse(spec: &str) -> Result<Axis> {
+        let (name, vals) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad axis {spec:?}: expected name=v1,v2,..."))?;
+        comma_grammar_guard(name)?;
+        Axis::new(name, vals.split(',').map(str::to_string).collect())
+    }
+}
+
+/// The comma-split CLI grammars ([`Axis::parse`], [`PointSpec::parse`])
+/// would mangle a value that itself contains commas, even behind the
+/// `flag:` escape — reject those names up front. [`Axis::new`] /
+/// [`PointSpec::new`] take values as a list and stay exempt (via
+/// `flag:<name>`).
+fn comma_grammar_guard(name: &str) -> Result<()> {
+    let bare = name.strip_prefix("flag:").unwrap_or(name);
+    if COMMA_VALUED_FLAGS.contains(&bare) {
+        bail!(
+            "axis {name:?}: {bare} values contain commas, which the comma-split CLI \
+             grammar cannot express — build the sweep programmatically with Axis::new \
+             (values arrive as a list) behind a flag:{bare} axis"
+        );
+    }
+    Ok(())
+}
+
+/// Flags whose values legitimately contain commas (the stage DSL, edge
+/// lists) — the `v1,v2,...` axis grammar cannot carry them, so they are
+/// rejected as bare axis names instead of silently splitting into a
+/// wrong grid. Programmatic sweeps can still vary them through
+/// `flag:<name>` axes built with [`Axis::new`], where values arrive as
+/// a `Vec` and are never comma-split.
+const COMMA_VALUED_FLAGS: &[&str] = &["stages", "stages-json", "edges"];
+
+fn validate_axis_name(name: &str) -> Result<()> {
+    // bare comma-valued names are rejected everywhere (the registry
+    // check below would otherwise accept them); the single error
+    // message lives in comma_grammar_guard, which the comma-split
+    // grammars additionally run against flag:-prefixed forms
+    if COMMA_VALUED_FLAGS.contains(&name) {
+        return comma_grammar_guard(name);
+    }
+    if name == "pd-ratio" || is_value_flag(name) {
+        return Ok(());
+    }
+    if let Some(f) = name.strip_prefix("flag:") {
+        if f.is_empty() {
+            bail!("axis flag:<name> needs a flag name");
+        }
+        if DRIVER_FLAGS.contains(&f) {
+            bail!(
+                "axis {name:?}: --{f} is a driver-level flag the config lowering never \
+                 reads — sweeping it would be silently ignored"
+            );
+        }
+        return Ok(());
+    }
+    bail!(
+        "unknown axis {name:?}: use pd-ratio, a value-taking CLI flag \
+         (capacity-factor, ep-clusters, migration-threshold, seed, ...), \
+         or flag:<name> to bypass validation"
+    )
+}
+
+/// The flags an axis name touches: `pd-ratio` writes the deployment
+/// shape AND clears the stage-graph overrides, `flag:<name>` strips its
+/// prefix, everything else maps to itself. The duplicate-axis guard
+/// compares these targets, so aliased axes (`seed` vs `flag:seed`,
+/// `prefill` vs `pd-ratio`, a programmatic `flag:stages` vs `pd-ratio`)
+/// cannot silently shadow or wipe each other.
+fn axis_targets(name: &str) -> Vec<&str> {
+    if name == "pd-ratio" {
+        vec!["mode", "prefill", "decode", "stages", "stages-json", "edges"]
+    } else {
+        vec![name.strip_prefix("flag:").unwrap_or(name)]
+    }
+}
+
+/// Apply one `axis = value` assignment to a flag map. `pd-ratio` is the
+/// composite axis: a `P:D` value takes over the deployment shape
+/// (clearing any `--stages` override, exactly as the old `sweep-pd`
+/// loop did); everything else sets the flag of the same name.
+fn apply_assignment(name: &str, value: &str, flags: &mut FlagMap) -> Result<()> {
+    if let Some(f) = name.strip_prefix("flag:") {
+        validate_axis_name(name)?;
+        flags.set(f, value);
+        return Ok(());
+    }
+    if name == "pd-ratio" {
+        let (p, d) = value
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad pd-ratio {value:?}: expected P:D"))?;
+        let p: u32 = p.parse().map_err(|_| anyhow!("bad pd-ratio prefill count {p:?}"))?;
+        let d: u32 = d.parse().map_err(|_| anyhow!("bad pd-ratio decode count {d:?}"))?;
+        if p == 0 || d == 0 {
+            bail!("pd-ratio {value:?}: both sides must be >= 1");
+        }
+        // the axis owns the deployment shape
+        for k in ["stages", "stages-json", "edges"] {
+            flags.remove(k);
+        }
+        flags.set("mode", "pd");
+        flags.set("prefill", p.to_string());
+        flags.set("decode", d.to_string());
+        return Ok(());
+    }
+    validate_axis_name(name)?;
+    flags.set(name, value);
+    Ok(())
+}
+
+/// One explicit grid point: axis-style assignments (same key grammar as
+/// [`Axis`] names) plus an optional display label.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointSpec {
+    /// Display label; defaults to `k=v k2=v2 ...` when absent.
+    pub label: Option<String>,
+    /// `(axis name, value)` assignments, applied in order.
+    pub assigns: Vec<(String, String)>,
+}
+
+impl PointSpec {
+    /// A point from raw assignments (label auto-derived).
+    pub fn new(assigns: Vec<(String, String)>) -> PointSpec {
+        PointSpec { label: None, assigns }
+    }
+
+    /// Parse the CLI grammar `k=v[,k2=v2...]`. Keys get the same
+    /// up-front typo validation as [`Axis`] names.
+    pub fn parse(spec: &str) -> Result<PointSpec> {
+        let assigns = spec
+            .split(',')
+            .map(|kv| {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("bad point assignment {kv:?}: expected key=value"))?;
+                if k.is_empty() || v.is_empty() {
+                    bail!("bad point assignment {kv:?}: empty key or value");
+                }
+                comma_grammar_guard(k)?;
+                validate_axis_name(k)?;
+                Ok((k.to_string(), v.to_string()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if assigns.is_empty() {
+            bail!("empty point spec");
+        }
+        Ok(PointSpec::new(assigns))
+    }
+
+    /// Attach a display label.
+    pub fn with_label(mut self, label: impl Into<String>) -> PointSpec {
+        self.label = Some(label.into());
+        self
+    }
+}
+
+/// The sweep grid: a cartesian product of axes, or an explicit list of
+/// points (for derived spaces a product cannot express, e.g. replica
+/// counts computed from the tp degree).
+#[derive(Clone, Debug)]
+pub enum Grid {
+    /// Cartesian product; the first axis varies slowest.
+    Cartesian(Vec<Axis>),
+    /// Explicit point list, run in the given order.
+    Explicit(Vec<PointSpec>),
+}
+
+/// Programmatic hook applied to every materialized config after flag
+/// lowering — for knobs the flag layer cannot express (e.g. a custom
+/// workload length distribution). Must be thread-safe: the runner calls
+/// it from its workers.
+pub type PostHook = Box<dyn Fn(&mut ExperimentConfig) + Send + Sync>;
+
+/// A full sweep: base flags, the grid, and an optional post-hook.
+pub struct SweepSpec {
+    /// Flags shared by every grid point (the `frontier sweep` command
+    /// line minus the driver-control flags).
+    pub base: FlagMap,
+    /// The grid to materialize.
+    pub grid: Grid,
+    /// Applied to each point's built config before the run.
+    pub post: Option<PostHook>,
+}
+
+/// One materialized grid point. `index` is the deterministic grid
+/// position results are collected by.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPoint {
+    /// Position in grid order (cartesian row-major / explicit list
+    /// order).
+    pub index: usize,
+    /// `(axis name, value)` assignments of this point.
+    pub assigns: Vec<(String, String)>,
+    /// Display label (`k=v k2=v2 ...` unless overridden).
+    pub label: String,
+}
+
+impl SweepSpec {
+    /// A sweep over `base` with an empty cartesian grid; add axes or
+    /// points with [`SweepSpec::with_axes`] / [`SweepSpec::with_points`].
+    pub fn new(base: FlagMap) -> SweepSpec {
+        SweepSpec { base, grid: Grid::Cartesian(Vec::new()), post: None }
+    }
+
+    /// Use a cartesian grid over `axes`.
+    pub fn with_axes(mut self, axes: Vec<Axis>) -> SweepSpec {
+        self.grid = Grid::Cartesian(axes);
+        self
+    }
+
+    /// Use an explicit point list.
+    pub fn with_points(mut self, points: Vec<PointSpec>) -> SweepSpec {
+        self.grid = Grid::Explicit(points);
+        self
+    }
+
+    /// Install a programmatic post-hook (see [`PostHook`]).
+    pub fn with_post(mut self, post: PostHook) -> SweepSpec {
+        self.post = Some(post);
+        self
+    }
+
+    /// Axis names of a cartesian grid (table headers); empty for
+    /// explicit point lists.
+    pub fn axis_names(&self) -> Vec<String> {
+        match &self.grid {
+            Grid::Cartesian(axes) => axes.iter().map(|a| a.name.clone()).collect(),
+            Grid::Explicit(_) => Vec::new(),
+        }
+    }
+
+    /// Materialize the grid in deterministic order: cartesian products
+    /// are row-major (first axis slowest, last fastest), explicit lists
+    /// keep their order.
+    pub fn points(&self) -> Result<Vec<SweepPoint>> {
+        match &self.grid {
+            Grid::Cartesian(axes) => {
+                if axes.is_empty() {
+                    bail!("empty sweep: add at least one axis or point");
+                }
+                let mut seen = std::collections::BTreeSet::new();
+                for ax in axes {
+                    for target in axis_targets(&ax.name) {
+                        if !seen.insert(target) {
+                            bail!(
+                                "axis {:?} writes flag --{target}, which an earlier axis \
+                                 already sweeps: later assignments would silently shadow it",
+                                ax.name
+                            );
+                        }
+                    }
+                }
+                let total: usize = axes.iter().map(|a| a.values.len()).product();
+                if total == 0 {
+                    // only reachable by hand-building an Axis with an
+                    // empty values list (the fields are pub); running
+                    // nothing must not look like success
+                    bail!("empty sweep: an axis has no values");
+                }
+                let mut pts = Vec::with_capacity(total);
+                for index in 0..total {
+                    let mut rem = index;
+                    let mut assigns = Vec::with_capacity(axes.len());
+                    for ax in axes.iter().rev() {
+                        assigns.push((ax.name.clone(), ax.values[rem % ax.values.len()].clone()));
+                        rem /= ax.values.len();
+                    }
+                    assigns.reverse();
+                    let label = join_assigns(&assigns);
+                    pts.push(SweepPoint { index, assigns, label });
+                }
+                Ok(pts)
+            }
+            Grid::Explicit(points) => {
+                if points.is_empty() {
+                    bail!("empty sweep: add at least one axis or point");
+                }
+                for p in points {
+                    let mut seen = std::collections::BTreeSet::new();
+                    for (k, _) in &p.assigns {
+                        for target in axis_targets(k) {
+                            if !seen.insert(target) {
+                                bail!(
+                                    "point {:?}: key {k:?} writes flag --{target}, which \
+                                     an earlier key already set — it would silently \
+                                     shadow that assignment",
+                                    p.label.as_deref().unwrap_or(&join_assigns(&p.assigns))
+                                );
+                            }
+                        }
+                    }
+                }
+                Ok(points
+                    .iter()
+                    .enumerate()
+                    .map(|(index, p)| SweepPoint {
+                        index,
+                        assigns: p.assigns.clone(),
+                        label: p.label.clone().unwrap_or_else(|| join_assigns(&p.assigns)),
+                    })
+                    .collect())
+            }
+        }
+    }
+
+    /// Lower one grid point onto a runnable config: base flags + the
+    /// point's assignments through [`build_config`], then the post-hook.
+    /// This is exactly the `frontier simulate` lowering, which is why a
+    /// one-point sweep bit-reproduces a plain run (`rust/tests/sweep.rs`).
+    pub fn point_config(&self, point: &SweepPoint) -> Result<ExperimentConfig> {
+        let mut flags = self.base.clone();
+        for (name, value) in &point.assigns {
+            apply_assignment(name, value, &mut flags)?;
+        }
+        let mut cfg = build_config(&flags)?;
+        if let Some(post) = &self.post {
+            post(&mut cfg);
+        }
+        Ok(cfg)
+    }
+}
+
+/// Debug repr of a config with fields the runtime never reads
+/// normalized away, so the no-op-sweep guard compares what actually
+/// runs: an explicit stage graph makes the legacy `mode` (and with it
+/// `--replicas`/`--prefill`/`--decode`) dead, yet those flags still
+/// land in the struct.
+fn comparable_repr(cfg: &ExperimentConfig) -> String {
+    let mut c = cfg.clone();
+    if c.stages.is_some() {
+        c.mode = crate::config::DeploymentMode::Colocated { replicas: 0 };
+    }
+    format!("{c:?}")
+}
+
+fn join_assigns(assigns: &[(String, String)]) -> String {
+    assigns
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Result of one grid point: the report, or the error that stopped it
+/// (an impossible flag combination, say) — one bad point never aborts
+/// the rest of the sweep.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    /// The grid point this result belongs to.
+    pub point: SweepPoint,
+    /// The run's report, or the config/run error rendered as text.
+    pub outcome: Result<SimReport, String>,
+}
+
+/// A completed sweep: points in grid order, regardless of how many
+/// threads ran them.
+#[derive(Debug)]
+pub struct SweepResult {
+    /// Axis names of the cartesian grid (empty for explicit lists).
+    pub axes: Vec<String>,
+    /// Per-point results, ordered by [`SweepPoint::index`].
+    pub points: Vec<PointResult>,
+}
+
+/// Fans grid points across scoped worker threads. Workers pull the next
+/// unclaimed grid index from a shared counter and write the result into
+/// that index's slot, so the collected output is ordered by grid index
+/// and byte-identical for any thread count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepRunner {
+    /// Worker threads; `0` (the default) means one per available core.
+    pub threads: usize,
+}
+
+impl SweepRunner {
+    /// A runner with an explicit thread count (`0` = all cores).
+    pub fn with_threads(threads: usize) -> SweepRunner {
+        SweepRunner { threads }
+    }
+
+    fn resolved_threads(&self, points: usize) -> usize {
+        let t = match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
+        t.clamp(1, points.max(1))
+    }
+
+    /// Run every grid point and collect the reports in grid order.
+    /// Deterministic by construction: each point's config carries its
+    /// own seed, `run_experiment` shares no mutable state across runs
+    /// (the learned predictor's memo caches are thread-local), and
+    /// results land in per-index slots.
+    pub fn run(&self, spec: &SweepSpec) -> Result<SweepResult> {
+        let points = spec.points()?;
+        // a grid where EVERY point lowers to the same config is a
+        // silent no-op — e.g. a `replicas` axis under a `--stages` base
+        // that never reads it, or a `prefill` axis under colocated
+        // mode. Lowering is cheap (flag parsing, no simulation), so
+        // check before burning the grid; any per-point lowering error
+        // skips the check and surfaces normally as an error row.
+        if points.len() > 1 {
+            let lowered: Vec<_> = points.iter().map(|p| spec.point_config(p)).collect();
+            if lowered.iter().all(|c| c.is_ok()) {
+                let mut reprs =
+                    lowered.iter().map(|c| comparable_repr(c.as_ref().unwrap()));
+                let first = reprs.next().unwrap();
+                if reprs.all(|r| r == first) {
+                    bail!(
+                        "sweep is a no-op: every grid point lowers to an identical \
+                         config — the swept flags are not read under this base \
+                         (e.g. a deployment-shape axis under a --stages override)"
+                    );
+                }
+            }
+        }
+        let threads = self.resolved_threads(points.len());
+        let run_point = |p: &SweepPoint| -> PointResult {
+            let outcome = spec
+                .point_config(p)
+                .and_then(|cfg| crate::run_experiment(&cfg))
+                .map_err(|e| format!("{e:#}"));
+            PointResult { point: p.clone(), outcome }
+        };
+        let results: Vec<PointResult> = if threads == 1 {
+            points.iter().map(run_point).collect()
+        } else {
+            let next = AtomicUsize::new(0);
+            let slots: Vec<Mutex<Option<PointResult>>> =
+                points.iter().map(|_| Mutex::new(None)).collect();
+            std::thread::scope(|s| {
+                for _ in 0..threads {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= points.len() {
+                            break;
+                        }
+                        *slots[i].lock().unwrap() = Some(run_point(&points[i]));
+                    });
+                }
+            });
+            slots
+                .into_iter()
+                .map(|m| m.into_inner().unwrap().expect("every grid slot is filled"))
+                .collect()
+        };
+        Ok(SweepResult { axes: spec.axis_names(), points: results })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_parse_and_validation() {
+        let a = Axis::parse("capacity-factor=1.0,1.25").unwrap();
+        assert_eq!(a.name, "capacity-factor");
+        assert_eq!(a.values, ["1.0".to_string(), "1.25".to_string()]);
+        assert!(Axis::parse("pd-ratio=1:1,2:2").is_ok());
+        assert!(Axis::parse("flag:whatever=1").is_ok(), "flag: bypasses the registry");
+        assert!(Axis::parse("not-a-flag=1").is_err());
+        assert!(Axis::parse("no-equals").is_err());
+        assert!(Axis::parse("seed=").is_err(), "empty value");
+        assert!(Axis::parse("flag:=1").is_err(), "flag: needs a name");
+        // driver-level flags are ignored by the config lowering, so the
+        // escape hatch must not sweep them either
+        assert!(Axis::parse("flag:trace=a.json").is_err());
+        assert!(Axis::new("flag:threads", vec!["2".into()]).is_err());
+        assert!(Axis::new("seed", Vec::new()).is_err(), "empty value list");
+        // comma-valued flags cannot ride the comma-split grammar, even
+        // behind the flag: escape — only the list-valued API may carry
+        // them
+        assert!(Axis::parse("stages=prefill:2,tp=2").is_err());
+        assert!(Axis::parse("flag:stages=prefill:2,tp=2").is_err());
+        assert!(Axis::new("edges", vec!["0>1".into()]).is_err());
+        assert!(Axis::new("flag:stages", vec!["prefill:2,tp=2".into()]).is_ok());
+    }
+
+    #[test]
+    fn pd_ratio_assignment_takes_the_shape() {
+        let mut flags = FlagMap::new();
+        flags.set("stages", "prefill:1;decode:1");
+        flags.set("edges", "0>1");
+        apply_assignment("pd-ratio", "3:5", &mut flags).unwrap();
+        assert!(!flags.has("stages") && !flags.has("edges"));
+        assert_eq!(flags.get("mode"), Some("pd"));
+        assert_eq!(flags.get("prefill"), Some("3"));
+        assert_eq!(flags.get("decode"), Some("5"));
+        assert!(apply_assignment("pd-ratio", "3", &mut flags).is_err());
+        assert!(apply_assignment("pd-ratio", "0:4", &mut flags).is_err());
+        assert!(apply_assignment("pd-ratio", "x:4", &mut flags).is_err());
+    }
+
+    #[test]
+    fn cartesian_points_are_row_major() {
+        let spec = SweepSpec::new(FlagMap::new()).with_axes(vec![
+            Axis::new("seed", vec!["1".into(), "2".into()]).unwrap(),
+            Axis::new("requests", vec!["8".into(), "16".into(), "32".into()]).unwrap(),
+        ]);
+        let pts = spec.points().unwrap();
+        let labels: Vec<&str> = pts.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(
+            labels,
+            [
+                "seed=1 requests=8",
+                "seed=1 requests=16",
+                "seed=1 requests=32",
+                "seed=2 requests=8",
+                "seed=2 requests=16",
+                "seed=2 requests=32",
+            ]
+        );
+        assert!(pts.iter().enumerate().all(|(i, p)| p.index == i));
+        assert_eq!(spec.axis_names(), ["seed".to_string(), "requests".to_string()]);
+    }
+
+    #[test]
+    fn empty_grids_are_rejected() {
+        assert!(SweepSpec::new(FlagMap::new()).points().is_err());
+        assert!(SweepSpec::new(FlagMap::new()).with_points(Vec::new()).points().is_err());
+    }
+
+    #[test]
+    fn shadowing_grids_are_rejected() {
+        // a duplicated axis would silently shadow its earlier twin
+        let dup = SweepSpec::new(FlagMap::new()).with_axes(vec![
+            Axis::new("seed", vec!["1".into(), "2".into()]).unwrap(),
+            Axis::new("seed", vec!["3".into(), "4".into()]).unwrap(),
+        ]);
+        assert!(dup.points().is_err());
+        // aliases shadow through their written flags: flag:seed == seed,
+        // pd-ratio writes mode/prefill/decode
+        let dup = SweepSpec::new(FlagMap::new()).with_axes(vec![
+            Axis::new("seed", vec!["1".into()]).unwrap(),
+            Axis::new("flag:seed", vec!["9".into()]).unwrap(),
+        ]);
+        assert!(dup.points().is_err());
+        let dup = SweepSpec::new(FlagMap::new()).with_axes(vec![
+            Axis::new("prefill", vec!["2".into()]).unwrap(),
+            Axis::new("pd-ratio", vec!["1:7".into()]).unwrap(),
+        ]);
+        assert!(dup.points().is_err());
+        // pd-ratio also CLEARS the stage-graph flags, so a programmatic
+        // flag:stages axis composed with it would be silently wiped
+        let dup = SweepSpec::new(FlagMap::new()).with_axes(vec![
+            Axis::new("flag:stages", vec!["prefill:1;decode:1".into()]).unwrap(),
+            Axis::new("pd-ratio", vec!["1:7".into()]).unwrap(),
+        ]);
+        assert!(dup.points().is_err());
+        // same for duplicate keys inside one explicit point
+        let dup = SweepSpec::new(FlagMap::new()).with_points(vec![PointSpec::new(vec![
+            ("seed".into(), "1".into()),
+            ("seed".into(), "2".into()),
+        ])]);
+        assert!(dup.points().is_err());
+        // distinct flags still compose
+        let ok = SweepSpec::new(FlagMap::new()).with_axes(vec![
+            Axis::new("seed", vec!["1".into()]).unwrap(),
+            Axis::new("pd-ratio", vec!["1:7".into()]).unwrap(),
+        ]);
+        assert!(ok.points().is_ok());
+    }
+
+    #[test]
+    fn point_spec_parse_and_labels() {
+        let p = PointSpec::parse("seed=3,max-batch=8").unwrap();
+        assert_eq!(
+            p.assigns,
+            [("seed".to_string(), "3".to_string()), ("max-batch".to_string(), "8".to_string())]
+        );
+        assert!(PointSpec::parse("seed").is_err());
+        assert!(PointSpec::parse("=3").is_err());
+        assert!(PointSpec::parse("not-a-flag=3").is_err(), "point keys get axis validation");
+        assert!(PointSpec::parse("flag:not-a-flag=3").is_ok());
+        assert!(PointSpec::parse("pd-ratio=1:3").is_ok());
+        assert!(PointSpec::parse("flag:stages=x").is_err(), "comma-valued even behind flag:");
+        let spec = SweepSpec::new(FlagMap::new())
+            .with_points(vec![p.with_label("small"), PointSpec::parse("seed=4").unwrap()]);
+        let pts = spec.points().unwrap();
+        assert_eq!(pts[0].label, "small");
+        assert_eq!(pts[1].label, "seed=4");
+        assert!(spec.axis_names().is_empty());
+    }
+
+    #[test]
+    fn no_op_sweeps_are_rejected() {
+        // a --stages base makes the legacy shape flags dead: a replicas
+        // axis under it lowers every point to the same running config
+        let mut base = FlagMap::new();
+        base.set("model", "tiny");
+        base.set("stages", "prefill:1;decode:1");
+        base.set("requests", "8");
+        let spec = SweepSpec::new(base.clone())
+            .with_axes(vec![Axis::new("replicas", vec!["1".into(), "2".into()]).unwrap()]);
+        assert!(SweepRunner::with_threads(1).run(&spec).is_err());
+        // a live axis under the same base still runs
+        let spec = SweepSpec::new(base)
+            .with_axes(vec![Axis::new("seed", vec!["1".into(), "2".into()]).unwrap()]);
+        assert!(SweepRunner::with_threads(1).run(&spec).is_ok());
+    }
+
+    #[test]
+    fn point_config_applies_base_axes_and_post() {
+        let mut base = FlagMap::new();
+        base.set("model", "tiny");
+        base.set("replicas", "2");
+        let spec = SweepSpec::new(base)
+            .with_axes(vec![Axis::new("seed", vec!["9".into()]).unwrap()])
+            .with_post(Box::new(|cfg| cfg.policy.kv_reserve_frac = 0.25));
+        let pts = spec.points().unwrap();
+        let cfg = spec.point_config(&pts[0]).unwrap();
+        assert_eq!(cfg.model.name, "tiny-1B");
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.policy.kv_reserve_frac, 0.25, "post-hook ran last");
+    }
+}

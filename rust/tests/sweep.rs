@@ -1,0 +1,175 @@
+//! Sweep-engine integration tests: merged reports byte-identical across
+//! thread counts, stable grid ordering, single-point parity with the
+//! `frontier simulate` config lowering, and per-point error isolation.
+
+use frontier::config::cli::{build_config, FlagMap};
+use frontier::config::DeploymentMode;
+use frontier::report::sweep::{sweep_csv, sweep_json, sweep_markdown};
+use frontier::sweep::{Axis, PointSpec, SweepRunner, SweepSpec};
+
+/// Cheap dense base: 2 tiny replicas, small batch workload.
+fn tiny_base() -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("replicas", "2");
+    f.set("requests", "24");
+    f.set("input", "32");
+    f.set("output", "16");
+    f
+}
+
+/// Cheap MoE base: one tiny-moe replica with a 2-rank EP domain.
+fn moe_base() -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "tiny-moe");
+    f.set("replicas", "1");
+    f.set("ep", "2");
+    f.set("requests", "16");
+    f.set("input", "32");
+    f.set("output", "8");
+    f
+}
+
+fn seed_axis(values: &[&str]) -> Axis {
+    Axis::new("seed", values.iter().map(|s| s.to_string()).collect()).unwrap()
+}
+
+#[test]
+fn multithreaded_sweep_is_byte_identical_to_serial() {
+    let spec = SweepSpec::new(tiny_base()).with_axes(vec![
+        seed_axis(&["1", "2", "3"]),
+        Axis::new("requests", vec!["8".into(), "16".into()]).unwrap(),
+    ]);
+    let r1 = SweepRunner::with_threads(1).run(&spec).unwrap();
+    let r4 = SweepRunner::with_threads(4).run(&spec).unwrap();
+    assert_eq!(
+        sweep_json(&r1).to_string_pretty(),
+        sweep_json(&r4).to_string_pretty(),
+        "merged JSON must not depend on thread count"
+    );
+    assert_eq!(sweep_csv(&r1), sweep_csv(&r4));
+    assert_eq!(sweep_markdown(&r1), sweep_markdown(&r4));
+    // oversubscribed runner (more threads than points) and the
+    // all-cores default resolve to the same bytes too
+    let r9 = SweepRunner::with_threads(9).run(&spec).unwrap();
+    assert_eq!(sweep_json(&r1).to_string_pretty(), sweep_json(&r9).to_string_pretty());
+    let rd = SweepRunner::default().run(&spec).unwrap();
+    assert_eq!(sweep_json(&r1).to_string_pretty(), sweep_json(&rd).to_string_pretty());
+}
+
+#[test]
+fn grid_ordering_is_stable_and_row_major() {
+    let spec = SweepSpec::new(tiny_base()).with_axes(vec![
+        seed_axis(&["1", "2"]),
+        Axis::new("requests", vec!["8".into(), "12".into(), "16".into()]).unwrap(),
+    ]);
+    let pts = spec.points().unwrap();
+    let labels: Vec<&str> = pts.iter().map(|p| p.label.as_str()).collect();
+    assert_eq!(
+        labels,
+        [
+            "seed=1 requests=8",
+            "seed=1 requests=12",
+            "seed=1 requests=16",
+            "seed=2 requests=8",
+            "seed=2 requests=12",
+            "seed=2 requests=16",
+        ]
+    );
+    // the runner's output preserves exactly this order
+    let run = SweepRunner::with_threads(3).run(&spec).unwrap();
+    let got: Vec<&str> = run.points.iter().map(|p| p.point.label.as_str()).collect();
+    assert_eq!(got, labels);
+    assert!(run.points.iter().enumerate().all(|(i, p)| p.point.index == i));
+}
+
+#[test]
+fn single_point_sweep_bit_reproduces_simulate_lowering() {
+    // a one-value axis through the sweep engine must price exactly what
+    // `frontier simulate` prices for the same flags
+    let mut flags = moe_base();
+    flags.set("routing", "skewed:0.3");
+    let spec = SweepSpec::new(flags.clone())
+        .with_axes(vec![Axis::new("capacity-factor", vec!["1.25".into()]).unwrap()]);
+    let swept = SweepRunner::with_threads(2).run(&spec).unwrap();
+    assert_eq!(swept.points.len(), 1);
+    let from_sweep = swept.points[0].outcome.as_ref().unwrap().to_json_deterministic();
+
+    flags.set("capacity-factor", "1.25");
+    let direct = frontier::run_experiment(&build_config(&flags).unwrap()).unwrap();
+    assert_eq!(
+        direct.to_json_deterministic().to_string_pretty(),
+        from_sweep.to_string_pretty(),
+        "sweep lowering diverged from the simulate lowering"
+    );
+}
+
+#[test]
+fn pd_ratio_axis_owns_the_deployment_shape() {
+    let mut base = tiny_base();
+    base.set("stages", "prefill:1;decode:1"); // the axis must clear this
+    let spec = SweepSpec::new(base)
+        .with_axes(vec![Axis::new("pd-ratio", vec!["1:3".into(), "2:2".into()]).unwrap()]);
+    let pts = spec.points().unwrap();
+    let cfg0 = spec.point_config(&pts[0]).unwrap();
+    assert!(cfg0.stages.is_none(), "pd-ratio takes over an explicit stage graph");
+    assert_eq!(
+        cfg0.mode,
+        DeploymentMode::PdDisagg { prefill_replicas: 1, decode_replicas: 3 }
+    );
+    let cfg1 = spec.point_config(&pts[1]).unwrap();
+    assert_eq!(
+        cfg1.mode,
+        DeploymentMode::PdDisagg { prefill_replicas: 2, decode_replicas: 2 }
+    );
+}
+
+#[test]
+fn per_point_errors_do_not_abort_the_sweep() {
+    // tiny-moe has 8 experts: ep=3 cannot shard them, ep=2 can
+    let mut base = moe_base();
+    base.remove("ep");
+    let spec = SweepSpec::new(base)
+        .with_axes(vec![Axis::new("ep", vec!["3".into(), "2".into()]).unwrap()]);
+    let r = SweepRunner::with_threads(2).run(&spec).unwrap();
+    assert_eq!(r.points.len(), 2);
+    assert!(r.points[0].outcome.is_err(), "8 experts cannot shard over ep=3");
+    assert!(r.points[1].outcome.is_ok(), "the good point still ran");
+    let csv = sweep_csv(&r);
+    assert!(csv.contains("error"), "{csv}");
+    let cols = csv.lines().next().unwrap().matches(',').count();
+    assert!(
+        csv.lines().all(|l| l.matches(',').count() == cols),
+        "error rows keep the CSV rectangular: {csv}"
+    );
+    // JSON carries the error string in place of the report
+    let j = sweep_json(&r);
+    let pts = j.req("points").unwrap().as_arr().unwrap();
+    assert!(pts[0].get("error").is_some() && pts[0].get("report").is_none());
+    assert!(pts[1].get("report").is_some() && pts[1].get("error").is_none());
+}
+
+#[test]
+fn explicit_points_run_with_labels() {
+    let spec = SweepSpec::new(tiny_base()).with_points(vec![
+        PointSpec::parse("seed=3,requests=8").unwrap().with_label("small"),
+        PointSpec::parse("seed=4").unwrap(),
+    ]);
+    let r = SweepRunner::with_threads(2).run(&spec).unwrap();
+    assert!(r.axes.is_empty());
+    assert_eq!(r.points[0].point.label, "small");
+    assert_eq!(r.points[1].point.label, "seed=4");
+    assert!(r.points.iter().all(|p| p.outcome.is_ok()));
+    let md = sweep_markdown(&r);
+    assert!(md.contains("point") && md.contains("small"), "{md}");
+}
+
+#[test]
+fn sweep_json_reports_are_deterministic_projections() {
+    let spec = SweepSpec::new(tiny_base()).with_axes(vec![seed_axis(&["5"])]);
+    let r = SweepRunner::with_threads(1).run(&spec).unwrap();
+    let j = sweep_json(&r);
+    let rep = j.req("points").unwrap().as_arr().unwrap()[0].req("report").unwrap();
+    assert!(rep.get("host_duration_s").is_none(), "host time must not leak into sweep output");
+    assert!(rep.get("sim_duration_s").is_some());
+}
