@@ -22,6 +22,8 @@ fn workload() -> WorkloadSpec {
         output: LenDist::Fixed(64),
         n_requests: 48,
         seed: 7,
+        classes: vec![],
+        trace: None,
     }
 }
 
@@ -42,7 +44,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", r.tokens_per_sec_per_gpu()),
             format!(
                 "{:.1}",
-                frontier::metrics::percentile(&r.metrics.tbt, 50.0) * 1e3
+                r.metrics.tbt.quantile(50.0) * 1e3
             ),
         ]);
     }

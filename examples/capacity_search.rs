@@ -16,7 +16,7 @@
 //! ```
 
 use frontier::config::cli::FlagMap;
-use frontier::metrics::{pareto_frontier, percentile};
+use frontier::metrics::pareto_frontier;
 use frontier::report::markdown_table;
 use frontier::sweep::{PointSpec, SweepRunner, SweepSpec};
 
@@ -68,12 +68,12 @@ fn main() -> anyhow::Result<()> {
         match &pr.outcome {
             Ok(r) => {
                 let thr = r.tokens_per_sec_per_gpu();
-                let lat = percentile(&r.metrics.tbt, 99.0) * 1e3;
+                let lat = r.metrics.tbt.quantile(99.0) * 1e3;
                 rows.push(vec![
                     label.clone(),
                     format!("{thr:.1}"),
                     format!("{lat:.1}"),
-                    format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
+                    format!("{:.0}", r.metrics.ttft.quantile(99.0) * 1e3),
                 ]);
                 pareto_points.push((thr, lat, label));
             }

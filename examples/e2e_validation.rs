@@ -19,7 +19,6 @@
 //! ```
 
 use frontier::config::{ExperimentConfig, OverheadConfig};
-use frontier::metrics::percentile;
 use frontier::model::ModelConfig;
 use frontier::predictor::PredictorKind;
 use frontier::report::{csv, markdown_table};
@@ -36,6 +35,8 @@ fn workload(bs: u32, avg_in: u32, out: u32) -> WorkloadSpec {
         // enough waves to reach steady state at the target concurrency
         n_requests: bs * 6,
         seed: 0x7AB1E2,
+        classes: vec![],
+        trace: None,
     }
 }
 
@@ -135,11 +136,11 @@ fn main() -> anyhow::Result<()> {
     println!("{}", r.summary());
     println!(
         "\nTTFT p50/p90/p99: {:.0}/{:.0}/{:.0} ms | TBT p50/p99: {:.1}/{:.1} ms",
-        percentile(&r.metrics.ttft, 50.0) * 1e3,
-        percentile(&r.metrics.ttft, 90.0) * 1e3,
-        percentile(&r.metrics.ttft, 99.0) * 1e3,
-        percentile(&r.metrics.tbt, 50.0) * 1e3,
-        percentile(&r.metrics.tbt, 99.0) * 1e3,
+        r.metrics.ttft.quantile(50.0) * 1e3,
+        r.metrics.ttft.quantile(90.0) * 1e3,
+        r.metrics.ttft.quantile(99.0) * 1e3,
+        r.metrics.tbt.quantile(50.0) * 1e3,
+        r.metrics.tbt.quantile(99.0) * 1e3,
     );
     println!("\nTable 2 validation complete.");
     Ok(())

@@ -36,6 +36,8 @@ fn workload() -> WorkloadSpec {
         output: LenDist::Fixed(32),
         n_requests: 32,
         seed: 13,
+        classes: vec![],
+        trace: None,
     }
 }
 

@@ -10,7 +10,7 @@
 //! ```
 
 use frontier::config::{ExperimentConfig, PolicyConfig};
-use frontier::metrics::percentile;
+use frontier::metrics::SloSpec;
 use frontier::model::ModelConfig;
 use frontier::report::markdown_table;
 use frontier::workload::{Arrival, LenDist, WorkloadSpec};
@@ -22,6 +22,8 @@ fn workload(n: u32) -> WorkloadSpec {
         output: LenDist::LogNormal { mean: 128.0, sigma: 0.4 },
         n_requests: n,
         seed: 42,
+        classes: vec![],
+        trace: None,
     }
 }
 
@@ -32,14 +34,16 @@ fn main() -> anyhow::Result<()> {
     for prefill in 1..total_gpus {
         let decode = total_gpus - prefill;
         let cfg = ExperimentConfig::pd(ModelConfig::qwen2_7b(), prefill, decode)
-            .with_workload(workload(160));
+            .with_workload(workload(160))
+            // goodput = completions meeting TTFT <= 1 s and TBT <= 100 ms
+            .with_slo(SloSpec { ttft_s: Some(1.0), tbt_s: Some(0.1), e2e_s: None });
         let r = frontier::run_experiment(&cfg)?;
         rows.push(vec![
             format!("{prefill}:{decode}"),
             format!("{:.1}", r.tokens_per_sec_per_gpu()),
-            format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
-            format!("{:.1}", percentile(&r.metrics.tbt, 99.0) * 1e3),
-            format!("{:.2}", r.goodput(1.0, 0.1)),
+            format!("{:.0}", r.metrics.ttft.quantile(99.0) * 1e3),
+            format!("{:.1}", r.metrics.tbt.quantile(99.0) * 1e3),
+            format!("{:.2}", r.goodput()),
         ]);
     }
     println!(
@@ -60,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(vec![
             format!("{:.0}%", (1.0 - reserve) * 100.0),
             format!("{:.1}", r.tokens_per_sec_per_gpu()),
-            format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
+            format!("{:.0}", r.metrics.ttft.quantile(99.0) * 1e3),
             format!("{}", r.metrics.kv_transfers),
         ]);
     }

@@ -29,8 +29,8 @@ fn main() -> anyhow::Result<()> {
          p99 TBT {:.1} vs {:.1} ms",
         pd_report.tokens_per_sec_per_gpu(),
         report.tokens_per_sec_per_gpu(),
-        frontier::metrics::percentile(&pd_report.metrics.tbt, 99.0) * 1e3,
-        frontier::metrics::percentile(&report.metrics.tbt, 99.0) * 1e3,
+        pd_report.metrics.tbt.quantile(99.0) * 1e3,
+        report.metrics.tbt.quantile(99.0) * 1e3,
     );
     Ok(())
 }

@@ -9,7 +9,6 @@
 use frontier::cluster::StageKind;
 use frontier::config::{ExperimentConfig, StageConfig, StageGraphConfig};
 use frontier::hardware::GpuSpec;
-use frontier::metrics::percentile;
 use frontier::model::ModelConfig;
 use frontier::parallelism::Parallelism;
 use frontier::report::markdown_table;
@@ -22,6 +21,8 @@ fn workload(n: u32) -> WorkloadSpec {
         output: LenDist::Fixed(32),
         n_requests: n,
         seed: 13,
+        classes: vec![],
+        trace: None,
     }
 }
 
@@ -47,8 +48,8 @@ fn print_run(title: &str, r: &frontier::metrics::SimReport) {
         "  {:.2}s simulated | {:.1} tok/s/gpu | TTFT p99 {:.0} ms | TBT p99 {:.2} ms",
         r.sim_duration,
         r.tokens_per_sec_per_gpu(),
-        percentile(&r.metrics.ttft, 99.0) * 1e3,
-        percentile(&r.metrics.tbt, 99.0) * 1e3,
+        r.metrics.ttft.quantile(99.0) * 1e3,
+        r.metrics.tbt.quantile(99.0) * 1e3,
     );
     println!(
         "{}",
@@ -90,7 +91,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  vs homogeneous A800 PD: {:.2}s simulated, TTFT p99 {:.0} ms",
         r_homo.sim_duration,
-        percentile(&r_homo.metrics.ttft, 99.0) * 1e3
+        r_homo.metrics.ttft.quantile(99.0) * 1e3
     );
 
     // 3. Multi-decode fan-out: one prefill pool feeding two decode

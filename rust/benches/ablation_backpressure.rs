@@ -9,7 +9,6 @@
 
 use frontier::bench_util::{section, write_results};
 use frontier::config::{ExperimentConfig, PolicyConfig};
-use frontier::metrics::percentile;
 use frontier::model::ModelConfig;
 use frontier::report::{csv, markdown_table};
 use frontier::workload::{Arrival, LenDist, WorkloadSpec};
@@ -23,6 +22,8 @@ fn workload() -> WorkloadSpec {
         output: LenDist::Fixed(256),
         n_requests: 150,
         seed: 77,
+        classes: vec![],
+        trace: None,
     }
 }
 
@@ -39,16 +40,16 @@ fn main() {
         rows.push(vec![
             format!("{:.1}%", pool_frac * 100.0),
             format!("{:.2}", r.tokens_per_sec_per_gpu()),
-            format!("{:.0}", percentile(&r.metrics.ttft, 50.0) * 1e3),
-            format!("{:.0}", percentile(&r.metrics.ttft, 99.0) * 1e3),
-            format!("{:.1}", percentile(&r.metrics.tbt, 99.0) * 1e3),
+            format!("{:.0}", r.metrics.ttft.quantile(50.0) * 1e3),
+            format!("{:.0}", r.metrics.ttft.quantile(99.0) * 1e3),
+            format!("{:.1}", r.metrics.tbt.quantile(99.0) * 1e3),
             format!("{}", r.metrics.completed_requests),
         ]);
         csv_rows.push(vec![
             format!("{pool_frac:.3}"),
             format!("{:.4}", r.tokens_per_sec_per_gpu()),
-            format!("{:.4}", percentile(&r.metrics.ttft, 99.0)),
-            format!("{:.4}", percentile(&r.metrics.tbt, 99.0)),
+            format!("{:.4}", r.metrics.ttft.quantile(99.0)),
+            format!("{:.4}", r.metrics.tbt.quantile(99.0)),
         ]);
     }
     println!(
@@ -82,9 +83,9 @@ fn main() {
          a simulator without memory-availability signaling reports the first\n\
          number for the second system — {:.1}x optimistic on throughput.",
         free_r.tokens_per_sec_per_gpu(),
-        percentile(&free_r.metrics.ttft, 99.0) * 1e3,
+        free_r.metrics.ttft.quantile(99.0) * 1e3,
         tight_r.tokens_per_sec_per_gpu(),
-        percentile(&tight_r.metrics.ttft, 99.0) * 1e3,
+        tight_r.metrics.ttft.quantile(99.0) * 1e3,
         free_r.tokens_per_sec_per_gpu() / tight_r.tokens_per_sec_per_gpu()
     );
 }

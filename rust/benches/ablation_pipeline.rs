@@ -64,6 +64,8 @@ fn main() {
                 output: LenDist::Fixed(32),
                 n_requests: 32,
                 seed: 9,
+                classes: vec![],
+                trace: None,
             })
             .with_overhead(OverheadConfig::zero());
         let r = frontier::run_experiment(&cfg).unwrap();

@@ -88,6 +88,8 @@ fn main() {
                 output: LenDist::Fixed(64),
                 n_requests: 64,
                 seed: 5,
+                classes: vec![],
+                trace: None,
             });
         cfg.policy.moe_routing = RoutingPolicy::Skewed { alpha: 0.1 };
         cfg.policy.straggler_max = straggler;

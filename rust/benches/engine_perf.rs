@@ -28,6 +28,8 @@ fn big_workload(n: u32) -> WorkloadSpec {
         output: LenDist::LogNormal { mean: 96.0, sigma: 0.4 },
         n_requests: n,
         seed: 1,
+        classes: vec![],
+        trace: None,
     }
 }
 

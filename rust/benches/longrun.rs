@@ -1,0 +1,188 @@
+//! Bench: one full simulated traffic day at scale — the open-loop
+//! stress target of the workload/metrics subsystem.
+//!
+//! Drives the 4-class diurnal `traffic_day` mix (chat / RAG / agentic /
+//! batch) through a colocated deployment at 1e6 requests (50k in
+//! `BENCH_QUICK=1` mode) and reports simulated-events/sec, plus the
+//! properties the run exists to pin:
+//!
+//! * the day completes — every request is accounted for
+//!   (completed + rejected == offered);
+//! * collector memory stays O(1) in request count (t-digest centroids
+//!   and time-series buckets bounded, no raw sample vectors);
+//! * admission stays cheap at pathological queue depths (the SJF
+//!   full-queue drain+sort this PR removed made deep waiting queues
+//!   quadratic).
+//!
+//! Emits `target/bench_results/BENCH_longrun.json`; the blessed copy at
+//! the repo root arms the CI perf gate (`BENCH_BASELINE`). Wall-clock
+//! metrics gate only against a calibrated baseline; the request count
+//! is a two-sided drift alarm.
+
+use std::collections::VecDeque;
+
+use frontier::bench_util::{
+    bench, gate_against_baseline, quick, section, write_results, BaselineCheck,
+};
+use frontier::config::json::Json;
+use frontier::config::{ExperimentConfig, OverheadConfig};
+use frontier::core::SimTime;
+use frontier::metrics::{SloSpec, TS_MAX_BUCKETS};
+use frontier::model::ModelConfig;
+use frontier::scheduler::{admit, BatchPolicy, IterBudget, QueuedReq};
+use frontier::workload::WorkloadSpec;
+
+fn main() {
+    // ~500 simulated seconds of traffic day regardless of scale: the
+    // offered rate tracks the request count so both modes exercise the
+    // same concurrency regime
+    let n: u32 = if quick() { 50_000 } else { 1_000_000 };
+    let rate = n as f64 / 500.0;
+    let mut json: Vec<(&'static str, Json)> = Vec::new();
+    let calibrated = std::env::var_os("BENCH_CALIBRATED").is_some_and(|v| v == "1");
+    json.push(("calibrated", Json::Bool(calibrated)));
+    json.push(("quick", Json::Bool(quick())));
+
+    section(&format!("traffic day: {n} requests at {rate:.0} req/s offered"));
+    let cfg = ExperimentConfig::colocated(ModelConfig::tiny(), 8)
+        .with_workload(WorkloadSpec::traffic_day(rate, n))
+        .with_overhead(OverheadConfig::zero())
+        .with_slo(SloSpec { ttft_s: Some(2.0), tbt_s: Some(0.1), e2e_s: None });
+    // one timed run — at this scale a single pass is the measurement
+    let r = frontier::run_experiment(&cfg).unwrap();
+    println!(
+        "{} events in {:.2}s host = {:.0} ev/s | {} iterations | sim {:.1}s",
+        r.events_processed,
+        r.host_duration,
+        r.events_per_sec(),
+        r.metrics.iterations,
+        r.sim_duration,
+    );
+    println!(
+        "completed {} / rejected {} | goodput {:.1} req/s | SLO attainment {:.1}%",
+        r.metrics.completed_requests,
+        r.metrics.rejected_requests,
+        r.goodput(),
+        r.slo_attainment() * 100.0,
+    );
+
+    // the day must complete: every offered request accounted for
+    assert_eq!(
+        r.metrics.completed_requests + r.metrics.rejected_requests,
+        n as u64,
+        "requests lost by the simulation"
+    );
+    assert!(r.metrics.completed_requests > 0, "nothing completed");
+    // collector memory is O(1) in n: bounded digests, bounded
+    // time-series, and no raw sample retention
+    for (name, d) in [
+        ("ttft", &r.metrics.ttft),
+        ("tbt", &r.metrics.tbt),
+        ("e2e", &r.metrics.e2e),
+        ("norm_latency", &r.metrics.norm_latency),
+    ] {
+        assert!(
+            d.centroids() + d.buffered() <= 1024,
+            "{name} digest grew unbounded: {} centroids + {} buffered",
+            d.centroids(),
+            d.buffered()
+        );
+    }
+    assert!(r.metrics.timeseries.buckets.len() <= TS_MAX_BUCKETS);
+    assert!(r.metrics.raw.is_none(), "raw samples must be off by default");
+
+    json.push(("longrun_requests", Json::Num(n as f64)));
+    json.push(("longrun_completed", Json::Num(r.metrics.completed_requests as f64)));
+    json.push(("longrun_rejected", Json::Num(r.metrics.rejected_requests as f64)));
+    json.push(("longrun_events", Json::Num(r.events_processed as f64)));
+    json.push(("longrun_iterations", Json::Num(r.metrics.iterations as f64)));
+    json.push(("longrun_events_per_s", Json::Num(r.events_per_sec())));
+    json.push(("longrun_sim_s", Json::Num(r.sim_duration)));
+    json.push(("longrun_goodput_rps", Json::Num(r.goodput())));
+
+    section("admission at pathological queue depth");
+    let deep = 50_000usize;
+    let make_queue = || -> VecDeque<QueuedReq> {
+        (0..deep)
+            .map(|i| QueuedReq {
+                id: i as u64,
+                tokens_needed: ((i * 37) % 997) as u32 + 1,
+                blocks_needed: 1,
+                arrival: SimTime::from_secs_f64(i as f64 * 1e-3),
+            })
+            .collect()
+    };
+    let budget = IterBudget { max_batch: 256, ..IterBudget::default() };
+    // a full batch means admission is impossible: the call must return
+    // without touching the queue (the old SJF path drained and
+    // re-sorted all 50k entries here, every iteration)
+    let mut q = make_queue();
+    let blocked = bench("admit: blocked, 50k-deep queue", || {
+        let out = admit(BatchPolicy::Sjf, &mut q, budget.max_batch, &budget, u64::MAX);
+        assert!(out.is_empty());
+    });
+    assert_eq!(q.len(), deep, "blocked admission must leave the queue intact");
+    let sjf = bench("admit: SJF picks 256 of 50k", || {
+        let mut q = make_queue();
+        let out = admit(BatchPolicy::Sjf, &mut q, 0, &budget, u64::MAX);
+        std::hint::black_box(out.len());
+    });
+    json.push(("admit_blocked_mean_s", Json::Num(blocked.mean.as_secs_f64())));
+    json.push(("admit_sjf_deep_mean_s", Json::Num(sjf.mean.as_secs_f64())));
+
+    let current = Json::obj(json);
+    write_results("BENCH_longrun.json", &current.to_string_pretty());
+
+    gate_against_baseline(
+        &current,
+        &[
+            // scale drift alarm: the gate is meaningless if the bench
+            // silently runs a different day
+            BaselineCheck {
+                key: "longrun_requests",
+                higher_is_better: false,
+                tol: 0.0,
+                needs_calibration: false,
+                two_sided: true,
+            },
+            // deterministic counts: pinned once the baseline carries
+            // them (skipped with a notice until then)
+            BaselineCheck {
+                key: "longrun_events",
+                higher_is_better: false,
+                tol: 0.0,
+                needs_calibration: false,
+                two_sided: true,
+            },
+            BaselineCheck {
+                key: "longrun_completed",
+                higher_is_better: false,
+                tol: 0.0,
+                needs_calibration: false,
+                two_sided: true,
+            },
+            // wall-clock: calibrated baselines only
+            BaselineCheck {
+                key: "longrun_events_per_s",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: true,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "admit_blocked_mean_s",
+                higher_is_better: false,
+                tol: 0.5,
+                needs_calibration: true,
+                two_sided: false,
+            },
+            BaselineCheck {
+                key: "admit_sjf_deep_mean_s",
+                higher_is_better: false,
+                tol: 0.5,
+                needs_calibration: true,
+                two_sided: false,
+            },
+        ],
+    );
+}

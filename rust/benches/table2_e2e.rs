@@ -18,6 +18,8 @@ fn config(bs: u32, avg_in: u32, out: u32) -> ExperimentConfig {
             output: LenDist::Fixed(out),
             n_requests: bs * 6,
             seed: 0x7AB1E2,
+            classes: vec![],
+            trace: None,
         },
     );
     cfg.policy.budget.max_batch = ((bs + 3) / 4).max(1) as usize;

@@ -34,6 +34,7 @@ struct BReq {
     arrival: SimTime,
     input_len: u32,
     output_len: u32,
+    class: u16,
     prefilled: bool,
     decoded: u32,
     first_token: Option<SimTime>,
@@ -72,14 +73,20 @@ impl ReplicaCentricSim {
         cost.overhead = OverheadConfig::zero();
         let mut rng = Pcg64::new(self.cfg.seed);
         let mut metrics = MetricsCollector::default();
+        metrics.slo = self.cfg.slo;
+        metrics.class_names = self.cfg.workload.class_names();
+        if self.cfg.keep_raw_samples {
+            metrics.raw = Some(Box::default());
+        }
 
-        let trace = self.cfg.workload.generate();
+        let trace = self.cfg.workload.materialize()?;
         let mut reqs: Vec<BReq> = trace
             .iter()
             .map(|s| BReq {
                 arrival: s.arrival,
                 input_len: s.input_len,
                 output_len: s.output_len,
+                class: s.class,
                 prefilled: false,
                 decoded: 0,
                 first_token: None,
@@ -97,6 +104,7 @@ impl ReplicaCentricSim {
         while let Some(ev) = queue.pop() {
             match ev.kind {
                 Ev::Arrival(rid) => {
+                    metrics.record_arrival(queue.now().as_secs_f64());
                     // pure round-robin load balancing across the pool
                     let r = rr % n_replicas;
                     rr += 1;
@@ -120,13 +128,17 @@ impl ReplicaCentricSim {
                             rq.last_token = now;
                             metrics.prefill_tokens += rq.input_len as u64;
                             metrics.output_tokens += 1;
-                            metrics.ttft.push((now - rq.arrival).as_secs_f64());
+                            let (class, ttft) = (rq.class, (now - rq.arrival).as_secs_f64());
+                            metrics.record_ttft(class, ttft, now.as_secs_f64());
                         } else {
                             rq.decoded += 1;
                             metrics.output_tokens += 1;
-                            metrics.tbt.push((now - rq.last_token).as_secs_f64());
+                            let (class, tbt) = (rq.class, (now - rq.last_token).as_secs_f64());
+                            metrics.record_tbt(class, tbt, now.as_secs_f64());
+                            let rq = &mut reqs[rid as usize];
                             rq.last_token = now;
                         }
+                        let rq = &reqs[rid as usize];
                         if rq.decoded >= rq.output_len {
                             done.push(rid);
                         }
@@ -134,11 +146,20 @@ impl ReplicaCentricSim {
                     for rid in done {
                         let rq = &reqs[rid as usize];
                         let e2e = (now - rq.arrival).as_secs_f64();
-                        metrics.e2e.push(e2e);
-                        metrics
-                            .norm_latency
-                            .push(e2e / rq.output_len.max(1) as f64);
-                        metrics.completed_requests += 1;
+                        let ttft =
+                            rq.first_token.map_or(e2e, |ft| (ft - rq.arrival).as_secs_f64());
+                        let tbt_mean = match (rq.first_token, rq.decoded) {
+                            (Some(ft), d) if d > 1 => (now - ft).as_secs_f64() / (d - 1) as f64,
+                            _ => 0.0,
+                        };
+                        metrics.record_completion(
+                            rq.class,
+                            ttft,
+                            tbt_mean,
+                            e2e,
+                            rq.output_len,
+                            now.as_secs_f64(),
+                        );
                         replicas[r].running.retain(|&x| x != rid);
                     }
                     replicas[r].busy = false;

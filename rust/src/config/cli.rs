@@ -84,6 +84,10 @@ pub const VALUE_FLAGS: &[&str] = &[
     "input",
     "output",
     "rate",
+    "workload",
+    "slo-ttft",
+    "slo-tbt",
+    "slo-e2e",
     "seed",
 ];
 
@@ -292,14 +296,50 @@ pub fn build_config(a: &FlagMap) -> Result<ExperimentConfig> {
     let requests = a.num("requests", 256u32)?;
     let input = a.num("input", 128u32)?;
     let output = a.num("output", 128u32)?;
-    cfg.workload = match a.get("rate") {
-        Some(r) => WorkloadSpec::poisson(
-            r.parse().map_err(|_| anyhow!("bad --rate"))?,
-            requests,
-            input,
-            output,
-        ),
-        None => WorkloadSpec::table2(requests, input, output),
+    cfg.workload = match a.get("workload") {
+        Some(spec) => {
+            // a named mix (or trace replay) owns the whole workload
+            // shape; silently overlaying flat flags would misreport
+            // what actually ran
+            for flat in ["rate", "input", "output"] {
+                if a.has(flat) {
+                    bail!("--workload and --{flat} are mutually exclusive");
+                }
+            }
+            if spec.starts_with("trace:") && a.has("requests") {
+                bail!("--requests has no effect on a trace replay (--workload trace:FILE)");
+            }
+            WorkloadSpec::parse_spec(spec, requests)?.with_seed(a.num("seed", 1u64)?)
+        }
+        None => match a.get("rate") {
+            Some(r) => WorkloadSpec::poisson(
+                r.parse().map_err(|_| anyhow!("bad --rate"))?,
+                requests,
+                input,
+                output,
+            ),
+            None => WorkloadSpec::table2(requests, input, output),
+        },
+    };
+    let ms = |key: &str, a: &FlagMap| -> Result<Option<f64>> {
+        match a.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let ms: f64 =
+                    v.parse().map_err(|_| anyhow!("bad value for --{key}: {v:?}"))?;
+                Ok(Some(ms / 1e3))
+            }
+        }
+    };
+    cfg.slo = crate::metrics::SloSpec {
+        ttft_s: ms("slo-ttft", a)?,
+        tbt_s: ms("slo-tbt", a)?,
+        e2e_s: match a.get("slo-e2e") {
+            None => None,
+            Some(v) => {
+                Some(v.parse().map_err(|_| anyhow!("bad value for --slo-e2e: {v:?}"))?)
+            }
+        },
     };
     if let Some(r) = a.get("routing") {
         cfg.policy.moe_routing = crate::moe::RoutingPolicy::parse(r).ok_or_else(|| {
@@ -477,10 +517,67 @@ mod tests {
     }
 
     #[test]
+    fn workload_flag_lowers_presets_and_slos() {
+        let f = parse(&[
+            "--model",
+            "tiny",
+            "--workload",
+            "day:40",
+            "--requests",
+            "500",
+            "--slo-ttft",
+            "2000",
+            "--slo-tbt",
+            "150",
+            "--slo-e2e",
+            "60",
+        ])
+        .unwrap();
+        let cfg = build_config(&f).unwrap();
+        assert_eq!(cfg.workload.n_requests, 500);
+        assert_eq!(cfg.workload.classes.len(), 4, "traffic day is the 4-class mix");
+        // ttft/tbt are milliseconds on the CLI, e2e is seconds
+        assert_eq!(cfg.slo.ttft_s, Some(2.0));
+        assert_eq!(cfg.slo.tbt_s, Some(0.15));
+        assert_eq!(cfg.slo.e2e_s, Some(60.0));
+        assert!(cfg.validate().is_ok());
+        // single-class presets and bare names parse too
+        assert!(build_config(&parse(&["--workload", "chat:25"]).unwrap()).is_ok());
+        assert!(build_config(&parse(&["--workload", "agentic"]).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn workload_flag_conflicts_are_rejected() {
+        let mix = |extra: &[&str]| {
+            let mut v = vec!["--workload", "day"];
+            v.extend_from_slice(extra);
+            build_config(&parse(&v).unwrap())
+        };
+        assert!(mix(&["--rate", "10"]).is_err());
+        assert!(mix(&["--input", "64"]).is_err());
+        assert!(mix(&["--output", "64"]).is_err());
+        assert!(mix(&[]).is_ok());
+        // trace replay carries its own request count
+        let t = parse(&["--workload", "trace:w.json", "--requests", "8"]).unwrap();
+        assert!(build_config(&t).is_err());
+        assert!(build_config(&parse(&["--workload", "nope"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--slo-ttft", "abc"]).unwrap()).is_err());
+        assert!(
+            build_config(&parse(&["--slo-ttft", "-5"]).unwrap())
+                .unwrap()
+                .validate()
+                .is_err(),
+            "negative SLO lowers but fails validation"
+        );
+    }
+
+    #[test]
     fn value_flag_registry_matches_build_config() {
         assert!(is_value_flag("capacity-factor"));
         assert!(is_value_flag("seed"));
         assert!(is_value_flag("max-batch"));
+        assert!(is_value_flag("workload"), "workload mixes are a sweep axis");
+        assert!(is_value_flag("slo-ttft") && is_value_flag("slo-tbt") && is_value_flag("slo-e2e"));
         assert!(!is_value_flag("threads"), "driver flags are not sweepable");
         assert!(!is_value_flag("trace"), "trace replay is a simulate-only path");
         assert!(!is_value_flag("json"), "bool flags are not value flags");

@@ -12,6 +12,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::StageKind;
 use crate::hardware::{GpuSpec, LinkSpec};
+use crate::metrics::SloSpec;
 use crate::model::ModelConfig;
 use crate::moe::{MigrationPolicy, PlacementPolicy, RoutingFidelity, RoutingPolicy};
 use crate::network::HierSpec;
@@ -174,6 +175,14 @@ pub struct ExperimentConfig {
     pub predictor: PredictorKind,
     pub artifacts_dir: Option<PathBuf>,
     pub seed: u64,
+    /// TTFT/TBT/E2E objectives judged online at request completion
+    /// (`--slo-ttft`/`--slo-tbt`/`--slo-e2e`); drives goodput and
+    /// attainment in reports.
+    pub slo: SloSpec,
+    /// Keep raw per-request sample vectors alongside the streaming
+    /// digests (memory grows with request count — oracle tests and
+    /// offline analysis only).
+    pub keep_raw_samples: bool,
 }
 
 impl ExperimentConfig {
@@ -197,6 +206,8 @@ impl ExperimentConfig {
             predictor: PredictorKind::Oracle,
             artifacts_dir: None,
             seed: 1,
+            slo: SloSpec::default(),
+            keep_raw_samples: false,
         }
     }
 
@@ -231,6 +242,18 @@ impl ExperimentConfig {
 
     pub fn with_workload(mut self, w: WorkloadSpec) -> Self {
         self.workload = w;
+        self
+    }
+
+    /// Set the SLO thresholds (seconds) judged at request completion.
+    pub fn with_slo(mut self, slo: SloSpec) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    /// Keep raw per-request samples alongside the streaming digests.
+    pub fn with_raw_samples(mut self) -> Self {
+        self.keep_raw_samples = true;
         self
     }
 
@@ -371,9 +394,8 @@ impl ExperimentConfig {
 
     pub fn validate(&self) -> Result<()> {
         self.parallel.validate()?;
-        if self.workload.n_requests == 0 {
-            bail!("empty workload");
-        }
+        self.workload.validate()?;
+        self.slo.validate()?;
         if self.ep_clusters == 0 {
             bail!("ep_clusters must be >= 1");
         }

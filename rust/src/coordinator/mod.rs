@@ -161,6 +161,12 @@ pub struct GlobalController {
     /// Pending migration stall per (stage, replica), seconds: expert
     /// weight-transfer time charged to the replica's next iteration.
     pending_stall: Vec<Vec<f64>>,
+    /// Arrival-routing scratch, reused across requests: open-loop runs
+    /// see millions of arrivals and these used to be three fresh
+    /// allocations each.
+    scratch_slots: Vec<(usize, usize, u64)>,
+    scratch_loads: Vec<usize>,
+    scratch_free: Vec<u64>,
 }
 
 /// Convenience: build + run.
@@ -323,6 +329,12 @@ impl GlobalController {
             .map(|st| vec![SimTime::ZERO; st.cw.replicas.len()])
             .collect();
         let pending_stall = stages.iter().map(|st| vec![0.0f64; st.cw.replicas.len()]).collect();
+        let mut metrics = MetricsCollector::default();
+        metrics.slo = cfg.slo;
+        metrics.class_names = cfg.workload.class_names();
+        if cfg.keep_raw_samples {
+            metrics.raw = Some(Box::default());
+        }
         Ok(GlobalController {
             graph,
             queue: EventQueue::new(),
@@ -333,17 +345,21 @@ impl GlobalController {
             kv_out,
             fabric: HierFabric::new(cfg.hier_spec()),
             rng: Pcg64::new(cfg.seed),
-            metrics: MetricsCollector::default(),
+            metrics,
             pending_transfers: VecDeque::new(),
             iter_started,
             pending_stall,
+            scratch_slots: Vec::new(),
+            scratch_loads: Vec::new(),
+            scratch_free: Vec::new(),
             cfg,
         })
     }
 
-    /// Execute the configured workload to completion.
+    /// Execute the configured workload to completion (loading and
+    /// validating the trace file first when the workload replays one).
     pub fn run(self) -> Result<SimReport> {
-        let trace = self.cfg.workload.generate();
+        let trace = self.cfg.workload.materialize()?;
         self.run_with_trace(trace)
     }
 
@@ -428,15 +444,20 @@ impl GlobalController {
     }
 
     fn on_arrival(&mut self, rid: u64) {
+        self.metrics.record_arrival(self.queue.now().as_secs_f64());
         let (input_len, output_len) = {
             let rq = &self.reqs[rid as usize];
             (rq.spec.input_len, rq.spec.output_len)
         };
         let full_blocks = blocks_for_tokens(input_len + output_len);
         // collect admissible (stage, replica) slots across entry stages
-        let mut slots: Vec<(usize, usize, u64)> = Vec::new();
-        let mut loads: Vec<usize> = Vec::new();
-        let mut free: Vec<u64> = Vec::new();
+        // into reused scratch vectors (this path runs per arrival)
+        let mut slots = std::mem::take(&mut self.scratch_slots);
+        let mut loads = std::mem::take(&mut self.scratch_loads);
+        let mut free = std::mem::take(&mut self.scratch_free);
+        slots.clear();
+        loads.clear();
+        free.clear();
         for &s in &self.entry {
             let blocks_needed = match self.stages[s].cw.kind {
                 // co-located replicas hold KV for the whole lifetime
@@ -459,15 +480,22 @@ impl GlobalController {
                 free.push(rep.mem.free_blocks());
             }
         }
-        if slots.is_empty() {
+        let choice = if slots.is_empty() {
+            None
+        } else {
+            let mut rr = self.entry_rr;
+            let i = scheduler::route(self.cfg.policy.route, &loads, &free, &mut rr);
+            self.entry_rr = rr;
+            Some(slots[i])
+        };
+        self.scratch_slots = slots;
+        self.scratch_loads = loads;
+        self.scratch_free = free;
+        let Some((s, r, blocks_needed)) = choice else {
             self.reqs[rid as usize].state = ReqState::Rejected;
             self.metrics.rejected_requests += 1;
             return;
-        }
-        let mut rr = self.entry_rr;
-        let i = scheduler::route(self.cfg.policy.route, &loads, &free, &mut rr);
-        self.entry_rr = rr;
-        let (s, r, blocks_needed) = slots[i];
+        };
         let q = QueuedReq {
             id: rid,
             tokens_needed: input_len,
@@ -490,8 +518,11 @@ impl GlobalController {
         }
         self.metrics.iterations += 1;
 
-        let running: Vec<u64> = self.stages[s].cw.replicas[r].running.clone();
-        let chunks: Vec<u32> = self.stages[s].cw.replicas[r].iter_chunks.clone();
+        // take the batch vectors instead of cloning them: this handler
+        // runs once per iteration, and a 1e6-request day runs tens of
+        // millions of iterations
+        let running: Vec<u64> = std::mem::take(&mut self.stages[s].cw.replicas[r].running);
+        let chunks: Vec<u32> = std::mem::take(&mut self.stages[s].cw.replicas[r].iter_chunks);
         let mut finished: Vec<u64> = Vec::new();
         let mut to_transfer: Vec<u64> = Vec::new();
 
@@ -514,7 +545,10 @@ impl GlobalController {
                     rq.last_token = now;
                     rq.decoded = 1;
                     self.metrics.output_tokens += 1;
-                    self.metrics.ttft.push((now - rq.ts.arrival).as_secs_f64());
+                    let class = rq.spec.class;
+                    let ttft = (now - rq.ts.arrival).as_secs_f64();
+                    self.metrics.record_ttft(class, ttft, now.as_secs_f64());
+                    let rq = &mut self.reqs[rid as usize];
                     if rq.decoded >= output_len {
                         finished.push(rid);
                     } else if kind == StageKind::Prefill {
@@ -529,7 +563,10 @@ impl GlobalController {
                 let rq = &mut self.reqs[rid as usize];
                 rq.decoded += 1;
                 self.metrics.output_tokens += 1;
-                self.metrics.tbt.push((now - rq.last_token).as_secs_f64());
+                let class = rq.spec.class;
+                let tbt = (now - rq.last_token).as_secs_f64();
+                self.metrics.record_tbt(class, tbt, now.as_secs_f64());
+                let rq = &mut self.reqs[rid as usize];
                 rq.last_token = now;
                 self.stages[s].cw.replicas[r].tokens_processed += 1;
                 if rq.decoded >= output_len {
@@ -545,18 +582,39 @@ impl GlobalController {
                 rq.state = ReqState::Done;
                 rq.ts.done = Some(now);
                 let e2e = (now - rq.ts.arrival).as_secs_f64();
-                self.metrics.e2e.push(e2e);
-                self.metrics.norm_latency.push(e2e / rq.spec.output_len.max(1) as f64);
-                self.metrics.completed_requests += 1;
+                let ttft = rq.ts.first_token.map_or(e2e, |ft| (ft - rq.ts.arrival).as_secs_f64());
+                // mean inter-token gap over the request (SLO judgment)
+                let tbt_mean = match (rq.ts.first_token, rq.decoded) {
+                    (Some(ft), d) if d > 1 => (now - ft).as_secs_f64() / (d - 1) as f64,
+                    _ => 0.0,
+                };
+                let (class, output_len) = (rq.spec.class, rq.spec.output_len);
+                self.metrics.record_completion(
+                    class,
+                    ttft,
+                    tbt_mean,
+                    e2e,
+                    output_len,
+                    now.as_secs_f64(),
+                );
                 self.stages[s].cw.replicas[r].mem.free_request(rid);
-                self.stages[s].cw.replicas[r].running.retain(|&x| x != rid);
             }
         }
         // hand prefill-complete requests to the controller's transfer queue
         for &rid in &to_transfer {
             self.stages[s].cw.replicas[r].mem.free_request(rid);
-            self.stages[s].cw.replicas[r].running.retain(|&x| x != rid);
             self.pending_transfers.push_back((rid, s));
+        }
+        // give the batch vector back (minus retired ids), reusing its
+        // allocation for the next iteration
+        {
+            let repl = &mut self.stages[s].cw.replicas[r];
+            debug_assert!(repl.running.is_empty());
+            repl.running = running;
+            if !finished.is_empty() || !to_transfer.is_empty() {
+                repl.running
+                    .retain(|rid| !finished.contains(rid) && !to_transfer.contains(rid));
+            }
         }
         if !to_transfer.is_empty() || !finished.is_empty() {
             // memory availability changed: the downstream ClusterScheduler
@@ -749,15 +807,16 @@ impl GlobalController {
                 }
             }
         }
-        // build the batch shape
-        let running = self.stages[s].cw.replicas[r].running.clone();
-        if running.is_empty() {
+        // build the batch shape (reading the running set in place — the
+        // pre-digest code cloned it every iteration)
+        if self.stages[s].cw.replicas[r].running.is_empty() {
             return;
         }
         let mut shape = BatchShape::default();
-        let mut chunks = Vec::with_capacity(running.len());
+        let mut chunks = std::mem::take(&mut self.stages[s].cw.replicas[r].iter_chunks);
+        chunks.clear();
         let mut token_budget = budget.max_prefill_tokens;
-        for &rid in &running {
+        for &rid in &self.stages[s].cw.replicas[r].running {
             let rq = &self.reqs[rid as usize];
             if rq.prefill_progress < rq.spec.input_len {
                 let remaining = rq.spec.input_len - rq.prefill_progress;
@@ -941,7 +1000,7 @@ mod tests {
         assert_eq!(report.metrics.rejected_requests, 0);
         assert_eq!(report.metrics.output_tokens, 32 * 16);
         assert!(report.sim_duration > 0.0);
-        assert!(report.metrics.ttft.len() == 32);
+        assert!(report.metrics.ttft.count() == 32);
         // the 1-stage graph reports itself
         assert_eq!(report.stages.len(), 1);
         assert_eq!(report.stages[0].kind, "unified");
@@ -1002,9 +1061,7 @@ mod tests {
     #[test]
     fn ttft_precedes_e2e() {
         let report = run(&tiny_cfg(16)).unwrap();
-        let mean_ttft = crate::metrics::mean(&report.metrics.ttft);
-        let mean_e2e = crate::metrics::mean(&report.metrics.e2e);
-        assert!(mean_ttft < mean_e2e);
+        assert!(report.metrics.ttft.mean() < report.metrics.e2e.mean());
     }
 
     #[test]

@@ -69,6 +69,16 @@ OPTIONS (simulate / sweep / sweep-pd / baseline):
   --requests <N>                   workload size (default 256)
   --input <N> --output <N>         token lengths (default 128/128)
   --rate <R>                       Poisson arrivals at R req/s (default: batch)
+  --workload <SPEC>                named workload mix, sweepable as an axis:
+                                   day[:RATE] (diurnal 4-class traffic day),
+                                   chat[:RATE] | rag[:RATE] | agentic[:RATE] |
+                                   batch[:RATE] single-class presets, or
+                                   trace:<file> to replay a recorded trace
+                                   (conflicts with --rate/--input/--output)
+  --slo-ttft <MS> --slo-tbt <MS>   per-request SLO thresholds (milliseconds);
+                                   judged at completion, reported as goodput
+                                   and attainment
+  --slo-e2e <S>                    end-to-end latency SLO (seconds)
   --trace <file.json>              replay a trace file instead of generating
                                    (simulate only; rejected by sweeps)
   --profiled                       use the real-system overhead preset

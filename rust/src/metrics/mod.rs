@@ -1,21 +1,180 @@
-//! Metrics: latency percentiles, throughput, goodput, CDFs, Pareto.
+//! Metrics: streaming latency digests, SLO goodput, throughput, CDFs,
+//! Pareto.
+//!
+//! Latency streams (`ttft`/`tbt`/`e2e`) are held in O(1)-memory
+//! [`Digest`]s, not sample vectors, so a 1e6-request traffic day
+//! doesn't hoard gigabytes; the exact sorted-percentile computation
+//! survives as the in-tree oracle ([`percentile`]) that digest
+//! tolerance tests pin against. SLO satisfaction is judged online at
+//! request completion ([`SloSpec`]), per class ([`ClassStats`]), and
+//! per coarse time bucket ([`TimeSeries`]).
 
 use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 use crate::config::json::Json;
 use crate::core::SimTime;
 
+mod digest;
+pub use digest::Digest;
+
+/// TTFT/TBT/E2E service-level objectives, seconds. `None` = no
+/// objective on that axis; a request is SLO-good iff every *set*
+/// objective is met.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloSpec {
+    pub ttft_s: Option<f64>,
+    pub tbt_s: Option<f64>,
+    pub e2e_s: Option<f64>,
+}
+
+impl SloSpec {
+    /// Is any objective set? (Gates SLO rows in reports.)
+    pub fn any(&self) -> bool {
+        self.ttft_s.is_some() || self.tbt_s.is_some() || self.e2e_s.is_some()
+    }
+
+    /// Judge one completed request: `tbt_s` is compared against the
+    /// request's *mean* inter-token gap.
+    pub fn met(&self, ttft_s: f64, tbt_mean_s: f64, e2e_s: f64) -> bool {
+        self.ttft_s.map_or(true, |t| ttft_s <= t)
+            && self.tbt_s.map_or(true, |t| tbt_mean_s <= t)
+            && self.e2e_s.map_or(true, |t| e2e_s <= t)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in
+            [("ttft", self.ttft_s), ("tbt", self.tbt_s), ("e2e", self.e2e_s)]
+        {
+            if let Some(v) = v {
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("SLO {name} threshold must be finite and > 0, got {v}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-request-class latency and SLO accounting.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassStats {
+    pub completed: u64,
+    pub slo_ok: u64,
+    pub ttft: Digest,
+    pub tbt: Digest,
+    pub e2e: Digest,
+}
+
+/// Raw per-request sample vectors, opt-in via
+/// `ExperimentConfig::keep_raw_samples` (memory grows with request
+/// count — for oracle tests and offline analysis only, never the
+/// default path).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RawSamples {
+    pub ttft: Vec<f64>,
+    pub tbt: Vec<f64>,
+    pub e2e: Vec<f64>,
+}
+
+/// Cap on time-series buckets: when exceeded, adjacent pairs merge and
+/// the bucket width doubles, keeping memory O(1) over any run length.
+pub const TS_MAX_BUCKETS: usize = 256;
+
+/// One coarse load/latency time bucket.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TsBucket {
+    pub arrivals: u64,
+    pub completions: u64,
+    pub slo_ok: u64,
+    pub ttft_sum: f64,
+    pub ttft_n: u64,
+    pub tbt_sum: f64,
+    pub tbt_n: u64,
+}
+
+impl TsBucket {
+    fn absorb(&mut self, o: &TsBucket) {
+        self.arrivals += o.arrivals;
+        self.completions += o.completions;
+        self.slo_ok += o.slo_ok;
+        self.ttft_sum += o.ttft_sum;
+        self.ttft_n += o.ttft_n;
+        self.tbt_sum += o.tbt_sum;
+        self.tbt_n += o.tbt_n;
+    }
+}
+
+/// Coarse time-series of offered load vs. delivered latency: fixed
+/// bucket count (width doubles as the run stretches), so long runs get
+/// a day-level curve instead of an unbounded log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeSeries {
+    /// Current bucket width, seconds (starts at 1 s, doubles on
+    /// compaction).
+    pub bucket_s: f64,
+    pub buckets: Vec<TsBucket>,
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        TimeSeries { bucket_s: 1.0, buckets: Vec::new() }
+    }
+}
+
+impl TimeSeries {
+    fn bucket_mut(&mut self, t_s: f64) -> &mut TsBucket {
+        let t_s = t_s.max(0.0);
+        let mut i = (t_s / self.bucket_s) as usize;
+        while i >= TS_MAX_BUCKETS {
+            self.compact();
+            i = (t_s / self.bucket_s) as usize;
+        }
+        if i >= self.buckets.len() {
+            self.buckets.resize_with(i + 1, Default::default);
+        }
+        &mut self.buckets[i]
+    }
+
+    fn compact(&mut self) {
+        let mut out = Vec::with_capacity((self.buckets.len() + 1) / 2);
+        for pair in self.buckets.chunks(2) {
+            let mut b = pair[0].clone();
+            if let Some(second) = pair.get(1) {
+                b.absorb(second);
+            }
+            out.push(b);
+        }
+        self.buckets = out;
+        self.bucket_s *= 2.0;
+    }
+}
+
 /// Online collection of per-request and system-level metrics.
 #[derive(Default, Clone, Debug)]
 pub struct MetricsCollector {
-    /// Time-to-first-token samples, seconds.
-    pub ttft: Vec<f64>,
-    /// Time-between-tokens (inter-token latency) samples, seconds.
-    pub tbt: Vec<f64>,
-    /// End-to-end request latency samples, seconds.
-    pub e2e: Vec<f64>,
+    /// Time-to-first-token stream, seconds.
+    pub ttft: Digest,
+    /// Time-between-tokens (inter-token latency) stream, seconds.
+    pub tbt: Digest,
+    /// End-to-end request latency stream, seconds.
+    pub e2e: Digest,
     /// Normalized latency (e2e / output tokens), seconds/token.
-    pub norm_latency: Vec<f64>,
+    pub norm_latency: Digest,
+    /// Active SLO thresholds (judged online at request completion).
+    pub slo: SloSpec,
+    /// Completed requests meeting every set SLO threshold.
+    pub slo_ok: u64,
+    /// Per-class breakdown, indexed by `RequestSpec::class`.
+    pub per_class: Vec<ClassStats>,
+    /// Display names for `per_class` (from the workload's class list;
+    /// classes beyond this list render as `class<N>`).
+    pub class_names: Vec<String>,
+    /// Coarse load-vs-latency curve.
+    pub timeseries: TimeSeries,
+    /// Opt-in raw sample vectors (oracle tests / offline analysis).
+    pub raw: Option<Box<RawSamples>>,
     pub completed_requests: u64,
     pub rejected_requests: u64,
     pub output_tokens: u64,
@@ -71,6 +230,84 @@ pub struct MetricsCollector {
 impl MetricsCollector {
     pub fn record_op(&mut self, class: &'static str, secs: f64) {
         *self.op_time.entry(class).or_insert(0.0) += secs;
+    }
+
+    fn class_mut(&mut self, class: u16) -> &mut ClassStats {
+        let i = class as usize;
+        if i >= self.per_class.len() {
+            self.per_class.resize_with(i + 1, Default::default);
+        }
+        &mut self.per_class[i]
+    }
+
+    /// Display name for class `i` in reports.
+    pub fn class_name(&self, i: usize) -> String {
+        self.class_names.get(i).cloned().unwrap_or_else(|| format!("class{i}"))
+    }
+
+    /// Account one request arrival at simulated time `t_s` (load curve).
+    pub fn record_arrival(&mut self, t_s: f64) {
+        self.timeseries.bucket_mut(t_s).arrivals += 1;
+    }
+
+    /// Record a time-to-first-token sample for `class` at simulated
+    /// time `t_s`.
+    pub fn record_ttft(&mut self, class: u16, v_s: f64, t_s: f64) {
+        self.ttft.record(v_s);
+        self.class_mut(class).ttft.record(v_s);
+        let b = self.timeseries.bucket_mut(t_s);
+        b.ttft_sum += v_s;
+        b.ttft_n += 1;
+        if let Some(raw) = &mut self.raw {
+            raw.ttft.push(v_s);
+        }
+    }
+
+    /// Record an inter-token latency sample for `class`.
+    pub fn record_tbt(&mut self, class: u16, v_s: f64, t_s: f64) {
+        self.tbt.record(v_s);
+        self.class_mut(class).tbt.record(v_s);
+        let b = self.timeseries.bucket_mut(t_s);
+        b.tbt_sum += v_s;
+        b.tbt_n += 1;
+        if let Some(raw) = &mut self.raw {
+            raw.tbt.push(v_s);
+        }
+    }
+
+    /// Account one completed request: e2e / normalized latency streams,
+    /// online SLO judgment (`tbt_mean_s` = mean inter-token gap over
+    /// the request), per-class stats, and the completion time bucket.
+    pub fn record_completion(
+        &mut self,
+        class: u16,
+        ttft_s: f64,
+        tbt_mean_s: f64,
+        e2e_s: f64,
+        output_len: u32,
+        t_s: f64,
+    ) {
+        self.completed_requests += 1;
+        self.e2e.record(e2e_s);
+        self.norm_latency.record(e2e_s / output_len.max(1) as f64);
+        if let Some(raw) = &mut self.raw {
+            raw.e2e.push(e2e_s);
+        }
+        let ok = self.slo.met(ttft_s, tbt_mean_s, e2e_s);
+        if ok {
+            self.slo_ok += 1;
+        }
+        let c = self.class_mut(class);
+        c.completed += 1;
+        c.e2e.record(e2e_s);
+        if ok {
+            c.slo_ok += 1;
+        }
+        let b = self.timeseries.bucket_mut(t_s);
+        b.completions += 1;
+        if ok {
+            b.slo_ok += 1;
+        }
     }
 
     /// Account one EP dispatch/combine draw.
@@ -138,15 +375,22 @@ impl MetricsCollector {
     }
 }
 
-/// Simple percentile over unsorted samples (nearest-rank).
+/// Exact nearest-rank percentile over unsorted samples: the smallest
+/// sample with at least `p`% of the data at or below it
+/// (`rank = ⌈(p/100)·n⌉`). This is the in-tree oracle the streaming
+/// [`Digest`] is tolerance-tested against. The old
+/// `round((p/100)·(n-1))` formula was biased — e.g. p50 of [1,2,3,4]
+/// returned 3 instead of 2 — and report call sites paid a
+/// sort-a-clone per call; reports now read digests instead.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    v.sort_by(|a, b| a.total_cmp(b));
+    let n = v.len();
+    let rank = ((p / 100.0).clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    v[rank.clamp(1, n) - 1]
 }
 
 pub fn mean(xs: &[f64]) -> f64 {
@@ -230,20 +474,24 @@ impl SimReport {
         self.metrics.completed_requests as f64 / self.sim_duration
     }
 
-    /// Goodput: completed requests/s meeting both SLOs (DistServe-style).
-    pub fn goodput(&self, ttft_slo: f64, tbt_slo: f64) -> f64 {
-        if self.sim_duration <= 0.0 || self.metrics.ttft.is_empty() {
+    /// Goodput: completed requests/s meeting every *set* SLO threshold
+    /// (DistServe-style). Satisfaction is judged online at request
+    /// completion against [`MetricsCollector::slo`]; with no SLOs set,
+    /// every completion counts and goodput equals
+    /// [`SimReport::requests_per_sec`].
+    pub fn goodput(&self) -> f64 {
+        if self.sim_duration <= 0.0 {
             return 0.0;
         }
-        // joint satisfaction approximated per-request via paired samples
-        let ok = self
-            .metrics
-            .ttft
-            .iter()
-            .zip(&self.metrics.norm_latency)
-            .filter(|(&t, &n)| t <= ttft_slo && n <= tbt_slo)
-            .count();
-        ok as f64 / self.sim_duration
+        self.metrics.slo_ok as f64 / self.sim_duration
+    }
+
+    /// Fraction of completed requests that met every set SLO.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.metrics.completed_requests == 0 {
+            return 0.0;
+        }
+        self.metrics.slo_ok as f64 / self.metrics.completed_requests as f64
     }
 
     /// Simulation speed: simulated seconds per host second.
@@ -283,15 +531,57 @@ impl SimReport {
             self.tokens_per_sec_per_gpu(),
             self.n_gpus,
             self.requests_per_sec(),
-            percentile(&m.ttft, 50.0) * 1e3,
-            percentile(&m.ttft, 99.0) * 1e3,
-            percentile(&m.tbt, 50.0) * 1e3,
-            percentile(&m.tbt, 99.0) * 1e3,
-            percentile(&m.e2e, 50.0),
+            m.ttft.quantile(50.0) * 1e3,
+            m.ttft.quantile(99.0) * 1e3,
+            m.tbt.quantile(50.0) * 1e3,
+            m.tbt.quantile(99.0) * 1e3,
+            m.e2e.quantile(50.0),
             m.iterations,
             m.kv_transfers,
             m.kv_bytes / 1e6,
         );
+        if m.slo.any() {
+            s.push_str(&format!(
+                "\nSLO{}{}{}: goodput {:.2} req/s, attainment {:.1}% ({}/{})",
+                m.slo.ttft_s.map_or(String::new(), |v| format!(" ttft<={:.0}ms", v * 1e3)),
+                m.slo.tbt_s.map_or(String::new(), |v| format!(" tbt<={:.0}ms", v * 1e3)),
+                m.slo.e2e_s.map_or(String::new(), |v| format!(" e2e<={v:.1}s")),
+                self.goodput(),
+                self.slo_attainment() * 100.0,
+                m.slo_ok,
+                m.completed_requests,
+            ));
+        }
+        if m.per_class.len() > 1 {
+            for (i, c) in m.per_class.iter().enumerate() {
+                s.push_str(&format!(
+                    "\nclass {:<8} {:>7} done | ttft p50/p99 {:.1}/{:.1} ms | \
+                     tbt p50/p99 {:.2}/{:.2} ms | e2e p50 {:.2} s{}",
+                    m.class_name(i),
+                    c.completed,
+                    c.ttft.quantile(50.0) * 1e3,
+                    c.ttft.quantile(99.0) * 1e3,
+                    c.tbt.quantile(50.0) * 1e3,
+                    c.tbt.quantile(99.0) * 1e3,
+                    c.e2e.quantile(50.0),
+                    if m.slo.any() && c.completed > 0 {
+                        format!(
+                            " | slo {:.1}%",
+                            c.slo_ok as f64 / c.completed as f64 * 100.0
+                        )
+                    } else {
+                        String::new()
+                    },
+                ));
+            }
+        }
+        if m.timeseries.buckets.len() > 1 {
+            s.push_str(&format!(
+                "\nload curve: {} buckets x {:.0} s (arrivals/completions/mean-ttft in JSON)",
+                m.timeseries.buckets.len(),
+                m.timeseries.bucket_s,
+            ));
+        }
         if m.ep_bytes > 0.0 {
             s.push_str(&format!(
                 "\nEP: {:.1} MB dispatched+combined ({:.1}% cross-cluster) | \
@@ -358,7 +648,7 @@ impl SimReport {
 
     pub fn to_json(&self) -> Json {
         let m = &self.metrics;
-        Json::obj(vec![
+        let mut fields = vec![
             ("mode", Json::Str(self.mode.clone())),
             ("predictor", Json::Str(self.predictor.clone())),
             ("sim_duration_s", Json::Num(self.sim_duration)),
@@ -369,11 +659,11 @@ impl SimReport {
             ("rejected", Json::Num(m.rejected_requests as f64)),
             ("output_tokens", Json::Num(m.output_tokens as f64)),
             ("tokens_per_sec_per_gpu", Json::Num(self.tokens_per_sec_per_gpu())),
-            ("ttft_p50_ms", Json::Num(percentile(&m.ttft, 50.0) * 1e3)),
-            ("ttft_p99_ms", Json::Num(percentile(&m.ttft, 99.0) * 1e3)),
-            ("tbt_p50_ms", Json::Num(percentile(&m.tbt, 50.0) * 1e3)),
-            ("tbt_p99_ms", Json::Num(percentile(&m.tbt, 99.0) * 1e3)),
-            ("e2e_p50_s", Json::Num(percentile(&m.e2e, 50.0))),
+            ("ttft_p50_ms", Json::Num(m.ttft.quantile(50.0) * 1e3)),
+            ("ttft_p99_ms", Json::Num(m.ttft.quantile(99.0) * 1e3)),
+            ("tbt_p50_ms", Json::Num(m.tbt.quantile(50.0) * 1e3)),
+            ("tbt_p99_ms", Json::Num(m.tbt.quantile(99.0) * 1e3)),
+            ("e2e_p50_s", Json::Num(m.e2e.quantile(50.0))),
             ("iterations", Json::Num(m.iterations as f64)),
             ("kv_transfers", Json::Num(m.kv_transfers as f64)),
             ("ep_bytes", Json::Num(m.ep_bytes)),
@@ -408,7 +698,95 @@ impl SimReport {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if m.slo.any() {
+            fields.push(("goodput_rps", Json::Num(self.goodput())));
+            fields.push(("slo_attainment", Json::Num(self.slo_attainment())));
+        }
+        if m.per_class.len() > 1 {
+            fields.push((
+                "classes",
+                Json::Arr(
+                    m.per_class
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(m.class_name(i))),
+                                ("completed", Json::Num(c.completed as f64)),
+                                ("slo_ok", Json::Num(c.slo_ok as f64)),
+                                ("ttft_p50_ms", Json::Num(c.ttft.quantile(50.0) * 1e3)),
+                                ("ttft_p99_ms", Json::Num(c.ttft.quantile(99.0) * 1e3)),
+                                ("tbt_p50_ms", Json::Num(c.tbt.quantile(50.0) * 1e3)),
+                                ("tbt_p99_ms", Json::Num(c.tbt.quantile(99.0) * 1e3)),
+                                ("e2e_p50_s", Json::Num(c.e2e.quantile(50.0))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if m.timeseries.buckets.len() > 1 {
+            let ts = &m.timeseries;
+            fields.push((
+                "timeseries",
+                Json::obj(vec![
+                    ("bucket_s", Json::Num(ts.bucket_s)),
+                    (
+                        "arrivals",
+                        Json::Arr(
+                            ts.buckets.iter().map(|b| Json::Num(b.arrivals as f64)).collect(),
+                        ),
+                    ),
+                    (
+                        "completions",
+                        Json::Arr(
+                            ts.buckets
+                                .iter()
+                                .map(|b| Json::Num(b.completions as f64))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "slo_ok",
+                        Json::Arr(
+                            ts.buckets.iter().map(|b| Json::Num(b.slo_ok as f64)).collect(),
+                        ),
+                    ),
+                    (
+                        "mean_ttft_ms",
+                        Json::Arr(
+                            ts.buckets
+                                .iter()
+                                .map(|b| {
+                                    Json::Num(if b.ttft_n > 0 {
+                                        b.ttft_sum / b.ttft_n as f64 * 1e3
+                                    } else {
+                                        0.0
+                                    })
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "mean_tbt_ms",
+                        Json::Arr(
+                            ts.buckets
+                                .iter()
+                                .map(|b| {
+                                    Json::Num(if b.tbt_n > 0 {
+                                        b.tbt_sum / b.tbt_n as f64 * 1e3
+                                    } else {
+                                        0.0
+                                    })
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -445,12 +823,133 @@ mod tests {
     #[test]
     fn percentile_nearest_rank() {
         let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
-        // nearest-rank with round-half-up: rank(50%) = round(49.5) = 50
-        assert_eq!(percentile(&xs, 50.0), 51.0);
+        // nearest-rank: rank = ceil((p/100)*n), 1-based
+        assert_eq!(percentile(&xs, 50.0), 50.0);
         assert_eq!(percentile(&xs, 99.0), 99.0);
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_small_n_bias_regression() {
+        // the old round((p/100)*(n-1)) formula returned 3.0 for the
+        // median of [1,2,3,4] — 75% of the data at or below the "p50"
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 75.0), 3.0);
+        assert_eq!(percentile(&xs, 76.0), 4.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        // p99 at n=10 must be the max, not the 9th value
+        let ten: Vec<f64> = (1..=10).map(|x| x as f64).collect();
+        assert_eq!(percentile(&ten, 99.0), 10.0);
+    }
+
+    #[test]
+    fn slo_judgment_and_goodput() {
+        let mut m = MetricsCollector::default();
+        m.slo = SloSpec { ttft_s: Some(0.5), tbt_s: Some(0.05), e2e_s: None };
+        assert!(m.slo.any());
+        // good request
+        m.record_completion(0, 0.2, 0.03, 2.0, 10, 2.0);
+        // ttft violation
+        m.record_completion(0, 0.9, 0.03, 2.0, 10, 3.0);
+        // tbt violation
+        m.record_completion(0, 0.2, 0.08, 2.0, 10, 4.0);
+        assert_eq!(m.completed_requests, 3);
+        assert_eq!(m.slo_ok, 1);
+        assert_eq!(m.per_class.len(), 1);
+        assert_eq!(m.per_class[0].completed, 3);
+        assert_eq!(m.per_class[0].slo_ok, 1);
+        let r = SimReport {
+            mode: "test".into(),
+            predictor: "oracle".into(),
+            sim_duration: 10.0,
+            host_duration: 1.0,
+            events_processed: 1,
+            n_gpus: 1,
+            metrics: m,
+            stages: Vec::new(),
+        };
+        assert!((r.goodput() - 0.1).abs() < 1e-12);
+        assert!((r.slo_attainment() - 1.0 / 3.0).abs() < 1e-12);
+        let j = r.to_json();
+        assert!(j.get("goodput_rps").is_some());
+        assert!(j.get("slo_attainment").is_some());
+    }
+
+    #[test]
+    fn unset_slo_counts_every_completion() {
+        let mut m = MetricsCollector::default();
+        assert!(!m.slo.any());
+        m.record_completion(0, 99.0, 99.0, 99.0, 1, 0.0);
+        assert_eq!(m.slo_ok, 1);
+        // and the report omits the SLO keys
+        let r = SimReport {
+            mode: "t".into(),
+            predictor: "o".into(),
+            sim_duration: 1.0,
+            host_duration: 1.0,
+            events_processed: 1,
+            n_gpus: 1,
+            metrics: m,
+            stages: Vec::new(),
+        };
+        assert!(r.to_json().get("goodput_rps").is_none());
+    }
+
+    #[test]
+    fn slo_validation_rejects_nonpositive() {
+        assert!(SloSpec { ttft_s: Some(0.0), ..Default::default() }.validate().is_err());
+        assert!(SloSpec { tbt_s: Some(-1.0), ..Default::default() }.validate().is_err());
+        assert!(SloSpec { e2e_s: Some(f64::NAN), ..Default::default() }.validate().is_err());
+        assert!(SloSpec { ttft_s: Some(0.2), ..Default::default() }.validate().is_ok());
+        assert!(SloSpec::default().validate().is_ok());
+    }
+
+    #[test]
+    fn timeseries_stays_bounded() {
+        let mut m = MetricsCollector::default();
+        // a "week" of sparse arrivals: bucket count must stay capped,
+        // width doubling instead
+        for i in 0..600_000u64 {
+            m.record_arrival(i as f64);
+        }
+        assert!(m.timeseries.buckets.len() <= TS_MAX_BUCKETS);
+        assert!(m.timeseries.bucket_s > 1.0);
+        let total: u64 = m.timeseries.buckets.iter().map(|b| b.arrivals).sum();
+        assert_eq!(total, 600_000, "compaction must not lose counts");
+    }
+
+    #[test]
+    fn per_class_tracks_separately() {
+        let mut m = MetricsCollector::default();
+        m.class_names = vec!["chat".into(), "batch".into()];
+        m.record_ttft(0, 0.1, 1.0);
+        m.record_ttft(1, 9.0, 1.0);
+        m.record_completion(0, 0.1, 0.01, 1.0, 8, 2.0);
+        m.record_completion(1, 9.0, 0.50, 60.0, 8, 61.0);
+        assert_eq!(m.per_class.len(), 2);
+        assert_eq!(m.class_name(0), "chat");
+        assert_eq!(m.class_name(7), "class7");
+        assert!(m.per_class[0].ttft.quantile(50.0) < m.per_class[1].ttft.quantile(50.0));
+        let r = SimReport {
+            mode: "t".into(),
+            predictor: "o".into(),
+            sim_duration: 100.0,
+            host_duration: 1.0,
+            events_processed: 1,
+            n_gpus: 1,
+            metrics: m,
+            stages: Vec::new(),
+        };
+        let j = r.to_json();
+        let classes = j.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(
+            classes[0].get("name"),
+            Some(&Json::Str("chat".into()))
+        );
     }
 
     #[test]

@@ -9,7 +9,6 @@
 //! projection (host-time fields excluded).
 
 use crate::config::json::Json;
-use crate::metrics::percentile;
 use crate::sweep::{PointResult, SweepResult};
 
 /// Metric columns of the merged table/CSV, after the axis columns.
@@ -20,6 +19,7 @@ pub const SWEEP_METRIC_COLS: &[&str] = &[
     "tbt_p50_ms",
     "tbt_p99_ms",
     "e2e_p50_s",
+    "goodput_rps",
     "sim_s",
     "completed",
     "dropped_tokens",
@@ -33,11 +33,14 @@ fn metric_cells(r: &PointResult) -> Vec<String> {
             let m = &rep.metrics;
             vec![
                 format!("{:.2}", rep.tokens_per_sec_per_gpu()),
-                format!("{:.1}", percentile(&m.ttft, 50.0) * 1e3),
-                format!("{:.1}", percentile(&m.ttft, 99.0) * 1e3),
-                format!("{:.2}", percentile(&m.tbt, 50.0) * 1e3),
-                format!("{:.2}", percentile(&m.tbt, 99.0) * 1e3),
-                format!("{:.2}", percentile(&m.e2e, 50.0)),
+                format!("{:.1}", m.ttft.quantile(50.0) * 1e3),
+                format!("{:.1}", m.ttft.quantile(99.0) * 1e3),
+                format!("{:.2}", m.tbt.quantile(50.0) * 1e3),
+                format!("{:.2}", m.tbt.quantile(99.0) * 1e3),
+                format!("{:.2}", m.e2e.quantile(50.0)),
+                // without SLO flags every completion counts, so this
+                // degrades to plain completion throughput
+                format!("{:.2}", rep.goodput()),
                 format!("{:.3}", rep.sim_duration),
                 m.completed_requests.to_string(),
                 m.dropped_tokens.to_string(),

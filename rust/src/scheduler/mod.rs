@@ -67,30 +67,75 @@ pub fn admit(
     mut free_blocks: u64,
 ) -> Vec<QueuedReq> {
     let mut admitted = Vec::new();
-    let mut token_budget = budget.max_prefill_tokens;
-    if policy == BatchPolicy::Sjf {
-        let mut v: Vec<QueuedReq> = waiting.drain(..).collect();
-        // stable sort keeps FCFS order among equals
-        v.sort_by_key(|r| r.tokens_needed);
-        waiting.extend(v);
+    if running >= budget.max_batch || waiting.is_empty() {
+        // admission impossible: never touch the queue (SJF used to
+        // drain + re-sort it here, permanently reordering requests it
+        // could not admit)
+        return admitted;
     }
-    while let Some(front) = waiting.front() {
-        if running + admitted.len() >= budget.max_batch {
-            break;
+    let slots = budget.max_batch - running;
+    let mut token_budget = budget.max_prefill_tokens;
+    match policy {
+        BatchPolicy::Fcfs => {
+            while let Some(front) = waiting.front() {
+                if admitted.len() >= slots {
+                    break;
+                }
+                if front.blocks_needed > free_blocks {
+                    break; // head-of-line blocking on memory, like vLLM
+                }
+                // chunked prefill: admit even if the full prefill
+                // exceeds the token budget, as long as some budget
+                // remains — the execution layer runs it chunk by chunk
+                if token_budget == 0 && front.tokens_needed > 0 {
+                    break;
+                }
+                let r = waiting.pop_front().unwrap();
+                token_budget = token_budget.saturating_sub(r.tokens_needed);
+                free_blocks -= r.blocks_needed;
+                admitted.push(r);
+            }
         }
-        if front.blocks_needed > free_blocks {
-            break; // head-of-line blocking on memory, like vLLM
+        BatchPolicy::Sjf => {
+            // Sort an index *view*, not the queue: at most `slots`
+            // requests can be admitted per call, so select the `slots`
+            // shortest in O(n) and only sort those. Unadmitted requests
+            // keep their arrival order (starvation accounting stays
+            // honest), and a deep backlog costs O(n + k log k) instead
+            // of O(n log n) every iteration.
+            let k = slots.min(waiting.len());
+            let mut order: Vec<u32> = (0..waiting.len() as u32).collect();
+            // (tokens, index) reproduces the old stable full sort:
+            // FCFS order among equal-length jobs
+            let key = |i: &u32| (waiting[*i as usize].tokens_needed, *i);
+            if k < order.len() {
+                order.select_nth_unstable_by_key(k - 1, key);
+                order.truncate(k);
+            }
+            order.sort_unstable_by_key(key);
+            let mut take = vec![false; waiting.len()];
+            for &i in &order {
+                let r = waiting[i as usize];
+                if r.blocks_needed > free_blocks {
+                    break; // same head-of-line semantics, in SJF order
+                }
+                if token_budget == 0 && r.tokens_needed > 0 {
+                    break;
+                }
+                token_budget = token_budget.saturating_sub(r.tokens_needed);
+                free_blocks -= r.blocks_needed;
+                take[i as usize] = true;
+                admitted.push(r);
+            }
+            if !admitted.is_empty() {
+                let mut idx = 0;
+                waiting.retain(|_| {
+                    let t = take[idx];
+                    idx += 1;
+                    !t
+                });
+            }
         }
-        // chunked prefill: admit even if the full prefill exceeds the
-        // token budget, as long as some budget remains — the execution
-        // layer runs it chunk by chunk
-        if token_budget == 0 && front.tokens_needed > 0 {
-            break;
-        }
-        let r = waiting.pop_front().unwrap();
-        token_budget = token_budget.saturating_sub(r.tokens_needed);
-        free_blocks -= r.blocks_needed;
-        admitted.push(r);
     }
     admitted
 }
@@ -184,6 +229,48 @@ mod tests {
         let mut w: VecDeque<_> = vec![q(0, 900, 1), q(1, 10, 1), q(2, 500, 1)].into();
         let a = admit(BatchPolicy::Sjf, &mut w, 0, &IterBudget::default(), 100);
         assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn sjf_admission_blocked_leaves_queue_untouched() {
+        // regression: when admission is impossible (batch full) SJF
+        // used to drain + sort the whole queue anyway, permanently
+        // reordering requests it never admitted
+        let mut w: VecDeque<_> = vec![q(0, 900, 1), q(1, 10, 1), q(2, 500, 1)].into();
+        let budget = IterBudget { max_batch: 4, max_prefill_tokens: u32::MAX };
+        let a = admit(BatchPolicy::Sjf, &mut w, 4, &budget, 100);
+        assert!(a.is_empty());
+        assert_eq!(w.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sjf_unadmitted_keep_arrival_order() {
+        // regression: one admission used to leave the rest of the
+        // queue sorted by length — long prefills pushed to the back
+        // forever (starvation). Unadmitted requests must keep FCFS
+        // order.
+        let mut w: VecDeque<_> = vec![q(0, 900, 10), q(1, 10, 10), q(2, 500, 10)].into();
+        let a = admit(BatchPolicy::Sjf, &mut w, 0, &IterBudget::default(), 10);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(w.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn sjf_cap_prefix_selection_matches_full_sort() {
+        // the O(n) select-then-sort prefix must admit exactly what the
+        // old full stable sort admitted (ties broken by arrival index)
+        let mut w: VecDeque<QueuedReq> = (0..100u64)
+            .map(|i| q(i, ((i * 37) % 10) as u32 * 100, 1))
+            .collect();
+        let budget = IterBudget { max_batch: 10, max_prefill_tokens: u32::MAX };
+        let mut expect: Vec<QueuedReq> = w.iter().copied().collect();
+        expect.sort_by_key(|r| r.tokens_needed); // stable
+        let expect_ids: Vec<u64> = expect[..10].iter().map(|r| r.id).collect();
+        let a = admit(BatchPolicy::Sjf, &mut w, 0, &budget, u64::MAX);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), expect_ids);
+        // and the 90 left behind are still in arrival order
+        assert!(w.iter().zip(w.iter().skip(1)).all(|(a, b)| a.id < b.id));
+        assert_eq!(w.len(), 90);
     }
 
     #[test]

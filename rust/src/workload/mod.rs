@@ -1,11 +1,19 @@
-//! Workload generation: arrival processes and length distributions.
+//! Workload generation: request classes, arrival processes, and length
+//! distributions.
 //!
 //! Covers the paper's evaluation workloads (Table 2's fixed
-//! batch/in/out grids) plus the dynamic mixes used for Fig. 2-style
-//! operator studies: Poisson/gamma arrivals and
-//! fixed/uniform/lognormal/zipf-skew length distributions. A generated
-//! trace is just `Vec<RequestSpec>`, so real traces can be loaded from
-//! JSON with the same downstream path.
+//! batch/in/out grids) plus open-loop production mixes: named request
+//! *classes* (chat, long-context RAG, agentic multi-turn with think
+//! time, offline batch) with per-class arrival processes
+//! (Poisson/gamma/MMPP bursts/diurnal rate curve), per-class length
+//! distributions, and multi-tenant rate shares. A materialized workload
+//! is just `Vec<RequestSpec>`, so real traces replay through the same
+//! downstream path; [`trace_to_text`]/[`trace_from_file`] give a
+//! compact deterministic on-disk form.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
 
 use crate::core::{Pcg64, SimTime};
 
@@ -15,6 +23,8 @@ pub struct RequestSpec {
     pub arrival: SimTime,
     pub input_len: u32,
     pub output_len: u32,
+    /// Index into the workload's class list (0 for single-class specs).
+    pub class: u16,
 }
 
 /// Arrival process.
@@ -28,6 +38,112 @@ pub enum Arrival {
     Gamma { rate: f64, cv: f64 },
     /// Fixed inter-arrival interval.
     Uniform { rate: f64 },
+    /// 2-state Markov-modulated Poisson process: `rate` in the calm
+    /// state, `burst_rate` during bursts, with exponentially
+    /// distributed dwell times (means `calm_s` / `burst_s`).
+    Mmpp { rate: f64, burst_rate: f64, calm_s: f64, burst_s: f64 },
+    /// Diurnal rate curve, sampled by thinning a Poisson process at the
+    /// peak rate: `rate(t) = rate * (1 + amplitude * sin(2πt/period))`.
+    /// Over a full period the mean rate is `rate`.
+    Diurnal { rate: f64, amplitude: f64, period_s: f64 },
+}
+
+impl Arrival {
+    /// Reject parameters that produce NaN timestamps or diverge:
+    /// non-positive rates, `cv <= 0` (`shape = 1/cv²` overflows to
+    /// inf), non-finite values, out-of-range diurnal amplitude.
+    pub fn validate(&self) -> Result<()> {
+        let pos = |name: &str, v: f64| -> Result<()> {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("arrival {name} must be finite and > 0, got {v}");
+            }
+            Ok(())
+        };
+        match *self {
+            Arrival::Batch => Ok(()),
+            Arrival::Poisson { rate } | Arrival::Uniform { rate } => pos("rate", rate),
+            Arrival::Gamma { rate, cv } => {
+                pos("rate", rate)?;
+                pos("cv", cv)
+            }
+            Arrival::Mmpp { rate, burst_rate, calm_s, burst_s } => {
+                pos("rate", rate)?;
+                pos("burst_rate", burst_rate)?;
+                pos("calm_s", calm_s)?;
+                pos("burst_s", burst_s)
+            }
+            Arrival::Diurnal { rate, amplitude, period_s } => {
+                pos("rate", rate)?;
+                pos("period_s", period_s)?;
+                if !amplitude.is_finite() || !(0.0..=1.0).contains(&amplitude) {
+                    bail!("diurnal amplitude must be in [0, 1], got {amplitude}");
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Stateful sampler for one arrival stream (MMPP needs state beyond the
+/// clock). Draw order per request is arrival-then-lengths, which keeps
+/// the single-class RNG stream identical to earlier releases.
+struct ArrivalGen<'a> {
+    arrival: &'a Arrival,
+    t: f64,
+    burst: bool,
+    dwell_end: f64,
+}
+
+impl<'a> ArrivalGen<'a> {
+    fn new(arrival: &'a Arrival, rng: &mut Pcg64) -> Self {
+        let dwell_end = match *arrival {
+            Arrival::Mmpp { calm_s, .. } => rng.exp(1.0 / calm_s),
+            _ => 0.0,
+        };
+        ArrivalGen { arrival, t: 0.0, burst: false, dwell_end }
+    }
+
+    /// Absolute arrival time of the next request, seconds.
+    fn next(&mut self, rng: &mut Pcg64) -> f64 {
+        match *self.arrival {
+            Arrival::Batch => {}
+            Arrival::Poisson { rate } => self.t += rng.exp(rate),
+            Arrival::Gamma { rate, cv } => {
+                let shape = 1.0 / (cv * cv);
+                let scale = 1.0 / (rate * shape);
+                self.t += rng.gamma(shape) * scale;
+            }
+            Arrival::Uniform { rate } => self.t += 1.0 / rate,
+            Arrival::Mmpp { rate, burst_rate, calm_s, burst_s } => loop {
+                let r = if self.burst { burst_rate } else { rate };
+                let dt = rng.exp(r);
+                if self.t + dt <= self.dwell_end {
+                    self.t += dt;
+                    break;
+                }
+                // dwell expired before the next arrival: flip state and
+                // re-draw from the new state's rate
+                self.t = self.dwell_end;
+                self.burst = !self.burst;
+                let dwell = if self.burst { burst_s } else { calm_s };
+                self.dwell_end = self.t + rng.exp(1.0 / dwell);
+            },
+            Arrival::Diurnal { rate, amplitude, period_s } => {
+                // thinning: candidates at the peak rate, accepted with
+                // probability rate(t)/peak — exact for amplitude <= 1
+                let peak = rate * (1.0 + amplitude);
+                loop {
+                    self.t += rng.exp(peak);
+                    let r = rate
+                        * (1.0 + amplitude * (std::f64::consts::TAU * self.t / period_s).sin());
+                    if rng.next_f64() * peak <= r {
+                        break;
+                    }
+                }
+            }
+        }
+        self.t
+    }
 }
 
 /// Length distribution.
@@ -63,20 +179,114 @@ impl LenDist {
     }
 
     /// Mean of the distribution (for rate-matching calculations).
+    /// Bounds are widened to f64 before adding: `(lo + hi)` overflows
+    /// u32 for long-context bounds.
     pub fn mean(&self) -> f64 {
+        let mid = |lo: u32, hi: u32| (lo as f64 + hi as f64) / 2.0;
         match *self {
             LenDist::Fixed(v) => v as f64,
-            LenDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+            LenDist::Uniform { lo, hi } => mid(lo, hi),
             LenDist::LogNormal { mean, .. } => mean,
             LenDist::ZipfMix { lo, hi, long_lo, long_hi, frac_long } => {
-                (1.0 - frac_long) * (lo + hi) as f64 / 2.0
-                    + frac_long * (long_lo + long_hi) as f64 / 2.0
+                (1.0 - frac_long) * mid(lo, hi) + frac_long * mid(long_lo, long_hi)
+            }
+        }
+    }
+
+    /// Reject ranges `gen_range` would panic on (or silently invert)
+    /// and parameters that yield zero/NaN lengths.
+    pub fn validate(&self) -> Result<()> {
+        let range = |name: &str, lo: u32, hi: u32| -> Result<()> {
+            if lo == 0 {
+                bail!("{name} length bound lo must be >= 1 (zero-length requests)");
+            }
+            if lo > hi {
+                bail!("{name} length bounds inverted: lo {lo} > hi {hi}");
+            }
+            Ok(())
+        };
+        match *self {
+            LenDist::Fixed(v) => {
+                if v == 0 {
+                    bail!("fixed length must be >= 1");
+                }
+                Ok(())
+            }
+            LenDist::Uniform { lo, hi } => range("uniform", lo, hi),
+            LenDist::LogNormal { mean, sigma } => {
+                if !mean.is_finite() || mean < 1.0 {
+                    bail!("lognormal mean must be finite and >= 1, got {mean}");
+                }
+                if !sigma.is_finite() || sigma < 0.0 {
+                    bail!("lognormal sigma must be finite and >= 0, got {sigma}");
+                }
+                Ok(())
+            }
+            LenDist::ZipfMix { lo, hi, long_lo, long_hi, frac_long } => {
+                range("zipf short", lo, hi)?;
+                range("zipf long", long_lo, long_hi)?;
+                if !frac_long.is_finite() || !(0.0..=1.0).contains(&frac_long) {
+                    bail!("zipf frac_long must be in [0, 1], got {frac_long}");
+                }
+                Ok(())
             }
         }
     }
 }
 
-/// Complete workload specification.
+/// One request class of an open-loop mix: a tenant/workload family with
+/// its own arrival process and length distributions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSpec {
+    pub name: String,
+    /// Rate share of the mix: this class generates
+    /// `weight / Σweights` of the workload's requests.
+    pub weight: f64,
+    pub arrival: Arrival,
+    pub input: LenDist,
+    pub output: LenDist,
+    /// Requests per session (agentic multi-turn; 1 = single-shot). The
+    /// arrival process spawns *sessions*; follow-up turns arrive after
+    /// exponential think-time gaps.
+    pub turns: u32,
+    /// Mean think time between turns, seconds.
+    pub think_s: f64,
+}
+
+impl ClassSpec {
+    pub fn new(name: &str, weight: f64, arrival: Arrival, input: LenDist, output: LenDist) -> Self {
+        ClassSpec { name: name.into(), weight, arrival, input, output, turns: 1, think_s: 0.0 }
+    }
+
+    /// Agentic multi-turn sessions: `turns` requests per session with
+    /// mean `think_s` seconds between consecutive turns.
+    pub fn with_turns(mut self, turns: u32, think_s: f64) -> Self {
+        self.turns = turns;
+        self.think_s = think_s;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let ctx = |e: anyhow::Error| anyhow::anyhow!("class '{}': {e}", self.name);
+        if !self.weight.is_finite() || self.weight <= 0.0 {
+            bail!("class '{}': weight must be finite and > 0, got {}", self.name, self.weight);
+        }
+        if self.turns == 0 {
+            bail!("class '{}': turns must be >= 1", self.name);
+        }
+        if !self.think_s.is_finite() || self.think_s < 0.0 {
+            bail!("class '{}': think_s must be finite and >= 0, got {}", self.name, self.think_s);
+        }
+        self.arrival.validate().map_err(ctx)?;
+        self.input.validate().map_err(ctx)?;
+        self.output.validate().map_err(ctx)
+    }
+}
+
+/// Complete workload specification. Single-class workloads use the flat
+/// `arrival`/`input`/`output` fields (with `classes` empty); open-loop
+/// mixes populate `classes` (the flat fields are then ignored); setting
+/// `trace` replays a file instead of generating anything.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadSpec {
     pub arrival: Arrival,
@@ -84,6 +294,11 @@ pub struct WorkloadSpec {
     pub output: LenDist,
     pub n_requests: u32,
     pub seed: u64,
+    /// Open-loop request classes; empty = single-class flat spec.
+    pub classes: Vec<ClassSpec>,
+    /// Replay this trace file instead of generating (see
+    /// [`trace_from_file`] for the accepted formats).
+    pub trace: Option<PathBuf>,
 }
 
 impl WorkloadSpec {
@@ -98,6 +313,8 @@ impl WorkloadSpec {
             output: LenDist::Fixed(output),
             n_requests,
             seed: 0xF05,
+            classes: Vec::new(),
+            trace: None,
         }
     }
 
@@ -108,7 +325,29 @@ impl WorkloadSpec {
             output: LenDist::LogNormal { mean: output as f64, sigma: 0.4 },
             n_requests,
             seed: 0xF05,
+            classes: Vec::new(),
+            trace: None,
         }
+    }
+
+    /// Multi-class open-loop workload from explicit classes.
+    pub fn classes(classes: Vec<ClassSpec>, n_requests: u32) -> Self {
+        WorkloadSpec {
+            arrival: Arrival::Batch,
+            input: LenDist::Fixed(1),
+            output: LenDist::Fixed(1),
+            n_requests,
+            seed: 0xF05,
+            classes,
+            trace: None,
+        }
+    }
+
+    /// Replay a trace file.
+    pub fn from_trace(path: PathBuf) -> Self {
+        let mut w = WorkloadSpec::table2(1, 1, 1);
+        w.trace = Some(path);
+        w
     }
 
     pub fn with_seed(mut self, seed: u64) -> Self {
@@ -116,33 +355,231 @@ impl WorkloadSpec {
         self
     }
 
-    /// Materialize the trace.
+    /// One simulated traffic day at `rate` mean requests/second total:
+    /// diurnal interactive classes (chat + RAG), MMPP-bursty agentic
+    /// sessions, and a constant offline-batch trickle. The diurnal
+    /// period spans the whole run (one "day" = one period).
+    pub fn traffic_day(rate: f64, n_requests: u32) -> Self {
+        let period_s = (n_requests as f64 / rate).max(1.0);
+        let day = |share: f64| Arrival::Diurnal {
+            rate: share * rate,
+            amplitude: 0.6,
+            period_s,
+        };
+        let agentic_turns = 6u32;
+        // MMPP session rate targeting share*rate *requests*/s: sessions
+        // carry `turns` requests and the calm/burst dwell mix has mean
+        // rate 1.5x the calm rate (calm 300s at x + burst 60s at 4x)
+        let agentic_share = 0.15;
+        let calm = agentic_share * rate / (agentic_turns as f64 * 1.5);
+        let classes = vec![
+            ClassSpec::new(
+                "chat",
+                0.55,
+                day(0.55),
+                LenDist::LogNormal { mean: 512.0, sigma: 0.8 },
+                LenDist::LogNormal { mean: 192.0, sigma: 0.6 },
+            ),
+            ClassSpec::new(
+                "rag",
+                0.20,
+                day(0.20),
+                LenDist::ZipfMix {
+                    lo: 1024,
+                    hi: 4096,
+                    long_lo: 8192,
+                    long_hi: 16384,
+                    frac_long: 0.08,
+                },
+                LenDist::LogNormal { mean: 256.0, sigma: 0.5 },
+            ),
+            ClassSpec::new(
+                "agentic",
+                agentic_share,
+                Arrival::Mmpp {
+                    rate: calm,
+                    burst_rate: 4.0 * calm,
+                    calm_s: 300.0,
+                    burst_s: 60.0,
+                },
+                LenDist::LogNormal { mean: 768.0, sigma: 0.6 },
+                LenDist::LogNormal { mean: 256.0, sigma: 0.6 },
+            )
+            .with_turns(agentic_turns, 4.0),
+            ClassSpec::new(
+                "batch",
+                0.10,
+                Arrival::Uniform { rate: 0.10 * rate },
+                LenDist::LogNormal { mean: 2048.0, sigma: 0.4 },
+                LenDist::LogNormal { mean: 64.0, sigma: 0.4 },
+            ),
+        ];
+        WorkloadSpec::classes(classes, n_requests)
+    }
+
+    /// Named single-class presets (`chat`, `rag`, `agentic`, `batch`)
+    /// or the mixed `day`; `rate` overrides each preset's default mean
+    /// request rate.
+    pub fn preset(name: &str, rate: Option<f64>, n_requests: u32) -> Result<Self> {
+        if let Some(r) = rate {
+            if !r.is_finite() || r <= 0.0 {
+                bail!("workload rate must be finite and > 0, got {r}");
+            }
+        }
+        let day = Self::traffic_day(rate.unwrap_or(30.0), n_requests);
+        let single = |i: usize, default_rate: f64| {
+            let mut c = day.classes[i].clone();
+            c.weight = 1.0;
+            // re-target the class's own arrival process at the
+            // requested rate (presets default to the day-mix shape)
+            let r = rate.unwrap_or(default_rate);
+            c.arrival = match c.arrival {
+                Arrival::Diurnal { amplitude, period_s, .. } => {
+                    Arrival::Diurnal { rate: r, amplitude, period_s }
+                }
+                Arrival::Mmpp { calm_s, burst_s, .. } => {
+                    let calm = r / (c.turns as f64 * 1.5);
+                    Arrival::Mmpp { rate: calm, burst_rate: 4.0 * calm, calm_s, burst_s }
+                }
+                _ => Arrival::Poisson { rate: r },
+            };
+            Ok(WorkloadSpec::classes(vec![c], n_requests))
+        };
+        match name {
+            "day" => Ok(day),
+            "chat" => single(0, 20.0),
+            "rag" => single(1, 5.0),
+            "agentic" => single(2, 5.0),
+            "batch" => single(3, 2.0),
+            other => bail!(
+                "unknown workload preset '{other}' (expected chat|rag|agentic|batch|day, \
+                 optionally ':<rate>', or trace:<file>)"
+            ),
+        }
+    }
+
+    /// Parse a `--workload` value: `<preset>[:<rate>]` or
+    /// `trace:<file>`. The grammar is comma-free on purpose so
+    /// `--axis workload=chat:20,day:50` sweeps cleanly.
+    pub fn parse_spec(spec: &str, n_requests: u32) -> Result<Self> {
+        match spec.split_once(':') {
+            Some(("trace", path)) if !path.is_empty() => {
+                Ok(WorkloadSpec::from_trace(PathBuf::from(path)))
+            }
+            Some(("trace", _)) => bail!("trace: needs a file path (trace:<file>)"),
+            Some((name, rate)) => {
+                let r: f64 = rate
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad workload rate '{rate}' in '{spec}'"))?;
+                Self::preset(name, Some(r), n_requests)
+            }
+            None => Self::preset(spec, None, n_requests),
+        }
+    }
+
+    /// Class names for per-class reporting (empty for flat specs).
+    pub fn class_names(&self) -> Vec<String> {
+        self.classes.iter().map(|c| c.name.clone()).collect()
+    }
+
+    /// Reject parameter combinations that panic, hang, or silently
+    /// produce NaN timestamps. Called from
+    /// [`ExperimentConfig::validate`](crate::config::ExperimentConfig::validate)
+    /// so bad workloads fail loudly at config-build time.
+    pub fn validate(&self) -> Result<()> {
+        if self.trace.is_some() {
+            return Ok(()); // trace contents are validated on load
+        }
+        if self.n_requests == 0 {
+            bail!("empty workload");
+        }
+        if self.classes.is_empty() {
+            self.arrival.validate()?;
+            self.input.validate()?;
+            self.output.validate()
+        } else {
+            for c in &self.classes {
+                c.validate()?;
+            }
+            Ok(())
+        }
+    }
+
+    /// Materialize the request list: load + validate the trace file if
+    /// one is set, otherwise generate synthetically.
+    pub fn materialize(&self) -> Result<Vec<RequestSpec>> {
+        match &self.trace {
+            Some(path) => trace_from_file(path),
+            None => Ok(self.generate()),
+        }
+    }
+
+    /// Materialize a synthetic trace. Trace-replay specs go through
+    /// [`WorkloadSpec::materialize`] instead.
     pub fn generate(&self) -> Vec<RequestSpec> {
+        debug_assert!(self.trace.is_none(), "trace replay goes through materialize()");
+        if self.classes.is_empty() {
+            return self.generate_flat();
+        }
+        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let mut out: Vec<RequestSpec> = Vec::with_capacity(self.n_requests as usize);
+        let mut remaining = self.n_requests;
+        for (ci, class) in self.classes.iter().enumerate() {
+            // rate share -> request count; the last class absorbs
+            // rounding so the total is exact
+            let n = if ci + 1 == self.classes.len() {
+                remaining
+            } else {
+                let share = (self.n_requests as f64 * class.weight / total_w).round() as u32;
+                share.min(remaining)
+            };
+            remaining -= n;
+            // independent per-class RNG stream: adding or re-weighting
+            // one class never perturbs another class's draws
+            let mut rng =
+                Pcg64::new(self.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(ci as u64 + 1));
+            let mut arrivals = ArrivalGen::new(&class.arrival, &mut rng);
+            let mut made = 0u32;
+            while made < n {
+                let mut t = arrivals.next(&mut rng);
+                for turn in 0..class.turns {
+                    if made >= n {
+                        break;
+                    }
+                    if turn > 0 && class.think_s > 0.0 {
+                        t += rng.exp(1.0 / class.think_s);
+                    }
+                    out.push(RequestSpec {
+                        arrival: SimTime::from_secs_f64(t),
+                        input_len: class.input.sample(&mut rng).max(1),
+                        output_len: class.output.sample(&mut rng).max(1),
+                        class: ci as u16,
+                    });
+                    made += 1;
+                }
+            }
+        }
+        // stable by arrival: ties keep class order, so the merged trace
+        // is deterministic
+        out.sort_by_key(|r| r.arrival);
+        out
+    }
+
+    fn generate_flat(&self) -> Vec<RequestSpec> {
         let mut rng = Pcg64::new(self.seed);
-        let mut t = 0.0f64;
+        let mut arrivals = ArrivalGen::new(&self.arrival, &mut rng);
         (0..self.n_requests)
             .map(|_| {
-                let arrival = match self.arrival {
-                    Arrival::Batch => SimTime::ZERO,
-                    Arrival::Poisson { rate } => {
-                        t += rng.exp(rate);
-                        SimTime::from_secs_f64(t)
-                    }
-                    Arrival::Gamma { rate, cv } => {
-                        let shape = 1.0 / (cv * cv);
-                        let scale = 1.0 / (rate * shape);
-                        t += rng.gamma(shape) * scale;
-                        SimTime::from_secs_f64(t)
-                    }
-                    Arrival::Uniform { rate } => {
-                        t += 1.0 / rate;
-                        SimTime::from_secs_f64(t)
-                    }
-                };
+                let t = arrivals.next(&mut rng);
                 RequestSpec {
-                    arrival,
+                    arrival: if matches!(self.arrival, Arrival::Batch) {
+                        SimTime::ZERO
+                    } else {
+                        SimTime::from_secs_f64(t)
+                    },
                     input_len: self.input.sample(&mut rng).max(1),
                     output_len: self.output.sample(&mut rng).max(1),
+                    class: 0,
                 }
             })
             .collect()
@@ -160,30 +597,135 @@ pub fn trace_to_json(trace: &[RequestSpec]) -> crate::config::json::Json {
                     ("arrival_s", Json::Num(r.arrival.as_secs_f64())),
                     ("input_len", Json::Num(r.input_len as f64)),
                     ("output_len", Json::Num(r.output_len as f64)),
+                    ("class", Json::Num(r.class as f64)),
                 ])
             })
             .collect(),
     )
 }
 
-/// Load a trace from the JSON produced by [`trace_to_json`].
-pub fn trace_from_json(v: &crate::config::json::Json) -> anyhow::Result<Vec<RequestSpec>> {
-    v.as_arr()?
-        .iter()
-        .map(|r| {
-            Ok(RequestSpec {
-                arrival: SimTime::from_secs_f64(r.req("arrival_s")?.as_f64()?),
-                input_len: r.req("input_len")?.as_u64()? as u32,
-                output_len: r.req("output_len")?.as_u64()? as u32,
-            })
-        })
-        .collect()
+/// Serialize a trace in the compact text form: a header comment, then
+/// one `arrival_s input_len output_len class` line per request.
+pub fn trace_to_text(trace: &[RequestSpec]) -> String {
+    let mut s = String::with_capacity(trace.len() * 24 + 64);
+    s.push_str("# frontier trace v1: arrival_s input_len output_len class\n");
+    for r in trace {
+        s.push_str(&format!(
+            "{:.6} {} {} {}\n",
+            r.arrival.as_secs_f64(),
+            r.input_len,
+            r.output_len,
+            r.class
+        ));
+    }
+    s
 }
 
-/// Load a trace file (JSON array of `{arrival_s, input_len, output_len}`).
-pub fn trace_from_file(path: &std::path::Path) -> anyhow::Result<Vec<RequestSpec>> {
-    let text = std::fs::read_to_string(path)?;
-    trace_from_json(&crate::config::json::Json::parse(&text)?)
+/// Validate raw trace rows and build the request list: arrivals must be
+/// finite, non-negative, and non-decreasing; lengths in `1..=u32::MAX`.
+/// The coordinator schedules whatever it is given, so garbage rows must
+/// die here, not "succeed" with nonsense timestamps.
+fn build_trace(rows: Vec<(f64, u64, u64, u64)>) -> Result<Vec<RequestSpec>> {
+    if rows.is_empty() {
+        bail!("empty trace");
+    }
+    let mut prev = 0.0f64;
+    let mut out = Vec::with_capacity(rows.len());
+    for (i, (arrival_s, input, output, class)) in rows.into_iter().enumerate() {
+        if !arrival_s.is_finite() || arrival_s < 0.0 {
+            bail!("trace row {i}: arrival_s must be finite and >= 0, got {arrival_s}");
+        }
+        if arrival_s < prev {
+            bail!("trace row {i}: arrivals not sorted ({arrival_s} after {prev})");
+        }
+        prev = arrival_s;
+        let len = |name: &str, v: u64| -> Result<u32> {
+            if v == 0 || v > u32::MAX as u64 {
+                bail!("trace row {i}: {name} must be in 1..=u32::MAX, got {v}");
+            }
+            Ok(v as u32)
+        };
+        if class > u16::MAX as u64 {
+            bail!("trace row {i}: class must fit in u16, got {class}");
+        }
+        out.push(RequestSpec {
+            arrival: SimTime::from_secs_f64(arrival_s),
+            input_len: len("input_len", input)?,
+            output_len: len("output_len", output)?,
+            class: class as u16,
+        });
+    }
+    Ok(out)
+}
+
+/// Load a trace from the JSON produced by [`trace_to_json`] (the
+/// `class` field is optional and defaults to 0). Rows are validated —
+/// see [`trace_from_file`].
+pub fn trace_from_json(v: &crate::config::json::Json) -> Result<Vec<RequestSpec>> {
+    let rows = v
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            let class = match r.get("class") {
+                Some(c) => c.as_u64()?,
+                None => 0,
+            };
+            Ok((
+                r.req("arrival_s")?.as_f64()?,
+                r.req("input_len")?.as_u64()?,
+                r.req("output_len")?.as_u64()?,
+                class,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    build_trace(rows)
+}
+
+/// Parse the compact text trace form written by [`trace_to_text`]:
+/// `#`-comment and blank lines are skipped, data lines carry
+/// whitespace-separated `arrival_s input_len output_len [class]`.
+pub fn trace_from_text(text: &str) -> Result<Vec<RequestSpec>> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut f = line.split_whitespace();
+        let mut field = |name: &str| {
+            f.next().ok_or_else(|| {
+                anyhow::anyhow!("trace line {}: missing {name}", lineno + 1)
+            })
+        };
+        let arrival: f64 = field("arrival_s")?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("trace line {}: bad arrival_s", lineno + 1))?;
+        let nums = |s: &str| -> Result<u64> {
+            s.parse()
+                .map_err(|_| anyhow::anyhow!("trace line {}: bad integer '{s}'", lineno + 1))
+        };
+        let input = nums(field("input_len")?)?;
+        let output = nums(field("output_len")?)?;
+        let class = match f.next() {
+            Some(c) => nums(c)?,
+            None => 0,
+        };
+        rows.push((arrival, input, output, class));
+    }
+    build_trace(rows)
+}
+
+/// Load a trace file: JSON (`[{arrival_s, input_len, output_len,
+/// class?}, ...]`) or the compact text form, sniffed by the leading
+/// character. Arrivals are validated monotonic non-negative on load.
+pub fn trace_from_file(path: &std::path::Path) -> Result<Vec<RequestSpec>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read trace {path:?}: {e}"))?;
+    if text.trim_start().starts_with('[') {
+        trace_from_json(&crate::config::json::Json::parse(&text)?)
+    } else {
+        trace_from_text(&text)
+    }
 }
 
 #[cfg(test)]
@@ -255,5 +797,171 @@ mod tests {
         let back = trace_from_json(&j).unwrap();
         assert_eq!(trace.len(), back.len());
         assert_eq!(trace[7].input_len, back[7].input_len);
+    }
+
+    #[test]
+    fn trace_text_round_trip_keeps_classes() {
+        let trace = WorkloadSpec::traffic_day(50.0, 200).generate();
+        let text = trace_to_text(&trace);
+        let back = trace_from_text(&text).unwrap();
+        assert_eq!(trace.len(), back.len());
+        for (a, b) in trace.iter().zip(&back) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.output_len, b.output_len);
+            // text form rounds arrivals to 1µs
+            assert!((a.arrival.as_secs_f64() - b.arrival.as_secs_f64()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn trace_rejects_garbage_rows() {
+        // unsorted
+        let t = "1.0 10 10 0\n0.5 10 10 0\n";
+        assert!(trace_from_text(t).unwrap_err().to_string().contains("not sorted"));
+        // negative
+        let t = "-1.0 10 10 0\n";
+        assert!(trace_from_text(t).unwrap_err().to_string().contains(">= 0"));
+        // NaN
+        let t = "NaN 10 10 0\n";
+        assert!(trace_from_text(t).is_err());
+        // zero-length request
+        let t = "0.0 0 10 0\n";
+        assert!(trace_from_text(t).unwrap_err().to_string().contains("input_len"));
+        // empty
+        assert!(trace_from_text("# nothing\n").unwrap_err().to_string().contains("empty"));
+        // JSON path hits the same validator
+        use crate::config::json::Json;
+        let j = Json::parse(
+            r#"[{"arrival_s": 2.0, "input_len": 4, "output_len": 4},
+                {"arrival_s": 1.0, "input_len": 4, "output_len": 4}]"#,
+        )
+        .unwrap();
+        assert!(trace_from_json(&j).unwrap_err().to_string().contains("not sorted"));
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        // satellite regressions: each of these previously panicked,
+        // diverged, or produced NaN timestamps deep inside generate()
+        assert!(LenDist::Uniform { lo: 9, hi: 3 }.validate().is_err());
+        assert!(LenDist::Fixed(0).validate().is_err());
+        assert!(Arrival::Gamma { rate: 1.0, cv: 0.0 }.validate().is_err());
+        assert!(Arrival::Poisson { rate: 0.0 }.validate().is_err());
+        assert!(Arrival::Poisson { rate: -2.0 }.validate().is_err());
+        assert!(Arrival::Uniform { rate: f64::NAN }.validate().is_err());
+        assert!(Arrival::Diurnal { rate: 1.0, amplitude: 1.5, period_s: 60.0 }
+            .validate()
+            .is_err());
+        assert!(Arrival::Mmpp { rate: 1.0, burst_rate: 0.0, calm_s: 10.0, burst_s: 1.0 }
+            .validate()
+            .is_err());
+        let mut w = WorkloadSpec::table2(16, 128, 64);
+        assert!(w.validate().is_ok());
+        w.input = LenDist::Uniform { lo: 100, hi: 10 };
+        assert!(w.validate().is_err());
+        w = WorkloadSpec::table2(0, 128, 64);
+        assert!(w.validate().unwrap_err().to_string().contains("empty workload"));
+        let mut day = WorkloadSpec::traffic_day(30.0, 100);
+        assert!(day.validate().is_ok());
+        day.classes[0].weight = -1.0;
+        assert!(day.validate().is_err());
+    }
+
+    #[test]
+    fn lendist_mean_survives_long_context_bounds() {
+        // (lo + hi) as u32 used to overflow for long-context bounds
+        let d = LenDist::Uniform { lo: 3_000_000_000, hi: 3_000_000_002 };
+        assert_eq!(d.mean(), 3_000_000_001.0);
+    }
+
+    #[test]
+    fn traffic_day_mix_matches_shares() {
+        let trace = WorkloadSpec::traffic_day(100.0, 4000).generate();
+        assert_eq!(trace.len(), 4000);
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival), "sorted");
+        let count = |c: u16| trace.iter().filter(|r| r.class == c).count() as f64 / 4000.0;
+        assert!((count(0) - 0.55).abs() < 0.01, "chat share {}", count(0));
+        assert!((count(1) - 0.20).abs() < 0.01, "rag share {}", count(1));
+        assert!((count(2) - 0.15).abs() < 0.01, "agentic share {}", count(2));
+        assert!((count(3) - 0.10).abs() < 0.01, "batch share {}", count(3));
+        // deterministic
+        assert_eq!(trace, WorkloadSpec::traffic_day(100.0, 4000).generate());
+    }
+
+    #[test]
+    fn diurnal_rate_and_mmpp_rate_roughly_match_targets() {
+        let w = WorkloadSpec::classes(
+            vec![ClassSpec::new(
+                "d",
+                1.0,
+                Arrival::Diurnal { rate: 10.0, amplitude: 0.6, period_s: 500.0 },
+                LenDist::Fixed(8),
+                LenDist::Fixed(8),
+            )],
+            10_000,
+        );
+        let trace = w.generate();
+        let span = trace.last().unwrap().arrival.as_secs_f64();
+        let rate = trace.len() as f64 / span;
+        assert!((rate - 10.0).abs() < 1.0, "diurnal mean rate {rate}");
+        // peak phase (sin > 0) should see visibly more arrivals than trough
+        let phase = |t: f64| (t / 500.0).fract();
+        let hi = trace.iter().filter(|r| phase(r.arrival.as_secs_f64()) < 0.5).count();
+        let lo = trace.len() - hi;
+        assert!(hi as f64 > 1.3 * lo as f64, "diurnal modulation visible: {hi} vs {lo}");
+
+        let w = WorkloadSpec::classes(
+            vec![ClassSpec::new(
+                "m",
+                1.0,
+                Arrival::Mmpp { rate: 2.0, burst_rate: 8.0, calm_s: 30.0, burst_s: 6.0 },
+                LenDist::Fixed(8),
+                LenDist::Fixed(8),
+            )],
+            10_000,
+        );
+        let trace = w.generate();
+        let span = trace.last().unwrap().arrival.as_secs_f64();
+        let rate = trace.len() as f64 / span;
+        // stationary mean = (2*30 + 8*6)/36 = 3.0
+        assert!((rate - 3.0).abs() < 0.5, "mmpp mean rate {rate}");
+    }
+
+    #[test]
+    fn agentic_sessions_space_turns_by_think_time() {
+        let w = WorkloadSpec::classes(
+            vec![ClassSpec::new(
+                "agent",
+                1.0,
+                Arrival::Poisson { rate: 0.5 },
+                LenDist::Fixed(64),
+                LenDist::Fixed(16),
+            )
+            .with_turns(4, 10.0)],
+            400,
+        );
+        let trace = w.generate();
+        assert_eq!(trace.len(), 400);
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        // 100 sessions of 4 turns at ~10s think time stretch the span
+        // well past the session-arrival span alone (~200s)
+        let span = trace.last().unwrap().arrival.as_secs_f64();
+        assert!(span > 200.0, "think time extends the span: {span}");
+    }
+
+    #[test]
+    fn preset_grammar_parses_and_rejects() {
+        let w = WorkloadSpec::parse_spec("chat", 100).unwrap();
+        assert_eq!(w.classes.len(), 1);
+        assert_eq!(w.classes[0].name, "chat");
+        let w = WorkloadSpec::parse_spec("day:80", 100).unwrap();
+        assert_eq!(w.classes.len(), 4);
+        let w = WorkloadSpec::parse_spec("trace:/tmp/x.trace", 100).unwrap();
+        assert!(w.trace.is_some());
+        assert!(WorkloadSpec::parse_spec("nope", 100).is_err());
+        assert!(WorkloadSpec::parse_spec("chat:zero", 100).is_err());
+        assert!(WorkloadSpec::parse_spec("chat:-4", 100).is_err());
+        assert!(WorkloadSpec::parse_spec("trace:", 100).is_err());
     }
 }

@@ -16,6 +16,8 @@ fn af_cfg(routing: RoutingPolicy, clusters: u32, placement: PlacementPolicy) -> 
             output: LenDist::Fixed(24),
             n_requests: 24,
             seed: 11,
+            classes: vec![],
+            trace: None,
         })
         .with_seed(11)
         .with_moe_routing(routing)

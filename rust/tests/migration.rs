@@ -58,12 +58,12 @@ fn drifting_run_with_migration_beats_static_placement() {
         off.metrics.ep_imbalance_mean()
     );
     // ...and lower mean step time despite the migration stalls
-    assert_eq!(off.metrics.tbt.len(), mig.metrics.tbt.len());
+    assert_eq!(off.metrics.tbt.count(), mig.metrics.tbt.count());
     assert!(
-        mean(&mig.metrics.tbt) < mean(&off.metrics.tbt),
+        mig.metrics.tbt.mean() < off.metrics.tbt.mean(),
         "mean tbt: migrating {:.6} vs static {:.6}",
-        mean(&mig.metrics.tbt),
-        mean(&off.metrics.tbt)
+        mig.metrics.tbt.mean(),
+        off.metrics.tbt.mean()
     );
     assert!(
         mig.sim_duration < off.sim_duration,
@@ -77,18 +77,22 @@ fn drifting_run_with_migration_beats_static_placement() {
 fn post_flip_step_times_recover() {
     // after the popularity flips, the migrating run's step times come
     // back down while the static placement stays stale: compare the
-    // tail (the final popularity epoch) of the two tbt streams
-    let off = frontier::run_experiment(&drift_cfg()).unwrap();
-    let mig = frontier::run_experiment(&drift_cfg().with_migration(1.1, 8)).unwrap();
-    let tail = |xs: &[f64]| {
+    // tail (the final popularity epoch) of the two tbt streams. The
+    // digests don't keep per-sample order, so this test opts into raw
+    // sample retention.
+    let off = frontier::run_experiment(&drift_cfg().with_raw_samples()).unwrap();
+    let mig =
+        frontier::run_experiment(&drift_cfg().with_migration(1.1, 8).with_raw_samples()).unwrap();
+    let tail = |r: &frontier::metrics::SimReport| {
+        let xs = &r.metrics.raw.as_ref().expect("raw samples kept").tbt;
         let n = xs.len().min(300);
         mean(&xs[xs.len() - n..])
     };
     assert!(
-        tail(&mig.metrics.tbt) < tail(&off.metrics.tbt),
+        tail(&mig) < tail(&off),
         "post-flip tbt: migrating {:.6} vs static {:.6}",
-        tail(&mig.metrics.tbt),
-        tail(&off.metrics.tbt)
+        tail(&mig),
+        tail(&off)
     );
 }
 
@@ -145,7 +149,7 @@ fn stationary_skew_migrates_once_and_settles() {
         mig.metrics.migrations
     );
     assert!(mig.metrics.ep_imbalance_mean() < off.metrics.ep_imbalance_mean());
-    assert!(mean(&mig.metrics.tbt) < mean(&off.metrics.tbt));
+    assert!(mig.metrics.tbt.mean() < off.metrics.tbt.mean());
 }
 
 #[test]

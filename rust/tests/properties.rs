@@ -442,6 +442,8 @@ fn prop_simulation_conserves_requests_and_tokens() {
             output: LenDist::Fixed(output),
             n_requests: n,
             seed: g.seed,
+            classes: vec![],
+            trace: None,
         };
         let model =
             if g.bool() { ModelConfig::tiny() } else { ModelConfig::tiny_moe() };
@@ -455,12 +457,12 @@ fn prop_simulation_conserves_requests_and_tokens() {
         let report = frontier::run_experiment(&cfg).unwrap();
         assert_eq!(report.metrics.completed_requests, n as u64);
         assert_eq!(report.metrics.output_tokens, n as u64 * output as u64);
-        assert_eq!(report.metrics.ttft.len(), n as usize);
-        assert_eq!(report.metrics.e2e.len(), n as usize);
+        assert_eq!(report.metrics.ttft.count(), n as u64);
+        assert_eq!(report.metrics.e2e.count(), n as u64);
         // TTFT <= e2e pairwise is not directly paired here, but means are
         assert!(
-            frontier::metrics::mean(&report.metrics.ttft)
-                <= frontier::metrics::mean(&report.metrics.e2e) + 1e-12
+            report.metrics.ttft.mean()
+                <= report.metrics.e2e.mean() + 1e-12
         );
     });
 }
@@ -491,6 +493,8 @@ fn prop_memory_pressure_never_loses_requests() {
                 output: LenDist::Fixed(g.u32(4, 32)),
                 n_requests: g.u32(8, 32),
                 seed: g.seed,
+                classes: vec![],
+                trace: None,
             },
         );
         cfg.policy = PolicyConfig {

@@ -17,6 +17,8 @@ fn fixed_workload(n: u32, input: u32, output: u32) -> WorkloadSpec {
         output: LenDist::Fixed(output),
         n_requests: n,
         seed: 7,
+        classes: vec![],
+        trace: None,
     }
 }
 
@@ -123,8 +125,8 @@ fn heterogeneous_gpu_pd_end_to_end() {
     }
     // the H100 prefill pool is strictly faster silicon: prefill-bound
     // TTFT must improve while the shared A800 decode stage pins TBT
-    let slow_ttft = frontier::metrics::mean(&slow.metrics.ttft);
-    let fast_ttft = frontier::metrics::mean(&fast.metrics.ttft);
+    let slow_ttft = slow.metrics.ttft.mean();
+    let fast_ttft = fast.metrics.ttft.mean();
     assert!(
         fast_ttft < slow_ttft,
         "H100 prefill TTFT {fast_ttft:.4}s must beat A800 {slow_ttft:.4}s"

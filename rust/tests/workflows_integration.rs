@@ -2,7 +2,6 @@
 //! against analytically computable expectations.
 
 use frontier::config::{ExperimentConfig, OverheadConfig, PolicyConfig};
-use frontier::metrics::percentile;
 use frontier::model::ModelConfig;
 use frontier::moe::RoutingPolicy;
 use frontier::predictor::PredictorKind;
@@ -15,6 +14,8 @@ fn base_workload(n: u32, input: u32, output: u32) -> WorkloadSpec {
         output: LenDist::Fixed(output),
         n_requests: n,
         seed: 3,
+        classes: vec![],
+        trace: None,
     }
 }
 
@@ -55,14 +56,16 @@ fn pd_disaggregation_isolates_decode_from_prefill_bursts() {
         output: LenDist::Fixed(96),
         n_requests: 60,
         seed: 11,
+        classes: vec![],
+        trace: None,
     };
     let colo = ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 2)
         .with_workload(w.clone());
     let pd = ExperimentConfig::pd(ModelConfig::qwen2_7b(), 1, 1).with_workload(w);
     let colo_r = frontier::run_experiment(&colo).unwrap();
     let pd_r = frontier::run_experiment(&pd).unwrap();
-    let colo_tbt = percentile(&colo_r.metrics.tbt, 99.0);
-    let pd_tbt = percentile(&pd_r.metrics.tbt, 99.0);
+    let colo_tbt = colo_r.metrics.tbt.quantile(99.0);
+    let pd_tbt = pd_r.metrics.tbt.quantile(99.0);
     assert!(
         pd_tbt < colo_tbt,
         "PD p99 TBT {pd_tbt:.4}s should beat co-located {colo_tbt:.4}s on the same GPUs"
@@ -134,6 +137,8 @@ fn vidur_predictor_is_systematically_optimistic() {
         output: LenDist::Fixed(96),
         n_requests: 48,
         seed: 5,
+        classes: vec![],
+        trace: None,
     };
     let cfg = ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 1).with_workload(w);
     let oracle_r = frontier::run_experiment(&cfg.clone()).unwrap();
@@ -157,6 +162,8 @@ fn sjf_beats_fcfs_on_mean_ttft_under_skew() {
         output: LenDist::Fixed(8),
         n_requests: 40,
         seed: 17,
+        classes: vec![],
+        trace: None,
     };
     let mut fcfs = ExperimentConfig::colocated(ModelConfig::tiny(), 1).with_workload(w);
     fcfs.policy.budget.max_batch = 4;
@@ -164,8 +171,8 @@ fn sjf_beats_fcfs_on_mean_ttft_under_skew() {
     sjf.policy.batch = frontier::scheduler::BatchPolicy::Sjf;
     let fcfs_r = frontier::run_experiment(&fcfs).unwrap();
     let sjf_r = frontier::run_experiment(&sjf).unwrap();
-    let fcfs_ttft = frontier::metrics::mean(&fcfs_r.metrics.ttft);
-    let sjf_ttft = frontier::metrics::mean(&sjf_r.metrics.ttft);
+    let fcfs_ttft = fcfs_r.metrics.ttft.mean();
+    let sjf_ttft = sjf_r.metrics.ttft.mean();
     assert!(
         sjf_ttft < fcfs_ttft,
         "SJF mean TTFT {sjf_ttft:.4}s should beat FCFS {fcfs_ttft:.4}s"
@@ -182,6 +189,8 @@ fn chunked_prefill_caps_tbt_inflation() {
         output: LenDist::Fixed(64),
         n_requests: 50,
         seed: 23,
+        classes: vec![],
+        trace: None,
     };
     let mut unbounded = ExperimentConfig::colocated(ModelConfig::qwen2_7b(), 1).with_workload(w);
     unbounded.policy.budget.max_prefill_tokens = u32::MAX;
@@ -189,8 +198,8 @@ fn chunked_prefill_caps_tbt_inflation() {
     chunked.policy.budget.max_prefill_tokens = 512;
     let u = frontier::run_experiment(&unbounded).unwrap();
     let c = frontier::run_experiment(&chunked).unwrap();
-    let u_tbt = percentile(&u.metrics.tbt, 99.0);
-    let c_tbt = percentile(&c.metrics.tbt, 99.0);
+    let u_tbt = u.metrics.tbt.quantile(99.0);
+    let c_tbt = c.metrics.tbt.quantile(99.0);
     assert!(
         c_tbt < u_tbt,
         "chunked p99 TBT {c_tbt:.4}s should beat unbounded {u_tbt:.4}s"
