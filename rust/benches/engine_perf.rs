@@ -178,6 +178,49 @@ fn main() {
     json.push(("sweep_4t_s", Json::Num(par4.mean.as_secs_f64())));
     json.push(("sweep_speedup_4t", Json::Num(sweep_speedup)));
 
+    section("single-run parallel engine (--sim-threads, 5-shard graph)");
+    // one prefill pool fanning out to four cross-cluster decode pools:
+    // five stage shards, decode work spread across four of them — the
+    // shape the windowed engine is built for. Long fixed-input prefills
+    // keep the sync window wide (the cheapest kv edge sizes it).
+    let mk_single = |threads: u32| {
+        let mut f = FlagMap::new();
+        f.set("model", "qwen2-7b");
+        f.set(
+            "stages",
+            "prefill:4;decode:2,cluster=1;decode:2,cluster=1;decode:2,cluster=1;decode:2,cluster=1",
+        );
+        f.set("edges", "0>1,0>2,0>3,0>4");
+        f.set("requests", if quick() { "160" } else { "600" });
+        f.set("input", "512");
+        f.set("output", "64");
+        f.set("sim-threads", threads.to_string());
+        frontier::config::cli::build_config(&f).unwrap()
+    };
+    // determinism first: the 4-thread run must be byte-identical to the
+    // serial run, or the timing below compares different simulations
+    let rep1 = frontier::run_experiment(&mk_single(1)).unwrap();
+    let rep4 = frontier::run_experiment(&mk_single(4)).unwrap();
+    assert_eq!(
+        rep1.to_json_deterministic().to_string_pretty(),
+        rep4.to_json_deterministic().to_string_pretty(),
+        "single-run report must be byte-identical across sim-thread counts"
+    );
+    let cfg1 = mk_single(1);
+    let single_serial = bench("single run, sim-threads 1", || {
+        std::hint::black_box(frontier::run_experiment(&cfg1).unwrap().sim_duration);
+    });
+    let cfg4 = mk_single(4);
+    let single_4t = bench("single run, sim-threads 4", || {
+        std::hint::black_box(frontier::run_experiment(&cfg4).unwrap().sim_duration);
+    });
+    let single_speedup =
+        single_serial.mean.as_secs_f64() / single_4t.mean.as_secs_f64().max(1e-12);
+    println!("single-run scaling: {single_speedup:.2}x with 4 engine threads");
+    json.push(("single_run_serial_s", Json::Num(single_serial.mean.as_secs_f64())));
+    json.push(("single_run_4t_s", Json::Num(single_4t.mean.as_secs_f64())));
+    json.push(("single_run_speedup_4t", Json::Num(single_speedup)));
+
     let current = Json::obj(json);
     write_results("BENCH_engine_perf.json", &current.to_string_pretty());
 
@@ -247,6 +290,17 @@ fn main() {
                 tol: 0.0,
                 needs_calibration: false,
                 two_sided: true,
+            },
+            // single-run engine scaling: like sweep_speedup_4t this is a
+            // wall-clock *ratio*, stable across hardware classes, so it
+            // gates unconditionally — baseline 2.25 with the 20% band
+            // enforces the >= 1.8x floor on the 5-shard graph
+            BaselineCheck {
+                key: "single_run_speedup_4t",
+                higher_is_better: true,
+                tol: 0.2,
+                needs_calibration: false,
+                two_sided: false,
             },
         ],
     );

@@ -88,6 +88,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "slo-ttft",
     "slo-tbt",
     "slo-e2e",
+    "sim-threads",
     "seed",
 ];
 
@@ -410,6 +411,7 @@ pub fn build_config(a: &FlagMap) -> Result<ExperimentConfig> {
     if a.truthy("profiled") {
         cfg.overhead = OverheadConfig::profiled_real();
     }
+    cfg.sim_threads = a.num("sim-threads", 1u32)?;
     cfg.seed = a.num("seed", 1u64)?;
     Ok(cfg)
 }
@@ -477,6 +479,8 @@ mod tests {
             "32",
             "--overhead",
             "zero",
+            "--sim-threads",
+            "4",
             "--seed",
             "7",
         ])
@@ -488,6 +492,7 @@ mod tests {
         assert_eq!(cfg.policy.capacity_factor, Some(1.25));
         assert_eq!(cfg.policy.budget.max_batch, 32);
         assert_eq!(cfg.overhead, OverheadConfig::zero());
+        assert_eq!(cfg.sim_threads, 4);
         assert_eq!(cfg.seed, 7);
         assert!(cfg.validate().is_ok());
         // defaults stay defaults
@@ -578,6 +583,7 @@ mod tests {
         assert!(is_value_flag("max-batch"));
         assert!(is_value_flag("workload"), "workload mixes are a sweep axis");
         assert!(is_value_flag("slo-ttft") && is_value_flag("slo-tbt") && is_value_flag("slo-e2e"));
+        assert!(is_value_flag("sim-threads"), "single-run sharding is sweep-inert but settable");
         assert!(!is_value_flag("threads"), "driver flags are not sweepable");
         assert!(!is_value_flag("trace"), "trace replay is a simulate-only path");
         assert!(!is_value_flag("json"), "bool flags are not value flags");

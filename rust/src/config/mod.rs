@@ -183,6 +183,14 @@ pub struct ExperimentConfig {
     /// digests (memory grows with request count — oracle tests and
     /// offline analysis only).
     pub keep_raw_samples: bool,
+    /// Worker threads for a *single* simulation run (`--sim-threads`):
+    /// the coordinator shards its event loop across stage pools and
+    /// advances shards in parallel under conservative time-window
+    /// synchronization. The merged report is byte-identical to the
+    /// serial run for any value; 1 = serial. Capped at the shard count
+    /// at runtime, and forced to 1 under the learned predictor (its
+    /// execution artifacts are not thread-safe).
+    pub sim_threads: u32,
 }
 
 impl ExperimentConfig {
@@ -208,6 +216,7 @@ impl ExperimentConfig {
             seed: 1,
             slo: SloSpec::default(),
             keep_raw_samples: false,
+            sim_threads: 1,
         }
     }
 
@@ -254,6 +263,13 @@ impl ExperimentConfig {
     /// Keep raw per-request samples alongside the streaming digests.
     pub fn with_raw_samples(mut self) -> Self {
         self.keep_raw_samples = true;
+        self
+    }
+
+    /// Shard the single-run event loop across `n` worker threads
+    /// (byte-identical output for any `n`; 1 = serial).
+    pub fn with_sim_threads(mut self, n: u32) -> Self {
+        self.sim_threads = n;
         self
     }
 
@@ -398,6 +414,9 @@ impl ExperimentConfig {
         self.slo.validate()?;
         if self.ep_clusters == 0 {
             bail!("ep_clusters must be >= 1");
+        }
+        if self.sim_threads == 0 {
+            bail!("sim_threads must be >= 1");
         }
         if !self.nic_ingress_scale.is_finite() || self.nic_ingress_scale <= 0.0 {
             bail!("nic_ingress_scale must be positive and finite");

@@ -34,9 +34,48 @@
 //! tracked load diverges from the placement's assumption, charges the
 //! weight moves through the EP fabric, and stalls the stage's replicas
 //! for the transfer makespan ([`crate::moe::migration`]).
+//!
+//! # Parallel engine (`--sim-threads`)
+//!
+//! A single run is sharded across **stage shards**: all entry stages
+//! (which share arrival routing) form shard 0, and every
+//! KV-destination stage gets its own shard. The only cross-shard
+//! couplings are KV handoffs (strictly entry → destination: only
+//! `Prefill`-kind stages produce `PREFILL_COMPLETE`, and a prefill
+//! stage can never be a KV destination), the shared handoff fabric,
+//! and the controller-level transfer queue. The run proceeds in
+//! conservative time windows:
+//!
+//! 1. **Parallel phase** — each shard drains its own event queue up to
+//!    the window horizon `T_end = T + Δ` (`T` = earliest pending event
+//!    across shards, `Δ` = the sync window), touching only shard-local
+//!    state and appending cross-shard effects ([`PbRec`]) to a commit
+//!    list.
+//! 2. **Barrier phase** — one thread merges the commit lists in
+//!    deterministic `(time, shard, position)` order and applies them:
+//!    transfer-queue pushes, fabric charging, and KV dispatch into
+//!    destination shards (which replays destination-side frees through
+//!    a window free-ledger so a dispatch at time `t` never sees memory
+//!    freed later in the same window).
+//!
+//! `Δ` is derived from the minimum possible KV-handoff latency over
+//! every kv edge (smallest trace payload at the edge's path bandwidth,
+//! plus the path latency), so no event produced inside a window can
+//! require cross-shard delivery inside that same window. Expert a2a /
+//! migration traffic is stage-internal (it rides the stage's own EP
+//! fabric, not the inter-stage fabric) and therefore never constrains
+//! `Δ`. Because shards share no mutable state during the parallel
+//! phase and the barrier merge order is thread-count-invariant, the
+//! report is **bit-identical for any `--sim-threads` value**;
+//! single-shard graphs (co-located pools) skip windowing entirely and
+//! drain serially, exactly like the pre-sharding engine.
 
 use std::cell::RefCell;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -49,10 +88,10 @@ use crate::moe::{
     self, EpFabric, EpSpec, EpTopology, ExpertPlacement, LoadEstimator, MigrationPolicy,
 };
 use crate::network::{HierFabric, NetLoc};
-use crate::predictor::{self, ExecutionPredictor};
+use crate::predictor::{self, ExecutionPredictor, PredictorKind};
 use crate::scheduler::{self, IterBudget, QueuedReq};
 use crate::workflows::af::{af_step, AfStep};
-use crate::workflows::{BatchShape, CostCtx, CostModel};
+use crate::workflows::{BatchShape, CostCtx, CostModel, MoeEpSample};
 use crate::workload::RequestSpec;
 
 /// Request lifecycle states (§3.3's stateful workflow).
@@ -79,11 +118,43 @@ pub struct Request {
     pub last_token: SimTime,
 }
 
+/// Shard-local events. Stage indices are **shard-local** — the shard
+/// resolves them against its own `stages` vector without touching any
+/// shared map on the hot path.
 #[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrival(u64),
     IterEnd { s: usize, r: usize },
     KvDone { rid: u64, s: usize, r: usize },
+}
+
+/// A `Box<dyn ExecutionPredictor>` asserted to be `Send`.
+///
+/// [`ExecutionPredictor`] has no `Send` supertrait because the learned
+/// predictor holds thread-affine PJRT state (`Rc` + thread-locals).
+/// The engine enforces the invariant at runtime instead: when
+/// `cfg.predictor` is [`PredictorKind::Learned`] the resolved thread
+/// count is forced to 1 and no worker threads are spawned, so shards
+/// (and the predictors inside them) never leave the constructing
+/// thread. Every other predictor is plain `Send` data.
+struct SendPredictor(Box<dyn ExecutionPredictor>);
+
+// SAFETY: see the type-level invariant — a shard only crosses threads
+// when the wrapped predictor is one of the analytical (plain-data)
+// predictors; the learned predictor pins the run to one thread.
+unsafe impl Send for SendPredictor {}
+
+impl Deref for SendPredictor {
+    type Target = Box<dyn ExecutionPredictor>;
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+impl DerefMut for SendPredictor {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.0
+    }
 }
 
 /// Prebuilt AF executor state: the attention- and FFN-pool cost models
@@ -104,7 +175,7 @@ struct StageRuntime {
     /// Per-stage pricing (stage GPU, parallelism, EP placement).
     cost: CostModel,
     /// Per-stage operator-runtime predictor (stage GPU).
-    pred: Box<dyn ExecutionPredictor>,
+    pred: SendPredictor,
     budget: IterBudget,
     /// Total GPUs backing the stage (reports).
     gpus: u32,
@@ -137,36 +208,150 @@ impl StageRuntime {
     }
 }
 
-pub struct GlobalController {
+/// A cross-shard effect recorded during the parallel phase and applied
+/// serially — in deterministic merged order — at the window barrier.
+/// Per event the emission order is frees, then transfers, then one
+/// trigger, mirroring the serial handler.
+enum PbKind {
+    /// KV blocks freed on a KV-destination stage (request retired).
+    /// Feeds the window free-ledger: a dispatch at an earlier merged
+    /// timestamp must not see memory freed after it.
+    Free { gstage: usize, replica: usize, blocks: u64 },
+    /// A `PREFILL_COMPLETE` request leaving its source shard for the
+    /// controller-level transfer queue, carried by value.
+    Xfer { rid: u64, src: usize, req: Box<Request> },
+    /// Memory availability changed: re-run transfer dispatch (PD
+    /// backpressure steps 2/3).
+    Trigger,
+}
+
+/// One commit record: what happened, stamped with when.
+struct PbRec {
+    time: SimTime,
+    kind: PbKind,
+}
+
+/// A `PREFILL_COMPLETE` request awaiting a KV transfer slot, owned by
+/// the controller between its source and destination shards.
+struct PendingXfer {
+    rid: u64,
+    /// Global index of the stage that produced it.
+    src: usize,
+    req: Box<Request>,
+}
+
+/// Request ownership per shard. The entry shard owns every request
+/// from arrival (ids are dense `0..trace_len`); destination shards
+/// hold only the requests currently resident in them (sparse), moved
+/// in by value at dispatch and dropped on completion.
+enum ReqStore {
+    Dense(Vec<Option<Request>>),
+    Sparse(HashMap<u64, Request>),
+}
+
+impl ReqStore {
+    fn get(&self, rid: u64) -> &Request {
+        match self {
+            ReqStore::Dense(v) => v[rid as usize].as_ref().expect("live request"),
+            ReqStore::Sparse(m) => m.get(&rid).expect("live request"),
+        }
+    }
+
+    fn get_mut(&mut self, rid: u64) -> &mut Request {
+        match self {
+            ReqStore::Dense(v) => v[rid as usize].as_mut().expect("live request"),
+            ReqStore::Sparse(m) => m.get_mut(&rid).expect("live request"),
+        }
+    }
+
+    fn insert(&mut self, rid: u64, req: Request) {
+        match self {
+            ReqStore::Dense(v) => {
+                let i = rid as usize;
+                if v.len() <= i {
+                    v.resize_with(i + 1, || None);
+                }
+                v[i] = Some(req);
+            }
+            ReqStore::Sparse(m) => {
+                m.insert(rid, req);
+            }
+        }
+    }
+
+    fn remove(&mut self, rid: u64) -> Request {
+        match self {
+            ReqStore::Dense(v) => v[rid as usize].take().expect("live request"),
+            ReqStore::Sparse(m) => m.remove(&rid).expect("live request"),
+        }
+    }
+}
+
+/// Read-only run context shared by every shard (and worker thread).
+struct RunCtx {
     cfg: ExperimentConfig,
-    graph: StageGraphConfig,
+    /// Global stage index -> (shard, shard-local index).
+    stage_shard: Vec<(usize, usize)>,
+    /// KV-handoff successors per global stage (resolved adjacency).
+    kv_out: Vec<Vec<usize>>,
+    /// Per-stage max replica block capacity: admission checks compare
+    /// against this cache instead of re-scanning every replica's pool
+    /// per arrival (capacity is fixed at construction — replicas of a
+    /// stage are built identically and never resized).
+    stage_max_blocks: Vec<u64>,
+    /// Global stages that receive KV handoffs (their frees feed the
+    /// window free-ledger).
+    is_kv_dst: Vec<bool>,
+    /// Fabric coordinate per global stage.
+    stage_locs: Vec<NetLoc>,
+    /// Flat offset of `(global stage, replica 0)` in the free-ledger.
+    free_off: Vec<usize>,
+    /// Total replica slots in the free-ledger.
+    free_slots: usize,
+    kv_bytes_per_token: u64,
+    /// Whether any kv edge exists at all (gates barrier triggers — a
+    /// graph without handoffs never needs the dispatch path).
+    has_transfers: bool,
+}
+
+/// One shard of the parallel engine: a group of stages advanced by one
+/// worker during the parallel phase. Everything a handler mutates
+/// lives here — shards share no state until the window barrier.
+struct Shard {
     queue: EventQueue<Ev>,
-    reqs: Vec<Request>,
     stages: Vec<StageRuntime>,
-    /// Entry stages (prefill-capable, no incoming kv edge).
+    /// Shard-local -> global stage index.
+    gstage: Vec<usize>,
+    /// Shard-local indices of entry stages (non-empty only on shard 0).
     entry: Vec<usize>,
     /// Round-robin cursor for entry routing.
     entry_rr: usize,
-    /// KV-handoff successors per stage (resolved adjacency).
-    kv_out: Vec<Vec<usize>>,
-    /// Contended 3-tier fabric for stage-to-stage KV handoff.
-    fabric: HierFabric,
+    store: ReqStore,
     rng: Pcg64,
     metrics: MetricsCollector,
-    /// PREFILL_COMPLETE requests awaiting a KV transfer slot, with the
-    /// stage that produced them.
-    pending_transfers: VecDeque<(u64, usize)>,
-    /// Iteration start times per (stage, replica) for busy accounting.
+    /// Iteration start times per (local stage, replica).
     iter_started: Vec<Vec<SimTime>>,
-    /// Pending migration stall per (stage, replica), seconds: expert
-    /// weight-transfer time charged to the replica's next iteration.
+    /// Pending migration stall per (local stage, replica), seconds.
     pending_stall: Vec<Vec<f64>>,
-    /// Arrival-routing scratch, reused across requests: open-loop runs
-    /// see millions of arrivals and these used to be three fresh
-    /// allocations each.
+    /// Arrival-routing scratch, reused across requests.
     scratch_slots: Vec<(usize, usize, u64)>,
     scratch_loads: Vec<usize>,
     scratch_free: Vec<u64>,
+    /// Reusable batched-EP pricing output (AF path).
+    ep_samples: Vec<MoeEpSample>,
+    /// Cross-shard effects of the current window, time-ordered.
+    commits: Vec<PbRec>,
+}
+
+pub struct GlobalController {
+    ctx: RunCtx,
+    graph: StageGraphConfig,
+    shards: Vec<Shard>,
+    /// Contended 3-tier fabric for stage-to-stage KV handoff. Charged
+    /// only at the window barrier (serially, in merged time order).
+    fabric: HierFabric,
+    /// PREFILL_COMPLETE requests awaiting a KV transfer slot.
+    pending_transfers: VecDeque<PendingXfer>,
 }
 
 /// Convenience: build + run.
@@ -228,7 +413,7 @@ impl GlobalController {
             cost.capacity_factor = cfg.policy.capacity_factor;
             cost
         };
-        let mut stages = Vec::with_capacity(graph.stages.len());
+        let mut runtimes = Vec::with_capacity(graph.stages.len());
         for st in &graph.stages {
             let gpu = st.gpu.clone().unwrap_or_else(|| cfg.gpu.clone());
             let par = st.parallel.unwrap_or(cfg.parallel);
@@ -294,11 +479,11 @@ impl GlobalController {
                 cfg.link,
                 cfg.artifacts_dir.as_deref(),
             )?;
-            stages.push(StageRuntime {
+            runtimes.push(StageRuntime {
                 name: st.name.clone(),
                 cw,
                 cost,
-                pred,
+                pred: SendPredictor(pred),
                 budget,
                 gpus,
                 gpu_name: gpu.name.to_string(),
@@ -312,7 +497,7 @@ impl GlobalController {
             // bit-identical to the pre-migration simulator.
             if cfg.policy.migration == MigrationPolicy::Threshold {
                 if let Some(moe) = model.moe.as_ref() {
-                    let tracked = stages.last_mut().expect("just pushed").ep_cost_mut();
+                    let tracked = runtimes.last_mut().expect("just pushed").ep_cost_mut();
                     if tracked.ep.is_some() {
                         tracked.load_tracker = Some(RefCell::new(LoadEstimator::new(
                             moe.n_experts,
@@ -322,131 +507,581 @@ impl GlobalController {
                 }
             }
         }
-        let entry = graph.entry_stages();
-        let kv_out: Vec<Vec<usize>> = (0..graph.stages.len()).map(|s| graph.kv_out(s)).collect();
-        let iter_started: Vec<Vec<SimTime>> = stages
-            .iter()
-            .map(|st| vec![SimTime::ZERO; st.cw.replicas.len()])
-            .collect();
-        let pending_stall = stages.iter().map(|st| vec![0.0f64; st.cw.replicas.len()]).collect();
-        let mut metrics = MetricsCollector::default();
-        metrics.slo = cfg.slo;
-        metrics.class_names = cfg.workload.class_names();
-        if cfg.keep_raw_samples {
-            metrics.raw = Some(Box::default());
+        let n = graph.stages.len();
+        let entry_g = graph.entry_stages();
+        let kv_out: Vec<Vec<usize>> = (0..n).map(|s| graph.kv_out(s)).collect();
+        let mut is_entry = vec![false; n];
+        for &s in &entry_g {
+            is_entry[s] = true;
         }
+        let mut is_kv_dst = vec![false; n];
+        for dsts in &kv_out {
+            for &d in dsts {
+                is_kv_dst[d] = true;
+            }
+        }
+        // shard partition: the entry stages share arrival routing, so
+        // they ride shard 0 together; every other stage (always a KV
+        // destination — a non-entry stage is only reachable over a kv
+        // edge) advances independently in its own shard
+        let mut shard_stages: Vec<Vec<usize>> = vec![entry_g];
+        for (s, entry) in is_entry.iter().enumerate() {
+            if !entry {
+                shard_stages.push(vec![s]);
+            }
+        }
+        let mut stage_shard = vec![(0usize, 0usize); n];
+        for (si, list) in shard_stages.iter().enumerate() {
+            for (li, &g) in list.iter().enumerate() {
+                stage_shard[g] = (si, li);
+            }
+        }
+        let stage_max_blocks: Vec<u64> = runtimes
+            .iter()
+            .map(|st| st.cw.replicas.iter().map(|rep| rep.mem.total_blocks()).max().unwrap_or(0))
+            .collect();
+        let stage_locs: Vec<NetLoc> = runtimes.iter().map(|st| st.loc).collect();
+        let mut free_off = Vec::with_capacity(n);
+        let mut free_slots = 0usize;
+        for st in &runtimes {
+            free_off.push(free_slots);
+            free_slots += st.cw.replicas.len();
+        }
+        let has_transfers = kv_out.iter().any(|d| !d.is_empty());
+        // distribute the stage runtimes into their shards
+        let mut slots: Vec<Option<StageRuntime>> = runtimes.into_iter().map(Some).collect();
+        let shards: Vec<Shard> = shard_stages
+            .iter()
+            .enumerate()
+            .map(|(si, list)| {
+                let stages: Vec<StageRuntime> = list
+                    .iter()
+                    .map(|&g| slots[g].take().expect("each stage lives in exactly one shard"))
+                    .collect();
+                let mut metrics = MetricsCollector::default();
+                metrics.slo = cfg.slo;
+                metrics.class_names = cfg.workload.class_names();
+                if cfg.keep_raw_samples {
+                    metrics.raw = Some(Box::default());
+                }
+                let iter_started = stages
+                    .iter()
+                    .map(|st| vec![SimTime::ZERO; st.cw.replicas.len()])
+                    .collect();
+                let pending_stall =
+                    stages.iter().map(|st| vec![0.0f64; st.cw.replicas.len()]).collect();
+                Shard {
+                    queue: EventQueue::new(),
+                    gstage: list.clone(),
+                    entry: if si == 0 { (0..stages.len()).collect() } else { Vec::new() },
+                    entry_rr: 0,
+                    store: if si == 0 {
+                        ReqStore::Dense(Vec::new())
+                    } else {
+                        ReqStore::Sparse(HashMap::new())
+                    },
+                    // disjoint deterministic RNG streams: shard 0 keeps
+                    // the legacy stream (single-shard graphs stay
+                    // bit-identical to the pre-sharding engine)
+                    rng: if si == 0 {
+                        Pcg64::new(cfg.seed)
+                    } else {
+                        Pcg64::new(cfg.seed ^ 0xD1B5_4A32_D192_ED03u64.wrapping_mul(si as u64))
+                    },
+                    metrics,
+                    iter_started,
+                    pending_stall,
+                    scratch_slots: Vec::new(),
+                    scratch_loads: Vec::new(),
+                    scratch_free: Vec::new(),
+                    ep_samples: Vec::new(),
+                    commits: Vec::new(),
+                    stages,
+                }
+            })
+            .collect();
         Ok(GlobalController {
             graph,
-            queue: EventQueue::new(),
-            reqs: Vec::new(),
-            stages,
-            entry,
-            entry_rr: 0,
-            kv_out,
+            shards,
             fabric: HierFabric::new(cfg.hier_spec()),
-            rng: Pcg64::new(cfg.seed),
-            metrics,
             pending_transfers: VecDeque::new(),
-            iter_started,
-            pending_stall,
-            scratch_slots: Vec::new(),
-            scratch_loads: Vec::new(),
-            scratch_free: Vec::new(),
-            cfg,
+            ctx: RunCtx {
+                stage_shard,
+                kv_out,
+                stage_max_blocks,
+                is_kv_dst,
+                stage_locs,
+                free_off,
+                free_slots,
+                kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
+                has_transfers,
+                cfg,
+            },
         })
     }
 
     /// Execute the configured workload to completion (loading and
     /// validating the trace file first when the workload replays one).
     pub fn run(self) -> Result<SimReport> {
-        let trace = self.cfg.workload.materialize()?;
+        let trace = self.ctx.cfg.workload.materialize()?;
         self.run_with_trace(trace)
+    }
+
+    /// Conservative cross-shard synchronization horizon: the smallest
+    /// possible KV-handoff latency over every kv edge — the wire time
+    /// of the smallest trace payload at the edge path's bandwidth plus
+    /// the path latency, exactly the lower bound of
+    /// [`crate::network::Link::transfer`]'s charge. A handoff
+    /// dispatched at `t` is delivered no earlier than `t + Δ`, so
+    /// events inside a `[T, T + Δ)` window never need cross-shard
+    /// visibility within it. Floored at one tick so a window always
+    /// covers its opening timestamp.
+    fn sync_window(&self, trace: &[RequestSpec]) -> SimTime {
+        let min_input = trace.iter().map(|t| t.input_len).min().unwrap_or(1).max(1);
+        let min_bytes = min_input as f64 * self.ctx.kv_bytes_per_token as f64;
+        let spec = self.fabric.spec();
+        let mut delta: Option<SimTime> = None;
+        for (src, dsts) in self.ctx.kv_out.iter().enumerate() {
+            for &d in dsts {
+                let path = spec.path(self.ctx.stage_locs[src], self.ctx.stage_locs[d]);
+                let edge = SimTime::from_secs_f64(min_bytes / path.bandwidth)
+                    + SimTime::from_secs_f64(path.alpha);
+                delta = Some(match delta {
+                    None => edge,
+                    Some(cur) => cur.min(edge),
+                });
+            }
+        }
+        delta.unwrap_or(SimTime(1)).max(SimTime(1))
     }
 
     /// Execute an explicit request trace (trace replay) to completion.
     pub fn run_with_trace(mut self, trace: Vec<RequestSpec>) -> Result<SimReport> {
         let host_start = std::time::Instant::now();
-        for spec in trace {
-            let rid = self.reqs.len() as u64;
-            self.reqs.push(Request {
-                ts: ReqTimestamps { arrival: spec.arrival, ..Default::default() },
-                spec,
-                state: ReqState::Queued,
-                prefill_progress: 0,
-                decoded: 0,
-                last_token: SimTime::ZERO,
-            });
-            self.queue.schedule_at(self.reqs[rid as usize].spec.arrival, Ev::Arrival(rid));
-        }
-        while let Some(ev) = self.queue.pop() {
-            match ev.kind {
-                Ev::Arrival(rid) => self.on_arrival(rid),
-                Ev::IterEnd { s, r } => self.on_iter_end(s, r),
-                Ev::KvDone { rid, s, r } => self.on_kv_done(rid, s, r),
+        let trace_len = trace.len() as u64;
+        let delta = self.sync_window(&trace);
+        {
+            let s0 = &mut self.shards[0];
+            if let ReqStore::Dense(v) = &mut s0.store {
+                v.reserve(trace.len());
+            }
+            for (rid, spec) in trace.into_iter().enumerate() {
+                let rid = rid as u64;
+                let arrival = spec.arrival;
+                s0.store.insert(
+                    rid,
+                    Request {
+                        ts: ReqTimestamps { arrival, ..Default::default() },
+                        spec,
+                        state: ReqState::Queued,
+                        prefill_progress: 0,
+                        decoded: 0,
+                        last_token: SimTime::ZERO,
+                    },
+                );
+                s0.queue.schedule_at(arrival, Ev::Arrival(rid));
             }
         }
-        let unfinished = self
-            .reqs
-            .iter()
-            .filter(|r| !matches!(r.state, ReqState::Done | ReqState::Rejected))
-            .count();
-        if unfinished > 0 {
+        let GlobalController { ctx, graph: _, mut shards, mut fabric, mut pending_transfers } =
+            self;
+        // resolved worker count: never more threads than shards, and
+        // the learned predictor's thread-affine PJRT state pins the run
+        // to the constructing thread
+        let mut nthreads = (ctx.cfg.sim_threads as usize).clamp(1, shards.len());
+        if ctx.cfg.predictor == PredictorKind::Learned {
+            nthreads = 1;
+        }
+        if shards.len() == 1 {
+            Self::drain_single(&mut shards[0], &ctx, &mut fabric, &mut pending_transfers);
+        } else {
+            let mut future_frees = vec![0u64; ctx.free_slots];
+            let cells: Vec<Mutex<Shard>> = shards.into_iter().map(Mutex::new).collect();
+            Self::run_windows(
+                &cells,
+                &ctx,
+                &mut fabric,
+                &mut pending_transfers,
+                &mut future_frees,
+                delta,
+                nthreads,
+            );
+            shards = cells
+                .into_iter()
+                .map(|m| m.into_inner().expect("no shard worker panicked"))
+                .collect();
+        }
+        // merge shard-local metrics in fixed shard order (deterministic
+        // regardless of how many threads advanced the shards)
+        let mut metrics = std::mem::take(&mut shards[0].metrics);
+        for sh in shards.iter().skip(1) {
+            metrics.merge(&sh.metrics);
+        }
+        let finished = metrics.completed_requests + metrics.rejected_requests;
+        if finished < trace_len {
+            let unfinished = trace_len - finished;
             bail!("simulation stalled with {unfinished} unfinished requests");
         }
-        self.metrics.predictor_evals = self.stages.iter().map(|st| st.pred.evals()).sum();
-        let horizon = self.queue.now();
-        let stage_reports: Vec<StageReport> = self
-            .stages
+        metrics.predictor_evals = shards
             .iter()
-            .map(|st| StageReport {
-                name: st.name.clone(),
-                kind: st.cw.kind.name().to_string(),
-                replicas: st.cw.replicas.len() as u32,
-                gpus: st.gpus,
-                gpu_name: st.gpu_name.clone(),
-                iterations: st.cw.replicas.iter().map(|r| r.iterations).sum(),
-                tokens: st.cw.replicas.iter().map(|r| r.tokens_processed).sum(),
-                busy_frac: st.cw.busy_fraction(horizon),
-                peak_mem_frac: st.cw.peak_mem_frac(),
+            .flat_map(|sh| sh.stages.iter())
+            .map(|st| st.pred.evals())
+            .sum();
+        let horizon = shards.iter().map(|sh| sh.queue.now()).max().unwrap_or(SimTime::ZERO);
+        let events_processed: u64 = shards.iter().map(|sh| sh.queue.processed()).sum();
+        let stage_reports: Vec<StageReport> = ctx
+            .stage_shard
+            .iter()
+            .map(|&(si, li)| {
+                let st = &shards[si].stages[li];
+                StageReport {
+                    name: st.name.clone(),
+                    kind: st.cw.kind.name().to_string(),
+                    replicas: st.cw.replicas.len() as u32,
+                    gpus: st.gpus,
+                    gpu_name: st.gpu_name.clone(),
+                    iterations: st.cw.replicas.iter().map(|r| r.iterations).sum(),
+                    tokens: st.cw.replicas.iter().map(|r| r.tokens_processed).sum(),
+                    busy_frac: st.cw.busy_fraction(horizon),
+                    peak_mem_frac: st.cw.peak_mem_frac(),
+                }
             })
             .collect();
         // sum over the already-resolved runtime stages (cfg.n_gpus()
         // would re-lower and re-clone the whole graph)
-        let n_gpus = self.stages.iter().map(|st| st.gpus).sum();
+        let n_gpus = stage_reports.iter().map(|st| st.gpus).sum();
+        let (p_si, p_li) = ctx.stage_shard[0];
         Ok(SimReport {
-            mode: self.cfg.mode_name().to_string(),
-            predictor: self.stages[0].pred.name().to_string(),
-            sim_duration: self.queue.now().as_secs_f64(),
+            mode: ctx.cfg.mode_name().to_string(),
+            predictor: shards[p_si].stages[p_li].pred.name().to_string(),
+            sim_duration: horizon.as_secs_f64(),
             host_duration: host_start.elapsed().as_secs_f64(),
-            events_processed: self.queue.processed(),
+            events_processed,
             n_gpus,
-            metrics: self.metrics,
+            metrics,
             stages: stage_reports,
         })
+    }
+
+    // -- engine loops -------------------------------------------------------
+
+    /// Single-shard fast path: no cross-shard edges exist, so the run
+    /// is a plain serial drain with commits applied inline after every
+    /// event — observationally identical to the pre-sharding engine.
+    fn drain_single(
+        shard: &mut Shard,
+        ctx: &RunCtx,
+        fabric: &mut HierFabric,
+        pending: &mut VecDeque<PendingXfer>,
+    ) {
+        // single-shard graphs have no KV destinations, so the ledger
+        // stays all-zero (frees are always live here)
+        let future_frees = vec![0u64; ctx.free_slots];
+        while let Some(ev) = shard.queue.pop() {
+            shard.handle(ctx, ev.kind);
+            if shard.commits.is_empty() {
+                continue;
+            }
+            let now = shard.queue.now();
+            let recs = std::mem::take(&mut shard.commits);
+            for rec in recs {
+                match rec.kind {
+                    PbKind::Free { .. } => {}
+                    PbKind::Xfer { rid, src, req } => {
+                        pending.push_back(PendingXfer { rid, src, req });
+                    }
+                    PbKind::Trigger => {
+                        let mut view = [&mut *shard];
+                        Self::dispatch_transfers(
+                            &mut view,
+                            ctx,
+                            fabric,
+                            pending,
+                            &future_frees,
+                            now,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The windowed multi-shard loop. Every window: compute the
+    /// horizon, advance every shard up to it (on `nthreads` threads —
+    /// shards are pulled off a shared counter), then apply the window's
+    /// commits serially at the barrier. The same code path serves
+    /// `nthreads == 1` (no workers spawn; the barriers are trivial), so
+    /// serial and parallel runs execute the identical algorithm.
+    fn run_windows(
+        cells: &[Mutex<Shard>],
+        ctx: &RunCtx,
+        fabric: &mut HierFabric,
+        pending: &mut VecDeque<PendingXfer>,
+        future_frees: &mut [u64],
+        delta: SimTime,
+        nthreads: usize,
+    ) {
+        let n_shards = cells.len();
+        let barrier_a = Barrier::new(nthreads);
+        let barrier_b = Barrier::new(nthreads);
+        let t_end_bits = AtomicU64::new(0);
+        let done = AtomicBool::new(false);
+        let panicked = AtomicBool::new(false);
+        let next_shard = AtomicUsize::new(0);
+        // one parallel-phase turn: pull shard indices until none remain
+        let advance_all = |t_end: SimTime| {
+            let res = catch_unwind(AssertUnwindSafe(|| loop {
+                let i = next_shard.fetch_add(1, Ordering::Relaxed);
+                if i >= n_shards {
+                    break;
+                }
+                cells[i].lock().expect("shard lock").advance(ctx, t_end);
+            }));
+            if res.is_err() {
+                panicked.store(true, Ordering::Release);
+            }
+        };
+        std::thread::scope(|scope| {
+            for _ in 1..nthreads {
+                scope.spawn(|| loop {
+                    barrier_a.wait();
+                    if done.load(Ordering::Acquire) {
+                        return;
+                    }
+                    advance_all(SimTime(t_end_bits.load(Ordering::Acquire)));
+                    barrier_b.wait();
+                });
+            }
+            loop {
+                // workers are parked at barrier_a here: the main thread
+                // owns every shard (uncontended locks)
+                let t = cells
+                    .iter()
+                    .filter_map(|c| c.lock().expect("shard lock").queue.peek_time())
+                    .min();
+                let Some(t) = t else { break };
+                let t_end = t + delta;
+                t_end_bits.store(t_end.0, Ordering::Release);
+                next_shard.store(0, Ordering::Release);
+                barrier_a.wait();
+                advance_all(t_end);
+                barrier_b.wait();
+                if panicked.load(Ordering::Acquire) {
+                    done.store(true, Ordering::Release);
+                    barrier_a.wait();
+                    panic!("engine shard worker panicked during the parallel phase");
+                }
+                Self::window_barrier(cells, ctx, fabric, pending, future_frees);
+            }
+            done.store(true, Ordering::Release);
+            barrier_a.wait();
+        });
+    }
+
+    /// Apply one window's cross-shard commits: merge the per-shard
+    /// commit lists by `(time, shard, position)` — thread-count
+    /// invariant — and replay them against the free-ledger.
+    fn window_barrier(
+        cells: &[Mutex<Shard>],
+        ctx: &RunCtx,
+        fabric: &mut HierFabric,
+        pending: &mut VecDeque<PendingXfer>,
+        future_frees: &mut [u64],
+    ) {
+        let mut guards: Vec<_> = cells.iter().map(|c| c.lock().expect("shard lock")).collect();
+        if guards.iter().all(|g| g.commits.is_empty()) {
+            return;
+        }
+        // ledger: every KV-destination free in this window, by replica
+        // slot. Frees were applied live during the parallel phase, so
+        // "free blocks at merged time t" = live free minus the frees
+        // not yet replayed past t.
+        future_frees.fill(0);
+        for g in guards.iter() {
+            for rec in &g.commits {
+                if let PbKind::Free { gstage, replica, blocks } = rec.kind {
+                    future_frees[ctx.free_off[gstage] + replica] += blocks;
+                }
+            }
+        }
+        let lists: Vec<Vec<PbRec>> =
+            guards.iter_mut().map(|g| std::mem::take(&mut g.commits)).collect();
+        let mut iters: Vec<_> = lists.into_iter().map(|l| l.into_iter().peekable()).collect();
+        loop {
+            // earliest-time commit; ties resolve to the lowest shard
+            // index, then list order — fully deterministic
+            let mut best: Option<(SimTime, usize)> = None;
+            for (i, it) in iters.iter_mut().enumerate() {
+                if let Some(rec) = it.peek() {
+                    let earlier = match best {
+                        None => true,
+                        Some((bt, _)) => rec.time < bt,
+                    };
+                    if earlier {
+                        best = Some((rec.time, i));
+                    }
+                }
+            }
+            let Some((time, i)) = best else { break };
+            let rec = iters[i].next().expect("peeked");
+            match rec.kind {
+                PbKind::Free { gstage, replica, blocks } => {
+                    let slot = ctx.free_off[gstage] + replica;
+                    future_frees[slot] = future_frees[slot].saturating_sub(blocks);
+                }
+                PbKind::Xfer { rid, src, req } => {
+                    pending.push_back(PendingXfer { rid, src, req });
+                }
+                PbKind::Trigger => {
+                    Self::dispatch_transfers(&mut guards, ctx, fabric, pending, future_frees, time);
+                }
+            }
+        }
+    }
+
+    /// PD backpressure: initiate KV transfers only into replicas with
+    /// free memory, FIFO over the PREFILL_COMPLETE queue. With several
+    /// downstream pools (fan-out) the pool with the most free memory
+    /// wins. FIFO is enforced *per destination set*: a held request
+    /// blocks later requests that could route to any of its candidate
+    /// pools (no overtaking within a pipeline), but requests bound for
+    /// disjoint pools — independent prefill->decode pipelines in the
+    /// same graph — dispatch freely past it. `future_frees` discounts
+    /// destination memory freed later in the window than `now`.
+    fn dispatch_transfers<S: DerefMut<Target = Shard>>(
+        shards: &mut [S],
+        ctx: &RunCtx,
+        fabric: &mut HierFabric,
+        pending: &mut VecDeque<PendingXfer>,
+        future_frees: &[u64],
+        now: SimTime,
+    ) {
+        let mut held: VecDeque<PendingXfer> = VecDeque::new();
+        // destinations an earlier held request may still claim
+        let mut blocked: Vec<bool> = vec![false; ctx.stage_shard.len()];
+        while let Some(px) = pending.pop_front() {
+            let (input_len, output_len) = (px.req.spec.input_len, px.req.spec.output_len);
+            let blocks = blocks_for_tokens(input_len + output_len);
+            let dsts = &ctx.kv_out[px.src];
+            // defensive: a request no replica could EVER hold must not
+            // clog the queue (admission control should prevent this)
+            if dsts.iter().all(|&d| blocks > ctx.stage_max_blocks[d]) {
+                shards[0].metrics.rejected_requests += 1;
+                continue;
+            }
+            // FIFO per pipeline: an earlier held request owns these pools
+            if dsts.iter().any(|&d| blocked[d]) {
+                for &d in dsts {
+                    blocked[d] = true;
+                }
+                held.push_back(px);
+                continue;
+            }
+            // choose the (stage, replica) with the most free memory —
+            // as of `now`, not end-of-window — that fits
+            let mut best: Option<(usize, usize, u64)> = None;
+            for &d in dsts {
+                let (ds, dl) = ctx.stage_shard[d];
+                for (r, rep) in shards[ds].stages[dl].cw.replicas.iter().enumerate() {
+                    let fr = rep.mem.free_blocks().saturating_sub(future_frees[ctx.free_off[d] + r]);
+                    let better = match best {
+                        None => true,
+                        Some((_, _, b)) => fr > b,
+                    };
+                    if fr >= blocks && better {
+                        best = Some((d, r, fr));
+                    }
+                }
+            }
+            let Some((d, r, _)) = best else {
+                // backpressure: no consumer memory in this pipeline
+                for &dd in dsts {
+                    blocked[dd] = true;
+                }
+                held.push_back(px);
+                continue;
+            };
+            let (ds, dl) = ctx.stage_shard[d];
+            shards[ds].stages[dl].cw.replicas[r]
+                .mem
+                .allocate(px.rid, blocks)
+                .expect("reserved blocks must fit");
+            let bytes = input_len as f64 * ctx.kv_bytes_per_token as f64;
+            // the handoff rides the hierarchical fabric between the two
+            // stages' coordinates (NVLink / IB / WAN by placement)
+            let delivery = fabric.transfer(now, ctx.stage_locs[px.src], ctx.stage_locs[d], bytes);
+            shards[0].metrics.kv_transfers += 1;
+            shards[0].metrics.kv_bytes += bytes;
+            let mut req = px.req;
+            req.state = ReqState::Transferring;
+            shards[ds].store.insert(px.rid, *req);
+            shards[ds].queue.schedule_at(delivery, Ev::KvDone { rid: px.rid, s: dl, r });
+        }
+        *pending = held;
+    }
+
+    // -- accessors for tests/tools ------------------------------------------
+
+    /// The resolved stage graph this controller executes.
+    pub fn stage_graph(&self) -> &StageGraphConfig {
+        &self.graph
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.ctx.stage_shard.len()
+    }
+
+    /// The replica pool of stage `s` (global stage index).
+    pub fn stage(&self, s: usize) -> &ClusterWorker {
+        let (si, li) = self.ctx.stage_shard[s];
+        &self.shards[si].stages[li].cw
+    }
+
+    pub fn pending_transfer_count(&self) -> usize {
+        self.pending_transfers.len()
+    }
+
+    pub fn replica(&self, s: usize, r: usize) -> &ReplicaWorker {
+        &self.stage(s).replicas[r]
+    }
+}
+
+impl Shard {
+    /// Parallel phase: drain this shard's queue up to (excluding) the
+    /// window horizon, touching only shard-local state.
+    fn advance(&mut self, ctx: &RunCtx, t_end: SimTime) {
+        while let Some(t) = self.queue.peek_time() {
+            if t >= t_end {
+                break;
+            }
+            let ev = self.queue.pop().expect("peeked");
+            self.handle(ctx, ev.kind);
+        }
+    }
+
+    fn handle(&mut self, ctx: &RunCtx, ev: Ev) {
+        match ev {
+            Ev::Arrival(rid) => self.on_arrival(ctx, rid),
+            Ev::IterEnd { s, r } => self.on_iter_end(ctx, s, r),
+            Ev::KvDone { rid, s, r } => self.on_kv_done(ctx, rid, s, r),
+        }
     }
 
     // -- event handlers ----------------------------------------------------
 
     /// Whether a request needing `full_blocks` for its lifetime could
-    /// ever be handed downstream from entry stage `s` (admission
+    /// ever be handed downstream from entry stage `gs` (admission
     /// control: a request that fits nowhere downstream would deadlock
-    /// the PREFILL_COMPLETE queue).
-    fn fits_downstream(&self, s: usize, full_blocks: u64) -> bool {
-        let dsts = &self.kv_out[s];
-        dsts.is_empty()
-            || dsts.iter().any(|&d| {
-                self.stages[d]
-                    .cw
-                    .replicas
-                    .iter()
-                    .any(|rep| full_blocks <= rep.mem.total_blocks())
-            })
+    /// the PREFILL_COMPLETE queue). O(stages) via the per-stage
+    /// capacity cache.
+    fn fits_downstream(ctx: &RunCtx, gs: usize, full_blocks: u64) -> bool {
+        let dsts = &ctx.kv_out[gs];
+        dsts.is_empty() || dsts.iter().any(|&d| full_blocks <= ctx.stage_max_blocks[d])
     }
 
-    fn on_arrival(&mut self, rid: u64) {
+    fn on_arrival(&mut self, ctx: &RunCtx, rid: u64) {
         self.metrics.record_arrival(self.queue.now().as_secs_f64());
         let (input_len, output_len) = {
-            let rq = &self.reqs[rid as usize];
+            let rq = self.store.get(rid);
             (rq.spec.input_len, rq.spec.output_len)
         };
         let full_blocks = blocks_for_tokens(input_len + output_len);
@@ -459,18 +1094,18 @@ impl GlobalController {
         loads.clear();
         free.clear();
         for &s in &self.entry {
+            let gs = self.gstage[s];
             let blocks_needed = match self.stages[s].cw.kind {
                 // co-located replicas hold KV for the whole lifetime
                 StageKind::Unified => full_blocks,
                 // prefill stage holds KV only until handoff
                 _ => blocks_for_tokens(input_len),
             };
-            let fits_frontend = self.stages[s]
-                .cw
-                .replicas
-                .iter()
-                .any(|rep| blocks_needed <= rep.mem.total_blocks());
-            let fits_down = output_len <= 1 || self.fits_downstream(s, full_blocks);
+            // O(stages) admission: replicas of a stage share capacity,
+            // so the cached per-stage max stands in for the old
+            // per-replica scan
+            let fits_frontend = blocks_needed <= ctx.stage_max_blocks[gs];
+            let fits_down = output_len <= 1 || Self::fits_downstream(ctx, gs, full_blocks);
             if !fits_frontend || !fits_down {
                 continue;
             }
@@ -484,7 +1119,7 @@ impl GlobalController {
             None
         } else {
             let mut rr = self.entry_rr;
-            let i = scheduler::route(self.cfg.policy.route, &loads, &free, &mut rr);
+            let i = scheduler::route(ctx.cfg.policy.route, &loads, &free, &mut rr);
             self.entry_rr = rr;
             Some(slots[i])
         };
@@ -492,7 +1127,7 @@ impl GlobalController {
         self.scratch_loads = loads;
         self.scratch_free = free;
         let Some((s, r, blocks_needed)) = choice else {
-            self.reqs[rid as usize].state = ReqState::Rejected;
+            self.store.remove(rid);
             self.metrics.rejected_requests += 1;
             return;
         };
@@ -503,11 +1138,12 @@ impl GlobalController {
             arrival: self.queue.now(),
         };
         self.stages[s].cw.replicas[r].waiting.push_back(q);
-        self.try_start_iteration(s, r);
+        self.try_start_iteration(ctx, s, r);
     }
 
-    fn on_iter_end(&mut self, s: usize, r: usize) {
+    fn on_iter_end(&mut self, ctx: &RunCtx, s: usize, r: usize) {
         let now = self.queue.now();
+        let gs = self.gstage[s];
         let kind = self.stages[s].cw.kind;
         {
             let started = self.iter_started[s][r];
@@ -529,17 +1165,19 @@ impl GlobalController {
         for (i, &rid) in running.iter().enumerate() {
             let chunk = chunks.get(i).copied().unwrap_or(0);
             let (input_len, output_len) = {
-                let rq = &self.reqs[rid as usize];
+                let rq = self.store.get(rid);
                 (rq.spec.input_len, rq.spec.output_len)
             };
             if chunk > 0 {
                 // prefill progress
-                let rq = &mut self.reqs[rid as usize];
+                let rq = self.store.get_mut(rid);
                 rq.prefill_progress += chunk;
                 self.metrics.prefill_tokens += chunk as u64;
                 self.stages[s].cw.replicas[r].tokens_processed += chunk as u64;
+                let rq = self.store.get(rid);
                 if rq.prefill_progress >= input_len {
                     // prefill iteration emits the first output token
+                    let rq = self.store.get_mut(rid);
                     rq.ts.prefill_done = Some(now);
                     rq.ts.first_token = Some(now);
                     rq.last_token = now;
@@ -548,7 +1186,7 @@ impl GlobalController {
                     let class = rq.spec.class;
                     let ttft = (now - rq.ts.arrival).as_secs_f64();
                     self.metrics.record_ttft(class, ttft, now.as_secs_f64());
-                    let rq = &mut self.reqs[rid as usize];
+                    let rq = self.store.get_mut(rid);
                     if rq.decoded >= output_len {
                         finished.push(rid);
                     } else if kind == StageKind::Prefill {
@@ -560,13 +1198,13 @@ impl GlobalController {
                 }
             } else {
                 // decode step: one token
-                let rq = &mut self.reqs[rid as usize];
+                let rq = self.store.get_mut(rid);
                 rq.decoded += 1;
                 self.metrics.output_tokens += 1;
                 let class = rq.spec.class;
                 let tbt = (now - rq.last_token).as_secs_f64();
                 self.metrics.record_tbt(class, tbt, now.as_secs_f64());
-                let rq = &mut self.reqs[rid as usize];
+                let rq = self.store.get_mut(rid);
                 rq.last_token = now;
                 self.stages[s].cw.replicas[r].tokens_processed += 1;
                 if rq.decoded >= output_len {
@@ -578,7 +1216,7 @@ impl GlobalController {
         // retire finished requests
         if !finished.is_empty() {
             for &rid in &finished {
-                let rq = &mut self.reqs[rid as usize];
+                let rq = self.store.get_mut(rid);
                 rq.state = ReqState::Done;
                 rq.ts.done = Some(now);
                 let e2e = (now - rq.ts.arrival).as_secs_f64();
@@ -597,13 +1235,27 @@ impl GlobalController {
                     output_len,
                     now.as_secs_f64(),
                 );
-                self.stages[s].cw.replicas[r].mem.free_request(rid);
+                let freed = self.stages[s].cw.replicas[r].mem.free_request(rid);
+                // KV-destination frees feed the barrier free-ledger so
+                // dispatch ordering stays time-consistent
+                if ctx.is_kv_dst[gs] {
+                    self.commits.push(PbRec {
+                        time: now,
+                        kind: PbKind::Free { gstage: gs, replica: r, blocks: freed },
+                    });
+                }
+                self.store.remove(rid);
             }
         }
-        // hand prefill-complete requests to the controller's transfer queue
+        // hand prefill-complete requests to the controller's transfer
+        // queue (by value — they leave this shard entirely)
         for &rid in &to_transfer {
             self.stages[s].cw.replicas[r].mem.free_request(rid);
-            self.pending_transfers.push_back((rid, s));
+            let req = self.store.remove(rid);
+            self.commits.push(PbRec {
+                time: now,
+                kind: PbKind::Xfer { rid, src: gs, req: Box::new(req) },
+            });
         }
         // give the batch vector back (minus retired ids), reusing its
         // allocation for the next iteration
@@ -616,15 +1268,17 @@ impl GlobalController {
                     .retain(|rid| !finished.contains(rid) && !to_transfer.contains(rid));
             }
         }
-        if !to_transfer.is_empty() || !finished.is_empty() {
-            // memory availability changed: the downstream ClusterScheduler
-            // signals the controller (PD backpressure step 2/3)
-            self.try_dispatch_transfers();
+        // memory availability changed: the downstream ClusterScheduler
+        // signals the controller (PD backpressure step 2/3). Transfers
+        // always need a dispatch pass; bare completions only matter
+        // when the graph has handoffs at all.
+        if !to_transfer.is_empty() || (!finished.is_empty() && ctx.has_transfers) {
+            self.commits.push(PbRec { time: now, kind: PbKind::Trigger });
         }
         // between iterations: the expert-migration control loop may
         // re-place experts (and stall this stage) before the next batch
-        self.maybe_migrate(s);
-        self.try_start_iteration(s, r);
+        self.maybe_migrate(ctx, s);
+        self.try_start_iteration(ctx, s, r);
     }
 
     /// Expert-migration control loop, run between iterations of stage
@@ -632,14 +1286,16 @@ impl GlobalController {
     /// against the current placement; when the predicted rank imbalance
     /// clears the threshold, adopt the rebalanced placement, charge the
     /// expert weight moves through the EP fabric, and stall every
-    /// replica of the stage for the transfer makespan.
-    fn maybe_migrate(&mut self, s: usize) {
-        if self.cfg.policy.migration != MigrationPolicy::Threshold {
+    /// replica of the stage for the transfer makespan. Entirely
+    /// stage-internal (the EP fabric belongs to the stage), so it runs
+    /// in the parallel phase and never constrains the sync window.
+    fn maybe_migrate(&mut self, ctx: &RunCtx, s: usize) {
+        if ctx.cfg.policy.migration != MigrationPolicy::Threshold {
             return;
         }
-        let window = self.cfg.policy.load_window.max(1) as u64;
-        let threshold = self.cfg.policy.migration_threshold;
-        let placement_policy = self.cfg.policy.ep_placement;
+        let window = ctx.cfg.policy.load_window.max(1) as u64;
+        let threshold = ctx.cfg.policy.migration_threshold;
+        let placement_policy = ctx.cfg.policy.ep_placement;
         let last = self.stages[s].mig_last_draws;
         // read phase: estimator snapshot + weight footprint. The one
         // placement stands for every resident layer's FFN, so a move
@@ -683,8 +1339,8 @@ impl GlobalController {
         }
     }
 
-    fn on_kv_done(&mut self, rid: u64, s: usize, r: usize) {
-        let rq = &mut self.reqs[rid as usize];
+    fn on_kv_done(&mut self, ctx: &RunCtx, rid: u64, s: usize, r: usize) {
+        let rq = self.store.get_mut(rid);
         rq.state = ReqState::Decoding;
         let q = QueuedReq {
             id: rid,
@@ -693,99 +1349,17 @@ impl GlobalController {
             arrival: self.queue.now(),
         };
         self.stages[s].cw.replicas[r].waiting.push_back(q);
-        self.try_start_iteration(s, r);
-    }
-
-    // -- coordination ------------------------------------------------------
-
-    /// PD backpressure: initiate KV transfers only into replicas with
-    /// free memory, FIFO over the PREFILL_COMPLETE queue. With several
-    /// downstream pools (fan-out) the pool with the most free memory
-    /// wins. FIFO is enforced *per destination set*: a held request
-    /// blocks later requests that could route to any of its candidate
-    /// pools (no overtaking within a pipeline), but requests bound for
-    /// disjoint pools — independent prefill->decode pipelines in the
-    /// same graph — dispatch freely past it.
-    fn try_dispatch_transfers(&mut self) {
-        let now = self.queue.now();
-        let mut held: VecDeque<(u64, usize)> = VecDeque::new();
-        // destinations an earlier held request may still claim
-        let mut blocked: Vec<bool> = vec![false; self.stages.len()];
-        while let Some((rid, src)) = self.pending_transfers.pop_front() {
-            let (input_len, output_len) = {
-                let rq = &self.reqs[rid as usize];
-                (rq.spec.input_len, rq.spec.output_len)
-            };
-            let blocks = blocks_for_tokens(input_len + output_len);
-            let dsts = self.kv_out[src].clone();
-            // defensive: a request no replica could EVER hold must not
-            // clog the queue (admission control should prevent this)
-            if dsts.iter().all(|&d| {
-                self.stages[d]
-                    .cw
-                    .replicas
-                    .iter()
-                    .all(|rep| blocks > rep.mem.total_blocks())
-            }) {
-                self.reqs[rid as usize].state = ReqState::Rejected;
-                self.metrics.rejected_requests += 1;
-                continue;
-            }
-            let hold = |blocked: &mut Vec<bool>, held: &mut VecDeque<(u64, usize)>| {
-                for &d in &dsts {
-                    blocked[d] = true;
-                }
-                held.push_back((rid, src));
-            };
-            // FIFO per pipeline: an earlier held request owns these pools
-            if dsts.iter().any(|&d| blocked[d]) {
-                hold(&mut blocked, &mut held);
-                continue;
-            }
-            // choose the (stage, replica) with the most free memory that fits
-            let mut best: Option<(usize, usize, u64)> = None;
-            for &d in &dsts {
-                for (r, rep) in self.stages[d].cw.replicas.iter().enumerate() {
-                    let fr = rep.mem.free_blocks();
-                    let better = match best {
-                        None => true,
-                        Some((_, _, b)) => fr > b,
-                    };
-                    if fr >= blocks && better {
-                        best = Some((d, r, fr));
-                    }
-                }
-            }
-            let Some((d, r, _)) = best else {
-                // backpressure: no consumer memory in this pipeline
-                hold(&mut blocked, &mut held);
-                continue;
-            };
-            self.stages[d].cw.replicas[r]
-                .mem
-                .allocate(rid, blocks)
-                .expect("reserved blocks must fit");
-            let bytes =
-                input_len as f64 * self.stages[src].cost.model.kv_bytes_per_token() as f64;
-            // the handoff rides the hierarchical fabric between the two
-            // stages' coordinates (NVLink / IB / WAN by placement)
-            let (src_loc, dst_loc) = (self.stages[src].loc, self.stages[d].loc);
-            let delivery = self.fabric.transfer(now, src_loc, dst_loc, bytes);
-            self.metrics.kv_transfers += 1;
-            self.metrics.kv_bytes += bytes;
-            self.reqs[rid as usize].state = ReqState::Transferring;
-            self.queue.schedule_at(delivery, Ev::KvDone { rid, s: d, r });
-        }
-        self.pending_transfers = held;
+        self.try_start_iteration(ctx, s, r);
     }
 
     /// Form and launch the next iteration on a replica if it is idle and
     /// has work.
-    fn try_start_iteration(&mut self, s: usize, r: usize) {
+    fn try_start_iteration(&mut self, ctx: &RunCtx, s: usize, r: usize) {
         let kind = self.stages[s].cw.kind;
         let budget = self.stages[s].budget;
-        let policy = self.cfg.policy.batch;
-        {
+        let policy = ctx.cfg.policy.batch;
+        let now = self.queue.now();
+        let admitted = {
             let repl = &mut self.stages[s].cw.replicas[r];
             if repl.busy || !repl.has_work() {
                 return;
@@ -800,12 +1374,17 @@ impl GlobalController {
                 }
                 repl.running.push(q.id);
             }
-            for q in &admitted {
-                let rq = &mut self.reqs[q.id as usize];
-                if rq.state == ReqState::Queued {
-                    rq.state = ReqState::Prefilling;
-                }
+            admitted
+        };
+        for q in &admitted {
+            let rq = self.store.get_mut(q.id);
+            if rq.state == ReqState::Queued {
+                rq.state = ReqState::Prefilling;
             }
+            // per-class admission-queue wait: entry queueing and
+            // decode-side KV-done queueing both count as admissions
+            let class = rq.spec.class;
+            self.metrics.record_queue_wait(class, (now - q.arrival).as_secs_f64());
         }
         // build the batch shape (reading the running set in place — the
         // pre-digest code cloned it every iteration)
@@ -817,7 +1396,7 @@ impl GlobalController {
         chunks.clear();
         let mut token_budget = budget.max_prefill_tokens;
         for &rid in &self.stages[s].cw.replicas[r].running {
-            let rq = &self.reqs[rid as usize];
+            let rq = self.store.get(rid);
             if rq.prefill_progress < rq.spec.input_len {
                 let remaining = rq.spec.input_len - rq.prefill_progress;
                 let chunk = remaining.min(token_budget);
@@ -842,12 +1421,12 @@ impl GlobalController {
             self.af_iteration_time(s, &shape)
         } else {
             let st = &mut self.stages[s];
-            let mut ctx = CostCtx {
+            let mut cctx = CostCtx {
                 pred: st.pred.as_mut(),
                 rng: &mut self.rng,
                 metrics: Some(&mut self.metrics),
             };
-            st.cost.iteration_time(&mut ctx, &shape)
+            st.cost.iteration_time(&mut cctx, &shape)
         };
         debug_assert!(dt > 0.0);
         // pending expert-migration stall: the replica's EP ranks were
@@ -859,7 +1438,7 @@ impl GlobalController {
         let repl = &mut self.stages[s].cw.replicas[r];
         repl.busy = true;
         repl.iter_chunks = chunks;
-        self.iter_started[s][r] = self.queue.now();
+        self.iter_started[s][r] = now;
         self.queue.schedule_in(SimTime::from_secs_f64(dt + stall), Ev::IterEnd { s, r });
     }
 
@@ -867,10 +1446,13 @@ impl GlobalController {
     /// the dependency-graph executor. On the MoE path every
     /// `(layer, micro)` cell is data-dependent: a fresh routing draw
     /// sets the per-rank expert loads (stragglers) *and* the
-    /// dispatch/combine transfer times through the EP fabric. The
-    /// attn/ffn cost models were built once at controller construction.
+    /// dispatch/combine transfer times through the EP fabric — priced
+    /// in one batched pass per micro ([`CostModel::moe_ffn_ep_batch`]:
+    /// `n_layers` draws, draw-invariant ops priced once). The attn/ffn
+    /// cost models were built once at controller construction.
     fn af_iteration_time(&mut self, s: usize, shape: &BatchShape) -> f64 {
-        let st = &mut self.stages[s];
+        let Shard { stages, rng, metrics, ep_samples, .. } = self;
+        let st = &mut stages[s];
         let afr = st.af.as_ref().expect("af runtime on AF stage");
         let m = (afr.micro_batches as usize).max(1).min(shape.decode_ctx.len().max(1));
         let attn_cost = &afr.attn_cost;
@@ -903,34 +1485,44 @@ impl GlobalController {
                 continue;
             }
             let t_attn = {
-                let mut ctx = CostCtx {
+                let mut cctx = CostCtx {
                     pred: st.pred.as_mut(),
-                    rng: &mut self.rng,
-                    metrics: Some(&mut self.metrics),
+                    rng: &mut *rng,
+                    metrics: Some(&mut *metrics),
                 };
-                attn_cost.attn_block_time(&mut ctx, &micro_shape)
+                attn_cost.attn_block_time(&mut cctx, &micro_shape)
             };
+            for row in attn_time.iter_mut() {
+                row[k] = t_attn;
+            }
             // dense fallback: point-to-point hop sized by this micro-batch
             let xfer = crate::oracle::p2p_time(micro_tokens as f64 * d_bytes, &attn_cost.link);
-            for l in 0..layers {
-                attn_time[l][k] = t_attn;
-                let mut ctx = CostCtx {
+            if ep_active {
+                // one batched pricing pass: `layers` fresh routing
+                // draws, bit-identical to per-layer calls
+                let mut cctx = CostCtx {
                     pred: st.pred.as_mut(),
-                    rng: &mut self.rng,
-                    metrics: Some(&mut self.metrics),
+                    rng: &mut *rng,
+                    metrics: Some(&mut *metrics),
                 };
-                if ep_active {
-                    // fresh routing per layer: data-dependent stragglers
-                    // and skew-dependent dispatch/combine
-                    let sample = ffn_cost
-                        .moe_ffn_ep(&mut ctx, micro_tokens)
-                        .expect("ep spec attached and micro-batch non-empty");
+                ffn_cost
+                    .moe_ffn_ep_batch(&mut cctx, micro_tokens, layers, ep_samples)
+                    .expect("ep spec attached and micro-batch non-empty");
+                for l in 0..layers {
+                    let sample = ep_samples[l];
                     ffn_time[l][k] = sample.ffn_secs;
                     a2f_time[l][k] = sample.dispatch_secs;
                     f2a_time[l][k] = sample.combine_secs;
-                } else {
+                }
+            } else {
+                for l in 0..layers {
                     // fresh routing per layer: data-dependent straggler noise
-                    ffn_time[l][k] = ffn_cost.ffn_block_time(&mut ctx, micro_tokens);
+                    let mut cctx = CostCtx {
+                        pred: st.pred.as_mut(),
+                        rng: &mut *rng,
+                        metrics: Some(&mut *metrics),
+                    };
+                    ffn_time[l][k] = ffn_cost.ffn_block_time(&mut cctx, micro_tokens);
                     a2f_time[l][k] = xfer;
                     f2a_time[l][k] = xfer;
                 }
@@ -941,42 +1533,18 @@ impl GlobalController {
         if ep_active {
             // FFN-pool idle time inside the step: dispatch bubbles the
             // ping-pong pipeline failed to hide
-            self.metrics.dispatch_bubble_s += (t_graph - busy[1]).max(0.0);
+            metrics.dispatch_bubble_s += (t_graph - busy[1]).max(0.0);
         }
         let lm_head = {
-            let mut ctx = CostCtx {
+            let mut cctx = CostCtx {
                 pred: st.pred.as_mut(),
-                rng: &mut self.rng,
-                metrics: Some(&mut self.metrics),
+                rng: &mut *rng,
+                metrics: Some(&mut *metrics),
             };
-            attn_cost.lm_head_time(&mut ctx, shape.lm_head_rows as u64)
+            attn_cost.lm_head_time(&mut cctx, shape.lm_head_rows as u64)
         };
         let o = &st.cost.overhead;
         o.sched_overhead_s + layers as f64 * o.launch_gap_s + o.op_scale * (t_graph + lm_head)
-    }
-
-    // -- accessors for tests/tools ------------------------------------------
-
-    /// The resolved stage graph this controller executes.
-    pub fn stage_graph(&self) -> &StageGraphConfig {
-        &self.graph
-    }
-
-    pub fn n_stages(&self) -> usize {
-        self.stages.len()
-    }
-
-    /// The replica pool of stage `s`.
-    pub fn stage(&self, s: usize) -> &ClusterWorker {
-        &self.stages[s].cw
-    }
-
-    pub fn pending_transfer_count(&self) -> usize {
-        self.pending_transfers.len()
-    }
-
-    pub fn replica(&self, s: usize, r: usize) -> &ReplicaWorker {
-        &self.stages[s].cw.replicas[r]
     }
 }
 
@@ -1086,5 +1654,62 @@ mod tests {
         assert_eq!(gc.pending_transfer_count(), 0);
         assert!(!gc.replica(1, 0).busy);
         assert_eq!(gc.stage_graph().kv_out(0), vec![1]);
+    }
+
+    #[test]
+    fn shard_partition_groups_entry_stages() {
+        // colocated: one unified entry stage -> one shard
+        let gc = GlobalController::new(tiny_cfg(4)).unwrap();
+        assert_eq!(gc.shards.len(), 1);
+        assert_eq!(gc.shards[0].entry.len(), 1);
+        // PD: prefill rides shard 0, the decode destination gets its own
+        let cfg = ExperimentConfig::pd(ModelConfig::tiny(), 1, 2)
+            .with_workload(WorkloadSpec::table2(4, 32, 4));
+        let gc = GlobalController::new(cfg).unwrap();
+        assert_eq!(gc.shards.len(), 2);
+        assert_eq!(gc.ctx.stage_shard[0], (0, 0));
+        assert_eq!(gc.ctx.stage_shard[1], (1, 0));
+        assert!(gc.ctx.is_kv_dst[1] && !gc.ctx.is_kv_dst[0]);
+        assert!(gc.ctx.has_transfers);
+    }
+
+    #[test]
+    fn admission_capacity_cache_matches_pools() {
+        // the S1 cache must agree with a fresh scan of every pool —
+        // admission consults only the cache (O(stages) per arrival)
+        let cfg = ExperimentConfig::pd(ModelConfig::tiny(), 2, 3)
+            .with_workload(WorkloadSpec::table2(4, 32, 4));
+        let gc = GlobalController::new(cfg).unwrap();
+        for s in 0..gc.n_stages() {
+            let expect =
+                gc.stage(s).replicas.iter().map(|rep| rep.mem.total_blocks()).max().unwrap();
+            assert_eq!(gc.ctx.stage_max_blocks[s], expect, "stage {s}");
+            assert!(expect > 0);
+        }
+    }
+
+    #[test]
+    fn sim_threads_is_bit_identical_to_serial() {
+        // multi-shard graph: same seed, 1 vs 4 threads (oversubscribed:
+        // only 2 shards exist) must produce byte-identical reports
+        let mk = |threads: u32| {
+            ExperimentConfig::pd(ModelConfig::tiny(), 2, 2)
+                .with_workload(WorkloadSpec::table2(24, 64, 8))
+                .with_sim_threads(threads)
+        };
+        let a = run(&mk(1)).unwrap();
+        let b = run(&mk(4)).unwrap();
+        assert_eq!(
+            a.to_json_deterministic().to_string_pretty(),
+            b.to_json_deterministic().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn queue_wait_is_recorded_per_admission() {
+        let report = run(&tiny_cfg(16)).unwrap();
+        // every admitted request waited in an entry queue at least once
+        assert!(report.metrics.queue_wait.count() >= 16);
+        assert!(report.metrics.queue_wait.quantile(99.0) >= 0.0);
     }
 }

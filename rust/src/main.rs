@@ -83,6 +83,8 @@ OPTIONS (simulate / sweep / sweep-pd / baseline):
                                    (simulate only; rejected by sweeps)
   --profiled                       use the real-system overhead preset
                                    (alias; conflicts with --overhead)
+  --sim-threads <N>                engine threads for one run (default 1;
+                                   report is bit-identical for any N)
   --seed <S>                       RNG seed (default 1)
   --json                           emit the report as JSON
 

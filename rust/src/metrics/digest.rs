@@ -168,6 +168,70 @@ impl Digest {
         self.buffer.clear();
     }
 
+    /// Merge another digest into this one (shard-local collectors
+    /// folding into the run-level collector). Both sides are flushed
+    /// first, then the two sorted centroid lists are merged through the
+    /// same k-scale compression as [`Digest::flush`], so the result is
+    /// a pure function of `(self, other)` — independent of thread
+    /// count or merge timing, which is what the parallel engine's
+    /// determinism contract needs.
+    pub fn merge(&mut self, other: &Digest) {
+        if other.count == 0 {
+            return;
+        }
+        self.flush();
+        // flush the other side into centroids without mutating it
+        let other_flushed;
+        let ocs: &[(f64, f64)] = if other.buffer.is_empty() {
+            &other.centroids
+        } else {
+            let mut d = other.clone();
+            d.flush();
+            other_flushed = d.centroids;
+            &other_flushed
+        };
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        // two-pointer merge of the two sorted centroid lists
+        let mut merged: Vec<(f64, f64)> =
+            Vec::with_capacity(self.centroids.len() + ocs.len());
+        let cs = &self.centroids;
+        let (mut i, mut j) = (0, 0);
+        while i < cs.len() || j < ocs.len() {
+            if j >= ocs.len() || (i < cs.len() && cs[i].0 <= ocs[j].0) {
+                merged.push(cs[i]);
+                i += 1;
+            } else {
+                merged.push(ocs[j]);
+                j += 1;
+            }
+        }
+        // compress with the combined total, same criterion as flush()
+        let total = self.count as f64;
+        let mut out: Vec<(f64, f64)> = Vec::with_capacity(merged.len().min(1024));
+        let (mut acc_m, mut acc_w) = merged[0];
+        let mut w_before = 0.0;
+        let mut k_left = self.k(0.0);
+        for &(m, w) in &merged[1..] {
+            let q_right = (w_before + acc_w + w) / total;
+            if self.k(q_right) - k_left <= 1.0 {
+                let nw = acc_w + w;
+                acc_m += (m - acc_m) * w / nw;
+                acc_w = nw;
+            } else {
+                w_before += acc_w;
+                out.push((acc_m, acc_w));
+                k_left = self.k(w_before / total);
+                acc_m = m;
+                acc_w = w;
+            }
+        }
+        out.push((acc_m, acc_w));
+        self.centroids = out;
+    }
+
     /// Estimate the `p`-th percentile (`p` in 0..=100; out-of-range
     /// values clamp). Empty digest returns 0.0, matching the exact
     /// oracle's convention. `&self`: a buffered digest clones itself to
@@ -302,6 +366,65 @@ mod tests {
         }
         // ordering of close streams is preserved at the tail
         assert!(digest_of(&xs).quantile(99.0) < digest_of(&shifted).quantile(99.0));
+    }
+
+    #[test]
+    fn merge_matches_single_stream_within_tolerance() {
+        // shard-split streams merged back together must agree with the
+        // single-stream digest on count/sum/min/max exactly and on
+        // quantiles within the digest's own tolerance
+        let xs = lognormal_stream(40_000, 11);
+        let whole = digest_of(&xs);
+        let mut merged = Digest::default();
+        for chunk in xs.chunks(7_919) {
+            let part = digest_of(chunk);
+            merged.merge(&part);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.sum() - whole.sum()).abs() < 1e-6 * whole.sum().abs());
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+        for p in [50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let got = merged.quantile(p);
+            let rel = (got - exact).abs() / exact.abs().max(1e-12);
+            assert!(rel < 0.03, "p{p}: exact {exact:.5} merged {got:.5} rel {rel:.4}");
+        }
+        // memory stays bounded through repeated merges
+        assert!(merged.centroids() <= 2 * 256);
+    }
+
+    #[test]
+    fn merge_empty_is_identity_and_into_empty_adopts() {
+        let xs = lognormal_stream(3_000, 5);
+        let d = digest_of(&xs);
+        // merging an empty digest changes nothing (bit-exact)
+        let mut a = d.clone();
+        a.merge(&Digest::default());
+        assert_eq!(a, d);
+        // merging into an empty digest adopts the other's stats
+        let mut e = Digest::default();
+        e.merge(&d);
+        assert_eq!(e.count(), d.count());
+        assert_eq!(e.min(), d.min());
+        assert_eq!(e.max(), d.max());
+        assert!((e.quantile(50.0) - d.quantile(50.0)).abs() < 1e-9 * d.quantile(50.0).abs().max(1.0));
+        // both empty: still empty
+        let mut z = Digest::default();
+        z.merge(&Digest::default());
+        assert!(z.is_empty());
+    }
+
+    #[test]
+    fn merge_is_deterministic() {
+        let xs = lognormal_stream(10_000, 21);
+        let halves = xs.split_at(4_321);
+        let build = || {
+            let mut m = digest_of(halves.0);
+            m.merge(&digest_of(halves.1));
+            m
+        };
+        assert_eq!(build(), build());
     }
 
     #[test]

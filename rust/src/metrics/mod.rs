@@ -65,6 +65,21 @@ pub struct ClassStats {
     pub ttft: Digest,
     pub tbt: Digest,
     pub e2e: Digest,
+    /// Admission-queue wait (arrival → first admitted iteration and
+    /// KV-handoff → first decode admission), seconds.
+    pub queue_wait: Digest,
+}
+
+impl ClassStats {
+    /// Fold another class's stats into this one (shard merge).
+    fn merge(&mut self, o: &ClassStats) {
+        self.completed += o.completed;
+        self.slo_ok += o.slo_ok;
+        self.ttft.merge(&o.ttft);
+        self.tbt.merge(&o.tbt);
+        self.e2e.merge(&o.e2e);
+        self.queue_wait.merge(&o.queue_wait);
+    }
 }
 
 /// Raw per-request sample vectors, opt-in via
@@ -149,6 +164,33 @@ impl TimeSeries {
         self.buckets = out;
         self.bucket_s *= 2.0;
     }
+
+    /// Fold another time series into this one. Bucket widths are
+    /// powers-of-two multiples of the initial 1 s, so the coarser side
+    /// is matched exactly by compacting the finer side, then buckets
+    /// absorb index-wise. Deterministic: the result depends only on the
+    /// two inputs.
+    pub fn merge(&mut self, other: &TimeSeries) {
+        if other.buckets.is_empty() {
+            return;
+        }
+        let mut o = other.clone();
+        while self.bucket_s < o.bucket_s {
+            self.compact();
+        }
+        while o.bucket_s < self.bucket_s {
+            o.compact();
+        }
+        if self.buckets.len() < o.buckets.len() {
+            self.buckets.resize_with(o.buckets.len(), Default::default);
+        }
+        for (b, ob) in self.buckets.iter_mut().zip(&o.buckets) {
+            b.absorb(ob);
+        }
+        while self.buckets.len() > TS_MAX_BUCKETS {
+            self.compact();
+        }
+    }
 }
 
 /// Online collection of per-request and system-level metrics.
@@ -162,6 +204,9 @@ pub struct MetricsCollector {
     pub e2e: Digest,
     /// Normalized latency (e2e / output tokens), seconds/token.
     pub norm_latency: Digest,
+    /// Admission-queue wait stream, seconds: how long a request sat in
+    /// a stage's waiting queue before its first iteration there.
+    pub queue_wait: Digest,
     /// Active SLO thresholds (judged online at request completion).
     pub slo: SloSpec,
     /// Completed requests meeting every set SLO threshold.
@@ -261,6 +306,14 @@ impl MetricsCollector {
         if let Some(raw) = &mut self.raw {
             raw.ttft.push(v_s);
         }
+    }
+
+    /// Record an admission-queue wait sample for `class`: seconds
+    /// between a request joining a stage's waiting queue and its first
+    /// admitted iteration there.
+    pub fn record_queue_wait(&mut self, class: u16, v_s: f64) {
+        self.queue_wait.record(v_s);
+        self.class_mut(class).queue_wait.record(v_s);
     }
 
     /// Record an inter-token latency sample for `class`.
@@ -372,6 +425,57 @@ impl MetricsCollector {
         } else {
             0.0
         }
+    }
+
+    /// Fold a shard-local collector into this one. Digests merge
+    /// through [`Digest::merge`], the time series through
+    /// [`TimeSeries::merge`], raw sample vectors concatenate, and all
+    /// counters add. The caller merges shards in a fixed order, so the
+    /// result is independent of thread count — the parallel engine's
+    /// determinism contract. `slo` and `class_names` are set
+    /// identically on every shard at construction and are left as-is.
+    pub fn merge(&mut self, other: &MetricsCollector) {
+        self.ttft.merge(&other.ttft);
+        self.tbt.merge(&other.tbt);
+        self.e2e.merge(&other.e2e);
+        self.norm_latency.merge(&other.norm_latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.slo_ok += other.slo_ok;
+        if self.per_class.len() < other.per_class.len() {
+            self.per_class.resize_with(other.per_class.len(), Default::default);
+        }
+        for (c, oc) in self.per_class.iter_mut().zip(&other.per_class) {
+            c.merge(oc);
+        }
+        self.timeseries.merge(&other.timeseries);
+        if let (Some(raw), Some(oraw)) = (&mut self.raw, &other.raw) {
+            raw.ttft.extend_from_slice(&oraw.ttft);
+            raw.tbt.extend_from_slice(&oraw.tbt);
+            raw.e2e.extend_from_slice(&oraw.e2e);
+        }
+        self.completed_requests += other.completed_requests;
+        self.rejected_requests += other.rejected_requests;
+        self.output_tokens += other.output_tokens;
+        self.prefill_tokens += other.prefill_tokens;
+        self.kv_transfers += other.kv_transfers;
+        self.kv_bytes += other.kv_bytes;
+        self.iterations += other.iterations;
+        self.predictor_evals += other.predictor_evals;
+        for (&class, &secs) in &other.op_time {
+            *self.op_time.entry(class).or_insert(0.0) += secs;
+        }
+        self.ep_bytes += other.ep_bytes;
+        self.ep_cross_bytes += other.ep_cross_bytes;
+        self.ep_imbalance_sum += other.ep_imbalance_sum;
+        self.ep_draws += other.ep_draws;
+        self.dispatch_bubble_s += other.dispatch_bubble_s;
+        self.dropped_tokens += other.dropped_tokens;
+        self.migrations += other.migrations;
+        self.migrated_bytes += other.migrated_bytes;
+        self.migrated_cross_bytes += other.migrated_cross_bytes;
+        self.migration_stall_s += other.migration_stall_s;
+        self.migration_pre_imb_sum += other.migration_pre_imb_sum;
+        self.migration_post_imb_sum += other.migration_post_imb_sum;
     }
 }
 
@@ -540,6 +644,14 @@ impl SimReport {
             m.kv_transfers,
             m.kv_bytes / 1e6,
         );
+        if m.queue_wait.count() > 0 {
+            s.push_str(&format!(
+                "\nqueue wait p50/p99: {:.1}/{:.1} ms over {} admissions",
+                m.queue_wait.quantile(50.0) * 1e3,
+                m.queue_wait.quantile(99.0) * 1e3,
+                m.queue_wait.count(),
+            ));
+        }
         if m.slo.any() {
             s.push_str(&format!(
                 "\nSLO{}{}{}: goodput {:.2} req/s, attainment {:.1}% ({}/{})",
@@ -555,10 +667,13 @@ impl SimReport {
         if m.per_class.len() > 1 {
             for (i, c) in m.per_class.iter().enumerate() {
                 s.push_str(&format!(
-                    "\nclass {:<8} {:>7} done | ttft p50/p99 {:.1}/{:.1} ms | \
+                    "\nclass {:<8} {:>7} done | qwait p50/p99 {:.1}/{:.1} ms | \
+                     ttft p50/p99 {:.1}/{:.1} ms | \
                      tbt p50/p99 {:.2}/{:.2} ms | e2e p50 {:.2} s{}",
                     m.class_name(i),
                     c.completed,
+                    c.queue_wait.quantile(50.0) * 1e3,
+                    c.queue_wait.quantile(99.0) * 1e3,
                     c.ttft.quantile(50.0) * 1e3,
                     c.ttft.quantile(99.0) * 1e3,
                     c.tbt.quantile(50.0) * 1e3,
@@ -664,6 +779,8 @@ impl SimReport {
             ("tbt_p50_ms", Json::Num(m.tbt.quantile(50.0) * 1e3)),
             ("tbt_p99_ms", Json::Num(m.tbt.quantile(99.0) * 1e3)),
             ("e2e_p50_s", Json::Num(m.e2e.quantile(50.0))),
+            ("qwait_p50_ms", Json::Num(m.queue_wait.quantile(50.0) * 1e3)),
+            ("qwait_p99_ms", Json::Num(m.queue_wait.quantile(99.0) * 1e3)),
             ("iterations", Json::Num(m.iterations as f64)),
             ("kv_transfers", Json::Num(m.kv_transfers as f64)),
             ("ep_bytes", Json::Num(m.ep_bytes)),
@@ -720,6 +837,14 @@ impl SimReport {
                                 ("tbt_p50_ms", Json::Num(c.tbt.quantile(50.0) * 1e3)),
                                 ("tbt_p99_ms", Json::Num(c.tbt.quantile(99.0) * 1e3)),
                                 ("e2e_p50_s", Json::Num(c.e2e.quantile(50.0))),
+                                (
+                                    "qwait_p50_ms",
+                                    Json::Num(c.queue_wait.quantile(50.0) * 1e3),
+                                ),
+                                (
+                                    "qwait_p99_ms",
+                                    Json::Num(c.queue_wait.quantile(99.0) * 1e3),
+                                ),
                             ])
                         })
                         .collect(),
@@ -950,6 +1075,103 @@ mod tests {
             classes[0].get("name"),
             Some(&Json::Str("chat".into()))
         );
+    }
+
+    #[test]
+    fn queue_wait_digest_tracks_per_class() {
+        let mut m = MetricsCollector::default();
+        m.record_queue_wait(0, 0.010);
+        m.record_queue_wait(0, 0.030);
+        m.record_queue_wait(1, 1.000);
+        assert_eq!(m.queue_wait.count(), 3);
+        assert_eq!(m.per_class[0].queue_wait.count(), 2);
+        assert_eq!(m.per_class[1].queue_wait.count(), 1);
+        assert!(m.per_class[0].queue_wait.quantile(50.0) < m.per_class[1].queue_wait.quantile(50.0));
+        let r = SimReport {
+            mode: "t".into(),
+            predictor: "o".into(),
+            sim_duration: 1.0,
+            host_duration: 1.0,
+            events_processed: 1,
+            n_gpus: 1,
+            metrics: m,
+            stages: Vec::new(),
+        };
+        let j = r.to_json();
+        assert!(j.get("qwait_p50_ms").is_some());
+        assert!(j.get("qwait_p99_ms").is_some());
+        let classes = j.get("classes").unwrap().as_arr().unwrap();
+        assert!(classes[0].get("qwait_p99_ms").is_some());
+        assert!(r.summary().contains("queue wait"));
+    }
+
+    #[test]
+    fn timeseries_merge_aligns_widths_and_preserves_counts() {
+        // a fine series (1 s buckets) and a coarse one (compacted):
+        // merging must not lose events regardless of which side is finer
+        let mut fine_mc = MetricsCollector::default();
+        for i in 0..100u64 {
+            fine_mc.record_arrival(i as f64);
+        }
+        let fine = fine_mc.timeseries;
+        let mut coarse_mc = MetricsCollector::default();
+        for i in 0..600_000u64 {
+            coarse_mc.record_arrival(i as f64);
+        }
+        let coarse = coarse_mc.timeseries;
+        assert!(coarse.bucket_s > fine.bucket_s);
+        let mut a = fine.clone();
+        a.merge(&coarse);
+        let mut b = coarse.clone();
+        b.merge(&fine);
+        for ts in [&a, &b] {
+            let total: u64 = ts.buckets.iter().map(|x| x.arrivals).sum();
+            assert_eq!(total, 600_100, "merge must not lose counts");
+            assert!(ts.buckets.len() <= TS_MAX_BUCKETS);
+        }
+        assert_eq!(a.bucket_s, b.bucket_s);
+        // merging an empty series is a no-op
+        let mut c = fine.clone();
+        c.merge(&TimeSeries::default());
+        assert_eq!(c, fine);
+    }
+
+    #[test]
+    fn collector_merge_adds_counters_and_digests() {
+        let mut a = MetricsCollector::default();
+        let mut b = MetricsCollector::default();
+        a.record_ttft(0, 0.1, 1.0);
+        a.record_completion(0, 0.1, 0.01, 1.0, 8, 2.0);
+        a.output_tokens = 100;
+        a.record_op("gemm", 1.5);
+        b.record_ttft(1, 0.4, 3.0);
+        b.record_tbt(1, 0.02, 3.5);
+        b.record_completion(1, 0.4, 0.02, 2.0, 8, 4.0);
+        b.record_queue_wait(1, 0.25);
+        b.output_tokens = 50;
+        b.rejected_requests = 2;
+        b.record_op("gemm", 0.5);
+        b.record_op("a2a", 0.25);
+        b.record_ep(100.0, 25.0, 1.5);
+        a.merge(&b);
+        assert_eq!(a.completed_requests, 2);
+        assert_eq!(a.rejected_requests, 2);
+        assert_eq!(a.output_tokens, 150);
+        assert_eq!(a.ttft.count(), 2);
+        assert_eq!(a.queue_wait.count(), 1);
+        assert_eq!(a.per_class.len(), 2);
+        assert_eq!(a.per_class[1].completed, 1);
+        assert_eq!(a.op_time["gemm"], 2.0);
+        assert_eq!(a.op_time["a2a"], 0.25);
+        assert_eq!(a.ep_draws, 1);
+        let arrivals: u64 = a.timeseries.buckets.iter().map(|x| x.arrivals).sum();
+        assert_eq!(arrivals, 0);
+        // merging an empty collector is a no-op on every count
+        let snap = a.clone();
+        a.merge(&MetricsCollector::default());
+        assert_eq!(a.completed_requests, snap.completed_requests);
+        assert_eq!(a.ttft, snap.ttft);
+        assert_eq!(a.timeseries, snap.timeseries);
     }
 
     #[test]

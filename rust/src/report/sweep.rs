@@ -19,6 +19,8 @@ pub const SWEEP_METRIC_COLS: &[&str] = &[
     "tbt_p50_ms",
     "tbt_p99_ms",
     "e2e_p50_s",
+    "qwait_p50_ms",
+    "qwait_p99_ms",
     "goodput_rps",
     "sim_s",
     "completed",
@@ -38,6 +40,8 @@ fn metric_cells(r: &PointResult) -> Vec<String> {
                 format!("{:.2}", m.tbt.quantile(50.0) * 1e3),
                 format!("{:.2}", m.tbt.quantile(99.0) * 1e3),
                 format!("{:.2}", m.e2e.quantile(50.0)),
+                format!("{:.2}", m.queue_wait.quantile(50.0) * 1e3),
+                format!("{:.2}", m.queue_wait.quantile(99.0) * 1e3),
                 // without SLO flags every completion counts, so this
                 // degrades to plain completion throughput
                 format!("{:.2}", rep.goodput()),

@@ -392,6 +392,9 @@ fn comparable_repr(cfg: &ExperimentConfig) -> String {
     if c.stages.is_some() {
         c.mode = crate::config::DeploymentMode::Colocated { replicas: 0 };
     }
+    // the parallel engine is bit-identical for any thread count, so a
+    // sim-threads axis never changes what a point computes
+    c.sim_threads = 1;
     format!("{c:?}")
 }
 
@@ -480,6 +483,15 @@ impl SweepRunner {
         let run_point = |p: &SweepPoint| -> PointResult {
             let outcome = spec
                 .point_config(p)
+                .map(|mut cfg| {
+                    // point-level parallelism already saturates the
+                    // cores: don't stack the intra-run engine threads on
+                    // top (results are bit-identical either way)
+                    if threads > 1 {
+                        cfg.sim_threads = 1;
+                    }
+                    cfg
+                })
                 .and_then(|cfg| crate::run_experiment(&cfg))
                 .map_err(|e| format!("{e:#}"));
             PointResult { point: p.clone(), outcome }

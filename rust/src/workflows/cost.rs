@@ -68,6 +68,10 @@ struct PlanScratch {
     ep_common: Vec<OpWorkload>,
     /// EP-path per-rank GroupedGemm pairs.
     ep_per_rank: Vec<Vec<OpWorkload>>,
+    /// Cached `(class, secs)` pricing of the draw-invariant common ops,
+    /// replayed into the metric stream once per draw by the batched EP
+    /// path so its op accounting stays bit-identical to per-draw calls.
+    ep_common_t: Vec<(&'static str, f64)>,
 }
 
 /// In-place writer over a reusable `Vec<OpWorkload>`: overwrites the
@@ -696,6 +700,141 @@ impl CostModel {
         })
     }
 
+    /// Batched form of [`CostModel::moe_ffn_ep`]: `n_draws` routing
+    /// draws over the same `tokens`-token batch in one pass (the AF
+    /// executor prices one draw per layer per micro-batch, so a single
+    /// micro costs `n_layers` draws).
+    ///
+    /// The draw-invariant work is hoisted out of the loop: the common
+    /// op list (gate GEMM, shared expert, TP sync) is built and priced
+    /// **once**, its `(class, secs)` pairs cached in scratch and
+    /// replayed into the metric stream per draw, and the scratch EP
+    /// network is resolved once instead of per call. Everything
+    /// data-dependent — the routing draw itself, the per-rank grouped
+    /// GEMMs, and the fabric dispatch/combine — still runs per draw in
+    /// the sequential order, so the RNG stream, every recorded op time,
+    /// and the returned samples are bit-identical to `n_draws`
+    /// back-to-back `moe_ffn_ep` calls (pinned by
+    /// `ep_batch_pricing_matches_sequential`). Only `predictor_evals`
+    /// drops (common ops are predicted once, not `n_draws` times).
+    ///
+    /// `out` is cleared and refilled (reuse it across calls — the
+    /// steady state allocates nothing). Returns `None` exactly when
+    /// [`CostModel::moe_ffn_ep`] would.
+    pub fn moe_ffn_ep_batch(
+        &self,
+        ctx: &mut CostCtx,
+        tokens: u64,
+        n_draws: usize,
+        out: &mut Vec<MoeEpSample>,
+    ) -> Option<()> {
+        let eps = self.ep.as_ref()?;
+        let moe_cfg = self.model.moe.as_ref()?;
+        if tokens == 0 || eps.n_ranks() <= 1 {
+            return None;
+        }
+        out.clear();
+        if n_draws == 0 {
+            return Some(());
+        }
+        let m = &self.model;
+        let tp = self.par.tp.max(1);
+        let d = m.d_model as u64;
+        let mut plans = self.plan_scratch.borrow_mut();
+        let PlanScratch { loads, rank_loads, rank_totals, ep_common, ep_per_rank, ep_common_t, .. } =
+            &mut *plans;
+        // draw-invariant: build + price the common ops once, cache the
+        // per-op (class, secs) pairs for metric replay
+        let mut w = OpsWriter::new(ep_common);
+        w.plain(OpWorkload::Gemm { m: tokens, n: moe_cfg.n_experts as u64, k: d });
+        if moe_cfg.shared_expert_dim > 0 {
+            let se = (moe_cfg.shared_expert_dim / tp).max(1) as u64;
+            w.plain(OpWorkload::Gemm { m: tokens, n: 2 * se, k: d });
+            w.plain(OpWorkload::Gemm { m: tokens, n: d, k: se });
+        }
+        if tp > 1 {
+            w.plain(OpWorkload::AllReduce {
+                bytes: tokens as f64 * d as f64 * m.dtype_bytes as f64,
+                n_ranks: tp,
+            });
+        }
+        w.finish();
+        ctx.pred.prefetch(&mut ep_common.iter());
+        ep_common_t.clear();
+        ep_common_t.extend(ep_common.iter().map(|op| (op.class(), ctx.pred.predict(op))));
+        let common_secs: f64 = ep_common_t.iter().map(|&(_, t)| t).sum();
+        let expert_ffn = (moe_cfg.expert_ffn_dim / tp).max(1) as u64;
+        let bpt = d as f64 * m.dtype_bytes as f64;
+        let mut scratch = self.scratch.borrow_mut();
+        let EpScratch { net, mat, mat_t } = &mut *scratch;
+        if !net.as_ref().is_some_and(|n| n.matches(eps)) {
+            *net = Some(eps.make_network());
+        }
+        let net = net.as_mut().expect("scratch network just built");
+        for _ in 0..n_draws {
+            let dropped = self.draw_assignment_into(
+                tokens as u32,
+                moe_cfg.n_experts,
+                moe_cfg.top_k,
+                ctx.rng,
+                loads,
+            );
+            eps.placement.rank_expert_loads_into(loads, rank_loads);
+            ep_per_rank.truncate(rank_loads.len());
+            while ep_per_rank.len() < rank_loads.len() {
+                ep_per_rank.push(Vec::new());
+            }
+            for (rl, rank_ops) in rank_loads.iter().zip(ep_per_rank.iter_mut()) {
+                let mut rw = OpsWriter::new(rank_ops);
+                rw.grouped(rl, 2 * expert_ffn, d);
+                rw.grouped(rl, d, expert_ffn);
+                rw.finish();
+            }
+            ctx.pred.prefetch(&mut ep_per_rank.iter().flatten());
+            // replay the cached common-op pricing (op order preserved),
+            // then price this draw's rank groups live
+            if let Some(mc) = ctx.metrics.as_deref_mut() {
+                for &(class, t) in ep_common_t.iter() {
+                    mc.record_op(class, t);
+                }
+            }
+            let mut ffn_secs = common_secs;
+            ffn_secs += self.rank_barrier_iter(
+                ep_per_rank.iter().map(|ops| ops.iter().map(|op| ctx.price(op)).sum::<f64>()),
+            );
+            eps.placement.dispatch_matrix_into(loads, bpt, mat);
+            eps.placement.transpose_into(mat, mat_t);
+            net.reset();
+            let dispatch = net.all_to_all(SimTime::ZERO, mat).1;
+            net.reset();
+            let combine = net.all_to_all(SimTime::ZERO, mat_t).1;
+            rank_totals.clear();
+            rank_totals.extend(
+                rank_loads.iter().map(|per| per.iter().map(|&x| x as u64).sum::<u64>()),
+            );
+            let imbalance = rank_imbalance(rank_totals);
+            if let Some(mc) = ctx.metrics.as_deref_mut() {
+                mc.record_op("ep_dispatch", dispatch.secs);
+                mc.record_op("ep_combine", combine.secs);
+                mc.record_ep(
+                    dispatch.total_bytes + combine.total_bytes,
+                    dispatch.cross_bytes + combine.cross_bytes,
+                    imbalance,
+                );
+                mc.dropped_tokens += dropped;
+            }
+            out.push(MoeEpSample {
+                ffn_secs,
+                dispatch_secs: dispatch.secs,
+                combine_secs: combine.secs,
+                total_bytes: dispatch.total_bytes + combine.total_bytes,
+                cross_bytes: dispatch.cross_bytes + combine.cross_bytes,
+                rank_imbalance: imbalance,
+            });
+        }
+        Some(())
+    }
+
     /// LM head projection for rows that produce a token this iteration.
     pub fn lm_head_time(&self, ctx: &mut CostCtx, rows: u64) -> f64 {
         if rows == 0 {
@@ -1002,6 +1141,81 @@ mod tests {
             assert_eq!(a.total_bytes, b.total_bytes);
             assert_eq!(a.cross_bytes, b.cross_bytes);
         }
+    }
+
+    #[test]
+    fn ep_batch_pricing_matches_sequential() {
+        use crate::moe::{EpSpec, EpTopology, ExpertPlacement, PlacementPolicy};
+        let mk = || {
+            let mut cm = CostModel::new(
+                ModelConfig::tiny_moe(),
+                Parallelism::new(1, 1, 4),
+                LinkSpec::nvlink_a800(),
+            );
+            cm.moe_routing = RoutingPolicy::Skewed { alpha: 0.1 };
+            cm.capacity_factor = Some(1.5);
+            cm.ep = Some(EpSpec::flat(
+                ExpertPlacement::build(
+                    PlacementPolicy::Contiguous,
+                    8,
+                    EpTopology::new(4, 2),
+                    None,
+                ),
+                LinkSpec::nvlink_a800(),
+                LinkSpec::cross_cluster(),
+            ));
+            cm
+        };
+        let n_draws = 6;
+        // sequential reference: n_draws back-to-back single-draw calls
+        let cm_seq = mk();
+        let mut pred = OraclePredictor::a800();
+        let mut rng = Pcg64::new(11);
+        let mut mc_seq = MetricsCollector::default();
+        let seq: Vec<MoeEpSample> = {
+            let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: Some(&mut mc_seq) };
+            (0..n_draws).map(|_| cm_seq.moe_ffn_ep(&mut ctx, 128).unwrap()).collect()
+        };
+        // batched: one call, same seed — bit-identical samples + metrics
+        let cm_batch = mk();
+        let mut pred_b = OraclePredictor::a800();
+        let mut rng_b = Pcg64::new(11);
+        let mut mc_batch = MetricsCollector::default();
+        let mut batch = Vec::new();
+        {
+            let mut ctx =
+                CostCtx { pred: &mut pred_b, rng: &mut rng_b, metrics: Some(&mut mc_batch) };
+            cm_batch.moe_ffn_ep_batch(&mut ctx, 128, n_draws, &mut batch).unwrap();
+        }
+        assert_eq!(batch.len(), n_draws);
+        for (a, b) in seq.iter().zip(batch.iter()) {
+            assert_eq!(a.ffn_secs, b.ffn_secs);
+            assert_eq!(a.dispatch_secs, b.dispatch_secs);
+            assert_eq!(a.combine_secs, b.combine_secs);
+            assert_eq!(a.total_bytes, b.total_bytes);
+            assert_eq!(a.cross_bytes, b.cross_bytes);
+            assert_eq!(a.rank_imbalance, b.rank_imbalance);
+        }
+        assert_eq!(mc_seq.op_time, mc_batch.op_time, "op accounting must not drift");
+        assert_eq!(mc_seq.ep_bytes, mc_batch.ep_bytes);
+        assert_eq!(mc_seq.ep_cross_bytes, mc_batch.ep_cross_bytes);
+        assert_eq!(mc_seq.ep_draws, mc_batch.ep_draws);
+        assert_eq!(mc_seq.dropped_tokens, mc_batch.dropped_tokens);
+        // rng streams consumed identically: a follow-up draw agrees
+        let next_seq = {
+            let mut ctx = CostCtx { pred: &mut pred, rng: &mut rng, metrics: None };
+            cm_seq.moe_ffn_ep(&mut ctx, 96).unwrap()
+        };
+        let next_batch = {
+            let mut ctx = CostCtx { pred: &mut pred_b, rng: &mut rng_b, metrics: None };
+            cm_batch.moe_ffn_ep(&mut ctx, 96).unwrap()
+        };
+        assert_eq!(next_seq.ffn_secs, next_batch.ffn_secs);
+        // n_draws == 0 clears the output and is not an error
+        let mut empty = vec![batch[0]];
+        let mut ctx = CostCtx { pred: &mut pred_b, rng: &mut rng_b, metrics: None };
+        cm_batch.moe_ffn_ep_batch(&mut ctx, 128, 0, &mut empty).unwrap();
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Parallel-engine integration: the sharded event loop behind
+//! `--sim-threads` must produce **byte-identical** deterministic
+//! reports to the serial run — for every deployment shape the graph
+//! layer can express, and for any thread count (including
+//! oversubscribed: more threads than shards). The engine's determinism
+//! contract is structural (shards share no mutable state during the
+//! parallel phase; the barrier merge order is thread-count-invariant),
+//! and these tests pin it end to end through the JSON projection.
+
+use frontier::config::cli::{build_config, FlagMap};
+
+/// Run the config with an explicit thread count and render the
+/// deterministic JSON projection (host-time fields excluded).
+fn run_json(mut flags: FlagMap, threads: u32) -> String {
+    flags.set("sim-threads", threads.to_string());
+    let cfg = build_config(&flags).unwrap();
+    frontier::run_experiment(&cfg).unwrap().to_json_deterministic().to_string_pretty()
+}
+
+/// Serial vs 2 / 4 / 16 threads: every rendering must match the serial
+/// bytes (16 oversubscribes every config under test).
+fn assert_thread_invariant(flags: FlagMap) {
+    let serial = run_json(flags.clone(), 1);
+    for threads in [2u32, 4, 16] {
+        assert_eq!(serial, run_json(flags.clone(), threads), "diverged at sim-threads={threads}");
+    }
+}
+
+fn base(model: &str, requests: u32, input: u32, output: u32) -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", model);
+    f.set("requests", requests.to_string());
+    f.set("input", input.to_string());
+    f.set("output", output.to_string());
+    f
+}
+
+#[test]
+fn colocated_is_thread_invariant() {
+    // single shard: the engine takes the serial drain path at any
+    // thread count, so this pins the fast path's equivalence
+    let mut f = base("tiny", 32, 64, 16);
+    f.set("replicas", "2");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn pd_is_thread_invariant() {
+    let mut f = base("tiny", 24, 64, 16);
+    f.set("mode", "pd");
+    f.set("prefill", "2");
+    f.set("decode", "2");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn fanout_graph_is_thread_invariant() {
+    // >= 4 stages, one decode pool in another cluster (the kv edge
+    // into it crosses the WAN trunk, so the sync window is set by the
+    // cheapest edge while dispatch still serializes the expensive one)
+    let mut f = base("tiny", 32, 64, 16);
+    f.set("stages", "prefill:2;decode:1;decode:1;decode:1,cluster=1");
+    f.set("edges", "0>1,0>2,0>3");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn af_ep_graph_is_thread_invariant() {
+    // prefill pool feeding an attention/FFN decode pair whose FFN pool
+    // is an EP domain: batched EP pricing + cross-shard handoff
+    let mut f = base("tiny-moe", 12, 32, 8);
+    f.set("mode", "af");
+    f.set("prefill", "1");
+    f.set("attn-gpus", "2");
+    f.set("ffn-gpus", "2");
+    f.set("micro-batches", "2");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn migration_enabled_pd_is_thread_invariant() {
+    // expert migration runs inside the parallel phase (stage-internal
+    // EP fabric) — per-shard RNG streams must still be deterministic
+    let mut f = base("tiny-moe", 24, 48, 12);
+    f.set("mode", "pd");
+    f.set("prefill", "1");
+    f.set("decode", "1");
+    f.set("ep", "4");
+    f.set("migration", "threshold");
+    f.set("load-window", "16");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn day_workload_pd_is_thread_invariant() {
+    // open-loop traffic-day trace over the PD boundary: arrival-driven
+    // windows (idle gaps between bursts) must merge identically
+    let mut f = base("tiny", 160, 48, 8);
+    f.set("workload", "day");
+    f.set("mode", "pd");
+    f.set("prefill", "2");
+    f.set("decode", "2");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn sim_threads_lowering_round_trips() {
+    let mut f = base("tiny", 8, 32, 8);
+    f.set("sim-threads", "4");
+    assert_eq!(build_config(&f).unwrap().sim_threads, 4);
+    // default stays serial
+    assert_eq!(build_config(&base("tiny", 8, 32, 8)).unwrap().sim_threads, 1);
+}
