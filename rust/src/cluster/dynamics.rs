@@ -1,0 +1,657 @@
+//! Cluster dynamics: fault injection and autoscaling as scenario axes.
+//!
+//! The fleet stops being immortal and statically sized here. A
+//! [`FaultSpec`] describes *when replicas die and recover* — either a
+//! seeded stochastic schedule (`mttf:MTTF[:mttr:MTTR]`, exponential
+//! gaps per replica) or an explicit event list (`list:...` /
+//! `file:...`), validated at config time. An [`AutoscaleSpec`]
+//! describes a control loop that grows/shrinks decode-capable pools
+//! from queue-depth signals with provisioning delay and warmup cost.
+//!
+//! Both lower to a [`DynPlan`] — a fully materialized, sorted event
+//! schedule computed *before* the simulation starts, as a pure
+//! function of (config, trace horizon, seed). That is what keeps the
+//! parallel engine's determinism contract intact: every shard sees its
+//! own fault events pre-scheduled in its local queue, so the window
+//! loop never needs cross-shard coordination to decide *when* a
+//! replica dies, only to route the damage (which rides the existing
+//! commit records). Link failures are out of scope for now: mutating
+//! the fabric mid-window would break the conservative sync-window
+//! bound; replica (`S.R`) and whole-pool (`S`) failures are modeled.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::core::{Pcg64, SimTime};
+
+/// Seconds between a replica failure and the affected requests
+/// re-entering the router (failure detection + reschedule latency).
+/// The coordinator widens this to at least one sync window so
+/// cross-shard requeues always land in a future window.
+pub const RECOVER_BACKOFF_S: f64 = 1.0;
+
+/// Seconds a displaced request waits before re-probing a pool that had
+/// no healthy replica.
+pub const RETRY_BACKOFF_S: f64 = 0.5;
+
+/// Routing attempts a displaced request gets before it is rejected
+/// with backpressure.
+pub const MAX_RETRIES: u8 = 3;
+
+/// Default MTTR when `--faults mttf:MTTF` omits it, seconds.
+pub const DEFAULT_MTTR_S: f64 = 30.0;
+
+/// Seconds of schedule generation past the last arrival: the service
+/// tail after the final request still sees faults and autoscaler
+/// ticks, without an unbounded horizon.
+pub const PLAN_SLACK_S: f64 = 60.0;
+
+/// Seed salt for the fault-schedule RNG stream (distinct from the
+/// warmup and per-shard salts so fault draws never correlate with
+/// workload or routing draws).
+const FAULT_SEED_SALT: u64 = 0xA076_1D64_78BD_642F;
+
+/// Safety cap on generated fault events per replica (an `mttf` far
+/// below the horizon would otherwise flood the queues).
+const MAX_EVENTS_PER_REPLICA: usize = 4096;
+
+/// Safety cap on autoscaler evaluation ticks.
+const MAX_SCALE_TICKS: usize = 100_000;
+
+/// One explicit failure or recovery in a `list:`/`file:` schedule.
+/// `replica: None` targets every replica of the stage (a node/pool
+/// outage).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Absolute simulated time, seconds.
+    pub t_s: f64,
+    /// Stage index in the resolved stage graph.
+    pub stage: usize,
+    /// Replica index within the stage; `None` = the whole pool.
+    pub replica: Option<usize>,
+    /// `true` = recovery, `false` = failure.
+    pub up: bool,
+}
+
+/// The fault-injection axis (`--faults`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Seeded stochastic schedule: each replica alternates exponential
+    /// up-gaps (mean `mttf_s`) and down-gaps (mean `mttr_s`).
+    Mttf { mttf_s: f64, mttr_s: f64 },
+    /// Explicit event list (times non-decreasing, recoveries after
+    /// their failures — enforced by [`FaultSpec::validate`]).
+    List(Vec<FaultEvent>),
+}
+
+impl FaultSpec {
+    /// Parse the `--faults` grammar:
+    ///
+    /// * `mttf:MTTF[:mttr:MTTR]` — seconds; MTTR defaults to
+    ///   [`DEFAULT_MTTR_S`];
+    /// * `list:EV[;EV...]` with `EV = down@T:S[.R] | up@T:S[.R]`
+    ///   (`T` seconds, `S` stage index, `.R` replica index; no `.R`
+    ///   targets the whole pool) — semicolon-joined so the spec can
+    ///   ride a comma-split sweep-axis value;
+    /// * `file:PATH` — JSON array of
+    ///   `{"t_s": T, "kind": "down"|"up", "stage": S[, "replica": R]}`.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        if let Some(rest) = s.strip_prefix("mttf:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            let mttf_s: f64 = parts[0]
+                .parse()
+                .map_err(|_| anyhow!("bad MTTF in --faults {s:?}"))?;
+            let mttr_s = match parts.len() {
+                1 => DEFAULT_MTTR_S,
+                3 if parts[1] == "mttr" => parts[2]
+                    .parse()
+                    .map_err(|_| anyhow!("bad MTTR in --faults {s:?}"))?,
+                _ => bail!("--faults grammar: mttf:MTTF[:mttr:MTTR], got {s:?}"),
+            };
+            return Ok(FaultSpec::Mttf { mttf_s, mttr_s });
+        }
+        if let Some(rest) = s.strip_prefix("list:") {
+            let mut evs = Vec::new();
+            for tok in rest.split(';').filter(|t| !t.is_empty()) {
+                evs.push(Self::parse_event(tok)?);
+            }
+            if evs.is_empty() {
+                bail!("--faults list: needs at least one event");
+            }
+            return Ok(FaultSpec::List(evs));
+        }
+        if let Some(path) = s.strip_prefix("file:") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("--faults file {path:?}: {e}"))?;
+            let json = crate::config::json::Json::parse(&text)?;
+            let mut evs = Vec::new();
+            for item in json.as_arr()? {
+                let up = match item.req("kind")?.as_str()? {
+                    "down" => false,
+                    "up" => true,
+                    k => bail!("fault event kind {k:?} (down|up)"),
+                };
+                evs.push(FaultEvent {
+                    t_s: item.req("t_s")?.as_f64()?,
+                    stage: item.req("stage")?.as_usize()?,
+                    replica: match item.get("replica") {
+                        Some(r) => Some(r.as_usize()?),
+                        None => None,
+                    },
+                    up,
+                });
+            }
+            if evs.is_empty() {
+                bail!("--faults file {path:?}: empty schedule");
+            }
+            return Ok(FaultSpec::List(evs));
+        }
+        bail!("--faults grammar: mttf:MTTF[:mttr:MTTR] | list:EV[;EV...] | file:PATH, got {s:?}")
+    }
+
+    /// One `down@T:S[.R]` / `up@T:S[.R]` token.
+    fn parse_event(tok: &str) -> Result<FaultEvent> {
+        let (up, rest) = if let Some(r) = tok.strip_prefix("down@") {
+            (false, r)
+        } else if let Some(r) = tok.strip_prefix("up@") {
+            (true, r)
+        } else {
+            bail!("fault event {tok:?} (down@T:S[.R] | up@T:S[.R])")
+        };
+        let (t, target) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow!("fault event {tok:?} needs @T:S[.R]"))?;
+        let t_s: f64 = t.parse().map_err(|_| anyhow!("bad time in fault event {tok:?}"))?;
+        let (stage, replica) = match target.split_once('.') {
+            Some((s, r)) => (
+                s.parse().map_err(|_| anyhow!("bad stage in fault event {tok:?}"))?,
+                Some(r.parse().map_err(|_| anyhow!("bad replica in fault event {tok:?}"))?),
+            ),
+            None => (
+                target.parse().map_err(|_| anyhow!("bad stage in fault event {tok:?}"))?,
+                None,
+            ),
+        };
+        Ok(FaultEvent { t_s, stage, replica, up })
+    }
+
+    /// Config-time validation against the resolved stage graph
+    /// (`stage_replicas[s]` = initial replica count of stage `s`).
+    /// Rejects non-finite/negative/unsorted times, out-of-range
+    /// targets, recoveries that precede their failure, duplicate
+    /// failures of an already-down target, and non-positive MTTF/MTTR.
+    pub fn validate(&self, stage_replicas: &[u32]) -> Result<()> {
+        match self {
+            FaultSpec::Mttf { mttf_s, mttr_s } => {
+                if !mttf_s.is_finite() || *mttf_s <= 0.0 {
+                    bail!("fault MTTF must be positive and finite (got {mttf_s})");
+                }
+                if !mttr_s.is_finite() || *mttr_s <= 0.0 {
+                    bail!("fault MTTR must be positive and finite (got {mttr_s})");
+                }
+            }
+            FaultSpec::List(evs) => {
+                let mut last_t = 0.0f64;
+                // down-state per (stage, replica), expanded over pools
+                let mut down: Vec<Vec<bool>> =
+                    stage_replicas.iter().map(|&n| vec![false; n as usize]).collect();
+                for ev in evs {
+                    if !ev.t_s.is_finite() || ev.t_s < 0.0 {
+                        bail!("fault event time {} must be finite and >= 0", ev.t_s);
+                    }
+                    if ev.t_s < last_t {
+                        bail!(
+                            "fault schedule must be sorted by time ({} after {})",
+                            ev.t_s,
+                            last_t
+                        );
+                    }
+                    last_t = ev.t_s;
+                    let n = *stage_replicas.get(ev.stage).ok_or_else(|| {
+                        anyhow!(
+                            "fault event stage {} out of range ({} stages)",
+                            ev.stage,
+                            stage_replicas.len()
+                        )
+                    })? as usize;
+                    let targets: Vec<usize> = match ev.replica {
+                        Some(r) => {
+                            if r >= n {
+                                bail!(
+                                    "fault event replica {}.{} out of range ({} replicas)",
+                                    ev.stage,
+                                    r,
+                                    n
+                                );
+                            }
+                            vec![r]
+                        }
+                        None => (0..n).collect(),
+                    };
+                    for r in targets {
+                        let d = &mut down[ev.stage][r];
+                        if ev.up {
+                            if !*d {
+                                bail!(
+                                    "recovery at t={} for stage {} replica {} precedes its \
+                                     failure",
+                                    ev.t_s,
+                                    ev.stage,
+                                    r
+                                );
+                            }
+                            *d = false;
+                        } else {
+                            if *d {
+                                bail!(
+                                    "duplicate failure at t={}: stage {} replica {} is \
+                                     already down",
+                                    ev.t_s,
+                                    ev.stage,
+                                    r
+                                );
+                            }
+                            *d = true;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Autoscaler policy: how the queue-depth signal is read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalePolicy {
+    /// Act on the current signal.
+    Reactive,
+    /// Act on the current signal plus its last-interval trend
+    /// (first-order extrapolation — scales *before* the queue peaks
+    /// on a rising edge, and holds off on a falling one).
+    Predictive,
+}
+
+impl ScalePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScalePolicy::Reactive => "reactive",
+            ScalePolicy::Predictive => "predictive",
+        }
+    }
+}
+
+/// The autoscaling control loop (`--autoscale`), applied to every
+/// decode-capable stage pool (unified / decode / af).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleSpec {
+    pub policy: ScalePolicy,
+    /// Pool size floor (scale-down never drains below this).
+    pub min_replicas: u32,
+    /// Pool size ceiling (bounds pre-provisioned capacity).
+    pub max_replicas: u32,
+    /// Seconds between control-loop evaluations.
+    pub interval_s: f64,
+    /// Seconds between a scale-up decision and the replica coming up.
+    pub provision_s: f64,
+    /// Cold-start stall charged to a fresh replica's first iteration,
+    /// seconds.
+    pub warmup_s: f64,
+    /// Scale up when waiting requests per healthy replica exceed this.
+    pub up_queue: f64,
+    /// Scale down when waiting requests per healthy replica fall
+    /// below this.
+    pub down_queue: f64,
+}
+
+impl AutoscaleSpec {
+    /// Defaults for everything but the policy and bounds.
+    pub fn new(policy: ScalePolicy, min_replicas: u32, max_replicas: u32) -> Self {
+        AutoscaleSpec {
+            policy,
+            min_replicas,
+            max_replicas,
+            interval_s: 10.0,
+            provision_s: 30.0,
+            warmup_s: 2.0,
+            up_queue: 4.0,
+            down_queue: 0.5,
+        }
+    }
+
+    /// Parse the `--autoscale` grammar: `reactive:MIN:MAX` or
+    /// `predictive:MIN:MAX` (tuning knobs ride the `--scale-*`
+    /// subflags).
+    pub fn parse(s: &str) -> Result<AutoscaleSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            bail!("--autoscale grammar: (reactive|predictive):MIN:MAX, got {s:?}");
+        }
+        let policy = match parts[0] {
+            "reactive" => ScalePolicy::Reactive,
+            "predictive" => ScalePolicy::Predictive,
+            p => bail!("unknown autoscale policy {p:?} (reactive|predictive)"),
+        };
+        let min: u32 =
+            parts[1].parse().map_err(|_| anyhow!("bad MIN in --autoscale {s:?}"))?;
+        let max: u32 =
+            parts[2].parse().map_err(|_| anyhow!("bad MAX in --autoscale {s:?}"))?;
+        Ok(AutoscaleSpec::new(policy, min, max))
+    }
+
+    /// Config-time validation. `governed[s]` marks the stages the
+    /// autoscaler applies to; their initial size must sit inside
+    /// `[min, max]` so the loop starts in a legal state.
+    pub fn validate(&self, stage_replicas: &[u32], governed: &[bool]) -> Result<()> {
+        if self.min_replicas == 0 {
+            bail!("autoscale min replicas must be >= 1");
+        }
+        if self.max_replicas < self.min_replicas {
+            bail!(
+                "autoscale max replicas {} < min {}",
+                self.max_replicas,
+                self.min_replicas
+            );
+        }
+        for (v, name) in [
+            (self.interval_s, "interval"),
+            (self.provision_s, "provisioning delay"),
+            (self.warmup_s, "warmup"),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                bail!("autoscale {name} must be finite and >= 0 (got {v})");
+            }
+        }
+        if self.interval_s <= 0.0 {
+            bail!("autoscale interval must be > 0");
+        }
+        if !self.up_queue.is_finite() || !self.down_queue.is_finite() {
+            bail!("autoscale thresholds must be finite");
+        }
+        if self.down_queue < 0.0 || self.up_queue <= self.down_queue {
+            bail!(
+                "autoscale thresholds need up > down >= 0 (got up={}, down={})",
+                self.up_queue,
+                self.down_queue
+            );
+        }
+        for (s, (&n, &gov)) in stage_replicas.iter().zip(governed).enumerate() {
+            if gov && !(self.min_replicas..=self.max_replicas).contains(&n) {
+                bail!(
+                    "stage {s}: {n} replicas outside the autoscale band [{}, {}]",
+                    self.min_replicas,
+                    self.max_replicas
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One materialized fault transition (pool events expanded to
+/// per-replica transitions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedFault {
+    pub at: SimTime,
+    pub stage: usize,
+    pub replica: usize,
+    /// `true` = recovery.
+    pub up: bool,
+}
+
+/// The fully materialized dynamics schedule for one run: a pure
+/// function of (spec, stage shape, seed, horizon) computed before the
+/// event loop starts — the determinism anchor for the sharded engine.
+#[derive(Clone, Debug, Default)]
+pub struct DynPlan {
+    /// Fault transitions sorted by (time, stage, replica, up).
+    pub faults: Vec<PlannedFault>,
+    /// Per-stage time of the *last* scheduled recovery: before this, a
+    /// dead pool is worth retrying into; after it, a dead pool stays
+    /// dead and displaced requests are rejected.
+    pub revive_after: Vec<SimTime>,
+    /// Autoscaler evaluation times (shared by every governed stage).
+    pub ticks: Vec<SimTime>,
+}
+
+impl DynPlan {
+    /// Whether this run has any dynamics at all (the inertness gate:
+    /// an empty plan must leave the engine byte-identical to a build
+    /// without one).
+    pub fn any(&self) -> bool {
+        !self.faults.is_empty() || !self.ticks.is_empty()
+    }
+}
+
+/// Materialize the dynamics schedule. `horizon_s` should cover the
+/// workload's arrival span plus recovery slack; generation stops there
+/// (plus one trailing recovery so nothing ends down under `mttf`).
+pub fn build_plan(
+    faults: Option<&FaultSpec>,
+    autoscale: Option<&AutoscaleSpec>,
+    stage_replicas: &[u32],
+    seed: u64,
+    horizon_s: f64,
+) -> DynPlan {
+    let mut plan = DynPlan {
+        faults: Vec::new(),
+        revive_after: vec![SimTime::ZERO; stage_replicas.len()],
+        ticks: Vec::new(),
+    };
+    match faults {
+        Some(FaultSpec::Mttf { mttf_s, mttr_s }) => {
+            for (s, &n) in stage_replicas.iter().enumerate() {
+                for r in 0..n as usize {
+                    // one decorrelated stream per replica, drawn in a
+                    // fixed (stage, replica) order — independent of
+                    // thread count by construction
+                    let mix = (s as u64) << 32 | r as u64;
+                    let mut rng = Pcg64::new(
+                        (seed ^ FAULT_SEED_SALT)
+                            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(mix + 1)),
+                    );
+                    let mut t = 0.0f64;
+                    let mut up = true; // replicas start healthy
+                    for _ in 0..MAX_EVENTS_PER_REPLICA {
+                        let gap = if up { rng.exp(1.0 / mttf_s) } else { rng.exp(1.0 / mttr_s) };
+                        t += gap;
+                        if t > horizon_s {
+                            // always schedule the trailing recovery so
+                            // a replica never ends the run down only
+                            // because the horizon cut its repair
+                            if up {
+                                break;
+                            }
+                        }
+                        up = !up;
+                        plan.faults.push(PlannedFault {
+                            at: SimTime::from_secs_f64(t),
+                            stage: s,
+                            replica: r,
+                            up,
+                        });
+                        if !up {
+                            continue;
+                        }
+                        if t > horizon_s {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Some(FaultSpec::List(evs)) => {
+            for ev in evs {
+                let targets: Vec<usize> = match ev.replica {
+                    Some(r) => vec![r],
+                    None => (0..stage_replicas[ev.stage] as usize).collect(),
+                };
+                for r in targets {
+                    plan.faults.push(PlannedFault {
+                        at: SimTime::from_secs_f64(ev.t_s),
+                        stage: ev.stage,
+                        replica: r,
+                        up: ev.up,
+                    });
+                }
+            }
+        }
+        None => {}
+    }
+    plan.faults.sort_by_key(|f| (f.at, f.stage, f.replica, f.up));
+    for f in &plan.faults {
+        if f.up && f.at > plan.revive_after[f.stage] {
+            plan.revive_after[f.stage] = f.at;
+        }
+    }
+    if let Some(a) = autoscale {
+        let end = horizon_s + a.provision_s + 10.0 * a.interval_s;
+        let mut k = 1usize;
+        while (k as f64) * a.interval_s <= end && k <= MAX_SCALE_TICKS {
+            plan.ticks.push(SimTime::from_secs_f64(k as f64 * a.interval_s));
+            k += 1;
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_mttf_grammar() {
+        assert_eq!(
+            FaultSpec::parse("mttf:600").unwrap(),
+            FaultSpec::Mttf { mttf_s: 600.0, mttr_s: DEFAULT_MTTR_S }
+        );
+        assert_eq!(
+            FaultSpec::parse("mttf:600:mttr:45").unwrap(),
+            FaultSpec::Mttf { mttf_s: 600.0, mttr_s: 45.0 }
+        );
+        assert!(FaultSpec::parse("mttf:").is_err());
+        assert!(FaultSpec::parse("mttf:600:45").is_err(), "mttr needs its keyword");
+        assert!(FaultSpec::parse("nope:1").is_err());
+    }
+
+    #[test]
+    fn parse_list_grammar() {
+        let spec = FaultSpec::parse("list:down@30:1.0;up@90:1.0;down@120:1").unwrap();
+        let FaultSpec::List(evs) = spec else { panic!("expected list") };
+        assert_eq!(
+            evs[0],
+            FaultEvent { t_s: 30.0, stage: 1, replica: Some(0), up: false }
+        );
+        assert_eq!(evs[1], FaultEvent { t_s: 90.0, stage: 1, replica: Some(0), up: true });
+        assert_eq!(evs[2], FaultEvent { t_s: 120.0, stage: 1, replica: None, up: false });
+        assert!(FaultSpec::parse("list:").is_err());
+        assert!(FaultSpec::parse("list:sideways@3:0").is_err());
+        assert!(FaultSpec::parse("list:down@x:0").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_schedules() {
+        let shape = &[2u32, 2];
+        // unsorted times
+        let unsorted = FaultSpec::parse("list:down@90:1.0;up@30:1.0").unwrap();
+        assert!(unsorted.validate(shape).unwrap_err().to_string().contains("sorted"));
+        // recovery before any failure
+        let orphan = FaultSpec::parse("list:up@30:1.0").unwrap();
+        assert!(orphan.validate(shape).unwrap_err().to_string().contains("precedes"));
+        // double failure of the same replica
+        let dup = FaultSpec::parse("list:down@10:1.0;down@20:1.0").unwrap();
+        assert!(dup.validate(shape).unwrap_err().to_string().contains("already down"));
+        // out-of-range targets
+        assert!(FaultSpec::parse("list:down@10:7").unwrap().validate(shape).is_err());
+        assert!(FaultSpec::parse("list:down@10:1.9").unwrap().validate(shape).is_err());
+        // non-positive mttf / mttr
+        assert!(FaultSpec::Mttf { mttf_s: 0.0, mttr_s: 30.0 }.validate(shape).is_err());
+        assert!(FaultSpec::Mttf { mttf_s: -5.0, mttr_s: 30.0 }.validate(shape).is_err());
+        assert!(FaultSpec::Mttf { mttf_s: 600.0, mttr_s: 0.0 }.validate(shape).is_err());
+        // the good cases pass
+        assert!(FaultSpec::parse("list:down@30:1.0;up@90:1.0").unwrap().validate(shape).is_ok());
+        assert!(FaultSpec::parse("mttf:600").unwrap().validate(shape).is_ok());
+        // pool down then pool up round-trips the expanded state
+        assert!(FaultSpec::parse("list:down@10:1;up@20:1").unwrap().validate(shape).is_ok());
+    }
+
+    #[test]
+    fn autoscale_parse_and_validate() {
+        let a = AutoscaleSpec::parse("reactive:1:8").unwrap();
+        assert_eq!(a.policy, ScalePolicy::Reactive);
+        assert_eq!((a.min_replicas, a.max_replicas), (1, 8));
+        assert_eq!(AutoscaleSpec::parse("predictive:2:4").unwrap().policy, ScalePolicy::Predictive);
+        assert!(AutoscaleSpec::parse("reactive:1").is_err());
+        assert!(AutoscaleSpec::parse("magic:1:8").is_err());
+        // bounds
+        assert!(AutoscaleSpec::new(ScalePolicy::Reactive, 0, 4)
+            .validate(&[2], &[true])
+            .is_err());
+        assert!(AutoscaleSpec::new(ScalePolicy::Reactive, 4, 2)
+            .validate(&[2], &[true])
+            .is_err());
+        // initial size outside the band
+        assert!(AutoscaleSpec::new(ScalePolicy::Reactive, 2, 4)
+            .validate(&[1], &[true])
+            .is_err());
+        // ungoverned stages are not constrained
+        assert!(AutoscaleSpec::new(ScalePolicy::Reactive, 2, 4)
+            .validate(&[1, 2], &[false, true])
+            .is_ok());
+        // thresholds must be ordered
+        let mut bad = AutoscaleSpec::new(ScalePolicy::Reactive, 1, 4);
+        bad.up_queue = 0.5;
+        bad.down_queue = 0.5;
+        assert!(bad.validate(&[2], &[true]).is_err());
+    }
+
+    #[test]
+    fn mttf_plan_is_seeded_and_alternates() {
+        let spec = FaultSpec::Mttf { mttf_s: 50.0, mttr_s: 10.0 };
+        let a = build_plan(Some(&spec), None, &[2, 2], 7, 300.0);
+        let b = build_plan(Some(&spec), None, &[2, 2], 7, 300.0);
+        assert_eq!(a.faults, b.faults, "same seed, same schedule");
+        let c = build_plan(Some(&spec), None, &[2, 2], 8, 300.0);
+        assert_ne!(a.faults, c.faults, "different seed, different schedule");
+        assert!(!a.faults.is_empty());
+        // per replica: strictly alternating down/up starting with down
+        for s in 0..2usize {
+            for r in 0..2usize {
+                let evs: Vec<_> =
+                    a.faults.iter().filter(|f| f.stage == s && f.replica == r).collect();
+                let mut t = SimTime::ZERO;
+                for (i, f) in evs.iter().enumerate() {
+                    assert_eq!(f.up, i % 2 == 1, "alternation broken at {i}");
+                    assert!(f.at > t, "times must increase");
+                    t = f.at;
+                }
+                // nothing ends down: even count (last event is an up)
+                assert_eq!(evs.len() % 2, 0, "trailing recovery scheduled");
+            }
+        }
+        // sorted by time
+        assert!(a.faults.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn list_plan_expands_pool_events() {
+        let spec = FaultSpec::parse("list:down@10:0;up@20:0.1").unwrap();
+        let p = build_plan(Some(&spec), None, &[3], 1, 100.0);
+        // pool-down expands to 3 per-replica transitions
+        assert_eq!(p.faults.iter().filter(|f| !f.up).count(), 3);
+        assert_eq!(p.faults.iter().filter(|f| f.up).count(), 1);
+        assert_eq!(p.revive_after[0], SimTime::from_secs_f64(20.0));
+        assert!(p.any());
+        assert!(!build_plan(None, None, &[3], 1, 100.0).any());
+    }
+
+    #[test]
+    fn scale_ticks_cover_horizon_plus_slack() {
+        let a = AutoscaleSpec::new(ScalePolicy::Reactive, 1, 4);
+        let p = build_plan(None, Some(&a), &[2], 1, 60.0);
+        assert!(p.faults.is_empty());
+        assert_eq!(p.ticks[0], SimTime::from_secs_f64(10.0));
+        let end = 60.0 + a.provision_s + 10.0 * a.interval_s;
+        assert_eq!(p.ticks.len(), (end / a.interval_s) as usize);
+        assert!(p.ticks.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -13,6 +13,8 @@ use crate::core::SimTime;
 use crate::memory::BlockManager;
 use crate::scheduler::QueuedReq;
 
+pub mod dynamics;
+
 /// What a cluster does in the deployment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StageKind {
@@ -63,6 +65,27 @@ pub struct ReplicaWorker {
     pub busy_ns: u64,
     /// Tokens processed (prefill + decode) for utilization reports.
     pub tokens_processed: u64,
+    /// Health: serving when `true`. A faulted replica and a
+    /// not-yet-provisioned autoscale slot are both `up = false`; they
+    /// are told apart by [`ReplicaWorker::down_since`].
+    pub up: bool,
+    /// Autoscale drain: still serving its backlog but closed to new
+    /// routing; retires to `up = false` once empty.
+    pub draining: bool,
+    /// Incarnation counter, bumped on every failure — in-flight
+    /// events stamped with an older generation are stale and ignored.
+    pub gen: u32,
+    /// When the current *fault* outage began (`None` while healthy and
+    /// for retired/never-provisioned autoscale slots) — the
+    /// availability meter.
+    pub down_since: Option<SimTime>,
+    /// Requests with an in-flight KV transfer targeting this replica
+    /// (between dispatch and delivery the rid→replica link otherwise
+    /// lives only inside the event queue — a fault must requeue these
+    /// too).
+    pub inbound: Vec<u64>,
+    /// Scale-up decided, replica still provisioning.
+    pub provisioning: bool,
 }
 
 impl ReplicaWorker {
@@ -76,6 +99,12 @@ impl ReplicaWorker {
             iterations: 0,
             busy_ns: 0,
             tokens_processed: 0,
+            up: true,
+            draining: false,
+            gen: 0,
+            down_since: None,
+            inbound: Vec::new(),
+            provisioning: false,
         }
     }
 
@@ -86,6 +115,11 @@ impl ReplicaWorker {
 
     pub fn has_work(&self) -> bool {
         !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Open for new routing: healthy and not draining.
+    pub fn alive(&self) -> bool {
+        self.up && !self.draining
     }
 }
 
@@ -144,11 +178,24 @@ impl ClusterWorker {
 
     /// Busy fraction over a horizon (utilization report).
     pub fn busy_fraction(&self, horizon: SimTime) -> f64 {
-        if horizon.0 == 0 || self.replicas.is_empty() {
+        self.busy_fraction_n(horizon, self.replicas.len())
+    }
+
+    /// Busy fraction normalized to `n` replica-slots — autoscaled
+    /// pools pre-provision up to `max_replicas` slots but report
+    /// utilization against the configured initial count, so the number
+    /// stays comparable to a static run of the same shape.
+    pub fn busy_fraction_n(&self, horizon: SimTime, n: usize) -> f64 {
+        if horizon.0 == 0 || n == 0 {
             return 0.0;
         }
         let busy: u64 = self.replicas.iter().map(|r| r.busy_ns).sum();
-        busy as f64 / (horizon.0 as f64 * self.replicas.len() as f64)
+        busy as f64 / (horizon.0 as f64 * n as f64)
+    }
+
+    /// Replicas currently open for routing.
+    pub fn alive_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive()).count()
     }
 }
 

@@ -88,6 +88,13 @@ pub const VALUE_FLAGS: &[&str] = &[
     "slo-ttft",
     "slo-tbt",
     "slo-e2e",
+    "faults",
+    "autoscale",
+    "scale-interval",
+    "scale-delay",
+    "scale-warmup",
+    "scale-up",
+    "scale-down",
     "sim-threads",
     "seed",
 ];
@@ -411,6 +418,26 @@ pub fn build_config(a: &FlagMap) -> Result<ExperimentConfig> {
     if a.truthy("profiled") {
         cfg.overhead = OverheadConfig::profiled_real();
     }
+    if let Some(f) = a.get("faults") {
+        cfg.faults = Some(crate::cluster::dynamics::FaultSpec::parse(f)?);
+    }
+    if let Some(s) = a.get("autoscale") {
+        let mut auto = crate::cluster::dynamics::AutoscaleSpec::parse(s)?;
+        auto.interval_s = a.num("scale-interval", auto.interval_s)?;
+        auto.provision_s = a.num("scale-delay", auto.provision_s)?;
+        auto.warmup_s = a.num("scale-warmup", auto.warmup_s)?;
+        auto.up_queue = a.num("scale-up", auto.up_queue)?;
+        auto.down_queue = a.num("scale-down", auto.down_queue)?;
+        cfg.autoscale = Some(auto);
+    } else {
+        // a tuning subflag without the loop would silently run a
+        // statically sized fleet — reject it like --edges w/o --stages
+        for k in ["scale-interval", "scale-delay", "scale-warmup", "scale-up", "scale-down"] {
+            if a.has(k) {
+                bail!("--{k} requires --autoscale");
+            }
+        }
+    }
     cfg.sim_threads = a.num("sim-threads", 1u32)?;
     cfg.seed = a.num("seed", 1u64)?;
     Ok(cfg)
@@ -577,6 +604,52 @@ mod tests {
     }
 
     #[test]
+    fn cluster_dynamics_flags_lower_and_validate() {
+        use crate::cluster::dynamics::{FaultSpec, ScalePolicy};
+        let f = parse(&[
+            "--model",
+            "tiny",
+            "--mode",
+            "pd",
+            "--prefill",
+            "2",
+            "--decode",
+            "2",
+            "--faults",
+            "mttf:600:mttr:30",
+            "--autoscale",
+            "predictive:1:6",
+            "--scale-interval",
+            "5",
+            "--scale-delay",
+            "20",
+            "--scale-warmup",
+            "1.5",
+        ])
+        .unwrap();
+        let cfg = build_config(&f).unwrap();
+        assert_eq!(cfg.faults, Some(FaultSpec::Mttf { mttf_s: 600.0, mttr_s: 30.0 }));
+        let auto = cfg.autoscale.unwrap();
+        assert_eq!(auto.policy, ScalePolicy::Predictive);
+        assert_eq!((auto.min_replicas, auto.max_replicas), (1, 6));
+        assert_eq!(auto.interval_s, 5.0);
+        assert_eq!(auto.provision_s, 20.0);
+        assert_eq!(auto.warmup_s, 1.5);
+        assert!(cfg.validate().is_ok());
+        // defaults stay inert
+        let d = build_config(&FlagMap::new()).unwrap();
+        assert!(d.faults.is_none() && d.autoscale.is_none());
+        // malformed specs fail at lowering, orphan subflags are loud
+        assert!(build_config(&parse(&["--faults", "sometimes"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--autoscale", "reactive"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--scale-interval", "5"]).unwrap()).is_err());
+        // list grammar is semicolon-joined so it can ride a sweep axis
+        let lf = parse(&["--model", "tiny", "--mode", "pd", "--faults", "list:down@30:1.0;up@90:1.0"])
+            .unwrap();
+        assert!(build_config(&lf).unwrap().validate().is_ok());
+    }
+
+    #[test]
     fn value_flag_registry_matches_build_config() {
         assert!(is_value_flag("capacity-factor"));
         assert!(is_value_flag("seed"));
@@ -584,6 +657,8 @@ mod tests {
         assert!(is_value_flag("workload"), "workload mixes are a sweep axis");
         assert!(is_value_flag("slo-ttft") && is_value_flag("slo-tbt") && is_value_flag("slo-e2e"));
         assert!(is_value_flag("sim-threads"), "single-run sharding is sweep-inert but settable");
+        assert!(is_value_flag("faults") && is_value_flag("autoscale"), "dynamics are sweep axes");
+        assert!(is_value_flag("scale-interval") && is_value_flag("scale-up"));
         assert!(!is_value_flag("threads"), "driver flags are not sweepable");
         assert!(!is_value_flag("trace"), "trace replay is a simulate-only path");
         assert!(!is_value_flag("json"), "bool flags are not value flags");

@@ -10,6 +10,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::cluster::dynamics::{AutoscaleSpec, FaultSpec};
 use crate::cluster::StageKind;
 use crate::hardware::{GpuSpec, LinkSpec};
 use crate::metrics::SloSpec;
@@ -191,6 +192,12 @@ pub struct ExperimentConfig {
     /// at runtime, and forced to 1 under the learned predictor (its
     /// execution artifacts are not thread-safe).
     pub sim_threads: u32,
+    /// Fault-injection schedule (`--faults`); `None` = immortal fleet,
+    /// byte-identical to a build without the dynamics layer.
+    pub faults: Option<FaultSpec>,
+    /// Autoscaling control loop (`--autoscale`) over decode-capable
+    /// stage pools; `None` = statically sized fleet.
+    pub autoscale: Option<AutoscaleSpec>,
 }
 
 impl ExperimentConfig {
@@ -217,6 +224,8 @@ impl ExperimentConfig {
             slo: SloSpec::default(),
             keep_raw_samples: false,
             sim_threads: 1,
+            faults: None,
+            autoscale: None,
         }
     }
 
@@ -271,6 +280,26 @@ impl ExperimentConfig {
     pub fn with_sim_threads(mut self, n: u32) -> Self {
         self.sim_threads = n;
         self
+    }
+
+    /// Install a fault-injection schedule (see [`FaultSpec::parse`]).
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Install an autoscaling control loop over the decode-capable
+    /// stage pools.
+    pub fn with_autoscale(mut self, autoscale: AutoscaleSpec) -> Self {
+        self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Which stages the autoscaler governs: every decode-capable pool
+    /// (unified / decode / af) — prefill producers are left static so
+    /// the control loop acts where queue depth maps to token latency.
+    pub fn autoscale_governs(graph: &StageGraphConfig) -> Vec<bool> {
+        graph.stages.iter().map(|st| st.kind != StageKind::Prefill).collect()
     }
 
     /// Install an explicit stage graph (finalized: names assigned,
@@ -439,6 +468,16 @@ impl ExperimentConfig {
         }
         let graph = self.stage_graph();
         graph.validate()?;
+        // cluster-dynamics specs are validated against the *resolved*
+        // stage shape so out-of-range fault targets and autoscale
+        // bands that exclude the initial pool size fail at config time
+        let stage_replicas: Vec<u32> = graph.stages.iter().map(|st| st.replicas).collect();
+        if let Some(f) = &self.faults {
+            f.validate(&stage_replicas)?;
+        }
+        if let Some(a) = &self.autoscale {
+            a.validate(&stage_replicas, &Self::autoscale_governs(&graph))?;
+        }
         // threshold migration that could never engage (dense model, or
         // no stage with an EP domain) is a silent no-op — reject it, as
         // `--drift` without skewed routing is rejected
@@ -628,6 +667,39 @@ mod tests {
         assert_eq!(h.intra_node, cfg.link);
         assert_eq!(h.inter_node, cfg.inter_node_link);
         assert_eq!(h.wan, cfg.cross_link);
+    }
+
+    #[test]
+    fn fault_schedules_validate_against_the_stage_shape() {
+        let m = ModelConfig::tiny();
+        let pd = |spec: &str| {
+            ExperimentConfig::pd(m.clone(), 2, 2).with_faults(FaultSpec::parse(spec).unwrap())
+        };
+        assert!(pd("mttf:600:mttr:30").validate().is_ok());
+        assert!(pd("list:down@30:1.0;up@90:1.0").validate().is_ok());
+        // malformed schedules are config-time errors (CI negative set)
+        assert!(pd("list:down@90:1.0;up@30:1.0").validate().is_err(), "unsorted");
+        assert!(pd("list:up@30:1.0").validate().is_err(), "recovery precedes failure");
+        let mttf0 = ExperimentConfig::pd(m.clone(), 2, 2)
+            .with_faults(FaultSpec::Mttf { mttf_s: 0.0, mttr_s: 30.0 });
+        assert!(mttf0.validate().is_err(), "MTTF <= 0");
+        // targets are checked against the *resolved* graph
+        assert!(pd("list:down@10:5").validate().is_err(), "stage out of range");
+        assert!(pd("list:down@10:1.7").validate().is_err(), "replica out of range");
+    }
+
+    #[test]
+    fn autoscale_band_must_admit_the_initial_shape() {
+        use crate::cluster::dynamics::{ScalePolicy};
+        let m = ModelConfig::tiny();
+        let spec = AutoscaleSpec::new(ScalePolicy::Reactive, 1, 6);
+        assert!(ExperimentConfig::pd(m.clone(), 2, 2).with_autoscale(spec).validate().is_ok());
+        // decode pool (governed) outside the band
+        let tight = AutoscaleSpec::new(ScalePolicy::Reactive, 3, 6);
+        assert!(ExperimentConfig::pd(m.clone(), 2, 2).with_autoscale(tight).validate().is_err());
+        // prefill pools are not governed, so only the decode side counts
+        let wide = AutoscaleSpec::new(ScalePolicy::Predictive, 2, 4);
+        assert!(ExperimentConfig::pd(m, 1, 2).with_autoscale(wide).validate().is_ok());
     }
 
     #[test]

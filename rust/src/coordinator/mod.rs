@@ -69,6 +69,26 @@
 //! report is **bit-identical for any `--sim-threads` value**;
 //! single-shard graphs (co-located pools) skip windowing entirely and
 //! drain serially, exactly like the pre-sharding engine.
+//!
+//! # Cluster dynamics (`--faults` / `--autoscale`)
+//!
+//! With a [`crate::cluster::dynamics`] spec the fleet stops being
+//! immortal and statically sized. The whole schedule is materialized
+//! as a [`crate::cluster::dynamics::DynPlan`] *before* the event loop
+//! and pre-scheduled into each owning shard's queue, so the parallel
+//! engine never coordinates across shards to decide *when* a replica
+//! dies — only the damage routes cross-shard, through the existing
+//! commit records: a failed KV-destination replica requeues its
+//! displaced requests via [`PbKind::Requeue`] (applied at the barrier
+//! no earlier than one sync window later), its freed KV rides
+//! [`PbKind::Free`], and recoveries/scale-ups re-run transfer dispatch
+//! via [`PbKind::Trigger`]. Displaced requests keep their arrival
+//! timestamps and pay a full re-prefill of input + decoded context
+//! (KV is gone), so fault latency damage lands in TTFT/E2E/SLO
+//! metrics. Replica incarnation counters ([`ReplicaWorker::gen`])
+//! stamp `IterEnd`/`KvDone` events; stale ones are dropped. Runs
+//! without dynamics schedule nothing and stay byte-identical to the
+//! pre-dynamics engine.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
@@ -79,7 +99,7 @@ use std::sync::{Barrier, Mutex};
 
 use anyhow::{bail, Result};
 
-use crate::cluster::{ClusterWorker, ReplicaWorker, StageKind};
+use crate::cluster::{dynamics, ClusterWorker, ReplicaWorker, StageKind};
 use crate::config::{ExperimentConfig, StageGraphConfig};
 use crate::core::{EventQueue, Pcg64, SimTime};
 use crate::memory::{blocks_for_tokens, BlockManager};
@@ -112,10 +132,21 @@ pub struct Request {
     pub state: ReqState,
     /// Prefill tokens completed so far (chunked prefill).
     pub prefill_progress: u32,
+    /// Prefill completion target: `input_len` normally, `input_len +
+    /// decoded` after a fault displaced the request (the lost KV
+    /// context — prompt plus tokens decoded so far — must be
+    /// recomputed before decoding resumes).
+    pub prefill_target: u32,
     /// Output tokens generated so far.
     pub decoded: u32,
     pub ts: ReqTimestamps,
     pub last_token: SimTime,
+    /// Fault-displacement routing attempts consumed (bounded by
+    /// [`dynamics::MAX_RETRIES`]).
+    pub retries: u8,
+    /// Displaced by at least one fault — feeds the per-fault SLO
+    /// damage meter on completion.
+    pub affected: bool,
 }
 
 /// Shard-local events. Stage indices are **shard-local** — the shard
@@ -124,8 +155,21 @@ pub struct Request {
 #[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrival(u64),
-    IterEnd { s: usize, r: usize },
-    KvDone { rid: u64, s: usize, r: usize },
+    /// `gen` stamps the replica incarnation that scheduled the event;
+    /// a fault bumps the replica's counter, so stale iterations from a
+    /// lost incarnation drop themselves (always 0 without `--faults`).
+    IterEnd { s: usize, r: usize, gen: u32 },
+    KvDone { rid: u64, s: usize, r: usize, gen: u32 },
+    /// Pre-scheduled fault transition from the [`dynamics::DynPlan`].
+    Fault { s: usize, r: usize, up: bool },
+    /// A fault-displaced request re-entering the entry router
+    /// (shard 0 only).
+    Retry(u64),
+    /// Pre-scheduled autoscaler evaluation for one governed stage.
+    ScaleTick { s: usize },
+    /// A scale-up decision's provisioning delay elapsed: the replica
+    /// joins the pool.
+    ScaleUp { s: usize, r: usize },
 }
 
 /// A `Box<dyn ExecutionPredictor>` asserted to be `Send`.
@@ -186,6 +230,9 @@ struct StageRuntime {
     /// Estimator draw count at the last migration check (the control
     /// loop re-plans at most once per load window).
     mig_last_draws: u64,
+    /// Queue-depth signal at the previous autoscaler tick (the
+    /// predictive policy's trend term).
+    q_prev: f64,
 }
 
 impl StageRuntime {
@@ -223,6 +270,12 @@ enum PbKind {
     /// Memory availability changed: re-run transfer dispatch (PD
     /// backpressure steps 2/3).
     Trigger,
+    /// A fault-displaced request leaving its failed destination shard
+    /// for shard 0's entry router. The barrier inserts it into
+    /// shard 0's store and schedules its `Retry` one recovery delay
+    /// later — at least one sync window, so the cross-shard effect
+    /// always lands in a future window.
+    Requeue { rid: u64, req: Box<Request> },
 }
 
 /// One commit record: what happened, stamped with when.
@@ -312,6 +365,25 @@ struct RunCtx {
     /// Whether any kv edge exists at all (gates barrier triggers — a
     /// graph without handoffs never needs the dispatch path).
     has_transfers: bool,
+    /// Whether any cluster dynamics (`--faults` / `--autoscale`) are
+    /// configured. Gates the health-aware routing branches; `false`
+    /// keeps every hot path byte-identical to the pre-dynamics engine.
+    dyn_on: bool,
+    /// Cross-shard requeue latency after a fault: the failure
+    /// detection backoff widened to at least one sync window (set per
+    /// run, once the window is known).
+    recover_delay: SimTime,
+    /// Per global stage: time of its last *scheduled* fault recovery —
+    /// before it a dead pool is worth retrying into, after it a dead
+    /// pool stays dead.
+    revive_after: Vec<SimTime>,
+    /// Per global stage: whether the autoscaler governs it
+    /// (decode-capable stages only).
+    governed: Vec<bool>,
+    /// Per global stage: configured initial replica count. Autoscaled
+    /// pools pre-provision `max_replicas` slots, but reports, GPU
+    /// counts, and fault targeting all use the configured size.
+    init_replicas: Vec<u32>,
 }
 
 /// One shard of the parallel engine: a group of stages advanced by one
@@ -420,7 +492,17 @@ impl GlobalController {
             let budget = st.budget.unwrap_or(cfg.policy.budget);
             let ep_clusters = st.ep_clusters.unwrap_or(cfg.ep_clusters);
             let gpus_per_replica = par.gpus_per_replica();
-            let (cw, gpus, af) = match st.af {
+            // autoscaled pools pre-provision `max_replicas` slots so
+            // every shape derived from the pool (free-ledger offsets,
+            // capacity caches, stall vectors) is fixed at
+            // construction; the extra slots start down and cost
+            // nothing until a scale-up brings them up. GPU counts and
+            // reports keep the configured initial size.
+            let n_slots = match cfg.autoscale.as_ref() {
+                Some(a) if st.kind != StageKind::Prefill => a.max_replicas.max(st.replicas),
+                _ => st.replicas,
+            };
+            let (mut cw, gpus, af) = match st.af {
                 Some(afp) => {
                     // KV lives on the attention side of the AF pair;
                     // roughly half the weights (attention stack) sit
@@ -432,7 +514,7 @@ impl GlobalController {
                         cfg.policy.kv_reserve_frac,
                     );
                     let group_gpus = afp.attn_gpus + afp.ffn_gpus;
-                    let cw = ClusterWorker::new(st.kind, st.replicas, group_gpus, af_mem);
+                    let cw = ClusterWorker::new(st.kind, n_slots, group_gpus, af_mem);
                     // attention pool: TP across its GPUs; FFN pool: EP
                     // for MoE (or TP for dense)
                     let attn_par = crate::parallelism::Parallelism::tp(
@@ -464,10 +546,13 @@ impl GlobalController {
                         model.kv_bytes_per_token(),
                         cfg.policy.kv_reserve_frac,
                     );
-                    let cw = ClusterWorker::new(st.kind, st.replicas, gpus_per_replica, mem);
+                    let cw = ClusterWorker::new(st.kind, n_slots, gpus_per_replica, mem);
                     (cw, st.replicas * gpus_per_replica, None)
                 }
             };
+            for rep in cw.replicas.iter_mut().skip(st.replicas as usize) {
+                rep.up = false; // autoscale headroom: not yet provisioned
+            }
             let mut cost = base_cost(par);
             // replica-level EP ranks (co-located / PD stages)
             if af.is_none() {
@@ -490,6 +575,7 @@ impl GlobalController {
                 loc: NetLoc::new(st.cluster, st.node),
                 af,
                 mig_last_draws: 0,
+                q_prev: 0.0,
             });
             // expert-migration control loop: attach the online load
             // estimator to the cost model owning the stage's EP domain.
@@ -548,6 +634,9 @@ impl GlobalController {
             free_slots += st.cw.replicas.len();
         }
         let has_transfers = kv_out.iter().any(|d| !d.is_empty());
+        let governed = ExperimentConfig::autoscale_governs(&graph);
+        let init_replicas: Vec<u32> = graph.stages.iter().map(|st| st.replicas).collect();
+        let dyn_on = cfg.faults.is_some() || cfg.autoscale.is_some();
         // distribute the stage runtimes into their shards
         let mut slots: Vec<Option<StageRuntime>> = runtimes.into_iter().map(Some).collect();
         let shards: Vec<Shard> = shard_stages
@@ -615,6 +704,11 @@ impl GlobalController {
                 free_slots,
                 kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
                 has_transfers,
+                dyn_on,
+                recover_delay: SimTime::ZERO,
+                revive_after: vec![SimTime::ZERO; n],
+                governed,
+                init_replicas,
                 cfg,
             },
         })
@@ -660,6 +754,8 @@ impl GlobalController {
         let host_start = std::time::Instant::now();
         let trace_len = trace.len() as u64;
         let delta = self.sync_window(&trace);
+        let last_arrival_s =
+            trace.iter().map(|t| t.arrival.as_secs_f64()).fold(0.0f64, f64::max);
         {
             let s0 = &mut self.shards[0];
             if let ReqStore::Dense(v) = &mut s0.store {
@@ -672,14 +768,49 @@ impl GlobalController {
                     rid,
                     Request {
                         ts: ReqTimestamps { arrival, ..Default::default() },
+                        prefill_target: spec.input_len,
                         spec,
                         state: ReqState::Queued,
                         prefill_progress: 0,
                         decoded: 0,
                         last_token: SimTime::ZERO,
+                        retries: 0,
+                        affected: false,
                     },
                 );
                 s0.queue.schedule_at(arrival, Ev::Arrival(rid));
+            }
+        }
+        // cluster dynamics: materialize the seeded plan — a pure
+        // function of (spec, shape, seed, horizon), independent of
+        // thread count — and pre-schedule every transition into the
+        // queue of the shard that owns its stage. Runs without
+        // --faults/--autoscale build no plan and schedule nothing.
+        if self.ctx.dyn_on {
+            self.ctx.recover_delay =
+                SimTime::from_secs_f64(dynamics::RECOVER_BACKOFF_S).max(delta);
+            let plan = dynamics::build_plan(
+                self.ctx.cfg.faults.as_ref(),
+                self.ctx.cfg.autoscale.as_ref(),
+                &self.ctx.init_replicas,
+                self.ctx.cfg.seed,
+                last_arrival_s + dynamics::PLAN_SLACK_S,
+            );
+            self.ctx.revive_after = plan.revive_after.clone();
+            for f in &plan.faults {
+                let (si, li) = self.ctx.stage_shard[f.stage];
+                self.shards[si]
+                    .queue
+                    .schedule_at(f.at, Ev::Fault { s: li, r: f.replica, up: f.up });
+            }
+            for (gs, &gov) in self.ctx.governed.iter().enumerate() {
+                if !gov {
+                    continue;
+                }
+                let (si, li) = self.ctx.stage_shard[gs];
+                for &t in &plan.ticks {
+                    self.shards[si].queue.schedule_at(t, Ev::ScaleTick { s: li });
+                }
             }
         }
         let GlobalController { ctx, graph: _, mut shards, mut fabric, mut pending_transfers } =
@@ -710,11 +841,23 @@ impl GlobalController {
                 .map(|m| m.into_inner().expect("no shard worker panicked"))
                 .collect();
         }
+        let horizon = shards.iter().map(|sh| sh.queue.now()).max().unwrap_or(SimTime::ZERO);
         // merge shard-local metrics in fixed shard order (deterministic
         // regardless of how many threads advanced the shards)
         let mut metrics = std::mem::take(&mut shards[0].metrics);
         for sh in shards.iter().skip(1) {
             metrics.merge(&sh.metrics);
+        }
+        // outages still open at the horizon never saw their recovery:
+        // charge the partial downtime (fixed stage order, deterministic)
+        for sh in &shards {
+            for st in &sh.stages {
+                for rep in &st.cw.replicas {
+                    if let Some(since) = rep.down_since {
+                        metrics.fault_downtime_s += (horizon - since).as_secs_f64();
+                    }
+                }
+            }
         }
         let finished = metrics.completed_requests + metrics.rejected_requests;
         if finished < trace_len {
@@ -726,22 +869,26 @@ impl GlobalController {
             .flat_map(|sh| sh.stages.iter())
             .map(|st| st.pred.evals())
             .sum();
-        let horizon = shards.iter().map(|sh| sh.queue.now()).max().unwrap_or(SimTime::ZERO);
         let events_processed: u64 = shards.iter().map(|sh| sh.queue.processed()).sum();
         let stage_reports: Vec<StageReport> = ctx
             .stage_shard
             .iter()
-            .map(|&(si, li)| {
+            .enumerate()
+            .map(|(g, &(si, li))| {
                 let st = &shards[si].stages[li];
+                // autoscaled pools report against the configured
+                // initial size (pre-provisioned headroom slots are an
+                // engine artifact, not deployed capacity)
+                let init = ctx.init_replicas[g];
                 StageReport {
                     name: st.name.clone(),
                     kind: st.cw.kind.name().to_string(),
-                    replicas: st.cw.replicas.len() as u32,
+                    replicas: init,
                     gpus: st.gpus,
                     gpu_name: st.gpu_name.clone(),
                     iterations: st.cw.replicas.iter().map(|r| r.iterations).sum(),
                     tokens: st.cw.replicas.iter().map(|r| r.tokens_processed).sum(),
-                    busy_frac: st.cw.busy_fraction(horizon),
+                    busy_frac: st.cw.busy_fraction_n(horizon, init as usize),
                     peak_mem_frac: st.cw.peak_mem_frac(),
                 }
             })
@@ -788,6 +935,13 @@ impl GlobalController {
                     PbKind::Free { .. } => {}
                     PbKind::Xfer { rid, src, req } => {
                         pending.push_back(PendingXfer { rid, src, req });
+                    }
+                    // unreachable in practice: a single-shard graph
+                    // handles its own (entry-stage) faults locally —
+                    // kept for uniformity with the windowed engine
+                    PbKind::Requeue { rid, req } => {
+                        shard.store.insert(rid, *req);
+                        shard.queue.schedule_at(now + ctx.recover_delay, Ev::Retry(rid));
                     }
                     PbKind::Trigger => {
                         let mut view = [&mut *shard];
@@ -931,6 +1085,13 @@ impl GlobalController {
                 PbKind::Xfer { rid, src, req } => {
                     pending.push_back(PendingXfer { rid, src, req });
                 }
+                // fault displacement crossing back to the entry
+                // router: recover_delay >= the sync window, so the
+                // Retry always lands in a future window
+                PbKind::Requeue { rid, req } => {
+                    guards[0].store.insert(rid, *req);
+                    guards[0].queue.schedule_at(time + ctx.recover_delay, Ev::Retry(rid));
+                }
                 PbKind::Trigger => {
                     Self::dispatch_transfers(&mut guards, ctx, fabric, pending, future_frees, time);
                 }
@@ -982,6 +1143,12 @@ impl GlobalController {
             for &d in dsts {
                 let (ds, dl) = ctx.stage_shard[d];
                 for (r, rep) in shards[ds].stages[dl].cw.replicas.iter().enumerate() {
+                    // health-aware fan-out: down/draining replicas
+                    // take no new KV (vacuously true without
+                    // dynamics — every replica is alive)
+                    if !rep.alive() {
+                        continue;
+                    }
                     let fr = rep.mem.free_blocks().saturating_sub(future_frees[ctx.free_off[d] + r]);
                     let better = match best {
                         None => true,
@@ -993,6 +1160,22 @@ impl GlobalController {
                 }
             }
             let Some((d, r, _)) = best else {
+                // a hold is only safe when a future Trigger can come:
+                // a pipeline whose every pool is dead with no recovery
+                // or scale-up in sight would stall the run — reject
+                // with backpressure instead
+                let dead_forever = ctx.dyn_on
+                    && dsts.iter().all(|&d| {
+                        let (ds, dl) = ctx.stage_shard[d];
+                        shards[ds].stages[dl].cw.replicas.iter().all(|rep| !rep.alive())
+                            && now >= ctx.revive_after[d]
+                            && !(ctx.cfg.autoscale.is_some() && ctx.governed[d])
+                    });
+                if dead_forever {
+                    shards[0].metrics.rejected_requests += 1;
+                    shards[0].metrics.fault_rejected += 1;
+                    continue;
+                }
                 // backpressure: no consumer memory in this pipeline
                 for &dd in dsts {
                     blocked[dd] = true;
@@ -1014,7 +1197,12 @@ impl GlobalController {
             let mut req = px.req;
             req.state = ReqState::Transferring;
             shards[ds].store.insert(px.rid, *req);
-            shards[ds].queue.schedule_at(delivery, Ev::KvDone { rid: px.rid, s: dl, r });
+            // stamp the destination incarnation: if the replica fails
+            // while the transfer is in flight, the KvDone goes stale
+            // (the fault requeues the request via the inbound list)
+            let gen = shards[ds].stages[dl].cw.replicas[r].gen;
+            shards[ds].stages[dl].cw.replicas[r].inbound.push(px.rid);
+            shards[ds].queue.schedule_at(delivery, Ev::KvDone { rid: px.rid, s: dl, r, gen });
         }
         *pending = held;
     }
@@ -1061,8 +1249,12 @@ impl Shard {
     fn handle(&mut self, ctx: &RunCtx, ev: Ev) {
         match ev {
             Ev::Arrival(rid) => self.on_arrival(ctx, rid),
-            Ev::IterEnd { s, r } => self.on_iter_end(ctx, s, r),
-            Ev::KvDone { rid, s, r } => self.on_kv_done(ctx, rid, s, r),
+            Ev::IterEnd { s, r, gen } => self.on_iter_end(ctx, s, r, gen),
+            Ev::KvDone { rid, s, r, gen } => self.on_kv_done(ctx, rid, s, r, gen),
+            Ev::Fault { s, r, up } => self.on_fault(ctx, s, r, up),
+            Ev::Retry(rid) => self.on_retry(ctx, rid),
+            Ev::ScaleTick { s } => self.on_scale_tick(ctx, s),
+            Ev::ScaleUp { s, r } => self.on_scale_up(ctx, s, r),
         }
     }
 
@@ -1093,6 +1285,7 @@ impl Shard {
         slots.clear();
         loads.clear();
         free.clear();
+        let mut fits_any = false;
         for &s in &self.entry {
             let gs = self.gstage[s];
             let blocks_needed = match self.stages[s].cw.kind {
@@ -1109,7 +1302,13 @@ impl Shard {
             if !fits_frontend || !fits_down {
                 continue;
             }
+            fits_any = true;
             for (r, rep) in self.stages[s].cw.replicas.iter().enumerate() {
+                // health-aware entry routing (vacuously true without
+                // dynamics — every replica is alive)
+                if !rep.alive() {
+                    continue;
+                }
                 slots.push((s, r, blocks_needed));
                 loads.push(rep.load());
                 free.push(rep.mem.free_blocks());
@@ -1127,8 +1326,14 @@ impl Shard {
         self.scratch_loads = loads;
         self.scratch_free = free;
         let Some((s, r, blocks_needed)) = choice else {
-            self.store.remove(rid);
-            self.metrics.rejected_requests += 1;
+            if ctx.dyn_on && fits_any {
+                // capacity exists but no healthy replica right now:
+                // the fault path decides between backoff and rejection
+                self.fault_retry_or_reject(ctx, rid);
+            } else {
+                self.store.remove(rid);
+                self.metrics.rejected_requests += 1;
+            }
             return;
         };
         let q = QueuedReq {
@@ -1141,7 +1346,12 @@ impl Shard {
         self.try_start_iteration(ctx, s, r);
     }
 
-    fn on_iter_end(&mut self, ctx: &RunCtx, s: usize, r: usize) {
+    fn on_iter_end(&mut self, ctx: &RunCtx, s: usize, r: usize, gen: u32) {
+        // stale incarnation: the replica failed after this iteration
+        // started — its batch was requeued at the fault, the work lost
+        if self.stages[s].cw.replicas[r].gen != gen {
+            return;
+        }
         let now = self.queue.now();
         let gs = self.gstage[s];
         let kind = self.stages[s].cw.kind;
@@ -1164,9 +1374,9 @@ impl Shard {
 
         for (i, &rid) in running.iter().enumerate() {
             let chunk = chunks.get(i).copied().unwrap_or(0);
-            let (input_len, output_len) = {
+            let (target, output_len) = {
                 let rq = self.store.get(rid);
-                (rq.spec.input_len, rq.spec.output_len)
+                (rq.prefill_target, rq.spec.output_len)
             };
             if chunk > 0 {
                 // prefill progress
@@ -1175,17 +1385,22 @@ impl Shard {
                 self.metrics.prefill_tokens += chunk as u64;
                 self.stages[s].cw.replicas[r].tokens_processed += chunk as u64;
                 let rq = self.store.get(rid);
-                if rq.prefill_progress >= input_len {
-                    // prefill iteration emits the first output token
+                if rq.prefill_progress >= target {
+                    // prefill iteration emits the first output token —
+                    // unless this is a fault-displaced re-prefill: the
+                    // restored context's tokens were already counted
                     let rq = self.store.get_mut(rid);
                     rq.ts.prefill_done = Some(now);
-                    rq.ts.first_token = Some(now);
                     rq.last_token = now;
-                    rq.decoded = 1;
-                    self.metrics.output_tokens += 1;
-                    let class = rq.spec.class;
-                    let ttft = (now - rq.ts.arrival).as_secs_f64();
-                    self.metrics.record_ttft(class, ttft, now.as_secs_f64());
+                    if rq.ts.first_token.is_none() {
+                        rq.ts.first_token = Some(now);
+                        rq.decoded = 1;
+                        self.metrics.output_tokens += 1;
+                        let rq = self.store.get(rid);
+                        let class = rq.spec.class;
+                        let ttft = (now - rq.ts.arrival).as_secs_f64();
+                        self.metrics.record_ttft(class, ttft, now.as_secs_f64());
+                    }
                     let rq = self.store.get_mut(rid);
                     if rq.decoded >= output_len {
                         finished.push(rid);
@@ -1226,7 +1441,8 @@ impl Shard {
                     (Some(ft), d) if d > 1 => (now - ft).as_secs_f64() / (d - 1) as f64,
                     _ => 0.0,
                 };
-                let (class, output_len) = (rq.spec.class, rq.spec.output_len);
+                let (class, output_len, affected) =
+                    (rq.spec.class, rq.spec.output_len, rq.affected);
                 self.metrics.record_completion(
                     class,
                     ttft,
@@ -1235,6 +1451,12 @@ impl Shard {
                     output_len,
                     now.as_secs_f64(),
                 );
+                if affected {
+                    // per-fault SLO damage: did the displaced request
+                    // still make its objectives?
+                    let ok = self.metrics.slo.met(ttft, tbt_mean, e2e);
+                    self.metrics.record_affected_completion(ok);
+                }
                 let freed = self.stages[s].cw.replicas[r].mem.free_request(rid);
                 // KV-destination frees feed the barrier free-ledger so
                 // dispatch ordering stays time-consistent
@@ -1339,7 +1561,17 @@ impl Shard {
         }
     }
 
-    fn on_kv_done(&mut self, ctx: &RunCtx, rid: u64, s: usize, r: usize) {
+    fn on_kv_done(&mut self, ctx: &RunCtx, rid: u64, s: usize, r: usize, gen: u32) {
+        {
+            let repl = &mut self.stages[s].cw.replicas[r];
+            // stale incarnation: the replica failed while this
+            // transfer was in flight — the KV is gone and the fault
+            // already requeued the request through the inbound list
+            if repl.gen != gen {
+                return;
+            }
+            repl.inbound.retain(|&x| x != rid);
+        }
         let rq = self.store.get_mut(rid);
         rq.state = ReqState::Decoding;
         let q = QueuedReq {
@@ -1352,6 +1584,299 @@ impl Shard {
         self.try_start_iteration(ctx, s, r);
     }
 
+    // -- cluster dynamics handlers ------------------------------------------
+
+    /// Reset a fault-displaced request for re-admission: its KV is
+    /// gone, so it must re-prefill the original input *plus* every
+    /// token it had already decoded (the recovered context). Arrival
+    /// timestamps survive, so the fault's latency damage lands in the
+    /// request's TTFT/E2E/SLO numbers.
+    fn reset_for_requeue(req: &mut Request) {
+        req.state = ReqState::Queued;
+        req.prefill_progress = 0;
+        req.prefill_target = req.spec.input_len + req.decoded;
+        req.affected = true;
+    }
+
+    fn on_fault(&mut self, ctx: &RunCtx, s: usize, r: usize, up: bool) {
+        if up {
+            self.on_fault_up(ctx, s, r);
+        } else {
+            self.on_fault_down(ctx, s, r);
+        }
+    }
+
+    /// A replica dies: bump its incarnation (in-flight `IterEnd` /
+    /// `KvDone` events go stale), drop its KV, and requeue every
+    /// request it held — running batch, waiting queue, and inbound
+    /// transfers alike — back through the entry router.
+    fn on_fault_down(&mut self, ctx: &RunCtx, s: usize, r: usize) {
+        let now = self.queue.now();
+        let gs = self.gstage[s];
+        let mut rids: Vec<u64> = Vec::new();
+        let mut freed_total = 0u64;
+        {
+            let repl = &mut self.stages[s].cw.replicas[r];
+            if !repl.up {
+                // already down (e.g. an overlapping explicit schedule)
+                return;
+            }
+            repl.up = false;
+            repl.draining = false;
+            repl.provisioning = false;
+            repl.busy = false;
+            repl.gen = repl.gen.wrapping_add(1);
+            repl.down_since = Some(now);
+            rids.extend(repl.running.drain(..));
+            rids.extend(repl.waiting.drain(..).map(|q| q.id));
+            rids.extend(repl.inbound.drain(..));
+            repl.iter_chunks.clear();
+            for &rid in &rids {
+                // free_request returns 0 for ids with no allocation
+                // (waiting requests reserve at iteration start)
+                freed_total += repl.mem.free_request(rid);
+            }
+        }
+        self.metrics.record_fault();
+        if ctx.is_kv_dst[gs] && freed_total > 0 {
+            self.commits.push(PbRec {
+                time: now,
+                kind: PbKind::Free { gstage: gs, replica: r, blocks: freed_total },
+            });
+        }
+        // entry stages live on shard 0, so a local requeue can schedule
+        // the Retry directly; a KV-destination shard must route the
+        // request back through the barrier (cross-shard commit), which
+        // lands it no earlier than one sync window later
+        let local = !self.entry.is_empty();
+        let backoff = SimTime::from_secs_f64(dynamics::RECOVER_BACKOFF_S);
+        for rid in rids {
+            self.metrics.fault_requeues += 1;
+            if local {
+                Self::reset_for_requeue(self.store.get_mut(rid));
+                self.queue.schedule_at(now + backoff, Ev::Retry(rid));
+            } else {
+                let mut req = self.store.remove(rid);
+                Self::reset_for_requeue(&mut req);
+                self.commits.push(PbRec {
+                    time: now,
+                    kind: PbKind::Requeue { rid, req: Box::new(req) },
+                });
+            }
+        }
+    }
+
+    /// A failed replica comes back: empty (its KV died with it), so it
+    /// just reports for duty and the transfer dispatcher is re-run.
+    fn on_fault_up(&mut self, ctx: &RunCtx, s: usize, r: usize) {
+        let now = self.queue.now();
+        let gs = self.gstage[s];
+        let repl = &mut self.stages[s].cw.replicas[r];
+        let Some(since) = repl.down_since else {
+            return;
+        };
+        repl.up = true;
+        repl.down_since = None;
+        self.metrics.record_fault_recovery((now - since).as_secs_f64());
+        if ctx.is_kv_dst[gs] {
+            // held transfers may now have a destination again
+            self.commits.push(PbRec { time: now, kind: PbKind::Trigger });
+        }
+    }
+
+    /// A fault-displaced request re-enters the entry router (shard 0
+    /// only). Mirrors [`Shard::on_arrival`] except the admission size
+    /// is the (possibly larger) re-prefill target and the arrival is
+    /// not re-counted.
+    fn on_retry(&mut self, ctx: &RunCtx, rid: u64) {
+        let (target, output_len) = {
+            let rq = self.store.get(rid);
+            (rq.prefill_target, rq.spec.output_len)
+        };
+        let full_blocks = blocks_for_tokens(target + output_len);
+        let mut slots = std::mem::take(&mut self.scratch_slots);
+        let mut loads = std::mem::take(&mut self.scratch_loads);
+        let mut free = std::mem::take(&mut self.scratch_free);
+        slots.clear();
+        loads.clear();
+        free.clear();
+        for &s in &self.entry {
+            let gs = self.gstage[s];
+            let blocks_needed = match self.stages[s].cw.kind {
+                StageKind::Unified => full_blocks,
+                _ => blocks_for_tokens(target),
+            };
+            let fits_frontend = blocks_needed <= ctx.stage_max_blocks[gs];
+            let fits_down = output_len <= 1 || Self::fits_downstream(ctx, gs, full_blocks);
+            if !fits_frontend || !fits_down {
+                continue;
+            }
+            for (r, rep) in self.stages[s].cw.replicas.iter().enumerate() {
+                if !rep.alive() {
+                    continue;
+                }
+                slots.push((s, r, blocks_needed));
+                loads.push(rep.load());
+                free.push(rep.mem.free_blocks());
+            }
+        }
+        let choice = if slots.is_empty() {
+            None
+        } else {
+            let mut rr = self.entry_rr;
+            let i = scheduler::route(ctx.cfg.policy.route, &loads, &free, &mut rr);
+            self.entry_rr = rr;
+            Some(slots[i])
+        };
+        self.scratch_slots = slots;
+        self.scratch_loads = loads;
+        self.scratch_free = free;
+        let Some((s, r, blocks_needed)) = choice else {
+            self.fault_retry_or_reject(ctx, rid);
+            return;
+        };
+        let q = QueuedReq {
+            id: rid,
+            tokens_needed: target,
+            blocks_needed,
+            arrival: self.queue.now(),
+        };
+        self.stages[s].cw.replicas[r].waiting.push_back(q);
+        self.try_start_iteration(ctx, s, r);
+    }
+
+    /// No healthy entry replica right now: back off and retry if
+    /// recovery (a planned fault-up or an autoscale grow) is in sight,
+    /// else reject with backpressure. Bounded by
+    /// [`dynamics::MAX_RETRIES`] so a dead-forever pool can't loop.
+    fn fault_retry_or_reject(&mut self, ctx: &RunCtx, rid: u64) {
+        let now = self.queue.now();
+        let mut revive: Option<SimTime> = None;
+        let mut scalable = false;
+        for &s in &self.entry {
+            let gs = self.gstage[s];
+            if ctx.revive_after[gs] > now {
+                let ra = ctx.revive_after[gs];
+                revive = Some(revive.map_or(ra, |cur| cur.min(ra)));
+            }
+            if ctx.cfg.autoscale.is_some() && ctx.governed[gs] {
+                scalable = true;
+            }
+        }
+        if self.store.get(rid).retries < dynamics::MAX_RETRIES && (revive.is_some() || scalable)
+        {
+            self.store.get_mut(rid).retries += 1;
+            self.metrics.fault_retries += 1;
+            // adaptive backoff: sleep until recovery is actually
+            // possible instead of busy-polling a dead pool
+            let mut at = now + SimTime::from_secs_f64(dynamics::RETRY_BACKOFF_S);
+            if let Some(rv) = revive {
+                at = at.max(rv);
+            } else if let Some(a) = ctx.cfg.autoscale.as_ref() {
+                at = at.max(now + SimTime::from_secs_f64(a.interval_s + a.provision_s));
+            }
+            self.queue.schedule_at(at, Ev::Retry(rid));
+        } else {
+            self.store.remove(rid);
+            self.metrics.rejected_requests += 1;
+            self.metrics.fault_rejected += 1;
+        }
+    }
+
+    /// Autoscaler control-loop tick for a governed stage: read the
+    /// queue-depth signal, grow (with provisioning delay + warmup
+    /// stall) or shrink (drain, never kill). Ticks are pre-scheduled
+    /// from the [`dynamics::DynPlan`], so their times are identical
+    /// for any `--sim-threads`.
+    fn on_scale_tick(&mut self, ctx: &RunCtx, s: usize) {
+        let Some(a) = ctx.cfg.autoscale.as_ref() else { return };
+        let now = self.queue.now();
+        self.metrics.scale_ticks += 1;
+        // retire drains that ran dry: the replica served out its work
+        // and can now leave the pool
+        for rep in self.stages[s].cw.replicas.iter_mut() {
+            if rep.draining && !rep.busy && !rep.has_work() && rep.inbound.is_empty() {
+                rep.draining = false;
+                rep.up = false;
+                self.metrics.scale_down_events += 1;
+            }
+        }
+        let (mut waiting, mut alive, mut provisioning) = (0usize, 0usize, 0usize);
+        for rep in &self.stages[s].cw.replicas {
+            if rep.provisioning {
+                provisioning += 1;
+            }
+            if rep.alive() {
+                alive += 1;
+                waiting += rep.waiting.len();
+            }
+        }
+        let q = waiting as f64 / alive.max(1) as f64;
+        let signal = match a.policy {
+            dynamics::ScalePolicy::Reactive => q,
+            // first-order trend extrapolation: act on where the queue
+            // will be next tick, not where it is
+            dynamics::ScalePolicy::Predictive => q + (q - self.stages[s].q_prev),
+        };
+        self.stages[s].q_prev = q;
+        // emergency replacement: a pool at zero live capacity reads a
+        // zero queue signal (nothing can enqueue on it), so it would
+        // never grow and held transfers would stall the run forever
+        let dead_pool = alive == 0 && provisioning == 0;
+        if (signal > a.up_queue || dead_pool) && alive + provisioning < a.max_replicas as usize {
+            // grow into the first free pre-provisioned slot (never one
+            // that is faulted, draining, or already provisioning)
+            let slot = self.stages[s].cw.replicas.iter().position(|rep| {
+                !rep.up && !rep.provisioning && rep.down_since.is_none() && !rep.draining
+            });
+            if let Some(r) = slot {
+                self.stages[s].cw.replicas[r].provisioning = true;
+                self.queue
+                    .schedule_at(now + SimTime::from_secs_f64(a.provision_s), Ev::ScaleUp { s, r });
+            }
+        } else if signal < a.down_queue && alive > a.min_replicas as usize {
+            // shrink the least-loaded live replica by draining it; it
+            // leaves once its queue runs dry (checked next tick)
+            let mut best: Option<(usize, usize)> = None;
+            for (r, rep) in self.stages[s].cw.replicas.iter().enumerate() {
+                if !rep.alive() {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, l)) => rep.load() < l,
+                };
+                if better {
+                    best = Some((r, rep.load()));
+                }
+            }
+            if let Some((r, _)) = best {
+                self.stages[s].cw.replicas[r].draining = true;
+            }
+        }
+    }
+
+    /// Provisioning finished: the new replica joins the pool, paying
+    /// its warmup as a pending stall on its first iteration.
+    fn on_scale_up(&mut self, ctx: &RunCtx, s: usize, r: usize) {
+        let Some(a) = ctx.cfg.autoscale.as_ref() else { return };
+        let gs = self.gstage[s];
+        let repl = &mut self.stages[s].cw.replicas[r];
+        if !repl.provisioning {
+            // a fault hit the slot mid-provision; the grow is lost
+            return;
+        }
+        repl.provisioning = false;
+        repl.up = true;
+        repl.draining = false;
+        self.pending_stall[s][r] += a.warmup_s;
+        self.metrics.scale_up_events += 1;
+        if ctx.is_kv_dst[gs] {
+            // held transfers may now have a destination
+            self.commits.push(PbRec { time: self.queue.now(), kind: PbKind::Trigger });
+        }
+    }
+
     /// Form and launch the next iteration on a replica if it is idle and
     /// has work.
     fn try_start_iteration(&mut self, ctx: &RunCtx, s: usize, r: usize) {
@@ -1361,7 +1886,7 @@ impl Shard {
         let now = self.queue.now();
         let admitted = {
             let repl = &mut self.stages[s].cw.replicas[r];
-            if repl.busy || !repl.has_work() {
+            if !repl.up || repl.busy || !repl.has_work() {
                 return;
             }
             // admissions (reserving memory)
@@ -1397,13 +1922,15 @@ impl Shard {
         let mut token_budget = budget.max_prefill_tokens;
         for &rid in &self.stages[s].cw.replicas[r].running {
             let rq = self.store.get(rid);
-            if rq.prefill_progress < rq.spec.input_len {
-                let remaining = rq.spec.input_len - rq.prefill_progress;
+            // prefill_target == input_len except for fault-displaced
+            // requests re-computing their lost context
+            if rq.prefill_progress < rq.prefill_target {
+                let remaining = rq.prefill_target - rq.prefill_progress;
                 let chunk = remaining.min(token_budget);
                 if chunk > 0 {
                     shape.prefill.push((chunk, rq.prefill_progress));
                     token_budget -= chunk;
-                    if rq.prefill_progress + chunk >= rq.spec.input_len {
+                    if rq.prefill_progress + chunk >= rq.prefill_target {
                         shape.lm_head_rows += 1; // emits first token
                     }
                 }
@@ -1438,8 +1965,9 @@ impl Shard {
         let repl = &mut self.stages[s].cw.replicas[r];
         repl.busy = true;
         repl.iter_chunks = chunks;
+        let gen = repl.gen;
         self.iter_started[s][r] = now;
-        self.queue.schedule_in(SimTime::from_secs_f64(dt + stall), Ev::IterEnd { s, r });
+        self.queue.schedule_in(SimTime::from_secs_f64(dt + stall), Ev::IterEnd { s, r, gen });
     }
 
     /// AF decode step: partition the batch into micro-batches and run

@@ -85,6 +85,21 @@ OPTIONS (simulate / sweep / sweep-pd / baseline):
                                    (alias; conflicts with --overhead)
   --sim-threads <N>                engine threads for one run (default 1;
                                    report is bit-identical for any N)
+  --faults <SPEC>                  fault-injection schedule, sweepable:
+                                   mttf:MTTF[:mttr:MTTR] (seeded exponential
+                                   per-replica failures, seconds),
+                                   list:down@T:S[.R];up@T:S[.R];... or
+                                   file:<sched.json> (explicit events; no .R
+                                   targets the whole pool)
+  --autoscale <POLICY:MIN:MAX>     autoscale decode-capable pools between MIN
+                                   and MAX replicas; POLICY is reactive or
+                                   predictive (queue-trend extrapolation)
+  --scale-interval <S>             autoscaler control-loop period (default 10)
+  --scale-delay <S>                replica provisioning delay (default 30)
+  --scale-warmup <S>               new-replica first-iteration warmup stall
+                                   (default 2)
+  --scale-up <Q> --scale-down <Q>  queue-depth-per-replica thresholds
+                                   (defaults 4 / 0.5)
   --seed <S>                       RNG seed (default 1)
   --json                           emit the report as JSON
 

@@ -270,6 +270,37 @@ pub struct MetricsCollector {
     /// Sum over migrations of the predicted rank imbalance *after*
     /// re-placement.
     pub migration_post_imb_sum: f64,
+    /// Replica failures applied (fault injection; 0 without
+    /// `--faults`).
+    pub faults: u64,
+    /// Replica recoveries applied.
+    pub fault_recoveries: u64,
+    /// Requests displaced by a failure and requeued through the
+    /// re-prefill / re-route recovery path.
+    pub fault_requeues: u64,
+    /// Backoff retries by displaced requests that found no healthy
+    /// replica on a routing attempt.
+    pub fault_retries: u64,
+    /// Requests rejected with backpressure because every candidate
+    /// pool was down with no recovery or scale-up in sight.
+    pub fault_rejected: u64,
+    /// Replica-seconds of fault downtime — the availability meter's
+    /// numerator (outages still open at the end of the run are charged
+    /// up to the horizon).
+    pub fault_downtime_s: f64,
+    /// Time-to-recovery stream, seconds per repaired outage.
+    pub ttr: Digest,
+    /// Fault-displaced requests that eventually completed.
+    pub fault_affected_completed: u64,
+    /// Fault-displaced completions that missed a set SLO — the
+    /// per-fault SLO damage meter.
+    pub fault_affected_slo_miss: u64,
+    /// Autoscaler control-loop evaluations.
+    pub scale_ticks: u64,
+    /// Replicas brought up by the autoscaler.
+    pub scale_up_events: u64,
+    /// Replicas drained and retired by the autoscaler.
+    pub scale_down_events: u64,
 }
 
 impl MetricsCollector {
@@ -427,6 +458,35 @@ impl MetricsCollector {
         }
     }
 
+    /// Whether any cluster dynamics engaged this run — the reporting
+    /// gate: zero-fault / zero-autoscale runs add no fields and stay
+    /// byte-identical to a build without the dynamics layer.
+    pub fn dynamics_active(&self) -> bool {
+        self.faults > 0 || self.scale_ticks > 0
+    }
+
+    /// Account one applied replica failure.
+    pub fn record_fault(&mut self) {
+        self.faults += 1;
+    }
+
+    /// Account one applied replica recovery after `downtime_s` out.
+    pub fn record_fault_recovery(&mut self, downtime_s: f64) {
+        self.fault_recoveries += 1;
+        self.fault_downtime_s += downtime_s;
+        self.ttr.record(downtime_s);
+    }
+
+    /// Account one fault-displaced completion (and whether it missed a
+    /// set SLO) — called alongside `record_completion`, never instead
+    /// of it.
+    pub fn record_affected_completion(&mut self, slo_ok: bool) {
+        self.fault_affected_completed += 1;
+        if self.slo.any() && !slo_ok {
+            self.fault_affected_slo_miss += 1;
+        }
+    }
+
     /// Fold a shard-local collector into this one. Digests merge
     /// through [`Digest::merge`], the time series through
     /// [`TimeSeries::merge`], raw sample vectors concatenate, and all
@@ -476,6 +536,18 @@ impl MetricsCollector {
         self.migration_stall_s += other.migration_stall_s;
         self.migration_pre_imb_sum += other.migration_pre_imb_sum;
         self.migration_post_imb_sum += other.migration_post_imb_sum;
+        self.faults += other.faults;
+        self.fault_recoveries += other.fault_recoveries;
+        self.fault_requeues += other.fault_requeues;
+        self.fault_retries += other.fault_retries;
+        self.fault_rejected += other.fault_rejected;
+        self.fault_downtime_s += other.fault_downtime_s;
+        self.ttr.merge(&other.ttr);
+        self.fault_affected_completed += other.fault_affected_completed;
+        self.fault_affected_slo_miss += other.fault_affected_slo_miss;
+        self.scale_ticks += other.scale_ticks;
+        self.scale_up_events += other.scale_up_events;
+        self.scale_down_events += other.scale_down_events;
     }
 }
 
@@ -596,6 +668,17 @@ impl SimReport {
             return 0.0;
         }
         self.metrics.slo_ok as f64 / self.metrics.completed_requests as f64
+    }
+
+    /// Fleet availability: 1 − fault downtime over total
+    /// replica-seconds (configured replica counts × simulated span).
+    /// 1.0 for an immortal fleet.
+    pub fn availability(&self) -> f64 {
+        let slots: u64 = self.stages.iter().map(|s| s.replicas as u64).sum();
+        if self.sim_duration <= 0.0 || slots == 0 {
+            return 1.0;
+        }
+        (1.0 - self.metrics.fault_downtime_s / (self.sim_duration * slots as f64)).max(0.0)
     }
 
     /// Simulation speed: simulated seconds per host second.
@@ -730,6 +813,32 @@ impl SimReport {
                 m.migration_post_imbalance_mean(),
             ));
         }
+        if m.dynamics_active() {
+            s.push_str(&format!(
+                "\nfaults: {} ({} recovered, TTR p50 {:.1} s) | downtime {:.1} replica-s, \
+                 availability {:.2}%",
+                m.faults,
+                m.fault_recoveries,
+                m.ttr.quantile(50.0),
+                m.fault_downtime_s,
+                self.availability() * 100.0,
+            ));
+            s.push_str(&format!(
+                "\nfault damage: {} requeued, {} retries, {} rejected | {} affected \
+                 completed ({} SLO misses)",
+                m.fault_requeues,
+                m.fault_retries,
+                m.fault_rejected,
+                m.fault_affected_completed,
+                m.fault_affected_slo_miss,
+            ));
+            if m.scale_ticks > 0 {
+                s.push_str(&format!(
+                    "\nautoscale: {} ticks, {} up / {} down",
+                    m.scale_ticks, m.scale_up_events, m.scale_down_events,
+                ));
+            }
+        }
         for st in &self.stages {
             s.push_str(&format!(
                 "\nstage {} [{}] {}x{} on {}: {} iters, {} tokens, busy {:.1}%, peak mem {:.1}%",
@@ -819,6 +928,30 @@ impl SimReport {
         if m.slo.any() {
             fields.push(("goodput_rps", Json::Num(self.goodput())));
             fields.push(("slo_attainment", Json::Num(self.slo_attainment())));
+        }
+        if m.dynamics_active() {
+            // gated like the SLO block so zero-dynamics runs
+            // bit-reproduce pre-dynamics reports
+            fields.push(("faults", Json::Num(m.faults as f64)));
+            fields.push(("fault_recoveries", Json::Num(m.fault_recoveries as f64)));
+            fields.push(("fault_requeues", Json::Num(m.fault_requeues as f64)));
+            fields.push(("fault_retries", Json::Num(m.fault_retries as f64)));
+            fields.push(("fault_rejected", Json::Num(m.fault_rejected as f64)));
+            fields.push(("fault_downtime_s", Json::Num(m.fault_downtime_s)));
+            fields.push(("ttr_p50_s", Json::Num(m.ttr.quantile(50.0))));
+            fields.push(("ttr_p99_s", Json::Num(m.ttr.quantile(99.0))));
+            fields.push(("availability", Json::Num(self.availability())));
+            fields.push((
+                "fault_affected_completed",
+                Json::Num(m.fault_affected_completed as f64),
+            ));
+            fields.push((
+                "fault_affected_slo_miss",
+                Json::Num(m.fault_affected_slo_miss as f64),
+            ));
+            fields.push(("scale_ticks", Json::Num(m.scale_ticks as f64)));
+            fields.push(("scale_up_events", Json::Num(m.scale_up_events as f64)));
+            fields.push(("scale_down_events", Json::Num(m.scale_down_events as f64)));
         }
         if m.per_class.len() > 1 {
             fields.push((

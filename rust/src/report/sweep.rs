@@ -27,6 +27,8 @@ pub const SWEEP_METRIC_COLS: &[&str] = &[
     "dropped_tokens",
     "ep_imbalance_mean",
     "migrations",
+    "availability",
+    "scale_events",
 ];
 
 fn metric_cells(r: &PointResult) -> Vec<String> {
@@ -50,6 +52,10 @@ fn metric_cells(r: &PointResult) -> Vec<String> {
                 m.dropped_tokens.to_string(),
                 format!("{:.3}", m.ep_imbalance_mean()),
                 m.migrations.to_string(),
+                // 1.0000 for an immortal fleet — the column only moves
+                // when a --faults axis is in play
+                format!("{:.4}", rep.availability()),
+                (m.scale_up_events + m.scale_down_events).to_string(),
             ]
         }
         Err(e) => {

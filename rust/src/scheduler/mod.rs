@@ -185,6 +185,47 @@ pub fn route(
     }
 }
 
+/// Health-masked routing: pick among the replicas with `alive[i]` set.
+/// When every replica is alive this delegates to [`route`] bit for bit
+/// (identical cursor walk) — the inertness guarantee for runs without
+/// cluster dynamics. Returns `None` when no replica is alive.
+pub fn route_masked(
+    policy: RoutePolicy,
+    loads: &[usize],
+    free_blocks: &[u64],
+    alive: &[bool],
+    rr_state: &mut usize,
+) -> Option<usize> {
+    if alive.iter().all(|&a| a) {
+        return Some(route(policy, loads, free_blocks, rr_state));
+    }
+    let n_alive = alive.iter().filter(|&&a| a).count();
+    if n_alive == 0 {
+        return None;
+    }
+    match policy {
+        RoutePolicy::RoundRobin => {
+            // walk the cursor over *alive* slots only, so a dead
+            // replica doesn't swallow every n-th request
+            let k = *rr_state % n_alive;
+            *rr_state = (*rr_state + 1) % n_alive;
+            Some(alive.iter().enumerate().filter(|&(_, &a)| a).nth(k).unwrap().0)
+        }
+        RoutePolicy::LeastLoaded => loads
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| alive[i])
+            .min_by_key(|&(_, &l)| l)
+            .map(|(i, _)| i),
+        RoutePolicy::MostFreeMemory => free_blocks
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| alive[i])
+            .max_by_key(|&(_, &b)| b)
+            .map(|(i, _)| i),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,5 +330,46 @@ mod tests {
         assert_eq!(route(RoutePolicy::RoundRobin, &[1, 1, 1], &[0, 0, 0], &mut rr), 1);
         assert_eq!(route(RoutePolicy::LeastLoaded, &[5, 2, 9], &[0, 0, 0], &mut rr), 1);
         assert_eq!(route(RoutePolicy::MostFreeMemory, &[0, 0, 0], &[3, 9, 1], &mut rr), 1);
+    }
+
+    #[test]
+    fn masked_routing_skips_dead_replicas() {
+        // all-alive delegates to route(): identical picks and cursor
+        let (mut rr_a, mut rr_b) = (0usize, 0usize);
+        for _ in 0..5 {
+            let m = route_masked(
+                RoutePolicy::RoundRobin,
+                &[1, 1, 1],
+                &[0, 0, 0],
+                &[true, true, true],
+                &mut rr_a,
+            );
+            let r = route(RoutePolicy::RoundRobin, &[1, 1, 1], &[0, 0, 0], &mut rr_b);
+            assert_eq!(m, Some(r));
+            assert_eq!(rr_a, rr_b);
+        }
+        // a dead middle replica is skipped, not handed every 2nd pick
+        let mut rr = 0;
+        let alive = [true, false, true];
+        let picks: Vec<_> = (0..4)
+            .map(|_| route_masked(RoutePolicy::RoundRobin, &[1, 1, 1], &[0, 0, 0], &alive, &mut rr))
+            .collect();
+        assert_eq!(picks, vec![Some(0), Some(2), Some(0), Some(2)]);
+        // least-loaded / most-free respect the mask
+        let mut rr = 0;
+        assert_eq!(
+            route_masked(RoutePolicy::LeastLoaded, &[5, 2, 9], &[0, 0, 0], &alive, &mut rr),
+            Some(0),
+            "replica 1 is the least loaded but it is down"
+        );
+        assert_eq!(
+            route_masked(RoutePolicy::MostFreeMemory, &[0, 0, 0], &[3, 9, 1], &alive, &mut rr),
+            Some(0)
+        );
+        // nobody home
+        assert_eq!(
+            route_masked(RoutePolicy::RoundRobin, &[1], &[0], &[false], &mut rr),
+            None
+        );
     }
 }

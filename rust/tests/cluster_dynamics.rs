@@ -1,0 +1,196 @@
+//! Cluster-dynamics integration: fault injection and autoscaling must
+//! compose with the sharded engine without breaking its determinism
+//! contract. A faulted and/or autoscaled run renders **byte-identical**
+//! deterministic reports for any `--sim-threads`; the same seed yields
+//! the same fault schedule and therefore the same report; and a config
+//! with neither axis stays inert (no dynamics metrics appear, nothing
+//! about the report changes).
+
+use frontier::config::cli::{build_config, FlagMap};
+use frontier::metrics::SimReport;
+
+/// Run the config with an explicit thread count and render the
+/// deterministic JSON projection (host-time fields excluded).
+fn run_json(mut flags: FlagMap, threads: u32) -> String {
+    flags.set("sim-threads", threads.to_string());
+    let cfg = build_config(&flags).unwrap();
+    frontier::run_experiment(&cfg).unwrap().to_json_deterministic().to_string_pretty()
+}
+
+fn run_report(flags: &FlagMap) -> SimReport {
+    frontier::run_experiment(&build_config(flags).unwrap()).unwrap()
+}
+
+/// Serial vs 2 / 4 / 16 threads: every rendering must match the serial
+/// bytes (16 oversubscribes every config under test).
+fn assert_thread_invariant(flags: FlagMap) {
+    let serial = run_json(flags.clone(), 1);
+    for threads in [2u32, 4, 16] {
+        assert_eq!(serial, run_json(flags.clone(), threads), "diverged at sim-threads={threads}");
+    }
+}
+
+fn pd_base(requests: u32) -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("mode", "pd");
+    f.set("prefill", "2");
+    f.set("decode", "2");
+    f.set("requests", requests.to_string());
+    f.set("input", "64");
+    f.set("output", "16");
+    f.set("rate", "40");
+    f
+}
+
+#[test]
+fn mttf_faults_are_thread_invariant() {
+    // stochastic schedule dense enough to hit both the entry pool
+    // (local requeue) and the decode pool (cross-shard requeue +
+    // in-flight transfer displacement)
+    let mut f = pd_base(48);
+    f.set("faults", "mttf:4:mttr:2");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn explicit_fault_list_is_thread_invariant() {
+    // whole decode pool dies mid-run and recovers: every in-flight
+    // request on stage 1 is displaced at once
+    let mut f = pd_base(48);
+    f.set("faults", "list:down@0.4:1;up@2:1");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn autoscaled_run_is_thread_invariant() {
+    let mut f = pd_base(64);
+    f.set("autoscale", "reactive:1:4");
+    f.set("scale-interval", "0.5");
+    f.set("scale-delay", "1");
+    f.set("scale-up", "1.5");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn faults_plus_autoscale_are_thread_invariant() {
+    // the full dynamics stack at once: displacement, retry/backoff,
+    // dead-pool replacement, drain-based scale-down
+    let mut f = pd_base(48);
+    f.set("faults", "mttf:5:mttr:2");
+    f.set("autoscale", "predictive:1:4");
+    f.set("scale-interval", "0.5");
+    f.set("scale-delay", "1");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn day_workload_with_faults_is_thread_invariant() {
+    // open-loop traffic day (idle gaps, class mix) + decode outage
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("mode", "pd");
+    f.set("prefill", "2");
+    f.set("decode", "2");
+    f.set("requests", "120");
+    f.set("workload", "day");
+    f.set("faults", "list:down@5:1.0;up@25:1.0");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn same_seed_same_schedule_same_report() {
+    let mut f = pd_base(32);
+    f.set("faults", "mttf:4:mttr:2");
+    f.set("seed", "7");
+    assert_eq!(run_json(f.clone(), 1), run_json(f.clone(), 1));
+    // a different seed draws a different fault schedule
+    let mut g = f.clone();
+    g.set("seed", "8");
+    assert_ne!(run_json(f, 1), run_json(g, 1));
+}
+
+#[test]
+fn fault_metrics_are_reported_and_conserve_requests() {
+    let mut f = pd_base(48);
+    f.set("faults", "list:down@0.4:1;up@2:1;down@3:0.0;up@4:0.0");
+    let rep = run_report(&f);
+    let m = &rep.metrics;
+    // the outage actually happened and was recovered
+    assert_eq!(m.faults, 3, "pool event expands to 2 decode replicas + 1 prefill");
+    assert_eq!(m.fault_recoveries, 3);
+    assert!(m.fault_downtime_s > 0.0);
+    assert!(m.ttr.count() == 3 && m.ttr.mean() > 0.0, "time-to-recovery metered");
+    assert!(m.fault_requeues > 0, "the dead pool held work when it died");
+    // conservation across failures: nothing vanishes, nothing doubles
+    assert_eq!(m.completed_requests + m.rejected_requests, 48);
+    // availability strictly dips below an immortal fleet's 1.0
+    assert!(rep.availability() < 1.0 && rep.availability() > 0.0);
+    // displaced-but-completed requests are tracked for SLO damage
+    assert!(m.fault_affected_completed > 0);
+    assert!(m.fault_affected_completed >= m.fault_affected_slo_miss);
+}
+
+#[test]
+fn autoscaler_reacts_and_reports_events() {
+    // kill the whole decode pool early: the autoscaler's next tick
+    // sees zero live capacity and must provision a replacement
+    // (emergency grow), which then serves the held KV transfers
+    let mut f = pd_base(96);
+    f.set("rate", "400");
+    f.set("faults", "list:down@0.3:1;up@10:1");
+    f.set("autoscale", "reactive:1:4");
+    f.set("scale-interval", "0.2");
+    f.set("scale-delay", "0.5");
+    let rep = run_report(&f);
+    assert!(rep.metrics.scale_ticks > 0);
+    assert!(rep.metrics.scale_up_events > 0, "a dead pool must trigger a grow");
+    assert_eq!(rep.metrics.completed_requests + rep.metrics.rejected_requests, 96);
+    // the report still presents the *deployed* shape, not the
+    // pre-provisioned headroom slots
+    assert_eq!(rep.stages[1].replicas, 2);
+}
+
+#[test]
+fn inert_config_reports_no_dynamics() {
+    let f = pd_base(32);
+    let rep = run_report(&f);
+    assert_eq!(rep.metrics.faults, 0);
+    assert_eq!(rep.metrics.scale_ticks, 0);
+    assert_eq!(rep.availability(), 1.0);
+    // the JSON projection stays free of dynamics blocks, so pre-PR
+    // goldens (and diffs against them) are unchanged
+    let json = rep.to_json_deterministic().to_string_pretty();
+    assert!(!json.contains("\"faults\""), "{json}");
+    assert!(!json.contains("\"autoscale\""), "{json}");
+    // and a faulted run does grow the new block
+    let mut g = pd_base(32);
+    g.set("faults", "list:down@0.4:1.0;up@2:1.0");
+    let json = run_report(&g).to_json_deterministic().to_string_pretty();
+    assert!(json.contains("\"faults\""), "{json}");
+    assert!(json.contains("\"availability\""), "{json}");
+}
+
+#[test]
+fn malformed_dynamics_flags_are_rejected_at_config_time() {
+    // bad grammar
+    let mut f = pd_base(8);
+    f.set("faults", "sometimes");
+    assert!(build_config(&f).is_err());
+    // schedule that targets a stage the graph does not have
+    let mut f = pd_base(8);
+    f.set("faults", "list:down@1:9");
+    assert!(build_config(&f).is_err());
+    // recovery preceding its failure
+    let mut f = pd_base(8);
+    f.set("faults", "list:up@1:1.0");
+    assert!(build_config(&f).is_err());
+    // autoscale band excluding the initial pool size
+    let mut f = pd_base(8);
+    f.set("autoscale", "reactive:3:4");
+    assert!(build_config(&f).is_err());
+    // orphan tuning subflag
+    let mut f = pd_base(8);
+    f.set("scale-interval", "5");
+    assert!(build_config(&f).is_err());
+}

@@ -526,3 +526,134 @@ fn prop_memory_pressure_never_loses_requests() {
         }
     });
 }
+
+#[test]
+fn prop_fault_plan_recoveries_follow_failures() {
+    // the materialized schedule is the determinism anchor for the
+    // dynamics layer: per replica it must strictly alternate
+    // failure -> recovery (never a recovery first), stay time-sorted,
+    // and end every replica healthy (trailing recovery)
+    use frontier::cluster::dynamics::{build_plan, FaultSpec};
+    use frontier::core::SimTime;
+    run_prop("fault plan ordering", 100, |g| {
+        let spec = FaultSpec::Mttf {
+            mttf_s: g.f64(1.0, 100.0),
+            mttr_s: g.f64(0.5, 30.0),
+        };
+        let shape: Vec<u32> = (0..g.u32(1, 3)).map(|_| g.u32(1, 4)).collect();
+        let plan = build_plan(Some(&spec), None, &shape, g.seed, g.f64(10.0, 500.0));
+        assert!(plan.faults.windows(2).all(|w| w[0].at <= w[1].at), "schedule sorted");
+        for (s, &n) in shape.iter().enumerate() {
+            for r in 0..n as usize {
+                let evs: Vec<_> = plan
+                    .faults
+                    .iter()
+                    .filter(|f| f.stage == s && f.replica == r)
+                    .collect();
+                let mut t = SimTime::ZERO;
+                for (i, f) in evs.iter().enumerate() {
+                    assert_eq!(f.up, i % 2 == 1, "recovery must follow its failure");
+                    assert!(f.at > t, "per-replica times strictly increase");
+                    t = f.at;
+                }
+                assert_eq!(evs.len() % 2, 0, "no replica ends the run down");
+            }
+            let last_up = plan
+                .faults
+                .iter()
+                .filter(|f| f.stage == s && f.up)
+                .map(|f| f.at)
+                .max()
+                .unwrap_or(SimTime::ZERO);
+            assert_eq!(plan.revive_after[s], last_up, "revive_after covers the last recovery");
+        }
+        // same inputs, same plan; different seed, different plan
+        let again = build_plan(Some(&spec), None, &shape, g.seed, 500.0);
+        let other = build_plan(Some(&spec), None, &shape, g.seed ^ 1, 500.0);
+        if !plan.faults.is_empty() {
+            assert_ne!(again.faults, other.faults, "seed must matter");
+        }
+    });
+}
+
+#[test]
+fn prop_faulted_simulation_conserves_requests() {
+    // failures displace and may reject requests, but nothing vanishes
+    // and nothing completes twice — for random deployments, workloads,
+    // and fault schedules
+    use frontier::cluster::dynamics::FaultSpec;
+    run_prop("fault conservation", 8, |g| {
+        let n = g.u32(8, 24);
+        let w = WorkloadSpec {
+            arrival: Arrival::Poisson { rate: 30.0 },
+            input: LenDist::Uniform { lo: 16, hi: 128 },
+            output: LenDist::Fixed(g.u32(2, 12)),
+            n_requests: n,
+            seed: g.seed,
+            classes: vec![],
+            trace: None,
+        };
+        let spec = FaultSpec::Mttf {
+            mttf_s: g.f64(2.0, 10.0),
+            mttr_s: g.f64(0.5, 3.0),
+        };
+        let base = if g.bool() {
+            ExperimentConfig::pd(ModelConfig::tiny(), 2, 2)
+        } else {
+            ExperimentConfig::colocated(ModelConfig::tiny(), 2)
+        };
+        let cfg = base.with_workload(w).with_seed(g.seed).with_faults(spec);
+        let rep = frontier::run_experiment(&cfg).unwrap();
+        let m = &rep.metrics;
+        assert_eq!(
+            m.completed_requests + m.rejected_requests,
+            n as u64,
+            "conservation across failures"
+        );
+        assert!(m.fault_recoveries <= m.faults, "a recovery needs a failure");
+        assert!((0.0..=1.0).contains(&rep.availability()));
+        assert!(m.fault_affected_slo_miss <= m.fault_affected_completed);
+        // deterministic under the same seed even with faults
+        let again = frontier::run_experiment(&cfg).unwrap();
+        assert_eq!(rep.metrics.ttft, again.metrics.ttft);
+        assert_eq!(rep.sim_duration, again.sim_duration);
+    });
+}
+
+#[test]
+fn prop_autoscaled_simulation_stays_in_band() {
+    // the control loop acts at most once per tick per pool and never
+    // loses requests, for random policies, cadences, and loads
+    use frontier::cluster::dynamics::{AutoscaleSpec, ScalePolicy};
+    run_prop("autoscale bounds", 8, |g| {
+        let n = g.u32(8, 32);
+        let policy = *g.pick(&[ScalePolicy::Reactive, ScalePolicy::Predictive]);
+        let mut auto = AutoscaleSpec::new(policy, 1, g.u32(2, 5));
+        auto.interval_s = g.f64(0.2, 2.0);
+        auto.provision_s = g.f64(0.2, 2.0);
+        auto.warmup_s = g.f64(0.0, 1.0);
+        let w = WorkloadSpec {
+            arrival: Arrival::Poisson { rate: g.f64(20.0, 120.0) },
+            input: LenDist::Uniform { lo: 16, hi: 128 },
+            output: LenDist::Fixed(g.u32(2, 12)),
+            n_requests: n,
+            seed: g.seed,
+            classes: vec![],
+            trace: None,
+        };
+        let cfg = ExperimentConfig::pd(ModelConfig::tiny(), 1, 2)
+            .with_workload(w)
+            .with_seed(g.seed)
+            .with_autoscale(auto);
+        let rep = frontier::run_experiment(&cfg).unwrap();
+        let m = &rep.metrics;
+        assert_eq!(m.completed_requests + m.rejected_requests, n as u64);
+        assert!(m.scale_ticks > 0, "the loop must have run");
+        // one grow decision per tick per pool, one drain per tick per
+        // pool — the loop can never act more often than it evaluates
+        assert!(m.scale_up_events <= m.scale_ticks);
+        assert!(m.scale_down_events <= m.scale_ticks);
+        // the report presents the deployed shape, not headroom slots
+        assert_eq!(rep.stages[1].replicas, 2);
+    });
+}
