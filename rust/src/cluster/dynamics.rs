@@ -6,22 +6,41 @@
 //! gaps per replica) or an explicit event list (`list:...` /
 //! `file:...`), validated at config time. An [`AutoscaleSpec`]
 //! describes a control loop that grows/shrinks decode-capable pools
-//! from queue-depth signals with provisioning delay and warmup cost.
+//! from a queue-depth or SLO-attainment signal ([`ScaleSignal`]) with
+//! provisioning delay and warmup cost. A [`LinkFaultSpec`] makes the
+//! *fabric* mortal too: full outages and partial degradation
+//! (bandwidth fraction, added latency) of a whole tier
+//! (`nvlink|ib|wan`), a specific endpoint pair, or the EP
+//! cross-cluster trunk.
 //!
-//! Both lower to a [`DynPlan`] — a fully materialized, sorted event
-//! schedule computed *before* the simulation starts, as a pure
+//! All of them lower to a [`DynPlan`] — a fully materialized, sorted
+//! event schedule computed *before* the simulation starts, as a pure
 //! function of (config, trace horizon, seed). That is what keeps the
 //! parallel engine's determinism contract intact: every shard sees its
 //! own fault events pre-scheduled in its local queue, so the window
 //! loop never needs cross-shard coordination to decide *when* a
 //! replica dies, only to route the damage (which rides the existing
-//! commit records). Link failures are out of scope for now: mutating
-//! the fabric mid-window would break the conservative sync-window
-//! bound; replica (`S.R`) and whole-pool (`S`) failures are modeled.
+//! commit records).
+//!
+//! Link faults preserve the same contract through **fabric epochs**:
+//! the plan partitions the horizon into [`LinkEpoch`]s of
+//! piecewise-constant [`crate::network::FabricState`], the coordinator
+//! re-derives its conservative sync window Δ *per epoch* from the
+//! degraded path model, and window boundaries are clamped to epoch
+//! boundaries so no window ever straddles a capacity change.
+//! Degradation can only slow a live path (`bw_frac <= 1`,
+//! `alpha_add_s >= 0`; dead paths are excluded from dispatch
+//! entirely), so within any epoch the re-derived Δ remains a valid
+//! lower bound on cross-shard delivery latency; at a boundary into a
+//! *faster* epoch (recovery — the dangerous direction) the running
+//! window is cut exactly at the boundary and Δ is re-derived before
+//! the faster state prices anything. Reports therefore stay
+//! byte-identical for any `--sim-threads`.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::core::{Pcg64, SimTime};
+use crate::network::{FabricState, LinkHealth, NetLoc, Tier};
 
 /// Seconds between a replica failure and the affected requests
 /// re-entering the router (failure detection + reschedule latency).
@@ -45,14 +64,32 @@ pub const DEFAULT_MTTR_S: f64 = 30.0;
 /// ticks, without an unbounded horizon.
 pub const PLAN_SLACK_S: f64 = 60.0;
 
+/// Default scale-up threshold for the SLO signal (`--scale-signal
+/// slo`): grow when more than this fraction of the tick window's
+/// completions missed an SLO.
+pub const SLO_UP_MISS_FRAC: f64 = 0.05;
+
+/// Default scale-down threshold for the SLO signal: drain when the
+/// missed fraction falls below this.
+pub const SLO_DOWN_MISS_FRAC: f64 = 0.005;
+
 /// Seed salt for the fault-schedule RNG stream (distinct from the
 /// warmup and per-shard salts so fault draws never correlate with
 /// workload or routing draws).
 const FAULT_SEED_SALT: u64 = 0xA076_1D64_78BD_642F;
 
+/// Seed salt for the link-fault stream (distinct from
+/// [`FAULT_SEED_SALT`] so the same seed draws decorrelated replica and
+/// link schedules).
+const LINK_FAULT_SEED_SALT: u64 = 0x2545_F491_4F6C_DD1D;
+
 /// Safety cap on generated fault events per replica (an `mttf` far
 /// below the horizon would otherwise flood the queues).
 const MAX_EVENTS_PER_REPLICA: usize = 4096;
+
+/// Safety cap on generated link-fault transitions (the `mttf` link
+/// schedule is a single WAN-tier stream).
+const MAX_LINK_EVENTS: usize = 4096;
 
 /// Safety cap on autoscaler evaluation ticks.
 const MAX_SCALE_TICKS: usize = 100_000;
@@ -260,6 +297,365 @@ impl FaultSpec {
     }
 }
 
+/// What a link fault targets: a whole tier of the hierarchy, one
+/// (undirected) endpoint pair, or the EP cross-cluster trunk overlay.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkTarget {
+    /// Every link of one tier (`nvlink` = intra-node, `ib` =
+    /// inter-node, `wan` = cross-cluster).
+    Tier(Tier),
+    /// One endpoint pair, normalized at parse time so `0.0-1.0` and
+    /// `1.0-0.0` are the same (undirected) target.
+    Pair(NetLoc, NetLoc),
+    /// The EP dispatch/combine trunk overlay (composed on top of the
+    /// WAN tier for expert-parallel pricing only).
+    Trunk,
+}
+
+impl LinkTarget {
+    /// Apply a health transition for this target to a fabric state.
+    pub fn apply(&self, state: &mut FabricState, h: LinkHealth) {
+        match *self {
+            LinkTarget::Tier(t) => state.tier[t.index()] = h,
+            LinkTarget::Pair(a, b) => state.set_pair(a, b, h),
+            LinkTarget::Trunk => state.trunk = h,
+        }
+    }
+
+    /// The tier this target's degradation is attributed to in the
+    /// per-tier degraded-seconds metric.
+    pub fn tier(&self) -> Tier {
+        match *self {
+            LinkTarget::Tier(t) => t,
+            LinkTarget::Pair(a, b) => crate::network::HierSpec::tier_of(a, b),
+            LinkTarget::Trunk => Tier::CrossCluster,
+        }
+    }
+
+    fn parse(s: &str) -> Result<LinkTarget> {
+        match s {
+            "nvlink" => return Ok(LinkTarget::Tier(Tier::IntraNode)),
+            "ib" => return Ok(LinkTarget::Tier(Tier::InterNode)),
+            "wan" => return Ok(LinkTarget::Tier(Tier::CrossCluster)),
+            "trunk" => return Ok(LinkTarget::Trunk),
+            _ => {}
+        }
+        let (a, b) = s.split_once('-').ok_or_else(|| {
+            anyhow!("link target {s:?} (nvlink|ib|wan|trunk|C.N-C.N)")
+        })?;
+        let loc = |part: &str| -> Result<NetLoc> {
+            let (c, n) = part
+                .split_once('.')
+                .ok_or_else(|| anyhow!("link pair endpoint {part:?} needs C.N"))?;
+            Ok(NetLoc::new(
+                c.parse().map_err(|_| anyhow!("bad cluster in link target {s:?}"))?,
+                n.parse().map_err(|_| anyhow!("bad node in link target {s:?}"))?,
+            ))
+        };
+        let (a, b) = (loc(a)?, loc(b)?);
+        // normalize so the undirected pair has one spelling
+        if (a.cluster, a.node) <= (b.cluster, b.node) {
+            Ok(LinkTarget::Pair(a, b))
+        } else {
+            Ok(LinkTarget::Pair(b, a))
+        }
+    }
+}
+
+/// What a link-fault event does to its target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkFaultKind {
+    /// Full outage: the target refuses traffic (KV dispatch re-routes
+    /// or rejects; EP pricing floors at
+    /// [`LinkHealth::OUTAGE_EP_BW_FRAC`]).
+    Down,
+    /// Brownout: the target stays up at `bw_frac` of nominal bandwidth
+    /// with `alpha_add_s` seconds added to its latency.
+    Degrade {
+        /// Fraction of nominal bandwidth kept, in `(0, 1]`.
+        bw_frac: f64,
+        /// Seconds added to the path alpha (`>= 0`).
+        alpha_add_s: f64,
+    },
+    /// Recovery to full health.
+    Up,
+}
+
+/// One explicit link-fault transition in a `list:`/`file:` schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFaultEvent {
+    /// Absolute simulated time, seconds.
+    pub t_s: f64,
+    /// What the transition targets.
+    pub target: LinkTarget,
+    /// What it does.
+    pub kind: LinkFaultKind,
+}
+
+impl LinkFaultEvent {
+    /// The health state this transition leaves its target in.
+    pub fn health(&self) -> LinkHealth {
+        match self.kind {
+            LinkFaultKind::Down => LinkHealth { up: false, ..LinkHealth::HEALTHY },
+            LinkFaultKind::Degrade { bw_frac, alpha_add_s } => {
+                LinkHealth { up: true, bw_frac, alpha_add_s }
+            }
+            LinkFaultKind::Up => LinkHealth::HEALTHY,
+        }
+    }
+}
+
+/// The link/fabric fault-injection axis (`--link-faults`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LinkFaultSpec {
+    /// Seeded stochastic WAN-tier schedule: the trunk alternates
+    /// exponential up-gaps (mean `mttf_s`) and fault-gaps (mean
+    /// `mttr_s`). Faults are full outages, or brownouts to `bw_frac`
+    /// when given. Per-tier/pair scenarios use explicit lists.
+    Mttf {
+        /// Mean seconds between WAN faults.
+        mttf_s: f64,
+        /// Mean seconds to repair.
+        mttr_s: f64,
+        /// `Some(f)` = faults are brownouts to `f` of nominal
+        /// bandwidth; `None` = full outages.
+        bw_frac: Option<f64>,
+    },
+    /// Explicit transition list (times non-decreasing, recoveries
+    /// after their faults — enforced by [`LinkFaultSpec::validate`]).
+    List(Vec<LinkFaultEvent>),
+}
+
+impl LinkFaultSpec {
+    /// Parse the `--link-faults` grammar:
+    ///
+    /// * `mttf:MTTF[:mttr:MTTR][:frac:F]` — seeded WAN-tier schedule,
+    ///   seconds; MTTR defaults to [`DEFAULT_MTTR_S`]; with `frac:F`
+    ///   the faults are brownouts to `F` of nominal bandwidth instead
+    ///   of outages;
+    /// * `list:EV[;EV...]` with
+    ///   `EV = down@T:TGT | degrade@T:TGT:FRAC[:ALPHA] | up@T:TGT` and
+    ///   `TGT = nvlink | ib | wan | trunk | C.N-C.N` (an undirected
+    ///   endpoint pair by cluster.node coordinates); semicolon-joined
+    ///   so the spec can ride a comma-split sweep-axis value;
+    /// * `file:PATH` — JSON array of `{"t_s": T, "kind":
+    ///   "down"|"degrade"|"up", "target": "TGT"[, "bw_frac": F][,
+    ///   "alpha_add_s": A]}`.
+    pub fn parse(s: &str) -> Result<LinkFaultSpec> {
+        if let Some(rest) = s.strip_prefix("mttf:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            let mttf_s: f64 = parts[0]
+                .parse()
+                .map_err(|_| anyhow!("bad MTTF in --link-faults {s:?}"))?;
+            let mut mttr_s = DEFAULT_MTTR_S;
+            let mut bw_frac = None;
+            let mut i = 1;
+            while i < parts.len() {
+                match (parts[i], parts.get(i + 1)) {
+                    ("mttr", Some(v)) => {
+                        mttr_s = v
+                            .parse()
+                            .map_err(|_| anyhow!("bad MTTR in --link-faults {s:?}"))?;
+                    }
+                    ("frac", Some(v)) => {
+                        bw_frac = Some(
+                            v.parse()
+                                .map_err(|_| anyhow!("bad frac in --link-faults {s:?}"))?,
+                        );
+                    }
+                    _ => bail!(
+                        "--link-faults grammar: mttf:MTTF[:mttr:MTTR][:frac:F], got {s:?}"
+                    ),
+                }
+                i += 2;
+            }
+            return Ok(LinkFaultSpec::Mttf { mttf_s, mttr_s, bw_frac });
+        }
+        if let Some(rest) = s.strip_prefix("list:") {
+            let mut evs = Vec::new();
+            for tok in rest.split(';').filter(|t| !t.is_empty()) {
+                evs.push(Self::parse_event(tok)?);
+            }
+            if evs.is_empty() {
+                bail!("--link-faults list: needs at least one event");
+            }
+            return Ok(LinkFaultSpec::List(evs));
+        }
+        if let Some(path) = s.strip_prefix("file:") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("--link-faults file {path:?}: {e}"))?;
+            let json = crate::config::json::Json::parse(&text)?;
+            let mut evs = Vec::new();
+            for item in json.as_arr()? {
+                let target = LinkTarget::parse(item.req("target")?.as_str()?)?;
+                let kind = match item.req("kind")?.as_str()? {
+                    "down" => LinkFaultKind::Down,
+                    "up" => LinkFaultKind::Up,
+                    "degrade" => LinkFaultKind::Degrade {
+                        bw_frac: item.req("bw_frac")?.as_f64()?,
+                        alpha_add_s: match item.get("alpha_add_s") {
+                            Some(a) => a.as_f64()?,
+                            None => 0.0,
+                        },
+                    },
+                    k => bail!("link fault kind {k:?} (down|degrade|up)"),
+                };
+                evs.push(LinkFaultEvent { t_s: item.req("t_s")?.as_f64()?, target, kind });
+            }
+            if evs.is_empty() {
+                bail!("--link-faults file {path:?}: empty schedule");
+            }
+            return Ok(LinkFaultSpec::List(evs));
+        }
+        bail!(
+            "--link-faults grammar: mttf:MTTF[:mttr:MTTR][:frac:F] | list:EV[;EV...] | \
+             file:PATH, got {s:?}"
+        )
+    }
+
+    /// One `down@T:TGT` / `degrade@T:TGT:FRAC[:ALPHA]` / `up@T:TGT`
+    /// token.
+    fn parse_event(tok: &str) -> Result<LinkFaultEvent> {
+        let (kind, rest) = tok
+            .split_once('@')
+            .ok_or_else(|| anyhow!("link fault event {tok:?} needs KIND@T:TGT"))?;
+        let fields: Vec<&str> = rest.split(':').collect();
+        let bad = || anyhow!("link fault event {tok:?} (down@T:TGT | degrade@T:TGT:FRAC[:ALPHA] | up@T:TGT)");
+        let t_s: f64 = fields
+            .first()
+            .ok_or_else(bad)?
+            .parse()
+            .map_err(|_| anyhow!("bad time in link fault event {tok:?}"))?;
+        let target = LinkTarget::parse(fields.get(1).ok_or_else(bad)?)?;
+        let kind = match (kind, fields.len()) {
+            ("down", 2) => LinkFaultKind::Down,
+            ("up", 2) => LinkFaultKind::Up,
+            ("degrade", 3 | 4) => LinkFaultKind::Degrade {
+                bw_frac: fields[2]
+                    .parse()
+                    .map_err(|_| anyhow!("bad frac in link fault event {tok:?}"))?,
+                alpha_add_s: match fields.get(3) {
+                    Some(a) => a
+                        .parse()
+                        .map_err(|_| anyhow!("bad alpha in link fault event {tok:?}"))?,
+                    None => 0.0,
+                },
+            },
+            _ => return Err(bad()),
+        };
+        Ok(LinkFaultEvent { t_s, target, kind })
+    }
+
+    /// Config-time validation against the resolved deployment
+    /// (`stage_locs[s]` = fabric coordinate of stage `s`). Rejects
+    /// non-finite/negative/unsorted times, bandwidth fractions outside
+    /// `(0, 1]`, negative added latency, recoveries of a healthy
+    /// target, duplicate outages of a dead target, degradation of a
+    /// dead target (it must come back `up` first), pair targets whose
+    /// endpoints host no stage, and non-positive MTTF/MTTR.
+    pub fn validate(&self, stage_locs: &[NetLoc]) -> Result<()> {
+        let check_frac = |f: f64, a: f64| -> Result<()> {
+            if !f.is_finite() || f <= 0.0 || f > 1.0 {
+                bail!("link bandwidth fraction must be in (0, 1] (got {f})");
+            }
+            if !a.is_finite() || a < 0.0 {
+                bail!("link added latency must be finite and >= 0 (got {a})");
+            }
+            Ok(())
+        };
+        match self {
+            LinkFaultSpec::Mttf { mttf_s, mttr_s, bw_frac } => {
+                if !mttf_s.is_finite() || *mttf_s <= 0.0 {
+                    bail!("link MTTF must be positive and finite (got {mttf_s})");
+                }
+                if !mttr_s.is_finite() || *mttr_s <= 0.0 {
+                    bail!("link MTTR must be positive and finite (got {mttr_s})");
+                }
+                if let Some(f) = bw_frac {
+                    check_frac(*f, 0.0)?;
+                    if *f >= 1.0 {
+                        bail!("link brownout frac must be < 1 (got {f})");
+                    }
+                }
+            }
+            LinkFaultSpec::List(evs) => {
+                let mut last_t = 0.0f64;
+                // per-target state machine: healthy / degraded / down
+                #[derive(PartialEq)]
+                enum St {
+                    Healthy,
+                    Degraded,
+                    Down,
+                }
+                let mut states: Vec<(LinkTarget, St)> = Vec::new();
+                for ev in evs {
+                    if !ev.t_s.is_finite() || ev.t_s < 0.0 {
+                        bail!("link fault time {} must be finite and >= 0", ev.t_s);
+                    }
+                    if ev.t_s < last_t {
+                        bail!(
+                            "link fault schedule must be sorted by time ({} after {})",
+                            ev.t_s,
+                            last_t
+                        );
+                    }
+                    last_t = ev.t_s;
+                    if let LinkTarget::Pair(a, b) = ev.target {
+                        for p in [a, b] {
+                            if !stage_locs.contains(&p) {
+                                bail!(
+                                    "link fault pair endpoint {}.{} hosts no stage",
+                                    p.cluster,
+                                    p.node
+                                );
+                            }
+                        }
+                    }
+                    let st = match states.iter_mut().find(|(t, _)| *t == ev.target) {
+                        Some((_, st)) => st,
+                        None => {
+                            states.push((ev.target, St::Healthy));
+                            &mut states.last_mut().expect("just pushed").1
+                        }
+                    };
+                    match ev.kind {
+                        LinkFaultKind::Down => {
+                            if *st == St::Down {
+                                bail!(
+                                    "duplicate link outage at t={}: target already down",
+                                    ev.t_s
+                                );
+                            }
+                            *st = St::Down;
+                        }
+                        LinkFaultKind::Degrade { bw_frac, alpha_add_s } => {
+                            check_frac(bw_frac, alpha_add_s)?;
+                            if *st == St::Down {
+                                bail!(
+                                    "link degrade at t={} targets a dead link (recover it \
+                                     with up@ first)",
+                                    ev.t_s
+                                );
+                            }
+                            *st = St::Degraded;
+                        }
+                        LinkFaultKind::Up => {
+                            if *st == St::Healthy {
+                                bail!(
+                                    "link recovery at t={} precedes its fault",
+                                    ev.t_s
+                                );
+                            }
+                            *st = St::Healthy;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Autoscaler policy: how the queue-depth signal is read.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScalePolicy {
@@ -280,11 +676,46 @@ impl ScalePolicy {
     }
 }
 
+/// Which per-stage signal the autoscaler thresholds read
+/// (`--scale-signal`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleSignal {
+    /// Waiting requests per healthy replica (the PR-8 default).
+    Queue,
+    /// Fraction of completions in the last interval that *missed*
+    /// their SLO (`1 - attainment`), read from the streaming SLO
+    /// counters. Scale up when goodput drops below target even if the
+    /// queue stays shallow. Thresholds default to
+    /// [`SLO_UP_MISS_FRAC`] / [`SLO_DOWN_MISS_FRAC`] unless
+    /// `--scale-up`/`--scale-down` override them.
+    Slo,
+}
+
+impl ScaleSignal {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScaleSignal::Queue => "queue",
+            ScaleSignal::Slo => "slo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ScaleSignal> {
+        match s {
+            "queue" => Ok(ScaleSignal::Queue),
+            "slo" => Ok(ScaleSignal::Slo),
+            _ => bail!("unknown scale signal {s:?} (queue|slo)"),
+        }
+    }
+}
+
 /// The autoscaling control loop (`--autoscale`), applied to every
 /// decode-capable stage pool (unified / decode / af).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AutoscaleSpec {
     pub policy: ScalePolicy,
+    /// What `up_queue`/`down_queue` threshold: queue depth per healthy
+    /// replica, or missed-SLO fraction.
+    pub signal: ScaleSignal,
     /// Pool size floor (scale-down never drains below this).
     pub min_replicas: u32,
     /// Pool size ceiling (bounds pre-provisioned capacity).
@@ -308,6 +739,7 @@ impl AutoscaleSpec {
     pub fn new(policy: ScalePolicy, min_replicas: u32, max_replicas: u32) -> Self {
         AutoscaleSpec {
             policy,
+            signal: ScaleSignal::Queue,
             min_replicas,
             max_replicas,
             interval_s: 10.0,
@@ -398,6 +830,26 @@ pub struct PlannedFault {
     pub up: bool,
 }
 
+/// One materialized link-fault transition: at `at`, `target` moves to
+/// `health`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannedLinkFault {
+    pub at: SimTime,
+    pub target: LinkTarget,
+    pub health: LinkHealth,
+}
+
+/// One fabric epoch: from `start` (until the next epoch's `start`, or
+/// the end of the run) the whole fabric holds piecewise-constant
+/// `state`. The engine re-derives its conservative sync window per
+/// epoch and clamps window boundaries to epoch boundaries, so no
+/// window ever straddles a capacity change.
+#[derive(Clone, Debug)]
+pub struct LinkEpoch {
+    pub start: SimTime,
+    pub state: FabricState,
+}
+
 /// The fully materialized dynamics schedule for one run: a pure
 /// function of (spec, stage shape, seed, horizon) computed before the
 /// event loop starts — the determinism anchor for the sharded engine.
@@ -411,6 +863,14 @@ pub struct DynPlan {
     pub revive_after: Vec<SimTime>,
     /// Autoscaler evaluation times (shared by every governed stage).
     pub ticks: Vec<SimTime>,
+    /// Link-fault transitions sorted by time (stable: schedule order
+    /// breaks ties).
+    pub link_events: Vec<PlannedLinkFault>,
+    /// Fabric epochs folded from `link_events`: `epochs[0]` starts at
+    /// t=0 fully healthy; each event opens a new epoch (coincident
+    /// events share one). Empty only when the plan was built without a
+    /// link-fault spec.
+    pub epochs: Vec<LinkEpoch>,
 }
 
 impl DynPlan {
@@ -418,8 +878,60 @@ impl DynPlan {
     /// an empty plan must leave the engine byte-identical to a build
     /// without one).
     pub fn any(&self) -> bool {
-        !self.faults.is_empty() || !self.ticks.is_empty()
+        !self.faults.is_empty() || !self.ticks.is_empty() || !self.link_events.is_empty()
     }
+}
+
+/// Index of the fabric epoch covering time `t`. `epochs` must be
+/// non-empty with `epochs[0].start == 0`.
+pub fn epoch_index(epochs: &[LinkEpoch], t: SimTime) -> usize {
+    match epochs.binary_search_by(|e| e.start.cmp(&t)) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    }
+}
+
+/// Seconds each tier spends in a non-healthy state over `[0,
+/// horizon_s]`, attributed per tier (trunk degradation counts against
+/// the cross-cluster tier; a degraded pair counts against the tier its
+/// endpoints span).
+pub fn degraded_seconds(epochs: &[LinkEpoch], horizon_s: f64) -> [f64; 3] {
+    let mut out = [0.0f64; 3];
+    for (i, ep) in epochs.iter().enumerate() {
+        let start = ep.start.as_secs_f64();
+        if start >= horizon_s {
+            break;
+        }
+        let end = epochs
+            .get(i + 1)
+            .map(|n| n.start.as_secs_f64())
+            .unwrap_or(horizon_s)
+            .min(horizon_s);
+        let span = end - start;
+        if span <= 0.0 {
+            continue;
+        }
+        let mut tier_bad = [false; 3];
+        for (ti, h) in ep.state.tier.iter().enumerate() {
+            if !h.healthy() {
+                tier_bad[ti] = true;
+            }
+        }
+        for ((a, b), h) in &ep.state.pairs {
+            if !h.healthy() {
+                tier_bad[crate::network::HierSpec::tier_of(*a, *b).index()] = true;
+            }
+        }
+        if !ep.state.trunk.healthy() {
+            tier_bad[Tier::CrossCluster.index()] = true;
+        }
+        for ti in 0..3 {
+            if tier_bad[ti] {
+                out[ti] += span;
+            }
+        }
+    }
+    out
 }
 
 /// Materialize the dynamics schedule. `horizon_s` should cover the
@@ -427,6 +939,7 @@ impl DynPlan {
 /// (plus one trailing recovery so nothing ends down under `mttf`).
 pub fn build_plan(
     faults: Option<&FaultSpec>,
+    link_faults: Option<&LinkFaultSpec>,
     autoscale: Option<&AutoscaleSpec>,
     stage_replicas: &[u32],
     seed: u64,
@@ -436,6 +949,8 @@ pub fn build_plan(
         faults: Vec::new(),
         revive_after: vec![SimTime::ZERO; stage_replicas.len()],
         ticks: Vec::new(),
+        link_events: Vec::new(),
+        epochs: Vec::new(),
     };
     match faults {
         Some(FaultSpec::Mttf { mttf_s, mttr_s }) => {
@@ -509,6 +1024,66 @@ pub fn build_plan(
         while (k as f64) * a.interval_s <= end && k <= MAX_SCALE_TICKS {
             plan.ticks.push(SimTime::from_secs_f64(k as f64 * a.interval_s));
             k += 1;
+        }
+    }
+    match link_faults {
+        Some(LinkFaultSpec::Mttf { mttf_s, mttr_s, bw_frac }) => {
+            // one decorrelated stream for the WAN trunk tier, salted
+            // apart from the replica-fault streams
+            let mut rng = Pcg64::new(seed ^ LINK_FAULT_SEED_SALT);
+            let fault_health = match bw_frac {
+                Some(f) => LinkHealth { up: true, bw_frac: *f, alpha_add_s: 0.0 },
+                None => LinkHealth { up: false, ..LinkHealth::HEALTHY },
+            };
+            let mut t = 0.0f64;
+            let mut up = true;
+            for _ in 0..MAX_LINK_EVENTS {
+                let gap = if up { rng.exp(1.0 / mttf_s) } else { rng.exp(1.0 / mttr_s) };
+                t += gap;
+                if t > horizon_s && up {
+                    // past the horizon and healthy: done (a pending
+                    // repair still gets its trailing recovery below)
+                    break;
+                }
+                up = !up;
+                plan.link_events.push(PlannedLinkFault {
+                    at: SimTime::from_secs_f64(t),
+                    target: LinkTarget::Tier(Tier::CrossCluster),
+                    health: if up { LinkHealth::HEALTHY } else { fault_health },
+                });
+                if !up {
+                    continue;
+                }
+                if t > horizon_s {
+                    break;
+                }
+            }
+        }
+        Some(LinkFaultSpec::List(evs)) => {
+            for ev in evs {
+                plan.link_events.push(PlannedLinkFault {
+                    at: SimTime::from_secs_f64(ev.t_s),
+                    target: ev.target,
+                    health: ev.health(),
+                });
+            }
+        }
+        None => {}
+    }
+    if link_faults.is_some() {
+        // stable sort: coincident transitions apply in schedule order
+        plan.link_events.sort_by_key(|e| e.at);
+        // fold transitions into piecewise-constant fabric epochs
+        plan.epochs.push(LinkEpoch { start: SimTime::ZERO, state: FabricState::default() });
+        for ev in &plan.link_events {
+            let mut state = plan.epochs.last().expect("seeded above").state.clone();
+            ev.target.apply(&mut state, ev.health);
+            let last = plan.epochs.last_mut().expect("seeded above");
+            if last.start == ev.at {
+                last.state = state;
+            } else {
+                plan.epochs.push(LinkEpoch { start: ev.at, state });
+            }
         }
     }
     plan
@@ -607,10 +1182,10 @@ mod tests {
     #[test]
     fn mttf_plan_is_seeded_and_alternates() {
         let spec = FaultSpec::Mttf { mttf_s: 50.0, mttr_s: 10.0 };
-        let a = build_plan(Some(&spec), None, &[2, 2], 7, 300.0);
-        let b = build_plan(Some(&spec), None, &[2, 2], 7, 300.0);
+        let a = build_plan(Some(&spec), None, None, &[2, 2], 7, 300.0);
+        let b = build_plan(Some(&spec), None, None, &[2, 2], 7, 300.0);
         assert_eq!(a.faults, b.faults, "same seed, same schedule");
-        let c = build_plan(Some(&spec), None, &[2, 2], 8, 300.0);
+        let c = build_plan(Some(&spec), None, None, &[2, 2], 8, 300.0);
         assert_ne!(a.faults, c.faults, "different seed, different schedule");
         assert!(!a.faults.is_empty());
         // per replica: strictly alternating down/up starting with down
@@ -635,19 +1210,163 @@ mod tests {
     #[test]
     fn list_plan_expands_pool_events() {
         let spec = FaultSpec::parse("list:down@10:0;up@20:0.1").unwrap();
-        let p = build_plan(Some(&spec), None, &[3], 1, 100.0);
+        let p = build_plan(Some(&spec), None, None, &[3], 1, 100.0);
         // pool-down expands to 3 per-replica transitions
         assert_eq!(p.faults.iter().filter(|f| !f.up).count(), 3);
         assert_eq!(p.faults.iter().filter(|f| f.up).count(), 1);
         assert_eq!(p.revive_after[0], SimTime::from_secs_f64(20.0));
         assert!(p.any());
-        assert!(!build_plan(None, None, &[3], 1, 100.0).any());
+        assert!(!build_plan(None, None, None, &[3], 1, 100.0).any());
+    }
+
+    #[test]
+    fn parse_link_fault_grammar() {
+        assert_eq!(
+            LinkFaultSpec::parse("mttf:600").unwrap(),
+            LinkFaultSpec::Mttf { mttf_s: 600.0, mttr_s: DEFAULT_MTTR_S, bw_frac: None }
+        );
+        assert_eq!(
+            LinkFaultSpec::parse("mttf:600:mttr:45:frac:0.4").unwrap(),
+            LinkFaultSpec::Mttf { mttf_s: 600.0, mttr_s: 45.0, bw_frac: Some(0.4) }
+        );
+        let spec = LinkFaultSpec::parse(
+            "list:degrade@30:wan:0.4;down@60:0.0-1.0;up@90:wan;down@100:trunk;degrade@110:ib:0.5:0.002",
+        )
+        .unwrap();
+        let LinkFaultSpec::List(evs) = spec else { panic!("expected list") };
+        assert_eq!(
+            evs[0],
+            LinkFaultEvent {
+                t_s: 30.0,
+                target: LinkTarget::Tier(Tier::CrossCluster),
+                kind: LinkFaultKind::Degrade { bw_frac: 0.4, alpha_add_s: 0.0 },
+            }
+        );
+        assert_eq!(
+            evs[1].target,
+            LinkTarget::Pair(NetLoc::new(0, 0), NetLoc::new(1, 0))
+        );
+        assert_eq!(evs[2].kind, LinkFaultKind::Up);
+        assert_eq!(evs[3].target, LinkTarget::Trunk);
+        assert_eq!(
+            evs[4].kind,
+            LinkFaultKind::Degrade { bw_frac: 0.5, alpha_add_s: 0.002 }
+        );
+        // pair targets normalize to one undirected spelling
+        assert_eq!(
+            LinkTarget::parse("1.2-0.3").unwrap(),
+            LinkTarget::Pair(NetLoc::new(0, 3), NetLoc::new(1, 2))
+        );
+        assert!(LinkFaultSpec::parse("list:").is_err());
+        assert!(LinkFaultSpec::parse("list:sideways@3:wan").is_err());
+        assert!(LinkFaultSpec::parse("list:down@x:wan").is_err());
+        assert!(LinkFaultSpec::parse("list:down@5:lan").is_err());
+        assert!(LinkFaultSpec::parse("list:degrade@5:wan").is_err(), "degrade needs frac");
+        assert!(LinkFaultSpec::parse("mttf:600:45").is_err(), "mttr needs its keyword");
+        assert!(LinkFaultSpec::parse("nope:1").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_link_schedules() {
+        let locs = &[NetLoc::new(0, 0), NetLoc::new(1, 0)];
+        let v = |s: &str| LinkFaultSpec::parse(s).unwrap().validate(locs);
+        assert!(v("list:down@90:wan;up@30:wan").unwrap_err().to_string().contains("sorted"));
+        assert!(v("list:up@30:wan").unwrap_err().to_string().contains("precedes"));
+        assert!(v("list:down@10:wan;down@20:wan")
+            .unwrap_err()
+            .to_string()
+            .contains("already down"));
+        assert!(v("list:down@10:wan;degrade@20:wan:0.5")
+            .unwrap_err()
+            .to_string()
+            .contains("dead link"));
+        assert!(v("list:degrade@10:wan:1.5").is_err(), "frac > 1");
+        assert!(v("list:degrade@10:wan:0").is_err(), "frac = 0 is an outage, use down@");
+        assert!(v("list:degrade@10:wan:0.5:-1").is_err(), "negative alpha");
+        assert!(v("list:down@10:0.0-2.7").unwrap_err().to_string().contains("no stage"));
+        assert!(LinkFaultSpec::Mttf { mttf_s: 0.0, mttr_s: 30.0, bw_frac: None }
+            .validate(locs)
+            .is_err());
+        assert!(LinkFaultSpec::Mttf { mttf_s: 600.0, mttr_s: 30.0, bw_frac: Some(1.0) }
+            .validate(locs)
+            .is_err());
+        // good cases: degrade→deeper degrade→up, down→up, separate targets
+        assert!(v("list:degrade@10:wan:0.5;degrade@20:wan:0.2;up@30:wan").is_ok());
+        assert!(v("list:down@10:0.0-1.0;up@20:0.0-1.0;down@30:trunk").is_ok());
+        assert!(LinkFaultSpec::parse("mttf:600:frac:0.4").unwrap().validate(locs).is_ok());
+    }
+
+    #[test]
+    fn link_plan_folds_epochs() {
+        let spec = LinkFaultSpec::parse(
+            "list:degrade@30:wan:0.4;down@30:trunk;up@60:wan;up@60:trunk",
+        )
+        .unwrap();
+        let p = build_plan(None, Some(&spec), None, &[2], 1, 100.0);
+        assert!(p.any());
+        assert_eq!(p.link_events.len(), 4);
+        // coincident transitions share an epoch: healthy, t=30, t=60
+        assert_eq!(p.epochs.len(), 3);
+        assert_eq!(p.epochs[0].start, SimTime::ZERO);
+        assert!(p.epochs[0].state.is_healthy());
+        assert_eq!(p.epochs[1].start, SimTime::from_secs_f64(30.0));
+        let mid = &p.epochs[1].state;
+        assert_eq!(mid.tier[Tier::CrossCluster.index()].bw_frac, 0.4);
+        assert!(!mid.trunk.up);
+        assert!(p.epochs[2].state.is_healthy());
+        // epoch lookup
+        assert_eq!(epoch_index(&p.epochs, SimTime::ZERO), 0);
+        assert_eq!(epoch_index(&p.epochs, SimTime::from_secs_f64(29.9)), 0);
+        assert_eq!(epoch_index(&p.epochs, SimTime::from_secs_f64(30.0)), 1);
+        assert_eq!(epoch_index(&p.epochs, SimTime::from_secs_f64(99.0)), 2);
+        // degraded-seconds: wan tier carries both the tier degrade and
+        // the trunk outage for 30s
+        let ds = degraded_seconds(&p.epochs, 100.0);
+        assert_eq!(ds, [0.0, 0.0, 30.0]);
+        // no-spec plans have no epochs and stay inert
+        assert!(build_plan(None, None, None, &[2], 1, 100.0).epochs.is_empty());
+    }
+
+    #[test]
+    fn mttf_link_plan_is_seeded_and_alternates() {
+        let spec = LinkFaultSpec::Mttf { mttf_s: 40.0, mttr_s: 10.0, bw_frac: None };
+        let a = build_plan(None, Some(&spec), None, &[2], 7, 300.0);
+        let b = build_plan(None, Some(&spec), None, &[2], 7, 300.0);
+        assert_eq!(a.link_events, b.link_events, "same seed, same schedule");
+        let c = build_plan(None, Some(&spec), None, &[2], 8, 300.0);
+        assert_ne!(a.link_events, c.link_events, "different seed, different schedule");
+        assert!(!a.link_events.is_empty());
+        // replica stream with the same seed stays decorrelated
+        let rspec = FaultSpec::Mttf { mttf_s: 40.0, mttr_s: 10.0 };
+        let r = build_plan(Some(&rspec), None, None, &[1], 7, 300.0);
+        assert_ne!(
+            r.faults.first().map(|f| f.at),
+            a.link_events.first().map(|e| e.at),
+            "link stream is salted apart from the replica stream"
+        );
+        // strictly alternating down/up starting with down, ending up
+        let mut t = SimTime::ZERO;
+        for (i, e) in a.link_events.iter().enumerate() {
+            assert_eq!(e.health == LinkHealth::HEALTHY, i % 2 == 1);
+            assert!(e.at > t);
+            t = e.at;
+        }
+        assert_eq!(a.link_events.len() % 2, 0, "trailing recovery scheduled");
+        // epochs: one per transition plus the healthy prefix
+        assert_eq!(a.epochs.len(), a.link_events.len() + 1);
+        // brownout variant degrades instead of killing
+        let bspec = LinkFaultSpec::Mttf { mttf_s: 40.0, mttr_s: 10.0, bw_frac: Some(0.4) };
+        let bp = build_plan(None, Some(&bspec), None, &[2], 7, 300.0);
+        assert!(bp
+            .link_events
+            .iter()
+            .all(|e| e.health.up && (e.health.bw_frac == 0.4 || e.health == LinkHealth::HEALTHY)));
     }
 
     #[test]
     fn scale_ticks_cover_horizon_plus_slack() {
         let a = AutoscaleSpec::new(ScalePolicy::Reactive, 1, 4);
-        let p = build_plan(None, Some(&a), &[2], 1, 60.0);
+        let p = build_plan(None, None, Some(&a), &[2], 1, 60.0);
         assert!(p.faults.is_empty());
         assert_eq!(p.ticks[0], SimTime::from_secs_f64(10.0));
         let end = 60.0 + a.provision_s + 10.0 * a.interval_s;

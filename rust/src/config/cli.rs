@@ -89,7 +89,9 @@ pub const VALUE_FLAGS: &[&str] = &[
     "slo-tbt",
     "slo-e2e",
     "faults",
+    "link-faults",
     "autoscale",
+    "scale-signal",
     "scale-interval",
     "scale-delay",
     "scale-warmup",
@@ -421,8 +423,21 @@ pub fn build_config(a: &FlagMap) -> Result<ExperimentConfig> {
     if let Some(f) = a.get("faults") {
         cfg.faults = Some(crate::cluster::dynamics::FaultSpec::parse(f)?);
     }
+    if let Some(f) = a.get("link-faults") {
+        cfg.link_faults = Some(crate::cluster::dynamics::LinkFaultSpec::parse(f)?);
+    }
     if let Some(s) = a.get("autoscale") {
         let mut auto = crate::cluster::dynamics::AutoscaleSpec::parse(s)?;
+        if let Some(sig) = a.get("scale-signal") {
+            auto.signal = crate::cluster::dynamics::ScaleSignal::parse(sig)?;
+            // the SLO signal reads missed-SLO *fractions*, so the
+            // queue-depth defaults (4.0 / 0.5) are out of range —
+            // substitute fraction defaults unless explicitly overridden
+            if auto.signal == crate::cluster::dynamics::ScaleSignal::Slo {
+                auto.up_queue = crate::cluster::dynamics::SLO_UP_MISS_FRAC;
+                auto.down_queue = crate::cluster::dynamics::SLO_DOWN_MISS_FRAC;
+            }
+        }
         auto.interval_s = a.num("scale-interval", auto.interval_s)?;
         auto.provision_s = a.num("scale-delay", auto.provision_s)?;
         auto.warmup_s = a.num("scale-warmup", auto.warmup_s)?;
@@ -432,7 +447,14 @@ pub fn build_config(a: &FlagMap) -> Result<ExperimentConfig> {
     } else {
         // a tuning subflag without the loop would silently run a
         // statically sized fleet — reject it like --edges w/o --stages
-        for k in ["scale-interval", "scale-delay", "scale-warmup", "scale-up", "scale-down"] {
+        for k in [
+            "scale-signal",
+            "scale-interval",
+            "scale-delay",
+            "scale-warmup",
+            "scale-up",
+            "scale-down",
+        ] {
             if a.has(k) {
                 bail!("--{k} requires --autoscale");
             }
@@ -638,15 +660,81 @@ mod tests {
         assert!(cfg.validate().is_ok());
         // defaults stay inert
         let d = build_config(&FlagMap::new()).unwrap();
-        assert!(d.faults.is_none() && d.autoscale.is_none());
+        assert!(d.faults.is_none() && d.autoscale.is_none() && d.link_faults.is_none());
         // malformed specs fail at lowering, orphan subflags are loud
         assert!(build_config(&parse(&["--faults", "sometimes"]).unwrap()).is_err());
         assert!(build_config(&parse(&["--autoscale", "reactive"]).unwrap()).is_err());
         assert!(build_config(&parse(&["--scale-interval", "5"]).unwrap()).is_err());
+        assert!(build_config(&parse(&["--scale-signal", "slo"]).unwrap()).is_err());
         // list grammar is semicolon-joined so it can ride a sweep axis
         let lf = parse(&["--model", "tiny", "--mode", "pd", "--faults", "list:down@30:1.0;up@90:1.0"])
             .unwrap();
         assert!(build_config(&lf).unwrap().validate().is_ok());
+    }
+
+    #[test]
+    fn link_fault_and_scale_signal_flags_lower_and_validate() {
+        use crate::cluster::dynamics::{
+            LinkFaultSpec, ScaleSignal, SLO_DOWN_MISS_FRAC, SLO_UP_MISS_FRAC,
+        };
+        let f = parse(&[
+            "--model",
+            "tiny",
+            "--mode",
+            "pd",
+            "--link-faults",
+            "list:degrade@30:wan:0.4;up@90:wan",
+            "--autoscale",
+            "reactive:1:6",
+            "--scale-signal",
+            "slo",
+            "--slo-ttft",
+            "0.5",
+        ])
+        .unwrap();
+        let cfg = build_config(&f).unwrap();
+        assert!(matches!(cfg.link_faults, Some(LinkFaultSpec::List(_))));
+        let auto = cfg.autoscale.unwrap();
+        assert_eq!(auto.signal, ScaleSignal::Slo);
+        // slo signal substitutes fraction-range thresholds
+        assert_eq!(auto.up_queue, SLO_UP_MISS_FRAC);
+        assert_eq!(auto.down_queue, SLO_DOWN_MISS_FRAC);
+        assert!(cfg.validate().is_ok());
+        // explicit thresholds still win over the substitution
+        let g = parse(&[
+            "--model", "tiny", "--mode", "pd", "--autoscale", "reactive:1:6",
+            "--scale-signal", "slo", "--scale-up", "0.2", "--slo-ttft", "0.5",
+        ])
+        .unwrap();
+        assert_eq!(build_config(&g).unwrap().autoscale.unwrap().up_queue, 0.2);
+        // slo signal without an SLO threshold fails validation
+        let h = parse(&[
+            "--model", "tiny", "--mode", "pd", "--autoscale", "reactive:1:6",
+            "--scale-signal", "slo",
+        ])
+        .unwrap();
+        assert!(build_config(&h).unwrap().validate().unwrap_err().to_string().contains("slo"));
+        // malformed link schedules fail at lowering; pair targets
+        // pointing at unpopulated coordinates fail validation
+        assert!(build_config(
+            &parse(&["--model", "tiny", "--link-faults", "list:up@30:wan"]).unwrap()
+        )
+        .is_ok_and(|c| c.validate().is_err()));
+        assert!(build_config(
+            &parse(&["--model", "tiny", "--link-faults", "flaky"]).unwrap()
+        )
+        .is_err());
+        let pair = parse(&[
+            "--model", "tiny", "--mode", "pd", "--link-faults", "list:down@10:3.0-4.0",
+        ])
+        .unwrap();
+        assert!(build_config(&pair).unwrap().validate().is_err());
+        // mttf brownout grammar lowers
+        let b = parse(&["--model", "tiny", "--link-faults", "mttf:600:mttr:45:frac:0.4"]).unwrap();
+        assert_eq!(
+            build_config(&b).unwrap().link_faults,
+            Some(LinkFaultSpec::Mttf { mttf_s: 600.0, mttr_s: 45.0, bw_frac: Some(0.4) })
+        );
     }
 
     #[test]
@@ -658,7 +746,9 @@ mod tests {
         assert!(is_value_flag("slo-ttft") && is_value_flag("slo-tbt") && is_value_flag("slo-e2e"));
         assert!(is_value_flag("sim-threads"), "single-run sharding is sweep-inert but settable");
         assert!(is_value_flag("faults") && is_value_flag("autoscale"), "dynamics are sweep axes");
+        assert!(is_value_flag("link-faults"), "link faults are a sweep axis");
         assert!(is_value_flag("scale-interval") && is_value_flag("scale-up"));
+        assert!(is_value_flag("scale-signal"));
         assert!(!is_value_flag("threads"), "driver flags are not sweepable");
         assert!(!is_value_flag("trace"), "trace replay is a simulate-only path");
         assert!(!is_value_flag("json"), "bool flags are not value flags");

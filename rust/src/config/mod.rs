@@ -10,7 +10,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::dynamics::{AutoscaleSpec, FaultSpec};
+use crate::cluster::dynamics::{AutoscaleSpec, FaultSpec, LinkFaultSpec, ScaleSignal};
 use crate::cluster::StageKind;
 use crate::hardware::{GpuSpec, LinkSpec};
 use crate::metrics::SloSpec;
@@ -198,6 +198,9 @@ pub struct ExperimentConfig {
     /// Autoscaling control loop (`--autoscale`) over decode-capable
     /// stage pools; `None` = statically sized fleet.
     pub autoscale: Option<AutoscaleSpec>,
+    /// Link/fabric fault schedule (`--link-faults`); `None` = immortal
+    /// fabric, byte-identical to a build without fabric epochs.
+    pub link_faults: Option<LinkFaultSpec>,
 }
 
 impl ExperimentConfig {
@@ -226,6 +229,7 @@ impl ExperimentConfig {
             sim_threads: 1,
             faults: None,
             autoscale: None,
+            link_faults: None,
         }
     }
 
@@ -292,6 +296,13 @@ impl ExperimentConfig {
     /// stage pools.
     pub fn with_autoscale(mut self, autoscale: AutoscaleSpec) -> Self {
         self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Install a link/fabric fault schedule (see
+    /// [`LinkFaultSpec::parse`]).
+    pub fn with_link_faults(mut self, link_faults: LinkFaultSpec) -> Self {
+        self.link_faults = Some(link_faults);
         self
     }
 
@@ -477,6 +488,25 @@ impl ExperimentConfig {
         }
         if let Some(a) = &self.autoscale {
             a.validate(&stage_replicas, &Self::autoscale_governs(&graph))?;
+            // the SLO signal reads missed-SLO fractions — meaningless
+            // (always zero) without at least one SLO threshold set
+            if a.signal == ScaleSignal::Slo && !self.slo.any() {
+                bail!(
+                    "--scale-signal slo requires an SLO threshold \
+                     (--slo-ttft / --slo-tbt / --slo-e2e)"
+                );
+            }
+        }
+        if let Some(lf) = &self.link_faults {
+            // pair targets are validated against the resolved stage
+            // coordinates so a cut between unpopulated endpoints fails
+            // at config time
+            let stage_locs: Vec<crate::network::NetLoc> = graph
+                .stages
+                .iter()
+                .map(|st| crate::network::NetLoc::new(st.cluster, st.node))
+                .collect();
+            lf.validate(&stage_locs)?;
         }
         // threshold migration that could never engage (dense model, or
         // no stage with an EP domain) is a silent no-op — reject it, as

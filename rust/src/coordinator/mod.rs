@@ -89,6 +89,30 @@
 //! stamp `IterEnd`/`KvDone` events; stale ones are dropped. Runs
 //! without dynamics schedule nothing and stay byte-identical to the
 //! pre-dynamics engine.
+//!
+//! # Fabric epochs (`--link-faults`)
+//!
+//! Link/fabric faults change the *capacity* the sync window is derived
+//! from, so they get their own determinism mechanism: the plan folds
+//! the link schedule into **fabric epochs**
+//! ([`crate::cluster::dynamics::LinkEpoch`]) — intervals of
+//! piecewise-constant [`crate::network::FabricState`]. Per epoch the
+//! engine re-derives a conservative window `Δ_e` from the *degraded*
+//! path model (minimum over live kv edges only — dead paths are never
+//! dispatched onto), and every window's horizon is clamped to the next
+//! epoch boundary, so no window ever straddles a capacity change:
+//! every dispatch inside a window prices against exactly one fabric
+//! state, for any `--sim-threads`. Degradation only slows links
+//! (`bw_frac <= 1`, `alpha_add_s >= 0`), so `Δ_e` stays a valid lower
+//! bound within its epoch; recovery — the dangerous direction — takes
+//! effect only at an epoch boundary, where `Δ` is re-derived. KV
+//! transfers whose every candidate path is down are held (re-dispatched
+//! at the next epoch boundary) or rejected as backpressure when no
+//! future epoch revives a path; the EP cross-cluster trunk's health is
+//! pushed into each stage's cost model at epoch application so MoE
+//! dispatch/combine and expert migrations price through the degraded
+//! trunk. Runs without `--link-faults` build no epochs and skip every
+//! branch here.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
@@ -107,7 +131,7 @@ use crate::metrics::{MetricsCollector, ReqTimestamps, SimReport, StageReport};
 use crate::moe::{
     self, EpFabric, EpSpec, EpTopology, ExpertPlacement, LoadEstimator, MigrationPolicy,
 };
-use crate::network::{HierFabric, NetLoc};
+use crate::network::{FabricState, HierFabric, NetLoc};
 use crate::predictor::{self, ExecutionPredictor, PredictorKind};
 use crate::scheduler::{self, IterBudget, QueuedReq};
 use crate::workflows::af::{af_step, AfStep};
@@ -147,6 +171,9 @@ pub struct Request {
     /// Displaced by at least one fault — feeds the per-fault SLO
     /// damage meter on completion.
     pub affected: bool,
+    /// KV transfer rerouted around (or stalled on) a dead fabric path
+    /// — feeds the link-fault SLO damage meter on completion.
+    pub link_affected: bool,
 }
 
 /// Shard-local events. Stage indices are **shard-local** — the shard
@@ -230,9 +257,14 @@ struct StageRuntime {
     /// Estimator draw count at the last migration check (the control
     /// loop re-plans at most once per load window).
     mig_last_draws: u64,
-    /// Queue-depth signal at the previous autoscaler tick (the
-    /// predictive policy's trend term).
+    /// Scale signal at the previous autoscaler tick (the predictive
+    /// policy's trend term; queue depth or SLO miss fraction).
     q_prev: f64,
+    /// Shard-local completion count at the previous autoscaler tick
+    /// (the `--scale-signal slo` window delta).
+    prev_completed: u64,
+    /// Shard-local SLO-met count at the previous autoscaler tick.
+    prev_slo_ok: u64,
 }
 
 impl StageRuntime {
@@ -384,6 +416,16 @@ struct RunCtx {
     /// pools pre-provision `max_replicas` slots, but reports, GPU
     /// counts, and fault targeting all use the configured size.
     init_replicas: Vec<u32>,
+    /// Whether a link-fault schedule is configured. Gates every
+    /// fabric-epoch branch; `false` leaves the engine byte-identical
+    /// to the pre-link-fault build.
+    link_on: bool,
+    /// Fabric epochs from the plan (non-empty iff `link_on`;
+    /// `epochs[0]` starts at t=0).
+    epochs: Vec<dynamics::LinkEpoch>,
+    /// Per-epoch conservative sync window, re-derived from each
+    /// epoch's degraded path model (parallel to `epochs`).
+    epoch_delta: Vec<SimTime>,
 }
 
 /// One shard of the parallel engine: a group of stages advanced by one
@@ -413,6 +455,9 @@ struct Shard {
     ep_samples: Vec<MoeEpSample>,
     /// Cross-shard effects of the current window, time-ordered.
     commits: Vec<PbRec>,
+    /// Fabric epoch last applied to this shard's cost models
+    /// (`usize::MAX` = none yet; untouched without `--link-faults`).
+    cur_epoch: usize,
 }
 
 pub struct GlobalController {
@@ -576,6 +621,8 @@ impl GlobalController {
                 af,
                 mig_last_draws: 0,
                 q_prev: 0.0,
+                prev_completed: 0,
+                prev_slo_ok: 0,
             });
             // expert-migration control loop: attach the online load
             // estimator to the cost model owning the stage's EP domain.
@@ -636,7 +683,8 @@ impl GlobalController {
         let has_transfers = kv_out.iter().any(|d| !d.is_empty());
         let governed = ExperimentConfig::autoscale_governs(&graph);
         let init_replicas: Vec<u32> = graph.stages.iter().map(|st| st.replicas).collect();
-        let dyn_on = cfg.faults.is_some() || cfg.autoscale.is_some();
+        let dyn_on =
+            cfg.faults.is_some() || cfg.autoscale.is_some() || cfg.link_faults.is_some();
         // distribute the stage runtimes into their shards
         let mut slots: Vec<Option<StageRuntime>> = runtimes.into_iter().map(Some).collect();
         let shards: Vec<Shard> = shard_stages
@@ -685,6 +733,7 @@ impl GlobalController {
                     scratch_free: Vec::new(),
                     ep_samples: Vec::new(),
                     commits: Vec::new(),
+                    cur_epoch: usize::MAX,
                     stages,
                 }
             })
@@ -709,6 +758,9 @@ impl GlobalController {
                 revive_after: vec![SimTime::ZERO; n],
                 governed,
                 init_replicas,
+                link_on: cfg.link_faults.is_some(),
+                epochs: Vec::new(),
+                epoch_delta: Vec::new(),
                 cfg,
             },
         })
@@ -731,13 +783,37 @@ impl GlobalController {
     /// visibility within it. Floored at one tick so a window always
     /// covers its opening timestamp.
     fn sync_window(&self, trace: &[RequestSpec]) -> SimTime {
+        self.sync_window_for(self.min_kv_bytes(trace), None)
+            .unwrap_or(SimTime(1))
+            .max(SimTime(1))
+    }
+
+    /// Smallest KV handoff payload the trace can produce, bytes.
+    fn min_kv_bytes(&self, trace: &[RequestSpec]) -> f64 {
         let min_input = trace.iter().map(|t| t.input_len).min().unwrap_or(1).max(1);
-        let min_bytes = min_input as f64 * self.ctx.kv_bytes_per_token as f64;
+        min_input as f64 * self.ctx.kv_bytes_per_token as f64
+    }
+
+    /// The conservative window under one fabric state: minimum over
+    /// *live* kv edges of the (degraded) lower-bound handoff latency.
+    /// Dead edges are excluded — the dispatcher never sends a transfer
+    /// onto a down path, so they cannot constrain the window. `None`
+    /// when no live edge exists (no kv edges at all, or every path is
+    /// down in this epoch — nothing dispatches, so any window is
+    /// conservative); `state == None` prices the healthy fabric.
+    fn sync_window_for(&self, min_bytes: f64, state: Option<&FabricState>) -> Option<SimTime> {
         let spec = self.fabric.spec();
         let mut delta: Option<SimTime> = None;
         for (src, dsts) in self.ctx.kv_out.iter().enumerate() {
             for &d in dsts {
-                let path = spec.path(self.ctx.stage_locs[src], self.ctx.stage_locs[d]);
+                let (sl, dl) = (self.ctx.stage_locs[src], self.ctx.stage_locs[d]);
+                let path = match state {
+                    Some(fs) => match fs.degraded_path(spec, sl, dl) {
+                        Some(p) => p,
+                        None => continue,
+                    },
+                    None => spec.path(sl, dl),
+                };
                 let edge = SimTime::from_secs_f64(min_bytes / path.bandwidth)
                     + SimTime::from_secs_f64(path.alpha);
                 delta = Some(match delta {
@@ -746,7 +822,7 @@ impl GlobalController {
                 });
             }
         }
-        delta.unwrap_or(SimTime(1)).max(SimTime(1))
+        delta
     }
 
     /// Execute an explicit request trace (trace replay) to completion.
@@ -754,6 +830,7 @@ impl GlobalController {
         let host_start = std::time::Instant::now();
         let trace_len = trace.len() as u64;
         let delta = self.sync_window(&trace);
+        let min_bytes = self.min_kv_bytes(&trace);
         let last_arrival_s =
             trace.iter().map(|t| t.arrival.as_secs_f64()).fold(0.0f64, f64::max);
         {
@@ -776,6 +853,7 @@ impl GlobalController {
                         last_token: SimTime::ZERO,
                         retries: 0,
                         affected: false,
+                        link_affected: false,
                     },
                 );
                 s0.queue.schedule_at(arrival, Ev::Arrival(rid));
@@ -786,17 +864,47 @@ impl GlobalController {
         // thread count — and pre-schedule every transition into the
         // queue of the shard that owns its stage. Runs without
         // --faults/--autoscale build no plan and schedule nothing.
+        let (mut link_fault_n, mut link_recovery_n) = (0u64, 0u64);
         if self.ctx.dyn_on {
             self.ctx.recover_delay =
                 SimTime::from_secs_f64(dynamics::RECOVER_BACKOFF_S).max(delta);
             let plan = dynamics::build_plan(
                 self.ctx.cfg.faults.as_ref(),
+                self.ctx.cfg.link_faults.as_ref(),
                 self.ctx.cfg.autoscale.as_ref(),
                 &self.ctx.init_replicas,
                 self.ctx.cfg.seed,
                 last_arrival_s + dynamics::PLAN_SLACK_S,
             );
             self.ctx.revive_after = plan.revive_after.clone();
+            // fabric epochs: re-derive the conservative window per
+            // epoch from its degraded path model. An epoch with no
+            // live kv edge dispatches nothing, so the healthy Δ
+            // stands in (any value is conservative there).
+            if self.ctx.link_on {
+                let deltas: Vec<SimTime> = plan
+                    .epochs
+                    .iter()
+                    .map(|ep| {
+                        self.sync_window_for(min_bytes, Some(&ep.state))
+                            .unwrap_or(delta)
+                            .max(SimTime(1))
+                    })
+                    .collect();
+                // a cross-shard requeue must land in a future window
+                // under the *widest* epoch's Δ
+                self.ctx.recover_delay =
+                    deltas.iter().copied().fold(self.ctx.recover_delay, SimTime::max);
+                self.ctx.epoch_delta = deltas;
+                self.ctx.epochs = plan.epochs.clone();
+                for e in &plan.link_events {
+                    if e.health.healthy() {
+                        link_recovery_n += 1;
+                    } else {
+                        link_fault_n += 1;
+                    }
+                }
+            }
             for f in &plan.faults {
                 let (si, li) = self.ctx.stage_shard[f.stage];
                 self.shards[si]
@@ -858,6 +966,15 @@ impl GlobalController {
                     }
                 }
             }
+        }
+        // link-fault meters that are pure functions of the plan:
+        // stamped once on the merged collector, identical for any
+        // thread count
+        if link_fault_n > 0 || link_recovery_n > 0 {
+            metrics.link_faults = link_fault_n;
+            metrics.link_recoveries = link_recovery_n;
+            metrics.link_degraded_s =
+                dynamics::degraded_seconds(&ctx.epochs, horizon.as_secs_f64());
         }
         let finished = metrics.completed_requests + metrics.rejected_requests;
         if finished < trace_len {
@@ -923,7 +1040,18 @@ impl GlobalController {
         // single-shard graphs have no KV destinations, so the ledger
         // stays all-zero (frees are always live here)
         let future_frees = vec![0u64; ctx.free_slots];
-        while let Some(ev) = shard.queue.pop() {
+        while let Some(t) = shard.queue.peek_time() {
+            // fabric epochs: install the state covering this event's
+            // time before handling it (single-shard graphs have no kv
+            // handoffs, so this only moves EP trunk pricing)
+            if ctx.link_on {
+                let ei = dynamics::epoch_index(&ctx.epochs, t);
+                if ei != shard.cur_epoch {
+                    fabric.set_state(ctx.epochs[ei].state.clone());
+                    shard.apply_epoch(ctx, ei);
+                }
+            }
+            let ev = shard.queue.pop().expect("peeked");
             shard.handle(ctx, ev.kind);
             if shard.commits.is_empty() {
                 continue;
@@ -978,17 +1106,27 @@ impl GlobalController {
         let barrier_a = Barrier::new(nthreads);
         let barrier_b = Barrier::new(nthreads);
         let t_end_bits = AtomicU64::new(0);
+        let epoch_bits = AtomicUsize::new(0);
         let done = AtomicBool::new(false);
         let panicked = AtomicBool::new(false);
         let next_shard = AtomicUsize::new(0);
         // one parallel-phase turn: pull shard indices until none remain
         let advance_all = |t_end: SimTime| {
-            let res = catch_unwind(AssertUnwindSafe(|| loop {
-                let i = next_shard.fetch_add(1, Ordering::Relaxed);
-                if i >= n_shards {
-                    break;
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                let ei = epoch_bits.load(Ordering::Acquire);
+                loop {
+                    let i = next_shard.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_shards {
+                        break;
+                    }
+                    let mut sh = cells[i].lock().expect("shard lock");
+                    if ctx.link_on {
+                        // windows never straddle an epoch boundary, so
+                        // one state covers the whole parallel phase
+                        sh.apply_epoch(ctx, ei);
+                    }
+                    sh.advance(ctx, t_end);
                 }
-                cells[i].lock().expect("shard lock").advance(ctx, t_end);
             }));
             if res.is_err() {
                 panicked.store(true, Ordering::Release);
@@ -1005,6 +1143,7 @@ impl GlobalController {
                     barrier_b.wait();
                 });
             }
+            let mut cur_epoch = usize::MAX;
             loop {
                 // workers are parked at barrier_a here: the main thread
                 // owns every shard (uncontended locks)
@@ -1012,8 +1151,60 @@ impl GlobalController {
                     .iter()
                     .filter_map(|c| c.lock().expect("shard lock").queue.peek_time())
                     .min();
-                let Some(t) = t else { break };
-                let t_end = t + delta;
+                let t = match t {
+                    Some(t) => t,
+                    // every queue is idle but transfers are held for a
+                    // scheduled path recovery (holds are only taken when
+                    // a future epoch revives a path): step to the next
+                    // epoch boundary so its re-dispatch can run — epochs
+                    // are not queue events, so nothing else would wake
+                    // the loop
+                    None if ctx.link_on && !pending.is_empty() => {
+                        let ni = if cur_epoch == usize::MAX { 0 } else { cur_epoch + 1 };
+                        match ctx.epochs.get(ni) {
+                            Some(ep) => ep.start,
+                            None => break,
+                        }
+                    }
+                    None => break,
+                };
+                let t_end = if ctx.link_on {
+                    // fabric epochs: the window runs at this epoch's Δ
+                    // and is clamped to the next epoch boundary, so no
+                    // window straddles a capacity change
+                    let ei = dynamics::epoch_index(&ctx.epochs, t);
+                    if ei != cur_epoch {
+                        cur_epoch = ei;
+                        fabric.set_state(ctx.epochs[ei].state.clone());
+                        epoch_bits.store(ei, Ordering::Release);
+                        // a recovered path fires no Trigger of its own:
+                        // re-run dispatch for transfers stalled on a
+                        // path that just came back (all shards are
+                        // parked, frees are live — ledger stays zero)
+                        if !pending.is_empty() {
+                            let mut guards: Vec<_> = cells
+                                .iter()
+                                .map(|c| c.lock().expect("shard lock"))
+                                .collect();
+                            future_frees.fill(0);
+                            Self::dispatch_transfers(
+                                &mut guards,
+                                ctx,
+                                fabric,
+                                pending,
+                                future_frees,
+                                t,
+                            );
+                        }
+                    }
+                    let mut te = t + ctx.epoch_delta[ei];
+                    if let Some(next) = ctx.epochs.get(ei + 1) {
+                        te = te.min(next.start);
+                    }
+                    te
+                } else {
+                    t + delta
+                };
                 t_end_bits.store(t_end.0, Ordering::Release);
                 next_shard.store(0, Ordering::Release);
                 barrier_a.wait();
@@ -1119,7 +1310,7 @@ impl GlobalController {
         let mut held: VecDeque<PendingXfer> = VecDeque::new();
         // destinations an earlier held request may still claim
         let mut blocked: Vec<bool> = vec![false; ctx.stage_shard.len()];
-        while let Some(px) = pending.pop_front() {
+        while let Some(mut px) = pending.pop_front() {
             let (input_len, output_len) = (px.req.spec.input_len, px.req.spec.output_len);
             let blocks = blocks_for_tokens(input_len + output_len);
             let dsts = &ctx.kv_out[px.src];
@@ -1140,7 +1331,16 @@ impl GlobalController {
             // choose the (stage, replica) with the most free memory —
             // as of `now`, not end-of-window — that fits
             let mut best: Option<(usize, usize, u64)> = None;
+            let mut live_dsts = 0usize;
             for &d in dsts {
+                // link-fault routing: a dead fabric path takes no new
+                // transfers — they reroute, stall, or reject below
+                if ctx.link_on
+                    && !fabric.state().path_up(ctx.stage_locs[px.src], ctx.stage_locs[d])
+                {
+                    continue;
+                }
+                live_dsts += 1;
                 let (ds, dl) = ctx.stage_shard[d];
                 for (r, rep) in shards[ds].stages[dl].cw.replicas.iter().enumerate() {
                     // health-aware fan-out: down/draining replicas
@@ -1160,6 +1360,32 @@ impl GlobalController {
                 }
             }
             let Some((d, r, _)) = best else {
+                // every candidate path is down: hold until a future
+                // epoch revives one (re-dispatched at that epoch's
+                // boundary — no memory Trigger would come), or reject
+                // as backpressure when the partition never heals
+                if ctx.link_on && live_dsts == 0 && !dsts.is_empty() {
+                    let src_loc = ctx.stage_locs[px.src];
+                    let revives = dsts.iter().any(|&d| {
+                        ctx.epochs.iter().any(|ep| {
+                            ep.start > now && ep.state.path_up(src_loc, ctx.stage_locs[d])
+                        })
+                    });
+                    if !revives {
+                        shards[0].metrics.rejected_requests += 1;
+                        shards[0].metrics.fault_rejected += 1;
+                        continue;
+                    }
+                    if !px.req.link_affected {
+                        px.req.link_affected = true;
+                        shards[0].metrics.link_stalled_transfers += 1;
+                    }
+                    for &dd in dsts {
+                        blocked[dd] = true;
+                    }
+                    held.push_back(px);
+                    continue;
+                }
                 // a hold is only safe when a future Trigger can come:
                 // a pipeline whose every pool is dead with no recovery
                 // or scale-up in sight would stall the run — reject
@@ -1183,6 +1409,11 @@ impl GlobalController {
                 held.push_back(px);
                 continue;
             };
+            if ctx.link_on && live_dsts < dsts.len() {
+                // dispatched around at least one dead path
+                shards[0].metrics.link_rerouted_transfers += 1;
+                px.req.link_affected = true;
+            }
             let (ds, dl) = ctx.stage_shard[d];
             shards[ds].stages[dl].cw.replicas[r]
                 .mem
@@ -1243,6 +1474,21 @@ impl Shard {
             }
             let ev = self.queue.pop().expect("peeked");
             self.handle(ctx, ev.kind);
+        }
+    }
+
+    /// Install fabric epoch `ei`'s state into this shard's cost
+    /// models: the EP cross-cluster trunk's health feeds MoE
+    /// dispatch/combine and expert-migration pricing from here on.
+    /// No-op when the epoch is unchanged.
+    fn apply_epoch(&mut self, ctx: &RunCtx, ei: usize) {
+        if ei == self.cur_epoch {
+            return;
+        }
+        self.cur_epoch = ei;
+        let trunk = ctx.epochs[ei].state.ep_trunk_health();
+        for st in &self.stages {
+            st.ep_cost().set_ep_trunk_health(trunk);
         }
     }
 
@@ -1441,8 +1687,8 @@ impl Shard {
                     (Some(ft), d) if d > 1 => (now - ft).as_secs_f64() / (d - 1) as f64,
                     _ => 0.0,
                 };
-                let (class, output_len, affected) =
-                    (rq.spec.class, rq.spec.output_len, rq.affected);
+                let (class, output_len, affected, link_affected) =
+                    (rq.spec.class, rq.spec.output_len, rq.affected, rq.link_affected);
                 self.metrics.record_completion(
                     class,
                     ttft,
@@ -1456,6 +1702,12 @@ impl Shard {
                     // still make its objectives?
                     let ok = self.metrics.slo.met(ttft, tbt_mean, e2e);
                     self.metrics.record_affected_completion(ok);
+                }
+                if link_affected {
+                    // per-link-fault SLO damage: did the rerouted or
+                    // stalled request still make its objectives?
+                    let ok = self.metrics.slo.met(ttft, tbt_mean, e2e);
+                    self.metrics.record_link_affected_completion(ok);
                 }
                 let freed = self.stages[s].cw.replicas[r].mem.free_request(rid);
                 // KV-destination frees feed the barrier free-ledger so
@@ -1534,13 +1786,17 @@ impl Shard {
             (tracker.draws(), tracker.snapshot(), per_expert)
         };
         self.stages[s].mig_last_draws = draws;
+        // the current fabric epoch's trunk health: expert weight moves
+        // crossing clusters pay the degraded WAN trunk (HEALTHY — and
+        // bit-identical to the undegraded charge — without link faults)
+        let trunk = self.stages[s].ep_cost().ep_trunk_health();
         // plan + adopt phase
         let (phase, pre, post) = {
             let cost = self.stages[s].ep_cost_mut();
             let Some(eps) = cost.ep.as_mut() else { return };
             let plan = moe::plan_migration(&eps.placement, placement_policy, &est, threshold);
             let Some(plan) = plan else { return };
-            let phase = moe::charge_migration(eps, &plan, expert_bytes);
+            let phase = moe::charge_migration_degraded(eps, &plan, expert_bytes, trunk);
             let moe::MigrationPlan { placement, pre_imbalance, post_imbalance, .. } = plan;
             eps.placement = placement;
             (phase, pre_imbalance, post_imbalance)
@@ -1811,14 +2067,36 @@ impl Shard {
                 waiting += rep.waiting.len();
             }
         }
-        let q = waiting as f64 / alive.max(1) as f64;
-        let signal = match a.policy {
-            dynamics::ScalePolicy::Reactive => q,
-            // first-order trend extrapolation: act on where the queue
-            // will be next tick, not where it is
-            dynamics::ScalePolicy::Predictive => q + (q - self.stages[s].q_prev),
+        let raw = match a.signal {
+            dynamics::ScaleSignal::Queue => waiting as f64 / alive.max(1) as f64,
+            // SLO-attainment signal: fraction of completions since the
+            // last tick that missed a set SLO, from this shard's
+            // streaming counters. No completions in the window: a
+            // backed-up pool reads full miss, an idle one reads clean.
+            dynamics::ScaleSignal::Slo => {
+                let (done, ok) = (self.metrics.completed_requests, self.metrics.slo_ok);
+                let st = &mut self.stages[s];
+                let (dc, dok) = (done - st.prev_completed, ok - st.prev_slo_ok);
+                st.prev_completed = done;
+                st.prev_slo_ok = ok;
+                if dc == 0 {
+                    if waiting > 0 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                } else {
+                    (dc - dok) as f64 / dc as f64
+                }
+            }
         };
-        self.stages[s].q_prev = q;
+        let signal = match a.policy {
+            dynamics::ScalePolicy::Reactive => raw,
+            // first-order trend extrapolation: act on where the signal
+            // will be next tick, not where it is
+            dynamics::ScalePolicy::Predictive => raw + (raw - self.stages[s].q_prev),
+        };
+        self.stages[s].q_prev = raw;
         // emergency replacement: a pool at zero live capacity reads a
         // zero queue signal (nothing can enqueue on it), so it would
         // never grow and held transfers would stall the run forever

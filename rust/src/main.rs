@@ -91,15 +91,27 @@ OPTIONS (simulate / sweep / sweep-pd / baseline):
                                    list:down@T:S[.R];up@T:S[.R];... or
                                    file:<sched.json> (explicit events; no .R
                                    targets the whole pool)
+  --link-faults <SPEC>             link/fabric fault schedule, sweepable:
+                                   mttf:MTTF[:mttr:MTTR][:frac:F] (seeded
+                                   WAN-trunk outages, or brownouts to F of
+                                   nominal bandwidth), list:EV;EV;... or
+                                   file:<sched.json> with EV = down@T:TGT |
+                                   degrade@T:TGT:FRAC[:ALPHA] | up@T:TGT and
+                                   TGT = nvlink|ib|wan|trunk|C.N-C.N
   --autoscale <POLICY:MIN:MAX>     autoscale decode-capable pools between MIN
                                    and MAX replicas; POLICY is reactive or
                                    predictive (queue-trend extrapolation)
+  --scale-signal <SIG>             autoscale signal: queue (depth per replica,
+                                   default) or slo (windowed missed-SLO
+                                   fraction; needs --slo-* thresholds)
   --scale-interval <S>             autoscaler control-loop period (default 10)
   --scale-delay <S>                replica provisioning delay (default 30)
   --scale-warmup <S>               new-replica first-iteration warmup stall
                                    (default 2)
-  --scale-up <Q> --scale-down <Q>  queue-depth-per-replica thresholds
-                                   (defaults 4 / 0.5)
+  --scale-up <Q> --scale-down <Q>  scale thresholds in signal units: queue
+                                   depth per replica (defaults 4 / 0.5) or
+                                   missed-SLO fraction under --scale-signal
+                                   slo (defaults 0.05 / 0.005)
   --seed <S>                       RNG seed (default 1)
   --json                           emit the report as JSON
 

@@ -301,6 +301,26 @@ pub struct MetricsCollector {
     pub scale_up_events: u64,
     /// Replicas drained and retired by the autoscaler.
     pub scale_down_events: u64,
+    /// Link/fabric fault transitions applied (outages and partial
+    /// degradations; 0 without `--link-faults`). Plan-derived —
+    /// stamped once on the merged collector, never per shard.
+    pub link_faults: u64,
+    /// Link/fabric recoveries applied (transitions back to healthy).
+    pub link_recoveries: u64,
+    /// Seconds each fabric tier (NVLink / IB / WAN) spent degraded or
+    /// down over the run horizon, from the fabric epochs.
+    pub link_degraded_s: [f64; 3],
+    /// KV transfers dispatched around at least one dead fabric path.
+    pub link_rerouted_transfers: u64,
+    /// KV transfers held at least once because every candidate path
+    /// was down (released by a later epoch's recovery).
+    pub link_stalled_transfers: u64,
+    /// Link-affected requests (rerouted or stalled en route) that
+    /// eventually completed.
+    pub link_affected_completed: u64,
+    /// Link-affected completions that missed a set SLO — the per-link-
+    /// fault SLO damage meter.
+    pub link_affected_slo_miss: u64,
 }
 
 impl MetricsCollector {
@@ -487,6 +507,23 @@ impl MetricsCollector {
         }
     }
 
+    /// Whether link/fabric faults engaged this run. A separate gate
+    /// from [`MetricsCollector::dynamics_active`] so `--faults`-only
+    /// runs keep their exact pre-link-fault report shape.
+    pub fn link_active(&self) -> bool {
+        self.link_faults > 0 || self.link_recoveries > 0
+    }
+
+    /// Account one link-affected completion (the request's KV transfer
+    /// was rerouted around a dead path or stalled on one) and whether
+    /// it missed a set SLO — called alongside `record_completion`.
+    pub fn record_link_affected_completion(&mut self, slo_ok: bool) {
+        self.link_affected_completed += 1;
+        if self.slo.any() && !slo_ok {
+            self.link_affected_slo_miss += 1;
+        }
+    }
+
     /// Fold a shard-local collector into this one. Digests merge
     /// through [`Digest::merge`], the time series through
     /// [`TimeSeries::merge`], raw sample vectors concatenate, and all
@@ -548,6 +585,15 @@ impl MetricsCollector {
         self.scale_ticks += other.scale_ticks;
         self.scale_up_events += other.scale_up_events;
         self.scale_down_events += other.scale_down_events;
+        self.link_faults += other.link_faults;
+        self.link_recoveries += other.link_recoveries;
+        for (a, b) in self.link_degraded_s.iter_mut().zip(&other.link_degraded_s) {
+            *a += b;
+        }
+        self.link_rerouted_transfers += other.link_rerouted_transfers;
+        self.link_stalled_transfers += other.link_stalled_transfers;
+        self.link_affected_completed += other.link_affected_completed;
+        self.link_affected_slo_miss += other.link_affected_slo_miss;
     }
 }
 
@@ -839,6 +885,25 @@ impl SimReport {
                 ));
             }
         }
+        if m.link_active() {
+            s.push_str(&format!(
+                "\nlink faults: {} ({} recovered) | degraded s nvlink/ib/wan \
+                 {:.1}/{:.1}/{:.1}",
+                m.link_faults,
+                m.link_recoveries,
+                m.link_degraded_s[0],
+                m.link_degraded_s[1],
+                m.link_degraded_s[2],
+            ));
+            s.push_str(&format!(
+                "\nlink damage: {} transfers rerouted, {} stalled | {} affected \
+                 completed ({} SLO misses)",
+                m.link_rerouted_transfers,
+                m.link_stalled_transfers,
+                m.link_affected_completed,
+                m.link_affected_slo_miss,
+            ));
+        }
         for st in &self.stages {
             s.push_str(&format!(
                 "\nstage {} [{}] {}x{} on {}: {} iters, {} tokens, busy {:.1}%, peak mem {:.1}%",
@@ -952,6 +1017,32 @@ impl SimReport {
             fields.push(("scale_ticks", Json::Num(m.scale_ticks as f64)));
             fields.push(("scale_up_events", Json::Num(m.scale_up_events as f64)));
             fields.push(("scale_down_events", Json::Num(m.scale_down_events as f64)));
+        }
+        if m.link_active() {
+            // separate gate: replica-fault-only runs bit-reproduce
+            // their pre-link-fault reports
+            fields.push(("link_faults", Json::Num(m.link_faults as f64)));
+            fields.push(("link_recoveries", Json::Num(m.link_recoveries as f64)));
+            fields.push((
+                "link_degraded_s",
+                Json::Arr(m.link_degraded_s.iter().map(|&v| Json::Num(v)).collect()),
+            ));
+            fields.push((
+                "link_rerouted_transfers",
+                Json::Num(m.link_rerouted_transfers as f64),
+            ));
+            fields.push((
+                "link_stalled_transfers",
+                Json::Num(m.link_stalled_transfers as f64),
+            ));
+            fields.push((
+                "link_affected_completed",
+                Json::Num(m.link_affected_completed as f64),
+            ));
+            fields.push((
+                "link_affected_slo_miss",
+                Json::Num(m.link_affected_slo_miss as f64),
+            ));
         }
         if m.per_class.len() > 1 {
             fields.push((

@@ -261,12 +261,26 @@ pub fn plan_migration(
 /// accounting; `A2aPhase::secs` is the stall the coordinator charges
 /// the migrating stage.
 pub fn charge_migration(spec: &EpSpec, plan: &MigrationPlan, expert_bytes: f64) -> A2aPhase {
+    charge_migration_degraded(spec, plan, expert_bytes, crate::network::LinkHealth::HEALTHY)
+}
+
+/// [`charge_migration`] through a degraded cross-cluster trunk (fabric
+/// epochs): weight moves launched during a brownout pay the slowed
+/// trunk — migrating *away* from a browned-out cluster is itself more
+/// expensive, which is the tension the link-fault scenarios probe.
+/// Healthy `trunk` is bit-identical to [`charge_migration`].
+pub fn charge_migration_degraded(
+    spec: &EpSpec,
+    plan: &MigrationPlan,
+    expert_bytes: f64,
+    trunk: crate::network::LinkHealth,
+) -> A2aPhase {
     let n = spec.n_ranks() as usize;
     let mut matrix = vec![0.0f64; n * n];
     for m in &plan.moves {
         matrix[m.from as usize * n + m.to as usize] += expert_bytes;
     }
-    spec.a2a_time(&matrix)
+    spec.a2a_time_degraded(trunk, &matrix)
 }
 
 #[cfg(test)]

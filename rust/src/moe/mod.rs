@@ -22,7 +22,8 @@ pub mod migration;
 pub mod placement;
 
 pub use migration::{
-    charge_migration, plan_migration, rebalanced_placement, ExpertMove, LoadEstimator,
+    charge_migration, charge_migration_degraded, plan_migration, rebalanced_placement,
+    ExpertMove, LoadEstimator,
     MigrationPlan, MigrationPolicy,
 };
 pub use placement::{

@@ -35,7 +35,7 @@
 
 use crate::core::SimTime;
 use crate::hardware::LinkSpec;
-use crate::network::{Fabric, HierSpec, Link, NetLoc, Tier};
+use crate::network::{Fabric, HierSpec, Link, LinkHealth, NetLoc, Tier};
 
 /// How experts are assigned to EP ranks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -428,6 +428,13 @@ pub struct EpNetwork {
     /// and links lazily clear themselves on first touch, making reset
     /// O(1) instead of O(links) per pricing draw.
     gen: u64,
+    /// Effective health of the cross-cluster trunk for this pricing
+    /// draw (fabric epochs: piecewise-constant per window, set by the
+    /// engine before pricing). Healthy is exactly inert: `bw * 1.0`
+    /// and `alpha + 0.0` are bit-exact no-ops. A dead trunk floors
+    /// bandwidth at [`LinkHealth::OUTAGE_EP_BW_FRAC`] — MoE tokens
+    /// routed to a remote expert can't re-route mid-layer, they stall.
+    trunk_health: LinkHealth,
 }
 
 impl EpNetwork {
@@ -454,7 +461,21 @@ impl EpNetwork {
             nic_ingress: (0..n).map(|_| Link::new(nic_in)).collect(),
             trunks: Fabric::new(fabric.hier.wan),
             gen: 0,
+            trunk_health: LinkHealth::HEALTHY,
         }
+    }
+
+    /// Set the effective cross-cluster trunk health for subsequent
+    /// pricing draws. Survives [`EpNetwork::reset`] (reset clears
+    /// occupancy, not fabric state); the engine re-applies it at every
+    /// fabric-epoch boundary.
+    pub fn set_trunk_health(&mut self, h: LinkHealth) {
+        self.trunk_health = h;
+    }
+
+    /// Current effective trunk health.
+    pub fn trunk_health(&self) -> LinkHealth {
+        self.trunk_health
     }
 
     /// EP ranks this network connects (count).
@@ -541,12 +562,21 @@ impl EpNetwork {
                             .earliest_start(now)
                             .max(self.nic_ingress[d].earliest_start(now))
                             .max(trunk);
+                        // the trunk-health overlay only narrows the WAN
+                        // leg: a brownout scales its bandwidth, a dead
+                        // trunk floors it (tokens can't re-route
+                        // mid-layer), and added latency rides the alpha
+                        let th = self.trunk_health;
                         let bw = self.nic_egress[s]
                             .spec
                             .bandwidth
                             .min(self.nic_ingress[d].spec.bandwidth)
-                            .min(hier.wan.bandwidth);
-                        (start, hier.inter_node.alpha + hier.wan.alpha, bw)
+                            .min(hier.wan.bandwidth * th.ep_bw_frac());
+                        (
+                            start,
+                            hier.inter_node.alpha + hier.wan.alpha + th.alpha_add_s,
+                            bw,
+                        )
                     }
                 };
                 let done = start + SimTime::from_secs_f64(alpha + b / bw);
@@ -612,6 +642,16 @@ impl EpSpec {
     /// [`EpNetwork::reset`] + [`EpNetwork::all_to_all`] instead.
     pub fn a2a_time(&self, matrix: &[f64]) -> A2aPhase {
         self.make_network().all_to_all(SimTime::ZERO, matrix).1
+    }
+
+    /// [`EpSpec::a2a_time`] through a degraded cross-cluster trunk
+    /// (fabric epochs): migration weight moves priced during a
+    /// brownout pay the slowed trunk. Healthy `trunk` is bit-identical
+    /// to [`EpSpec::a2a_time`].
+    pub fn a2a_time_degraded(&self, trunk: LinkHealth, matrix: &[f64]) -> A2aPhase {
+        let mut net = self.make_network();
+        net.set_trunk_health(trunk);
+        net.all_to_all(SimTime::ZERO, matrix).1
     }
 }
 
@@ -783,6 +823,51 @@ mod tests {
         assert_eq!(t1.cross_bytes, 0.0);
         assert!(t2.cross_bytes > 0.0);
         assert!(t2.secs > t1.secs, "{} vs {}", t2.secs, t1.secs);
+    }
+
+    #[test]
+    fn degraded_trunk_slows_only_cross_cluster() {
+        let loads = [32u32; 8];
+        let two = ExpertPlacement::build(
+            PlacementPolicy::Contiguous,
+            8,
+            EpTopology::new(4, 2),
+            None,
+        );
+        let e2 = EpSpec::flat(two, spec(), slow());
+        let mat = e2.placement.dispatch_matrix(&loads, 2048.0);
+        let healthy = e2.a2a_time(&mat);
+        // healthy overlay is bit-identical to no overlay
+        let inert = e2.a2a_time_degraded(LinkHealth::HEALTHY, &mat);
+        assert_eq!(healthy.secs.to_bits(), inert.secs.to_bits());
+        // brownout: same bytes, longer phase
+        let brown = e2.a2a_time_degraded(
+            LinkHealth { up: true, bw_frac: 0.25, alpha_add_s: 0.0 },
+            &mat,
+        );
+        assert_eq!(brown.cross_bytes, healthy.cross_bytes);
+        assert!(brown.secs > healthy.secs, "{} vs {}", brown.secs, healthy.secs);
+        // dead trunk: floored, far slower still
+        let dead = e2.a2a_time_degraded(
+            LinkHealth { up: false, bw_frac: 1.0, alpha_add_s: 0.0 },
+            &mat,
+        );
+        assert!(dead.secs > brown.secs, "{} vs {}", dead.secs, brown.secs);
+        // intra-cluster-only traffic is untouched by trunk health
+        let one = ExpertPlacement::build(
+            PlacementPolicy::Contiguous,
+            8,
+            EpTopology::new(4, 1),
+            None,
+        );
+        let e1 = EpSpec::flat(one, spec(), slow());
+        let m1 = e1.placement.dispatch_matrix(&loads, 2048.0);
+        let a = e1.a2a_time(&m1);
+        let b = e1.a2a_time_degraded(
+            LinkHealth { up: true, bw_frac: 0.1, alpha_add_s: 1.0 },
+            &m1,
+        );
+        assert_eq!(a.secs.to_bits(), b.secs.to_bits());
     }
 
     #[test]

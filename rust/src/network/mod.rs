@@ -17,6 +17,15 @@
 //! A transfer's tier is decided by the endpoints' [`NetLoc`]s (cluster +
 //! node coordinates); a cross-cluster message pays both its NIC alphas
 //! and the trunk, at the bottleneck bandwidth of the path.
+//!
+//! Links can be *degraded*: a [`FabricState`] overlays per-tier,
+//! per-endpoint-pair, and EP-trunk [`LinkHealth`] (alive flag,
+//! effective-bandwidth fraction, added latency) on the healthy specs.
+//! The fault-injection layer (`cluster::dynamics`) materializes a
+//! piecewise-constant schedule of these states — *fabric epochs* — and
+//! the engine prices every transfer through the state of the epoch it
+//! launches in. A healthy state prices bit-identically to no state at
+//! all.
 #![warn(missing_docs)]
 
 use crate::core::SimTime;
@@ -49,9 +58,20 @@ impl Link {
     /// returns the completion time. The link is occupied for the wire
     /// time; alpha (software latency) does not occupy the link.
     pub fn transfer(&mut self, now: SimTime, bytes: f64) -> SimTime {
+        let spec = self.spec;
+        self.transfer_as(now, bytes, spec)
+    }
+
+    /// [`Link::transfer`] priced by an *effective* spec instead of the
+    /// link's own: FIFO occupancy still serializes on this link, but
+    /// wire time and alpha come from `eff`. The degraded-fabric path
+    /// ([`HierFabric::transfer`] under a non-healthy [`FabricState`])
+    /// uses this so a brownout slows the queue without rewriting the
+    /// link's healthy spec.
+    pub fn transfer_as(&mut self, now: SimTime, bytes: f64, eff: LinkSpec) -> SimTime {
         let start = now.max(self.busy_until);
-        let wire = SimTime::from_secs_f64(bytes / self.spec.bandwidth);
-        let alpha = SimTime::from_secs_f64(self.spec.alpha);
+        let wire = SimTime::from_secs_f64(bytes / eff.bandwidth);
+        let alpha = SimTime::from_secs_f64(eff.alpha);
         self.busy_until = start + wire;
         self.bytes_carried += bytes;
         self.transfers += 1;
@@ -168,6 +188,18 @@ pub enum Tier {
     CrossCluster,
 }
 
+impl Tier {
+    /// Dense index of the tier (0 = intra-node, 1 = inter-node,
+    /// 2 = cross-cluster) — the layout of [`FabricState::tier`].
+    pub fn index(self) -> usize {
+        match self {
+            Tier::IntraNode => 0,
+            Tier::InterNode => 1,
+            Tier::CrossCluster => 2,
+        }
+    }
+}
+
 /// Location of an endpoint in the hierarchy: which cluster and which
 /// node within that cluster.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
@@ -249,19 +281,198 @@ impl HierSpec {
     }
 }
 
+/// Health of one link class or endpoint pair: alive flag plus partial
+/// degradation (effective-bandwidth fraction, added latency). The
+/// default is fully healthy, and a healthy overlay prices
+/// bit-identically to no overlay (`bw * 1.0`, `alpha + 0.0` are exact).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkHealth {
+    /// Whether the link carries traffic at all. A dead link is
+    /// *unusable*, not merely slow: callers must check
+    /// [`FabricState::path_up`] before dispatching onto it.
+    pub up: bool,
+    /// Fraction of nominal bandwidth available, in `(0, 1]`.
+    pub bw_frac: f64,
+    /// Latency added to the link's alpha, seconds (`>= 0`).
+    pub alpha_add_s: f64,
+}
+
+impl Default for LinkHealth {
+    fn default() -> Self {
+        Self::HEALTHY
+    }
+}
+
+impl LinkHealth {
+    /// Fully healthy: up, full bandwidth, no added latency.
+    pub const HEALTHY: LinkHealth = LinkHealth { up: true, bw_frac: 1.0, alpha_add_s: 0.0 };
+
+    /// Bandwidth fraction the EP all-to-all prices a *dead* trunk at:
+    /// the token stream cannot be re-routed or rejected mid-layer the
+    /// way a KV transfer can, so a full partition is modeled as
+    /// cross-cluster dispatch collapsing to a control-plane trickle —
+    /// effectively stalled, which is exactly the imbalance pressure the
+    /// migration loop reacts to by pulling experts local.
+    pub const OUTAGE_EP_BW_FRAC: f64 = 1e-3;
+
+    /// Whether this overlay changes nothing.
+    pub fn healthy(&self) -> bool {
+        self.up && self.bw_frac >= 1.0 && self.alpha_add_s <= 0.0
+    }
+
+    /// The degraded alpha-beta of a healthy `spec` under this overlay.
+    /// Only meaningful for live links (callers gate on [`LinkHealth::up`]).
+    pub fn apply(&self, spec: LinkSpec) -> LinkSpec {
+        LinkSpec { bandwidth: spec.bandwidth * self.bw_frac, alpha: spec.alpha + self.alpha_add_s }
+    }
+
+    /// Composition of two overlays on the same path: fractions multiply,
+    /// added latencies sum, liveness ANDs.
+    pub fn combine(&self, other: LinkHealth) -> LinkHealth {
+        LinkHealth {
+            up: self.up && other.up,
+            bw_frac: self.bw_frac * other.bw_frac,
+            alpha_add_s: self.alpha_add_s + other.alpha_add_s,
+        }
+    }
+
+    /// Bandwidth fraction for EP all-to-all pricing, where a dead trunk
+    /// is floored at [`LinkHealth::OUTAGE_EP_BW_FRAC`] instead of
+    /// refusing traffic (see that constant).
+    pub fn ep_bw_frac(&self) -> f64 {
+        if self.up {
+            self.bw_frac
+        } else {
+            Self::OUTAGE_EP_BW_FRAC
+        }
+    }
+}
+
+/// One fabric epoch's complete link state: a per-tier overlay, optional
+/// per-endpoint-pair overlays (undirected — a cut fiber hits both
+/// directions), and an extra overlay on the EP cross-cluster trunk.
+/// The healthy default is inert by construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricState {
+    /// Per-tier health, indexed by [`Tier::index`].
+    pub tier: [LinkHealth; 3],
+    /// Undirected endpoint-pair overlays (kept normalized by
+    /// [`FabricState::set_pair`]); composed on top of the pair's tier.
+    pub pairs: Vec<((NetLoc, NetLoc), LinkHealth)>,
+    /// EP cross-cluster trunk overlay, composed on top of the WAN tier
+    /// for expert-parallel dispatch/combine pricing.
+    pub trunk: LinkHealth,
+}
+
+impl Default for FabricState {
+    fn default() -> Self {
+        FabricState { tier: [LinkHealth::HEALTHY; 3], pairs: Vec::new(), trunk: LinkHealth::HEALTHY }
+    }
+}
+
+impl FabricState {
+    /// Whether every overlay is inert.
+    pub fn is_healthy(&self) -> bool {
+        self.tier.iter().all(|h| h.healthy())
+            && self.trunk.healthy()
+            && self.pairs.iter().all(|(_, h)| h.healthy())
+    }
+
+    /// Normalized (undirected) key for an endpoint pair.
+    fn pair_key(a: NetLoc, b: NetLoc) -> (NetLoc, NetLoc) {
+        if (a.cluster, a.node) <= (b.cluster, b.node) {
+            (a, b)
+        } else {
+            (b, a)
+        }
+    }
+
+    /// Set (or replace) the overlay on the undirected pair `{a, b}`.
+    pub fn set_pair(&mut self, a: NetLoc, b: NetLoc, h: LinkHealth) {
+        let key = Self::pair_key(a, b);
+        match self.pairs.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, slot)) => *slot = h,
+            None => self.pairs.push((key, h)),
+        }
+    }
+
+    /// The overlay on the undirected pair `{a, b}` (healthy if unset).
+    pub fn pair_health(&self, a: NetLoc, b: NetLoc) -> LinkHealth {
+        let key = Self::pair_key(a, b);
+        self.pairs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|&(_, h)| h)
+            .unwrap_or(LinkHealth::HEALTHY)
+    }
+
+    /// Health of one tier's links.
+    pub fn tier_health(&self, t: Tier) -> LinkHealth {
+        self.tier[t.index()]
+    }
+
+    /// Effective trunk overlay for EP dispatch/combine: the WAN tier's
+    /// health composed with the trunk-specific overlay.
+    pub fn ep_trunk_health(&self) -> LinkHealth {
+        self.tier[Tier::CrossCluster.index()].combine(self.trunk)
+    }
+
+    /// Whether a transfer `src -> dst` can be dispatched at all in this
+    /// state (every tier on the path is up and the pair is not cut).
+    pub fn path_up(&self, src: NetLoc, dst: NetLoc) -> bool {
+        if !self.pair_health(src, dst).up {
+            return false;
+        }
+        match HierSpec::tier_of(src, dst) {
+            Tier::CrossCluster => {
+                self.tier[Tier::InterNode.index()].up && self.tier[Tier::CrossCluster.index()].up
+            }
+            t => self.tier[t.index()].up,
+        }
+    }
+
+    /// The degraded alpha-beta of the path `src -> dst` under this
+    /// state, or `None` when the path is dead. Mirrors
+    /// [`HierSpec::path`]: a cross-cluster message pays its (degraded)
+    /// NIC *and* the (degraded) trunk — bottleneck bandwidth, summed
+    /// alphas — with the pair overlay composed on top.
+    pub fn degraded_path(&self, spec: &HierSpec, src: NetLoc, dst: NetLoc) -> Option<LinkSpec> {
+        if !self.path_up(src, dst) {
+            return None;
+        }
+        let base = match HierSpec::tier_of(src, dst) {
+            Tier::IntraNode => self.tier[0].apply(spec.intra_node),
+            Tier::InterNode => self.tier[1].apply(spec.inter_node),
+            Tier::CrossCluster => {
+                let inter = self.tier[1].apply(spec.inter_node);
+                let wan = self.tier[2].apply(spec.wan);
+                LinkSpec {
+                    bandwidth: inter.bandwidth.min(wan.bandwidth),
+                    alpha: inter.alpha + wan.alpha,
+                }
+            }
+        };
+        Some(self.pair_health(src, dst).apply(base))
+    }
+}
+
 /// Contended hierarchical fabric for stage-to-stage flows (KV handoff,
 /// activation hops): one directed FIFO link per `(src, dst)` endpoint
-/// pair, with the spec chosen by the endpoints' tier.
+/// pair, with the spec chosen by the endpoints' tier. Carries the
+/// current [`FabricState`] (set per fabric epoch by the engine) and
+/// prices transfers through it.
 #[derive(Clone, Debug)]
 pub struct HierFabric {
     spec: HierSpec,
     links: std::collections::HashMap<(NetLoc, NetLoc), Link>,
+    state: FabricState,
 }
 
 impl HierFabric {
-    /// An idle hierarchical fabric over `spec`'s three link tiers.
+    /// An idle, fully healthy hierarchical fabric over `spec`'s three
+    /// link tiers.
     pub fn new(spec: HierSpec) -> Self {
-        HierFabric { spec, links: Default::default() }
+        HierFabric { spec, links: Default::default(), state: FabricState::default() }
     }
 
     /// The 3-tier link hierarchy this fabric charges by.
@@ -269,16 +480,37 @@ impl HierFabric {
         &self.spec
     }
 
+    /// The current degradation state (healthy unless the engine set an
+    /// epoch's state).
+    pub fn state(&self) -> &FabricState {
+        &self.state
+    }
+
+    /// Install the current fabric epoch's degradation state. Pricing of
+    /// subsequent transfers goes through it; in-flight occupancy is
+    /// untouched.
+    pub fn set_state(&mut self, state: FabricState) {
+        self.state = state;
+    }
+
     /// The directed FIFO link `src -> dst`, created idle on first use
-    /// with the spec of the endpoints' tier path.
+    /// with the *healthy* spec of the endpoints' tier path (degradation
+    /// is an overlay applied at transfer time, never baked into the
+    /// link).
     pub fn link_mut(&mut self, src: NetLoc, dst: NetLoc) -> &mut Link {
         let path = self.spec.path(src, dst);
         self.links.entry((src, dst)).or_insert_with(|| Link::new(path))
     }
 
-    /// Schedule a transfer src -> dst; returns the delivery time.
+    /// Schedule a transfer src -> dst priced through the current
+    /// degradation state; returns the delivery time. Panics on a dead
+    /// path — dispatchers check [`FabricState::path_up`] first.
     pub fn transfer(&mut self, now: SimTime, src: NetLoc, dst: NetLoc, bytes: f64) -> SimTime {
-        self.link_mut(src, dst).transfer(now, bytes)
+        let eff = self
+            .state
+            .degraded_path(&self.spec, src, dst)
+            .expect("transfer dispatched onto a dead path");
+        self.link_mut(src, dst).transfer_as(now, bytes, eff)
     }
 
     /// Total bytes carried across all stage-to-stage links (metrics).
@@ -449,6 +681,91 @@ mod tests {
         let mut fresh = link();
         fresh.touch(7);
         assert_eq!(fresh.busy_until(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn healthy_state_is_inert() {
+        let h = HierSpec::a800_datacenter();
+        let s = FabricState::default();
+        assert!(s.is_healthy());
+        for (a, b) in [
+            (NetLoc::new(0, 0), NetLoc::new(0, 0)),
+            (NetLoc::new(0, 0), NetLoc::new(0, 1)),
+            (NetLoc::new(0, 0), NetLoc::new(1, 0)),
+        ] {
+            assert!(s.path_up(a, b));
+            // bit-identical to the healthy path model
+            assert_eq!(s.degraded_path(&h, a, b), Some(h.path(a, b)));
+        }
+        assert_eq!(s.ep_trunk_health(), LinkHealth::HEALTHY);
+    }
+
+    #[test]
+    fn degraded_path_composes_tier_and_pair() {
+        let h = HierSpec::a800_datacenter();
+        let mut s = FabricState::default();
+        // 60% WAN brownout with 2 ms of extra latency
+        s.tier[Tier::CrossCluster.index()] =
+            LinkHealth { up: true, bw_frac: 0.4, alpha_add_s: 2e-3 };
+        let (a, c) = (NetLoc::new(0, 0), NetLoc::new(1, 0));
+        let p = s.degraded_path(&h, a, c).unwrap();
+        assert_eq!(p.bandwidth, h.inter_node.bandwidth.min(h.wan.bandwidth * 0.4));
+        assert_eq!(p.alpha, h.inter_node.alpha + h.wan.alpha + 2e-3);
+        // an intra-cluster path is untouched by the WAN overlay
+        assert_eq!(s.degraded_path(&h, a, NetLoc::new(0, 1)), Some(h.path(a, NetLoc::new(0, 1))));
+        // a pair overlay composes on top of the tier overlay
+        s.set_pair(c, a, LinkHealth { up: true, bw_frac: 0.5, alpha_add_s: 1e-3 });
+        let q = s.degraded_path(&h, a, c).unwrap();
+        assert_eq!(q.bandwidth, p.bandwidth * 0.5);
+        assert_eq!(q.alpha, p.alpha + 1e-3);
+        // ... in both directions (undirected cut)
+        assert_eq!(s.degraded_path(&h, c, a), Some(q));
+    }
+
+    #[test]
+    fn dead_paths_refuse_traffic() {
+        let mut s = FabricState::default();
+        let (a, b, c) = (NetLoc::new(0, 0), NetLoc::new(0, 1), NetLoc::new(1, 0));
+        s.tier[Tier::CrossCluster.index()].up = false;
+        assert!(!s.path_up(a, c), "wan outage kills cross-cluster paths");
+        assert!(s.path_up(a, b), "intra-cluster unaffected");
+        assert_eq!(s.degraded_path(&HierSpec::a800_datacenter(), a, c), None);
+        // a dead IB tier also kills cross-cluster (the path rides both)
+        let mut s = FabricState::default();
+        s.tier[Tier::InterNode.index()].up = false;
+        assert!(!s.path_up(a, c) && !s.path_up(a, b));
+        // pair cut: only that pair dies
+        let mut s = FabricState::default();
+        s.set_pair(a, c, LinkHealth { up: false, ..LinkHealth::HEALTHY });
+        assert!(!s.path_up(a, c) && !s.path_up(c, a));
+        assert!(s.path_up(a, NetLoc::new(1, 1)), "other cross pairs live");
+        // EP pricing floors a dead trunk instead of refusing
+        let mut s = FabricState::default();
+        s.trunk.up = false;
+        assert_eq!(s.ep_trunk_health().ep_bw_frac(), LinkHealth::OUTAGE_EP_BW_FRAC);
+    }
+
+    #[test]
+    fn hier_fabric_prices_through_state() {
+        let spec = HierSpec {
+            intra_node: LinkSpec { bandwidth: 100e9, alpha: 0.0 },
+            inter_node: LinkSpec { bandwidth: 10e9, alpha: 0.0 },
+            wan: LinkSpec { bandwidth: 1e9, alpha: 0.0 },
+        };
+        let (a, c) = (NetLoc::new(0, 0), NetLoc::new(1, 0));
+        let mut f = HierFabric::new(spec);
+        let healthy = f.transfer(SimTime::ZERO, a, c, 1e9);
+        assert_eq!(healthy, SimTime::from_secs_f64(1.0));
+        // halve the trunk: the same bytes take twice the wire time
+        // (FIFO queue position carried over from the healthy transfer)
+        let mut st = FabricState::default();
+        st.tier[Tier::CrossCluster.index()].bw_frac = 0.5;
+        f.set_state(st);
+        let slowed = f.transfer(SimTime::ZERO, a, c, 1e9);
+        assert_eq!(slowed, healthy + SimTime::from_secs_f64(2.0));
+        // recovery restores healthy pricing without losing accounting
+        f.set_state(FabricState::default());
+        assert_eq!(f.total_transfers(), 2);
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub const SWEEP_METRIC_COLS: &[&str] = &[
     "migrations",
     "availability",
     "scale_events",
+    "link_faults",
+    "link_degraded_s",
 ];
 
 fn metric_cells(r: &PointResult) -> Vec<String> {
@@ -56,6 +58,9 @@ fn metric_cells(r: &PointResult) -> Vec<String> {
                 // when a --faults axis is in play
                 format!("{:.4}", rep.availability()),
                 (m.scale_up_events + m.scale_down_events).to_string(),
+                m.link_faults.to_string(),
+                // all three tiers summed: 0.0 without a --link-faults axis
+                format!("{:.1}", m.link_degraded_s.iter().sum::<f64>()),
             ]
         }
         Err(e) => {

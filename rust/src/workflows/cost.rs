@@ -22,6 +22,7 @@ use crate::core::{Pcg64, SimTime};
 use crate::hardware::LinkSpec;
 use crate::metrics::MetricsCollector;
 use crate::model::ModelConfig;
+use crate::network::LinkHealth;
 use crate::moe::{
     self, rank_imbalance, EpNetwork, EpSpec, LoadEstimator, PopularityCache, RoutingFidelity,
     RoutingPolicy,
@@ -219,6 +220,11 @@ pub struct CostModel {
     /// attached by the coordinator only when expert migration is on, so
     /// the static-placement path stays bit-identical.
     pub load_tracker: Option<RefCell<LoadEstimator>>,
+    /// Effective EP cross-cluster trunk health for the current fabric
+    /// epoch (set by the engine at epoch boundaries; healthy is exactly
+    /// inert). Applied to the scratch network before every EP pricing
+    /// draw.
+    trunk_health: Cell<LinkHealth>,
     /// Routing draws priced so far (drift-epoch clock for
     /// [`RoutingPolicy::Drifting`]; ignored by every other policy).
     draws: Cell<u64>,
@@ -250,6 +256,7 @@ impl Clone for CostModel {
             ep: self.ep.clone(),
             capacity_factor: self.capacity_factor,
             load_tracker: self.load_tracker.clone(),
+            trunk_health: self.trunk_health.clone(),
             draws: self.draws.clone(),
             pop_cache: RefCell::new(self.pop_cache.borrow().clone()),
             scratch: RefCell::new(self.scratch.borrow().clone()),
@@ -323,12 +330,25 @@ impl CostModel {
             ep: None,
             capacity_factor: None,
             load_tracker: None,
+            trunk_health: Cell::new(LinkHealth::HEALTHY),
             draws: Cell::new(0),
             pop_cache: RefCell::new(PopularityCache::default()),
             scratch: RefCell::new(EpScratch::default()),
             plan_scratch: RefCell::new(PlanScratch::default()),
             attn_scratch: RefCell::new(Vec::new()),
         }
+    }
+
+    /// Set the effective EP trunk health for subsequent pricing draws
+    /// (fabric epochs: the engine calls this at epoch boundaries;
+    /// [`LinkHealth::HEALTHY`] is exactly inert).
+    pub fn set_ep_trunk_health(&self, h: LinkHealth) {
+        self.trunk_health.set(h);
+    }
+
+    /// Current effective EP trunk health.
+    pub fn ep_trunk_health(&self) -> LinkHealth {
+        self.trunk_health.get()
     }
 
     /// Per-expert token cap for a routing draw of `tokens` tokens, from
@@ -669,6 +689,7 @@ impl CostModel {
             *net = Some(eps.make_network());
         }
         let net = net.as_mut().expect("scratch network just built");
+        net.set_trunk_health(self.trunk_health.get());
         eps.placement.dispatch_matrix_into(loads, bpt, mat);
         eps.placement.transpose_into(mat, mat_t);
         net.reset();
@@ -771,6 +792,7 @@ impl CostModel {
             *net = Some(eps.make_network());
         }
         let net = net.as_mut().expect("scratch network just built");
+        net.set_trunk_health(self.trunk_health.get());
         for _ in 0..n_draws {
             let dropped = self.draw_assignment_into(
                 tokens as u32,

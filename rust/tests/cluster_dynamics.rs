@@ -152,6 +152,38 @@ fn autoscaler_reacts_and_reports_events() {
 }
 
 #[test]
+fn slo_scale_signal_is_thread_invariant() {
+    let mut f = pd_base(64);
+    f.set("rate", "200");
+    f.set("slo-ttft", "200");
+    f.set("slo-tbt", "50");
+    f.set("autoscale", "reactive:1:4");
+    f.set("scale-signal", "slo");
+    f.set("scale-interval", "0.5");
+    f.set("scale-delay", "1");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn slo_signal_scales_up_under_pressure() {
+    // a burst far past the pool's capacity: the per-tick missed-SLO
+    // fraction (or a non-empty queue before the first completions)
+    // crosses the grow threshold
+    let mut f = pd_base(96);
+    f.set("rate", "400");
+    f.set("slo-ttft", "100");
+    f.set("slo-tbt", "20");
+    f.set("autoscale", "reactive:1:4");
+    f.set("scale-signal", "slo");
+    f.set("scale-interval", "0.2");
+    f.set("scale-delay", "0.5");
+    let rep = run_report(&f);
+    assert!(rep.metrics.scale_ticks > 0);
+    assert!(rep.metrics.scale_up_events > 0, "missed-SLO fraction must trigger a grow");
+    assert_eq!(rep.metrics.completed_requests + rep.metrics.rejected_requests, 96);
+}
+
+#[test]
 fn inert_config_reports_no_dynamics() {
     let f = pd_base(32);
     let rep = run_report(&f);

@@ -1,0 +1,253 @@
+//! Link/fabric fault-injection integration: brownouts, outages, and
+//! partitions must compose with the sharded engine without breaking
+//! its determinism contract. A link-faulted run renders
+//! **byte-identical** deterministic reports for any `--sim-threads`
+//! (fabric epochs clamp windows so no window straddles a capacity
+//! change); requests are conserved through outages (held transfers are
+//! re-dispatched at the epoch that revives their path, unhealable
+//! partitions reject as backpressure); and a config without
+//! `--link-faults` stays inert — no link metrics appear and nothing
+//! about the report changes.
+
+use frontier::config::cli::{build_config, FlagMap};
+use frontier::metrics::SimReport;
+
+/// Run the config with an explicit thread count and render the
+/// deterministic JSON projection (host-time fields excluded).
+fn run_json(mut flags: FlagMap, threads: u32) -> String {
+    flags.set("sim-threads", threads.to_string());
+    let cfg = build_config(&flags).unwrap();
+    frontier::run_experiment(&cfg).unwrap().to_json_deterministic().to_string_pretty()
+}
+
+fn run_report(flags: &FlagMap) -> SimReport {
+    frontier::run_experiment(&build_config(flags).unwrap()).unwrap()
+}
+
+/// Serial vs 2 / 4 / 16 threads: every rendering must match the serial
+/// bytes (16 oversubscribes every config under test).
+fn assert_thread_invariant(flags: FlagMap) {
+    let serial = run_json(flags.clone(), 1);
+    for threads in [2u32, 4, 16] {
+        assert_eq!(serial, run_json(flags.clone(), threads), "diverged at sim-threads={threads}");
+    }
+}
+
+fn pd_base(requests: u32) -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("mode", "pd");
+    f.set("prefill", "2");
+    f.set("decode", "2");
+    f.set("requests", requests.to_string());
+    f.set("input", "64");
+    f.set("output", "16");
+    f.set("rate", "40");
+    f
+}
+
+/// Two clusters: the prefill->decode KV handoff crosses the WAN trunk,
+/// so wan-tier faults hit the hot path.
+fn cross_cluster_base(requests: u32) -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("stages", "prefill:2;decode:2,cluster=1");
+    f.set("edges", "0>1");
+    f.set("requests", requests.to_string());
+    f.set("input", "64");
+    f.set("output", "16");
+    f.set("rate", "40");
+    f
+}
+
+#[test]
+fn brownout_is_thread_invariant() {
+    // degrade the tier the KV handoff actually rides (same-node pd =>
+    // nvlink): every transfer in the brownout window prices slower, and
+    // the per-epoch sync window must shrink identically on every
+    // thread count
+    let mut f = pd_base(48);
+    f.set("link-faults", "list:degrade@0.3:nvlink:0.4:0.002;up@2:nvlink");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn wan_outage_with_recovery_is_thread_invariant() {
+    // cross-cluster partition: transfers arriving during the outage are
+    // held and re-dispatched at the recovery epoch's boundary
+    let mut f = cross_cluster_base(48);
+    f.set("link-faults", "list:down@0.3:wan;up@2:wan");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn mttf_brownouts_are_thread_invariant() {
+    // seeded stochastic WAN schedule, brownout flavor: epochs derived
+    // from the drawn schedule must be identical on every thread count
+    let mut f = cross_cluster_base(48);
+    f.set("link-faults", "mttf:3:mttr:1:frac:0.5");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn combined_replica_and_link_faults_are_thread_invariant() {
+    // both dynamics axes at once: replica displacement/requeue riding
+    // the same windows as a WAN brownout
+    let mut f = cross_cluster_base(48);
+    f.set("faults", "mttf:4:mttr:2");
+    f.set("link-faults", "list:degrade@0.5:wan:0.3;up@3:wan");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn day_workload_with_link_faults_is_thread_invariant() {
+    // open-loop traffic day (idle gaps spanning epoch boundaries —
+    // epochs are applied lazily at the next window start)
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("mode", "pd");
+    f.set("prefill", "2");
+    f.set("decode", "2");
+    f.set("requests", "120");
+    f.set("workload", "day");
+    f.set("link-faults", "list:degrade@5:nvlink:0.5;up@25:nvlink");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn same_seed_same_link_schedule_same_report() {
+    let mut f = cross_cluster_base(32);
+    f.set("link-faults", "mttf:1:mttr:0.5");
+    f.set("seed", "7");
+    assert_eq!(run_json(f.clone(), 1), run_json(f.clone(), 1));
+    // a different seed draws a different link schedule
+    let mut g = f.clone();
+    g.set("seed", "8");
+    assert_ne!(run_json(f, 1), run_json(g, 1));
+}
+
+#[test]
+fn outage_metrics_are_reported_and_conserve_requests() {
+    let mut f = cross_cluster_base(48);
+    f.set("link-faults", "list:down@0.3:wan;up@2:wan");
+    let rep = run_report(&f);
+    let m = &rep.metrics;
+    assert_eq!(m.link_faults, 1);
+    assert_eq!(m.link_recoveries, 1);
+    // the wan tier was degraded for the [0.3, 2) outage span
+    assert!(m.link_degraded_s[2] >= 1.0, "wan degraded {}s", m.link_degraded_s[2]);
+    assert_eq!(m.link_degraded_s[0], 0.0);
+    assert_eq!(m.link_degraded_s[1], 0.0);
+    // transfers hit the dead trunk and were held, not dropped
+    assert!(m.link_stalled_transfers > 0);
+    // conservation across the partition: nothing vanishes
+    assert_eq!(m.completed_requests + m.rejected_requests, 48);
+    assert_eq!(m.rejected_requests, 0, "healed partition rejects nothing");
+    // stalled-but-completed requests are tracked for SLO damage
+    assert!(m.link_affected_completed > 0);
+    assert!(m.link_affected_completed >= m.link_affected_slo_miss);
+}
+
+#[test]
+fn unhealed_partition_rejects_as_backpressure() {
+    // the trunk never comes back: transfers that would wait forever
+    // must reject (conservation, not a stall-bail)
+    let mut f = cross_cluster_base(32);
+    f.set("link-faults", "list:down@0.3:wan");
+    let rep = run_report(&f);
+    let m = &rep.metrics;
+    assert_eq!(m.completed_requests + m.rejected_requests, 32);
+    assert!(m.rejected_requests > 0, "dead-forever path must shed load");
+    assert!(m.fault_rejected > 0);
+}
+
+#[test]
+fn fanout_reroutes_around_dead_trunk() {
+    // two decode pools, one across the WAN: when the trunk dies the
+    // live local pool absorbs the traffic and reroutes are metered
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("stages", "prefill:2;decode:2;decode:2,cluster=1");
+    f.set("edges", "0>1,0>2");
+    f.set("requests", "32");
+    f.set("input", "64");
+    f.set("output", "16");
+    f.set("rate", "40");
+    f.set("link-faults", "list:down@0.2:wan");
+    let rep = run_report(&f);
+    let m = &rep.metrics;
+    assert!(m.link_rerouted_transfers > 0, "dispatch must route around the dead path");
+    assert_eq!(m.completed_requests, 32, "local pool absorbs everything");
+    assert_thread_invariant(f);
+}
+
+#[test]
+fn inert_config_reports_no_link_metrics() {
+    // no --link-faults: the JSON projection stays free of link blocks,
+    // so pre-PR goldens (and diffs against them) are unchanged — even
+    // when replica faults are on
+    let mut f = pd_base(32);
+    f.set("faults", "list:down@0.4:1.0;up@2:1.0");
+    let json = run_report(&f).to_json_deterministic().to_string_pretty();
+    assert!(json.contains("\"faults\""));
+    assert!(!json.contains("\"link_faults\""), "{json}");
+    assert!(!json.contains("\"link_degraded_s\""), "{json}");
+    // and a link-faulted run does grow the new block
+    let mut g = cross_cluster_base(32);
+    g.set("link-faults", "list:down@0.3:wan;up@2:wan");
+    let json = run_report(&g).to_json_deterministic().to_string_pretty();
+    assert!(json.contains("\"link_faults\""), "{json}");
+    assert!(json.contains("\"link_degraded_s\""), "{json}");
+}
+
+#[test]
+fn irrelevant_link_fault_leaves_results_unchanged() {
+    // single-cluster pd never touches the wan tier: a wan brownout
+    // creates epochs (and the link block) but every path prices
+    // bit-identically and the re-derived window only ever shrinks —
+    // results must match the fault-free run exactly. This pins the
+    // window-conservativeness argument from the module doc.
+    let base = pd_base(32);
+    let clean = run_report(&base);
+    let mut g = base.clone();
+    g.set("link-faults", "list:degrade@0.5:wan:0.3;up@3:wan");
+    let faulted = run_report(&g);
+    assert_eq!(faulted.metrics.link_faults, 1);
+    let (a, b) = (&clean.metrics, &faulted.metrics);
+    assert_eq!(a.completed_requests, b.completed_requests);
+    assert_eq!(a.output_tokens, b.output_tokens);
+    assert_eq!(a.kv_transfers, b.kv_transfers);
+    assert_eq!(a.ttft.quantile(99.0), b.ttft.quantile(99.0));
+    assert_eq!(a.e2e.quantile(50.0), b.e2e.quantile(50.0));
+    assert_eq!(b.link_stalled_transfers, 0);
+    assert_eq!(b.link_rerouted_transfers, 0);
+}
+
+#[test]
+fn malformed_link_schedules_are_rejected_at_config_time() {
+    let reject = |spec: &str| {
+        let mut f = pd_base(8);
+        f.set("link-faults", spec);
+        assert!(build_config(&f).is_err(), "accepted {spec:?}");
+    };
+    // bad grammar
+    reject("flaky");
+    // bandwidth fraction outside (0, 1]
+    reject("list:degrade@1:wan:1.5");
+    reject("list:degrade@1:wan:0");
+    // negative added latency
+    reject("list:degrade@1:wan:0.5:-1");
+    // recovery preceding its fault
+    reject("list:up@1:wan");
+    // duplicate outage of a dead target
+    reject("list:down@5:wan;down@6:wan");
+    // degrading a dead link (it must come back up first)
+    reject("list:down@5:wan;degrade@6:wan:0.5");
+    // unsorted times
+    reject("list:down@5:wan;up@3:wan");
+    // pair endpoints that host no stage
+    reject("list:down@3:0.0-1.7");
+    // mttf brownout fraction must be a real brownout
+    reject("mttf:600:frac:1.0");
+    reject("mttf:0");
+}

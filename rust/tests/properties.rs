@@ -541,7 +541,7 @@ fn prop_fault_plan_recoveries_follow_failures() {
             mttr_s: g.f64(0.5, 30.0),
         };
         let shape: Vec<u32> = (0..g.u32(1, 3)).map(|_| g.u32(1, 4)).collect();
-        let plan = build_plan(Some(&spec), None, &shape, g.seed, g.f64(10.0, 500.0));
+        let plan = build_plan(Some(&spec), None, None, &shape, g.seed, g.f64(10.0, 500.0));
         assert!(plan.faults.windows(2).all(|w| w[0].at <= w[1].at), "schedule sorted");
         for (s, &n) in shape.iter().enumerate() {
             for r in 0..n as usize {
@@ -568,8 +568,8 @@ fn prop_fault_plan_recoveries_follow_failures() {
             assert_eq!(plan.revive_after[s], last_up, "revive_after covers the last recovery");
         }
         // same inputs, same plan; different seed, different plan
-        let again = build_plan(Some(&spec), None, &shape, g.seed, 500.0);
-        let other = build_plan(Some(&spec), None, &shape, g.seed ^ 1, 500.0);
+        let again = build_plan(Some(&spec), None, None, &shape, g.seed, 500.0);
+        let other = build_plan(Some(&spec), None, None, &shape, g.seed ^ 1, 500.0);
         if !plan.faults.is_empty() {
             assert_ne!(again.faults, other.faults, "seed must matter");
         }
@@ -614,6 +614,78 @@ fn prop_faulted_simulation_conserves_requests() {
         assert!((0.0..=1.0).contains(&rep.availability()));
         assert!(m.fault_affected_slo_miss <= m.fault_affected_completed);
         // deterministic under the same seed even with faults
+        let again = frontier::run_experiment(&cfg).unwrap();
+        assert_eq!(rep.metrics.ttft, again.metrics.ttft);
+        assert_eq!(rep.sim_duration, again.sim_duration);
+    });
+}
+
+#[test]
+fn prop_link_faulted_simulation_conserves_requests() {
+    // link brownouts and partitions reroute, stall, or reject KV
+    // transfers, but nothing vanishes and nothing completes twice —
+    // for random workloads and link schedules, on the tier the KV
+    // handoff actually rides
+    use frontier::cluster::dynamics::{LinkFaultEvent, LinkFaultKind, LinkFaultSpec, LinkTarget};
+    use frontier::config::{StageConfig, StageGraphConfig};
+    use frontier::cluster::StageKind;
+    use frontier::network::Tier;
+    run_prop("link fault conservation", 8, |g| {
+        let n = g.u32(8, 24);
+        let w = WorkloadSpec {
+            arrival: Arrival::Poisson { rate: 30.0 },
+            input: LenDist::Uniform { lo: 16, hi: 128 },
+            output: LenDist::Fixed(g.u32(2, 12)),
+            n_requests: n,
+            seed: g.seed,
+            classes: vec![],
+            trace: None,
+        };
+        // prefill -> cross-cluster decode: the handoff crosses the WAN
+        let graph = StageGraphConfig::new(vec![
+            StageConfig::new(StageKind::Prefill, 2),
+            StageConfig::new(StageKind::Decode, 2).in_cluster(1),
+        ]);
+        let spec = if g.bool() {
+            LinkFaultSpec::Mttf {
+                mttf_s: g.f64(1.0, 5.0),
+                mttr_s: g.f64(0.5, 2.0),
+                bw_frac: if g.bool() { Some(g.f64(0.1, 0.9)) } else { None },
+            }
+        } else {
+            // outage window over the WAN tier; half the draws never heal
+            // (transfers must reject as backpressure, not stall the run)
+            let down_at = g.f64(0.0, 2.0);
+            let mut evs = vec![LinkFaultEvent {
+                t_s: down_at,
+                target: LinkTarget::Tier(Tier::CrossCluster),
+                kind: LinkFaultKind::Down,
+            }];
+            if g.bool() {
+                evs.push(LinkFaultEvent {
+                    t_s: down_at + g.f64(0.5, 3.0),
+                    target: LinkTarget::Tier(Tier::CrossCluster),
+                    kind: LinkFaultKind::Up,
+                });
+            }
+            LinkFaultSpec::List(evs)
+        };
+        let cfg = ExperimentConfig::colocated(ModelConfig::tiny(), 1)
+            .with_stages(graph)
+            .with_workload(w)
+            .with_seed(g.seed)
+            .with_link_faults(spec);
+        let rep = frontier::run_experiment(&cfg).unwrap();
+        let m = &rep.metrics;
+        assert_eq!(
+            m.completed_requests + m.rejected_requests,
+            n as u64,
+            "conservation across link faults"
+        );
+        assert!(m.link_recoveries <= m.link_faults, "a recovery needs a fault");
+        assert!(m.link_affected_slo_miss <= m.link_affected_completed);
+        assert!(m.link_degraded_s.iter().all(|&s| s >= 0.0));
+        // deterministic under the same seed even with link faults
         let again = frontier::run_experiment(&cfg).unwrap();
         assert_eq!(rep.metrics.ttft, again.metrics.ttft);
         assert_eq!(rep.sim_duration, again.sim_duration);
