@@ -1,105 +1,90 @@
-//! Capacity search: the paper's motivating use case.
+//! Capacity search: the paper's motivating use case, as a real
+//! optimizer.
 //!
-//! §1: finding the optimal serving configuration for a dense model on a
-//! 16-GPU co-located cluster cost ~18,000 GPU-hours (~$93k) of
-//! trial-and-error. Frontier explores the same configuration space in
-//! simulation: deployment mode x parallelism x batch cap, extracting
-//! the throughput/latency Pareto frontier in seconds.
+//! §1: finding the optimal serving configuration for one model on a
+//! 16-GPU cluster cost ~18,000 GPU-hours (~$93k) of trial-and-error.
+//! Earlier revisions of this example brute-forced a small grid; it now
+//! drives the `search` autotuner over a 240-point MoE deployment space
+//! (PD ratio x EP cluster span x capacity factor x migration policy x
+//! migration threshold) under the diurnal traffic-day workload, and
+//! lets the three pruning layers do the work:
 //!
-//! The space is derived (replica counts follow from the tp degree), so
-//! it runs as an *explicit point list* through the parallel sweep
-//! engine — all configurations fan across worker threads, and a point
-//! that fails validation reports its error without aborting the search.
+//! * successive halving simulates most of the grid only at a short
+//!   horizon, promoting the top quarter per rung;
+//! * config-hash dedup collapses the `migration-threshold` axis
+//!   wherever `migration=off` makes it inert;
+//! * Pareto pruning drops (cost, goodput, p99)-dominated regions
+//!   between rungs.
+//!
+//! The search trajectory (rung populations, prune counts, dedup hits)
+//! prints alongside the final ranking — the same document `frontier
+//! search` emits.
 //!
 //! ```bash
 //! cargo run --release --example capacity_search
 //! ```
 
 use frontier::config::cli::FlagMap;
-use frontier::metrics::pareto_frontier;
-use frontier::report::markdown_table;
-use frontier::sweep::{PointSpec, SweepRunner, SweepSpec};
+use frontier::report::search::search_markdown;
+use frontier::search::{Objective, SearchRunner, SearchSpec};
+use frontier::sweep::{Axis, SweepSpec};
 
 fn main() -> anyhow::Result<()> {
-    let gpus = 16u32;
     let mut base = FlagMap::new();
-    base.set("model", "qwen2-72b");
-    base.set("rate", "3.0");
-    base.set("requests", "120");
-    base.set("input", "1024");
-    base.set("output", "256");
-    println!("== Capacity search: qwen2-72b on {gpus} GPUs ==\n");
+    base.set("model", "mixtral-8x7b");
+    base.set("ep", "2");
+    base.set("workload", "day:6.0");
+    base.set("requests", "192");
+    base.set("slo-ttft", "2000");
+    base.set("slo-tbt", "200");
+    base.set("seed", "7");
 
-    // configuration space: mode x tensor-parallel degree x batch cap,
-    // with replica counts derived from the tp degree
-    let mut points = Vec::new();
-    for tp in [2u32, 4, 8] {
-        let replicas = gpus / tp;
-        for mode in ["colocated", "pd"] {
-            if mode == "pd" && replicas / 2 == 0 {
-                continue;
-            }
-            for max_batch in [8u32, 32, 128] {
-                let mut assigns = vec![("tp".to_string(), tp.to_string())];
-                if mode == "pd" {
-                    let prefill = replicas / 2;
-                    assigns.push((
-                        "pd-ratio".into(),
-                        format!("{prefill}:{}", replicas - prefill),
-                    ));
-                } else {
-                    assigns.push(("mode".into(), "colocated".into()));
-                    assigns.push(("replicas".into(), replicas.to_string()));
-                }
-                assigns.push(("max-batch".into(), max_batch.to_string()));
-                points.push(
-                    PointSpec::new(assigns).with_label(format!("{mode} tp{tp} b{max_batch}")),
-                );
-            }
-        }
-    }
+    let axes = vec![
+        Axis::new("pd-ratio", vec!["1:3".into(), "2:2".into(), "3:1".into()])?,
+        Axis::new("ep-clusters", vec!["1".into(), "2".into()])?,
+        Axis::new(
+            "capacity-factor",
+            vec!["1.0".into(), "1.25".into(), "1.5".into(), "2.0".into()],
+        )?,
+        Axis::new("migration", vec!["off".into(), "threshold".into()])?,
+        Axis::new(
+            "migration-threshold",
+            vec![
+                "1.05".into(),
+                "1.1".into(),
+                "1.2".into(),
+                "1.3".into(),
+                "1.4".into(),
+            ],
+        )?,
+    ];
+    let spec = SearchSpec {
+        sweep: SweepSpec::new(base).with_axes(axes),
+        objective: Objective::Cost,
+        rungs: 3,
+        promote_frac: 0.25,
+    };
 
-    let result = SweepRunner::default().run(&SweepSpec::new(base).with_points(points))?;
+    println!("== Capacity search: mixtral-8x7b traffic day, 240-point deployment grid ==\n");
+    let result = SearchRunner::default().run(&spec)?;
+    print!("{}", search_markdown(&result));
 
-    let mut pareto_points = Vec::new();
-    let mut rows = Vec::new();
-    for pr in &result.points {
-        let label = pr.point.label.clone();
-        match &pr.outcome {
-            Ok(r) => {
-                let thr = r.tokens_per_sec_per_gpu();
-                let lat = r.metrics.tbt.quantile(99.0) * 1e3;
-                rows.push(vec![
-                    label.clone(),
-                    format!("{thr:.1}"),
-                    format!("{lat:.1}"),
-                    format!("{:.0}", r.metrics.ttft.quantile(99.0) * 1e3),
-                ]);
-                pareto_points.push((thr, lat, label));
-            }
-            Err(e) => {
-                rows.push(vec![label, format!("error: {e}"), "-".into(), "-".into()]);
-            }
-        }
-    }
     println!(
-        "{}",
-        markdown_table(&["config", "tok/s/gpu", "TBT p99 (ms)", "TTFT p99 (ms)"], &rows)
+        "\n{} of {} grid points simulated ({} dedup hits); the paper quotes\n\
+         ~18,000 GPU-hours (>$93k) to explore one such space on hardware.",
+        result.searched_points(),
+        result.grid_points,
+        result.dedup_hits(),
     );
-
-    println!("\n== Pareto frontier (maximize throughput, minimize TBT p99) ==\n");
-    let front = pareto_frontier(&pareto_points);
-    let rows: Vec<Vec<String>> = front
-        .iter()
-        .map(|(thr, lat, label)| {
-            vec![label.clone(), format!("{thr:.1}"), format!("{lat:.1}")]
-        })
-        .collect();
-    println!("{}", markdown_table(&["config", "tok/s/gpu", "TBT p99 (ms)"], &rows));
-    println!(
-        "\n{} configurations explored in simulation; the paper quotes ~18,000\n\
-         GPU-hours (>$93k) to do this on hardware for one 72B/16-GPU setting.",
-        pareto_points.len()
-    );
+    if let Some(best) = result.ranked.first() {
+        println!(
+            "best by {}: {} at {:.2} GPU-s/1k tokens (goodput {:.2} req/s, TBT p99 {:.1} ms)",
+            result.objective.name(),
+            best.point.label,
+            best.metrics.cost_gpu_s_per_1k,
+            best.metrics.goodput_rps,
+            best.metrics.tbt_p99_ms,
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,166 @@
+//! Bench: the autotuner over a 1000-point deployment grid — the scale
+//! target of ROADMAP item 3 (a 1k–10k-point search completing on
+//! CI-class hardware).
+//!
+//! Grid: pd-ratio(5) x ep-clusters(2) x capacity-factor(5) x
+//! migration(off|threshold) x migration-threshold(10) = 1000 points of
+//! tiny-moe under the diurnal traffic-day workload, searched with 3
+//! successive-halving rungs at `--promote-frac 0.25` on the cost
+//! objective. The bench exists to pin the *work avoided*:
+//!
+//! * `search_points_ratio` — unique simulations / grid size, a gated
+//!   ceiling (brute force is 1.0; halving + Pareto pruning + dedup must
+//!   keep it well below);
+//! * `search_dedup_hits` — a gated floor: the 10-value
+//!   `migration-threshold` axis is inert under `migration=off`, so
+//!   hash-dedup must collapse 9 of its 10 values for half the grid on
+//!   the first rung;
+//! * the trajectory lands in the merged report (rung populations,
+//!   prune counts, dedup hits) and the search completes with zero
+//!   point errors.
+//!
+//! Emits `target/bench_results/BENCH_search.json`; the blessed copy at
+//! the repo root arms the CI perf gate (`BENCH_BASELINE`). The ratio
+//! and dedup metrics gate unconditionally; wall-clock only against a
+//! calibrated baseline.
+
+use frontier::bench_util::{
+    gate_against_baseline, quick, section, write_results, BaselineCheck,
+};
+use frontier::config::cli::FlagMap;
+use frontier::config::json::Json;
+use frontier::search::{Objective, SearchRunner, SearchSpec};
+use frontier::sweep::{Axis, SweepSpec};
+
+fn main() {
+    // quick mode shortens the horizon ladder, not the grid: the pruning
+    // ratios being gated are horizon-independent
+    let full: u32 = if quick() { 64 } else { 256 };
+    let mut json: Vec<(&'static str, Json)> = Vec::new();
+    let calibrated = std::env::var_os("BENCH_CALIBRATED").is_some_and(|v| v == "1");
+    json.push(("calibrated", Json::Bool(calibrated)));
+    json.push(("quick", Json::Bool(quick())));
+
+    let mut base = FlagMap::new();
+    base.set("model", "tiny-moe");
+    base.set("replicas", "1");
+    base.set("ep", "2");
+    base.set("workload", "day:40.0");
+    base.set("requests", full.to_string());
+    base.set("seed", "3");
+    let axes = vec![
+        Axis::new(
+            "pd-ratio",
+            vec!["1:3".into(), "2:2".into(), "3:1".into(), "1:2".into(), "2:1".into()],
+        )
+        .unwrap(),
+        Axis::new("ep-clusters", vec!["1".into(), "2".into()]).unwrap(),
+        Axis::new(
+            "capacity-factor",
+            vec!["1.0".into(), "1.1".into(), "1.25".into(), "1.5".into(), "2.0".into()],
+        )
+        .unwrap(),
+        Axis::new("migration", vec!["off".into(), "threshold".into()]).unwrap(),
+        Axis::new(
+            "migration-threshold",
+            vec![
+                "1.05".into(),
+                "1.1".into(),
+                "1.15".into(),
+                "1.2".into(),
+                "1.25".into(),
+                "1.3".into(),
+                "1.35".into(),
+                "1.4".into(),
+                "1.45".into(),
+                "1.5".into(),
+            ],
+        )
+        .unwrap(),
+    ];
+    let spec = SearchSpec {
+        sweep: SweepSpec::new(base).with_axes(axes),
+        objective: Objective::Cost,
+        rungs: 3,
+        promote_frac: 0.25,
+    };
+
+    section(&format!("search: 1000-point grid, 3 rungs, full horizon {full} requests"));
+    let t0 = std::time::Instant::now();
+    let result = SearchRunner::default().run(&spec).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let searched = result.searched_points();
+    let ratio = searched as f64 / result.grid_points as f64;
+    let dedup = result.dedup_hits();
+    for t in &result.trajectory {
+        println!(
+            "rung {} @ {:>4} req: population {:>4} | simulated {:>4} | dedup {:>4} \
+             | pruned {:>3} | promoted {:>3}",
+            t.rung, t.requests, t.population, t.simulated, t.dedup_hits, t.pruned, t.promoted
+        );
+    }
+    println!(
+        "searched {searched}/{} points (ratio {ratio:.3}) | {dedup} dedup hits | {wall:.2}s",
+        result.grid_points
+    );
+    if let Some(best) = result.ranked.first() {
+        println!("best: {} at {:.3} GPU-s/1k tokens", best.point.label, best.score);
+    }
+
+    // the acceptance bar: strictly cheaper than brute force, dedup
+    // doing real work, a clean grid, and the trajectory in the report
+    assert_eq!(result.grid_points, 1000, "grid drifted");
+    assert!(searched < result.grid_points, "search did not beat brute force");
+    assert!(dedup > 0, "config-hash dedup found nothing on an inert-axis grid");
+    assert!(result.errors.is_empty(), "grid points failed: {:?}", result.errors.first());
+    assert_eq!(result.trajectory.len(), 3);
+    assert!(!result.ranked.is_empty());
+
+    json.push(("search_grid_points", Json::Num(result.grid_points as f64)));
+    json.push(("search_points_ratio", Json::Num(ratio)));
+    json.push(("search_dedup_hits", Json::Num(dedup as f64)));
+    json.push(("search_wall_s", Json::Num(wall)));
+
+    let current = Json::obj(json);
+    write_results("BENCH_search.json", &current.to_string_pretty());
+
+    gate_against_baseline(
+        &current,
+        &[
+            // scale drift alarm: the ratio gate is meaningless if the
+            // bench silently runs a different grid
+            BaselineCheck {
+                key: "search_grid_points",
+                higher_is_better: false,
+                tol: 0.0,
+                needs_calibration: false,
+                two_sided: true,
+            },
+            // the tentpole's ceiling: fraction of the grid simulated
+            BaselineCheck {
+                key: "search_points_ratio",
+                higher_is_better: false,
+                tol: 0.0,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            // the dedup floor
+            BaselineCheck {
+                key: "search_dedup_hits",
+                higher_is_better: true,
+                tol: 0.0,
+                needs_calibration: false,
+                two_sided: false,
+            },
+            // wall-clock: calibrated baselines only
+            BaselineCheck {
+                key: "search_wall_s",
+                higher_is_better: false,
+                tol: 0.5,
+                needs_calibration: true,
+                two_sided: false,
+            },
+        ],
+    );
+}

@@ -27,7 +27,7 @@ use crate::workload::WorkloadSpec;
 
 /// Flags that stand alone: `--json` means `--json=true` and consumes no
 /// following argument.
-pub const BOOL_FLAGS: &[&str] = &["json", "profiled"];
+pub const BOOL_FLAGS: &[&str] = &["json", "profiled", "resume"];
 
 /// Flags that may appear multiple times on a `frontier` command line
 /// (sweep axes and explicit grid points).
@@ -38,8 +38,28 @@ pub const REPEATABLE_FLAGS: &[&str] = &["axis", "point"];
 /// sweep drivers strip/allow from their base maps and the sweep axis
 /// layer bars even behind its `flag:` escape (sweeping a flag the
 /// config lowering never reads would be silently ignored).
-pub const DRIVER_FLAGS: &[&str] =
-    &["trace", "axis", "point", "threads", "format", "gpus", "json"];
+pub const DRIVER_FLAGS: &[&str] = &[
+    "trace",
+    "axis",
+    "point",
+    "threads",
+    "format",
+    "gpus",
+    "json",
+    "objective",
+    "rungs",
+    "promote-frac",
+    "manifest",
+    "resume",
+    "max-sims",
+];
+
+/// The [`DRIVER_FLAGS`] subset read only by the `frontier search`
+/// subcommand (the autotuner knobs). The sweep drivers reject these
+/// with a pointer to `search`, and `search` itself rejects the
+/// sweep-pd-only `--gpus`.
+pub const SEARCH_FLAGS: &[&str] =
+    &["objective", "rungs", "promote-frac", "manifest", "resume", "max-sims"];
 
 /// Every value-taking *configuration* flag [`build_config`]
 /// understands. The sweep axis layer validates bare axis names against
@@ -473,6 +493,23 @@ mod tests {
 
     fn parse(tokens: &[&str]) -> Result<FlagMap> {
         FlagMap::parse(tokens.iter().map(|s| s.to_string()), REPEATABLE_FLAGS)
+    }
+
+    #[test]
+    fn flag_registries_are_consistent() {
+        // the search knobs are driver flags (stripped from sweep
+        // bases), never config flags (axes must not name them)
+        for k in SEARCH_FLAGS {
+            assert!(DRIVER_FLAGS.contains(k), "--{k} missing from DRIVER_FLAGS");
+            assert!(!VALUE_FLAGS.contains(k), "--{k} must not be sweepable");
+        }
+        // --resume stands alone on the command line
+        assert!(BOOL_FLAGS.contains(&"resume"));
+        // driver flags and config flags never overlap: a driver flag in
+        // VALUE_FLAGS would be sweepable but silently ignored
+        for k in DRIVER_FLAGS {
+            assert!(!VALUE_FLAGS.contains(k), "--{k} in both registries");
+        }
     }
 
     #[test]

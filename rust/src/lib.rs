@@ -35,6 +35,7 @@ pub mod proptest_util;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod search;
 pub mod sweep;
 pub mod workflows;
 pub mod workload;
@@ -52,6 +53,7 @@ pub mod prelude {
     pub use crate::model::{ModelConfig, MoeConfig};
     pub use crate::parallelism::Parallelism;
     pub use crate::predictor::{ExecutionPredictor, PredictorKind};
+    pub use crate::search::{Objective, SearchRunner, SearchSpec};
     pub use crate::sweep::{Axis, SweepRunner, SweepSpec};
     pub use crate::workload::WorkloadSpec;
 }

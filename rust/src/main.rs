@@ -9,9 +9,11 @@ use anyhow::{bail, Result};
 use frontier::baseline::ReplicaCentricSim;
 use frontier::config::cli::{
     build_config, model_by_name, reject_unknown_flags, Args, FlagMap, DEFAULT_MODEL,
-    DRIVER_FLAGS,
+    DRIVER_FLAGS, SEARCH_FLAGS,
 };
+use frontier::report::search::{search_csv, search_json, search_markdown};
 use frontier::report::sweep::{sweep_csv, sweep_json, sweep_markdown};
+use frontier::search::{Objective, SearchResult, SearchRunner, SearchSpec};
 use frontier::sweep::{Axis, PointSpec, SweepResult, SweepRunner, SweepSpec};
 
 const USAGE: &str = "\
@@ -21,6 +23,7 @@ USAGE:
   frontier simulate [OPTIONS]     run one simulation and print the report
   frontier sweep [OPTIONS]        parallel design-space sweep over a config grid
   frontier sweep-pd [OPTIONS]     sweep prefill:decode ratios at fixed GPUs
+  frontier search [OPTIONS]       autotune: successive-halving search over a grid
   frontier baseline [OPTIONS]     run the replica-centric (Vidur-style) baseline
   frontier validate               check AOT artifacts load and predict
   frontier info                   list models, predictors, modes
@@ -137,6 +140,25 @@ OPTIONS (sweep-pd):
                                    P:D from 1:N-1 to N-1:1 (default 8)
   --threads <N>                    worker threads (default: all cores)
   --format <md|csv|json>           merged report format (default md)
+
+OPTIONS (search):
+  --axis / --point / --threads / --format    as for sweep
+  --objective <cost|goodput|p99>   ranking objective (default cost): GPU-seconds
+                                   per 1k tokens, SLO goodput, or TBT p99
+  --rungs <N>                      successive-halving rungs, 1..=10 (default 3):
+                                   rung r simulates at requests/4^(R-1-r)
+                                   (floored at 4); only the final rung pays the
+                                   full --requests horizon
+  --promote-frac <F>               fraction of non-dominated survivors promoted
+                                   per rung, in (0,1] (default 0.25; at least
+                                   one point always advances)
+  --manifest <DIR>                 persist per-point reports and an append-only
+                                   manifest.jsonl incrementally, for resume
+  --resume                         continue a killed run from --manifest DIR;
+                                   the merged report is byte-identical to an
+                                   uninterrupted run
+  --max-sims <N>                   stop after N fresh simulations; with
+                                   --manifest this is a resumable checkpoint
 ";
 
 fn main() {
@@ -154,8 +176,26 @@ fn main() {
 fn reject_sweep_flags(args: &Args) -> Result<()> {
     for k in DRIVER_FLAGS {
         if !matches!(*k, "json" | "trace") && args.flags.has(k) {
-            let hint = if *k == "gpus" { "sweep-pd" } else { "sweep" };
+            let hint = if *k == "gpus" {
+                "sweep-pd"
+            } else if SEARCH_FLAGS.contains(k) {
+                "search"
+            } else {
+                "sweep"
+            };
             bail!("--{k} only applies to the sweep subcommands (did you mean `frontier {hint}`?)");
+        }
+    }
+    Ok(())
+}
+
+/// The sweep drivers would otherwise *strip* the autotuner knobs (they
+/// are [`DRIVER_FLAGS`]) — `frontier sweep --rungs 3` must error, not
+/// quietly run the full grid.
+fn reject_search_flags(args: &Args, cmd: &str) -> Result<()> {
+    for k in SEARCH_FLAGS {
+        if args.flags.has(k) {
+            bail!("--{k} only applies to `frontier search` (not `frontier {cmd}`)");
         }
     }
     Ok(())
@@ -221,6 +261,7 @@ fn run_sweep(args: &Args) -> Result<()> {
     if args.flags.has("gpus") {
         bail!("--gpus belongs to sweep-pd; use an explicit pd-ratio axis with `frontier sweep`");
     }
+    reject_search_flags(args, "sweep")?;
     // the full driver set passes here: the driver flags sweep itself
     // does not read (--gpus above, --trace in sweep_base_flags) get
     // tailored rejections instead of the generic unknown-flag error
@@ -244,6 +285,7 @@ fn run_sweep_pd(args: &Args) -> Result<()> {
     if args.flags.has("axis") || args.flags.has("point") {
         bail!("sweep-pd owns its pd-ratio grid; use `frontier sweep --axis ...` to compose axes");
     }
+    reject_search_flags(args, "sweep-pd")?;
     reject_unknown_flags(&args.flags, DRIVER_FLAGS)?;
     let format = sweep_format(args)?;
     let total: u32 = args.flags.num("gpus", 8u32)?;
@@ -260,6 +302,60 @@ fn run_sweep_pd(args: &Args) -> Result<()> {
         SweepSpec::new(sweep_base_flags(args)?).with_axes(vec![Axis::new("pd-ratio", ratios)?]);
     let runner = SweepRunner::with_threads(args.flags.num("threads", 0usize)?);
     print_sweep(format, &runner.run(&spec)?)
+}
+
+fn print_search(format: SweepFormat, result: &SearchResult) -> Result<()> {
+    match format {
+        SweepFormat::Md => print!("{}", search_markdown(result)),
+        SweepFormat::Csv => print!("{}", search_csv(result)),
+        SweepFormat::Json => println!("{}", search_json(result).to_string_pretty()),
+    }
+    // same contract as print_sweep: errors are isolated in the report
+    // but the process still signals them
+    if !result.errors.is_empty() {
+        bail!(
+            "{}/{} grid points failed (see the error rows above)",
+            result.errors.len(),
+            result.grid_points
+        );
+    }
+    Ok(())
+}
+
+fn run_search(args: &Args) -> Result<()> {
+    if args.flags.has("gpus") {
+        bail!("--gpus belongs to sweep-pd; give search an explicit pd-ratio axis instead");
+    }
+    reject_unknown_flags(&args.flags, DRIVER_FLAGS)?;
+    let axes: Vec<Axis> =
+        args.flags.get_all("axis").iter().map(|s| Axis::parse(s)).collect::<Result<_>>()?;
+    let points: Vec<PointSpec> =
+        args.flags.get_all("point").iter().map(|s| PointSpec::parse(s)).collect::<Result<_>>()?;
+    let sweep = match (axes.is_empty(), points.is_empty()) {
+        (false, false) => bail!("--axis and --point are mutually exclusive"),
+        (true, true) => bail!("search needs at least one --axis or --point"),
+        (false, true) => SweepSpec::new(sweep_base_flags(args)?).with_axes(axes),
+        (true, false) => SweepSpec::new(sweep_base_flags(args)?).with_points(points),
+    };
+    let spec = SearchSpec {
+        sweep,
+        objective: Objective::parse(args.flags.get("objective").unwrap_or("cost"))?,
+        rungs: args.flags.num("rungs", 3u32)?,
+        promote_frac: args.flags.num("promote-frac", 0.25f64)?,
+    };
+    let format = sweep_format(args)?;
+    let runner = SearchRunner {
+        threads: args.flags.num("threads", 0usize)?,
+        manifest_dir: args.flags.get("manifest").map(std::path::PathBuf::from),
+        resume: args.flags.truthy("resume"),
+        max_sims: match args.flags.get("max-sims") {
+            // 0usize default is never read: the flag is present
+            Some(_) => Some(args.flags.num("max-sims", 0usize)?),
+            None => None,
+        },
+        ..SearchRunner::default()
+    };
+    print_search(format, &runner.run(&spec)?)
 }
 
 fn run() -> Result<()> {
@@ -296,6 +392,7 @@ fn run() -> Result<()> {
         }
         "sweep" => run_sweep(&args)?,
         "sweep-pd" => run_sweep_pd(&args)?,
+        "search" => run_search(&args)?,
         "validate" => {
             if let Some(k) = args.flags.keys().next() {
                 bail!("validate takes no flags (got --{k})");

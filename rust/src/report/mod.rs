@@ -1,6 +1,8 @@
 //! Table / CSV / CDF renderers used by the benches and examples, plus
-//! the merged design-space sweep reports ([`sweep`]).
+//! the merged design-space sweep reports ([`sweep`]) and autotuner
+//! search reports ([`search`]).
 
+pub mod search;
 pub mod sweep;
 
 use std::fmt::Write as _;

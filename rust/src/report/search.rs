@@ -1,0 +1,368 @@
+//! Merged autotuner reporting: one markdown / CSV / JSON document for
+//! a whole [`SearchResult`].
+//!
+//! Like the sweep renderers ([`super::sweep`]), all three are pure
+//! functions of the (deterministic) search result, so output is
+//! byte-identical for any `--threads` — and, because the search engine
+//! computes its trajectory from logical counts only, byte-identical
+//! between an uninterrupted run and a killed-then-`--resume`d one
+//! (`rust/tests/search.rs` pins both).
+
+use crate::config::json::Json;
+use crate::search::{SearchRanked, SearchResult};
+
+/// Metric columns of the ranking table/CSV, after the rank and axis
+/// columns.
+pub const SEARCH_METRIC_COLS: &[&str] = &[
+    "pareto",
+    "cost_gpu_s_per_1k",
+    "goodput_rps",
+    "tbt_p99_ms",
+    "tok_s_gpu",
+    "completed",
+    "sim_s",
+];
+
+/// Columns of the trajectory table.
+pub const SEARCH_TRAJECTORY_COLS: &[&str] =
+    &["rung", "requests", "population", "errors", "dedup_hits", "simulated", "pruned", "promoted"];
+
+fn axis_headers(result: &SearchResult) -> Vec<String> {
+    if result.axes.is_empty() {
+        vec!["point".into()]
+    } else {
+        result
+            .axes
+            .iter()
+            .map(|a| a.strip_prefix("flag:").unwrap_or(a).to_string())
+            .collect()
+    }
+}
+
+fn axis_cells(result: &SearchResult, r: &SearchRanked) -> Vec<String> {
+    if result.axes.is_empty() {
+        vec![r.point.label.clone()]
+    } else {
+        r.point.assigns.iter().map(|(_, v)| v.clone()).collect()
+    }
+}
+
+fn metric_cells(r: &SearchRanked) -> Vec<String> {
+    let num = |k: &str| r.report.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    vec![
+        if r.pareto { "*".into() } else { "".into() },
+        format!("{:.3}", r.metrics.cost_gpu_s_per_1k),
+        format!("{:.2}", r.metrics.goodput_rps),
+        format!("{:.2}", r.metrics.tbt_p99_ms),
+        format!("{:.2}", num("tokens_per_sec_per_gpu")),
+        format!("{}", num("completed") as u64),
+        format!("{:.3}", num("sim_duration_s")),
+    ]
+}
+
+fn sanitize(cells: Vec<String>, delim: char, replacement: &str) -> Vec<String> {
+    cells.into_iter().map(|c| c.replace(delim, replacement)).collect()
+}
+
+fn ranking_table(
+    result: &SearchResult,
+    delim: char,
+    replacement: &str,
+    render: fn(&[&str], &[Vec<String>]) -> String,
+) -> String {
+    let mut headers = vec!["rank".to_string()];
+    headers.extend(axis_headers(result));
+    headers.extend(SEARCH_METRIC_COLS.iter().map(|s| s.to_string()));
+    let headers = sanitize(headers, delim, replacement);
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let rows: Vec<Vec<String>> = result
+        .ranked
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut row = vec![(i + 1).to_string()];
+            row.extend(axis_cells(result, r));
+            row.extend(metric_cells(r));
+            sanitize(row, delim, replacement)
+        })
+        .collect();
+    render(&hrefs, &rows)
+}
+
+fn trajectory_rows(result: &SearchResult) -> Vec<Vec<String>> {
+    result
+        .trajectory
+        .iter()
+        .map(|t| {
+            vec![
+                t.rung.to_string(),
+                t.requests.to_string(),
+                t.population.to_string(),
+                t.errors.to_string(),
+                t.dedup_hits.to_string(),
+                t.simulated.to_string(),
+                t.pruned.to_string(),
+                t.promoted.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// Merged search report as markdown: a summary line, the trajectory
+/// table, the ranking table, and (if any) an error table. Cells are
+/// sanitized `|` → `/` like the sweep renderer.
+pub fn search_markdown(result: &SearchResult) -> String {
+    let mut out = format!(
+        "objective={} grid_points={} searched_points={} dedup_hits={} full_requests={}\n\n",
+        result.objective.name(),
+        result.grid_points,
+        result.searched_points(),
+        result.dedup_hits(),
+        result.full_requests,
+    );
+    out.push_str("## Trajectory\n\n");
+    out.push_str(&super::markdown_table(SEARCH_TRAJECTORY_COLS, &trajectory_rows(result)));
+    out.push_str("\n## Ranking\n\n");
+    out.push_str(&ranking_table(result, '|', "/", super::markdown_table));
+    if !result.errors.is_empty() {
+        out.push_str("\n## Errors\n\n");
+        let rows: Vec<Vec<String>> = result
+            .errors
+            .iter()
+            .map(|e| {
+                let written = e
+                    .point
+                    .written
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                sanitize(
+                    vec![e.point.label.clone(), e.rung.to_string(), written, e.error.clone()],
+                    '|',
+                    "/",
+                )
+            })
+            .collect();
+        out.push_str(&super::markdown_table(&["point", "rung", "written", "error"], &rows));
+    }
+    out
+}
+
+/// Merged search report as CSV (the ranking table only, cells
+/// sanitized `,` → `;`).
+pub fn search_csv(result: &SearchResult) -> String {
+    ranking_table(result, ',', ";", super::csv)
+}
+
+/// A metric as JSON, with non-finite sentinels (`inf` cost for a run
+/// that generated nothing) mapped to `null` so the document stays
+/// parseable.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Merged search report as JSON: grid metadata, the trajectory, the
+/// ranked survivors (each embedding its deterministic full-horizon
+/// report), and every error with its written flags.
+pub fn search_json(result: &SearchResult) -> Json {
+    let trajectory = result
+        .trajectory
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("rung", Json::Num(t.rung as f64)),
+                ("requests", Json::Num(t.requests as f64)),
+                ("population", Json::Num(t.population as f64)),
+                ("errors", Json::Num(t.errors as f64)),
+                ("dedup_hits", Json::Num(t.dedup_hits as f64)),
+                ("simulated", Json::Num(t.simulated as f64)),
+                ("pruned", Json::Num(t.pruned as f64)),
+                ("promoted", Json::Num(t.promoted as f64)),
+            ])
+        })
+        .collect();
+    let ranked = result
+        .ranked
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let assigns = r
+                .point
+                .assigns
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect();
+            Json::obj(vec![
+                ("rank", Json::Num((i + 1) as f64)),
+                ("index", Json::Num(r.point.index as f64)),
+                ("label", Json::Str(r.point.label.clone())),
+                ("assigns", Json::Obj(assigns)),
+                // hex: a u64 hash does not survive an f64 round-trip
+                ("config_hash", Json::Str(format!("{:016x}", r.hash))),
+                ("pareto", Json::Bool(r.pareto)),
+                ("score", num_or_null(r.score)),
+                ("cost_gpu_s_per_1k", num_or_null(r.metrics.cost_gpu_s_per_1k)),
+                ("goodput_rps", num_or_null(r.metrics.goodput_rps)),
+                ("tbt_p99_ms", num_or_null(r.metrics.tbt_p99_ms)),
+                ("report", r.report.clone()),
+            ])
+        })
+        .collect();
+    let errors = result
+        .errors
+        .iter()
+        .map(|e| {
+            let written = e
+                .point
+                .written
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect();
+            Json::obj(vec![
+                ("index", Json::Num(e.point.index as f64)),
+                ("label", Json::Str(e.point.label.clone())),
+                ("rung", Json::Num(e.rung as f64)),
+                ("error", Json::Str(e.error.clone())),
+                ("written", Json::Obj(written)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("objective", Json::Str(result.objective.name().to_string())),
+        ("grid_points", Json::Num(result.grid_points as f64)),
+        ("full_requests", Json::Num(result.full_requests as f64)),
+        ("searched_points", Json::Num(result.searched_points() as f64)),
+        ("dedup_hits", Json::Num(result.dedup_hits() as f64)),
+        ("axes", Json::Arr(result.axes.iter().map(|a| Json::Str(a.clone())).collect())),
+        ("trajectory", Json::Arr(trajectory)),
+        ("ranked", Json::Arr(ranked)),
+        ("errors", Json::Arr(errors)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{MetricPoint, Objective, RungStat, SearchError, SearchRanked};
+    use crate::sweep::SweepPoint;
+
+    fn pt(index: usize, cf: &str) -> SweepPoint {
+        SweepPoint {
+            index,
+            assigns: vec![("capacity-factor".into(), cf.into())],
+            label: format!("capacity-factor={cf}"),
+            written: vec![("capacity-factor".into(), cf.into())],
+        }
+    }
+
+    fn fake_result() -> SearchResult {
+        let report = Json::obj(vec![
+            ("tokens_per_sec_per_gpu", Json::Num(500.0)),
+            ("completed", Json::Num(9.0)),
+            ("sim_duration_s", Json::Num(3.0)),
+            ("tbt_p99_ms", Json::Num(42.0)),
+        ]);
+        let m = MetricPoint::from_report(&report);
+        SearchResult {
+            axes: vec!["capacity-factor".into()],
+            objective: Objective::Cost,
+            grid_points: 4,
+            full_requests: 64,
+            trajectory: vec![
+                RungStat {
+                    rung: 0,
+                    requests: 16,
+                    population: 4,
+                    errors: 1,
+                    dedup_hits: 1,
+                    simulated: 2,
+                    pruned: 1,
+                    promoted: 1,
+                },
+                RungStat {
+                    rung: 1,
+                    requests: 64,
+                    population: 1,
+                    errors: 0,
+                    dedup_hits: 0,
+                    simulated: 1,
+                    pruned: 0,
+                    promoted: 1,
+                },
+            ],
+            ranked: vec![SearchRanked {
+                point: pt(2, "1.25"),
+                hash: 0xdead_beef,
+                report,
+                metrics: m,
+                score: Objective::Cost.score(&m),
+                pareto: true,
+            }],
+            errors: vec![SearchError {
+                point: pt(0, "0.0|bad"),
+                rung: 0,
+                error: "capacity factor must be positive (got 0|bad)".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn markdown_has_summary_trajectory_ranking_and_errors() {
+        let md = search_markdown(&fake_result());
+        assert!(md.starts_with("objective=cost grid_points=4 searched_points=3 dedup_hits=1"));
+        assert!(md.contains("## Trajectory"));
+        assert!(md.contains("## Ranking"));
+        assert!(md.contains("## Errors"));
+        assert!(md.contains("capacity-factor=0.0/bad"), "pipes sanitized: {md}");
+        // every row of every table keeps its table's column count
+        for table in md.split("\n\n").filter(|s| s.starts_with('|')) {
+            let pipes = table.lines().next().unwrap().matches('|').count();
+            assert!(table.lines().all(|l| l.matches('|').count() == pipes), "{table}");
+        }
+    }
+
+    #[test]
+    fn csv_is_ranking_only_and_rectangular() {
+        let csv = search_csv(&fake_result());
+        assert!(csv.starts_with("rank,capacity-factor,pareto,cost_gpu_s_per_1k"));
+        let cols = csv.lines().next().unwrap().matches(',').count();
+        assert!(csv.lines().all(|l| l.matches(',').count() == cols), "{csv}");
+        assert_eq!(csv.lines().count(), 2, "header + one ranked row");
+        assert!(csv.contains("1,1.25,*,2.000,3.00,42.00,500.00,9,3.000"), "{csv}");
+    }
+
+    #[test]
+    fn json_embeds_trajectory_hash_and_written_flags() {
+        let j = search_json(&fake_result());
+        assert_eq!(j.req("searched_points").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.req("dedup_hits").unwrap().as_f64().unwrap(), 1.0);
+        let traj = j.req("trajectory").unwrap().as_arr().unwrap();
+        assert_eq!(traj.len(), 2);
+        assert_eq!(traj[0].req("pruned").unwrap().as_f64().unwrap(), 1.0);
+        let ranked = j.req("ranked").unwrap().as_arr().unwrap();
+        assert_eq!(ranked[0].req("config_hash").unwrap().as_str().unwrap(), "00000000deadbeef");
+        assert!(ranked[0].req("pareto").unwrap().as_bool().unwrap());
+        assert_eq!(ranked[0].req("rank").unwrap().as_f64().unwrap(), 1.0);
+        let errs = j.req("errors").unwrap().as_arr().unwrap();
+        assert_eq!(
+            errs[0].req("written").unwrap().req("capacity-factor").unwrap().as_str().unwrap(),
+            "0.0|bad",
+            "JSON keeps raw flag text"
+        );
+        // the whole document round-trips (no bare inf/nan leaked in)
+        let text = j.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        // a degenerate metric serializes as null, not bare inf
+        let mut degenerate = fake_result();
+        degenerate.ranked[0].metrics.cost_gpu_s_per_1k = f64::INFINITY;
+        degenerate.ranked[0].score = f64::INFINITY;
+        let text = search_json(&degenerate).to_string_pretty();
+        assert!(Json::parse(&text).is_ok(), "{text}");
+        assert!(!text.contains("inf"), "{text}");
+    }
+}

@@ -165,7 +165,19 @@ pub fn sweep_json(result: &SweepResult) -> Json {
             ];
             match &r.outcome {
                 Ok(rep) => fields.push(("report", rep.to_json_deterministic())),
-                Err(e) => fields.push(("error", Json::Str(e.clone()))),
+                Err(e) => {
+                    // failed points carry the concrete flags they would
+                    // have written, so a single error row in a 10k-grid
+                    // is identifiable without re-deriving grid indices
+                    let written = r
+                        .point
+                        .written
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect();
+                    fields.push(("error", Json::Str(e.clone())));
+                    fields.push(("written", Json::Obj(written)));
+                }
             }
             Json::obj(fields)
         })
@@ -206,6 +218,7 @@ mod tests {
                 index: 0,
                 assigns: vec![("capacity-factor".into(), "1.25".into())],
                 label: "capacity-factor=1.25".into(),
+                written: vec![("capacity-factor".into(), "1.25".into())],
             },
             outcome: Ok(fake_report(400)),
         };
@@ -214,6 +227,7 @@ mod tests {
                 index: 1,
                 assigns: vec![("capacity-factor".into(), "2.0".into())],
                 label: "capacity-factor=2.0".into(),
+                written: vec![("capacity-factor".into(), "2.0".into())],
             },
             outcome: Err("boom, with a comma (a|b|c)".into()),
         };
@@ -264,6 +278,12 @@ mod tests {
             "boom, with a comma (a|b|c)",
             "JSON carries the raw error; only table renderers sanitize"
         );
+        assert_eq!(
+            pts[1].req("written").unwrap().req("capacity-factor").unwrap().as_str().unwrap(),
+            "2.0",
+            "error rows carry the flags the point would have written"
+        );
+        assert!(pts[0].get("written").is_none(), "ok rows embed the report instead");
         assert_eq!(
             pts[0].req("assigns").unwrap().req("capacity-factor").unwrap().as_str().unwrap(),
             "1.25"

@@ -1,0 +1,250 @@
+//! Resumable run manifests: config hash → per-point report on disk.
+//!
+//! Layout under the `--manifest DIR` directory:
+//!
+//! ```text
+//! DIR/
+//!   manifest.jsonl        append-only, one line per finished simulation
+//!   points/<hash>.json    the deterministic per-point report document
+//! ```
+//!
+//! Each `manifest.jsonl` line is a compact JSON object:
+//! `{"hash":"16-hex","status":"done","path":"points/<hash>.json",
+//! "rung":R,"requests":N,"label":"...","written":"k=v k2=v2"}` (error
+//! outcomes carry `"status":"error","error":"..."` instead of a path).
+//! The report file is written *before* its manifest line, so a kill
+//! between the two leaves at worst an orphaned report that a resumed
+//! run harmlessly re-simulates; a torn final line (kill mid-write) is
+//! skipped on load. Duplicate hashes are last-wins, which makes
+//! repeated `--resume` runs append-safe.
+//!
+//! Crucially the manifest only changes *physical* work: the search
+//! trajectory and merged report are computed as if every lookup had
+//! been simulated fresh, which is what makes killed-then-resumed
+//! output byte-identical to an uninterrupted run.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::config::json::Json;
+use crate::sweep::SweepPoint;
+
+/// A finished simulation as recorded on disk.
+enum Entry {
+    /// Report file path, relative to the manifest directory.
+    Done(String),
+    /// The run error, rendered as text.
+    Error(String),
+}
+
+/// An open run manifest ([module docs](self) describe the on-disk
+/// layout). `record` is safe to call from sweep worker threads.
+pub struct Manifest {
+    dir: PathBuf,
+    file: Mutex<File>,
+    cached: HashMap<u64, Entry>,
+}
+
+/// Minimal JSON string escaping for manifest lines (labels and flag
+/// values are flag-grammar text, but quotes/backslashes must not tear
+/// the line format).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Manifest {
+    /// Open (or create) the manifest under `dir`. A pre-existing
+    /// `manifest.jsonl` is refused unless `resume` is set — silently
+    /// appending to a stale run is how wrong reports get shipped;
+    /// `--resume` on a fresh directory is allowed (resuming "nothing"
+    /// is just a cold run).
+    pub fn open(dir: &Path, resume: bool) -> Result<Manifest> {
+        let path = dir.join("manifest.jsonl");
+        if path.exists() && !resume {
+            bail!(
+                "manifest {} already exists; pass --resume to continue that run \
+                 or point --manifest at a fresh directory",
+                path.display()
+            );
+        }
+        fs::create_dir_all(dir.join("points"))?;
+        let mut cached = HashMap::new();
+        if resume && path.exists() {
+            for line in fs::read_to_string(&path)?.lines() {
+                // a torn tail line (killed mid-write) parses as garbage:
+                // skip it, the point re-simulates
+                let Ok(doc) = Json::parse(line) else { continue };
+                let Some(hash) = doc
+                    .get("hash")
+                    .and_then(|h| h.as_str().ok())
+                    .and_then(|h| u64::from_str_radix(h, 16).ok())
+                else {
+                    continue;
+                };
+                let entry = match doc.get("status").and_then(|s| s.as_str().ok()) {
+                    Some("done") => match doc.get("path").and_then(|p| p.as_str().ok()) {
+                        Some(p) => Entry::Done(p.to_string()),
+                        None => continue,
+                    },
+                    Some("error") => match doc.get("error").and_then(|e| e.as_str().ok()) {
+                        Some(e) => Entry::Error(e.to_string()),
+                        None => continue,
+                    },
+                    _ => continue,
+                };
+                cached.insert(hash, entry); // last-wins
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(Manifest { dir: dir.to_path_buf(), file: Mutex::new(file), cached })
+    }
+
+    /// Simulations already on disk when this manifest was opened.
+    pub fn cached_len(&self) -> usize {
+        self.cached.len()
+    }
+
+    /// Look up a finished outcome by config hash. `Done` entries
+    /// re-read and re-parse the report file; a missing or corrupt file
+    /// degrades to a miss (the point re-simulates) rather than an
+    /// error.
+    pub fn lookup(&self, hash: u64) -> Option<Result<Json, String>> {
+        match self.cached.get(&hash)? {
+            Entry::Error(e) => Some(Err(e.clone())),
+            Entry::Done(rel) => {
+                let text = fs::read_to_string(self.dir.join(rel)).ok()?;
+                Json::parse(&text).ok().map(Ok)
+            }
+        }
+    }
+
+    /// Persist one finished simulation: the report file first, then
+    /// its manifest line (one atomic-enough `write_all` under the file
+    /// mutex). Persistence failures are reported on stderr but never
+    /// fail the search — the in-memory run still completes; only
+    /// resumability degrades.
+    pub fn record(
+        &self,
+        hash: u64,
+        requests: u32,
+        rung: u32,
+        leader: &SweepPoint,
+        outcome: &Result<Json, String>,
+    ) {
+        let written = leader
+            .written
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let tail = match outcome {
+            Ok(doc) => {
+                let rel = format!("points/{hash:016x}.json");
+                if let Err(e) = fs::write(self.dir.join(&rel), doc.to_string_pretty() + "\n") {
+                    eprintln!("[search] failed to persist {rel}: {e}");
+                    return; // no manifest line for an unwritten report
+                }
+                format!("\"status\":\"done\",\"path\":\"{rel}\"")
+            }
+            Err(e) => format!("\"status\":\"error\",\"error\":\"{}\"", esc(e)),
+        };
+        let line = format!(
+            "{{\"hash\":\"{hash:016x}\",{tail},\"rung\":{rung},\"requests\":{requests},\
+             \"label\":\"{}\",\"written\":\"{}\"}}\n",
+            esc(&leader.label),
+            esc(&written),
+        );
+        let mut f = self.file.lock().expect("manifest mutex poisoned");
+        if let Err(e) = f.write_all(line.as_bytes()) {
+            eprintln!("[search] failed to append manifest line: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("frontier_manifest_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn pt(label: &str) -> SweepPoint {
+        SweepPoint {
+            index: 0,
+            assigns: vec![("seed".into(), "1".into())],
+            label: label.to_string(),
+            written: vec![("seed".into(), "1".into())],
+        }
+    }
+
+    #[test]
+    fn round_trips_done_and_error_entries() {
+        let dir = tmp("round_trip");
+        let m = Manifest::open(&dir, false).unwrap();
+        let doc = Json::obj(vec![("completed", Json::Num(7.0))]);
+        m.record(0xabc, 16, 0, &pt("seed=1"), &Ok(doc.clone()));
+        m.record(0xdef, 16, 0, &pt("seed=\"2\""), &Err("bad \"config\"\nline".into()));
+        drop(m);
+        let m = Manifest::open(&dir, true).unwrap();
+        assert_eq!(m.cached_len(), 2);
+        assert_eq!(m.lookup(0xabc), Some(Ok(doc)));
+        assert_eq!(m.lookup(0xdef), Some(Err("bad \"config\"\nline".into())));
+        assert_eq!(m.lookup(0x123), None, "unknown hash is a miss");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn refuses_existing_manifest_without_resume() {
+        let dir = tmp("no_clobber");
+        let m = Manifest::open(&dir, false).unwrap();
+        m.record(1, 8, 0, &pt("x"), &Ok(Json::obj(vec![])));
+        drop(m);
+        let err = Manifest::open(&dir, false).unwrap_err().to_string();
+        assert!(err.contains("--resume"), "hint in {err:?}");
+        // resume on a *fresh* directory is a cold run, not an error
+        let fresh = tmp("fresh_resume");
+        let m = Manifest::open(&fresh, true).unwrap();
+        assert_eq!(m.cached_len(), 0);
+        fs::remove_dir_all(&dir).unwrap();
+        fs::remove_dir_all(&fresh).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_line_and_duplicates_are_handled() {
+        let dir = tmp("torn_tail");
+        let m = Manifest::open(&dir, false).unwrap();
+        m.record(5, 8, 0, &pt("a"), &Err("first".into()));
+        m.record(5, 32, 1, &pt("a"), &Err("second".into())); // last wins
+        drop(m);
+        let path = dir.join("manifest.jsonl");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"hash\":\"00000000000000ff\",\"status\":\"do").unwrap();
+        drop(f);
+        let m = Manifest::open(&dir, true).unwrap();
+        assert_eq!(m.cached_len(), 1);
+        assert_eq!(m.lookup(5), Some(Err("second".into())));
+        assert_eq!(m.lookup(0xff), None, "torn line is skipped");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,711 @@
+//! Successive-halving autotuner over the sweep engine.
+//!
+//! A brute-force grid ([`crate::sweep`]) simulates every point at the
+//! full horizon; this module turns the same grid into an *optimizer*
+//! with three compounding cost cuts:
+//!
+//! 1. **Config-hash dedup** — every point is lowered and hashed
+//!    ([`crate::sweep::config_hash`], the normalized
+//!    [`crate::sweep::comparable_repr`]); points that differ only in
+//!    inert flags (a `migration-threshold` axis under `migration=off`,
+//!    a `sim-threads` axis, dead shape flags under `--stages`) share
+//!    one simulation — the first point in grid order simulates, the
+//!    rest link to its report.
+//! 2. **Successive halving** — rung `r` of `R` runs at `max(4,
+//!    requests / 4^(R-1-r))` requests; only the top
+//!    [`SearchSpec::promote_frac`] fraction by [`Objective`] advances,
+//!    so the full horizon is paid only for survivors.
+//! 3. **Pareto pruning** — between rungs, points dominated on (cost,
+//!    goodput, p99) by another survivor are dropped before ranking, so
+//!    dominated regions are never promoted ([`pareto_kept`]).
+//!
+//! With `--manifest DIR` every finished simulation is persisted
+//! incrementally ([`manifest::Manifest`]: an append-only
+//! `manifest.jsonl` mapping config hash → per-point report JSON), so a
+//! killed 10k-point search resumes from the last finished point
+//! (`--resume`) — and because rung scheduling, dedup leader election,
+//! promotion, and ranking are all pure functions of the grid and the
+//! (deterministic) reports, a resumed run's merged report is
+//! byte-identical to an uninterrupted one, for any `--threads`
+//! (`rust/tests/search.rs` pins all of this).
+//!
+//! Rendering lives in [`crate::report::search`]; the `frontier search`
+//! subcommand and the `capacity_search` example are thin front-ends.
+
+pub mod manifest;
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::json::Json;
+use crate::config::ExperimentConfig;
+use crate::sweep::{config_hash, fan_out, SweepPoint, SweepSpec};
+use manifest::Manifest;
+
+/// Rung horizons never drop below this many requests: shorter runs
+/// measure warmup, not steady state.
+pub const MIN_RUNG_REQUESTS: u32 = 4;
+
+/// What the search optimizes. Every objective is scored
+/// lower-is-better ([`Objective::score`]); ranking ties break by grid
+/// index so the ordering is deterministic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// GPU-seconds per 1000 generated tokens (the paper's capacity
+    /// question): `1000 / tokens_per_sec_per_gpu`.
+    Cost,
+    /// Requests per second that met their SLOs (falls back to plain
+    /// completion throughput when no `--slo-*` thresholds are set).
+    Goodput,
+    /// Tail latency: TBT p99 in milliseconds.
+    P99,
+}
+
+impl Objective {
+    /// Parse the `--objective` grammar: `cost` | `goodput` | `p99`.
+    pub fn parse(s: &str) -> Result<Objective> {
+        Ok(match s {
+            "cost" => Objective::Cost,
+            "goodput" => Objective::Goodput,
+            "p99" => Objective::P99,
+            _ => bail!("unknown objective {s:?} (cost|goodput|p99)"),
+        })
+    }
+
+    /// The CLI name of this objective.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Cost => "cost",
+            Objective::Goodput => "goodput",
+            Objective::P99 => "p99",
+        }
+    }
+
+    /// Lower-is-better score of one metric point (goodput is negated).
+    pub fn score(&self, m: &MetricPoint) -> f64 {
+        match self {
+            Objective::Cost => m.cost_gpu_s_per_1k,
+            Objective::Goodput => -m.goodput_rps,
+            Objective::P99 => m.tbt_p99_ms,
+        }
+    }
+}
+
+/// The (cost, goodput, p99) coordinates of one simulated config — the
+/// space the Pareto pruner and every [`Objective`] read. Extracted from
+/// the deterministic report document; missing or non-finite values are
+/// mapped to the *worst* end of their axis so a degenerate run can
+/// never dominate a healthy one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricPoint {
+    /// GPU-seconds per 1000 generated tokens (lower is better).
+    pub cost_gpu_s_per_1k: f64,
+    /// SLO-satisfying requests per second, or plain completion
+    /// throughput without SLO thresholds (higher is better).
+    pub goodput_rps: f64,
+    /// TBT p99 in milliseconds (lower is better).
+    pub tbt_p99_ms: f64,
+}
+
+impl MetricPoint {
+    /// Extract the metric point from a deterministic report document
+    /// ([`crate::metrics::SimReport::to_json_deterministic`]).
+    pub fn from_report(doc: &Json) -> MetricPoint {
+        let num = |k: &str| doc.get(k).and_then(|v| v.as_f64().ok());
+        let tok = num("tokens_per_sec_per_gpu").unwrap_or(0.0);
+        let cost = if tok > 0.0 && tok.is_finite() {
+            1000.0 / tok
+        } else {
+            f64::INFINITY
+        };
+        let goodput = num("goodput_rps")
+            .or_else(|| {
+                // without SLO thresholds every completion counts
+                let done = num("completed")?;
+                let sim = num("sim_duration_s")?;
+                if sim > 0.0 {
+                    Some(done / sim)
+                } else {
+                    None
+                }
+            })
+            .unwrap_or(0.0);
+        let p99 = num("tbt_p99_ms").unwrap_or(f64::INFINITY);
+        MetricPoint {
+            cost_gpu_s_per_1k: if cost.is_nan() { f64::INFINITY } else { cost },
+            goodput_rps: if goodput.is_nan() { 0.0 } else { goodput },
+            tbt_p99_ms: if p99.is_nan() { f64::INFINITY } else { p99 },
+        }
+    }
+}
+
+/// Pareto filter on (cost, goodput, p99): `kept[i]` is `true` iff no
+/// other point dominates point `i`. `a` dominates `b` when `a` is at
+/// least as good on all three axes (≤ cost, ≥ goodput, ≤ p99) and
+/// strictly better on at least one — so identical points (dedup twins)
+/// never dominate each other and survive together, and a non-dominated
+/// point is never discarded (property-tested in `rust/tests/search.rs`).
+pub fn pareto_kept(points: &[MetricPoint]) -> Vec<bool> {
+    let dominates = |a: &MetricPoint, b: &MetricPoint| {
+        a.cost_gpu_s_per_1k <= b.cost_gpu_s_per_1k
+            && a.goodput_rps >= b.goodput_rps
+            && a.tbt_p99_ms <= b.tbt_p99_ms
+            && (a.cost_gpu_s_per_1k < b.cost_gpu_s_per_1k
+                || a.goodput_rps > b.goodput_rps
+                || a.tbt_p99_ms < b.tbt_p99_ms)
+    };
+    points.iter().map(|b| !points.iter().any(|a| dominates(a, b))).collect()
+}
+
+/// A full search: the sweep (base flags + grid + post-hook) plus the
+/// optimizer knobs.
+pub struct SearchSpec {
+    /// The design space, exactly as a `frontier sweep` would define it.
+    pub sweep: SweepSpec,
+    /// What to optimize (and rank the final survivors by).
+    pub objective: Objective,
+    /// Successive-halving rungs (1 = a plain full-horizon pass with
+    /// dedup and Pareto marking only).
+    pub rungs: u32,
+    /// Fraction of (non-dominated, non-error) survivors promoted per
+    /// rung, in `(0, 1]`; at least one point always advances.
+    pub promote_frac: f64,
+}
+
+/// One rung of the search trajectory. Every count is *logical* — a
+/// pure function of the grid and the deterministic reports — so the
+/// trajectory is byte-identical whether simulations ran fresh or were
+/// reloaded from a manifest (physical manifest reuse is reported on
+/// stderr instead).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RungStat {
+    /// Rung number (0-based).
+    pub rung: u32,
+    /// Workload size this rung simulated at.
+    pub requests: u32,
+    /// Points entering the rung.
+    pub population: usize,
+    /// Points whose config failed to lower or whose run errored here.
+    pub errors: usize,
+    /// Points that shared another point's simulation (config-hash
+    /// dedup, within the rung or against an earlier rung).
+    pub dedup_hits: usize,
+    /// Unique configurations this rung had to simulate.
+    pub simulated: usize,
+    /// Survivors dropped as Pareto-dominated before promotion.
+    pub pruned: usize,
+    /// Points promoted to the next rung (on the final rung: the
+    /// ranked survivor count).
+    pub promoted: usize,
+}
+
+/// One final-rung survivor, ranked.
+#[derive(Clone, Debug)]
+pub struct SearchRanked {
+    /// The grid point.
+    pub point: SweepPoint,
+    /// Normalized config hash at the full horizon (the manifest key).
+    pub hash: u64,
+    /// Deterministic full-horizon report document.
+    pub report: Json,
+    /// The (cost, goodput, p99) coordinates of `report`.
+    pub metrics: MetricPoint,
+    /// Lower-is-better objective score ([`Objective::score`]).
+    pub score: f64,
+    /// On the final (cost, goodput, p99) Pareto frontier.
+    pub pareto: bool,
+}
+
+/// A grid point that errored (at lowering or simulation); the rung
+/// records where it died, [`SweepPoint::written`] makes it
+/// identifiable without re-deriving grid indices.
+#[derive(Clone, Debug)]
+pub struct SearchError {
+    /// The grid point.
+    pub point: SweepPoint,
+    /// Rung at which the error surfaced.
+    pub rung: u32,
+    /// The config/run error, rendered as text.
+    pub error: String,
+}
+
+/// A completed search.
+#[derive(Debug)]
+pub struct SearchResult {
+    /// Axis names of the cartesian grid (empty for explicit lists).
+    pub axes: Vec<String>,
+    /// The objective the ranking used.
+    pub objective: Objective,
+    /// Total grid size (before any pruning).
+    pub grid_points: usize,
+    /// Full-horizon request count (the last rung's workload size).
+    pub full_requests: u32,
+    /// Per-rung populations / prune counts / dedup hits.
+    pub trajectory: Vec<RungStat>,
+    /// Final-rung survivors, best objective score first (ties broken
+    /// by grid index).
+    pub ranked: Vec<SearchRanked>,
+    /// Every point that errored, in grid order.
+    pub errors: Vec<SearchError>,
+}
+
+impl SearchResult {
+    /// Unique simulations the search logically ran, across all rungs —
+    /// the numerator of the searched-points/full-grid ratio the perf
+    /// gate pins (`BENCH_search.json`).
+    pub fn searched_points(&self) -> usize {
+        self.trajectory.iter().map(|r| r.simulated).sum()
+    }
+
+    /// Total config-hash dedup hits across all rungs.
+    pub fn dedup_hits(&self) -> usize {
+        self.trajectory.iter().map(|r| r.dedup_hits).sum()
+    }
+}
+
+/// Drives a [`SearchSpec`]: lowers and hashes every live point per
+/// rung, fans unique configs across worker threads (reusing the sweep
+/// engine's index-slot collection, so results are deterministic for
+/// any thread count), and persists/reloads per-point reports through
+/// an optional [`Manifest`].
+pub struct SearchRunner {
+    /// Worker threads; `0` (the default) means one per available core.
+    pub threads: usize,
+    /// Persist per-point reports + the run manifest here (`--manifest`).
+    pub manifest_dir: Option<PathBuf>,
+    /// Reuse an existing manifest instead of refusing to overwrite it
+    /// (`--resume`); requires `manifest_dir`.
+    pub resume: bool,
+    /// Abort (with progress safely in the manifest) after this many
+    /// fresh simulations (`--max-sims`) — the kill switch the
+    /// resume tests and the CI kill-and-resume step use.
+    pub max_sims: Option<usize>,
+    /// Config-hash dedup (default on). The `false` setting exists so
+    /// tests can pin that dedup never changes *what* is found — it is
+    /// not reachable from the CLI and is incompatible with a manifest
+    /// (the manifest is keyed by config hash).
+    pub dedup: bool,
+}
+
+impl Default for SearchRunner {
+    fn default() -> SearchRunner {
+        SearchRunner {
+            threads: 0,
+            manifest_dir: None,
+            resume: false,
+            max_sims: None,
+            dedup: true,
+        }
+    }
+}
+
+/// One unique configuration a rung must simulate.
+struct Job {
+    /// Memo key (the config hash, or a per-point synthetic key when
+    /// dedup is disabled).
+    key: u64,
+    /// The real config hash (manifest key).
+    hash: u64,
+    /// Grid index of the first point that lowered to this config (its
+    /// label/written flags identify the job in the manifest).
+    leader: usize,
+    /// The lowered config.
+    cfg: ExperimentConfig,
+}
+
+impl SearchRunner {
+    /// A runner with an explicit thread count (`0` = all cores).
+    pub fn with_threads(threads: usize) -> SearchRunner {
+        SearchRunner { threads, ..SearchRunner::default() }
+    }
+
+    fn resolved_threads(&self) -> usize {
+        match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+        .max(1)
+    }
+
+    /// Run the search. Deterministic by construction: rung scheduling,
+    /// dedup leader election, promotion, and ranking depend only on
+    /// the grid order and the (deterministic) reports — never on
+    /// thread interleaving or manifest state.
+    pub fn run(&self, spec: &SearchSpec) -> Result<SearchResult> {
+        if !(1..=10).contains(&spec.rungs) {
+            bail!("--rungs must be in 1..=10 (got {})", spec.rungs);
+        }
+        if !spec.promote_frac.is_finite() || spec.promote_frac <= 0.0 || spec.promote_frac > 1.0 {
+            bail!("--promote-frac must be in (0, 1] (got {})", spec.promote_frac);
+        }
+        if let Some(w) = spec.sweep.base.get("workload") {
+            if w.starts_with("trace:") {
+                bail!(
+                    "search cannot run over a trace replay (--workload trace:FILE): the \
+                     successive-halving rungs re-scale --requests, which a recorded \
+                     trace pins"
+                );
+            }
+        }
+        let points = spec.sweep.points()?;
+        for p in &points {
+            for (k, _) in &p.assigns {
+                if k.strip_prefix("flag:").unwrap_or(k) == "requests" {
+                    bail!(
+                        "axis/point key {k:?}: the search engine owns --requests (the \
+                         successive-halving horizon ladder); set the full horizon with \
+                         a base --requests flag instead"
+                    );
+                }
+            }
+        }
+        let full: u32 = spec.sweep.base.num("requests", 256u32)?;
+        if full == 0 {
+            bail!("--requests must be >= 1");
+        }
+        let manifest = match &self.manifest_dir {
+            Some(dir) => {
+                if !self.dedup {
+                    bail!("a manifest requires dedup: manifest entries are keyed by config hash");
+                }
+                Some(Manifest::open(dir, self.resume)?)
+            }
+            None => {
+                if self.resume {
+                    bail!("--resume requires --manifest DIR");
+                }
+                None
+            }
+        };
+        let threads = self.resolved_threads();
+
+        // memo: key -> outcome document; spans rungs, so colliding
+        // horizons (a tiny --requests flooring several rungs to the
+        // same size) cost nothing extra
+        let mut memo: HashMap<u64, Result<Json, String>> = HashMap::new();
+        let mut alive: Vec<usize> = (0..points.len()).collect();
+        let mut errors: BTreeMap<usize, SearchError> = BTreeMap::new();
+        let mut trajectory: Vec<RungStat> = Vec::new();
+        let mut ranked: Vec<SearchRanked> = Vec::new();
+        let mut sims_spent = 0usize;
+        let mut manifest_hits = 0usize;
+
+        for rung in 0..spec.rungs {
+            let divisor = 4u64.pow(spec.rungs - 1 - rung);
+            let horizon =
+                ((full as u64 / divisor).max(MIN_RUNG_REQUESTS as u64).min(full as u64)) as u32;
+            let population = alive.len();
+            let mut rung_errors = 0usize;
+            let mut rung_dedup = 0usize;
+            // lower + hash every live point in grid order (cheap: flag
+            // parsing, no simulation); first point with a given hash
+            // leads, later ones link to its report
+            let mut seen: HashSet<u64> = HashSet::new();
+            let mut jobs: Vec<Job> = Vec::new();
+            let mut keyed: Vec<(usize, u64, u64)> = Vec::new(); // (grid idx, key, hash)
+            for &gi in &alive {
+                match spec.sweep.point_config_at_horizon(&points[gi], horizon) {
+                    Err(e) => {
+                        errors.entry(gi).or_insert_with(|| SearchError {
+                            point: points[gi].clone(),
+                            rung,
+                            error: format!("{e:#}"),
+                        });
+                        rung_errors += 1;
+                    }
+                    Ok(cfg) => {
+                        let hash = config_hash(&cfg);
+                        let key = if self.dedup {
+                            hash
+                        } else {
+                            ((rung as u64) << 32) | gi as u64
+                        };
+                        if memo.contains_key(&key) || !seen.insert(key) {
+                            rung_dedup += 1;
+                        } else {
+                            jobs.push(Job { key, hash, leader: gi, cfg });
+                        }
+                        keyed.push((gi, key, hash));
+                    }
+                }
+            }
+            let simulated = jobs.len();
+            // cross-run reuse: the manifest supplies finished reports;
+            // this changes only *physical* work, never the trajectory
+            let mut to_run: Vec<Job> = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                match manifest.as_ref().and_then(|m| m.lookup(job.hash)) {
+                    Some(outcome) => {
+                        manifest_hits += 1;
+                        memo.insert(job.key, outcome);
+                    }
+                    None => to_run.push(job),
+                }
+            }
+            // budget (the kill switch): run what fits, persist it,
+            // then bail — a rerun with --resume picks up exactly here
+            if let Some(budget) = self.max_sims {
+                let remaining = budget.saturating_sub(sims_spent);
+                if to_run.len() > remaining {
+                    let partial = &to_run[..remaining];
+                    self.execute(partial, threads, manifest.as_ref(), &points, horizon, rung)
+                        .into_iter()
+                        .for_each(|(k, o)| {
+                            memo.insert(k, o);
+                        });
+                    bail!(
+                        "--max-sims budget of {budget} exhausted at rung {rung} ({} of {} \
+                         pending simulations done){}",
+                        remaining,
+                        to_run.len(),
+                        if manifest.is_some() {
+                            "; progress is in the manifest — rerun with --resume"
+                        } else {
+                            " (pass --manifest DIR to make the budget resumable)"
+                        }
+                    );
+                }
+            }
+            sims_spent += to_run.len();
+            let done = self.execute(&to_run, threads, manifest.as_ref(), &points, horizon, rung);
+            for (k, o) in done {
+                memo.insert(k, o);
+            }
+            // evaluate: split survivors from run errors
+            let mut survivors: Vec<(usize, u64, MetricPoint, f64)> = Vec::new();
+            for (gi, key, hash) in keyed {
+                match &memo[&key] {
+                    Err(e) => {
+                        errors.entry(gi).or_insert_with(|| SearchError {
+                            point: points[gi].clone(),
+                            rung,
+                            error: e.clone(),
+                        });
+                        rung_errors += 1;
+                    }
+                    Ok(doc) => {
+                        let m = MetricPoint::from_report(doc);
+                        survivors.push((gi, hash, m, spec.objective.score(&m)));
+                    }
+                }
+            }
+            let last = rung + 1 == spec.rungs;
+            if last {
+                let kept = pareto_kept(&survivors.iter().map(|s| s.2).collect::<Vec<_>>());
+                let mut order: Vec<usize> = (0..survivors.len()).collect();
+                order.sort_by(|&a, &b| {
+                    let (sa, sb) = (&survivors[a], &survivors[b]);
+                    sa.3.total_cmp(&sb.3).then(sa.0.cmp(&sb.0))
+                });
+                ranked = order
+                    .into_iter()
+                    .map(|i| {
+                        let (gi, hash, m, score) = survivors[i];
+                        let report_key = if self.dedup {
+                            hash
+                        } else {
+                            ((rung as u64) << 32) | gi as u64
+                        };
+                        let report = memo[&report_key]
+                            .as_ref()
+                            .cloned()
+                            .expect("survivors hold Ok outcomes");
+                        SearchRanked {
+                            point: points[gi].clone(),
+                            hash,
+                            report,
+                            metrics: m,
+                            score,
+                            pareto: kept[i],
+                        }
+                    })
+                    .collect();
+                trajectory.push(RungStat {
+                    rung,
+                    requests: horizon,
+                    population,
+                    errors: rung_errors,
+                    dedup_hits: rung_dedup,
+                    simulated,
+                    pruned: 0,
+                    promoted: ranked.len(),
+                });
+            } else {
+                let kept = pareto_kept(&survivors.iter().map(|s| s.2).collect::<Vec<_>>());
+                let mut pool: Vec<&(usize, u64, MetricPoint, f64)> = survivors
+                    .iter()
+                    .zip(&kept)
+                    .filter_map(|(s, &k)| if k { Some(s) } else { None })
+                    .collect();
+                let pruned = survivors.len() - pool.len();
+                pool.sort_by(|a, b| a.3.total_cmp(&b.3).then(a.0.cmp(&b.0)));
+                let promote = if pool.is_empty() {
+                    0
+                } else {
+                    // -1e-9 guards fp wobble (0.3 * 10 = 3.0000000000000004)
+                    (((pool.len() as f64) * spec.promote_frac - 1e-9).ceil() as usize)
+                        .clamp(1, pool.len())
+                };
+                let mut next: Vec<usize> = pool[..promote].iter().map(|s| s.0).collect();
+                next.sort_unstable(); // next rung walks in grid order
+                alive = next;
+                trajectory.push(RungStat {
+                    rung,
+                    requests: horizon,
+                    population,
+                    errors: rung_errors,
+                    dedup_hits: rung_dedup,
+                    simulated,
+                    pruned,
+                    promoted: promote,
+                });
+            }
+        }
+        if manifest_hits > 0 {
+            // physical accounting stays off the (byte-identical) report
+            eprintln!("[search] {manifest_hits} simulations reused from the manifest");
+        }
+        Ok(SearchResult {
+            axes: spec.sweep.axis_names(),
+            objective: spec.objective,
+            grid_points: points.len(),
+            full_requests: full,
+            trajectory,
+            ranked,
+            errors: errors.into_values().collect(),
+        })
+    }
+
+    /// Fan `jobs` across the workers, record each finished simulation
+    /// in the manifest, and return `(key, outcome)` pairs.
+    fn execute(
+        &self,
+        jobs: &[Job],
+        threads: usize,
+        manifest: Option<&Manifest>,
+        points: &[SweepPoint],
+        requests: u32,
+        rung: u32,
+    ) -> Vec<(u64, Result<Json, String>)> {
+        fan_out(threads, jobs.len(), |i| {
+            let job = &jobs[i];
+            let mut cfg = job.cfg.clone();
+            if threads > 1 {
+                // job-level parallelism already saturates the cores
+                // (reports are bit-identical either way)
+                cfg.sim_threads = 1;
+            }
+            let outcome = crate::run_experiment(&cfg)
+                .map(|rep| rep.to_json_deterministic())
+                .map_err(|e| format!("{e:#}"));
+            if let Some(m) = manifest {
+                m.record(job.hash, requests, rung, &points[job.leader], &outcome);
+            }
+            (job.key, outcome)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_grammar_and_scores() {
+        assert_eq!(Objective::parse("cost").unwrap(), Objective::Cost);
+        assert_eq!(Objective::parse("goodput").unwrap(), Objective::Goodput);
+        assert_eq!(Objective::parse("p99").unwrap(), Objective::P99);
+        assert!(Objective::parse("latency").is_err());
+        let m = MetricPoint { cost_gpu_s_per_1k: 2.0, goodput_rps: 5.0, tbt_p99_ms: 80.0 };
+        assert_eq!(Objective::Cost.score(&m), 2.0);
+        assert_eq!(Objective::Goodput.score(&m), -5.0, "lower is better: negated");
+        assert_eq!(Objective::P99.score(&m), 80.0);
+        assert_eq!(Objective::Cost.name(), "cost");
+    }
+
+    #[test]
+    fn metric_point_extraction_and_fallbacks() {
+        let doc = Json::obj(vec![
+            ("tokens_per_sec_per_gpu", Json::Num(500.0)),
+            ("goodput_rps", Json::Num(3.5)),
+            ("tbt_p99_ms", Json::Num(42.0)),
+        ]);
+        let m = MetricPoint::from_report(&doc);
+        assert_eq!(m.cost_gpu_s_per_1k, 2.0);
+        assert_eq!(m.goodput_rps, 3.5);
+        assert_eq!(m.tbt_p99_ms, 42.0);
+        // no SLO block: goodput falls back to completion throughput
+        let doc = Json::obj(vec![
+            ("tokens_per_sec_per_gpu", Json::Num(0.0)),
+            ("completed", Json::Num(8.0)),
+            ("sim_duration_s", Json::Num(4.0)),
+        ]);
+        let m = MetricPoint::from_report(&doc);
+        assert_eq!(m.goodput_rps, 2.0);
+        assert_eq!(m.cost_gpu_s_per_1k, f64::INFINITY, "zero throughput = worst cost");
+        assert_eq!(m.tbt_p99_ms, f64::INFINITY, "missing tail = worst");
+    }
+
+    #[test]
+    fn pareto_keeps_frontier_and_twins() {
+        let p = |c: f64, g: f64, l: f64| MetricPoint {
+            cost_gpu_s_per_1k: c,
+            goodput_rps: g,
+            tbt_p99_ms: l,
+        };
+        // b dominated by a; c trades cost for goodput (kept); d == a
+        let pts = [p(1.0, 5.0, 10.0), p(2.0, 4.0, 12.0), p(3.0, 9.0, 10.0), p(1.0, 5.0, 10.0)];
+        assert_eq!(pareto_kept(&pts), [true, false, true, true]);
+        // a single point is trivially kept
+        assert_eq!(pareto_kept(&pts[..1]), [true]);
+        assert!(pareto_kept(&[]).is_empty());
+    }
+
+    #[test]
+    fn runner_rejects_bad_specs() {
+        use crate::config::cli::FlagMap;
+        use crate::sweep::Axis;
+        let mk = |base: FlagMap, axes: Vec<Axis>| SearchSpec {
+            sweep: SweepSpec::new(base).with_axes(axes),
+            objective: Objective::Cost,
+            rungs: 2,
+            promote_frac: 0.5,
+        };
+        let seed_axis = || Axis::new("seed", vec!["1".into(), "2".into()]).unwrap();
+        let runner = SearchRunner::with_threads(1);
+        // requests axes shadow the horizon ladder
+        let spec = mk(
+            FlagMap::new(),
+            vec![Axis::new("requests", vec!["8".into(), "16".into()]).unwrap()],
+        );
+        assert!(runner.run(&spec).unwrap_err().to_string().contains("requests"));
+        // trace bases pin the workload size
+        let mut base = FlagMap::new();
+        base.set("workload", "trace:w.json");
+        assert!(runner
+            .run(&mk(base, vec![seed_axis()]))
+            .unwrap_err()
+            .to_string()
+            .contains("trace"));
+        // optimizer knob ranges
+        let mut bad = mk(FlagMap::new(), vec![seed_axis()]);
+        bad.rungs = 0;
+        assert!(runner.run(&bad).is_err());
+        bad.rungs = 11;
+        assert!(runner.run(&bad).is_err());
+        bad.rungs = 2;
+        bad.promote_frac = 0.0;
+        assert!(runner.run(&bad).is_err());
+        bad.promote_frac = 1.5;
+        assert!(runner.run(&bad).is_err());
+        // --resume needs a manifest directory
+        let orphan = SearchRunner { resume: true, ..SearchRunner::with_threads(1) };
+        assert!(orphan
+            .run(&mk(FlagMap::new(), vec![seed_axis()]))
+            .unwrap_err()
+            .to_string()
+            .contains("--manifest"));
+    }
+}

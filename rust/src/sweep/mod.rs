@@ -255,6 +255,29 @@ pub struct SweepPoint {
     pub assigns: Vec<(String, String)>,
     /// Display label (`k=v k2=v2 ...` unless overridden).
     pub label: String,
+    /// The concrete flags the assignments write, sorted by flag name —
+    /// composite axes expanded (`pd-ratio=1:3` becomes `mode=pd
+    /// prefill=1 decode=3`), `flag:` prefixes stripped. Error rows and
+    /// search manifests carry this so a failed point in a 10k-grid is
+    /// identifiable without re-deriving grid indices. Falls back to the
+    /// raw assignments when one of them cannot be applied (the error
+    /// itself surfaces at lowering time).
+    pub written: Vec<(String, String)>,
+}
+
+/// The flags a point's assignments actually write (see
+/// [`SweepPoint::written`]).
+fn written_flags(assigns: &[(String, String)]) -> Vec<(String, String)> {
+    let mut flags = FlagMap::new();
+    for (name, value) in assigns {
+        if apply_assignment(name, value, &mut flags).is_err() {
+            return assigns.to_vec();
+        }
+    }
+    flags
+        .keys()
+        .map(|k| (k.to_string(), flags.get(k).unwrap_or_default().to_string()))
+        .collect()
 }
 
 impl SweepSpec {
@@ -329,7 +352,8 @@ impl SweepSpec {
                     }
                     assigns.reverse();
                     let label = join_assigns(&assigns);
-                    pts.push(SweepPoint { index, assigns, label });
+                    let written = written_flags(&assigns);
+                    pts.push(SweepPoint { index, assigns, label, written });
                 }
                 Ok(pts)
             }
@@ -359,6 +383,7 @@ impl SweepSpec {
                         index,
                         assigns: p.assigns.clone(),
                         label: p.label.clone().unwrap_or_else(|| join_assigns(&p.assigns)),
+                        written: written_flags(&p.assigns),
                     })
                     .collect())
             }
@@ -380,22 +405,117 @@ impl SweepSpec {
         }
         Ok(cfg)
     }
+
+    /// Like [`SweepSpec::point_config`], but with the workload size
+    /// forced to `requests` before the point's assignments apply — the
+    /// search engine lowers every rung of its successive-halving ladder
+    /// through this (the driver rejects `requests` axes up front, so an
+    /// assignment can never shadow the horizon back).
+    pub fn point_config_at_horizon(
+        &self,
+        point: &SweepPoint,
+        requests: u32,
+    ) -> Result<ExperimentConfig> {
+        let mut flags = self.base.clone();
+        flags.set("requests", requests.to_string());
+        for (name, value) in &point.assigns {
+            apply_assignment(name, value, &mut flags)?;
+        }
+        let mut cfg = build_config(&flags)?;
+        if let Some(post) = &self.post {
+            post(&mut cfg);
+        }
+        Ok(cfg)
+    }
+}
+
+/// Fan `n` index-addressed jobs across `threads` scoped workers and
+/// collect the results **by index**: workers pull the next unclaimed
+/// index from a shared counter and write into that index's slot, so the
+/// output order is deterministic for any thread count. This is the one
+/// fan-out primitive behind both [`SweepRunner`] and the search
+/// engine's rung scheduling ([`crate::search`]).
+pub(crate) fn fan_out<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every fan-out slot is filled"))
+        .collect()
 }
 
 /// Debug repr of a config with fields the runtime never reads
-/// normalized away, so the no-op-sweep guard compares what actually
-/// runs: an explicit stage graph makes the legacy `mode` (and with it
-/// `--replicas`/`--prefill`/`--decode`) dead, yet those flags still
-/// land in the struct.
-fn comparable_repr(cfg: &ExperimentConfig) -> String {
+/// normalized away, so two configs that *run identically* compare (and
+/// hash, see [`config_hash`]) identically:
+///
+/// * an explicit stage graph makes the legacy `mode` (and with it
+///   `--replicas`/`--prefill`/`--decode`) dead, yet those flags still
+///   land in the struct;
+/// * the parallel engine is bit-identical for any thread count, so
+///   `sim_threads` never changes what a point computes;
+/// * with migration off, the migration threshold and load window are
+///   never read (the load estimator is only attached when migration is
+///   on — pinned by `rust/tests/migration.rs`).
+///
+/// Normalization must be *semantics-preserving for errors too*: a knob
+/// is only folded onto its default when the given value passes the same
+/// `validate()` checks as the default, so a config that would fail
+/// validation keeps a distinct repr and still fails instead of silently
+/// reusing a valid twin's report. (This is why `capacity_factor` is
+/// never folded for dense models: `validate()` range-checks it
+/// regardless of the model.)
+///
+/// Both the no-op-sweep guard and the search engine's config-hash dedup
+/// compare this repr.
+pub fn comparable_repr(cfg: &ExperimentConfig) -> String {
     let mut c = cfg.clone();
     if c.stages.is_some() {
         c.mode = crate::config::DeploymentMode::Colocated { replicas: 0 };
     }
-    // the parallel engine is bit-identical for any thread count, so a
-    // sim-threads axis never changes what a point computes
     c.sim_threads = 1;
+    if c.policy.migration == crate::moe::MigrationPolicy::Off {
+        let default = crate::config::PolicyConfig::default();
+        // fold only values validate() accepts (finite, >= 1 / nonzero):
+        // out-of-range values must keep erroring, not alias a valid run
+        if c.policy.migration_threshold.is_finite() && c.policy.migration_threshold >= 1.0 {
+            c.policy.migration_threshold = default.migration_threshold;
+        }
+        if c.policy.load_window >= 1 {
+            c.policy.load_window = default.load_window;
+        }
+    }
     format!("{c:?}")
+}
+
+/// FNV-1a (64-bit) over [`comparable_repr`]: configs that run
+/// identically hash identically, so the search engine can share one
+/// simulation (and one manifest slot) between grid points that differ
+/// only in inert flags.
+pub fn config_hash(cfg: &ExperimentConfig) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in comparable_repr(cfg).as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 fn join_assigns(assigns: &[(String, String)]) -> String {
@@ -496,28 +616,7 @@ impl SweepRunner {
                 .map_err(|e| format!("{e:#}"));
             PointResult { point: p.clone(), outcome }
         };
-        let results: Vec<PointResult> = if threads == 1 {
-            points.iter().map(run_point).collect()
-        } else {
-            let next = AtomicUsize::new(0);
-            let slots: Vec<Mutex<Option<PointResult>>> =
-                points.iter().map(|_| Mutex::new(None)).collect();
-            std::thread::scope(|s| {
-                for _ in 0..threads {
-                    s.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= points.len() {
-                            break;
-                        }
-                        *slots[i].lock().unwrap() = Some(run_point(&points[i]));
-                    });
-                }
-            });
-            slots
-                .into_iter()
-                .map(|m| m.into_inner().unwrap().expect("every grid slot is filled"))
-                .collect()
-        };
+        let results: Vec<PointResult> = fan_out(threads, points.len(), |i| run_point(&points[i]));
         Ok(SweepResult { axes: spec.axis_names(), points: results })
     }
 }
@@ -672,6 +771,79 @@ mod tests {
         let spec = SweepSpec::new(base)
             .with_axes(vec![Axis::new("seed", vec!["1".into(), "2".into()]).unwrap()]);
         assert!(SweepRunner::with_threads(1).run(&spec).is_ok());
+    }
+
+    #[test]
+    fn config_hash_folds_inert_knobs_only() {
+        let mut base = FlagMap::new();
+        base.set("model", "tiny-moe");
+        base.set("replicas", "1");
+        base.set("ep", "2");
+        let cfg = |extra: &[(&str, &str)]| {
+            let mut f = base.clone();
+            for (k, v) in extra {
+                f.set(k, *v);
+            }
+            build_config(&f).unwrap()
+        };
+        // with migration off, the threshold/window knobs are never read
+        let a = cfg(&[("migration-threshold", "1.1")]);
+        let b = cfg(&[("migration-threshold", "1.4"), ("load-window", "32")]);
+        assert_eq!(config_hash(&a), config_hash(&b));
+        // with migration on they are live and must not fold
+        let c = cfg(&[("migration", "threshold"), ("migration-threshold", "1.1")]);
+        let d = cfg(&[("migration", "threshold"), ("migration-threshold", "1.4")]);
+        assert_ne!(config_hash(&c), config_hash(&d));
+        assert_ne!(config_hash(&a), config_hash(&c));
+        // an out-of-range value keeps a distinct hash even with
+        // migration off: it must keep failing validation, not silently
+        // alias a valid twin's report
+        let mut bad = cfg(&[]);
+        bad.policy.migration_threshold = 0.5;
+        assert!(bad.validate().is_err());
+        assert_ne!(config_hash(&bad), config_hash(&a));
+        // the engine is bit-identical for any sim-thread count
+        let mut t = cfg(&[]);
+        t.sim_threads = 8;
+        assert_eq!(config_hash(&t), config_hash(&cfg(&[])));
+    }
+
+    #[test]
+    fn written_flags_expand_composite_axes() {
+        let spec = SweepSpec::new(FlagMap::new()).with_axes(vec![
+            Axis::new("pd-ratio", vec!["1:3".into()]).unwrap(),
+            Axis::new("flag:seed", vec!["9".into()]).unwrap(),
+        ]);
+        let pts = spec.points().unwrap();
+        assert_eq!(
+            pts[0].written,
+            [
+                ("decode".to_string(), "3".to_string()),
+                ("mode".to_string(), "pd".to_string()),
+                ("prefill".to_string(), "1".to_string()),
+                ("seed".to_string(), "9".to_string()),
+            ],
+            "composites expanded, flag: stripped, sorted by flag name"
+        );
+        // an unappliable assignment falls back to the raw pairs (the
+        // error itself surfaces at lowering time as an error row)
+        let p = PointSpec::new(vec![("pd-ratio".into(), "bogus".into())]);
+        let pts = SweepSpec::new(FlagMap::new()).with_points(vec![p]).points().unwrap();
+        assert_eq!(pts[0].written, [("pd-ratio".to_string(), "bogus".to_string())]);
+    }
+
+    #[test]
+    fn horizon_override_sets_the_workload_size() {
+        let mut base = FlagMap::new();
+        base.set("model", "tiny");
+        base.set("requests", "64");
+        let spec = SweepSpec::new(base)
+            .with_axes(vec![Axis::new("seed", vec!["2".into()]).unwrap()]);
+        let pts = spec.points().unwrap();
+        assert_eq!(spec.point_config(&pts[0]).unwrap().workload.n_requests, 64);
+        let short = spec.point_config_at_horizon(&pts[0], 8).unwrap();
+        assert_eq!(short.workload.n_requests, 8);
+        assert_eq!(short.seed, 2, "assignments still apply");
     }
 
     #[test]

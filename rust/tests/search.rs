@@ -1,0 +1,313 @@
+//! Autotuner integration tests: the three ISSUE-10 properties —
+//! (a) Pareto pruning never discards a non-dominated point,
+//! (b) dedup-enabled searches find byte-identically what dedup-disabled
+//!     ones find,
+//! (c) a killed (`max_sims`) then `--resume`d search reproduces the
+//!     uninterrupted merged md/CSV/JSON byte-for-byte, for 1 and 4
+//!     threads —
+//! plus thread-invariance of the merged report, manifest clobber
+//! protection, and the trajectory/dedup accounting on an inert-axis
+//! grid.
+
+use std::fs;
+use std::path::PathBuf;
+
+use frontier::config::cli::FlagMap;
+use frontier::proptest_util::{run_prop, Gen};
+use frontier::report::search::{search_csv, search_json, search_markdown};
+use frontier::search::{pareto_kept, MetricPoint, Objective, SearchResult, SearchRunner, SearchSpec};
+use frontier::sweep::{Axis, SweepSpec};
+
+/// Cheap dense base (mirrors `rust/tests/sweep.rs`).
+fn tiny_base() -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "tiny");
+    f.set("replicas", "2");
+    f.set("requests", "24");
+    f.set("input", "32");
+    f.set("output", "16");
+    f
+}
+
+/// Cheap MoE base with a 2-rank EP domain: the grid where
+/// `migration-threshold` is inert (migration defaults to off), so
+/// config-hash dedup has real work to do.
+fn moe_base() -> FlagMap {
+    let mut f = FlagMap::new();
+    f.set("model", "tiny-moe");
+    f.set("replicas", "1");
+    f.set("ep", "2");
+    f.set("requests", "16");
+    f.set("input", "32");
+    f.set("output", "8");
+    f
+}
+
+fn axis(name: &str, values: &[&str]) -> Axis {
+    Axis::new(name, values.iter().map(|s| s.to_string()).collect()).unwrap()
+}
+
+fn dense_spec() -> SearchSpec {
+    SearchSpec {
+        sweep: SweepSpec::new(tiny_base())
+            .with_axes(vec![axis("seed", &["1", "2", "3", "4"]), axis("input", &["16", "32"])]),
+        objective: Objective::Cost,
+        rungs: 2,
+        promote_frac: 0.5,
+    }
+}
+
+fn moe_spec() -> SearchSpec {
+    SearchSpec {
+        sweep: SweepSpec::new(moe_base()).with_axes(vec![
+            axis("capacity-factor", &["1.0", "1.5"]),
+            axis("migration-threshold", &["1.1", "1.2", "1.3"]),
+        ]),
+        objective: Objective::Cost,
+        rungs: 2,
+        promote_frac: 0.5,
+    }
+}
+
+/// All three merged renderings, concatenated — the byte-identity
+/// currency of these tests.
+fn rendered(r: &SearchResult) -> String {
+    format!(
+        "{}\n===\n{}\n===\n{}",
+        search_markdown(r),
+        search_csv(r),
+        search_json(r).to_string_pretty()
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("frontier_search_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+// ---- property (a): Pareto pruning never discards a non-dominated point
+
+#[test]
+fn prop_pareto_never_discards_non_dominated() {
+    run_prop("pareto keeps every non-dominated point", 200, |g: &mut Gen| {
+        // discrete coordinate sets provoke the tie cases (equal points,
+        // equal on two of three axes) that a continuous draw never hits
+        let vals = [1.0, 2.0, 3.0];
+        let n = g.u32(1, 12) as usize;
+        let pts: Vec<MetricPoint> = (0..n)
+            .map(|_| MetricPoint {
+                cost_gpu_s_per_1k: *g.pick(&vals),
+                goodput_rps: *g.pick(&vals),
+                tbt_p99_ms: *g.pick(&vals),
+            })
+            .collect();
+        let kept = pareto_kept(&pts);
+        assert_eq!(kept.len(), pts.len());
+        let dominates = |a: &MetricPoint, b: &MetricPoint| {
+            a.cost_gpu_s_per_1k <= b.cost_gpu_s_per_1k
+                && a.goodput_rps >= b.goodput_rps
+                && a.tbt_p99_ms <= b.tbt_p99_ms
+                && (a.cost_gpu_s_per_1k < b.cost_gpu_s_per_1k
+                    || a.goodput_rps > b.goodput_rps
+                    || a.tbt_p99_ms < b.tbt_p99_ms)
+        };
+        for (i, b) in pts.iter().enumerate() {
+            let dominated = pts.iter().any(|a| dominates(a, b));
+            assert_eq!(
+                kept[i], !dominated,
+                "point {i} ({b:?}) kept={} but dominated={dominated} in {pts:?}",
+                kept[i]
+            );
+        }
+        // at least one point always survives a non-empty set
+        assert!(kept.iter().any(|&k| k), "{pts:?}");
+    });
+}
+
+// ---- property (b): dedup changes the work, never the findings
+
+#[test]
+fn dedup_on_and_off_find_byte_identical_results() {
+    let spec = moe_spec();
+    let on = SearchRunner::with_threads(2).run(&spec).unwrap();
+    let off = SearchRunner { dedup: false, ..SearchRunner::with_threads(2) }.run(&spec).unwrap();
+    // dedup shows up only in the work accounting...
+    assert!(on.dedup_hits() > 0, "inert migration-threshold axis must dedup");
+    assert_eq!(off.dedup_hits(), 0);
+    assert!(on.searched_points() < off.searched_points());
+    // ...never in what was found: ranking and errors byte-identical
+    assert_eq!(search_csv(&on), search_csv(&off));
+    let (jon, joff) = (search_json(&on), search_json(&off));
+    assert_eq!(
+        jon.req("ranked").unwrap().to_string_pretty(),
+        joff.req("ranked").unwrap().to_string_pretty(),
+        "dedup changed the embedded reports or ranking"
+    );
+    assert_eq!(
+        jon.req("errors").unwrap().to_string_pretty(),
+        joff.req("errors").unwrap().to_string_pretty()
+    );
+}
+
+// ---- property (c): kill + resume is byte-identical to uninterrupted
+
+#[test]
+fn killed_then_resumed_search_is_byte_identical() {
+    let spec = moe_spec();
+    for threads in [1usize, 4] {
+        let uninterrupted = SearchRunner::with_threads(threads).run(&spec).unwrap();
+        let want = rendered(&uninterrupted);
+        let dir = tmp(&format!("resume_{threads}t"));
+        // kill after 1 fresh simulation (rung 0 alone needs 2 uniques)
+        let killed = SearchRunner {
+            manifest_dir: Some(dir.clone()),
+            max_sims: Some(1),
+            ..SearchRunner::with_threads(threads)
+        }
+        .run(&spec);
+        let msg = killed.unwrap_err().to_string();
+        assert!(msg.contains("--resume"), "budget error must point at resume: {msg}");
+        // resume: finishes the grid, report byte-identical
+        let resumed = SearchRunner {
+            manifest_dir: Some(dir.clone()),
+            resume: true,
+            ..SearchRunner::with_threads(threads)
+        }
+        .run(&spec)
+        .unwrap();
+        assert_eq!(
+            rendered(&resumed),
+            want,
+            "resumed report diverged from uninterrupted ({threads} threads)"
+        );
+        // and a second resume (everything cached) is *still* identical
+        let dir2 = tmp(&format!("resume2_{threads}t"));
+        fs::create_dir_all(&dir2).unwrap();
+        fs::rename(dir.join("manifest.jsonl"), dir2.join("manifest.jsonl")).unwrap();
+        fs::rename(dir.join("points"), dir2.join("points")).unwrap();
+        let warm = SearchRunner {
+            manifest_dir: Some(dir2.clone()),
+            resume: true,
+            ..SearchRunner::with_threads(threads)
+        }
+        .run(&spec)
+        .unwrap();
+        assert_eq!(rendered(&warm), want, "fully-cached resume diverged");
+        fs::remove_dir_all(&dir).unwrap();
+        fs::remove_dir_all(&dir2).unwrap();
+    }
+}
+
+// ---- thread invariance and determinism
+
+#[test]
+fn merged_report_is_byte_identical_across_thread_counts() {
+    let spec = dense_spec();
+    let r1 = SearchRunner::with_threads(1).run(&spec).unwrap();
+    let r4 = SearchRunner::with_threads(4).run(&spec).unwrap();
+    let r9 = SearchRunner::with_threads(9).run(&spec).unwrap();
+    let rd = SearchRunner::default().run(&spec).unwrap();
+    let want = rendered(&r1);
+    assert_eq!(want, rendered(&r4));
+    assert_eq!(want, rendered(&r9), "oversubscribed");
+    assert_eq!(want, rendered(&rd), "all-cores default");
+}
+
+// ---- trajectory, halving, and dedup accounting
+
+#[test]
+fn trajectory_reflects_halving_pruning_and_dedup() {
+    let spec = moe_spec();
+    let r = SearchRunner::with_threads(2).run(&spec).unwrap();
+    assert_eq!(r.grid_points, 6);
+    assert_eq!(r.full_requests, 16);
+    assert_eq!(r.trajectory.len(), 2);
+    let (r0, r1) = (&r.trajectory[0], &r.trajectory[1]);
+    // rung 0 at the quartered horizon (16/4), rung 1 at the full one
+    assert_eq!(r0.requests, 4);
+    assert_eq!(r1.requests, 16);
+    assert_eq!(r0.population, 6);
+    // migration-threshold is inert: 2 unique configs, 4 dedup hits
+    assert_eq!(r0.simulated, 2);
+    assert_eq!(r0.dedup_hits, 4);
+    assert_eq!(r0.errors, 0);
+    // halving: at most half (of the Pareto pool) promoted, >= 1
+    assert!(r1.population >= 1 && r1.population <= 3);
+    assert_eq!(r1.population, r0.promoted);
+    assert_eq!(r.ranked.len(), r1.promoted);
+    // ranking is sorted by the objective
+    for w in r.ranked.windows(2) {
+        assert!(w[0].score <= w[1].score);
+    }
+    // final-rung pareto flags exist and mark at least the best point
+    assert!(r.ranked.iter().any(|p| p.pareto));
+    // summary line surfaces the accounting
+    let md = search_markdown(&r);
+    assert!(md.contains("## Trajectory") && md.contains("## Ranking"), "{md}");
+    assert!(md.contains(&format!("dedup_hits={}", r.dedup_hits())), "{md}");
+}
+
+#[test]
+fn single_rung_search_is_a_ranked_full_horizon_pass() {
+    let mut spec = dense_spec();
+    spec.rungs = 1;
+    let r = SearchRunner::with_threads(2).run(&spec).unwrap();
+    assert_eq!(r.trajectory.len(), 1);
+    assert_eq!(r.trajectory[0].requests, 24, "one rung = the full horizon");
+    assert_eq!(r.ranked.len(), 8, "nothing pruned before a final ranking");
+}
+
+// ---- errors are isolated and identifiable
+
+#[test]
+fn point_errors_carry_rung_and_written_flags() {
+    // tiny-moe has 8 experts: ep=3 cannot shard them, ep=2 can
+    let mut base = moe_base();
+    base.remove("ep");
+    let spec = SearchSpec {
+        sweep: SweepSpec::new(base).with_axes(vec![axis("ep", &["3", "2"])]),
+        objective: Objective::Cost,
+        rungs: 2,
+        promote_frac: 1.0,
+    };
+    let r = SearchRunner::with_threads(2).run(&spec).unwrap();
+    assert_eq!(r.errors.len(), 1, "the bad point errors once, at its first rung");
+    assert_eq!(r.errors[0].rung, 0);
+    assert_eq!(r.errors[0].point.written, vec![("ep".to_string(), "3".to_string())]);
+    assert_eq!(r.ranked.len(), 1, "the good point survives to the ranking");
+    let j = search_json(&r);
+    let errs = j.req("errors").unwrap().as_arr().unwrap();
+    assert_eq!(errs[0].req("written").unwrap().req("ep").unwrap().as_str().unwrap(), "3");
+    let md = search_markdown(&r);
+    assert!(md.contains("## Errors"), "{md}");
+}
+
+// ---- manifest safety at the runner level
+
+#[test]
+fn manifest_requires_resume_to_reuse_and_dedup_to_exist() {
+    let spec = dense_spec();
+    let dir = tmp("clobber");
+    SearchRunner { manifest_dir: Some(dir.clone()), ..SearchRunner::with_threads(1) }
+        .run(&spec)
+        .unwrap();
+    // a second run into the same directory must refuse without --resume
+    let err = SearchRunner { manifest_dir: Some(dir.clone()), ..SearchRunner::with_threads(1) }
+        .run(&spec)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--resume"), "{err}");
+    // manifest entries are hash-keyed: dedup=false cannot honor them
+    let err = SearchRunner {
+        manifest_dir: Some(dir.clone()),
+        resume: true,
+        dedup: false,
+        ..SearchRunner::with_threads(1)
+    }
+    .run(&spec)
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("dedup"), "{err}");
+    fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,70 @@
+//! Guard: every target file is registered in `Cargo.toml`.
+//!
+//! The manifest sets `autotests = false` (and friends), so a test,
+//! bench, or example file that is not listed explicitly silently never
+//! builds or runs — PR 8 found `rust/tests/parallel_engine.rs` in
+//! exactly that state. This test diffs the directory listings against
+//! the registered `path = "..."` entries in both directions.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::Path;
+
+fn manifest() -> String {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    fs::read_to_string(root.join("Cargo.toml")).expect("read Cargo.toml")
+}
+
+/// Every `path = "..."` value in the manifest (lib, bin, tests,
+/// benches, examples — the distinction doesn't matter for the diff).
+fn registered_paths(toml: &str) -> BTreeSet<String> {
+    toml.lines()
+        .filter_map(|l| {
+            let rest = l.trim().strip_prefix("path")?.trim_start().strip_prefix('=')?;
+            let rest = rest.trim().strip_prefix('"')?;
+            Some(rest.strip_suffix('"')?.to_string())
+        })
+        .collect()
+}
+
+fn rs_files(dir: &str) -> BTreeSet<String> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut out = BTreeSet::new();
+    for entry in fs::read_dir(root.join(dir)).unwrap_or_else(|e| panic!("read {dir}: {e}")) {
+        let entry = entry.expect("dir entry");
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if entry.path().is_file() && name.ends_with(".rs") {
+            out.insert(format!("{dir}/{name}"));
+        }
+    }
+    out
+}
+
+#[test]
+fn every_target_file_is_registered() {
+    let registered = registered_paths(&manifest());
+    assert!(
+        registered.contains("rust/src/lib.rs") && registered.contains("rust/src/main.rs"),
+        "manifest parsing broke: {registered:?}"
+    );
+    for dir in ["rust/tests", "rust/benches", "examples"] {
+        for file in rs_files(dir) {
+            assert!(
+                registered.contains(&file),
+                "{file} exists but is not registered in Cargo.toml — with \
+                 autotests/autobenches/autoexamples off it will never build or run; \
+                 add a [[test]]/[[bench]]/[[example]] entry"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_registered_path_exists() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    for path in registered_paths(&manifest()) {
+        // vendor/anyhow is a `path = ` dependency entry, not a target
+        // file; directories pass the existence check either way
+        assert!(root.join(&path).exists(), "Cargo.toml registers {path} but it does not exist");
+    }
+}
